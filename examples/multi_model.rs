@@ -1,0 +1,73 @@
+//! Multi-model serving (Appendix E / Figure 10): Llama3-8B takes 80% of
+//! requests and Llama3-70B 20%, sharing one GPU pool and budget. The
+//! planner balances resources across the two models.
+//!
+//! Run: `cargo run --release --example multi_model -- --budget 60`
+
+use hetserve::catalog::GpuType;
+use hetserve::cloud::availability;
+use hetserve::perf_model::{ModelSpec, PerfModel};
+use hetserve::profiler::Profile;
+use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::SchedProblem;
+use hetserve::util::cli::Args;
+use hetserve::workload::TraceMix;
+
+fn main() {
+    let args = Args::parse(&[]);
+    let budget = args.get_f64("budget", 60.0);
+    let total = args.get_f64("requests", 2000.0);
+    let share_8b = args.get_f64("share-8b", 0.8);
+
+    let perf = PerfModel::default();
+    let m8 = ModelSpec::llama3_8b();
+    let m70 = ModelSpec::llama3_70b();
+    let p8 = Profile::build(&m8, &perf, &EnumOptions::default());
+    let p70 = Profile::build(&m70, &perf, &EnumOptions::default());
+    let mix = TraceMix::trace1();
+    let avail = availability(2);
+
+    let problem = SchedProblem::multi_model(
+        &[
+            (&p8, &mix, total * share_8b),
+            (&p70, &mix, total * (1.0 - share_8b)),
+        ],
+        &avail,
+        budget,
+    );
+    let (plan, stats) = solve_binary_search(&problem, &BinarySearchOptions::default());
+    let plan = plan.expect("no feasible multi-model plan");
+    plan.validate(&problem, 1e-4).expect("invalid plan");
+
+    println!(
+        "multi-model plan: makespan {:.1}s, cost {:.2}/{budget} $/h, {} iters, {:?}",
+        plan.makespan,
+        plan.cost(&problem),
+        stats.iterations,
+        stats.elapsed
+    );
+    let mut cost_per_model = [0.0f64; 2];
+    for e in &plan.entries {
+        let c = &problem.candidates[e.candidate];
+        cost_per_model[c.model] += e.replicas as f64 * c.cost;
+        println!(
+            "  model {}  {:>2}x {:<16}",
+            if c.model == 0 { "8B " } else { "70B" },
+            e.replicas,
+            c.label
+        );
+    }
+    let total_cost: f64 = cost_per_model.iter().sum();
+    println!(
+        "resource split: 8B {:.0}%  /  70B {:.0}%  (paper: 70B gets the larger share)",
+        cost_per_model[0] / total_cost * 100.0,
+        cost_per_model[1] / total_cost * 100.0
+    );
+    let used = plan.gpus_used(&problem);
+    for g in GpuType::ALL {
+        if used[g.index()] > 0 {
+            println!("  rented {:>2}x {}", used[g.index()], g.name());
+        }
+    }
+}

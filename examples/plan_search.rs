@@ -1,0 +1,99 @@
+//! Plan search across budgets and traces: the paper's core workflow.
+//! Compares our heterogeneous planner against every homogeneous baseline
+//! and the HexGen-like fixed-composition baseline, printing a summary
+//! table (a compact version of Figures 5–7).
+//!
+//! Run: `cargo run --release --example plan_search -- --budgets 15,30,60 --trace trace1 --avail 1`
+
+use hetserve::baselines::{hexgen_plan, homogeneous_plan, uniform_composition};
+use hetserve::catalog::GpuType;
+use hetserve::cloud::availability;
+use hetserve::perf_model::{ModelSpec, PerfModel};
+use hetserve::profiler::Profile;
+use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::SchedProblem;
+use hetserve::util::bench::{cell, Table};
+use hetserve::util::cli::Args;
+use hetserve::workload::TraceMix;
+
+fn main() {
+    let args = Args::parse(&[]);
+    let budgets = args.get_list_f64("budgets", &[15.0, 30.0, 60.0]);
+    let mix = TraceMix::by_name(args.get_or("trace", "trace1")).expect("unknown trace");
+    let avail_idx = args.get_usize("avail", 1);
+    let model = ModelSpec::by_name(args.get_or("model", "70b")).expect("unknown model");
+    let total_requests = args.get_f64("requests", 2000.0);
+
+    let perf = PerfModel::default();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let avail = availability(avail_idx);
+    let opts = BinarySearchOptions::default();
+
+    let mut table = Table::new(
+        &format!(
+            "plan_search: {} on {} (avail {avail_idx})",
+            model.name, mix.name
+        ),
+        &[
+            "budget $/h",
+            "ours mkspan(s)",
+            "ours thr(r/s)",
+            "H100 homo",
+            "A6000 homo",
+            "4090 homo",
+            "HexGen-unif",
+            "best gain",
+        ],
+    );
+
+    for &budget in &budgets {
+        let p = SchedProblem::from_profile(&profile, &mix, total_requests, &avail, budget);
+        let (ours, _) = solve_binary_search(&p, &opts);
+        let ours = ours.expect("no plan");
+        let thr = total_requests / ours.makespan;
+
+        let homo = |gpu: GpuType| -> f64 {
+            homogeneous_plan(&p, gpu, &opts)
+                .map(|pl| pl.makespan)
+                .unwrap_or(f64::NAN)
+        };
+        let h100 = homo(GpuType::H100);
+        let a6000 = homo(GpuType::A6000);
+        let r4090 = homo(GpuType::Rtx4090);
+        let hex = hexgen_plan(&p, &uniform_composition(budget, &avail), &opts)
+            .map(|pl| pl.makespan)
+            .unwrap_or(f64::NAN);
+        let best_baseline = [h100, a6000, r4090, hex]
+            .into_iter()
+            .filter(|v| v.is_finite())
+            .fold(f64::INFINITY, f64::min);
+        let gain = (best_baseline / ours.makespan - 1.0) * 100.0;
+
+        table.row(vec![
+            format!("{budget}"),
+            cell(ours.makespan),
+            cell(thr),
+            cell(h100),
+            cell(a6000),
+            cell(r4090),
+            cell(hex),
+            format!("{gain:+.1}%"),
+        ]);
+
+        // Composition insight (the paper's 51%-data-center observation).
+        let comp = ours.composition_fractions(&p);
+        let dc = comp[GpuType::A100.index()] + comp[GpuType::H100.index()];
+        let ws = comp[GpuType::A6000.index()]
+            + comp[GpuType::A40.index()]
+            + comp[GpuType::L40.index()];
+        println!(
+            "budget {budget:>5}: composition — data-center {:.0}%, workstation {:.0}%, consumer {:.0}%",
+            dc * 100.0,
+            ws * 100.0,
+            comp[GpuType::Rtx4090.index()] * 100.0
+        );
+    }
+    println!();
+    table.print();
+}

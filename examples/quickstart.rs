@@ -1,0 +1,85 @@
+//! Quickstart: plan a heterogeneous deployment for Llama3-70B on a real
+//! availability snapshot, inspect the plan, and simulate it on a synthetic
+//! trace.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hetserve::cloud::availability;
+use hetserve::perf_model::{ModelSpec, PerfModel};
+use hetserve::profiler::Profile;
+use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::SchedProblem;
+use hetserve::sim::{simulate_plan, SimOptions};
+use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix};
+
+fn main() {
+    // 1. One-time profiling: h_{c,w} for every feasible configuration.
+    let model = ModelSpec::llama3_70b();
+    let perf = PerfModel::default();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    println!(
+        "profiled {} configurations for {}",
+        profile.configs.len(),
+        model.name
+    );
+
+    // 2. Build the scheduling problem: trace 1 mixture, availability
+    //    snapshot 1 (Table 3), 30 $/h budget, 2000 requests.
+    let mix = TraceMix::trace1();
+    let avail = availability(1);
+    let budget = 30.0;
+    let problem = SchedProblem::from_profile(&profile, &mix, 2000.0, &avail, budget);
+
+    // 3. Solve with binary-search-on-T (Algorithm 1).
+    let (plan, stats) = solve_binary_search(&problem, &BinarySearchOptions::default());
+    let plan = plan.expect("no feasible plan");
+    plan.validate(&problem, 1e-4).expect("invalid plan");
+    println!(
+        "plan: makespan {:.1}s  cost {:.2}$/h (budget {budget})  [{} iterations, {:?}]",
+        plan.makespan,
+        plan.cost(&problem),
+        stats.iterations,
+        stats.elapsed
+    );
+    for e in &plan.entries {
+        let c = &problem.candidates[e.candidate];
+        println!(
+            "  {:>2}x {:<16} fractions {:?}",
+            e.replicas,
+            c.label,
+            e.fractions
+                .iter()
+                .map(|f| (f * 100.0).round() as i64)
+                .collect::<Vec<_>>()
+        );
+    }
+
+    // 4. Execute the plan in the discrete-event cluster simulator.
+    let trace = synthesize_trace(
+        &mix,
+        &SynthOptions {
+            num_requests: 2000,
+            arrival_rate: 0.0,
+            length_sigma: 0.2,
+            seed: 42,
+        },
+    );
+    let result = simulate_plan(
+        &problem,
+        &plan,
+        &[model],
+        &[trace],
+        &perf,
+        &SimOptions::default(),
+    );
+    println!(
+        "simulated: makespan {:.1}s  throughput {:.2} req/s  p50 {:.1}s p90 {:.1}s p99 {:.1}s  util {:.0}%",
+        result.makespan,
+        result.throughput_rps,
+        result.p_latency(50.0),
+        result.p_latency(90.0),
+        result.p_latency(99.0),
+        result.mean_utilization * 100.0
+    );
+}

@@ -1,0 +1,92 @@
+//! End-to-end driver: loads the AOT-compiled tiny Llama-style model through
+//! the PJRT runtime and serves a batched synthetic workload through the full
+//! coordinator stack (router → continuous batcher → decode rounds),
+//! reporting throughput and latency percentiles. Proves L1 (Pallas kernel)
+//! → L2 (JAX model) → AOT → rust runtime → coordinator compose.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_e2e`
+//! Flags: --requests N (default 48)  --replicas R (default 2)
+//!        --router jsq|rr            --arrival-rate RPS (0 = batch)
+
+use hetserve::coordinator::{serve, synth_requests, RouterPolicy, ServerOptions};
+use hetserve::runtime::{default_artifacts_dir, Engine};
+use hetserve::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&[]);
+    let n_requests = args.get_usize("requests", 48);
+    let replicas = args.get_usize("replicas", 2);
+    let arrival_rate = args.get_f64("arrival-rate", 0.0);
+    let router = match args.get_or("router", "jsq") {
+        "rr" | "round-robin" => RouterPolicy::RoundRobin,
+        _ => RouterPolicy::Jsq,
+    };
+
+    let dir = default_artifacts_dir();
+    eprintln!("loading artifacts from {} ...", dir.display());
+    let t0 = std::time::Instant::now();
+    let engine = Engine::load(&dir)?;
+    eprintln!(
+        "engine up on {} in {:?}: {} params, prefill buckets {:?}, decode buckets {:?}",
+        engine.platform(),
+        t0.elapsed(),
+        engine.manifest.params.len(),
+        engine.prefill_buckets(),
+        engine.decode_buckets(),
+    );
+
+    let mut requests = synth_requests(
+        n_requests,
+        0xE2E,
+        &engine.prefill_buckets(),
+        engine.dims().vocab,
+    );
+    if arrival_rate > 0.0 {
+        for (i, r) in requests.iter_mut().enumerate() {
+            r.arrival_offset_s = i as f64 / arrival_rate;
+        }
+    }
+    let total_prompt: usize = requests.iter().map(|r| r.prompt.len()).sum();
+    eprintln!(
+        "serving {} requests ({} prompt tokens) on {} logical replicas...",
+        requests.len(),
+        total_prompt,
+        replicas
+    );
+
+    let report = serve(
+        &engine,
+        requests,
+        &ServerOptions {
+            num_replicas: replicas,
+            max_slots: args.get_usize("slots", 4),
+            router,
+            seed: 7,
+            respect_arrivals: arrival_rate > 0.0,
+        },
+    )?;
+
+    println!("== serve_e2e report ==");
+    println!("completed          {}", report.completed);
+    println!("dropped            {}", report.dropped);
+    println!("wall time          {:.2} s", report.wall_s);
+    println!("throughput         {:.2} req/s", report.throughput_rps);
+    println!(
+        "generation         {} tokens ({:.1} tok/s)",
+        report.tokens_generated, report.tokens_per_s
+    );
+    println!(
+        "latency            p50 {:.3}s  p90 {:.3}s  p99 {:.3}s",
+        report.latency.latency_percentile(50.0),
+        report.latency.latency_percentile(90.0),
+        report.latency.latency_percentile(99.0)
+    );
+    println!(
+        "time-to-first-tok  p50 {:.3}s  p90 {:.3}s",
+        report.ttft.latency_percentile(50.0),
+        report.ttft.latency_percentile(90.0)
+    );
+    println!("per-replica reqs   {:?}", report.per_replica_requests);
+    assert_eq!(report.completed + report.dropped, n_requests);
+    Ok(())
+}

@@ -1,0 +1,155 @@
+"""AOT export: lower the L2 model to HLO **text** artifacts the rust runtime
+loads via the PJRT C API, plus the weight blob and a manifest.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax ≥0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example/README).
+
+Outputs (under --out-dir, default ../artifacts):
+  prefill_s{S}.hlo.txt     one per prefill sequence bucket, batch 1
+  decode_b{B}.hlo.txt      one per decode batch bucket
+  weights.bin              all parameters, f32 little-endian, in
+                           `model.param_order` order
+  manifest.json            shapes, buckets, parameter table, input order
+
+Every executable takes (params..., tokens, cache[, positions]) and returns
+(logits, new_cache). Python runs ONCE at build time; the rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import DEFAULT_BUCKETS, DEFAULT_CONFIG
+from . import model as m
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_dir: str, seed: int = 0, use_kernel: bool = True, buckets=None) -> dict:
+    cfg = DEFAULT_CONFIG
+    buckets = buckets or DEFAULT_BUCKETS
+    os.makedirs(out_dir, exist_ok=True)
+
+    params = m.init_params(cfg, seed)
+    order = m.param_order(cfg)
+    param_specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "kv_heads": cfg.kv_heads,
+            "head_dim": cfg.head_dim,
+            "intermediate": cfg.intermediate,
+            "max_seq": cfg.max_seq,
+            "param_count": cfg.param_count(),
+        },
+        "seed": seed,
+        "use_kernel": bool(use_kernel),
+        "params": [],
+        "prefill": [],
+        "decode": [],
+        # Input convention for every executable:
+        #   [param_0 .. param_{P-1}, tokens, cache, (positions for decode)]
+        "input_order": "params,tokens,cache[,positions]",
+    }
+
+    # ---- weights ------------------------------------------------------------
+    offset = 0
+    import numpy as np
+
+    blob_path = os.path.join(out_dir, "weights.bin")
+    with open(blob_path, "wb") as f:
+        for (name, shape), p in zip(order, params):
+            arr = np.asarray(p, dtype="<f4")
+            f.write(arr.tobytes())
+            manifest["params"].append(
+                {"name": name, "shape": list(shape), "offset": offset}
+            )
+            offset += arr.size
+    manifest["weights_f32_count"] = offset
+
+    # ---- prefill buckets ------------------------------------------------------
+    for s in buckets.prefill_seq:
+        def prefill_fn(params, tokens, cache, _s=s):
+            return m.prefill(cfg, list(params), tokens, cache, use_kernel=use_kernel)
+
+        tokens_spec = jax.ShapeDtypeStruct((1, s), jnp.int32)
+        cache_spec = jax.ShapeDtypeStruct(
+            (cfg.layers, 2, 1, cfg.max_seq, cfg.kv_heads, cfg.head_dim), jnp.float32
+        )
+        lowered = jax.jit(prefill_fn).lower(tuple(param_specs), tokens_spec, cache_spec)
+        text = to_hlo_text(lowered)
+        fname = f"prefill_s{s}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["prefill"].append({"seq": s, "file": fname})
+
+    # ---- decode buckets ---------------------------------------------------------
+    for b in buckets.decode_batch:
+        def decode_fn(params, tokens, cache, positions):
+            return m.decode_step(
+                cfg, list(params), tokens, cache, positions, use_kernel=use_kernel
+            )
+
+        tokens_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+        cache_spec = jax.ShapeDtypeStruct(
+            (cfg.layers, 2, b, cfg.max_seq, cfg.kv_heads, cfg.head_dim), jnp.float32
+        )
+        pos_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+        lowered = jax.jit(decode_fn).lower(
+            tuple(param_specs), tokens_spec, cache_spec, pos_spec
+        )
+        text = to_hlo_text(lowered)
+        fname = f"decode_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["decode"].append({"batch": b, "file": fname})
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file marker path")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--no-kernel",
+        action="store_true",
+        help="lower with the pure-jnp reference attention instead of Pallas",
+    )
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    manifest = export(out_dir, seed=args.seed, use_kernel=not args.no_kernel)
+    n_files = len(manifest["prefill"]) + len(manifest["decode"])
+    print(
+        f"wrote {n_files} HLO artifacts + weights.bin "
+        f"({manifest['weights_f32_count'] * 4 / 1e6:.1f} MB) to {out_dir}"
+    )
+    if args.out is not None:
+        # Makefile stamp compatibility: touch the marker file.
+        with open(args.out, "w") as f:
+            f.write("see manifest.json\n")
+
+
+if __name__ == "__main__":
+    main()

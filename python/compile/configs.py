@@ -1,0 +1,55 @@
+"""Model and AOT-bucket configuration shared by the compile pipeline.
+
+The tiny Llama-style model served end-to-end by the rust engine. Its
+architecture mirrors `rust/src/perf_model/model_spec.rs::ModelSpec::tiny`
+(but with a reduced vocab so the exported weights stay small).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class TinyConfig:
+    """TinyLlama-5M: a real (untrained) Llama3-architecture model."""
+
+    vocab: int = 4096
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 8
+    kv_heads: int = 4
+    intermediate: int = 688
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def param_count(self) -> int:
+        h, v, i = self.hidden, self.vocab, self.intermediate
+        per_layer = (
+            h * h  # wq
+            + 2 * h * (self.kv_heads * self.head_dim)  # wk, wv
+            + h * h  # wo
+            + 3 * h * i  # w_gate, w_up, w_down
+            + 2 * h  # norms
+        )
+        return v * h + self.layers * per_layer + h + v * h
+
+
+@dataclass(frozen=True)
+class AotBuckets:
+    """Fixed shapes compiled ahead of time.
+
+    The rust coordinator picks the smallest bucket that fits; prefill runs
+    one request at a time (chunked into the sequence bucket), decode runs a
+    whole continuous batch per step.
+    """
+
+    prefill_seq: tuple = (16, 32, 64, 128)
+    decode_batch: tuple = (1, 2, 4, 8)
+    max_seq: int = 256
+
+
+DEFAULT_CONFIG = TinyConfig()
+DEFAULT_BUCKETS = AotBuckets()

@@ -1,0 +1,122 @@
+"""L1: fused attention as a Pallas kernel (flash-attention structure).
+
+TPU adaptation of the usual CUDA flash attention (DESIGN.md
+§Hardware-Adaptation): instead of warp tiles and shared memory we tile for
+VMEM with `BlockSpec`s — the grid walks (batch, query-head, query-block),
+each program holds one query block plus the full (small) KV stream for its
+grouped KV head in VMEM, and the KV axis is consumed in blocks with an
+online-softmax accumulator in f32. On a real TPU the same structure maps the
+HBM→VMEM schedule; here it must run with ``interpret=True`` because the CPU
+PJRT plugin cannot execute Mosaic custom-calls.
+
+§Perf note: a head-folded variant (grid over batch only, all heads in one
+program) was tried to cut interpret-mode per-program overhead; it measured
+~2× *slower* on the AOT CPU path (decode b=1: 143 ms → 311 ms) because the
+inlined HLO body grew faster than the program count shrank, so this
+head-per-program layout is the kept configuration. See EXPERIMENTS.md §Perf.
+
+VMEM budget at the default tiny-model shapes (T=256, D=32, f32):
+q block 16×32 (2 KB) + K,V 256×32×2 (64 KB) + accumulators ≈ 70 KB per
+program — comfortably under the ~16 MB VMEM of a TPU core, leaving room for
+the compiler to double-buffer the KV stream.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Negative "infinity" that survives exp() without NaNs.
+_NEG_INF = -1e30
+
+
+def _attention_kernel(s_total, block_k, scale, len_ref, q_ref, k_ref, v_ref, o_ref):
+    """One (batch, q-head, q-block) program.
+
+    Shapes (leading singleton dims are the blocked batch/head axes):
+      len_ref: [1]            valid KV length for this batch element
+      q_ref:   [1, 1, BQ, D]
+      k_ref:   [1, 1, T, D]   full KV stream for the grouped head
+      v_ref:   [1, 1, T, D]
+      o_ref:   [1, 1, BQ, D]
+    """
+    qb = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)  # [BQ, D]
+    block_q, d = q.shape
+    t = k_ref.shape[2]
+    length = len_ref[0]
+
+    # Absolute positions of this block's queries: the S queries are the
+    # *last* S positions of the sequence, so query i sits at
+    # length - s_total + qb*BQ + i.
+    q_pos = length - s_total + qb * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    m = jnp.full((block_q,), _NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    # Online softmax over KV blocks. T is static, so this is a static loop
+    # that XLA/Mosaic can pipeline (double-buffered VMEM loads on TPU).
+    for kb in range(t // block_k):
+        k_blk = k_ref[0, 0, kb * block_k : (kb + 1) * block_k, :].astype(jnp.float32)
+        v_blk = v_ref[0, 0, kb * block_k : (kb + 1) * block_k, :].astype(jnp.float32)
+        s = q @ k_blk.T * scale  # [BQ, BK] — the MXU matmul
+        key_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = key_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        correction = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])  # [BQ, BK]
+        l = l * correction + p.sum(axis=-1)
+        acc = acc * correction[:, None] + p @ v_blk
+        m = m_new
+
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))
+def attention(q, k, v, lengths, block_q=16, block_k=64, interpret=True):
+    """Fused masked attention with grouped KV heads (Pallas).
+
+    Args:
+      q: [B, Hq, S, D] queries (the last S positions of each sequence).
+      k: [B, Hkv, T, D] padded keys.
+      v: [B, Hkv, T, D] padded values.
+      lengths: [B] int32 valid KV length per batch element.
+      block_q / block_k: VMEM tile sizes.
+      interpret: must be True on CPU (Mosaic custom-calls are TPU-only).
+
+    Returns:
+      [B, Hq, S, D] attention output in q's dtype.
+    """
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    # Shrink tiles to the largest divisors of S and T (odd prefill lengths
+    # fall back to narrower query tiles rather than failing).
+    block_q = min(block_q, s)
+    while s % block_q != 0:
+        block_q -= 1
+    block_k = min(block_k, t)
+    while t % block_k != 0:
+        block_k -= 1
+    scale = 1.0 / (d**0.5)
+
+    grid = (b, hq, s // block_q)
+    kernel = functools.partial(_attention_kernel, s, block_k, scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, h, qb: (bb,)),
+            pl.BlockSpec((1, 1, block_q, d), lambda bb, h, qb: (bb, h, qb, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda bb, h, qb: (bb, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda bb, h, qb: (bb, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bb, h, qb: (bb, h, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)

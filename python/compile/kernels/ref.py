@@ -1,0 +1,83 @@
+"""Pure-jnp oracle implementations.
+
+These are the correctness references for the Pallas kernels: simple, obviously
+correct jax.numpy code with no tiling or fusion tricks. pytest compares the
+kernels against these under randomized shapes (python/tests/test_kernel.py).
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, lengths, scale=None):
+    """Masked multi-head attention with grouped KV heads.
+
+    Args:
+      q: [B, Hq, S, D] queries.
+      k: [B, Hkv, T, D] keys (padded to T; only the first ``lengths[b]``
+         positions are valid).
+      v: [B, Hkv, T, D] values.
+      lengths: [B] int32 — valid KV length per batch element. Queries attend
+         causally *within* the valid region: query at position
+         (lengths[b] - S + i) sees keys [0, lengths[b] - S + i].
+      scale: softmax scale; defaults to 1/sqrt(D).
+
+    Returns:
+      [B, Hq, S, D] attention output, f32.
+    """
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert hq % hkv == 0, "query heads must be a multiple of kv heads"
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+
+    # Expand kv heads to match query heads.
+    k = jnp.repeat(k, group, axis=1)  # [B, Hq, T, D]
+    v = jnp.repeat(v, group, axis=1)
+
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+
+    # Position mask: key position j is visible to query i (the i-th of the
+    # final S positions) iff j <= lengths[b] - S + i.
+    key_pos = jnp.arange(t)[None, None, :]  # [1, 1, T]
+    q_end = lengths[:, None, None]  # [B, 1, 1]
+    q_pos = q_end - s + jnp.arange(s)[None, :, None]  # [B, S, 1]
+    mask = key_pos <= q_pos  # [B, S, T]
+    logits = jnp.where(mask[:, None, :, :], logits, -jnp.inf)
+
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), v)
+
+
+def rmsnorm_ref(x, weight, eps=1e-5):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jnp.reciprocal(jnp.sqrt(var + eps))).astype(x.dtype) * weight
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = x @ w_gate
+    u = x @ w_up
+    silu = g * (1.0 / (1.0 + jnp.exp(-g)))
+    return (silu * u) @ w_down
+
+
+def rope_ref(x, positions, theta=10000.0):
+    """Rotary position embedding.
+
+    Args:
+      x: [..., S, D] with D even.
+      positions: [S] int32 absolute positions (broadcast over leading dims).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [S, D/2]
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)

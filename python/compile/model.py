@@ -1,0 +1,193 @@
+"""L2: the tiny Llama-style model (RMSNorm + RoPE + GQA + SwiGLU), written
+in JAX and calling the L1 Pallas attention kernel, with an explicit KV cache
+threaded through prefill/decode so the functions are pure and AOT-lowerable.
+
+The KV cache layout is ``[layers, 2, B, T, KH, HD]`` (2 = key/value planes),
+allocated at the maximum context length so all AOT shapes are static.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import TinyConfig
+from .kernels.attention import attention
+from .kernels.ref import attention_ref, rmsnorm_ref, rope_ref, swiglu_ref
+
+
+# ---- parameters --------------------------------------------------------------
+
+def param_order(cfg: TinyConfig):
+    """Canonical (name, shape) list — the export/import contract with rust."""
+    h, kvd = cfg.hidden, cfg.kv_heads * cfg.head_dim
+    order = [("embedding", (cfg.vocab, h))]
+    for layer in range(cfg.layers):
+        p = f"layers.{layer}."
+        order += [
+            (p + "attn_norm", (h,)),
+            (p + "wq", (h, h)),
+            (p + "wk", (h, kvd)),
+            (p + "wv", (h, kvd)),
+            (p + "wo", (h, h)),
+            (p + "mlp_norm", (h,)),
+            (p + "w_gate", (h, cfg.intermediate)),
+            (p + "w_up", (h, cfg.intermediate)),
+            (p + "w_down", (cfg.intermediate, h)),
+        ]
+    order += [("final_norm", (h,)), ("lm_head", (h, cfg.vocab))]
+    return order
+
+
+def init_params(cfg: TinyConfig, seed: int = 0):
+    """Deterministic scaled-normal init. Returns a flat list of arrays in
+    ``param_order`` order (the list form keeps the AOT signature simple)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_order(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, dtype=jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = (2.0 / (fan_in + shape[-1])) ** 0.5
+            params.append(
+                jax.random.normal(sub, shape, dtype=jnp.float32) * std
+            )
+    return params
+
+
+def _unpack(cfg: TinyConfig, params):
+    """Flat list -> nested dict."""
+    names = [n for n, _ in param_order(cfg)]
+    d = dict(zip(names, params))
+    layers = []
+    for i in range(cfg.layers):
+        p = f"layers.{i}."
+        layers.append({k[len(p):]: v for k, v in d.items() if k.startswith(p)})
+    return d["embedding"], layers, d["final_norm"], d["lm_head"]
+
+
+def empty_cache(cfg: TinyConfig, batch: int):
+    """[L, 2, B, T, KH, HD] zero-initialised KV cache."""
+    return jnp.zeros(
+        (cfg.layers, 2, batch, cfg.max_seq, cfg.kv_heads, cfg.head_dim),
+        dtype=jnp.float32,
+    )
+
+
+# ---- blocks ------------------------------------------------------------------
+
+def _attn_block(cfg, layer, x, cache_l, positions, lengths, use_kernel, is_prefill):
+    """One attention block over the last S positions.
+
+    Args:
+      x: [B, S, H] normalized input.
+      cache_l: [2, B, T, KH, HD] this layer's cache (already containing any
+        earlier context).
+      positions: [S] (prefill, shared across batch) or [B] (decode, S=1)
+        absolute positions of the new tokens.
+      lengths: [B] int32 total valid length *including* the new tokens.
+    Returns: (attn output [B, S, H], updated cache_l).
+    """
+    b, s, h = x.shape
+    q = (x @ layer["wq"]).reshape(b, s, cfg.heads, cfg.head_dim)
+    k = (x @ layer["wk"]).reshape(b, s, cfg.kv_heads, cfg.head_dim)
+    v = (x @ layer["wv"]).reshape(b, s, cfg.kv_heads, cfg.head_dim)
+
+    # RoPE on q and k at their absolute positions.
+    if is_prefill:
+        pos = positions  # prefill: same positions for every batch row
+        q = rope_ref(q.transpose(0, 2, 1, 3), pos, cfg.rope_theta).transpose(0, 2, 1, 3)
+        k = rope_ref(k.transpose(0, 2, 1, 3), pos, cfg.rope_theta).transpose(0, 2, 1, 3)
+        # Scatter into the cache at [0:S].
+        cache_l = cache_l.at[0, :, :s].set(k)
+        cache_l = cache_l.at[1, :, :s].set(v)
+    else:
+        # Decode: one token per batch row at row-specific positions.
+        assert s == 1
+        pos_b = positions.reshape(b, 1)  # [B, 1]
+        q = jax.vmap(lambda xi, pi: rope_ref(xi, pi, cfg.rope_theta))(
+            q.transpose(0, 2, 1, 3), pos_b
+        ).transpose(0, 2, 1, 3)
+        k = jax.vmap(lambda xi, pi: rope_ref(xi, pi, cfg.rope_theta))(
+            k.transpose(0, 2, 1, 3), pos_b
+        ).transpose(0, 2, 1, 3)
+        bidx = jnp.arange(b)
+        cache_l = cache_l.at[0, bidx, positions].set(k[:, 0])
+        cache_l = cache_l.at[1, bidx, positions].set(v[:, 0])
+
+    # Attend over the cache: [B, KH, T, HD].
+    k_all = cache_l[0].transpose(0, 2, 1, 3)
+    v_all = cache_l[1].transpose(0, 2, 1, 3)
+    q_t = q.transpose(0, 2, 1, 3)  # [B, Hq, S, HD]
+    attn_fn = attention if use_kernel else attention_ref
+    out = attn_fn(q_t, k_all, v_all, lengths)  # [B, Hq, S, HD]
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h)
+    return out @ layer["wo"], cache_l
+
+
+def _forward(cfg, params, tokens, cache, positions, lengths, use_kernel, is_prefill):
+    """Shared prefill/decode forward over the last S tokens.
+
+    tokens: [B, S] int32; returns (logits [B, V] for the final position,
+    updated cache).
+    """
+    embedding, layers, final_norm, lm_head = _unpack(cfg, params)
+    x = embedding[tokens]  # [B, S, H]
+    new_cache = []
+    for i, layer in enumerate(layers):
+        normed = rmsnorm_ref(x, layer["attn_norm"])
+        attn_out, cache_l = _attn_block(
+            cfg, layer, normed, cache[i], positions, lengths, use_kernel, is_prefill
+        )
+        x = x + attn_out
+        normed = rmsnorm_ref(x, layer["mlp_norm"])
+        x = x + swiglu_ref(normed, layer["w_gate"], layer["w_up"], layer["w_down"])
+        new_cache.append(cache_l)
+    x = rmsnorm_ref(x, final_norm)
+    logits = x[:, -1, :] @ lm_head  # [B, V]
+    return logits, jnp.stack(new_cache)
+
+
+def prefill(cfg: TinyConfig, params, tokens, cache, use_kernel=True):
+    """Prefill a single request (B=1): tokens [1, S] starting at position 0.
+
+    Returns (logits [1, V], cache with positions [0, S) filled).
+    """
+    _, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    lengths = jnp.full((tokens.shape[0],), s, dtype=jnp.int32)
+    return _forward(cfg, params, tokens, cache, positions, lengths, use_kernel, True)
+
+
+def decode_step(cfg: TinyConfig, params, tokens, cache, positions, use_kernel=True):
+    """One decode step for a batch of slots.
+
+    Args:
+      tokens: [B] int32 last generated token per slot.
+      cache: [L, 2, B, T, KH, HD].
+      positions: [B] int32 — index the new token is written at (= current
+        valid length before this step).
+
+    Returns (logits [B, V], updated cache).
+    """
+    b = tokens.shape[0]
+    tokens2 = tokens.reshape(b, 1)
+    lengths = positions + 1
+    return _forward(cfg, params, tokens2, cache, positions, lengths, use_kernel, False)
+
+
+def greedy_generate(cfg, params, prompt, steps, use_kernel=True):
+    """Reference greedy generation (test/demo helper, python-side only)."""
+    cache = empty_cache(cfg, 1)
+    logits, cache = prefill(cfg, params, prompt.reshape(1, -1), cache, use_kernel)
+    out = []
+    pos = prompt.shape[-1]
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for _ in range(steps):
+        out.append(int(tok[0]))
+        logits, cache = decode_step(
+            cfg, params, tok, cache, jnp.array([pos], dtype=jnp.int32), use_kernel
+        )
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos += 1
+    return out

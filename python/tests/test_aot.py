@@ -1,0 +1,82 @@
+"""AOT export contract tests: manifest structure, weight blob layout, and
+determinism — the interface the rust runtime depends on."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as m
+from compile.configs import AotBuckets, DEFAULT_CONFIG as CFG
+
+
+@pytest.fixture(scope="module")
+def export_dir():
+    """One small export (single prefill + decode bucket) shared by tests."""
+    d = tempfile.mkdtemp(prefix="hetserve_aot_test_")
+    buckets = AotBuckets(prefill_seq=(16,), decode_batch=(1,), max_seq=256)
+    manifest = aot.export(d, seed=0, use_kernel=True, buckets=buckets)
+    yield d, manifest
+    for f in os.listdir(d):
+        os.unlink(os.path.join(d, f))
+    os.rmdir(d)
+
+
+def test_manifest_written_and_consistent(export_dir):
+    d, manifest = export_dir
+    with open(os.path.join(d, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk["model"]["vocab"] == CFG.vocab
+    assert on_disk["model"]["param_count"] == CFG.param_count()
+    assert on_disk == json.loads(json.dumps(manifest))
+    assert len(on_disk["prefill"]) == 1
+    assert on_disk["prefill"][0]["seq"] == 16
+    assert len(on_disk["decode"]) == 1
+
+
+def test_hlo_files_exist_and_look_like_hlo(export_dir):
+    d, manifest = export_dir
+    for entry in manifest["prefill"] + manifest["decode"]:
+        path = os.path.join(d, entry["file"])
+        text = open(path).read()
+        assert "HloModule" in text, f"{path} is not HLO text"
+        assert len(text) > 1000
+
+
+def test_weights_blob_matches_params(export_dir):
+    d, manifest = export_dir
+    blob = np.fromfile(os.path.join(d, "weights.bin"), dtype="<f4")
+    assert blob.size == manifest["weights_f32_count"]
+    params = m.init_params(CFG, seed=0)
+    total = sum(int(np.prod(p.shape)) for p in params)
+    assert blob.size == total
+    # Spot-check: first parameter (embedding) bytes match exactly.
+    emb = np.asarray(params[0], dtype="<f4").ravel()
+    np.testing.assert_array_equal(blob[: emb.size], emb)
+    # Offsets are contiguous and ordered.
+    offsets = [p["offset"] for p in manifest["params"]]
+    assert offsets == sorted(offsets)
+    assert offsets[0] == 0
+
+
+def test_param_table_matches_model_order(export_dir):
+    _, manifest = export_dir
+    names = [p["name"] for p in manifest["params"]]
+    expected = [n for n, _ in m.param_order(CFG)]
+    assert names == expected
+
+
+def test_export_deterministic():
+    buckets = AotBuckets(prefill_seq=(16,), decode_batch=(1,), max_seq=256)
+    with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+        aot.export(d1, seed=0, buckets=buckets)
+        aot.export(d2, seed=0, buckets=buckets)
+        b1 = open(os.path.join(d1, "weights.bin"), "rb").read()
+        b2 = open(os.path.join(d2, "weights.bin"), "rb").read()
+        assert b1 == b2
+        h1 = open(os.path.join(d1, "prefill_s16.hlo.txt")).read()
+        h2 = open(os.path.join(d2, "prefill_s16.hlo.txt")).read()
+        assert h1 == h2

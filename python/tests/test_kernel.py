@@ -1,0 +1,130 @@
+"""L1 correctness: the Pallas attention kernel against the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer: hypothesis sweeps
+shapes (batch, heads, group sizes, sequence/context lengths) and asserts
+allclose against ref.attention_ref.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention
+from compile.kernels.ref import attention_ref
+
+
+def run_both(b, hq, hkv, s, t, seed, block_q=16, block_k=64):
+    rng = np.random.default_rng(seed)
+    d = 32
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d), dtype=np.float32))
+    k = jnp.asarray(rng.standard_normal((b, hkv, t, d), dtype=np.float32))
+    v = jnp.asarray(rng.standard_normal((b, hkv, t, d), dtype=np.float32))
+    # lengths in [s, t]: at least the queries themselves are valid.
+    lengths = jnp.asarray(rng.integers(s, t + 1, size=(b,)), dtype=jnp.int32)
+    out_kernel = attention(q, k, v, lengths, block_q=block_q, block_k=block_k)
+    out_ref = attention_ref(q, k, v, lengths)
+    return np.asarray(out_kernel), np.asarray(out_ref)
+
+
+def test_kernel_matches_ref_basic():
+    got, want = run_both(b=2, hq=8, hkv=4, s=16, t=64, seed=0)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_kernel_matches_ref_decode_shape():
+    # Decode: single query against a long cache.
+    got, want = run_both(b=8, hq=8, hkv=4, s=1, t=256, seed=1, block_q=1)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_kernel_matches_ref_mha_no_grouping():
+    got, want = run_both(b=1, hq=4, hkv=4, s=32, t=32, seed=2)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_kernel_blocking_invariance():
+    # Different block sizes must give identical results.
+    a1, _ = run_both(b=2, hq=4, hkv=2, s=32, t=128, seed=3, block_q=8, block_k=32)
+    a2, _ = run_both(b=2, hq=4, hkv=2, s=32, t=128, seed=3, block_q=32, block_k=128)
+    np.testing.assert_allclose(a1, a2, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    group=st.integers(1, 4),
+    hkv=st.integers(1, 4),
+    s_pow=st.integers(0, 5),  # S in {1,2,4,8,16,32}
+    t_mult=st.integers(1, 4),  # T = 64 * mult
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(b, group, hkv, s_pow, t_mult, seed):
+    s = 2**s_pow
+    t = 64 * t_mult
+    hq = hkv * group
+    block_q = min(16, s)
+    got, want = run_both(b, hq, hkv, s, t, seed, block_q=block_q)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_causality_within_queries():
+    # A query must not see keys beyond its own position: flip future keys
+    # and check outputs of earlier queries don't change.
+    rng = np.random.default_rng(7)
+    b, hq, hkv, s, t, d = 1, 4, 2, 16, 64, 32
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d), dtype=np.float32))
+    k = np.asarray(rng.standard_normal((b, hkv, t, d), dtype=np.float32))
+    v = np.asarray(rng.standard_normal((b, hkv, t, d), dtype=np.float32))
+    lengths = jnp.asarray([s], dtype=jnp.int32)  # queries are positions 0..15
+    out1 = np.asarray(attention(q, jnp.asarray(k), jnp.asarray(v), lengths))
+    # Corrupt keys at positions >= 8.
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, 8:, :] = 99.0
+    v2[:, :, 8:, :] = -99.0
+    out2 = np.asarray(attention(q, jnp.asarray(k2), jnp.asarray(v2), lengths))
+    # Queries 0..7 (positions 0..7) unchanged; query 15 changed.
+    np.testing.assert_allclose(out1[:, :, :8], out2[:, :, :8], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out1[:, :, 15], out2[:, :, 15])
+
+
+def test_length_masking():
+    # Keys beyond `lengths` must be invisible.
+    rng = np.random.default_rng(9)
+    b, hq, hkv, s, t, d = 2, 4, 2, 1, 128, 32
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d), dtype=np.float32))
+    k = np.asarray(rng.standard_normal((b, hkv, t, d), dtype=np.float32))
+    v = np.asarray(rng.standard_normal((b, hkv, t, d), dtype=np.float32))
+    lengths = jnp.asarray([40, 100], dtype=jnp.int32)
+    out1 = np.asarray(attention(q, jnp.asarray(k), jnp.asarray(v), lengths, block_q=1))
+    k2, v2 = k.copy(), v.copy()
+    k2[0, :, 40:, :] = 1e3  # beyond length of row 0 only
+    v2[0, :, 40:, :] = -1e3
+    out2 = np.asarray(attention(q, jnp.asarray(k2), jnp.asarray(v2), lengths, block_q=1))
+    np.testing.assert_allclose(out1[0], out2[0], rtol=1e-6, atol=1e-6)
+
+
+def test_softmax_normalisation():
+    # With v = all-ones, attention output must be exactly 1 everywhere
+    # (probabilities sum to 1) regardless of q/k.
+    rng = np.random.default_rng(11)
+    b, hq, hkv, s, t, d = 2, 4, 2, 16, 64, 32
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d), dtype=np.float32))
+    k = jnp.asarray(rng.standard_normal((b, hkv, t, d), dtype=np.float32))
+    v = jnp.ones((b, hkv, t, d), dtype=jnp.float32)
+    lengths = jnp.asarray([t, s], dtype=jnp.int32)
+    out = np.asarray(attention(q, k, v, lengths))
+    np.testing.assert_allclose(out, np.ones_like(out), rtol=1e-5, atol=1e-5)
+
+
+def test_extreme_logits_stability():
+    # Large-magnitude q/k must not produce NaN/Inf (online softmax in f32).
+    b, hq, hkv, s, t, d = 1, 2, 1, 8, 64, 32
+    q = jnp.full((b, hq, s, d), 30.0, dtype=jnp.float32)
+    k = jnp.full((b, hkv, t, d), 30.0, dtype=jnp.float32)
+    v = jnp.ones((b, hkv, t, d), dtype=jnp.float32)
+    lengths = jnp.asarray([t], dtype=jnp.int32)
+    out = np.asarray(attention(q, k, v, lengths, block_q=8))
+    assert np.isfinite(out).all()

@@ -1,0 +1,69 @@
+//! Figure 1: workload-type distribution of the serving traces.
+//! Prints the long/short input×output class shares per trace (the paper's
+//! pie chart as a table) plus the per-type counts of a synthesized trace.
+
+use hetserve::util::bench::{cell, Table};
+use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix, WorkloadType};
+
+fn main() {
+    let mut t = Table::new(
+        "Figure 1 — workload classes per trace (%)",
+        &[
+            "trace",
+            "long-in/long-out",
+            "long-in/short-out",
+            "short-in/long-out",
+            "short-in/short-out",
+        ],
+    );
+    for mix in TraceMix::all() {
+        let classes = mix.class_fractions();
+        t.row(
+            std::iter::once(mix.name.clone())
+                .chain(classes.iter().map(|(_, f)| cell(f * 100.0)))
+                .collect(),
+        );
+    }
+    t.print();
+
+    // Verify a synthesized 500k-request trace reproduces the mixture
+    // (the Swiss AI Center trace is ~500k requests over a month).
+    let mix = TraceMix::trace1();
+    let trace = synthesize_trace(
+        &mix,
+        &SynthOptions {
+            num_requests: 500_000,
+            arrival_rate: 0.19, // ~500k/month in req/s
+            length_sigma: 0.3,
+            seed: 1,
+        },
+    );
+    let counts = trace.counts_per_type();
+    let mut t2 = Table::new(
+        "synthesized trace-1 type counts (500k requests)",
+        &["type", "avg in", "avg out", "count", "share %", "target %"],
+    );
+    for w in WorkloadType::all() {
+        t2.row(vec![
+            format!("w{}", w.index + 1),
+            w.avg_input.to_string(),
+            w.avg_output.to_string(),
+            counts[w.index].to_string(),
+            cell(counts[w.index] as f64 / 5000.0),
+            cell(mix.ratios[w.index] * 100.0),
+        ]);
+    }
+    t2.print();
+    let max_err = (0..9)
+        .map(|i| (counts[i] as f64 / 500_000.0 - mix.ratios[i]).abs())
+        .fold(0.0, f64::max);
+    println!("SHAPE CHECK: max mixture error {:.4} (< 0.01) => {}", max_err, ok(max_err < 0.01));
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "PASS"
+    } else {
+        "FAIL"
+    }
+}

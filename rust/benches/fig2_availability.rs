@@ -1,0 +1,41 @@
+//! Figure 2: number of GPUs of each type available on the market over a
+//! 24-hour period (15-minute ticks), from the mean-reverting market
+//! simulator. The paper's observation — availability fluctuates strongly
+//! (A40 ranged 0–32 within a day on Vast.ai) — must hold.
+
+use hetserve::catalog::GpuType;
+use hetserve::cloud::MarketSim;
+use hetserve::util::bench::Table;
+
+fn main() {
+    let mut market = MarketSim::default_market(7);
+    let series = market.series(96);
+
+    let mut t = Table::new(
+        "Figure 2 — 24h availability series (hourly samples)",
+        &["hour", "A6000", "A40", "L40", "A100", "H100", "4090"],
+    );
+    for (i, a) in series.iter().enumerate() {
+        if i % 4 == 0 {
+            t.row(
+                std::iter::once(format!("{:02}h", i / 4))
+                    .chain(GpuType::ALL.iter().map(|&g| a.of(g).to_string()))
+                    .collect(),
+            );
+        }
+    }
+    t.print();
+
+    for &g in &GpuType::ALL {
+        let vals: Vec<u32> = series.iter().map(|a| a.of(g)).collect();
+        let min = *vals.iter().min().unwrap();
+        let max = *vals.iter().max().unwrap();
+        println!("{:<6} range over 24h: {min}..{max}", g.name());
+    }
+    let a40: Vec<u32> = series.iter().map(|a| a.of(GpuType::A40)).collect();
+    let spread = a40.iter().max().unwrap() - a40.iter().min().unwrap();
+    println!(
+        "SHAPE CHECK: A40 fluctuates by {spread} GPUs within the day (>= 8) => {}",
+        if spread >= 8 { "PASS" } else { "FAIL" }
+    );
+}

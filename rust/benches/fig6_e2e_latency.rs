@@ -1,0 +1,103 @@
+//! Figure 6: end-to-end percentile latencies (p10..p100) of our plan vs the
+//! strongest homogeneous baselines. Matching the paper's makespan setting,
+//! the same batch-arrival trace is replayed against every system and the
+//! p10..p100 *completion-time* percentiles are reported (every request's
+//! latency from the common start).
+
+use hetserve::baselines::homogeneous_plan;
+use hetserve::catalog::GpuType;
+use hetserve::cloud::availability;
+use hetserve::perf_model::{ModelSpec, PerfModel};
+use hetserve::profiler::Profile;
+use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::{SchedProblem, ServingPlan};
+use hetserve::sim::{simulate_plan, SimOptions, SimResult};
+use hetserve::util::bench::{cell, Table};
+use hetserve::util::cli::Args;
+use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix};
+
+fn run(
+    problem: &SchedProblem,
+    plan: &ServingPlan,
+    model: &ModelSpec,
+    mix: &TraceMix,
+    n: usize,
+    perf: &PerfModel,
+) -> SimResult {
+    // Batch arrival: the makespan regime of the paper's objective.
+    let trace = synthesize_trace(
+        mix,
+        &SynthOptions {
+            num_requests: n,
+            arrival_rate: 0.0,
+            length_sigma: 0.2,
+            seed: 13,
+        },
+    );
+    simulate_plan(
+        problem,
+        plan,
+        std::slice::from_ref(model),
+        &[trace],
+        perf,
+        &SimOptions::default(),
+    )
+}
+
+fn main() {
+    let args = Args::parse(&[]);
+    let model = ModelSpec::by_name(args.get_or("model", "70b")).expect("--model");
+    let n = args.get_usize("requests", 3000);
+    let budget = args.get_f64("budget", 30.0);
+    let mix = TraceMix::by_name(args.get_or("trace", "trace1")).unwrap();
+    let avail = availability(args.get_usize("avail", 1));
+    let perf = PerfModel::default();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let opts = BinarySearchOptions {
+        tolerance: 2.0,
+        ..Default::default()
+    };
+
+    let p = SchedProblem::from_profile(&profile, &mix, n as f64, &avail, budget);
+    let (ours, _) = solve_binary_search(&p, &opts);
+    let ours = ours.expect("plan");
+    let ours_res = run(&p, &ours, &model, &mix, n, &perf);
+
+    let mut rows: Vec<(String, SimResult)> = vec![("Ours".to_string(), ours_res)];
+    for gpu in [GpuType::H100, GpuType::A6000] {
+        if let Some(pl) = homogeneous_plan(&p, gpu, &opts) {
+            rows.push((
+                format!("{} (Homo)", gpu.name()),
+                run(&p, &pl, &model, &mix, n, &perf),
+            ));
+        }
+    }
+
+    let ps = [10.0, 30.0, 50.0, 70.0, 90.0, 100.0];
+    let mut headers = vec!["system".to_string()];
+    headers.extend(ps.iter().map(|p| format!("p{p}")));
+    let mut t = Table::new(
+        &format!("Figure 6 — latency percentiles (s), {} {} budget {budget}", model.name, mix.name),
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for (name, res) in &rows {
+        t.row(
+            std::iter::once(name.clone())
+                .chain(ps.iter().map(|&p| cell(res.p_latency(p))))
+                .collect(),
+        );
+    }
+    t.print();
+
+    let ours_p90 = rows[0].1.p_latency(90.0);
+    let best_base = rows[1..]
+        .iter()
+        .map(|(_, r)| r.p_latency(90.0))
+        .fold(f64::INFINITY, f64::min);
+    let reduction = (1.0 - ours_p90 / best_base) * 100.0;
+    println!(
+        "SHAPE CHECK: p90 latency reduction vs best baseline {reduction:+.1}% (paper: up to 54%, avg 20%) => {}",
+        if reduction > -5.0 { "PASS" } else { "FAIL" }
+    );
+}

@@ -1,0 +1,59 @@
+//! Real-engine performance: PJRT prefill and decode step latency per bucket
+//! (the L1/L2 hot path measured through the L3 runtime). Requires
+//! `make artifacts`.
+
+use hetserve::runtime::{default_artifacts_dir, Engine};
+use hetserve::util::bench::{bench, black_box, report_header};
+use std::time::Duration;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts`; skipping perf_engine");
+        return;
+    }
+    let engine = Engine::load(&dir).expect("engine");
+    println!("platform: {}", engine.platform());
+    println!("{}", report_header());
+
+    // Prefill latency per sequence bucket.
+    for &s in &engine.prefill_buckets() {
+        let tokens: Vec<i32> = (0..s as i32).map(|i| (i % 4000) + 1).collect();
+        let r = bench(
+            &format!("prefill s={s}"),
+            Duration::from_millis(300),
+            Duration::from_secs(2),
+            || {
+                black_box(engine.prefill(&tokens).unwrap());
+            },
+        );
+        println!("{}", r.report());
+    }
+
+    // Decode step latency per batch bucket (tokens/s derived).
+    let (_, slot) = engine
+        .prefill(&(0..16).map(|i| i + 1).collect::<Vec<i32>>())
+        .unwrap();
+    for &b in &engine.decode_buckets() {
+        let cache: Vec<f32> = (0..b).flat_map(|_| slot.iter().copied()).collect();
+        // Interleave properly: gather via assembler for correctness.
+        use hetserve::runtime::kv::{BatchAssembler, SlotCache};
+        let asm = BatchAssembler::new(engine.dims());
+        let slots: Vec<SlotCache> = (0..b).map(|_| SlotCache::new(slot.clone(), 16)).collect();
+        let refs: Vec<&SlotCache> = slots.iter().collect();
+        let batched = asm.gather(&refs, b);
+        let tokens = vec![5i32; b];
+        let positions = vec![16i32; b];
+        let r = bench(
+            &format!("decode b={b}"),
+            Duration::from_millis(300),
+            Duration::from_secs(2),
+            || {
+                black_box(engine.decode(b, &tokens, &batched, &positions).unwrap());
+            },
+        );
+        let toks_per_s = b as f64 / (r.mean_ns / 1e9);
+        println!("{}   [{:.0} tok/s]", r.report(), toks_per_s);
+        let _ = cache;
+    }
+}

@@ -1,0 +1,111 @@
+//! Performance micro-benchmarks (§Perf in EXPERIMENTS.md): the L3 hot
+//! paths — simplex pivots, feasibility LP, full planner, discrete-event
+//! simulator throughput, perf-model evaluations, and router decisions.
+
+use hetserve::cloud::availability;
+use hetserve::milp::{solve, Cmp, Lp};
+use hetserve::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
+use hetserve::profiler::Profile;
+use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::SchedProblem;
+use hetserve::sim::{simulate_plan, SimOptions};
+use hetserve::util::bench::{bench_quick, black_box, report_header};
+use hetserve::util::rng::Xoshiro256;
+use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix, WorkloadType};
+use hetserve::catalog::GpuType;
+
+fn random_lp(n: usize, m: usize, seed: u64) -> Lp {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut lp = Lp::new(n);
+    for i in 0..n {
+        lp.set_objective(i, rng.range_f64(0.1, 2.0));
+    }
+    for _ in 0..m {
+        let terms: Vec<(usize, f64)> = (0..n).map(|i| (i, rng.range_f64(0.1, 2.0))).collect();
+        lp.add(terms, Cmp::Ge, rng.range_f64(1.0, 5.0));
+    }
+    lp
+}
+
+fn main() {
+    println!("{}", report_header());
+
+    // L3: simplex on a medium dense LP.
+    let lp = random_lp(120, 80, 3);
+    let r = bench_quick("simplex 120v x 80c", || {
+        black_box(solve(&lp));
+    });
+    println!("{}", r.report());
+
+    // L3: perf-model single estimate.
+    let model = ModelSpec::llama3_70b();
+    let perf = PerfModel::default();
+    let cfg = ReplicaConfig::uniform(GpuType::A40, 2, 2);
+    let w = WorkloadType::by_index(0);
+    let r = bench_quick("perf_model::estimate", || {
+        black_box(perf.estimate(&cfg, &model, &w));
+    });
+    println!("{}", r.report());
+
+    // L3: full profile build (enumeration + 9 workloads × ~50 configs).
+    let r = bench_quick("profiler::build(70B)", || {
+        black_box(Profile::build(&model, &perf, &EnumOptions::default()));
+    });
+    println!("{}", r.report());
+
+    // L3: full planner (binary search, knapsack feasibility).
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let mix = TraceMix::trace1();
+    let problem =
+        SchedProblem::from_profile(&profile, &mix, 1500.0, &availability(1), 30.0);
+    let opts = BinarySearchOptions {
+        tolerance: 2.0,
+        ..Default::default()
+    };
+    let r = bench_quick("planner::binary_search(knapsack)", || {
+        black_box(solve_binary_search(&problem, &opts));
+    });
+    println!("{}", r.report());
+
+    // L3: discrete-event simulator — requests/second of simulation.
+    let (plan, _) = solve_binary_search(&problem, &opts);
+    let plan = plan.unwrap();
+    let trace = synthesize_trace(
+        &mix,
+        &SynthOptions {
+            num_requests: 1000,
+            arrival_rate: 0.0,
+            length_sigma: 0.2,
+            seed: 3,
+        },
+    );
+    let models = [model.clone()];
+    let r = bench_quick("simulator 1000 reqs", || {
+        black_box(simulate_plan(
+            &problem,
+            &plan,
+            &models,
+            std::slice::from_ref(&trace),
+            &perf,
+            &SimOptions::default(),
+        ));
+    });
+    // Derived: simulated requests per wall second.
+    let reqs_per_s = 1000.0 / (r.mean_ns / 1e9);
+    println!("{}   [{:.0} sim-reqs/s]", r.report(), reqs_per_s);
+
+    // Trace synthesis throughput.
+    let r = bench_quick("synthesize_trace 10k", || {
+        black_box(synthesize_trace(
+            &mix,
+            &SynthOptions {
+                num_requests: 10_000,
+                arrival_rate: 20.0,
+                length_sigma: 0.25,
+                seed: 5,
+            },
+        ));
+    });
+    println!("{}", r.report());
+}

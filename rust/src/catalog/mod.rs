@@ -1,0 +1,292 @@
+//! GPU catalog: the six GPU types from Table 1 of the paper, their hardware
+//! specifications, pricing, and interconnect topology (§5.1 Environments).
+//!
+//! Everything downstream (performance model, profiler, scheduler) consumes
+//! this catalog, so adding a new GPU type is a one-line change here.
+
+use crate::util::json::Json;
+
+/// Identifier for a GPU type. Order matches Table 1 / the paper's figures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GpuType {
+    A6000,
+    A40,
+    L40,
+    A100,
+    H100,
+    Rtx4090,
+}
+
+impl GpuType {
+    pub const ALL: [GpuType; 6] = [
+        GpuType::A6000,
+        GpuType::A40,
+        GpuType::L40,
+        GpuType::A100,
+        GpuType::H100,
+        GpuType::Rtx4090,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuType::A6000 => "A6000",
+            GpuType::A40 => "A40",
+            GpuType::L40 => "L40",
+            GpuType::A100 => "A100",
+            GpuType::H100 => "H100",
+            GpuType::Rtx4090 => "4090",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<GpuType> {
+        match s.to_ascii_uppercase().as_str() {
+            "A6000" | "RTXA6000" | "RTX_A6000" => Some(GpuType::A6000),
+            "A40" => Some(GpuType::A40),
+            "L40" => Some(GpuType::L40),
+            "A100" => Some(GpuType::A100),
+            "H100" => Some(GpuType::H100),
+            "4090" | "RTX4090" | "RTX_4090" => Some(GpuType::Rtx4090),
+            _ => None,
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        Self::ALL.iter().position(|g| g == self).unwrap()
+    }
+
+    /// Market segment, used in the paper's analysis (Observation-1).
+    pub fn class(&self) -> GpuClass {
+        match self {
+            GpuType::A100 | GpuType::H100 => GpuClass::DataCenter,
+            GpuType::A6000 | GpuType::A40 | GpuType::L40 => GpuClass::Workstation,
+            GpuType::Rtx4090 => GpuClass::Consumer,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GpuClass {
+    DataCenter,
+    Workstation,
+    Consumer,
+}
+
+impl GpuClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuClass::DataCenter => "data-center",
+            GpuClass::Workstation => "workstation",
+            GpuClass::Consumer => "consumer",
+        }
+    }
+}
+
+/// Hardware specification + price of one GPU type (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub gpu: GpuType,
+    /// Peak FP16 tensor throughput in FLOP/s.
+    pub peak_flops: f64,
+    /// Memory bandwidth in bytes/s.
+    pub mem_bandwidth: f64,
+    /// Memory capacity in bytes.
+    pub mem_capacity: f64,
+    /// Rental price in $/h.
+    pub price_per_hour: f64,
+    /// Intra-node GPU-to-GPU link bandwidth in bytes/s
+    /// (NVLink for data-center GPUs, PCIe otherwise — §5.1).
+    pub intra_node_bw: f64,
+    /// Max GPUs per node on the market (limits TP degree — Appendix D
+    /// restricts TP to a single machine).
+    pub max_gpus_per_node: usize,
+}
+
+pub const GB: f64 = 1e9;
+pub const TFLOPS: f64 = 1e12;
+/// NVLink bandwidth (§5.1): 300 GB/s.
+pub const NVLINK_BW: f64 = 300.0 * GB;
+/// PCIe bandwidth (§5.1): 60 GB/s.
+pub const PCIE_BW: f64 = 60.0 * GB;
+/// Cross-node Ethernet (§5.1): 5 Gb/s = 0.625 GB/s.
+pub const ETHERNET_BW: f64 = 5.0e9 / 8.0;
+
+impl GpuSpec {
+    /// Table 1, row by row. Memory-access bandwidth and FP16 peak are the
+    /// paper's numbers; GiB treated as 1e9-byte GB consistently.
+    pub fn of(gpu: GpuType) -> GpuSpec {
+        match gpu {
+            GpuType::A6000 => GpuSpec {
+                gpu,
+                peak_flops: 91.0 * TFLOPS,
+                mem_bandwidth: 960.0 * GB,
+                mem_capacity: 48.0 * GB,
+                price_per_hour: 0.83,
+                intra_node_bw: PCIE_BW,
+                max_gpus_per_node: 8,
+            },
+            GpuType::A40 => GpuSpec {
+                gpu,
+                peak_flops: 150.0 * TFLOPS,
+                mem_bandwidth: 696.0 * GB,
+                mem_capacity: 48.0 * GB,
+                price_per_hour: 0.55,
+                intra_node_bw: PCIE_BW,
+                max_gpus_per_node: 8,
+            },
+            GpuType::L40 => GpuSpec {
+                gpu,
+                peak_flops: 181.0 * TFLOPS,
+                mem_bandwidth: 864.0 * GB,
+                mem_capacity: 48.0 * GB,
+                price_per_hour: 0.83,
+                intra_node_bw: PCIE_BW,
+                max_gpus_per_node: 8,
+            },
+            GpuType::A100 => GpuSpec {
+                gpu,
+                peak_flops: 312.0 * TFLOPS,
+                mem_bandwidth: 1555.0 * GB,
+                mem_capacity: 80.0 * GB,
+                price_per_hour: 1.75,
+                intra_node_bw: NVLINK_BW,
+                max_gpus_per_node: 8,
+            },
+            GpuType::H100 => GpuSpec {
+                gpu,
+                peak_flops: 1979.0 * TFLOPS,
+                mem_bandwidth: 3350.0 * GB,
+                mem_capacity: 80.0 * GB,
+                price_per_hour: 2.99,
+                intra_node_bw: NVLINK_BW,
+                max_gpus_per_node: 8,
+            },
+            GpuType::Rtx4090 => GpuSpec {
+                gpu,
+                peak_flops: 83.0 * TFLOPS,
+                mem_bandwidth: 1008.0 * GB,
+                mem_capacity: 24.0 * GB,
+                price_per_hour: 0.53,
+                intra_node_bw: PCIE_BW,
+                max_gpus_per_node: 4,
+            },
+        }
+    }
+
+    /// Memory bandwidth per dollar — the paper's Observation-1 metric.
+    pub fn bandwidth_per_dollar(&self) -> f64 {
+        self.mem_bandwidth / self.price_per_hour
+    }
+
+    /// Memory capacity per dollar.
+    pub fn capacity_per_dollar(&self) -> f64 {
+        self.mem_capacity / self.price_per_hour
+    }
+
+    /// Compute per dollar.
+    pub fn flops_per_dollar(&self) -> f64 {
+        self.peak_flops / self.price_per_hour
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("gpu", Json::str(self.gpu.name())),
+            ("peak_tflops", Json::num(self.peak_flops / TFLOPS)),
+            ("mem_bw_gbs", Json::num(self.mem_bandwidth / GB)),
+            ("mem_gb", Json::num(self.mem_capacity / GB)),
+            ("price_per_hour", Json::num(self.price_per_hour)),
+        ])
+    }
+}
+
+/// The full catalog (all six types), in Table 1 order.
+pub fn catalog() -> Vec<GpuSpec> {
+    GpuType::ALL.iter().map(|&g| GpuSpec::of(g)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        let h100 = GpuSpec::of(GpuType::H100);
+        assert_eq!(h100.peak_flops, 1979.0 * TFLOPS);
+        assert_eq!(h100.price_per_hour, 2.99);
+        assert_eq!(h100.mem_capacity, 80.0 * GB);
+        let a40 = GpuSpec::of(GpuType::A40);
+        assert_eq!(a40.mem_bandwidth, 696.0 * GB);
+        assert_eq!(a40.price_per_hour, 0.55);
+    }
+
+    #[test]
+    fn classes_match_paper() {
+        assert_eq!(GpuType::H100.class(), GpuClass::DataCenter);
+        assert_eq!(GpuType::A100.class(), GpuClass::DataCenter);
+        assert_eq!(GpuType::A40.class(), GpuClass::Workstation);
+        assert_eq!(GpuType::A6000.class(), GpuClass::Workstation);
+        assert_eq!(GpuType::L40.class(), GpuClass::Workstation);
+        assert_eq!(GpuType::Rtx4090.class(), GpuClass::Consumer);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for g in GpuType::ALL {
+            assert_eq!(GpuType::from_name(g.name()), Some(g));
+        }
+        assert_eq!(GpuType::from_name("RTX4090"), Some(GpuType::Rtx4090));
+        assert_eq!(GpuType::from_name("B200"), None);
+    }
+
+    #[test]
+    fn observation1_bandwidth_per_dollar_ordering() {
+        // Paper: consumer GPUs offer ~1.9x higher memory bandwidth per unit
+        // price than A100/H100; workstation avg 1.2x higher bw/$ than DC.
+        let r4090 = GpuSpec::of(GpuType::Rtx4090).bandwidth_per_dollar();
+        let a100 = GpuSpec::of(GpuType::A100).bandwidth_per_dollar();
+        let h100 = GpuSpec::of(GpuType::H100).bandwidth_per_dollar();
+        let ratio = r4090 / ((a100 + h100) / 2.0);
+        assert!(
+            (1.5..2.5).contains(&ratio),
+            "4090 bw/$ ratio vs DC = {ratio}"
+        );
+        // Workstation capacity per dollar ~1.8x DC (paper's 1.8x claim).
+        let ws: f64 = [GpuType::A6000, GpuType::A40, GpuType::L40]
+            .iter()
+            .map(|&g| GpuSpec::of(g).capacity_per_dollar())
+            .sum::<f64>()
+            / 3.0;
+        let dc: f64 = [GpuType::A100, GpuType::H100]
+            .iter()
+            .map(|&g| GpuSpec::of(g).capacity_per_dollar())
+            .sum::<f64>()
+            / 2.0;
+        let cap_ratio = ws / dc;
+        assert!(
+            (1.4..2.4).contains(&cap_ratio),
+            "ws capacity/$ ratio vs DC = {cap_ratio}"
+        );
+    }
+
+    #[test]
+    fn interconnects_match_environment_section() {
+        assert_eq!(GpuSpec::of(GpuType::H100).intra_node_bw, NVLINK_BW);
+        assert_eq!(GpuSpec::of(GpuType::A100).intra_node_bw, NVLINK_BW);
+        assert_eq!(GpuSpec::of(GpuType::L40).intra_node_bw, PCIE_BW);
+        assert!(ETHERNET_BW < PCIE_BW);
+    }
+
+    #[test]
+    fn catalog_is_complete_and_ordered() {
+        let c = catalog();
+        assert_eq!(c.len(), 6);
+        assert_eq!(c[0].gpu, GpuType::A6000);
+        assert_eq!(c[5].gpu, GpuType::Rtx4090);
+    }
+
+    #[test]
+    fn json_export() {
+        let j = GpuSpec::of(GpuType::A100).to_json();
+        assert_eq!(j.get("gpu").as_str(), Some("A100"));
+        assert_eq!(j.get("peak_tflops").as_f64(), Some(312.0));
+    }
+}

@@ -1,0 +1,249 @@
+//! Continuous batcher for one (logical) replica of the real serving engine.
+//!
+//! Mirrors vLLM's iteration loop: admit queued requests into free slots
+//! (prefill each once), then advance all active slots one token per decode
+//! round, retiring slots that reach their output budget.
+//!
+//! Slots are **fixed-index**: a request keeps its slot until it finishes, so
+//! the server can keep the batched KV cache resident and splice only the
+//! admitted slot's stripes instead of re-gathering the whole cache every
+//! step (the §Perf optimisation).
+
+use std::collections::VecDeque;
+
+/// A request submitted to the serving engine.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// Number of tokens to generate.
+    pub max_new: usize,
+    /// Workload type index (0..9) for routing/reporting.
+    pub workload: usize,
+    /// Arrival offset from serving start, seconds.
+    pub arrival_offset_s: f64,
+}
+
+/// A completed request with its generated tokens and timing.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub arrival_offset_s: f64,
+    pub first_token_s: f64,
+    pub finish_s: f64,
+}
+
+/// An active slot: a request mid-generation.
+pub struct ActiveSlot {
+    pub request: ServeRequest,
+    /// Current KV write position (= valid length).
+    pub position: usize,
+    pub generated: Vec<i32>,
+    pub last_token: i32,
+    pub first_token_s: f64,
+}
+
+/// Per-replica continuous batching state with fixed-index slots.
+pub struct Batcher {
+    pub queue: VecDeque<ServeRequest>,
+    pub slots: Vec<Option<ActiveSlot>>,
+    /// Hard cap from the model's max_seq: a slot must finish before its
+    /// position exceeds this.
+    pub max_position: usize,
+    pub completed: Vec<Completion>,
+}
+
+impl Batcher {
+    pub fn new(max_slots: usize, max_position: usize) -> Batcher {
+        Batcher {
+            queue: VecDeque::new(),
+            slots: (0..max_slots).map(|_| None).collect(),
+            max_position,
+            completed: Vec::new(),
+        }
+    }
+
+    pub fn submit(&mut self, req: ServeRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Total load (queued + active) for routing decisions.
+    pub fn load(&self) -> usize {
+        self.queue.len() + self.active_count()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.active_count() > 0
+    }
+
+    fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+
+    /// Requests that can be admitted right now (free slots and room for
+    /// prompt + generation within max_position). Oversized requests are
+    /// dropped with an empty completion rather than wedging the queue.
+    pub fn admissible(&mut self) -> Vec<ServeRequest> {
+        let mut out = Vec::new();
+        let free = self.slots.iter().filter(|s| s.is_none()).count();
+        while out.len() < free {
+            let Some(front) = self.queue.front() else {
+                break;
+            };
+            if front.prompt.len() + front.max_new + 1 > self.max_position {
+                let req = self.queue.pop_front().unwrap();
+                self.completed.push(Completion {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    arrival_offset_s: req.arrival_offset_s,
+                    first_token_s: f64::NAN,
+                    finish_s: f64::NAN,
+                });
+                continue;
+            }
+            out.push(self.queue.pop_front().unwrap());
+        }
+        out
+    }
+
+    /// Install a prefilled request into a free slot; returns the slot index.
+    pub fn activate(&mut self, request: ServeRequest, first_token: i32, now_s: f64) -> usize {
+        let idx = self.free_slot().expect("no free slot");
+        let position = request.prompt.len();
+        self.slots[idx] = Some(ActiveSlot {
+            generated: vec![first_token],
+            last_token: first_token,
+            first_token_s: now_s,
+            position,
+            request,
+        });
+        idx
+    }
+
+    /// After a decode round produced `next_tokens[slot]` for every occupied
+    /// slot: append tokens, retire finished slots. `next_tokens` is indexed
+    /// by slot (entries for empty slots ignored). Returns retired slots.
+    pub fn advance(&mut self, next_tokens: &[i32], now_s: f64) -> Vec<usize> {
+        let mut retired = Vec::new();
+        let max_position = self.max_position;
+        for (idx, slot) in self.slots.iter_mut().enumerate() {
+            let Some(s) = slot else { continue };
+            s.generated.push(next_tokens[idx]);
+            s.last_token = next_tokens[idx];
+            s.position += 1;
+            let done = s.generated.len() >= s.request.max_new
+                || s.position + 1 >= max_position;
+            if done {
+                self.completed.push(Completion {
+                    id: s.request.id,
+                    tokens: std::mem::take(&mut s.generated),
+                    arrival_offset_s: s.request.arrival_offset_s,
+                    first_token_s: s.first_token_s,
+                    finish_s: now_s,
+                });
+                retired.push(idx);
+                *slot = None;
+            }
+        }
+        retired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> ServeRequest {
+        ServeRequest {
+            id,
+            prompt: vec![1; prompt_len],
+            max_new,
+            workload: 0,
+            arrival_offset_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn admission_respects_slots() {
+        let mut b = Batcher::new(2, 256);
+        for i in 0..5 {
+            b.submit(req(i, 16, 4));
+        }
+        let adm = b.admissible();
+        assert_eq!(adm.len(), 2);
+        for r in adm {
+            b.activate(r, 7, 0.0);
+        }
+        assert_eq!(b.admissible().len(), 0);
+        assert_eq!(b.load(), 5);
+    }
+
+    #[test]
+    fn slots_keep_fixed_indices() {
+        let mut b = Batcher::new(3, 256);
+        b.submit(req(1, 8, 1)); // finishes after first round
+        b.submit(req(2, 8, 5));
+        b.submit(req(3, 8, 5));
+        for r in b.admissible() {
+            b.activate(r, 10, 0.0);
+        }
+        // Slot 0 holds request 1 and retires in round 1.
+        let retired = b.advance(&[11, 12, 13], 0.1);
+        assert_eq!(retired, vec![0]);
+        assert!(b.slots[0].is_none());
+        // Requests 2 and 3 stay at slots 1 and 2.
+        assert_eq!(b.slots[1].as_ref().unwrap().request.id, 2);
+        assert_eq!(b.slots[2].as_ref().unwrap().request.id, 3);
+        // New admission reuses slot 0.
+        b.submit(req(4, 8, 5));
+        for r in b.admissible() {
+            let idx = b.activate(r, 20, 0.2);
+            assert_eq!(idx, 0);
+        }
+    }
+
+    #[test]
+    fn oversized_request_dropped_not_hung() {
+        let mut b = Batcher::new(2, 32);
+        b.submit(req(1, 30, 10)); // 30 + 10 + 1 > 32
+        let adm = b.admissible();
+        assert!(adm.is_empty());
+        assert_eq!(b.completed.len(), 1);
+        assert!(b.completed[0].tokens.is_empty());
+    }
+
+    #[test]
+    fn advance_retires_on_budget() {
+        let mut b = Batcher::new(4, 256);
+        b.submit(req(1, 16, 2));
+        b.submit(req(2, 16, 3));
+        for r in b.admissible() {
+            b.activate(r, 5, 0.1);
+        }
+        let retired = b.advance(&[8, 9, 0, 0], 0.2);
+        assert_eq!(retired, vec![0]);
+        assert_eq!(b.completed[0].id, 1);
+        assert_eq!(b.completed[0].tokens, vec![5, 8]);
+        let retired = b.advance(&[0, 11, 0, 0], 0.3);
+        assert_eq!(retired, vec![1]);
+        assert_eq!(b.active_count(), 0);
+        assert_eq!(b.completed[1].tokens, vec![5, 9, 11]);
+    }
+
+    #[test]
+    fn position_advances_with_tokens() {
+        let mut b = Batcher::new(1, 256);
+        b.submit(req(1, 4, 3));
+        for r in b.admissible() {
+            b.activate(r, 42, 0.0);
+        }
+        assert_eq!(b.slots[0].as_ref().unwrap().position, 4);
+        b.advance(&[43], 0.1);
+        assert_eq!(b.slots[0].as_ref().unwrap().position, 5);
+    }
+}

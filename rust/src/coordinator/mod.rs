@@ -1,0 +1,14 @@
+//! The real serving coordinator: request router, continuous batcher, and
+//! the serving loop that drives the PJRT engine (see [`crate::runtime`]).
+//!
+//! This is the L3 request path of the three-layer stack — pure rust, no
+//! python. The planner (`crate::sched`) decides *what* to deploy; this
+//! module *serves* with it.
+
+pub mod batcher;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, Completion, ServeRequest};
+pub use router::{Router, RouterPolicy};
+pub use server::{serve, synth_requests, ServeReport, ServerOptions};

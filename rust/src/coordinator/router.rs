@@ -1,0 +1,134 @@
+//! Request router: decides which replica serves each incoming request.
+//!
+//! Policies:
+//! * `RoundRobin` — the paper's ablation baseline;
+//! * `Jsq` — join-shortest-queue load balancing;
+//! * `WorkloadAware` — the paper's workload assignment: per workload type,
+//!   replicas are chosen with probabilities proportional to the plan's
+//!   `x_{c,w}` fractions, tie-breaking by shortest queue among the top
+//!   candidates.
+
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub enum RouterPolicy {
+    RoundRobin,
+    Jsq,
+    /// fractions[w][r] = share of workload type w that replica r should get.
+    WorkloadAware { fractions: Vec<Vec<f64>> },
+}
+
+pub struct Router {
+    policy: RouterPolicy,
+    rr_next: usize,
+    rng: Xoshiro256,
+    num_replicas: usize,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy, num_replicas: usize, seed: u64) -> Router {
+        if let RouterPolicy::WorkloadAware { fractions } = &policy {
+            for (w, fr) in fractions.iter().enumerate() {
+                assert_eq!(
+                    fr.len(),
+                    num_replicas,
+                    "workload {w}: fraction arity mismatch"
+                );
+            }
+        }
+        Router {
+            policy,
+            rr_next: 0,
+            rng: Xoshiro256::seed_from_u64(seed),
+            num_replicas,
+        }
+    }
+
+    /// Choose a replica for a request of workload type `workload`, given the
+    /// current queue length of each replica.
+    pub fn route(&mut self, workload: usize, loads: &[usize]) -> usize {
+        assert_eq!(loads.len(), self.num_replicas);
+        match &self.policy {
+            RouterPolicy::RoundRobin => {
+                let r = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.num_replicas;
+                r
+            }
+            RouterPolicy::Jsq => {
+                let min = *loads.iter().min().unwrap();
+                // Deterministic tie-break: lowest index.
+                loads.iter().position(|&l| l == min).unwrap()
+            }
+            RouterPolicy::WorkloadAware { fractions } => {
+                let fr = fractions
+                    .get(workload)
+                    .unwrap_or_else(|| panic!("no fractions for workload {workload}"));
+                let total: f64 = fr.iter().sum();
+                if total <= 0.0 {
+                    // Fall back to JSQ.
+                    let min = *loads.iter().min().unwrap();
+                    return loads.iter().position(|&l| l == min).unwrap();
+                }
+                self.rng.weighted_index(fr)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RouterPolicy::RoundRobin, 3, 1);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(0, &[0, 0, 0])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_picks_least_loaded() {
+        let mut r = Router::new(RouterPolicy::Jsq, 3, 1);
+        assert_eq!(r.route(0, &[5, 2, 9]), 1);
+        assert_eq!(r.route(0, &[1, 1, 0]), 2);
+        // Tie → lowest index.
+        assert_eq!(r.route(0, &[3, 3, 3]), 0);
+    }
+
+    #[test]
+    fn workload_aware_follows_fractions() {
+        let fractions = vec![
+            vec![1.0, 0.0], // workload 0 → replica 0 only
+            vec![0.2, 0.8], // workload 1 → mostly replica 1
+        ];
+        let mut r = Router::new(RouterPolicy::WorkloadAware { fractions }, 2, 7);
+        let mut counts = [0usize; 2];
+        for _ in 0..1000 {
+            counts[r.route(1, &[0, 0])] += 1;
+        }
+        let frac1 = counts[1] as f64 / 1000.0;
+        assert!((frac1 - 0.8).abs() < 0.05, "frac1={frac1}");
+        for _ in 0..100 {
+            assert_eq!(r.route(0, &[9, 0]), 0, "w0 pinned to replica 0");
+        }
+    }
+
+    #[test]
+    fn workload_aware_zero_row_falls_back_to_jsq() {
+        let fractions = vec![vec![0.0, 0.0]];
+        let mut r = Router::new(RouterPolicy::WorkloadAware { fractions }, 2, 3);
+        assert_eq!(r.route(0, &[4, 1]), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity mismatch")]
+    fn arity_checked() {
+        let _ = Router::new(
+            RouterPolicy::WorkloadAware {
+                fractions: vec![vec![1.0]],
+            },
+            2,
+            1,
+        );
+    }
+}

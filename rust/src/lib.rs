@@ -1,0 +1,33 @@
+//! # hetserve
+//!
+//! Cost-efficient LLM serving over heterogeneous GPUs — a full reproduction
+//! of *"Demystifying Cost-Efficiency in LLM Serving over Heterogeneous
+//! GPUs"* (ICML 2025) as a rust coordinator + JAX/Pallas AOT compute stack.
+//!
+//! The crate is organised bottom-up:
+//! * [`util`] — offline substrates (json, cli, rng, pool, stats, bench, proptest)
+//! * [`catalog`] — GPU types, Table 1 specs, interconnects
+//! * [`workload`] — the nine workload types, Table 4 traces, synthesizer
+//! * [`cloud`] — availability snapshots (Table 3), market simulator, costs
+//! * [`perf_model`] — analytical roofline model replacing real-GPU profiling
+//! * [`profiler`] — `h_{c,w}` throughput tables for the scheduler
+//! * [`milp`] — from-scratch simplex + branch-and-bound MILP solver
+//! * [`sched`] — the paper's scheduling algorithm (§4.3, App D–G)
+//! * [`baselines`] — homogeneous / HexGen-like / ablation planners
+//! * [`sim`] — discrete-event cluster simulator executing serving plans
+//! * [`runtime`] — PJRT engine: loads AOT HLO artifacts, paged KV cache
+//! * [`coordinator`] — the real serving path: router, batcher, workers
+
+pub mod baselines;
+pub mod catalog;
+pub mod cloud;
+pub mod coordinator;
+pub mod metrics;
+pub mod milp;
+pub mod perf_model;
+pub mod profiler;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,230 @@
+//! `hetserve` — the leader binary: plan, simulate, profile, and serve.
+//!
+//! Subcommands:
+//!   plan      — compute the cost-optimal serving plan (§4)
+//!   simulate  — run a plan through the discrete-event cluster simulator
+//!   serve     — real serving on the PJRT engine (AOT artifacts required)
+//!   profile   — print the h_{c,w} throughput table (one-time profiling)
+//!   market    — print a Figure 2-style availability series
+//!   help      — this text
+
+use hetserve::baselines::homogeneous_plan;
+use hetserve::catalog::GpuType;
+use hetserve::cloud::{availability, MarketSim};
+use hetserve::coordinator::{serve, synth_requests, RouterPolicy, ServerOptions};
+use hetserve::perf_model::{ModelSpec, PerfModel};
+use hetserve::profiler::Profile;
+use hetserve::runtime::{default_artifacts_dir, Engine};
+use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions, Feasibility};
+use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::SchedProblem;
+use hetserve::sim::{simulate_plan, SimOptions};
+use hetserve::util::bench::{cell, Table};
+use hetserve::util::cli::Args;
+use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix, WorkloadType};
+
+const HELP: &str = "\
+hetserve — cost-efficient LLM serving over heterogeneous GPUs
+
+USAGE: hetserve <subcommand> [--options]
+
+  plan      --model 70b --trace trace1 --avail 1 --budget 30 [--exact] [--requests 2000]
+  simulate  (plan options) [--seed N]
+  serve     --requests 48 --replicas 2 --router jsq|rr [--arrival-rate RPS]
+  profile   --model 70b
+  market    --ticks 96 --seed 7
+";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&["exact", "verbose"]);
+    if args.flag("verbose") {
+        hetserve::util::logging::set_level_from_str("debug");
+    }
+    match args.subcommand() {
+        Some("plan") => cmd_plan(&args, false),
+        Some("simulate") => cmd_plan(&args, true),
+        Some("serve") => cmd_serve(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("market") => cmd_market(&args),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn build_problem(args: &Args) -> (ModelSpec, PerfModel, Profile, TraceMix, SchedProblem) {
+    let model = ModelSpec::by_name(args.get_or("model", "70b")).expect("unknown --model");
+    let perf = PerfModel::default();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let mix = TraceMix::by_name(args.get_or("trace", "trace1")).expect("unknown --trace");
+    let avail = availability(args.get_usize("avail", 1));
+    let budget = args.get_f64("budget", 30.0);
+    let requests = args.get_f64("requests", 2000.0);
+    let problem = SchedProblem::from_profile(&profile, &mix, requests, &avail, budget);
+    (model, perf, profile, mix, problem)
+}
+
+fn cmd_plan(args: &Args, run_sim: bool) -> anyhow::Result<()> {
+    let (model, perf, _profile, mix, problem) = build_problem(args);
+    let opts = BinarySearchOptions {
+        feasibility: if args.flag("exact") {
+            Feasibility::Exact
+        } else {
+            Feasibility::Knapsack
+        },
+        ..Default::default()
+    };
+    let (plan, stats) = solve_binary_search(&problem, &opts);
+    let Some(plan) = plan else {
+        anyhow::bail!("no feasible plan under these constraints");
+    };
+    plan.validate(&problem, 1e-4).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "plan for {} on {} (budget {} $/h): makespan {:.1}s, cost {:.2} $/h  [{} iters, {} LP solves, {:?}]",
+        model.name,
+        mix.name,
+        problem.budget,
+        plan.makespan,
+        plan.cost(&problem),
+        stats.iterations,
+        stats.lp_solves,
+        stats.elapsed
+    );
+    let mut t = Table::new("deployment", &["replicas", "config", "cost $/h", "fractions %"]);
+    for e in &plan.entries {
+        let c = &problem.candidates[e.candidate];
+        t.row(vec![
+            e.replicas.to_string(),
+            c.label.clone(),
+            cell(e.replicas as f64 * c.cost),
+            e.fractions
+                .iter()
+                .map(|f| format!("{:.0}", f * 100.0))
+                .collect::<Vec<_>>()
+                .join(","),
+        ]);
+    }
+    t.print();
+
+    // Reference: the strongest homogeneous baselines.
+    for gpu in [GpuType::H100, GpuType::A6000, GpuType::Rtx4090] {
+        if let Some(h) = homogeneous_plan(&problem, gpu, &opts) {
+            println!(
+                "  vs {:<6} homogeneous: makespan {:.1}s  (baseline is {:+.1}% vs ours)",
+                gpu.name(),
+                h.makespan,
+                (h.makespan / plan.makespan - 1.0) * 100.0
+            );
+        }
+    }
+
+    if run_sim {
+        let trace = synthesize_trace(
+            &mix,
+            &SynthOptions {
+                num_requests: problem.total_demand() as usize,
+                arrival_rate: 0.0,
+                length_sigma: 0.2,
+                seed: args.get_u64("seed", 42),
+            },
+        );
+        let result = simulate_plan(
+            &problem,
+            &plan,
+            &[model],
+            &[trace],
+            &perf,
+            &SimOptions::default(),
+        );
+        println!(
+            "simulated: makespan {:.1}s, throughput {:.2} req/s, p50 {:.1}s, p90 {:.1}s, util {:.0}%",
+            result.makespan,
+            result.throughput_rps,
+            result.p_latency(50.0),
+            result.p_latency(90.0),
+            result.mean_utilization * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let engine = Engine::load(&default_artifacts_dir())?;
+    let n = args.get_usize("requests", 48);
+    let mut reqs = synth_requests(n, 0xE2E, &engine.prefill_buckets(), engine.dims().vocab);
+    let rate = args.get_f64("arrival-rate", 0.0);
+    if rate > 0.0 {
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.arrival_offset_s = i as f64 / rate;
+        }
+    }
+    let report = serve(
+        &engine,
+        reqs,
+        &ServerOptions {
+            num_replicas: args.get_usize("replicas", 2),
+            max_slots: args.get_usize("slots", 4),
+            router: match args.get_or("router", "jsq") {
+                "rr" => RouterPolicy::RoundRobin,
+                _ => RouterPolicy::Jsq,
+            },
+            seed: args.get_u64("seed", 7),
+            respect_arrivals: rate > 0.0,
+        },
+    )?;
+    println!(
+        "served {} requests in {:.2}s — {:.2} req/s, {:.0} tok/s, p50 {:.2}s p90 {:.2}s",
+        report.completed,
+        report.wall_s,
+        report.throughput_rps,
+        report.tokens_per_s,
+        report.latency.latency_percentile(50.0),
+        report.latency.latency_percentile(90.0)
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let model = ModelSpec::by_name(args.get_or("model", "70b")).expect("unknown --model");
+    let perf = PerfModel::default();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let mut headers = vec!["config".to_string(), "cost $/h".to_string()];
+    for w in WorkloadType::all() {
+        headers.push(w.label());
+    }
+    let mut t = Table::new(
+        &format!("h_(c,w) for {} (req/s)", model.name),
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for c in &profile.configs {
+        let mut row = vec![c.label(), cell(c.cost)];
+        for w in 0..9 {
+            row.push(cell(c.throughput[w]));
+        }
+        t.row(row);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_market(args: &Args) -> anyhow::Result<()> {
+    let ticks = args.get_usize("ticks", 96);
+    let mut market = MarketSim::default_market(args.get_u64("seed", 7));
+    let series = market.series(ticks);
+    let mut t = Table::new(
+        "24h availability (Figure 2 style)",
+        &["tick", "A6000", "A40", "L40", "A100", "H100", "4090"],
+    );
+    for (i, a) in series.iter().enumerate() {
+        if i % 4 == 0 {
+            t.row(
+                std::iter::once(format!("{:02}:{:02}", i / 4, (i % 4) * 15))
+                    .chain(GpuType::ALL.iter().map(|&g| a.of(g).to_string()))
+                    .collect(),
+            );
+        }
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Serving metrics: latency recording, percentile reports, and windowed
+//! throughput — shared by the simulator, the real serving coordinator, and
+//! every benchmark harness.
+
+use crate::util::stats::{paper_percentile_grid, percentile};
+
+/// Collects per-request latencies and completion times.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyRecorder {
+    /// (completion_time_s, latency_s) pairs.
+    samples: Vec<(f64, f64)>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, completion_s: f64, latency_s: f64) {
+        self.samples.push((completion_s, latency_s));
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn latencies(&self) -> Vec<f64> {
+        self.samples.iter().map(|&(_, l)| l).collect()
+    }
+
+    /// Time of the last completion (the makespan when arrivals are batched).
+    pub fn makespan(&self) -> f64 {
+        self.samples.iter().map(|&(t, _)| t).fold(0.0, f64::max)
+    }
+
+    /// Overall throughput: completions / makespan.
+    pub fn throughput_rps(&self) -> f64 {
+        let span = self.makespan();
+        if span > 0.0 {
+            self.count() as f64 / span
+        } else {
+            0.0
+        }
+    }
+
+    /// Latency percentile (p in [0,100]).
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let mut v = self.latencies();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile(&v, p)
+    }
+
+    /// The paper's p5..p100 latency grid.
+    pub fn percentile_grid(&self) -> Vec<(f64, f64)> {
+        let mut v = self.latencies();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        paper_percentile_grid()
+            .into_iter()
+            .map(|p| (p, percentile(&v, p)))
+            .collect()
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+}
+
+/// Tracks busy time for utilization reporting.
+#[derive(Clone, Debug, Default)]
+pub struct BusyTracker {
+    pub busy_s: f64,
+    pub last_event_s: f64,
+}
+
+impl BusyTracker {
+    pub fn add_busy(&mut self, start_s: f64, duration_s: f64) {
+        self.busy_s += duration_s;
+        self.last_event_s = self.last_event_s.max(start_s + duration_s);
+    }
+
+    pub fn utilization(&self, horizon_s: f64) -> f64 {
+        if horizon_s > 0.0 {
+            (self.busy_s / horizon_s).min(1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_basics() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=10 {
+            r.record(i as f64, i as f64 * 0.1);
+        }
+        assert_eq!(r.count(), 10);
+        assert_eq!(r.makespan(), 10.0);
+        assert!((r.throughput_rps() - 1.0).abs() < 1e-12);
+        assert!((r.latency_percentile(100.0) - 1.0).abs() < 1e-12);
+        let grid = r.percentile_grid();
+        assert_eq!(grid.len(), 20);
+        assert_eq!(grid[19].0, 100.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LatencyRecorder::new();
+        a.record(1.0, 0.5);
+        let mut b = LatencyRecorder::new();
+        b.record(2.0, 0.7);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.makespan(), 2.0);
+    }
+
+    #[test]
+    fn busy_tracker_utilization() {
+        let mut t = BusyTracker::default();
+        t.add_busy(0.0, 5.0);
+        t.add_busy(6.0, 2.0);
+        assert!((t.utilization(10.0) - 0.7).abs() < 1e-12);
+        assert_eq!(t.utilization(0.0), 0.0);
+    }
+}

@@ -1,0 +1,353 @@
+//! Branch-and-bound MILP solver on top of the simplex LP relaxation.
+//!
+//! Minimises cᵀx subject to linear constraints with a designated subset of
+//! variables required integral. Branching splits on the most-fractional
+//! integer variable (x ≤ ⌊v⌋ vs x ≥ ⌈v⌉), best-first on the LP bound, with
+//! incumbent pruning, node and time budgets, and an optional absolute gap
+//! for early stop (the Appendix G early-stopping criterion).
+
+use super::simplex::{solve, Cmp, Lp, LpResult};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct MilpOptions {
+    /// Hard cap on explored B&B nodes.
+    pub max_nodes: usize,
+    /// Wall-clock budget.
+    pub time_limit: Duration,
+    /// Stop when incumbent − bound ≤ gap (absolute).
+    pub abs_gap: f64,
+    /// Integrality tolerance.
+    pub int_tol: f64,
+}
+
+impl Default for MilpOptions {
+    fn default() -> Self {
+        Self {
+            max_nodes: 200_000,
+            time_limit: Duration::from_secs(120),
+            abs_gap: 1e-6,
+            int_tol: 1e-6,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum MilpResult {
+    Optimal { x: Vec<f64>, objective: f64 },
+    /// Feasible incumbent found but search stopped early (budget); the
+    /// bound reports how far it could still improve.
+    Feasible {
+        x: Vec<f64>,
+        objective: f64,
+        bound: f64,
+    },
+    Infeasible,
+    /// No incumbent within budget, relaxation feasible — unknown status.
+    Unknown,
+}
+
+impl MilpResult {
+    pub fn solution(&self) -> Option<(&[f64], f64)> {
+        match self {
+            MilpResult::Optimal { x, objective } => Some((x, *objective)),
+            MilpResult::Feasible { x, objective, .. } => Some((x, *objective)),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MilpStats {
+    pub nodes: usize,
+    pub lp_solves: usize,
+    pub elapsed: Duration,
+}
+
+struct Node {
+    /// Extra bounds as (var, is_upper, value) triples.
+    bounds: Vec<(usize, bool, f64)>,
+    /// LP bound inherited from the parent (for best-first ordering).
+    bound: f64,
+}
+
+/// Solve a MILP: `integer_vars[i]` indexes variables that must be integral.
+pub fn solve_milp(lp: &Lp, integer_vars: &[usize], opts: &MilpOptions) -> (MilpResult, MilpStats) {
+    let start = Instant::now();
+    let mut stats = MilpStats::default();
+
+    let mut best_x: Option<Vec<f64>> = None;
+    let mut best_obj = f64::INFINITY;
+
+    // Best-first queue ordered by bound (Vec + manual min extraction is fine
+    // at our node counts and avoids an ordered-float dependency).
+    let mut queue: Vec<Node> = vec![Node {
+        bounds: Vec::new(),
+        bound: f64::NEG_INFINITY,
+    }];
+    let mut global_bound = f64::NEG_INFINITY;
+
+    while let Some(pos) = best_node(&queue) {
+        if stats.nodes >= opts.max_nodes || start.elapsed() > opts.time_limit {
+            break;
+        }
+        let node = queue.swap_remove(pos);
+        global_bound = node.bound;
+        if node.bound > best_obj - opts.abs_gap {
+            continue; // pruned by incumbent
+        }
+        stats.nodes += 1;
+
+        // Build the node LP = base + branch bounds.
+        let mut node_lp = lp.clone();
+        for &(var, is_upper, value) in &node.bounds {
+            node_lp.add(
+                vec![(var, 1.0)],
+                if is_upper { Cmp::Le } else { Cmp::Ge },
+                value,
+            );
+        }
+        stats.lp_solves += 1;
+        let relax = solve(&node_lp);
+        let (x, obj) = match relax {
+            LpResult::Optimal { x, objective } => (x, objective),
+            LpResult::Infeasible => continue,
+            LpResult::Unbounded => {
+                // An unbounded relaxation of a minimisation MILP with a
+                // bounded integer hull can't be handled here; treat the
+                // whole problem as unbounded-ish and give up on this node.
+                continue;
+            }
+            LpResult::Stalled => continue,
+        };
+        if obj > best_obj - opts.abs_gap {
+            continue;
+        }
+
+        // Find the most fractional integer variable.
+        let mut branch_var = None;
+        let mut best_frac = opts.int_tol;
+        for &v in integer_vars {
+            let frac = (x[v] - x[v].round()).abs();
+            if frac > best_frac {
+                best_frac = frac;
+                branch_var = Some(v);
+            }
+        }
+
+        match branch_var {
+            None => {
+                // Integral solution: candidate incumbent. Round the integer
+                // coordinates exactly.
+                let mut xi = x.clone();
+                for &v in integer_vars {
+                    xi[v] = xi[v].round();
+                }
+                if obj < best_obj {
+                    best_obj = obj;
+                    best_x = Some(xi);
+                }
+            }
+            Some(v) => {
+                let floor = x[v].floor();
+                let mut down = node.bounds.clone();
+                down.push((v, true, floor));
+                let mut up = node.bounds;
+                up.push((v, false, floor + 1.0));
+                queue.push(Node {
+                    bounds: down,
+                    bound: obj,
+                });
+                queue.push(Node {
+                    bounds: up,
+                    bound: obj,
+                });
+            }
+        }
+    }
+
+    stats.elapsed = start.elapsed();
+    let exhausted = queue.is_empty()
+        || best_node(&queue)
+            .map(|p| queue[p].bound > best_obj - opts.abs_gap)
+            .unwrap_or(true);
+    let result = match best_x {
+        Some(x) => {
+            if exhausted {
+                MilpResult::Optimal {
+                    x,
+                    objective: best_obj,
+                }
+            } else {
+                MilpResult::Feasible {
+                    x,
+                    objective: best_obj,
+                    bound: global_bound,
+                }
+            }
+        }
+        None => {
+            if exhausted {
+                MilpResult::Infeasible
+            } else {
+                MilpResult::Unknown
+            }
+        }
+    };
+    (result, stats)
+}
+
+fn best_node(queue: &[Node]) -> Option<usize> {
+    if queue.is_empty() {
+        return None;
+    }
+    let mut best = 0;
+    for (i, n) in queue.iter().enumerate().skip(1) {
+        if n.bound < queue[best].bound {
+            best = i;
+        }
+    }
+    Some(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn optimal(lp: &Lp, ints: &[usize]) -> (Vec<f64>, f64) {
+        let (res, _) = solve_milp(lp, ints, &MilpOptions::default());
+        match res {
+            MilpResult::Optimal { x, objective } => (x, objective),
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn knapsack_as_milp() {
+        // max 10a + 13b + 7c, 3a + 4b + 2c <= 6, binaries.
+        // Best: a + c (weight 5, value 17)? b+c weight 6 value 20. => 20.
+        let mut lp = Lp::new(3);
+        lp.set_objective(0, -10.0);
+        lp.set_objective(1, -13.0);
+        lp.set_objective(2, -7.0);
+        lp.add(vec![(0, 3.0), (1, 4.0), (2, 2.0)], Cmp::Le, 6.0);
+        for v in 0..3 {
+            lp.add(vec![(v, 1.0)], Cmp::Le, 1.0);
+        }
+        let (x, obj) = optimal(&lp, &[0, 1, 2]);
+        assert!((obj + 20.0).abs() < 1e-6, "x={x:?} obj={obj}");
+        assert!((x[1] - 1.0).abs() < 1e-6 && (x[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn integer_rounding_matters() {
+        // max x + y s.t. 2x + 2y <= 5 ⇒ LP opt 2.5, integer opt 2.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -1.0);
+        lp.set_objective(1, -1.0);
+        lp.add(vec![(0, 2.0), (1, 2.0)], Cmp::Le, 5.0);
+        let (x, obj) = optimal(&lp, &[0, 1]);
+        assert!((obj + 2.0).abs() < 1e-6, "x={x:?}");
+        let sum: f64 = x.iter().sum();
+        assert!((sum - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mixed_integer_continuous() {
+        // min 3y - x, y integer ≥ x/2, x ≤ 3.9 continuous, x ≥ 0.
+        // For x=3.9 ⇒ y ≥ 1.95 ⇒ y=2, obj = 6 - 3.9 = 2.1.
+        // For y=1: x ≤ 2 ⇒ obj = 3 - 2 = 1.0. For y=0: x=0 obj=0. => 0.
+        let mut lp = Lp::new(2); // x=0, y=1
+        lp.set_objective(0, -1.0);
+        lp.set_objective(1, 3.0);
+        lp.add(vec![(1, 2.0), (0, -1.0)], Cmp::Ge, 0.0); // 2y >= x
+        lp.add(vec![(0, 1.0)], Cmp::Le, 3.9);
+        let (_, obj) = optimal(&lp, &[1]);
+        assert!((obj - 0.0).abs() < 1e-6, "obj={obj}");
+    }
+
+    #[test]
+    fn infeasible_milp() {
+        // x integer, 0.2 <= x <= 0.8.
+        let mut lp = Lp::new(1);
+        lp.add(vec![(0, 1.0)], Cmp::Ge, 0.2);
+        lp.add(vec![(0, 1.0)], Cmp::Le, 0.8);
+        let (res, _) = solve_milp(&lp, &[0], &MilpOptions::default());
+        assert_eq!(res, MilpResult::Infeasible);
+    }
+
+    #[test]
+    fn larger_knapsack_matches_dp() {
+        // Cross-check a 12-item 0/1 knapsack against dynamic programming.
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let n = 12;
+        let values: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 20.0).round()).collect();
+        let weights: Vec<usize> = (0..n).map(|_| 1 + rng.index(9)).collect();
+        let cap = 20usize;
+        // DP.
+        let mut dp = vec![0.0f64; cap + 1];
+        for i in 0..n {
+            for w in (weights[i]..=cap).rev() {
+                dp[w] = dp[w].max(dp[w - weights[i]] + values[i]);
+            }
+        }
+        let dp_best = dp[cap];
+        // MILP.
+        let mut lp = Lp::new(n);
+        for i in 0..n {
+            lp.set_objective(i, -values[i]);
+            lp.add(vec![(i, 1.0)], Cmp::Le, 1.0);
+        }
+        lp.add(
+            (0..n).map(|i| (i, weights[i] as f64)).collect(),
+            Cmp::Le,
+            cap as f64,
+        );
+        let ints: Vec<usize> = (0..n).collect();
+        let (_, obj) = optimal(&lp, &ints);
+        assert!(
+            (obj + dp_best).abs() < 1e-6,
+            "milp={} dp={dp_best}",
+            -obj
+        );
+    }
+
+    #[test]
+    fn respects_node_budget() {
+        let mut lp = Lp::new(6);
+        for i in 0..6 {
+            lp.set_objective(i, -1.0);
+            lp.add(vec![(i, 1.0)], Cmp::Le, 1.0);
+        }
+        lp.add((0..6).map(|i| (i, 1.0)).collect(), Cmp::Le, 2.5);
+        let (res, stats) = solve_milp(
+            &lp,
+            &(0..6).collect::<Vec<_>>(),
+            &MilpOptions {
+                max_nodes: 1,
+                ..Default::default()
+            },
+        );
+        assert!(stats.nodes <= 1);
+        // With 1 node we may or may not have an incumbent, but never a
+        // spurious "Optimal" claim with remaining open better nodes.
+        if let MilpResult::Optimal { objective, .. } = res {
+            assert!((objective + 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn general_integer_variables() {
+        // min -(3x + 2y) s.t. x <= 3.7, x + y <= 5.2, x,y integer >= 0.
+        // Candidates: x=3,y=2 → 13.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -3.0);
+        lp.set_objective(1, -2.0);
+        lp.add(vec![(0, 1.0)], Cmp::Le, 3.7);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 5.2);
+        let (x, obj) = optimal(&lp, &[0, 1]);
+        assert!((obj + 13.0).abs() < 1e-6, "x={x:?}");
+        assert!((x[0] - 3.0).abs() < 1e-6 && (x[1] - 2.0).abs() < 1e-6);
+    }
+}

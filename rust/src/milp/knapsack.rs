@@ -1,0 +1,144 @@
+//! Knapsack helpers for the binary-search feasibility approximation
+//! (Appendix F: "the feasibility check can be further approximated using a
+//! knapsack approximation").
+//!
+//! The approximate check treats each candidate configuration copy as an item
+//! with *cost* (its price) and *value* (throughput contribution toward the
+//! remaining workload demand at the target makespan T̂), then greedily packs
+//! by value density with a bounded-copies constraint. Exact 0/1 DP is also
+//! provided for test cross-checks.
+
+/// An item with a cost, a value, and a maximum copy count.
+#[derive(Clone, Copy, Debug)]
+pub struct Item {
+    pub cost: f64,
+    pub value: f64,
+    pub max_copies: usize,
+}
+
+/// Greedy bounded-knapsack by value density. Returns (chosen copy counts,
+/// total value, total cost). Deterministic: ties broken by index.
+pub fn greedy_bounded(items: &[Item], budget: f64) -> (Vec<usize>, f64, f64) {
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    order.sort_by(|&a, &b| {
+        let da = items[a].value / items[a].cost.max(1e-12);
+        let db = items[b].value / items[b].cost.max(1e-12);
+        db.partial_cmp(&da).unwrap().then(a.cmp(&b))
+    });
+    let mut chosen = vec![0usize; items.len()];
+    let mut cost = 0.0;
+    let mut value = 0.0;
+    for &i in &order {
+        let it = &items[i];
+        if it.value <= 0.0 || it.cost <= 0.0 {
+            continue;
+        }
+        while chosen[i] < it.max_copies && cost + it.cost <= budget + 1e-9 {
+            chosen[i] += 1;
+            cost += it.cost;
+            value += it.value;
+        }
+    }
+    (chosen, value, cost)
+}
+
+/// Exact 0/1 knapsack via DP over discretised costs (cost unit `step`).
+/// For cross-checking the greedy on small instances.
+pub fn dp_01(costs: &[f64], values: &[f64], budget: f64, step: f64) -> f64 {
+    assert_eq!(costs.len(), values.len());
+    let cap = (budget / step).floor() as usize;
+    let w: Vec<usize> = costs.iter().map(|c| (c / step).ceil() as usize).collect();
+    let mut dp = vec![0.0f64; cap + 1];
+    for i in 0..costs.len() {
+        if w[i] > cap {
+            continue;
+        }
+        for b in (w[i]..=cap).rev() {
+            dp[b] = dp[b].max(dp[b - w[i]] + values[i]);
+        }
+    }
+    dp[cap]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_respects_budget_and_copies() {
+        let items = vec![
+            Item {
+                cost: 2.0,
+                value: 10.0,
+                max_copies: 2,
+            },
+            Item {
+                cost: 1.0,
+                value: 3.0,
+                max_copies: 5,
+            },
+        ];
+        let (chosen, value, cost) = greedy_bounded(&items, 7.0);
+        assert!(cost <= 7.0 + 1e-9);
+        assert_eq!(chosen[0], 2); // density 5 > 3
+        assert_eq!(chosen[1], 3);
+        assert!((value - 29.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn greedy_skips_worthless_items() {
+        let items = vec![
+            Item {
+                cost: 1.0,
+                value: 0.0,
+                max_copies: 3,
+            },
+            Item {
+                cost: 1.0,
+                value: 1.0,
+                max_copies: 1,
+            },
+        ];
+        let (chosen, value, _) = greedy_bounded(&items, 10.0);
+        assert_eq!(chosen[0], 0);
+        assert_eq!(chosen[1], 1);
+        assert!((value - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn greedy_close_to_dp_on_random_instances() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(61);
+        for _ in 0..30 {
+            let n = 8;
+            let costs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 4.0)).collect();
+            let values: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 8.0)).collect();
+            let budget = 6.0;
+            let items: Vec<Item> = costs
+                .iter()
+                .zip(&values)
+                .map(|(&cost, &value)| Item {
+                    cost,
+                    value,
+                    max_copies: 1,
+                })
+                .collect();
+            let (_, greedy_val, _) = greedy_bounded(&items, budget);
+            let dp_val = dp_01(&costs, &values, budget, 0.01);
+            // Greedy is within 50% of optimal on these instances (classic
+            // density-greedy bound without the single-item fix is unbounded;
+            // with our instance distribution it's comfortably close).
+            assert!(
+                greedy_val >= 0.5 * dp_val - 1e-9,
+                "greedy {greedy_val} vs dp {dp_val}"
+            );
+        }
+    }
+
+    #[test]
+    fn dp_exact_small_case() {
+        // values 6,10,12 / costs 1,2,3 / budget 5 => 10+12=22.
+        let v = dp_01(&[1.0, 2.0, 3.0], &[6.0, 10.0, 12.0], 5.0, 1.0);
+        assert!((v - 22.0).abs() < 1e-9);
+    }
+}

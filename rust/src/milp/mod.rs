@@ -1,0 +1,12 @@
+//! Mixed-integer linear programming substrate, built from scratch:
+//! * [`simplex`] — dense two-phase simplex LP solver;
+//! * [`branch_bound`] — best-first branch & bound for integer variables;
+//! * [`knapsack`] — greedy bounded knapsack used by the Appendix F
+//!   approximate feasibility check.
+
+pub mod branch_bound;
+pub mod knapsack;
+pub mod simplex;
+
+pub use branch_bound::{solve_milp, MilpOptions, MilpResult, MilpStats};
+pub use simplex::{solve, Cmp, Constraint, Lp, LpResult};

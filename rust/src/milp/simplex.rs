@@ -1,0 +1,516 @@
+//! Dense two-phase simplex LP solver (built from scratch — no LP library is
+//! available offline, and the paper's scheduler needs one at its core).
+//!
+//! Solves  minimize cᵀx  s.t.  Ax {≤,≥,=} b,  x ≥ 0.
+//!
+//! Implementation notes:
+//! * dense tableau in a single flat `Vec<f64>` (row-major) — the pivot loop
+//!   is the hot path and benefits from contiguity;
+//! * phase 1 minimises the sum of artificial variables; a positive optimum
+//!   means infeasible;
+//! * Dantzig pricing with a Bland's-rule fallback after a stall threshold to
+//!   guarantee termination under degeneracy;
+//! * upper bounds are the caller's job (add explicit rows); the scheduler's
+//!   formulations are naturally bounded.
+
+/// Comparison sense of a constraint row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// A sparse constraint row: Σ coef·x[idx] (cmp) rhs.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    pub terms: Vec<(usize, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+/// A linear program in minimisation form.
+#[derive(Clone, Debug, Default)]
+pub struct Lp {
+    pub num_vars: usize,
+    /// Objective coefficients (len = num_vars); minimised.
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+}
+
+impl Lp {
+    pub fn new(num_vars: usize) -> Self {
+        Self {
+            num_vars,
+            objective: vec![0.0; num_vars],
+            constraints: Vec::new(),
+        }
+    }
+
+    pub fn set_objective(&mut self, var: usize, coef: f64) {
+        self.objective[var] = coef;
+    }
+
+    pub fn add(&mut self, terms: Vec<(usize, f64)>, cmp: Cmp, rhs: f64) {
+        debug_assert!(terms.iter().all(|&(i, _)| i < self.num_vars));
+        self.constraints.push(Constraint { terms, cmp, rhs });
+    }
+
+    /// Evaluate a constraint's LHS at x.
+    pub fn lhs(&self, row: &Constraint, x: &[f64]) -> f64 {
+        row.terms.iter().map(|&(i, c)| c * x[i]).sum()
+    }
+
+    /// Verify a candidate solution satisfies every constraint within tol.
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.iter().any(|&v| v < -tol) {
+            return false;
+        }
+        self.constraints.iter().all(|c| {
+            let lhs = self.lhs(c, x);
+            match c.cmp {
+                Cmp::Le => lhs <= c.rhs + tol,
+                Cmp::Ge => lhs >= c.rhs - tol,
+                Cmp::Eq => (lhs - c.rhs).abs() <= tol,
+            }
+        })
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LpResult {
+    Optimal { x: Vec<f64>, objective: f64 },
+    Infeasible,
+    Unbounded,
+    /// Iteration limit hit (numerical trouble); treat as failure.
+    Stalled,
+}
+
+const EPS: f64 = 1e-9;
+const PIVOT_EPS: f64 = 1e-7;
+
+/// Dense simplex tableau.
+struct Tableau {
+    rows: usize,
+    cols: usize, // includes RHS column
+    a: Vec<f64>,
+    basis: Vec<usize>,
+    /// Scratch copy of the pivot row (avoids aliasing in elimination and
+    /// lets the inner loop run as a vectorizable axpy).
+    scratch: Vec<f64>,
+}
+
+impl Tableau {
+    #[inline]
+    fn at(&self, r: usize, c: usize) -> f64 {
+        self.a[r * self.cols + c]
+    }
+    #[inline]
+    fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.a[r * self.cols + c] = v;
+    }
+
+    /// Pivot on (pr, pc): normalise the pivot row and eliminate the column
+    /// elsewhere. This is the hot loop of the whole planner — written as a
+    /// scaled row copy + per-row branchless axpy so LLVM vectorizes it.
+    fn pivot(&mut self, pr: usize, pc: usize) {
+        let cols = self.cols;
+        let pivot = self.at(pr, pc);
+        debug_assert!(pivot.abs() > EPS);
+        let inv = 1.0 / pivot;
+        let row_start = pr * cols;
+        // Normalise the pivot row into scratch, then write it back.
+        for (dst, src) in self.scratch.iter_mut().zip(&self.a[row_start..row_start + cols]) {
+            *dst = *src * inv;
+        }
+        self.a[row_start..row_start + cols].copy_from_slice(&self.scratch);
+        // Eliminate the pivot column from every other row: row -= f * pivot.
+        for r in 0..self.rows {
+            if r == pr {
+                continue;
+            }
+            let factor = self.at(r, pc);
+            if factor.abs() <= EPS {
+                if factor != 0.0 {
+                    self.set(r, pc, 0.0);
+                }
+                continue;
+            }
+            let dst = &mut self.a[r * cols..r * cols + cols];
+            // Branchless axpy — auto-vectorized.
+            for (d, s) in dst.iter_mut().zip(&self.scratch) {
+                *d -= factor * *s;
+            }
+            dst[pc] = 0.0;
+        }
+        self.basis[pr] = pc;
+    }
+}
+
+/// Solve an LP by two-phase simplex.
+pub fn solve(lp: &Lp) -> LpResult {
+    let m = lp.constraints.len();
+    let n = lp.num_vars;
+
+    // Count auxiliary columns.
+    let mut num_slack = 0; // one per Le or Ge
+    let mut num_art = 0; // one per Ge or Eq
+    for c in &lp.constraints {
+        // Normalise rows to rhs >= 0 first; sense may flip.
+        let (cmp, _) = normalised_sense(c);
+        match cmp {
+            Cmp::Le => num_slack += 1,
+            Cmp::Ge => {
+                num_slack += 1;
+                num_art += 1;
+            }
+            Cmp::Eq => num_art += 1,
+        }
+    }
+
+    let total = n + num_slack + num_art;
+    let cols = total + 1; // + RHS
+    let rows = m + 1; // + objective row
+    let mut t = Tableau {
+        rows,
+        cols,
+        a: vec![0.0; rows * cols],
+        basis: vec![usize::MAX; m],
+        scratch: vec![0.0; cols],
+    };
+
+    let mut slack_idx = n;
+    let mut art_idx = n + num_slack;
+    let mut art_cols: Vec<usize> = Vec::with_capacity(num_art);
+
+    for (r, c) in lp.constraints.iter().enumerate() {
+        let (cmp, flip) = normalised_sense(c);
+        let sign = if flip { -1.0 } else { 1.0 };
+        for &(i, coef) in &c.terms {
+            let cur = t.at(r, i);
+            t.set(r, i, cur + sign * coef);
+        }
+        t.set(r, total, sign * c.rhs);
+        match cmp {
+            Cmp::Le => {
+                t.set(r, slack_idx, 1.0);
+                t.basis[r] = slack_idx;
+                slack_idx += 1;
+            }
+            Cmp::Ge => {
+                t.set(r, slack_idx, -1.0);
+                slack_idx += 1;
+                t.set(r, art_idx, 1.0);
+                t.basis[r] = art_idx;
+                art_cols.push(art_idx);
+                art_idx += 1;
+            }
+            Cmp::Eq => {
+                t.set(r, art_idx, 1.0);
+                t.basis[r] = art_idx;
+                art_cols.push(art_idx);
+                art_idx += 1;
+            }
+        }
+    }
+
+    let max_iters = 50 * (m + n).max(100);
+
+    // ---- Phase 1: minimise sum of artificials --------------------------
+    if num_art > 0 {
+        // Objective row = -(sum of artificial rows) so reduced costs start
+        // consistent with the basis.
+        for &ac in &art_cols {
+            t.set(m, ac, 1.0);
+        }
+        for r in 0..m {
+            if art_cols.contains(&t.basis[r]) {
+                // subtract row r from objective row
+                for j in 0..cols {
+                    let v = t.at(m, j) - t.at(r, j);
+                    t.set(m, j, v);
+                }
+            }
+        }
+        match run_simplex(&mut t, max_iters) {
+            SimplexOutcome::Optimal => {}
+            SimplexOutcome::Unbounded => return LpResult::Infeasible, // phase 1 bounded by construction
+            SimplexOutcome::Stalled => return LpResult::Stalled,
+        }
+        let phase1_obj = -t.at(m, total);
+        if phase1_obj > 1e-6 {
+            return LpResult::Infeasible;
+        }
+        // Drive any artificial still in the basis out (degenerate).
+        for r in 0..m {
+            if art_cols.contains(&t.basis[r]) {
+                // Find a non-artificial column with nonzero entry to pivot in.
+                let mut pivoted = false;
+                for j in 0..(n + num_slack) {
+                    if t.at(r, j).abs() > PIVOT_EPS {
+                        t.pivot(r, j);
+                        pivoted = true;
+                        break;
+                    }
+                }
+                if !pivoted {
+                    // Row is all-zero: redundant constraint; leave it.
+                }
+            }
+        }
+        // Zero out artificial columns so they can never re-enter.
+        for &ac in &art_cols {
+            for r in 0..rows {
+                t.set(r, ac, 0.0);
+            }
+        }
+        // Reset objective row for phase 2.
+        for j in 0..cols {
+            t.set(m, j, 0.0);
+        }
+    }
+
+    // ---- Phase 2: original objective ------------------------------------
+    for (i, &c) in lp.objective.iter().enumerate() {
+        t.set(m, i, c);
+    }
+    // Make the objective row consistent with the current basis.
+    for r in 0..m {
+        let b = t.basis[r];
+        if b < total {
+            let coef = t.at(m, b);
+            if coef.abs() > EPS {
+                for j in 0..cols {
+                    let v = t.at(m, j) - coef * t.at(r, j);
+                    t.set(m, j, v);
+                }
+            }
+        }
+    }
+
+    match run_simplex(&mut t, max_iters) {
+        SimplexOutcome::Optimal => {}
+        SimplexOutcome::Unbounded => return LpResult::Unbounded,
+        SimplexOutcome::Stalled => return LpResult::Stalled,
+    }
+
+    // Extract solution.
+    let mut x = vec![0.0; n];
+    for r in 0..m {
+        let b = t.basis[r];
+        if b < n {
+            x[b] = t.at(r, total);
+        }
+    }
+    let objective = lp
+        .objective
+        .iter()
+        .zip(&x)
+        .map(|(c, v)| c * v)
+        .sum::<f64>();
+    LpResult::Optimal { x, objective }
+}
+
+fn normalised_sense(c: &Constraint) -> (Cmp, bool) {
+    if c.rhs < 0.0 {
+        let flipped = match c.cmp {
+            Cmp::Le => Cmp::Ge,
+            Cmp::Ge => Cmp::Le,
+            Cmp::Eq => Cmp::Eq,
+        };
+        (flipped, true)
+    } else {
+        (c.cmp, false)
+    }
+}
+
+enum SimplexOutcome {
+    Optimal,
+    Unbounded,
+    Stalled,
+}
+
+/// Run primal simplex iterations on the tableau until optimal.
+fn run_simplex(t: &mut Tableau, max_iters: usize) -> SimplexOutcome {
+    let m = t.rows - 1;
+    let total = t.cols - 1;
+    let bland_after = max_iters / 2;
+    for iter in 0..max_iters {
+        // Entering column: most negative reduced cost (Dantzig), or the
+        // first negative (Bland) when close to the iteration cap.
+        let use_bland = iter >= bland_after;
+        let mut pc = usize::MAX;
+        let mut best = -PIVOT_EPS;
+        for j in 0..total {
+            let rc = t.at(m, j);
+            if rc < best {
+                pc = j;
+                if use_bland {
+                    break;
+                }
+                best = rc;
+            }
+        }
+        if pc == usize::MAX {
+            return SimplexOutcome::Optimal;
+        }
+        // Leaving row: min ratio test; Bland tie-break on basis index.
+        let mut pr = usize::MAX;
+        let mut best_ratio = f64::INFINITY;
+        for r in 0..m {
+            let a = t.at(r, pc);
+            if a > PIVOT_EPS {
+                let ratio = t.at(r, total) / a;
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && pr != usize::MAX
+                        && t.basis[r] < t.basis[pr])
+                {
+                    best_ratio = ratio;
+                    pr = r;
+                }
+            }
+        }
+        if pr == usize::MAX {
+            return SimplexOutcome::Unbounded;
+        }
+        t.pivot(pr, pc);
+    }
+    SimplexOutcome::Stalled
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opt(lp: &Lp) -> (Vec<f64>, f64) {
+        match solve(lp) {
+            LpResult::Optimal { x, objective } => (x, objective),
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn textbook_maximisation() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18  => x=2,y=6, obj=36.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -3.0);
+        lp.set_objective(1, -5.0);
+        lp.add(vec![(0, 1.0)], Cmp::Le, 4.0);
+        lp.add(vec![(1, 2.0)], Cmp::Le, 12.0);
+        lp.add(vec![(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        let (x, obj) = opt(&lp);
+        assert!((x[0] - 2.0).abs() < 1e-6, "x={x:?}");
+        assert!((x[1] - 6.0).abs() < 1e-6);
+        assert!((obj + 36.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equality_and_ge_constraints() {
+        // min x + 2y s.t. x + y = 10, x >= 3, y >= 2  => x=8, y=2, obj=12.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.set_objective(1, 2.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Eq, 10.0);
+        lp.add(vec![(0, 1.0)], Cmp::Ge, 3.0);
+        lp.add(vec![(1, 1.0)], Cmp::Ge, 2.0);
+        let (x, obj) = opt(&lp);
+        assert!((x[0] - 8.0).abs() < 1e-6, "x={x:?}");
+        assert!((x[1] - 2.0).abs() < 1e-6);
+        assert!((obj - 12.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x <= 1, x >= 2.
+        let mut lp = Lp::new(1);
+        lp.add(vec![(0, 1.0)], Cmp::Le, 1.0);
+        lp.add(vec![(0, 1.0)], Cmp::Ge, 2.0);
+        assert_eq!(solve(&lp), LpResult::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x, x >= 0 only.
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, -1.0);
+        lp.add(vec![(0, 1.0)], Cmp::Ge, 0.0);
+        assert_eq!(solve(&lp), LpResult::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalised() {
+        // min x s.t. -x <= -5  (i.e. x >= 5).
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, 1.0);
+        lp.add(vec![(0, -1.0)], Cmp::Le, -5.0);
+        let (x, obj) = opt(&lp);
+        assert!((x[0] - 5.0).abs() < 1e-6);
+        assert!((obj - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // A classic degenerate case (multiple constraints active at origin).
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -1.0);
+        lp.set_objective(1, -1.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 1.0);
+        lp.add(vec![(0, 1.0)], Cmp::Le, 1.0);
+        lp.add(vec![(1, 1.0)], Cmp::Le, 1.0);
+        lp.add(vec![(0, 1.0), (1, -1.0)], Cmp::Le, 0.0);
+        let (x, _) = opt(&lp);
+        assert!(lp.is_feasible(&x, 1e-6));
+    }
+
+    #[test]
+    fn transportation_problem() {
+        // 2 supplies (10, 20), 2 demands (15, 15), costs [[1,2],[3,1]].
+        // Optimal: s1->d1:10, s2->d1:5, s2->d2:15 => 10+15+15=40.
+        let mut lp = Lp::new(4); // x11 x12 x21 x22
+        for (i, c) in [1.0, 2.0, 3.0, 1.0].iter().enumerate() {
+            lp.set_objective(i, *c);
+        }
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 10.0);
+        lp.add(vec![(2, 1.0), (3, 1.0)], Cmp::Le, 20.0);
+        lp.add(vec![(0, 1.0), (2, 1.0)], Cmp::Eq, 15.0);
+        lp.add(vec![(1, 1.0), (3, 1.0)], Cmp::Eq, 15.0);
+        let (x, obj) = opt(&lp);
+        assert!((obj - 40.0).abs() < 1e-6, "x={x:?} obj={obj}");
+    }
+
+    #[test]
+    fn feasibility_checker() {
+        let mut lp = Lp::new(2);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 1.0);
+        assert!(lp.is_feasible(&[0.5, 0.5], 1e-9));
+        assert!(!lp.is_feasible(&[0.8, 0.5], 1e-9));
+        assert!(!lp.is_feasible(&[-0.1, 0.0], 1e-9));
+    }
+
+    #[test]
+    fn random_lps_feasible_and_bounded() {
+        // Generated LPs with known feasible point: c ≥ 0 ⇒ bounded below.
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        for _ in 0..50 {
+            let n = 3 + rng.index(5);
+            let m = 2 + rng.index(6);
+            let mut lp = Lp::new(n);
+            for i in 0..n {
+                lp.set_objective(i, rng.range_f64(0.0, 3.0));
+            }
+            for _ in 0..m {
+                let terms: Vec<(usize, f64)> =
+                    (0..n).map(|i| (i, rng.range_f64(0.1, 2.0))).collect();
+                lp.add(terms, Cmp::Ge, rng.range_f64(0.5, 4.0));
+            }
+            match solve(&lp) {
+                LpResult::Optimal { x, .. } => {
+                    assert!(lp.is_feasible(&x, 1e-5), "x={x:?}");
+                }
+                other => panic!("expected optimal, got {other:?}"),
+            }
+        }
+    }
+}

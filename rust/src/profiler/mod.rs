@@ -1,0 +1,275 @@
+//! One-time profiling: produces the `h_{c,w}` throughput table the MILP
+//! consumes (paper §4.3: "a throughput h_{c,w} ... obtained through a
+//! one-time profiling").
+//!
+//! In the paper this is a measurement campaign on real GPUs; here it
+//! evaluates the analytical perf model over the enumerated configuration
+//! set. Profiles are cached to JSON so repeated planner runs skip the
+//! computation, mirroring the paper's one-time cost.
+
+use crate::perf_model::{ModelSpec, PerfEstimate, PerfModel, ReplicaConfig, StageConfig};
+use crate::sched::enumerate::{enumerate_configs, EnumOptions};
+use crate::util::json::Json;
+use crate::workload::WorkloadType;
+use std::path::Path;
+
+/// A profiled configuration: the paper's `(v_c, s_c, o_c, h_{c,w})` tuple.
+#[derive(Clone, Debug)]
+pub struct ProfiledConfig {
+    pub config: ReplicaConfig,
+    /// Hourly cost `o_c`.
+    pub cost: f64,
+    /// GPU counts per type `v_c`.
+    pub gpu_counts: [u32; 6],
+    /// Throughput on each of the nine workload types, requests/s
+    /// (0.0 = infeasible for that workload).
+    pub throughput: [f64; 9],
+    /// Per-workload latency estimate at the operating batch, seconds.
+    pub latency: [f64; 9],
+}
+
+impl ProfiledConfig {
+    pub fn h(&self, w: usize) -> f64 {
+        self.throughput[w]
+    }
+
+    pub fn label(&self) -> String {
+        self.config.label()
+    }
+}
+
+/// The profile for one model: all configurations with their throughputs.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub model: ModelSpec,
+    pub configs: Vec<ProfiledConfig>,
+}
+
+impl Profile {
+    /// Build the profile by evaluating the perf model over the enumerated
+    /// configuration set.
+    pub fn build(model: &ModelSpec, perf: &PerfModel, opts: &EnumOptions) -> Profile {
+        let configs = enumerate_configs(model, perf, opts)
+            .into_iter()
+            .map(|config| profile_one(&config, model, perf))
+            .collect();
+        Profile {
+            model: model.clone(),
+            configs,
+        }
+    }
+
+    /// Highest throughput achievable on workload `w` by any config
+    /// (used for binary-search lower bounds).
+    pub fn best_throughput(&self, w: usize) -> f64 {
+        self.configs
+            .iter()
+            .map(|c| c.throughput[w])
+            .fold(0.0, f64::max)
+    }
+
+    /// Best throughput-per-dollar on workload `w`.
+    pub fn best_throughput_per_dollar(&self, w: usize) -> f64 {
+        self.configs
+            .iter()
+            .map(|c| c.throughput[w] / c.cost)
+            .fold(0.0, f64::max)
+    }
+
+    /// Find a profiled config by its exact ReplicaConfig.
+    pub fn find(&self, cfg: &ReplicaConfig) -> Option<&ProfiledConfig> {
+        self.configs.iter().find(|p| &p.config == cfg)
+    }
+
+    // ---- JSON caching ------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model.name)),
+            (
+                "configs",
+                Json::Arr(
+                    self.configs
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                (
+                                    "stages",
+                                    Json::Arr(
+                                        c.config
+                                            .stages
+                                            .iter()
+                                            .map(|s| {
+                                                Json::obj(vec![
+                                                    ("gpu", Json::str(s.gpu.name())),
+                                                    ("tp", Json::num(s.tp as f64)),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                                ("cost", Json::num(c.cost)),
+                                ("throughput", Json::num_arr(&c.throughput)),
+                                ("latency", Json::num_arr(&c.latency)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json, model: &ModelSpec) -> Option<Profile> {
+        if j.get("model").as_str()? != model.name {
+            return None;
+        }
+        let mut configs = Vec::new();
+        for cj in j.get("configs").as_arr()? {
+            let stages = cj
+                .get("stages")
+                .as_arr()?
+                .iter()
+                .map(|sj| {
+                    Some(StageConfig {
+                        gpu: crate::catalog::GpuType::from_name(sj.get("gpu").as_str()?)?,
+                        tp: sj.get("tp").as_usize()?,
+                    })
+                })
+                .collect::<Option<Vec<_>>>()?;
+            let config = ReplicaConfig { stages };
+            let mut throughput = [0.0; 9];
+            let mut latency = [0.0; 9];
+            for (i, v) in cj.get("throughput").as_arr()?.iter().enumerate().take(9) {
+                throughput[i] = v.as_f64()?;
+            }
+            for (i, v) in cj.get("latency").as_arr()?.iter().enumerate().take(9) {
+                latency[i] = v.as_f64()?;
+            }
+            configs.push(ProfiledConfig {
+                cost: cj.get("cost").as_f64()?,
+                gpu_counts: config.gpu_counts(),
+                config,
+                throughput,
+                latency,
+            });
+        }
+        Some(Profile {
+            model: model.clone(),
+            configs,
+        })
+    }
+
+    /// Load from cache or build and save. The cache file name embeds the
+    /// model name.
+    pub fn load_or_build(
+        dir: &Path,
+        model: &ModelSpec,
+        perf: &PerfModel,
+        opts: &EnumOptions,
+    ) -> Profile {
+        let path = dir.join(format!(
+            "profile_{}.json",
+            model.name.to_ascii_lowercase().replace('/', "_")
+        ));
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(j) = Json::parse(&text) {
+                if let Some(p) = Profile::from_json(&j, model) {
+                    return p;
+                }
+            }
+        }
+        let p = Profile::build(model, perf, opts);
+        let _ = std::fs::create_dir_all(dir);
+        let _ = std::fs::write(&path, p.to_json().to_string_pretty());
+        p
+    }
+}
+
+fn profile_one(config: &ReplicaConfig, model: &ModelSpec, perf: &PerfModel) -> ProfiledConfig {
+    let mut throughput = [0.0f64; 9];
+    let mut latency = [0.0f64; 9];
+    for w in WorkloadType::all() {
+        if let Some(PerfEstimate {
+            throughput_rps,
+            latency_s,
+            ..
+        }) = perf.estimate(config, model, &w)
+        {
+            throughput[w.index] = throughput_rps;
+            latency[w.index] = latency_s;
+        }
+    }
+    ProfiledConfig {
+        cost: config.cost_per_hour(),
+        gpu_counts: config.gpu_counts(),
+        config: config.clone(),
+        throughput,
+        latency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile_70b() -> Profile {
+        Profile::build(
+            &ModelSpec::llama3_70b(),
+            &PerfModel::default(),
+            &EnumOptions::default(),
+        )
+    }
+
+    #[test]
+    fn profile_has_positive_throughputs() {
+        let p = profile_70b();
+        assert!(!p.configs.is_empty());
+        for c in &p.configs {
+            assert!(c.throughput.iter().any(|&t| t > 0.0), "{}", c.label());
+            assert!(c.cost > 0.0);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = profile_70b();
+        let j = p.to_json();
+        let p2 = Profile::from_json(&j, &ModelSpec::llama3_70b()).unwrap();
+        assert_eq!(p.configs.len(), p2.configs.len());
+        for (a, b) in p.configs.iter().zip(&p2.configs) {
+            assert_eq!(a.config, b.config);
+            for i in 0..9 {
+                assert!((a.throughput[i] - b.throughput[i]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn cache_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join("hetserve_profile_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let model = ModelSpec::llama3_8b();
+        let perf = PerfModel::default();
+        let opts = EnumOptions::default();
+        let p1 = Profile::load_or_build(&dir, &model, &perf, &opts);
+        let p2 = Profile::load_or_build(&dir, &model, &perf, &opts);
+        assert_eq!(p1.configs.len(), p2.configs.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn best_throughput_positive_for_all_workloads() {
+        let p = profile_70b();
+        for w in 0..9 {
+            assert!(p.best_throughput(w) > 0.0, "workload {w}");
+            assert!(p.best_throughput_per_dollar(w) > 0.0);
+        }
+    }
+
+    #[test]
+    fn model_mismatch_rejected() {
+        let p = profile_70b();
+        let j = p.to_json();
+        assert!(Profile::from_json(&j, &ModelSpec::llama3_8b()).is_none());
+    }
+}

@@ -1,0 +1,175 @@
+//! Host-side KV cache management for the real serving engine.
+//!
+//! Each in-flight request owns a *slot cache* — the `[L, 2, T, KH, HD]`
+//! block produced by prefill. Before each batched decode step the active
+//! slots are gathered into the executable's `[L, 2, B, T, KH, HD]` layout,
+//! and scattered back afterwards. The gather/scatter respects the batch
+//! axis sitting *inside* the layer/plane axes, so each (layer, plane) pair
+//! contributes one contiguous `[T, KH, HD]` stripe per slot.
+
+use super::ModelDims;
+
+/// A single request's KV cache plus generation state.
+#[derive(Clone, Debug)]
+pub struct SlotCache {
+    /// Flattened [L, 2, T, KH, HD].
+    pub data: Vec<f32>,
+    /// Next write position (= current valid length).
+    pub position: usize,
+}
+
+impl SlotCache {
+    pub fn new(data: Vec<f32>, position: usize) -> Self {
+        Self { data, position }
+    }
+}
+
+/// Gather/scatter between slot caches and the batched executable layout.
+pub struct BatchAssembler {
+    pub layers: usize,
+    /// f32 count of one (layer, plane) stripe for one slot: T × KH × HD.
+    pub stripe: usize,
+}
+
+impl BatchAssembler {
+    pub fn new(dims: &ModelDims) -> Self {
+        Self {
+            layers: dims.layers,
+            stripe: dims.max_seq * dims.kv_heads * dims.head_dim,
+        }
+    }
+
+    /// f32 count of a batched cache for `bucket` slots.
+    pub fn batched_len(&self, bucket: usize) -> usize {
+        self.layers * 2 * bucket * self.stripe
+    }
+
+    /// Gather `slots` (may be fewer than `bucket`; missing slots are
+    /// zero-filled) into a batched cache.
+    pub fn gather(&self, slots: &[&SlotCache], bucket: usize) -> Vec<f32> {
+        assert!(slots.len() <= bucket);
+        let mut out = vec![0f32; self.batched_len(bucket)];
+        for (b, slot) in slots.iter().enumerate() {
+            for lp in 0..self.layers * 2 {
+                let src = &slot.data[lp * self.stripe..(lp + 1) * self.stripe];
+                let dst_off = (lp * bucket + b) * self.stripe;
+                out[dst_off..dst_off + self.stripe].copy_from_slice(src);
+            }
+        }
+        out
+    }
+
+    /// Splice one slot's stripes into a resident batched cache at `idx`
+    /// (admission path — the steady-state decode loop never re-gathers).
+    pub fn splice_slot(&self, batched: &mut [f32], slot: &SlotCache, idx: usize, bucket: usize) {
+        assert_eq!(batched.len(), self.batched_len(bucket));
+        assert!(idx < bucket);
+        for lp in 0..self.layers * 2 {
+            let src = &slot.data[lp * self.stripe..(lp + 1) * self.stripe];
+            let dst_off = (lp * bucket + idx) * self.stripe;
+            batched[dst_off..dst_off + self.stripe].copy_from_slice(src);
+        }
+    }
+
+    /// Scatter the batched cache back into the slot caches.
+    pub fn scatter(&self, batched: &[f32], slots: &mut [&mut SlotCache], bucket: usize) {
+        assert_eq!(batched.len(), self.batched_len(bucket));
+        for (b, slot) in slots.iter_mut().enumerate() {
+            for lp in 0..self.layers * 2 {
+                let src_off = (lp * bucket + b) * self.stripe;
+                let dst = &mut slot.data[lp * self.stripe..(lp + 1) * self.stripe];
+                dst.copy_from_slice(&batched[src_off..src_off + self.stripe]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 16,
+            hidden: 8,
+            layers: 2,
+            heads: 2,
+            kv_heads: 1,
+            head_dim: 4,
+            max_seq: 3,
+            param_count: 0,
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let d = dims();
+        let asm = BatchAssembler::new(&d);
+        let slot_len = d.layers * 2 * asm.stripe;
+        let mut s1 = SlotCache::new((0..slot_len).map(|i| i as f32).collect(), 1);
+        let mut s2 = SlotCache::new((0..slot_len).map(|i| 1000.0 + i as f32).collect(), 2);
+        let batched = asm.gather(&[&s1, &s2], 4);
+        assert_eq!(batched.len(), asm.batched_len(4));
+        // Slot 0 stripe of (layer 0, plane 0) sits at offset 0.
+        assert_eq!(&batched[..asm.stripe], &s1.data[..asm.stripe]);
+        // Slot 1 stripe of (layer 0, plane 0) follows.
+        assert_eq!(
+            &batched[asm.stripe..2 * asm.stripe],
+            &s2.data[..asm.stripe]
+        );
+        // Unused slots are zero.
+        assert!(batched[2 * asm.stripe..3 * asm.stripe]
+            .iter()
+            .all(|&v| v == 0.0));
+
+        // Mutate and scatter back.
+        let mut modified = batched.clone();
+        for v in modified.iter_mut() {
+            *v += 0.5;
+        }
+        {
+            let mut refs: Vec<&mut SlotCache> = vec![&mut s1, &mut s2];
+            asm.scatter(&modified, &mut refs, 4);
+        }
+        assert_eq!(s1.data[0], 0.5);
+        assert_eq!(s2.data[0], 1000.5);
+    }
+
+    #[test]
+    fn splice_slot_equals_gather_position() {
+        let d = dims();
+        let asm = BatchAssembler::new(&d);
+        let slot_len = d.layers * 2 * asm.stripe;
+        let s1 = SlotCache::new((0..slot_len).map(|i| i as f32).collect(), 1);
+        let s2 = SlotCache::new((0..slot_len).map(|i| 500.0 + i as f32).collect(), 2);
+        // Reference: gather both.
+        let gathered = asm.gather(&[&s1, &s2], 4);
+        // Resident path: start empty, splice slots one at a time.
+        let mut resident = vec![0f32; asm.batched_len(4)];
+        asm.splice_slot(&mut resident, &s1, 0, 4);
+        asm.splice_slot(&mut resident, &s2, 1, 4);
+        assert_eq!(resident, gathered);
+        // Replacing a slot overwrites only its stripes.
+        let s3 = SlotCache::new(vec![9.0; slot_len], 0);
+        asm.splice_slot(&mut resident, &s3, 0, 4);
+        let check = asm.gather(&[&s3, &s2], 4);
+        assert_eq!(resident, check);
+    }
+
+    #[test]
+    fn batch_axis_inside_layers() {
+        // The (layer, plane) index must stride over bucket × stripe.
+        let d = dims();
+        let asm = BatchAssembler::new(&d);
+        let slot_len = d.layers * 2 * asm.stripe;
+        let s = SlotCache::new(vec![7.0; slot_len], 0);
+        let batched = asm.gather(&[&s], 2);
+        // (layer 0, plane 1) of slot 0 begins at (1*2+0)*stripe.
+        let off = 2 * asm.stripe;
+        assert!(batched[off..off + asm.stripe].iter().all(|&v| v == 7.0));
+        // The interleaved slot-1 stripe is zero.
+        assert!(batched[asm.stripe..2 * asm.stripe]
+            .iter()
+            .all(|&v| v == 0.0));
+    }
+}

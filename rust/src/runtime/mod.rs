@@ -1,0 +1,425 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + weights.bin + manifest.json) and executes prefill/decode
+//! steps on the PJRT CPU client. Python never runs on this path.
+
+pub mod kv;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Model dimensions from the manifest (mirrors python TinyConfig).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub param_count: usize,
+}
+
+/// One parameter tensor's location in weights.bin.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dims: ModelDims,
+    pub params: Vec<ParamEntry>,
+    /// (seq bucket, file name), ascending.
+    pub prefill: Vec<(usize, String)>,
+    /// (batch bucket, file name), ascending.
+    pub decode: Vec<(usize, String)>,
+    pub weights_f32_count: usize,
+}
+
+impl Manifest {
+    pub fn parse(j: &Json) -> Result<Manifest> {
+        let md = j.get("model");
+        let u = |k: &str| -> Result<usize> {
+            md.get(k)
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest: missing model.{k}"))
+        };
+        let dims = ModelDims {
+            vocab: u("vocab")?,
+            hidden: u("hidden")?,
+            layers: u("layers")?,
+            heads: u("heads")?,
+            kv_heads: u("kv_heads")?,
+            head_dim: u("head_dim")?,
+            max_seq: u("max_seq")?,
+            param_count: u("param_count")?,
+        };
+        let params = j
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p
+                        .get("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("param name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("param shape"))?
+                        .iter()
+                        .map(|v| v.as_usize().ok_or_else(|| anyhow!("shape dim")))
+                        .collect::<Result<_>>()?,
+                    offset: p
+                        .get("offset")
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("param offset"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let buckets = |key: &str, dim: &str| -> Result<Vec<(usize, String)>> {
+            let mut out = j
+                .get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest: {key}"))?
+                .iter()
+                .map(|b| {
+                    Ok((
+                        b.get(dim)
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("{key}.{dim}"))?,
+                        b.get("file")
+                            .as_str()
+                            .ok_or_else(|| anyhow!("{key}.file"))?
+                            .to_string(),
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            out.sort_by_key(|(k, _)| *k);
+            Ok(out)
+        };
+        Ok(Manifest {
+            dims,
+            params,
+            prefill: buckets("prefill", "seq")?,
+            decode: buckets("decode", "batch")?,
+            weights_f32_count: j
+                .get("weights_f32_count")
+                .as_usize()
+                .ok_or_else(|| anyhow!("weights_f32_count"))?,
+        })
+    }
+}
+
+/// The PJRT engine: compiled executables + resident weights.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    /// Weight literals in manifest order.
+    params: Vec<xla::Literal>,
+    prefill_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    artifacts_dir: PathBuf,
+}
+
+impl Engine {
+    /// Load manifest + weights and compile every bucket executable.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest_text = std::fs::read_to_string(artifacts_dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.json — run `make artifacts`",
+                    artifacts_dir.display()
+                )
+            })?;
+        let manifest = Manifest::parse(
+            &Json::parse(&manifest_text).map_err(|e| anyhow!("manifest.json: {e}"))?,
+        )?;
+
+        let client = xla::PjRtClient::cpu()?;
+
+        // ---- weights ------------------------------------------------------
+        let blob = std::fs::read(artifacts_dir.join("weights.bin"))
+            .context("reading weights.bin")?;
+        if blob.len() != manifest.weights_f32_count * 4 {
+            bail!(
+                "weights.bin is {} bytes, manifest says {}",
+                blob.len(),
+                manifest.weights_f32_count * 4
+            );
+        }
+        let all: Vec<f32> = blob
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let mut params = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let count: usize = p.shape.iter().product();
+            let slice = &all[p.offset..p.offset + count];
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            params.push(xla::Literal::vec1(slice).reshape(&dims)?);
+        }
+
+        // ---- executables -----------------------------------------------------
+        let mut prefill_exes = BTreeMap::new();
+        for (seq, file) in &manifest.prefill {
+            prefill_exes.insert(*seq, compile_hlo(&client, &artifacts_dir.join(file))?);
+        }
+        let mut decode_exes = BTreeMap::new();
+        for (batch, file) in &manifest.decode {
+            decode_exes.insert(*batch, compile_hlo(&client, &artifacts_dir.join(file))?);
+        }
+
+        Ok(Engine {
+            client,
+            manifest,
+            params,
+            prefill_exes,
+            decode_exes,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    pub fn dims(&self) -> &ModelDims {
+        &self.manifest.dims
+    }
+
+    /// Available prefill sequence buckets (ascending).
+    pub fn prefill_buckets(&self) -> Vec<usize> {
+        self.prefill_exes.keys().copied().collect()
+    }
+
+    /// Available decode batch buckets (ascending).
+    pub fn decode_buckets(&self) -> Vec<usize> {
+        self.decode_exes.keys().copied().collect()
+    }
+
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn prefill_bucket_for(&self, len: usize) -> Option<usize> {
+        self.prefill_exes.keys().find(|&&s| s >= len).copied()
+    }
+
+    /// Smallest decode bucket that fits `batch` slots.
+    pub fn decode_bucket_for(&self, batch: usize) -> Option<usize> {
+        self.decode_exes.keys().find(|&&b| b >= batch).copied()
+    }
+
+    /// Size (f32 count) of a single request's KV cache slot.
+    pub fn slot_f32(&self) -> usize {
+        let d = &self.manifest.dims;
+        d.layers * 2 * d.max_seq * d.kv_heads * d.head_dim
+    }
+
+    /// Prefill one request. `tokens` is padded to the bucket size; the
+    /// trace generator emits bucket-aligned prompts so padding is normally
+    /// absent.
+    ///
+    /// Returns (last-position logits, per-slot KV cache [L,2,T,KH,HD]).
+    pub fn prefill(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let bucket = self
+            .prefill_bucket_for(tokens.len())
+            .ok_or_else(|| anyhow!("prompt of {} tokens exceeds buckets", tokens.len()))?;
+        let exe = &self.prefill_exes[&bucket];
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, 0);
+        let d = &self.manifest.dims;
+        let tokens_lit =
+            xla::Literal::vec1(padded.as_slice()).reshape(&[1, bucket as i64])?;
+        let cache_dims = [
+            d.layers as i64,
+            2,
+            1,
+            d.max_seq as i64,
+            d.kv_heads as i64,
+            d.head_dim as i64,
+        ];
+        let zeros = vec![0f32; self.slot_f32()];
+        let zero_cache = xla::Literal::vec1(zeros.as_slice()).reshape(&cache_dims)?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&tokens_lit);
+        inputs.push(&zero_cache);
+        let result = exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let (logits, cache) = result.to_tuple2()?;
+        Ok((logits.to_vec::<f32>()?, cache.to_vec::<f32>()?))
+    }
+
+    /// One decode step over `bucket` slots.
+    ///
+    /// `cache` is the batched cache [L,2,B,T,KH,HD] flattened; `tokens` and
+    /// `positions` have length B = bucket. Returns (logits [B*vocab],
+    /// updated cache).
+    pub fn decode(
+        &self,
+        bucket: usize,
+        tokens: &[i32],
+        cache: &[f32],
+        positions: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self
+            .decode_exes
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no decode bucket {bucket}"))?;
+        let d = &self.manifest.dims;
+        if tokens.len() != bucket || positions.len() != bucket {
+            bail!("decode arity mismatch");
+        }
+        if cache.len() != self.slot_f32() * bucket {
+            bail!(
+                "cache len {} != {} for bucket {bucket}",
+                cache.len(),
+                self.slot_f32() * bucket
+            );
+        }
+        let tokens_lit = xla::Literal::vec1(tokens);
+        let cache_lit = xla::Literal::vec1(cache).reshape(&[
+            d.layers as i64,
+            2,
+            bucket as i64,
+            d.max_seq as i64,
+            d.kv_heads as i64,
+            d.head_dim as i64,
+        ])?;
+        let pos_lit = xla::Literal::vec1(positions);
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&tokens_lit);
+        inputs.push(&cache_lit);
+        inputs.push(&pos_lit);
+        let result = exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let (logits, new_cache) = result.to_tuple2()?;
+        Ok((logits.to_vec::<f32>()?, new_cache.to_vec::<f32>()?))
+    }
+
+    /// Argmax over one logits row.
+    pub fn argmax(logits_row: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &v) in logits_row.iter().enumerate() {
+            if v > logits_row[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// Locate the artifacts directory (tests/examples helper).
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<PathBuf> {
+        let p = default_artifacts_dir();
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let j = Json::parse(&std::fs::read_to_string(dir.join("manifest.json")).unwrap())
+            .unwrap();
+        let m = Manifest::parse(&j).unwrap();
+        assert_eq!(m.dims.layers, 4);
+        assert_eq!(m.dims.vocab, 4096);
+        assert!(!m.prefill.is_empty());
+        assert!(!m.decode.is_empty());
+        assert_eq!(m.params.len(), 1 + m.dims.layers * 9 + 2);
+    }
+
+    #[test]
+    fn engine_prefill_decode_roundtrip() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = Engine::load(&dir).unwrap();
+        let dims = engine.dims().clone();
+        // Prefill a 16-token prompt.
+        let tokens: Vec<i32> = (1..17).collect();
+        let (logits, slot_cache) = engine.prefill(&tokens).unwrap();
+        assert_eq!(logits.len(), dims.vocab);
+        assert_eq!(slot_cache.len(), engine.slot_f32());
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // Cache should be non-zero in the first 16 positions of layer 0 keys
+        // and zero beyond the prompt.
+        let t = dims.max_seq;
+        let per_pos = dims.kv_heads * dims.head_dim;
+        let l0k: &[f32] = &slot_cache[0..t * per_pos];
+        let head: f64 = l0k[..16 * per_pos].iter().map(|v| v.abs() as f64).sum();
+        let tail: f64 = l0k[16 * per_pos..].iter().map(|v| v.abs() as f64).sum();
+        assert!(head > 0.0);
+        assert!(tail == 0.0, "cache written beyond prompt: {tail}");
+
+        // One decode step at batch bucket 1.
+        let next = Engine::argmax(&logits);
+        let (logits2, cache2) = engine.decode(1, &[next], &slot_cache, &[16]).unwrap();
+        assert_eq!(logits2.len(), dims.vocab);
+        assert_eq!(cache2.len(), slot_cache.len());
+        assert!(logits2.iter().all(|v| v.is_finite()));
+        // Decode wrote position 16 of layer 0 keys.
+        let pos16: f64 = cache2[16 * per_pos..17 * per_pos]
+            .iter()
+            .map(|v| v.abs() as f64)
+            .sum();
+        assert!(pos16 > 0.0);
+    }
+
+    #[test]
+    fn decode_deterministic() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = Engine::load(&dir).unwrap();
+        let tokens: Vec<i32> = (10..26).collect();
+        let (l1, c1) = engine.prefill(&tokens).unwrap();
+        let (l2, c2) = engine.prefill(&tokens).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = Engine::load(&dir).unwrap();
+        assert_eq!(engine.prefill_bucket_for(10), Some(16));
+        assert_eq!(engine.prefill_bucket_for(16), Some(16));
+        assert_eq!(engine.prefill_bucket_for(17), Some(32));
+        assert_eq!(engine.prefill_bucket_for(1000), None);
+        assert_eq!(engine.decode_bucket_for(3), Some(4));
+        assert_eq!(engine.decode_bucket_for(8), Some(8));
+    }
+}

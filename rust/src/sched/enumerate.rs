@@ -1,0 +1,281 @@
+//! Configuration enumeration (§4.3 "we enumerate all feasible integer
+//! combinations {d_n(c)} in a precomputation step", constrained by the
+//! Appendix D heuristics):
+//!
+//! * **memory check** — Σ d_n(c)·m_n must cover the model's weight floor
+//!   (and our tighter per-stage placement check via the perf model);
+//! * **connectivity** — TP only within a single machine (max GPUs/node);
+//! * **TP degrees** — powers of two up to the node size;
+//! * **PP stages** — homogeneous-type pipelines of 1..=4 stages, plus
+//!   two-type mixed pipelines (the HexGen-style asymmetric case);
+//! * **domination pruning** (Appendix G) — per model, configs whose
+//!   throughput on *every* workload type is beaten by a strictly cheaper
+//!   config are dropped.
+
+use crate::catalog::{GpuSpec, GpuType};
+use crate::perf_model::{ModelSpec, PerfModel, ReplicaConfig, StageConfig};
+use crate::workload::WorkloadType;
+
+/// Enumeration options.
+#[derive(Clone, Debug)]
+pub struct EnumOptions {
+    /// Max pipeline stages to consider.
+    pub max_pp: usize,
+    /// Include heterogeneous (two-GPU-type) pipelines.
+    pub mixed_pipelines: bool,
+    /// Cap on GPUs per replica.
+    pub max_gpus_per_replica: usize,
+    /// Apply the Appendix G domination pruning.
+    pub prune_dominated: bool,
+}
+
+impl Default for EnumOptions {
+    fn default() -> Self {
+        Self {
+            max_pp: 4,
+            mixed_pipelines: true,
+            max_gpus_per_replica: 8,
+            prune_dominated: true,
+        }
+    }
+}
+
+/// Enumerate feasible replica configurations for `model`.
+///
+/// Feasibility = the perf model can place the weights and at least one
+/// request (the Appendix D memory check, tightened), TP fits in one node
+/// (connectivity constraint), and the GPU budget per replica is respected.
+pub fn enumerate_configs(
+    model: &ModelSpec,
+    perf: &PerfModel,
+    opts: &EnumOptions,
+) -> Vec<ReplicaConfig> {
+    let mut out: Vec<ReplicaConfig> = Vec::new();
+
+    // Homogeneous configurations: tp ∈ {1,2,4,8} × pp ∈ {1..max_pp}.
+    for &gpu in &GpuType::ALL {
+        let node = GpuSpec::of(gpu).max_gpus_per_node;
+        for tp in [1usize, 2, 4, 8] {
+            if tp > node {
+                continue; // connectivity: TP within a single machine
+            }
+            for pp in 1..=opts.max_pp {
+                let total = tp * pp;
+                if total > opts.max_gpus_per_replica {
+                    continue;
+                }
+                let cfg = ReplicaConfig::uniform(gpu, tp, pp);
+                if perf.fits(&cfg, model) {
+                    out.push(cfg);
+                }
+            }
+        }
+    }
+
+    // Mixed two-type pipelines (asymmetric partitioning à la HexGen): two
+    // stages, each a TP group of a single type. Only pairs where both
+    // stages satisfy the connectivity constraint.
+    if opts.mixed_pipelines {
+        for &g1 in &GpuType::ALL {
+            for &g2 in &GpuType::ALL {
+                if g1 >= g2 {
+                    continue; // unordered pair, distinct types
+                }
+                for tp1 in [1usize, 2, 4] {
+                    for tp2 in [1usize, 2, 4] {
+                        if tp1 > GpuSpec::of(g1).max_gpus_per_node
+                            || tp2 > GpuSpec::of(g2).max_gpus_per_node
+                            || tp1 + tp2 > opts.max_gpus_per_replica
+                        {
+                            continue;
+                        }
+                        let cfg = ReplicaConfig {
+                            stages: vec![
+                                StageConfig { gpu: g1, tp: tp1 },
+                                StageConfig { gpu: g2, tp: tp2 },
+                            ],
+                        };
+                        if perf.fits(&cfg, model) {
+                            out.push(cfg);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    if opts.prune_dominated {
+        out = prune_dominated(out, model, perf);
+    }
+    out
+}
+
+/// Appendix G pruning: drop configs strictly dominated on every workload
+/// type by a config of equal or lower price.
+fn prune_dominated(
+    configs: Vec<ReplicaConfig>,
+    model: &ModelSpec,
+    perf: &PerfModel,
+) -> Vec<ReplicaConfig> {
+    let workloads = WorkloadType::all();
+    // Precompute throughput vectors.
+    let profiles: Vec<(f64, Vec<f64>)> = configs
+        .iter()
+        .map(|c| {
+            let thr: Vec<f64> = workloads
+                .iter()
+                .map(|w| {
+                    perf.estimate(c, model, w)
+                        .map(|e| e.throughput_rps)
+                        .unwrap_or(0.0)
+                })
+                .collect();
+            (c.cost_per_hour(), thr)
+        })
+        .collect();
+    let mut keep = vec![true; configs.len()];
+    for i in 0..configs.len() {
+        if !keep[i] {
+            continue;
+        }
+        for j in 0..configs.len() {
+            if i == j || !keep[i] {
+                break;
+            }
+            if !keep[j] {
+                continue;
+            }
+            // j dominates i if cost_j <= cost_i and thr_j >= thr_i on all
+            // workloads, strictly better somewhere (or strictly cheaper).
+            let (ci, ti) = &profiles[i];
+            let (cj, tj) = &profiles[j];
+            let cheaper_eq = cj <= ci;
+            let all_geq = tj.iter().zip(ti).all(|(a, b)| a >= b);
+            let strictly = cj < ci || tj.iter().zip(ti).any(|(a, b)| a > b);
+            if cheaper_eq && all_geq && strictly {
+                keep[i] = false;
+            }
+        }
+    }
+    configs
+        .into_iter()
+        .zip(keep)
+        .filter_map(|(c, k)| if k { Some(c) } else { None })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (PerfModel, EnumOptions) {
+        (PerfModel::default(), EnumOptions::default())
+    }
+
+    #[test]
+    fn enumerates_something_for_both_models() {
+        let (p, o) = setup();
+        let c70 = enumerate_configs(&ModelSpec::llama3_70b(), &p, &o);
+        let c8 = enumerate_configs(&ModelSpec::llama3_8b(), &p, &o);
+        assert!(!c70.is_empty());
+        assert!(!c8.is_empty());
+        // 8B fits single GPUs; 70B does not.
+        assert!(c8.iter().any(|c| c.total_gpus() == 1));
+        assert!(c70.iter().all(|c| c.total_gpus() >= 2));
+    }
+
+    #[test]
+    fn all_configs_fit_memory() {
+        let (p, o) = setup();
+        let m = ModelSpec::llama3_70b();
+        for c in enumerate_configs(&m, &p, &o) {
+            assert!(p.fits(&c, &m), "config {} does not fit", c.label());
+        }
+    }
+
+    #[test]
+    fn connectivity_constraint_respected() {
+        let (p, o) = setup();
+        for m in [ModelSpec::llama3_8b(), ModelSpec::llama3_70b()] {
+            for c in enumerate_configs(&m, &p, &o) {
+                for s in &c.stages {
+                    assert!(
+                        s.tp <= GpuSpec::of(s.gpu).max_gpus_per_node,
+                        "TP {} exceeds node size for {}",
+                        s.tp,
+                        s.gpu.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn replica_gpu_cap_respected() {
+        let (p, _) = setup();
+        let o = EnumOptions {
+            max_gpus_per_replica: 4,
+            ..Default::default()
+        };
+        for c in enumerate_configs(&ModelSpec::llama3_70b(), &p, &o) {
+            assert!(c.total_gpus() <= 4, "{}", c.label());
+        }
+    }
+
+    #[test]
+    fn pruning_reduces_count_and_preserves_best() {
+        let (p, _) = setup();
+        let m = ModelSpec::llama3_70b();
+        let unpruned = enumerate_configs(
+            &m,
+            &p,
+            &EnumOptions {
+                prune_dominated: false,
+                ..Default::default()
+            },
+        );
+        let pruned = enumerate_configs(&m, &p, &EnumOptions::default());
+        assert!(pruned.len() < unpruned.len());
+        // Best throughput/$ per workload must survive pruning.
+        for w in WorkloadType::all() {
+            let best = |set: &[ReplicaConfig]| {
+                set.iter()
+                    .filter_map(|c| p.throughput_per_dollar(c, &m, &w))
+                    .fold(0.0, f64::max)
+            };
+            let b_un = best(&unpruned);
+            let b_pr = best(&pruned);
+            assert!(
+                b_pr >= b_un * 0.999,
+                "w{}: pruned best {b_pr} < unpruned {b_un}",
+                w.index
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_pipelines_toggle() {
+        let (p, _) = setup();
+        let m = ModelSpec::llama3_70b();
+        let no_mixed = enumerate_configs(
+            &m,
+            &p,
+            &EnumOptions {
+                mixed_pipelines: false,
+                prune_dominated: false,
+                ..Default::default()
+            },
+        );
+        assert!(no_mixed.iter().all(|c| c.is_homogeneous()));
+        let mixed = enumerate_configs(
+            &m,
+            &p,
+            &EnumOptions {
+                mixed_pipelines: true,
+                prune_dominated: false,
+                ..Default::default()
+            },
+        );
+        assert!(mixed.iter().any(|c| !c.is_homogeneous()));
+    }
+}

@@ -1,0 +1,441 @@
+//! The paper's scheduling algorithm: given models, workload demands, a price
+//! budget, and real-time GPU availability, produce the cost-optimal serving
+//! plan — GPU composition, deployment configurations, and workload
+//! assignment (§4).
+//!
+//! * [`enumerate`] — feasible configuration enumeration (App D heuristics);
+//! * [`formulation`] — the §4.3 MILP (big-M linearised makespan) solved by
+//!   our branch & bound;
+//! * [`binary_search`] — Algorithm 1: binary-search-on-T with exact or
+//!   knapsack-approximate feasibility checks (App F);
+//! * multi-model serving (App E) is inherent: a [`SchedProblem`] carries a
+//!   list of models, each with its own demands and candidate set.
+
+pub mod binary_search;
+pub mod enumerate;
+pub mod formulation;
+
+use crate::cloud::Availability;
+use crate::perf_model::ReplicaConfig;
+use crate::profiler::Profile;
+use crate::workload::TraceMix;
+
+/// A candidate configuration in scheduler terms: abstract over GPU catalogs
+/// so the paper's §4.2 toy example and the real profiles use the same code.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// Which model this candidate serves (index into `SchedProblem::demands`).
+    pub model: usize,
+    /// Hourly cost `o_c`.
+    pub cost: f64,
+    /// GPUs used per abstract GPU type `v_c`.
+    pub gpu_counts: Vec<u32>,
+    /// Throughput per workload type of this model `h_{c,w}` (req/s);
+    /// 0.0 = this candidate cannot serve that workload.
+    pub h: Vec<f64>,
+    /// Human-readable label.
+    pub label: String,
+    /// Optional link back to the concrete replica configuration.
+    pub replica: Option<ReplicaConfig>,
+}
+
+/// A scheduling problem instance (single- or multi-model).
+#[derive(Clone, Debug)]
+pub struct SchedProblem {
+    pub num_gpu_types: usize,
+    /// Available GPUs per type `a_n`.
+    pub avail: Vec<u32>,
+    /// Price budget `B` ($/h).
+    pub budget: f64,
+    /// Request demand per model per workload type `λ_{m,w}` (request counts).
+    pub demands: Vec<Vec<f64>>,
+    pub candidates: Vec<Candidate>,
+}
+
+impl SchedProblem {
+    /// Build a single-model problem from a profile + trace mixture +
+    /// availability snapshot.
+    pub fn from_profile(
+        profile: &Profile,
+        mix: &TraceMix,
+        total_requests: f64,
+        avail: &Availability,
+        budget: f64,
+    ) -> SchedProblem {
+        Self::multi_model(
+            &[(profile, mix, total_requests)],
+            avail,
+            budget,
+        )
+    }
+
+    /// Build a multi-model problem (Appendix E): each entry is
+    /// (profile, trace mixture, total requests routed to that model).
+    pub fn multi_model(
+        models: &[(&Profile, &TraceMix, f64)],
+        avail: &Availability,
+        budget: f64,
+    ) -> SchedProblem {
+        let mut demands = Vec::new();
+        let mut candidates = Vec::new();
+        for (m, (profile, mix, total)) in models.iter().enumerate() {
+            demands.push(mix.demands(*total).to_vec());
+            for pc in &profile.configs {
+                candidates.push(Candidate {
+                    model: m,
+                    cost: pc.cost,
+                    gpu_counts: pc.gpu_counts.to_vec(),
+                    h: pc.throughput.to_vec(),
+                    label: pc.label(),
+                    replica: Some(pc.config.clone()),
+                });
+            }
+        }
+        SchedProblem {
+            num_gpu_types: 6,
+            avail: avail.counts.to_vec(),
+            budget,
+            demands,
+            candidates,
+        }
+    }
+
+    /// Total request demand across models and workloads.
+    pub fn total_demand(&self) -> f64 {
+        self.demands.iter().flatten().sum()
+    }
+
+    /// A trivially-valid upper bound on the makespan: serve each workload's
+    /// full demand on the single cheapest feasible candidate, sequentially.
+    pub fn makespan_upper_bound(&self) -> Option<f64> {
+        let mut total = 0.0;
+        for (m, dm) in self.demands.iter().enumerate() {
+            for (w, &lambda) in dm.iter().enumerate() {
+                if lambda <= 0.0 {
+                    continue;
+                }
+                // Slowest positive-throughput affordable candidate.
+                let worst = self
+                    .candidates
+                    .iter()
+                    .filter(|c| c.model == m && c.h[w] > 0.0 && c.cost <= self.budget)
+                    .map(|c| lambda / c.h[w])
+                    .fold(f64::NAN, f64::max);
+                if worst.is_nan() {
+                    return None; // no candidate can serve this workload
+                }
+                total += worst;
+            }
+        }
+        Some(total)
+    }
+
+    /// Lower bound on the makespan (App G: "the minimum possible makespan
+    /// occurs when all workloads are assigned to the most efficient
+    /// configuration without considering resource constraints") — here
+    /// tightened with the budget: spending the whole budget on the best
+    /// throughput-per-dollar candidates for each workload.
+    pub fn makespan_lower_bound(&self) -> f64 {
+        let mut lb: f64 = 0.0;
+        // Each workload individually: even with the entire budget devoted to
+        // it, time ≥ λ / (B · best h/o).
+        for (m, dm) in self.demands.iter().enumerate() {
+            for (w, &lambda) in dm.iter().enumerate() {
+                if lambda <= 0.0 {
+                    continue;
+                }
+                let best_density = self
+                    .candidates
+                    .iter()
+                    .filter(|c| c.model == m && c.h[w] > 0.0)
+                    .map(|c| c.h[w] / c.cost)
+                    .fold(0.0, f64::max);
+                if best_density > 0.0 {
+                    lb = lb.max(lambda / (self.budget * best_density));
+                }
+            }
+        }
+        // All workloads together also bound it.
+        let mut total_time_at_best = 0.0;
+        for (m, dm) in self.demands.iter().enumerate() {
+            for (w, &lambda) in dm.iter().enumerate() {
+                if lambda <= 0.0 {
+                    continue;
+                }
+                let best_density = self
+                    .candidates
+                    .iter()
+                    .filter(|c| c.model == m && c.h[w] > 0.0)
+                    .map(|c| c.h[w] / c.cost)
+                    .fold(0.0, f64::max);
+                if best_density > 0.0 {
+                    total_time_at_best += lambda / (self.budget * best_density);
+                }
+            }
+        }
+        lb.max(total_time_at_best / 1.0_f64.max(self.demands.len() as f64 * 9.0))
+    }
+}
+
+/// One activated configuration in the final plan.
+#[derive(Clone, Debug)]
+pub struct PlanEntry {
+    pub candidate: usize,
+    /// Number of replica copies `y_c`.
+    pub replicas: u32,
+    /// Fraction of each workload type of this candidate's model assigned
+    /// here (`x_{c,w}`).
+    pub fractions: Vec<f64>,
+}
+
+/// A complete serving plan (the paper's §4.1 deliverable).
+#[derive(Clone, Debug)]
+pub struct ServingPlan {
+    pub entries: Vec<PlanEntry>,
+    /// Objective value (makespan, seconds).
+    pub makespan: f64,
+}
+
+impl ServingPlan {
+    /// Total rental cost of the plan, $/h.
+    pub fn cost(&self, p: &SchedProblem) -> f64 {
+        self.entries
+            .iter()
+            .map(|e| e.replicas as f64 * p.candidates[e.candidate].cost)
+            .sum()
+    }
+
+    /// GPUs rented per type.
+    pub fn gpus_used(&self, p: &SchedProblem) -> Vec<u32> {
+        let mut used = vec![0u32; p.num_gpu_types];
+        for e in &self.entries {
+            for (n, &d) in p.candidates[e.candidate].gpu_counts.iter().enumerate() {
+                used[n] += d * e.replicas;
+            }
+        }
+        used
+    }
+
+    /// Recompute the actual makespan of the plan from first principles
+    /// (max over entries of Σ_w x·λ_w/(y·h)).
+    pub fn evaluate_makespan(&self, p: &SchedProblem) -> f64 {
+        let mut t: f64 = 0.0;
+        for e in &self.entries {
+            let c = &p.candidates[e.candidate];
+            let mut tc = 0.0;
+            for (w, &frac) in e.fractions.iter().enumerate() {
+                if frac > 1e-12 {
+                    let lambda = p.demands[c.model][w];
+                    tc += frac * lambda / (e.replicas as f64 * c.h[w]);
+                }
+            }
+            t = t.max(tc);
+        }
+        t
+    }
+
+    /// Validate the plan: full coverage of every workload, budget and
+    /// availability respected, no assignment to zero-throughput pairs.
+    pub fn validate(&self, p: &SchedProblem, tol: f64) -> Result<(), String> {
+        // Coverage per (model, workload).
+        for (m, dm) in p.demands.iter().enumerate() {
+            for (w, &lambda) in dm.iter().enumerate() {
+                if lambda <= 0.0 {
+                    continue;
+                }
+                let cover: f64 = self
+                    .entries
+                    .iter()
+                    .filter(|e| p.candidates[e.candidate].model == m)
+                    .map(|e| e.fractions[w])
+                    .sum();
+                if (cover - 1.0).abs() > tol {
+                    return Err(format!("model {m} workload {w}: coverage {cover}"));
+                }
+            }
+        }
+        // Budget.
+        let cost = self.cost(p);
+        if cost > p.budget + tol {
+            return Err(format!("cost {cost} exceeds budget {}", p.budget));
+        }
+        // Availability.
+        let used = self.gpus_used(p);
+        for (n, (&u, &a)) in used.iter().zip(&p.avail).enumerate() {
+            if u > a {
+                return Err(format!("gpu type {n}: used {u} > avail {a}"));
+            }
+        }
+        // No assignment onto h=0.
+        for e in &self.entries {
+            let c = &p.candidates[e.candidate];
+            if e.replicas == 0 {
+                if e.fractions.iter().any(|&f| f > tol) {
+                    return Err("assignment to inactive config".to_string());
+                }
+                continue;
+            }
+            for (w, &f) in e.fractions.iter().enumerate() {
+                if f > tol && c.h[w] <= 0.0 {
+                    return Err(format!("assignment to infeasible pair (c,{w})"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Percentage of GPUs (by count) from each abstract type, for the
+    /// paper's "51% data-center GPUs" style analyses.
+    pub fn composition_fractions(&self, p: &SchedProblem) -> Vec<f64> {
+        let used = self.gpus_used(p);
+        let total: u32 = used.iter().sum();
+        if total == 0 {
+            return vec![0.0; p.num_gpu_types];
+        }
+        used.iter().map(|&u| u as f64 / total as f64).collect()
+    }
+}
+
+/// Helper shared by examples/benches: the proportional ("assigned to each
+/// GPU in proportion to its processing rate") makespan used in the paper's
+/// §4.2 Cases 1 and 2.
+pub fn proportional_makespan(p: &SchedProblem, replicas: &[(usize, u32)]) -> f64 {
+    // System-wide throughput per workload = sum of replica rates; the time
+    // is the sum over workloads of demand / aggregate rate (the paper's
+    // λ1/C1 + λ2/C2 formula).
+    let model = 0;
+    let nw = p.demands[model].len();
+    let mut total_time = 0.0;
+    for w in 0..nw {
+        let lambda = p.demands[model][w];
+        if lambda <= 0.0 {
+            continue;
+        }
+        let rate: f64 = replicas
+            .iter()
+            .map(|&(c, y)| y as f64 * p.candidates[c].h[w])
+            .sum();
+        total_time += lambda / rate;
+    }
+    total_time
+}
+
+#[cfg(test)]
+pub(crate) mod toy {
+    use super::*;
+
+    /// The paper's §4.2 / Appendix C toy instance: three GPU types, two
+    /// workloads (λ = 80, 20), four candidate configurations.
+    pub fn simple_example() -> SchedProblem {
+        let mk = |cost: f64, counts: Vec<u32>, h: Vec<f64>, label: &str| Candidate {
+            model: 0,
+            cost,
+            gpu_counts: counts,
+            h,
+            label: label.to_string(),
+            replica: None,
+        };
+        SchedProblem {
+            num_gpu_types: 3,
+            avail: vec![2, 2, 2],
+            budget: 8.0,
+            demands: vec![vec![80.0, 20.0]],
+            candidates: vec![
+                mk(4.0, vec![1, 0, 0], vec![1.0, 1.2], "t1"),
+                mk(2.0, vec![0, 1, 0], vec![0.9, 0.9], "t2"),
+                mk(2.0, vec![0, 0, 1], vec![0.3, 0.5], "t3"),
+                mk(4.0, vec![0, 2, 0], vec![2.4, 1.5], "t2-tp2"),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::toy::simple_example;
+    use super::*;
+
+    #[test]
+    fn proportional_makespans_match_paper_appendix_c() {
+        let p = simple_example();
+        // Case 1, composition 1: 1×t1 + 1×t2 + 1×t3 → 44.05 s.
+        let t1 = proportional_makespan(&p, &[(0, 1), (1, 1), (2, 1)]);
+        assert!((t1 - 44.05).abs() < 0.05, "t1={t1}");
+        // Case 1, composition 2: 1×t1 + 2×t2 → 35.24 s.
+        let t2 = proportional_makespan(&p, &[(0, 1), (1, 2)]);
+        assert!((t2 - 35.24).abs() < 0.05, "t2={t2}");
+        // Case 2, configuration 2: t1 + TP(2×t2) → 30.94 s.
+        let t3 = proportional_makespan(&p, &[(0, 1), (3, 1)]);
+        assert!((t3 - 30.94).abs() < 0.05, "t3={t3}");
+    }
+
+    #[test]
+    fn plan_validation_catches_violations() {
+        let p = simple_example();
+        // Valid plan: t1 + tp2, paper's Case-3 fractions.
+        let plan = ServingPlan {
+            entries: vec![
+                PlanEntry {
+                    candidate: 0,
+                    replicas: 1,
+                    fractions: vec![0.15, 1.0],
+                },
+                PlanEntry {
+                    candidate: 3,
+                    replicas: 1,
+                    fractions: vec![0.85, 0.0],
+                },
+            ],
+            makespan: 28.67,
+        };
+        assert!(plan.validate(&p, 1e-9).is_ok());
+        assert!((plan.cost(&p) - 8.0).abs() < 1e-12);
+        assert_eq!(plan.gpus_used(&p), vec![1, 2, 0]);
+        // Paper's Case 3 number.
+        let t = plan.evaluate_makespan(&p);
+        assert!((t - 28.67).abs() < 0.05, "t={t}");
+
+        // Broken coverage.
+        let mut bad = plan.clone();
+        bad.entries[0].fractions[0] = 0.10;
+        assert!(bad.validate(&p, 1e-9).is_err());
+
+        // Over budget.
+        let mut expensive = plan.clone();
+        expensive.entries[0].replicas = 2;
+        assert!(expensive.validate(&p, 1e-6).is_err());
+    }
+
+    #[test]
+    fn bounds_bracket_reasonable_makespans() {
+        let p = simple_example();
+        let ub = p.makespan_upper_bound().unwrap();
+        let lb = p.makespan_lower_bound();
+        assert!(lb > 0.0);
+        assert!(ub > lb, "ub={ub} lb={lb}");
+        // The paper's best plan (28.43–28.67 s) must lie within the bounds.
+        assert!(lb <= 28.7 && ub >= 28.4, "lb={lb} ub={ub}");
+    }
+
+    #[test]
+    fn from_profile_maps_candidates() {
+        use crate::perf_model::{ModelSpec, PerfModel};
+        use crate::sched::enumerate::EnumOptions;
+        let profile = crate::profiler::Profile::build(
+            &ModelSpec::llama3_8b(),
+            &PerfModel::default(),
+            &EnumOptions::default(),
+        );
+        let p = SchedProblem::from_profile(
+            &profile,
+            &TraceMix::trace1(),
+            1000.0,
+            &crate::cloud::availability(1),
+            30.0,
+        );
+        assert_eq!(p.candidates.len(), profile.configs.len());
+        assert_eq!(p.demands.len(), 1);
+        assert!((p.total_demand() - 1000.0).abs() < 1e-9);
+        assert_eq!(p.num_gpu_types, 6);
+    }
+}

@@ -1,0 +1,470 @@
+//! Discrete-event cluster simulator.
+//!
+//! Executes a [`ServingPlan`] against a synthesized request trace: every
+//! activated replica runs a continuous-batching engine whose step times come
+//! from the analytical perf model; a workload-aware router dispatches
+//! requests according to the plan's fractional assignment, tie-breaking by
+//! shortest queue. This is what regenerates the paper's end-to-end figures
+//! (throughput, percentile latencies, makespan) without real GPUs.
+
+use crate::metrics::{BusyTracker, LatencyRecorder};
+use crate::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
+use crate::sched::{SchedProblem, ServingPlan};
+use crate::util::rng::Xoshiro256;
+use crate::workload::{Request, Trace};
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+/// Simulation options.
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    pub seed: u64,
+    /// Cap on in-flight requests per replica (defaults to the perf model's
+    /// operating batch cap).
+    pub max_batch: usize,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self {
+            seed: 0x51A1,
+            max_batch: 32,
+        }
+    }
+}
+
+/// Result of simulating one plan on one trace.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub recorder: LatencyRecorder,
+    pub makespan: f64,
+    pub throughput_rps: f64,
+    /// Mean replica utilization over the makespan.
+    pub mean_utilization: f64,
+    pub replicas: usize,
+}
+
+impl SimResult {
+    pub fn p_latency(&self, p: f64) -> f64 {
+        self.recorder.latency_percentile(p)
+    }
+}
+
+/// In-flight request state inside a replica engine.
+struct InFlight {
+    arrival_s: f64,
+    ctx_tokens: f64,
+    remaining_out: u32,
+    id: u64,
+}
+
+/// One simulated replica: queue + continuous batching engine.
+struct ReplicaSim {
+    config: ReplicaConfig,
+    model_idx: usize,
+    queue: VecDeque<Request>,
+    batch: Vec<InFlight>,
+    /// KV token capacity from the perf model.
+    token_capacity: f64,
+    busy: BusyTracker,
+    /// Next scheduled step-completion time (None = idle).
+    next_event: Option<f64>,
+}
+
+impl ReplicaSim {
+    fn tokens_in_use(&self) -> f64 {
+        self.batch.iter().map(|r| r.ctx_tokens).sum()
+    }
+
+}
+
+/// Event queue entry ordered by time (min-heap via Reverse ordering).
+#[derive(PartialEq)]
+struct Event {
+    time: f64,
+    replica: usize,
+}
+
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse: smallest time = greatest priority.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// Simulate `plan` against per-model traces.
+///
+/// `traces[m]` is the request trace for model `m` (matching
+/// `problem.demands[m]`). Requests are dispatched to plan entries weighted
+/// by the plan's `x_{c,w}` fractions, then to the least-loaded replica of
+/// the chosen entry.
+pub fn simulate_plan(
+    problem: &SchedProblem,
+    plan: &ServingPlan,
+    models: &[ModelSpec],
+    traces: &[Trace],
+    perf: &PerfModel,
+    opts: &SimOptions,
+) -> SimResult {
+    let mut rng = Xoshiro256::seed_from_u64(opts.seed);
+
+    // ---- materialise replicas -------------------------------------------
+    let mut replicas: Vec<ReplicaSim> = Vec::new();
+    // entry_replicas[e] = indices into `replicas` for plan entry e.
+    let mut entry_replicas: Vec<Vec<usize>> = Vec::new();
+    for entry in &plan.entries {
+        let cand = &problem.candidates[entry.candidate];
+        let config = cand
+            .replica
+            .clone()
+            .expect("simulate_plan requires concrete replica configs");
+        let model = &models[cand.model];
+        let cap = perf.max_batch_tokens(&config, model);
+        let mut ids = Vec::new();
+        for _ in 0..entry.replicas {
+            ids.push(replicas.len());
+            replicas.push(ReplicaSim {
+                config: config.clone(),
+                model_idx: cand.model,
+                queue: VecDeque::new(),
+                batch: Vec::new(),
+                token_capacity: cap,
+                busy: BusyTracker::default(),
+                next_event: None,
+            });
+        }
+        entry_replicas.push(ids);
+    }
+    assert!(!replicas.is_empty(), "plan has no replicas");
+
+    // ---- dispatch requests ------------------------------------------------
+    // Deterministic fractional dispatch (deficit-credit): per (model,
+    // workload), each entry accrues credit equal to its plan fraction per
+    // request and the highest-credit entry receives it. This matches the
+    // fluid plan with O(1) deviation instead of the O(√n) noise of random
+    // weighted choice. Within an entry, work is spread by expected busy
+    // tokens per replica.
+    let mut arrivals: Vec<Vec<Request>> = vec![Vec::new(); replicas.len()];
+    let mut replica_tokens: Vec<f64> = vec![0.0; replicas.len()];
+    let nw = problem.demands.iter().map(|d| d.len()).max().unwrap_or(0);
+    let mut credits: Vec<Vec<f64>> = vec![vec![0.0; plan.entries.len()]; traces.len() * nw];
+    for (m, trace) in traces.iter().enumerate() {
+        for req in &trace.requests {
+            let w = req.workload.index;
+            let credit_row = &mut credits[m * nw + w];
+            let mut best: Option<usize> = None;
+            for (ei, e) in plan.entries.iter().enumerate() {
+                if problem.candidates[e.candidate].model != m {
+                    continue;
+                }
+                let f = e.fractions.get(w).copied().unwrap_or(0.0);
+                if f <= 0.0 {
+                    continue;
+                }
+                credit_row[ei] += f;
+                if best.map(|b| credit_row[ei] > credit_row[b]).unwrap_or(true) {
+                    best = Some(ei);
+                }
+            }
+            let Some(e) = best else {
+                // Plan does not cover this workload (shouldn't happen for
+                // validated plans); send to any replica of the model.
+                let fallback: Vec<usize> = replicas
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| r.model_idx == m)
+                    .map(|(i, _)| i)
+                    .collect();
+                assert!(!fallback.is_empty(), "no replica for model {m}");
+                let ri = fallback[rng.index(fallback.len())];
+                arrivals[ri].push(req.clone());
+                continue;
+            };
+            credit_row[e] -= 1.0;
+            // Least-loaded replica of the entry by outstanding tokens.
+            let ids = &entry_replicas[e];
+            let ri = *ids
+                .iter()
+                .min_by(|&&a, &&b| {
+                    replica_tokens[a].partial_cmp(&replica_tokens[b]).unwrap()
+                })
+                .unwrap();
+            replica_tokens[ri] += (req.input_tokens + req.output_tokens) as f64;
+            arrivals[ri].push(req.clone());
+        }
+    }
+
+    // ---- event loop --------------------------------------------------------
+    // Arrival streams are pre-assigned; each replica consumes its own stream
+    // in arrival order. Global clock driven by a heap of step completions +
+    // pending arrivals.
+    let mut recorder = LatencyRecorder::new();
+    let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+    let mut arrival_idx = vec![0usize; replicas.len()];
+
+    // Seed: each replica activates at its first arrival.
+    for (ri, reqs) in arrivals.iter().enumerate() {
+        if !reqs.is_empty() {
+            heap.push(Event {
+                time: reqs[0].arrival_s,
+                replica: ri,
+            });
+        }
+    }
+
+    let max_batch = opts.max_batch;
+    while let Some(Event { time, replica: ri }) = heap.pop() {
+        let now = time;
+        // Deliver all arrivals up to `now` for this replica.
+        {
+            let reqs = &arrivals[ri];
+            let r = &mut replicas[ri];
+            while arrival_idx[ri] < reqs.len() && reqs[arrival_idx[ri]].arrival_s <= now {
+                r.queue.push_back(reqs[arrival_idx[ri]].clone());
+                arrival_idx[ri] += 1;
+            }
+        }
+        // If the replica already has a step in flight past `now`, skip; its
+        // completion event will re-enter.
+        if let Some(t) = replicas[ri].next_event {
+            if t > now {
+                continue;
+            }
+        }
+
+        // Work stealing: an under-loaded replica pulls queued (unstarted)
+        // requests from the longest same-model queue. Real routers
+        // re-dispatch queued work; without this, static per-request
+        // assignment strands stragglers on slow replicas at the end of a
+        // batch-arrival run (the paper's Observation-3(ii): full
+        // utilisation sometimes requires assigning work to suboptimal
+        // GPUs).
+        if replicas[ri].queue.is_empty() {
+            let free = max_batch.saturating_sub(replicas[ri].batch.len());
+            for _ in 0..free {
+                let model_idx = replicas[ri].model_idx;
+                let donor = replicas
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, r)| {
+                        *i != ri && r.model_idx == model_idx && r.queue.len() > 1
+                    })
+                    .max_by_key(|(_, r)| r.queue.len())
+                    .map(|(i, _)| i);
+                match donor {
+                    Some(d) => {
+                        let stolen = replicas[d].queue.pop_back().unwrap();
+                        replicas[ri].queue.push_back(stolen);
+                    }
+                    None => break,
+                }
+            }
+        }
+
+        // Step completion: advance the in-flight batch by one token.
+        let (step_time, completed) = {
+            let r = &mut replicas[ri];
+            r.next_event = None;
+
+            // Admit from queue while capacity allows.
+            while !r.queue.is_empty() && r.batch.len() < max_batch {
+                let req = r.queue.front().unwrap();
+                let need = req.input_tokens as f64 + req.output_tokens as f64;
+                if r.tokens_in_use() + need > r.token_capacity && !r.batch.is_empty() {
+                    break;
+                }
+                let req = r.queue.pop_front().unwrap();
+                r.batch.push(InFlight {
+                    arrival_s: req.arrival_s,
+                    ctx_tokens: req.input_tokens as f64,
+                    remaining_out: req.output_tokens.max(1),
+                    id: req.id,
+                });
+                // Prefill occupies the engine once per admission.
+                let model = &models[r.model_idx];
+                let pre = perf.prefill_cost(&r.config, model, req.input_tokens as f64);
+                r.busy.add_busy(now, pre);
+                r.next_event = Some(r.next_event.unwrap_or(now).max(now) + pre);
+            }
+
+            if r.batch.is_empty() {
+                (None, Vec::new())
+            } else {
+                let model = &models[r.model_idx];
+                let b = r.batch.len() as f64;
+                let mean_ctx = r.tokens_in_use() / b;
+                let step = perf.decode_step_time(&r.config, model, b, mean_ctx);
+                let start = r.next_event.unwrap_or(now).max(now);
+                let end = start + step;
+                r.busy.add_busy(start, step);
+                // Advance tokens.
+                let mut completed = Vec::new();
+                for f in &mut r.batch {
+                    f.remaining_out -= 1;
+                    f.ctx_tokens += 1.0;
+                }
+                r.batch.retain(|f| {
+                    if f.remaining_out == 0 {
+                        completed.push((f.arrival_s, f.id));
+                        false
+                    } else {
+                        true
+                    }
+                });
+                r.next_event = Some(end);
+                (Some(end), completed)
+            }
+        };
+
+        for (arrival_s, _id) in completed {
+            let end = step_time.unwrap();
+            recorder.record(end, end - arrival_s);
+        }
+
+        match step_time {
+            Some(end) => heap.push(Event {
+                time: end,
+                replica: ri,
+            }),
+            None => {
+                // Idle: wake at the next arrival, if any.
+                if arrival_idx[ri] < arrivals[ri].len() {
+                    heap.push(Event {
+                        time: arrivals[ri][arrival_idx[ri]].arrival_s,
+                        replica: ri,
+                    });
+                }
+            }
+        }
+    }
+
+    let makespan = recorder.makespan();
+    let total_requests: usize = traces.iter().map(|t| t.len()).sum();
+    assert_eq!(
+        recorder.count(),
+        total_requests,
+        "simulator lost requests"
+    );
+    let mean_utilization = if makespan > 0.0 {
+        replicas
+            .iter()
+            .map(|r| r.busy.utilization(makespan))
+            .sum::<f64>()
+            / replicas.len() as f64
+    } else {
+        0.0
+    };
+    SimResult {
+        throughput_rps: recorder.throughput_rps(),
+        makespan,
+        mean_utilization,
+        replicas: replicas.len(),
+        recorder,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::availability;
+    use crate::perf_model::{ModelSpec, PerfModel};
+    use crate::profiler::Profile;
+    use crate::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+    use crate::sched::enumerate::EnumOptions;
+    use crate::workload::{synthesize_trace, SynthOptions, TraceMix};
+
+    fn plan_and_sim(budget: f64, n_requests: usize) -> (SimResult, f64) {
+        let model = ModelSpec::llama3_70b();
+        let perf = PerfModel::default();
+        let profile = Profile::build(&model, &perf, &EnumOptions::default());
+        let mix = TraceMix::trace1();
+        let problem = crate::sched::SchedProblem::from_profile(
+            &profile,
+            &mix,
+            n_requests as f64,
+            &availability(1),
+            budget,
+        );
+        let (plan, _) = solve_binary_search(&problem, &BinarySearchOptions::default());
+        let plan = plan.expect("plan");
+        plan.validate(&problem, 1e-4).unwrap();
+        let trace = synthesize_trace(
+            &mix,
+            &SynthOptions {
+                num_requests: n_requests,
+                arrival_rate: 0.0,
+                length_sigma: 0.1,
+                seed: 7,
+            },
+        );
+        let result = simulate_plan(
+            &problem,
+            &plan,
+            &[model],
+            &[trace],
+            &perf,
+            &SimOptions::default(),
+        );
+        (result, plan.makespan)
+    }
+
+    #[test]
+    fn simulator_completes_all_requests() {
+        let (res, _) = plan_and_sim(30.0, 300);
+        assert_eq!(res.recorder.count(), 300);
+        assert!(res.makespan > 0.0);
+        assert!(res.throughput_rps > 0.0);
+        assert!(res.mean_utilization > 0.05 && res.mean_utilization <= 1.0);
+    }
+
+    #[test]
+    fn simulated_makespan_tracks_planned_makespan() {
+        // The simulator has queueing/batching effects the fluid plan lacks,
+        // but should land within a small factor of the planned makespan.
+        let (res, planned) = plan_and_sim(30.0, 600);
+        let ratio = res.makespan / planned;
+        assert!(
+            (0.4..3.0).contains(&ratio),
+            "sim {} vs planned {planned} (ratio {ratio})",
+            res.makespan
+        );
+    }
+
+    #[test]
+    fn more_budget_is_faster() {
+        let (res_low, _) = plan_and_sim(15.0, 400);
+        let (res_high, _) = plan_and_sim(60.0, 400);
+        assert!(
+            res_high.makespan < res_low.makespan,
+            "60$/h {} should beat 15$/h {}",
+            res_high.makespan,
+            res_low.makespan
+        );
+    }
+
+    #[test]
+    fn latency_percentiles_monotone() {
+        let (res, _) = plan_and_sim(30.0, 300);
+        let grid = res.recorder.percentile_grid();
+        for w in grid.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a, _) = plan_and_sim(30.0, 200);
+        let (b, _) = plan_and_sim(30.0, 200);
+        assert_eq!(a.recorder.count(), b.recorder.count());
+        assert!((a.makespan - b.makespan).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,218 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target sets `harness = false` and drives this:
+//! warmup, calibrated iteration count, mean/std/percentiles, and a printed
+//! report identical in spirit to criterion's. Also provides the table
+//! printer that every figure-reproduction harness uses.
+
+use crate::util::stats::{percentile, Summary};
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding a computed value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} {:>12} {:>12} {:>12} {:>8}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure: warm up for `warmup`, then sample until `measure`
+/// wall time has elapsed (at least 10 samples).
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> BenchResult {
+    // Warmup and calibration: find an inner-loop count so one sample takes
+    // roughly 1ms (keeps timer overhead negligible without starving samples).
+    let t0 = Instant::now();
+    let mut calib_iters = 0u64;
+    while t0.elapsed() < warmup {
+        f();
+        calib_iters += 1;
+    }
+    let per_call = warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+    let inner = ((1e6 / per_call).ceil() as usize).clamp(1, 1_000_000);
+
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let t1 = Instant::now();
+    while t1.elapsed() < measure || samples_ns.len() < 10 {
+        let s = Instant::now();
+        for _ in 0..inner {
+            f();
+        }
+        samples_ns.push(s.elapsed().as_nanos() as f64 / inner as f64);
+        if samples_ns.len() >= 10_000 {
+            break;
+        }
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let summary = Summary::of(&samples_ns);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples_ns.len() * inner,
+        mean_ns: summary.mean,
+        std_ns: summary.std,
+        p50_ns: percentile(&samples_ns, 50.0),
+        p99_ns: percentile(&samples_ns, 99.0),
+    }
+}
+
+/// Quick-benchmark with default durations (0.2s warmup / 1s measure).
+pub fn bench_quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(
+        name,
+        Duration::from_millis(200),
+        Duration::from_secs(1),
+        f,
+    )
+}
+
+/// Header line matching [`BenchResult::report`].
+pub fn report_header() -> String {
+    format!(
+        "{:<48} {:>12} {:>12} {:>12} {:>8}",
+        "benchmark", "mean", "p50", "p99", "iters"
+    )
+}
+
+// ---- figure-table printer --------------------------------------------------
+
+/// A simple fixed-width table used by every figure harness so outputs are
+/// uniform and diff-able in EXPERIMENTS.md.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with 3 significant-ish decimals for table cells.
+pub fn cell(x: f64) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 100.0 {
+        format!("{x:.1}")
+    } else if x.abs() >= 1.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench(
+            "noop-ish",
+            Duration::from_millis(20),
+            Duration::from_millis(50),
+            || {
+                black_box((0..100).sum::<u64>());
+            },
+        );
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert!(!r.report().is_empty());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["gpu", "thr/$"]);
+        t.row(vec!["H100".into(), cell(1.234)]);
+        t.row(vec!["A6000".into(), cell(10.0)]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("H100"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn cell_formatting() {
+        assert_eq!(cell(f64::NAN), "-");
+        assert_eq!(cell(0.0), "0");
+        assert_eq!(cell(123.456), "123.5");
+        assert_eq!(cell(1.5), "1.50");
+        assert_eq!(cell(0.0375), "0.0375");
+    }
+}

@@ -1,0 +1,166 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands. Each binary declares its options up front so `--help` output
+//! is generated consistently.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Named options: `--key value` or `--key=value`.
+    opts: BTreeMap<String, String>,
+    /// Bare flags: `--flag`.
+    flags: Vec<String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit list (testable). `flag_names` lists options that
+    /// take no value, so `--flag positional` is not mis-parsed.
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(rest.to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        out.opts.insert(rest.to_string(), v);
+                    }
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse(flag_names: &[&str]) -> Args {
+        Self::parse_from(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|s| {
+                s.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|s| {
+                s.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|s| {
+                s.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// First positional argument (commonly the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Comma-separated list option, e.g. `--budgets 15,30,60`.
+    pub fn get_list_f64(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<f64>()
+                        .unwrap_or_else(|_| panic!("--{name}: bad number '{t}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, flags: &[&str]) -> Args {
+        Args::parse_from(s.split_whitespace().map(|t| t.to_string()), flags)
+    }
+
+    #[test]
+    fn key_value_both_forms() {
+        let a = parse("--budget 30 --model=70b", &[]);
+        assert_eq!(a.get("budget"), Some("30"));
+        assert_eq!(a.get("model"), Some("70b"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse("plan --verbose trace1 --budget 15", &["verbose"]);
+        assert_eq!(a.subcommand(), Some("plan"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["plan", "trace1"]);
+        assert_eq!(a.get_f64("budget", 0.0), 15.0);
+    }
+
+    #[test]
+    fn flag_followed_by_option_like() {
+        // --quiet is not declared a flag but is followed by another --opt,
+        // so it is treated as a flag.
+        let a = parse("--quiet --budget 30", &[]);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.get("budget"), Some("30"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--budget 30 --dry-run", &[]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("--budgets 15,30,60", &[]);
+        assert_eq!(a.get_list_f64("budgets", &[]), vec![15.0, 30.0, 60.0]);
+        assert_eq!(a.get_list_f64("missing", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("", &[]);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.subcommand(), None);
+    }
+}

@@ -1,0 +1,11 @@
+//! Utility substrates built from scratch for the offline environment
+//! (no serde/clap/rand/tokio/criterion/proptest available).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,248 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Generates random cases from a seeded PRNG, runs the property, and on
+//! failure performs greedy shrinking via a user-supplied (or default)
+//! simplification function, reporting the smallest failing case found.
+//!
+//! Usage:
+//! ```ignore
+//! check(256, 0xC0FFEE, gen_vec_f64(0.0..10.0, 0..32), |xs| {
+//!     prop_assert(sorted(xs).windows(2).all(|w| w[0] <= w[1]), "sorted");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256;
+use std::fmt::Debug;
+
+/// Result of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Convenience assertion that returns `Err` instead of panicking so the
+/// shrinker can keep working after a failure.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn prop_assert_close(a: f64, b: f64, tol: f64, ctx: &str) -> PropResult {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} !~ {b} (tol {tol})"))
+    }
+}
+
+/// A generator: produces a value from randomness, and can propose smaller
+/// variants of a failing value for shrinking.
+pub struct Gen<T> {
+    pub make: Box<dyn Fn(&mut Xoshiro256) -> T>,
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        make: impl Fn(&mut Xoshiro256) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Self {
+            make: Box::new(make),
+            shrink: Box::new(shrink),
+        }
+    }
+
+    /// Generator with no shrinking.
+    pub fn opaque(make: impl Fn(&mut Xoshiro256) -> T + 'static) -> Self {
+        Self::new(make, |_| Vec::new())
+    }
+
+    /// Map the generated value (loses shrinking through the map).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + Clone + 'static) -> Gen<U> {
+        let make = self.make;
+        let f2 = f.clone();
+        Gen {
+            make: Box::new(move |r| f(make(r))),
+            shrink: Box::new(move |_| {
+                let _ = &f2;
+                Vec::new()
+            }),
+        }
+    }
+}
+
+/// Run `cases` random cases of property `prop` over generator `gen`.
+/// Panics (with the shrunk counterexample) if the property fails.
+pub fn check<T: Clone + Debug + 'static>(
+    cases: usize,
+    seed: u64,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    for case in 0..cases {
+        let value = (gen.make)(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Greedy shrink: repeatedly take the first smaller variant that
+            // still fails, up to a budget.
+            let mut best = value;
+            let mut best_msg = msg;
+            let mut budget = 500usize;
+            'outer: while budget > 0 {
+                for cand in (gen.shrink)(&best) {
+                    budget -= 1;
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}):\n  {best_msg}\n  counterexample: {best:?}"
+            );
+        }
+    }
+}
+
+// ---- stock generators ------------------------------------------------------
+
+/// u64 in [lo, hi]; shrinks toward lo.
+pub fn gen_u64(lo: u64, hi: u64) -> Gen<u64> {
+    Gen::new(
+        move |r| r.range_u64(lo, hi),
+        move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                out.push(lo + (v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.dedup();
+            out
+        },
+    )
+}
+
+/// usize in [lo, hi]; shrinks toward lo.
+pub fn gen_usize(lo: usize, hi: usize) -> Gen<usize> {
+    gen_u64(lo as u64, hi as u64).map(|v| v as usize)
+}
+
+/// f64 in [lo, hi); shrinks toward lo and midpoints.
+pub fn gen_f64(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(
+        move |r| r.range_f64(lo, hi),
+        move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                out.push(lo + (v - lo) / 2.0);
+            }
+            out
+        },
+    )
+}
+
+/// Vec<f64> with length in len_range, elements in [lo, hi).
+/// Shrinks by halving the vector and simplifying elements.
+pub fn gen_vec_f64(
+    lo: f64,
+    hi: f64,
+    min_len: usize,
+    max_len: usize,
+) -> Gen<Vec<f64>> {
+    Gen::new(
+        move |r| {
+            let n = r.range_u64(min_len as u64, max_len as u64) as usize;
+            (0..n).map(|_| r.range_f64(lo, hi)).collect()
+        },
+        move |v: &Vec<f64>| {
+            let mut out = Vec::new();
+            if v.len() > min_len {
+                out.push(v[..v.len() / 2].to_vec());
+                out.push(v[..v.len() - 1].to_vec());
+            }
+            if !v.is_empty() && v.len() >= min_len {
+                let mut simpler = v.clone();
+                simpler[0] = lo;
+                if simpler != *v {
+                    out.push(simpler);
+                }
+            }
+            out.retain(|c| c.len() >= min_len);
+            out
+        },
+    )
+}
+
+/// Pair generator (no shrinking through the pair).
+pub fn gen_pair<A: Clone + 'static, B: Clone + 'static>(ga: Gen<A>, gb: Gen<B>) -> Gen<(A, B)> {
+    Gen::opaque(move |r| ((ga.make)(r), (gb.make)(r)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(100, 1, gen_u64(0, 100), |&v| {
+            prop_assert(v <= 100, "bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(200, 2, gen_u64(0, 1000), |&v| {
+            prop_assert(v < 500, "v < 500")
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        let result = std::panic::catch_unwind(|| {
+            check(200, 3, gen_u64(0, 100_000), |&v| {
+                prop_assert(v < 1000, "v < 1000")
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(_) => panic!("expected failure"),
+        };
+        // The shrinker should reach a counterexample well below the raw
+        // random failure range (greedy halving toward 1000).
+        let ce: u64 = msg
+            .split("counterexample: ")
+            .nth(1)
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(ce < 3000, "shrunk counterexample {ce} not small: {msg}");
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        check(100, 4, gen_vec_f64(-1.0, 1.0, 0, 16), |v| {
+            prop_assert(
+                v.len() <= 16 && v.iter().all(|x| (-1.0..1.0).contains(x)),
+                "bounds",
+            )
+        });
+    }
+
+    #[test]
+    fn close_assertion() {
+        assert!(prop_assert_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(prop_assert_close(1.0, 1.1, 1e-9, "x").is_err());
+    }
+}

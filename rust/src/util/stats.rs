@@ -1,0 +1,342 @@
+//! Statistics helpers: percentiles, summaries, and online accumulators used
+//! by the metrics layer, the simulator, and every benchmark harness.
+
+/// Percentile of a sample using linear interpolation between closest ranks
+/// (the same convention as numpy's default `linear` interpolation).
+/// `p` is in [0, 100]. Returns NaN for an empty sample.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Sorts a copy and evaluates multiple percentiles at once.
+pub fn percentiles(values: &[f64], ps: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ps.iter().map(|&p| percentile(&v, p)).collect()
+}
+
+/// The percentile grid used throughout the paper: p5, p10, ..., p95, p100.
+pub fn paper_percentile_grid() -> Vec<f64> {
+    (1..=20).map(|i| i as f64 * 5.0).collect()
+}
+
+/// Summary statistics for a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(values: &[f64]) -> Self {
+        if values.is_empty() {
+            return Self {
+                count: 0,
+                mean: f64::NAN,
+                std: f64::NAN,
+                min: f64::NAN,
+                max: f64::NAN,
+                p50: f64::NAN,
+                p90: f64::NAN,
+                p99: f64::NAN,
+            };
+        }
+        let mut v = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len() as f64;
+        let mean = v.iter().sum::<f64>() / n;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        Self {
+            count: v.len(),
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            max: v[v.len() - 1],
+            p50: percentile(&v, 50.0),
+            p90: percentile(&v, 90.0),
+            p99: percentile(&v, 99.0),
+        }
+    }
+}
+
+/// Online mean/variance accumulator (Welford). Constant memory; used in the
+/// serving hot path where we cannot afford to buffer every latency sample.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-bucket latency histogram with pre-defined log-spaced bounds.
+/// Approximate-percentile queries in O(buckets); constant memory.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl LogHistogram {
+    /// Buckets log-spaced over [lo, hi] with `n` buckets (plus overflow).
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n >= 2);
+        let ratio = (hi / lo).powf(1.0 / n as f64);
+        let mut bounds = Vec::with_capacity(n + 1);
+        let mut b = lo;
+        for _ in 0..=n {
+            bounds.push(b);
+            b *= ratio;
+        }
+        let len = bounds.len();
+        Self {
+            bounds,
+            counts: vec![0; len + 1],
+            total: 0,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, x: f64) {
+        let idx = match self
+            .bounds
+            .binary_search_by(|b| b.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        };
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate quantile (returns a bucket boundary).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i == 0 {
+                    self.bounds[0]
+                } else if i > self.bounds.len() - 1 {
+                    *self.bounds.last().unwrap()
+                } else {
+                    self.bounds[i.min(self.bounds.len() - 1)]
+                };
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+/// Geometric mean of strictly-positive values (used for speedup aggregation).
+pub fn geomean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    let s: f64 = values.iter().map(|v| v.ln()).sum();
+    (s / values.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_linear_interp_matches_numpy() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&v, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&v, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+        assert!((percentile(&v, 25.0) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_and_single() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert_eq!(percentile(&[3.5], 90.0), 3.5);
+    }
+
+    #[test]
+    fn paper_grid_is_p5_to_p100() {
+        let g = paper_percentile_grid();
+        assert_eq!(g.len(), 20);
+        assert_eq!(g[0], 5.0);
+        assert_eq!(g[19], 100.0);
+    }
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = Summary::of(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert_eq!(s.count, 8);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        assert!((s.std - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64 * 0.37).sin() * 5.0 + 2.0).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-9);
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.variance() - var).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_merge_equals_combined() {
+        let xs: Vec<f64> = (0..500).map(|i| i as f64).collect();
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        let mut c = Welford::new();
+        for &x in &xs[..200] {
+            a.push(x);
+            c.push(x);
+        }
+        for &x in &xs[200..] {
+            b.push(x);
+            c.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert!((a.mean() - c.mean()).abs() < 1e-9);
+        assert!((a.variance() - c.variance()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_truth() {
+        let mut h = LogHistogram::new(1e-3, 1e3, 120);
+        let mut r = crate::util::rng::Xoshiro256::seed_from_u64(5);
+        let mut xs = vec![];
+        for _ in 0..20_000 {
+            let x = r.lognormal(0.0, 1.0);
+            xs.push(x);
+            h.record(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.9, 0.99] {
+            let truth = percentile(&xs, q * 100.0);
+            let approx = h.quantile(q);
+            assert!(
+                (approx / truth - 1.0).abs() < 0.2,
+                "q={q} truth={truth} approx={approx}"
+            );
+        }
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+}

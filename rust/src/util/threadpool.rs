@@ -1,0 +1,182 @@
+//! Fixed-size worker thread pool (tokio is unavailable offline; the serving
+//! runtime is threaded). Jobs are `FnOnce` closures; `scope`-style joins are
+//! provided via [`ThreadPool::run_batch`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads consuming from a shared channel.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    shared_rx: Arc<Mutex<mpsc::Receiver<Msg>>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let rx = Arc::clone(&shared_rx);
+            let pending = Arc::clone(&pending);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("hetserve-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                job();
+                                let (lock, cvar) = &*pending;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                if *n == 0 {
+                                    cvar.notify_all();
+                                }
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self {
+            tx,
+            shared_rx,
+            handles,
+            pending,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Submit a job; does not block.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool closed");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let (lock, cvar) = &*self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cvar.wait(n).unwrap();
+        }
+    }
+
+    /// Run a batch of closures producing values; returns results in input
+    /// order. Blocks until all complete.
+    pub fn run_batch<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let results: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let counter = Arc::new(AtomicUsize::new(0));
+        for (i, job) in jobs.into_iter().enumerate() {
+            let results = Arc::clone(&results);
+            let counter = Arc::clone(&counter);
+            self.submit(move || {
+                let v = job();
+                results.lock().unwrap()[i] = Some(v);
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        self.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), n);
+        Arc::try_unwrap(results)
+            .ok()
+            .expect("results still shared")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("job did not complete"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        // Wake any worker stuck on a disconnected channel by dropping the
+        // receiver reference after joining.
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let _ = &self.shared_rx;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn run_batch_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let jobs: Vec<_> = (0..64)
+            .map(|i| move || i * i)
+            .collect();
+        let out = pool.run_batch(jobs);
+        assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reusable_after_wait() {
+        let pool = ThreadPool::new(2);
+        let a = pool.run_batch(vec![|| 1, || 2]);
+        let b = pool.run_batch(vec![|| 3, || 4]);
+        assert_eq!(a, vec![1, 2]);
+        assert_eq!(b, vec![3, 4]);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(3);
+        pool.submit(|| {});
+        pool.wait_idle();
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,305 @@
+//! Workload model: the paper's nine workload types (input length ∈
+//! {2455, 824, 496} × output length ∈ {510, 253, 18}), the three evaluation
+//! traces (Table 4 mixtures of those types), request records, and a trace
+//! synthesizer with Poisson arrivals and log-normal length jitter.
+
+pub mod synth;
+
+pub use synth::{synthesize_trace, SynthOptions};
+
+use crate::util::json::Json;
+
+/// Average input token lengths of the benchmark workload grid (§3).
+pub const INPUT_LENGTHS: [u32; 3] = [2455, 824, 496];
+/// Average output token lengths of the benchmark workload grid (§3).
+pub const OUTPUT_LENGTHS: [u32; 3] = [510, 253, 18];
+
+/// One of the nine benchmark workload types. `index` is 0..9 in the paper's
+/// Figure 4 left-to-right order: (input, output) pairs iterate input-major:
+/// (2455,510), (2455,253), (2455,18), (824,510), ..., (496,18).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WorkloadType {
+    pub index: usize,
+    pub avg_input: u32,
+    pub avg_output: u32,
+}
+
+impl WorkloadType {
+    pub fn by_index(index: usize) -> WorkloadType {
+        assert!(index < 9, "workload index {index} out of range");
+        WorkloadType {
+            index,
+            avg_input: INPUT_LENGTHS[index / 3],
+            avg_output: OUTPUT_LENGTHS[index % 3],
+        }
+    }
+
+    pub fn all() -> Vec<WorkloadType> {
+        (0..9).map(Self::by_index).collect()
+    }
+
+    pub fn label(&self) -> String {
+        format!("{{{}, {}}}", self.avg_input, self.avg_output)
+    }
+
+    /// Paper's Figure 1 classification: input > 512 is "long input",
+    /// output > 128 is "long output".
+    pub fn class(&self) -> WorkloadClass {
+        match (self.avg_input > 512, self.avg_output > 128) {
+            (true, true) => WorkloadClass::LongInLongOut,
+            (true, false) => WorkloadClass::LongInShortOut,
+            (false, true) => WorkloadClass::ShortInLongOut,
+            (false, false) => WorkloadClass::ShortInShortOut,
+        }
+    }
+
+    /// Compute-intensity heuristic used in the paper's prose: long-input /
+    /// short-output workloads are compute(prefill)-heavy; short-input /
+    /// long-output are memory(decode)-heavy.
+    pub fn compute_intensity(&self) -> f64 {
+        self.avg_input as f64 / (self.avg_input as f64 + 4.0 * self.avg_output as f64)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkloadClass {
+    LongInLongOut,
+    LongInShortOut,
+    ShortInLongOut,
+    ShortInShortOut,
+}
+
+impl WorkloadClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadClass::LongInLongOut => "long-in/long-out",
+            WorkloadClass::LongInShortOut => "long-in/short-out",
+            WorkloadClass::ShortInLongOut => "short-in/long-out",
+            WorkloadClass::ShortInShortOut => "short-in/short-out",
+        }
+    }
+}
+
+/// A named mixture over the nine workload types (Table 4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceMix {
+    pub name: String,
+    /// Fractions over workload types 1..9; sums to 1.
+    pub ratios: [f64; 9],
+}
+
+impl TraceMix {
+    /// Trace 1 — subsampled from the Swiss AI Center production traces.
+    pub fn trace1() -> TraceMix {
+        TraceMix::new(
+            "trace1-swiss-ai",
+            [0.33, 0.07, 0.08, 0.07, 0.27, 0.06, 0.06, 0.03, 0.03],
+        )
+    }
+
+    /// Trace 2 — subsampled from Azure-Trace (Splitwise production traces).
+    pub fn trace2() -> TraceMix {
+        TraceMix::new(
+            "trace2-azure",
+            [0.22, 0.05, 0.05, 0.21, 0.05, 0.05, 0.19, 0.06, 0.12],
+        )
+    }
+
+    /// Trace 3 — subsampled from the WildGPT/WildChat dataset.
+    pub fn trace3() -> TraceMix {
+        TraceMix::new(
+            "trace3-wildgpt",
+            [0.04, 0.01, 0.04, 0.03, 0.20, 0.27, 0.01, 0.25, 0.15],
+        )
+    }
+
+    pub fn by_name(name: &str) -> Option<TraceMix> {
+        match name {
+            "trace1" | "trace1-swiss-ai" | "swiss" => Some(Self::trace1()),
+            "trace2" | "trace2-azure" | "azure" => Some(Self::trace2()),
+            "trace3" | "trace3-wildgpt" | "wildgpt" | "wildchat" => Some(Self::trace3()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<TraceMix> {
+        vec![Self::trace1(), Self::trace2(), Self::trace3()]
+    }
+
+    pub fn new(name: &str, ratios: [f64; 9]) -> TraceMix {
+        let sum: f64 = ratios.iter().sum();
+        assert!(
+            (sum - 1.0).abs() < 1e-6,
+            "trace mix '{name}' ratios sum to {sum}, expected 1"
+        );
+        assert!(ratios.iter().all(|&r| r >= 0.0));
+        TraceMix {
+            name: name.to_string(),
+            ratios,
+        }
+    }
+
+    /// Demand per workload type for a total of `total_requests` requests.
+    pub fn demands(&self, total_requests: f64) -> [f64; 9] {
+        let mut out = [0.0; 9];
+        for (i, r) in self.ratios.iter().enumerate() {
+            out[i] = r * total_requests;
+        }
+        out
+    }
+
+    /// The workload class fractions (Figure 1-style summary).
+    pub fn class_fractions(&self) -> Vec<(WorkloadClass, f64)> {
+        let mut acc: Vec<(WorkloadClass, f64)> = vec![
+            (WorkloadClass::LongInLongOut, 0.0),
+            (WorkloadClass::LongInShortOut, 0.0),
+            (WorkloadClass::ShortInLongOut, 0.0),
+            (WorkloadClass::ShortInShortOut, 0.0),
+        ];
+        for (i, &r) in self.ratios.iter().enumerate() {
+            let class = WorkloadType::by_index(i).class();
+            acc.iter_mut().find(|(c, _)| *c == class).unwrap().1 += r;
+        }
+        acc
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("ratios", Json::num_arr(&self.ratios)),
+        ])
+    }
+}
+
+/// A single request in a synthesized trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    pub workload: WorkloadType,
+    /// Actual input token count (jittered around the type mean).
+    pub input_tokens: u32,
+    /// Actual output token count.
+    pub output_tokens: u32,
+}
+
+/// A synthesized trace: requests sorted by arrival time.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub name: String,
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Count of requests per workload type index.
+    pub fn counts_per_type(&self) -> [usize; 9] {
+        let mut c = [0usize; 9];
+        for r in &self.requests {
+            c[r.workload.index] += 1;
+        }
+        c
+    }
+
+    /// Duration between first and last arrival.
+    pub fn span_s(&self) -> f64 {
+        if self.requests.is_empty() {
+            0.0
+        } else {
+            self.requests.last().unwrap().arrival_s - self.requests[0].arrival_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_types_grid() {
+        let all = WorkloadType::all();
+        assert_eq!(all.len(), 9);
+        assert_eq!(all[0].avg_input, 2455);
+        assert_eq!(all[0].avg_output, 510);
+        assert_eq!(all[2].avg_input, 2455);
+        assert_eq!(all[2].avg_output, 18);
+        assert_eq!(all[8].avg_input, 496);
+        assert_eq!(all[8].avg_output, 18);
+    }
+
+    #[test]
+    fn classes_match_figure1_thresholds() {
+        // {2455, 18}: long input, short output => compute-intensive.
+        assert_eq!(
+            WorkloadType::by_index(2).class(),
+            WorkloadClass::LongInShortOut
+        );
+        // {496, 510}: short input, long output => memory-intensive.
+        assert_eq!(
+            WorkloadType::by_index(6).class(),
+            WorkloadClass::ShortInLongOut
+        );
+    }
+
+    #[test]
+    fn compute_intensity_ordering() {
+        // Long-input/short-output must rank above short-input/long-output.
+        let compute_heavy = WorkloadType::by_index(2).compute_intensity(); // {2455,18}
+        let memory_heavy = WorkloadType::by_index(6).compute_intensity(); // {496,510}
+        assert!(compute_heavy > memory_heavy);
+    }
+
+    #[test]
+    fn table4_mixtures_sum_to_one() {
+        for t in TraceMix::all() {
+            let s: f64 = t.ratios.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "{}: {s}", t.name);
+        }
+    }
+
+    #[test]
+    fn table4_values_spot_check() {
+        assert_eq!(TraceMix::trace1().ratios[0], 0.33);
+        assert_eq!(TraceMix::trace2().ratios[3], 0.21);
+        assert_eq!(TraceMix::trace3().ratios[5], 0.27);
+    }
+
+    #[test]
+    fn trace3_is_memory_heavy() {
+        // WildGPT (trace 3) is dominated by short-input types (the paper: the
+        // A6000 homogeneous baseline wins there; our plan rents ~93%
+        // workstation GPUs).
+        let t3 = TraceMix::trace3();
+        let short_in: f64 = t3.ratios[3..9].iter().sum();
+        assert!(short_in > 0.85, "short-input fraction {short_in}");
+    }
+
+    #[test]
+    fn demands_scale() {
+        let d = TraceMix::trace1().demands(1000.0);
+        assert!((d[0] - 330.0).abs() < 1e-9);
+        assert!((d.iter().sum::<f64>() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn by_name_aliases() {
+        assert_eq!(TraceMix::by_name("trace1").unwrap().name, "trace1-swiss-ai");
+        assert_eq!(TraceMix::by_name("azure").unwrap().name, "trace2-azure");
+        assert!(TraceMix::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn class_fractions_sum_to_one() {
+        for t in TraceMix::all() {
+            let s: f64 = t.class_fractions().iter().map(|(_, f)| f).sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Trace synthesizer.
+//!
+//! The paper subsamples real traces (Swiss AI Center, Azure-Trace, WildGPT);
+//! those datasets are not available here, so we synthesize traces that match
+//! the published statistics: the Table 4 type mixture, the per-type mean
+//! input/output lengths, log-normal length jitter (real LLM trace length
+//! distributions are heavy-tailed), and Poisson arrivals at a configurable
+//! aggregate rate. See DESIGN.md §Hardware-Adaptation for the substitution
+//! argument.
+
+use super::{Request, Trace, TraceMix, WorkloadType};
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct SynthOptions {
+    /// Total number of requests to generate.
+    pub num_requests: usize,
+    /// Aggregate Poisson arrival rate (requests/second). If zero, all
+    /// requests arrive at t=0 (the paper's makespan experiments assume the
+    /// batch-arrival model of §4.2).
+    pub arrival_rate: f64,
+    /// Log-space sigma of the length jitter. 0 disables jitter.
+    pub length_sigma: f64,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for SynthOptions {
+    fn default() -> Self {
+        Self {
+            num_requests: 1000,
+            arrival_rate: 0.0,
+            length_sigma: 0.25,
+            seed: 0xEC0_1CE,
+        }
+    }
+}
+
+/// Generate a trace from a mixture. Requests are sorted by arrival time and
+/// ids are assigned in arrival order.
+pub fn synthesize_trace(mix: &TraceMix, opts: &SynthOptions) -> Trace {
+    let mut rng = Xoshiro256::seed_from_u64(opts.seed);
+    let mut requests = Vec::with_capacity(opts.num_requests);
+    let mut t = 0.0f64;
+    for _ in 0..opts.num_requests {
+        let widx = rng.weighted_index(&mix.ratios);
+        let w = WorkloadType::by_index(widx);
+        let (input, output) = jitter_lengths(&mut rng, w, opts.length_sigma);
+        let arrival = if opts.arrival_rate > 0.0 {
+            t += rng.exponential(opts.arrival_rate);
+            t
+        } else {
+            0.0
+        };
+        requests.push(Request {
+            id: 0,
+            arrival_s: arrival,
+            workload: w,
+            input_tokens: input,
+            output_tokens: output,
+        });
+    }
+    requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    Trace {
+        name: mix.name.clone(),
+        requests,
+    }
+}
+
+/// Log-normal jitter with the type mean preserved:
+/// if X ~ LogNormal(mu, sigma) then E[X] = exp(mu + sigma^2/2), so we set
+/// mu = ln(mean) - sigma^2/2.
+fn jitter_lengths(rng: &mut Xoshiro256, w: WorkloadType, sigma: f64) -> (u32, u32) {
+    if sigma <= 0.0 {
+        return (w.avg_input, w.avg_output);
+    }
+    let sample = |rng: &mut Xoshiro256, mean: f64| -> u32 {
+        let mu = mean.ln() - sigma * sigma / 2.0;
+        let x = rng.lognormal(mu, sigma);
+        (x.round() as u32).max(1)
+    };
+    (
+        sample(rng, w.avg_input as f64),
+        sample(rng, w.avg_output as f64),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TraceMix;
+
+    #[test]
+    fn counts_match_mixture() {
+        let mix = TraceMix::trace1();
+        let trace = synthesize_trace(
+            &mix,
+            &SynthOptions {
+                num_requests: 20_000,
+                ..Default::default()
+            },
+        );
+        let counts = trace.counts_per_type();
+        for i in 0..9 {
+            let frac = counts[i] as f64 / 20_000.0;
+            assert!(
+                (frac - mix.ratios[i]).abs() < 0.02,
+                "type {i}: frac {frac} vs ratio {}",
+                mix.ratios[i]
+            );
+        }
+    }
+
+    #[test]
+    fn mean_lengths_preserved_under_jitter() {
+        let mix = TraceMix::new("pure-type0", [1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let trace = synthesize_trace(
+            &mix,
+            &SynthOptions {
+                num_requests: 30_000,
+                length_sigma: 0.4,
+                ..Default::default()
+            },
+        );
+        let mean_in: f64 = trace
+            .requests
+            .iter()
+            .map(|r| r.input_tokens as f64)
+            .sum::<f64>()
+            / trace.len() as f64;
+        let mean_out: f64 = trace
+            .requests
+            .iter()
+            .map(|r| r.output_tokens as f64)
+            .sum::<f64>()
+            / trace.len() as f64;
+        assert!((mean_in / 2455.0 - 1.0).abs() < 0.03, "mean_in={mean_in}");
+        assert!((mean_out / 510.0 - 1.0).abs() < 0.03, "mean_out={mean_out}");
+    }
+
+    #[test]
+    fn poisson_arrival_rate() {
+        let mix = TraceMix::trace2();
+        let rate = 25.0;
+        let trace = synthesize_trace(
+            &mix,
+            &SynthOptions {
+                num_requests: 10_000,
+                arrival_rate: rate,
+                ..Default::default()
+            },
+        );
+        let measured = trace.len() as f64 / trace.span_s();
+        assert!(
+            (measured / rate - 1.0).abs() < 0.05,
+            "measured rate {measured}"
+        );
+        // Sorted arrivals, ids in order.
+        for w in trace.requests.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+            assert!(w[0].id < w[1].id);
+        }
+    }
+
+    #[test]
+    fn batch_arrivals_at_zero() {
+        let trace = synthesize_trace(
+            &TraceMix::trace3(),
+            &SynthOptions {
+                num_requests: 100,
+                arrival_rate: 0.0,
+                ..Default::default()
+            },
+        );
+        assert!(trace.requests.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let opts = SynthOptions {
+            num_requests: 500,
+            arrival_rate: 10.0,
+            ..Default::default()
+        };
+        let a = synthesize_trace(&TraceMix::trace1(), &opts);
+        let b = synthesize_trace(&TraceMix::trace1(), &opts);
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn zero_sigma_gives_exact_lengths() {
+        let trace = synthesize_trace(
+            &TraceMix::trace1(),
+            &SynthOptions {
+                num_requests: 200,
+                length_sigma: 0.0,
+                ..Default::default()
+            },
+        );
+        for r in &trace.requests {
+            assert_eq!(r.input_tokens, r.workload.avg_input);
+            assert_eq!(r.output_tokens, r.workload.avg_output);
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Property tests for the MILP substrate: the simplex against brute-force
+//! vertex enumeration on small LPs, and branch & bound against exhaustive
+//! search on small integer programs.
+
+use hetserve::milp::{solve, solve_milp, Cmp, Lp, LpResult, MilpOptions, MilpResult};
+use hetserve::util::proptest::{check, prop_assert, prop_assert_close, Gen};
+use hetserve::util::rng::Xoshiro256;
+
+/// Brute-force a bounded 2-variable LP on a fine grid (coarse optimality
+/// witness: the simplex optimum must be no worse than any grid point).
+fn grid_best(lp: &Lp, bound: f64) -> f64 {
+    let n = 60;
+    let mut best = f64::INFINITY;
+    for i in 0..=n {
+        for j in 0..=n {
+            let x = [bound * i as f64 / n as f64, bound * j as f64 / n as f64];
+            if lp.is_feasible(&x, 1e-9) {
+                let obj: f64 = lp.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+                best = best.min(obj);
+            }
+        }
+    }
+    best
+}
+
+#[test]
+fn simplex_beats_grid_search_on_random_2d_lps() {
+    let gen = Gen::opaque(|rng: &mut Xoshiro256| {
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, rng.range_f64(-2.0, 2.0));
+        lp.set_objective(1, rng.range_f64(-2.0, 2.0));
+        // Box constraints keep it bounded.
+        lp.add(vec![(0, 1.0)], Cmp::Le, 10.0);
+        lp.add(vec![(1, 1.0)], Cmp::Le, 10.0);
+        for _ in 0..rng.range_u64(1, 4) {
+            lp.add(
+                vec![(0, rng.range_f64(0.1, 2.0)), (1, rng.range_f64(0.1, 2.0))],
+                Cmp::Le,
+                rng.range_f64(2.0, 15.0),
+            );
+        }
+        lp
+    });
+    check(60, 0x51713C, gen, |lp| {
+        match solve(lp) {
+            LpResult::Optimal { x, objective } => {
+                prop_assert(lp.is_feasible(&x, 1e-6), "solution feasible")?;
+                let grid = grid_best(lp, 10.0);
+                prop_assert(
+                    objective <= grid + 1e-6,
+                    format!("simplex {objective} worse than grid {grid}"),
+                )
+            }
+            other => Err(format!("expected optimal, got {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn branch_bound_matches_exhaustive_on_small_ips() {
+    // Random small integer programs: max c·x, A x <= b, x in {0..4}^n.
+    let gen = Gen::opaque(|rng: &mut Xoshiro256| {
+        let n = 2 + rng.index(3); // 2..4 vars
+        let c: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 5.0).round()).collect();
+        let a: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 3.0).round()).collect();
+        let b = rng.range_f64(4.0, 12.0).round();
+        (c, a, b)
+    });
+    check(40, 0x1B4B, gen, |(c, a, b)| {
+        let n = c.len();
+        let mut lp = Lp::new(n);
+        for i in 0..n {
+            lp.set_objective(i, -c[i]); // maximise
+            lp.add(vec![(i, 1.0)], Cmp::Le, 4.0);
+        }
+        lp.add((0..n).map(|i| (i, a[i])).collect(), Cmp::Le, *b);
+        let ints: Vec<usize> = (0..n).collect();
+        let (res, _) = solve_milp(&lp, &ints, &MilpOptions::default());
+
+        // Exhaustive search over {0..4}^n.
+        let mut best = 0.0f64;
+        let mut idx = vec![0usize; n];
+        loop {
+            let w: f64 = idx.iter().enumerate().map(|(i, &v)| a[i] * v as f64).sum();
+            if w <= *b + 1e-9 {
+                let val: f64 = idx.iter().enumerate().map(|(i, &v)| c[i] * v as f64).sum();
+                best = best.max(val);
+            }
+            // Increment odometer.
+            let mut k = 0;
+            loop {
+                if k == n {
+                    break;
+                }
+                idx[k] += 1;
+                if idx[k] <= 4 {
+                    break;
+                }
+                idx[k] = 0;
+                k += 1;
+            }
+            if k == n {
+                break;
+            }
+        }
+
+        match res {
+            MilpResult::Optimal { objective, .. } => {
+                prop_assert_close(-objective, best, 1e-6, "milp vs exhaustive")
+            }
+            other => Err(format!("expected optimal, got {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn lp_relaxation_bounds_milp() {
+    // For a minimisation MILP, the LP relaxation is always ≤ the integer
+    // optimum.
+    let gen = Gen::opaque(|rng: &mut Xoshiro256| {
+        let n = 3;
+        let mut lp = Lp::new(n);
+        for i in 0..n {
+            lp.set_objective(i, rng.range_f64(0.5, 3.0));
+        }
+        for _ in 0..3 {
+            lp.add(
+                (0..n).map(|i| (i, rng.range_f64(0.2, 2.0))).collect(),
+                Cmp::Ge,
+                rng.range_f64(1.0, 6.0),
+            );
+        }
+        lp
+    });
+    check(40, 0xBB, gen, |lp| {
+        let relax = match solve(lp) {
+            LpResult::Optimal { objective, .. } => objective,
+            other => return Err(format!("relaxation not optimal: {other:?}")),
+        };
+        let ints: Vec<usize> = (0..lp.num_vars).collect();
+        match solve_milp(lp, &ints, &MilpOptions::default()).0 {
+            MilpResult::Optimal { objective, x } => {
+                prop_assert(
+                    objective >= relax - 1e-6,
+                    format!("integer {objective} below relaxation {relax}"),
+                )?;
+                prop_assert(
+                    x.iter().all(|v| (v - v.round()).abs() < 1e-6),
+                    "solution integral",
+                )
+            }
+            MilpResult::Infeasible => Ok(()), // relaxation feasible but IP not — fine
+            other => Err(format!("unexpected {other:?}")),
+        }
+    });
+}

@@ -1,0 +1,178 @@
+//! Integration: the full planning pipeline (profile → problem → plan →
+//! simulate) across traces, budgets, availabilities, and both models, with
+//! property-style invariants checked on every produced plan.
+
+use hetserve::cloud::{availability, Availability};
+use hetserve::perf_model::{ModelSpec, PerfModel};
+use hetserve::profiler::Profile;
+use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::SchedProblem;
+use hetserve::sim::{simulate_plan, SimOptions};
+use hetserve::util::proptest::{check, gen_u64, prop_assert, Gen};
+use hetserve::util::rng::Xoshiro256;
+use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix};
+
+fn opts() -> BinarySearchOptions {
+    BinarySearchOptions {
+        tolerance: 3.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn plans_valid_across_the_grid() {
+    let perf = PerfModel::default();
+    for model in [ModelSpec::llama3_8b(), ModelSpec::llama3_70b()] {
+        let profile = Profile::build(&model, &perf, &EnumOptions::default());
+        for (mix, avail_idx) in [(TraceMix::trace1(), 1usize), (TraceMix::trace3(), 4)] {
+            for budget in [15.0, 60.0] {
+                let p = SchedProblem::from_profile(
+                    &profile,
+                    &mix,
+                    1000.0,
+                    &availability(avail_idx),
+                    budget,
+                );
+                let (plan, _) = solve_binary_search(&p, &opts());
+                let plan = plan.unwrap_or_else(|| {
+                    panic!("no plan: {} {} b={budget}", model.name, mix.name)
+                });
+                plan.validate(&p, 1e-4).expect("plan invariants");
+                assert!(plan.makespan.is_finite() && plan.makespan > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn makespan_monotone_in_budget() {
+    // More budget can never make the optimal makespan worse (within solver
+    // tolerance). Property-tested over random budget pairs.
+    let perf = PerfModel::default();
+    let model = ModelSpec::llama3_70b();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let mix = TraceMix::trace2();
+    let avail = availability(2);
+
+    check(6, 0xB0DCE7, gen_u64(10, 50), |&lo| {
+        let hi = lo + 15;
+        let build = |b: f64| {
+            let p = SchedProblem::from_profile(&profile, &mix, 1000.0, &avail, b);
+            solve_binary_search(&p, &opts()).0.map(|pl| pl.makespan)
+        };
+        let (m_lo, m_hi) = (build(lo as f64), build((hi) as f64));
+        match (m_lo, m_hi) {
+            (Some(a), Some(b)) => prop_assert(
+                b <= a * 1.10 + 5.0,
+                format!("budget {lo}→{hi}: makespan {a} → {b}"),
+            ),
+            (None, _) => Ok(()), // infeasible at low budget is fine
+            (Some(_), None) => Err("higher budget became infeasible".into()),
+        }
+    });
+}
+
+#[test]
+fn more_availability_never_hurts() {
+    let perf = PerfModel::default();
+    let model = ModelSpec::llama3_70b();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let mix = TraceMix::trace1();
+    let solve_with = |avail: Availability| {
+        let p = SchedProblem::from_profile(&profile, &mix, 1000.0, &avail, 30.0);
+        solve_binary_search(&p, &opts()).0.map(|pl| pl.makespan)
+    };
+    let tight = solve_with(Availability::new([2, 2, 2, 2, 2, 2]));
+    let loose = solve_with(Availability::new([16, 16, 16, 16, 16, 16]));
+    match (tight, loose) {
+        (Some(a), Some(b)) => assert!(b <= a * 1.10, "loose {b} vs tight {a}"),
+        (None, Some(_)) => {}
+        other => panic!("unexpected: {other:?}"),
+    }
+}
+
+#[test]
+fn random_problems_never_produce_invalid_plans() {
+    // Fuzz the planner with random demands/budgets/availabilities; every
+    // returned plan must pass validation (or be None).
+    let perf = PerfModel::default();
+    let model = ModelSpec::llama3_70b();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+
+    let gen = Gen::opaque(move |rng: &mut Xoshiro256| {
+        let ratios = {
+            let mut r = [0.0f64; 9];
+            let mut sum = 0.0;
+            for v in r.iter_mut() {
+                *v = rng.range_f64(0.01, 1.0);
+                sum += *v;
+            }
+            for v in r.iter_mut() {
+                *v /= sum;
+            }
+            r
+        };
+        let avail: Vec<u32> = (0..6).map(|_| rng.range_u64(0, 12) as u32).collect();
+        let budget = rng.range_f64(5.0, 80.0);
+        let total = rng.range_f64(200.0, 3000.0);
+        (ratios, avail, budget, total)
+    });
+    check(10, 0xF422, gen, |(ratios, avail, budget, total)| {
+        let mix = TraceMix::new("fuzz", *ratios);
+        let p = SchedProblem::from_profile(
+            &profile,
+            &mix,
+            *total,
+            &Availability::new([avail[0], avail[1], avail[2], avail[3], avail[4], avail[5]]),
+            *budget,
+        );
+        match solve_binary_search(&p, &opts()).0 {
+            Some(plan) => {
+                plan.validate(&p, 1e-3).map_err(|e| format!("invalid plan: {e}"))?;
+                prop_assert(plan.makespan > 0.0, "positive makespan")
+            }
+            None => Ok(()), // infeasible is acceptable
+        }
+    });
+}
+
+#[test]
+fn simulator_agrees_with_planner_ordering() {
+    // If plan A has a much smaller planned makespan than plan B, the
+    // simulator should agree on the ordering.
+    let perf = PerfModel::default();
+    let model = ModelSpec::llama3_70b();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let mix = TraceMix::trace1();
+    let trace = synthesize_trace(
+        &mix,
+        &SynthOptions {
+            num_requests: 600,
+            arrival_rate: 0.0,
+            length_sigma: 0.15,
+            seed: 9,
+        },
+    );
+    let run = |budget: f64| {
+        let p = SchedProblem::from_profile(&profile, &mix, 600.0, &availability(1), budget);
+        let (plan, _) = solve_binary_search(&p, &opts());
+        let plan = plan.unwrap();
+        let res = simulate_plan(
+            &p,
+            &plan,
+            std::slice::from_ref(&model),
+            std::slice::from_ref(&trace),
+            &perf,
+            &SimOptions::default(),
+        );
+        (plan.makespan, res.makespan)
+    };
+    let (plan_lo, sim_lo) = run(12.0);
+    let (plan_hi, sim_hi) = run(60.0);
+    assert!(plan_hi < plan_lo);
+    assert!(
+        sim_hi < sim_lo,
+        "simulator disagrees: sim {sim_hi} vs {sim_lo}"
+    );
+}

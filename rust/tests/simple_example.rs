@@ -1,0 +1,112 @@
+//! Integration test: the paper's §4.2 / Appendix C worked example, end to
+//! end through the public API — the three cases' exact numbers and the
+//! optimality of the jointly-optimised plan.
+
+use hetserve::milp::MilpOptions;
+use hetserve::sched::binary_search::{
+    solve_binary_search, BinarySearchOptions, Feasibility,
+};
+use hetserve::sched::formulation::solve_direct;
+use hetserve::sched::{proportional_makespan, Candidate, SchedProblem};
+
+/// Build the toy instance from §4.2: three GPU types (2 each at 4/2/2 $/h),
+/// two workloads (λ = 80, 20), and the TP-merged config of Case 2.
+fn toy() -> SchedProblem {
+    let mk = |cost: f64, counts: Vec<u32>, h: Vec<f64>, label: &str| Candidate {
+        model: 0,
+        cost,
+        gpu_counts: counts,
+        h,
+        label: label.to_string(),
+        replica: None,
+    };
+    SchedProblem {
+        num_gpu_types: 3,
+        avail: vec![2, 2, 2],
+        budget: 8.0,
+        demands: vec![vec![80.0, 20.0]],
+        candidates: vec![
+            mk(4.0, vec![1, 0, 0], vec![1.0, 1.2], "t1"),
+            mk(2.0, vec![0, 1, 0], vec![0.9, 0.9], "t2"),
+            mk(2.0, vec![0, 0, 1], vec![0.3, 0.5], "t3"),
+            mk(4.0, vec![0, 2, 0], vec![2.4, 1.5], "t2-tp2"),
+        ],
+    }
+}
+
+#[test]
+fn case1_composition_numbers() {
+    let p = toy();
+    // Composition 1: 1×t1 + 1×t2 + 1×t3 → 44.05 s.
+    let c1 = proportional_makespan(&p, &[(0, 1), (1, 1), (2, 1)]);
+    assert!((c1 - 44.05).abs() < 0.05, "composition 1: {c1}");
+    // Composition 2: 1×t1 + 2×t2 → 35.24 s (20% speedup).
+    let c2 = proportional_makespan(&p, &[(0, 1), (1, 2)]);
+    assert!((c2 - 35.24).abs() < 0.05, "composition 2: {c2}");
+    assert!((c1 / c2 - 1.25).abs() < 0.01, "speedup {}", c1 / c2);
+}
+
+#[test]
+fn case2_deployment_number() {
+    let p = toy();
+    // TP on the two t2 GPUs: t1 + t2-tp2 → 30.94 s (≈14% better).
+    let c = proportional_makespan(&p, &[(0, 1), (3, 1)]);
+    assert!((c - 30.94).abs() < 0.05, "configuration 2: {c}");
+}
+
+#[test]
+fn case3_assignment_is_found_by_solver() {
+    let p = toy();
+    // The optimal workload-aware assignment on {t1, t2-tp2} gives
+    // ~28.43 s (the paper's hand-rounded 15%/85% split gives 28.67 s).
+    let (plan, _) = solve_direct(&p, &MilpOptions::default());
+    let plan = plan.expect("plan");
+    plan.validate(&p, 1e-6).unwrap();
+    assert!(
+        plan.makespan <= 28.68,
+        "solver should find ≤ paper's 28.67 s, got {}",
+        plan.makespan
+    );
+    assert!(plan.makespan >= 28.0, "impossibly good: {}", plan.makespan);
+    // It must use exactly the paper's composition: t1 + TP(2×t2).
+    assert!((plan.cost(&p) - 8.0).abs() < 1e-9);
+    let used = plan.gpus_used(&p);
+    assert_eq!(used, vec![1, 2, 0]);
+}
+
+#[test]
+fn binary_search_matches_direct_on_toy() {
+    let p = toy();
+    let (direct, _) = solve_direct(&p, &MilpOptions::default());
+    let direct = direct.unwrap();
+    for feas in [Feasibility::Exact, Feasibility::Knapsack] {
+        let (bs, _) = solve_binary_search(
+            &p,
+            &BinarySearchOptions {
+                tolerance: 0.05,
+                feasibility: feas,
+                ..Default::default()
+            },
+        );
+        let bs = bs.unwrap();
+        bs.validate(&p, 1e-4).unwrap();
+        assert!(
+            (bs.makespan - direct.makespan).abs() < 0.3,
+            "{feas:?}: bs {} vs direct {}",
+            bs.makespan,
+            direct.makespan
+        );
+    }
+}
+
+#[test]
+fn each_case_improves_on_the_previous() {
+    // The paper's narrative: 44.05 → 35.24 → 30.94 → ~28.4 s.
+    let p = toy();
+    let c1 = proportional_makespan(&p, &[(0, 1), (1, 1), (2, 1)]);
+    let c2 = proportional_makespan(&p, &[(0, 1), (1, 2)]);
+    let c3 = proportional_makespan(&p, &[(0, 1), (3, 1)]);
+    let (best, _) = solve_direct(&p, &MilpOptions::default());
+    let c4 = best.unwrap().makespan;
+    assert!(c1 > c2 && c2 > c3 && c3 > c4, "{c1} > {c2} > {c3} > {c4}");
+}
