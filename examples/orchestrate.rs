@@ -1,0 +1,110 @@
+//! Quickstart for the online replanning subsystem: stream a fluctuating
+//! GPU market, let the orchestrator adapt the serving plan epoch by epoch,
+//! and execute the resulting timeline in the time-varying simulator.
+//!
+//! Run: `cargo run --release --example orchestrate -- --seed 7 --epochs 6`
+//! Flags: --seed N (default 7)  --epochs N (default 6)
+//!        --budget B (default 30)  --strategy static|incremental|full|escalate
+
+use hetserve::cloud::MarketEventStream;
+use hetserve::orchestrator::{orchestrate, OrchestratorOptions, ReplanStrategy};
+use hetserve::perf_model::{ModelSpec, PerfModel};
+use hetserve::profiler::Profile;
+use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::SchedProblem;
+use hetserve::sim::{simulate_timeline, TimelineOptions};
+use hetserve::util::cli::Args;
+use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix};
+
+fn main() {
+    let args = Args::parse(&[]);
+    let seed = args.seed(7);
+    let epochs = args.epochs(6).max(1);
+    let budget = args.get_f64("budget", 30.0);
+    let strategy = ReplanStrategy::by_name(args.get_or("strategy", "escalate"))
+        .expect("unknown --strategy");
+    let tick_s = 900.0;
+    let rate = 2.0;
+
+    // 1. Profile once, as for one-shot planning.
+    let model = ModelSpec::llama3_8b();
+    let perf = PerfModel::default();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let mix = TraceMix::trace1();
+
+    // 2. Stream the market: availability + prices drift, spike, preempt.
+    let events: Vec<_> = MarketEventStream::new(seed, epochs, tick_s).collect();
+    let base = SchedProblem::from_profile(
+        &profile,
+        &mix,
+        rate * tick_s,
+        &events[0].avail,
+        budget,
+    );
+
+    // 3. Close the loop: one plan epoch per market event.
+    let report = orchestrate(
+        &base,
+        &events,
+        &OrchestratorOptions {
+            strategy,
+            ..Default::default()
+        },
+    )
+    .expect("no feasible plan for the initial market");
+    for e in &report.epochs {
+        println!(
+            "epoch {:>2} @ {:>6.0}s  drift {:.3}  plan {:>6.2} $/h  \
+             +{} / -{} replicas  migration {:.3} $  {}{}",
+            e.index,
+            e.start_s,
+            e.drift,
+            e.plan.cost(&e.problem),
+            e.diff.spun_up_replicas(),
+            e.diff.drained_replicas(),
+            e.migration.dollars,
+            if e.infeasible {
+                "infeasible (stale plan kept)"
+            } else if e.replanned {
+                "replanned"
+            } else {
+                "absorbed"
+            },
+            if e.escalated { " (escalated)" } else { "" },
+        );
+    }
+
+    // 4. Execute the timeline mid-trace: drains, spin-ups, SLO accounting.
+    let horizon_s = epochs as f64 * tick_s;
+    let trace = synthesize_trace(
+        &mix,
+        &SynthOptions {
+            num_requests: (rate * horizon_s) as usize,
+            arrival_rate: rate,
+            length_sigma: 0.2,
+            seed,
+        },
+    );
+    let steps = report.timeline_steps();
+    let result = simulate_timeline(
+        &steps,
+        std::slice::from_ref(&model),
+        std::slice::from_ref(&trace),
+        &perf,
+        &TimelineOptions {
+            seed,
+            ..Default::default()
+        },
+    );
+    println!(
+        "served {} requests across {} epochs: rental {:.2} $, migration {:.2} $, \
+         {} replica moves, SLO(120s) {:.1}%, p90 {:.1}s",
+        result.recorder.count(),
+        report.epochs.len(),
+        result.total_rental_usd,
+        report.total_migration.dollars,
+        result.transitions_applied,
+        result.slo_attainment(120.0) * 100.0,
+        result.recorder.latency_percentile(90.0),
+    );
+}

@@ -1,6 +1,7 @@
 //! Cloud GPU market model: real-time availability snapshots (Table 3),
-//! a Vast.ai-style fluctuating availability generator (Figure 2), and
-//! rental-cost accounting.
+//! a Vast.ai-style fluctuating availability generator (Figure 2), per-type
+//! price books, a timestamped market *event stream* feeding the online
+//! replanner ([`crate::orchestrator`]), and rental-cost accounting.
 
 use crate::catalog::{GpuSpec, GpuType};
 use crate::util::json::Json;
@@ -30,12 +31,23 @@ impl Availability {
         self.counts.iter().sum()
     }
 
+    /// Sentinel per-type count used by [`Availability::unlimited`]. Kept
+    /// far below `u32::MAX` so `d * count` arithmetic cannot wrap, and
+    /// detected explicitly by every cost/budget sanity check.
+    pub const UNLIMITED: u32 = u32::MAX / 4;
+
     /// Unlimited availability — used for the paper's homogeneous baselines,
     /// which assume an unbounded pool of the chosen GPU type (§5.1/App K).
     pub fn unlimited() -> Self {
         Self {
-            counts: [u32::MAX / 4; 6],
+            counts: [Self::UNLIMITED; 6],
         }
+    }
+
+    /// True when any pool carries the [`Self::UNLIMITED`] sentinel — such
+    /// snapshots have no meaningful aggregate rental cost.
+    pub fn is_unlimited(&self) -> bool {
+        self.counts.iter().any(|&c| c >= Self::UNLIMITED)
     }
 
     /// Availability restricted to a single GPU type (homogeneous market).
@@ -46,12 +58,29 @@ impl Availability {
     }
 
     /// Total $/h if every available GPU were rented (an upper bound used for
-    /// budget sanity checks).
+    /// budget sanity checks). Unlimited pools are treated explicitly: the
+    /// sentinel count would otherwise turn into ~10⁹-dollar figures, so the
+    /// bound is reported as `f64::INFINITY` instead.
     pub fn full_rental_cost(&self) -> f64 {
+        self.full_rental_cost_at(&PriceBook::base())
+    }
+
+    /// [`Self::full_rental_cost`] under a fluctuating price book.
+    pub fn full_rental_cost_at(&self, prices: &PriceBook) -> f64 {
+        if self.is_unlimited() {
+            return f64::INFINITY;
+        }
         GpuType::ALL
             .iter()
-            .map(|&g| self.of(g) as f64 * GpuSpec::of(g).price_per_hour)
+            .map(|&g| self.of(g) as f64 * prices.of(g))
             .sum()
+    }
+
+    /// Budget actually spendable on this pool: `budget` clipped by the full
+    /// rental cost. For unlimited pools this is just `budget` (the clip is
+    /// +∞), never a sentinel-driven absurd figure.
+    pub fn budget_cap(&self, budget: f64) -> f64 {
+        budget.min(self.full_rental_cost())
     }
 
     pub fn to_json(&self) -> Json {
@@ -152,6 +181,190 @@ impl MarketSim {
     }
 }
 
+/// Per-type rental prices in $/h, indexed by `GpuType::index()`. The static
+/// Table 1 prices are the [`PriceBook::base`]; the market event stream
+/// evolves multipliers on top of them (Vast.ai-style repricing).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PriceBook {
+    pub per_hour: [f64; 6],
+}
+
+impl PriceBook {
+    /// Table 1 list prices.
+    pub fn base() -> Self {
+        let mut per_hour = [0.0f64; 6];
+        for &g in &GpuType::ALL {
+            per_hour[g.index()] = GpuSpec::of(g).price_per_hour;
+        }
+        Self { per_hour }
+    }
+
+    pub fn of(&self, gpu: GpuType) -> f64 {
+        self.per_hour[gpu.index()]
+    }
+
+    /// Hourly price of a composition (GPU counts per type).
+    pub fn composition_cost(&self, counts: &[u32]) -> f64 {
+        counts
+            .iter()
+            .zip(&self.per_hour)
+            .map(|(&c, &p)| c as f64 * p)
+            .sum()
+    }
+
+    /// Aggregate relative price deviation from the base book (mean of
+    /// |p/p_base − 1| across types) — the price half of the replanner's
+    /// drift metric.
+    pub fn deviation_from_base(&self) -> f64 {
+        let base = Self::base();
+        GpuType::ALL
+            .iter()
+            .map(|&g| (self.of(g) / base.of(g) - 1.0).abs())
+            .sum::<f64>()
+            / 6.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            GpuType::ALL
+                .iter()
+                .map(|&g| (g.name().to_string(), Json::Num(self.of(g))))
+                .collect(),
+        )
+    }
+}
+
+/// What changed in this market tick (coarse classification used by the
+/// orchestrator's logging and by strategy escalation heuristics).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MarketEventKind {
+    /// Ordinary mean-reverting drift.
+    Drift,
+    /// Spot-style preemption: a type's pool collapsed (lost ≥ half of the
+    /// previous count and at least 4 GPUs).
+    Preemption { gpu: GpuType, lost: u32 },
+    /// A sudden price spike on one type.
+    PriceSpike { gpu: GpuType, factor: f64 },
+}
+
+/// One timestamped market observation: the availability snapshot and the
+/// price book in force from `t_s` until the next event.
+#[derive(Clone, Debug)]
+pub struct MarketEvent {
+    /// Simulated time of the observation, seconds from stream start.
+    pub t_s: f64,
+    pub avail: Availability,
+    pub prices: PriceBook,
+    pub kind: MarketEventKind,
+}
+
+/// Iterator of [`MarketEvent`]s: evolves availability through [`MarketSim`]
+/// and prices through a mean-reverting multiplier walk with occasional
+/// spikes. Fully deterministic from the seed — every orchestrator bench and
+/// test replays the exact same market.
+#[derive(Clone, Debug)]
+pub struct MarketEventStream {
+    sim: MarketSim,
+    price_rng: Xoshiro256,
+    /// Price multiplier per type over the Table 1 base.
+    multipliers: [f64; 6],
+    /// Probability of a price spike per type per tick.
+    spike_prob: f64,
+    tick_s: f64,
+    t_s: f64,
+    remaining: usize,
+    prev: Option<Availability>,
+}
+
+impl MarketEventStream {
+    /// `ticks` events at `tick_s`-second spacing (e.g. 96 × 900 s = 24 h of
+    /// 15-minute ticks), first event at t = 0.
+    pub fn new(seed: u64, ticks: usize, tick_s: f64) -> Self {
+        Self {
+            sim: MarketSim::default_market(seed),
+            price_rng: Xoshiro256::seed_from_u64(seed ^ 0x9A1C_E5EE),
+            multipliers: [1.0; 6],
+            spike_prob: 0.03,
+            tick_s,
+            t_s: 0.0,
+            remaining: ticks,
+            prev: None,
+        }
+    }
+
+    /// Total simulated horizon covered by the remaining events, seconds.
+    pub fn horizon_s(&self) -> f64 {
+        self.remaining as f64 * self.tick_s
+    }
+}
+
+impl Iterator for MarketEventStream {
+    type Item = MarketEvent;
+
+    fn next(&mut self) -> Option<MarketEvent> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let avail = self.sim.step();
+
+        // Price walk: spike with small probability, otherwise mean-revert
+        // toward the list price with mild noise.
+        let mut spiked: Option<(GpuType, f64)> = None;
+        for i in 0..6 {
+            if self.price_rng.bernoulli(self.spike_prob) {
+                let factor = self.price_rng.range_f64(1.5, 3.0);
+                let before = self.multipliers[i];
+                self.multipliers[i] = (before * factor).min(4.0);
+                // Report the factor actually applied (the 4.0 ceiling can
+                // clip the drawn one).
+                let applied = self.multipliers[i] / before;
+                if spiked.is_none() && applied > 1.0 + 1e-9 {
+                    spiked = Some((GpuType::ALL[i], applied));
+                }
+            } else {
+                let noise = 0.03 * self.price_rng.normal();
+                self.multipliers[i] += 0.25 * (1.0 - self.multipliers[i]) + noise;
+                self.multipliers[i] = self.multipliers[i].clamp(0.5, 4.0);
+            }
+        }
+        let mut prices = PriceBook::base();
+        for i in 0..6 {
+            prices.per_hour[i] *= self.multipliers[i];
+        }
+
+        // Classify: the largest pool collapse wins, then price spikes.
+        let mut kind = MarketEventKind::Drift;
+        if let Some(prev) = self.prev {
+            let mut worst: Option<(GpuType, u32)> = None;
+            for &g in &GpuType::ALL {
+                let before = prev.of(g);
+                let now = avail.of(g);
+                let lost = before.saturating_sub(now);
+                if lost * 2 >= before && lost >= 4 && worst.map(|(_, l)| lost > l).unwrap_or(true)
+                {
+                    worst = Some((g, lost));
+                }
+            }
+            if let Some((gpu, lost)) = worst {
+                kind = MarketEventKind::Preemption { gpu, lost };
+            } else if let Some((gpu, factor)) = spiked {
+                kind = MarketEventKind::PriceSpike { gpu, factor };
+            }
+        }
+        self.prev = Some(avail);
+
+        let t_s = self.t_s;
+        self.t_s += self.tick_s;
+        Some(MarketEvent {
+            t_s,
+            avail,
+            prices,
+            kind,
+        })
+    }
+}
+
 /// Cost ledger for a rented composition.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct RentalCost {
@@ -249,5 +462,87 @@ mod tests {
         assert_eq!(a.of(GpuType::H100), 20);
         assert_eq!(a.total(), 20);
         assert!(Availability::unlimited().of(GpuType::A40) > 1_000_000);
+    }
+
+    #[test]
+    fn unlimited_pool_cost_is_explicit_not_sentinel_dollars() {
+        // Regression: the sentinel count used to flow straight into
+        // full_rental_cost(), yielding ~$4×10⁹/h "budget bounds".
+        let u = Availability::unlimited();
+        assert!(u.is_unlimited());
+        assert!(u.full_rental_cost().is_infinite());
+        assert!(u.full_rental_cost_at(&PriceBook::base()).is_infinite());
+        // Budget sanity checks must pass budgets through unchanged.
+        assert_eq!(u.budget_cap(30.0), 30.0);
+        // Finite pools still clip.
+        let a = availability(1);
+        assert!(!a.is_unlimited());
+        assert!((a.budget_cap(1e9) - a.full_rental_cost()).abs() < 1e-9);
+        assert_eq!(a.budget_cap(10.0), 10.0);
+        // A single sentinel pool is enough to trip the check.
+        let mut partial = availability(1);
+        partial.set(GpuType::A40, Availability::UNLIMITED);
+        assert!(partial.is_unlimited());
+        assert!(partial.full_rental_cost().is_infinite());
+    }
+
+    #[test]
+    fn price_book_base_matches_table1() {
+        let p = PriceBook::base();
+        assert!((p.of(GpuType::H100) - 2.99).abs() < 1e-12);
+        assert!((p.of(GpuType::Rtx4090) - 0.53).abs() < 1e-12);
+        // composition_cost agrees with RentalCost::per_hour.
+        let mut r = RentalCost::default();
+        r.add(GpuType::H100, 2);
+        r.add(GpuType::A40, 4);
+        assert!((p.composition_cost(&r.rented) - r.per_hour()).abs() < 1e-12);
+        assert!(p.deviation_from_base().abs() < 1e-12);
+    }
+
+    #[test]
+    fn market_event_stream_deterministic_and_timestamped() {
+        let a: Vec<MarketEvent> = MarketEventStream::new(7, 20, 900.0).collect();
+        let b: Vec<MarketEvent> = MarketEventStream::new(7, 20, 900.0).collect();
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.avail, y.avail);
+            assert_eq!(x.prices, y.prices);
+            assert_eq!(x.kind, y.kind);
+        }
+        for (i, e) in a.iter().enumerate() {
+            assert!((e.t_s - i as f64 * 900.0).abs() < 1e-9);
+            for &g in &GpuType::ALL {
+                let p = e.prices.of(g);
+                let base = PriceBook::base().of(g);
+                assert!(p >= 0.5 * base - 1e-9 && p <= 4.0 * base + 1e-9, "price {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn market_event_stream_produces_disruptions() {
+        // Over a long horizon the stream must contain preemptions and price
+        // spikes — the whole point of the replanning subsystem.
+        let events: Vec<MarketEvent> = MarketEventStream::new(11, 400, 900.0).collect();
+        let preemptions = events
+            .iter()
+            .filter(|e| matches!(e.kind, MarketEventKind::Preemption { .. }))
+            .count();
+        let spikes = events
+            .iter()
+            .filter(|e| matches!(e.kind, MarketEventKind::PriceSpike { .. }))
+            .count();
+        assert!(preemptions > 0, "no preemption in 400 ticks");
+        assert!(spikes > 0, "no price spike in 400 ticks");
+        // Preemption metadata is consistent with the snapshots.
+        let mut prev: Option<Availability> = None;
+        for e in &events {
+            if let MarketEventKind::Preemption { gpu, lost } = e.kind {
+                let before = prev.expect("preemption cannot be the first event").of(gpu);
+                assert_eq!(before - e.avail.of(gpu), lost);
+                assert!(lost >= 4);
+            }
+            prev = Some(e.avail);
+        }
     }
 }

@@ -14,7 +14,10 @@
 //! * [`milp`] — from-scratch simplex + branch-and-bound MILP solver
 //! * [`sched`] — the paper's scheduling algorithm (§4.3, App D–G)
 //! * [`baselines`] — homogeneous / HexGen-like / ablation planners
-//! * [`sim`] — discrete-event cluster simulator executing serving plans
+//! * [`orchestrator`] — online replanning over the fluctuating market:
+//!   plan-diff engine, incremental/escalating replanner, epoch timeline
+//! * [`sim`] — discrete-event cluster simulator executing serving plans,
+//!   including time-varying timelines with mid-trace plan transitions
 //! * [`runtime`] — PJRT engine: loads AOT HLO artifacts, paged KV cache
 //! * [`coordinator`] — the real serving path: router, batcher, workers
 
@@ -24,6 +27,7 @@ pub mod cloud;
 pub mod coordinator;
 pub mod metrics;
 pub mod milp;
+pub mod orchestrator;
 pub mod perf_model;
 pub mod profiler;
 pub mod runtime;

@@ -1,24 +1,26 @@
 //! `hetserve` — the leader binary: plan, simulate, profile, and serve.
 //!
 //! Subcommands:
-//!   plan      — compute the cost-optimal serving plan (§4)
-//!   simulate  — run a plan through the discrete-event cluster simulator
-//!   serve     — real serving on the PJRT engine (AOT artifacts required)
-//!   profile   — print the h_{c,w} throughput table (one-time profiling)
-//!   market    — print a Figure 2-style availability series
-//!   help      — this text
+//!   plan        — compute the cost-optimal serving plan (§4)
+//!   simulate    — run a plan through the discrete-event cluster simulator
+//!   orchestrate — online replanning over a fluctuating market + timeline sim
+//!   serve       — real serving on the PJRT engine (AOT artifacts required)
+//!   profile     — print the h_{c,w} throughput table (one-time profiling)
+//!   market      — print a Figure 2-style availability series
+//!   help        — this text
 
 use hetserve::baselines::homogeneous_plan;
 use hetserve::catalog::GpuType;
-use hetserve::cloud::{availability, MarketSim};
+use hetserve::cloud::{availability, MarketEventKind, MarketEventStream, MarketSim};
 use hetserve::coordinator::{serve, synth_requests, RouterPolicy, ServerOptions};
+use hetserve::orchestrator::{orchestrate, OrchestratorOptions, ReplanStrategy};
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
 use hetserve::runtime::{default_artifacts_dir, Engine};
 use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions, Feasibility};
 use hetserve::sched::enumerate::EnumOptions;
 use hetserve::sched::SchedProblem;
-use hetserve::sim::{simulate_plan, SimOptions};
+use hetserve::sim::{simulate_plan, simulate_timeline, SimOptions, TimelineOptions};
 use hetserve::util::bench::{cell, Table};
 use hetserve::util::cli::Args;
 use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix, WorkloadType};
@@ -28,11 +30,14 @@ hetserve — cost-efficient LLM serving over heterogeneous GPUs
 
 USAGE: hetserve <subcommand> [--options]
 
-  plan      --model 70b --trace trace1 --avail 1 --budget 30 [--exact] [--requests 2000]
-  simulate  (plan options) [--seed N]
-  serve     --requests 48 --replicas 2 --router jsq|rr [--arrival-rate RPS]
-  profile   --model 70b
-  market    --ticks 96 --seed 7
+  plan        --model 70b --trace trace1 --avail 1 --budget 30 [--exact] [--requests 2000]
+  simulate    (plan options) [--seed N]
+  orchestrate --model 8b --trace trace1 --budget 30 --epochs 8 --seed 7
+              [--strategy static|incremental|full|escalate[:T]]
+              [--tick-s 900] [--rate RPS] [--slo SECONDS]
+  serve       --requests 48 --replicas 2 --router jsq|rr [--arrival-rate RPS]
+  profile     --model 70b
+  market      --ticks 96 --seed 7
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -43,6 +48,7 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand() {
         Some("plan") => cmd_plan(&args, false),
         Some("simulate") => cmd_plan(&args, true),
+        Some("orchestrate") => cmd_orchestrate(&args),
         Some("serve") => cmd_serve(&args),
         Some("profile") => cmd_profile(&args),
         Some("market") => cmd_market(&args),
@@ -146,6 +152,127 @@ fn cmd_plan(args: &Args, run_sim: bool) -> anyhow::Result<()> {
             result.mean_utilization * 100.0
         );
     }
+    Ok(())
+}
+
+fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
+    let model = ModelSpec::by_name(args.get_or("model", "8b")).expect("unknown --model");
+    let perf = PerfModel::default();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let mix = TraceMix::by_name(args.get_or("trace", "trace1")).expect("unknown --trace");
+    let budget = args.get_f64("budget", 30.0);
+    let epochs = args.epochs(8).max(1);
+    let seed = args.seed(7);
+    let tick_s = args.get_f64("tick-s", 900.0);
+    let rate = args.get_f64("rate", 2.0);
+    let slo_s = args.get_f64("slo", 120.0);
+    let strategy = ReplanStrategy::by_name(args.get_or("strategy", "escalate"))
+        .expect("unknown --strategy (static|incremental|full|escalate[:T])");
+
+    // The market: a deterministic Vast.ai-style event stream.
+    let events: Vec<_> = MarketEventStream::new(seed, epochs, tick_s).collect();
+    let horizon_s = epochs as f64 * tick_s;
+    let base = SchedProblem::from_profile(
+        &profile,
+        &mix,
+        rate * tick_s, // demand per epoch
+        &events[0].avail,
+        budget,
+    );
+
+    let opts = OrchestratorOptions {
+        strategy,
+        ..Default::default()
+    };
+    let report = orchestrate(&base, &events, &opts)
+        .ok_or_else(|| anyhow::anyhow!("no feasible plan for the initial market"))?;
+
+    // Execute the epoch timeline in the simulator against one continuous
+    // Poisson trace spanning the horizon.
+    let trace = synthesize_trace(
+        &mix,
+        &SynthOptions {
+            num_requests: (rate * horizon_s) as usize,
+            arrival_rate: rate,
+            length_sigma: 0.2,
+            seed,
+        },
+    );
+    let steps = report.timeline_steps();
+    let result = simulate_timeline(
+        &steps,
+        std::slice::from_ref(&model),
+        std::slice::from_ref(&trace),
+        &perf,
+        &TimelineOptions {
+            seed,
+            slo_latency_s: slo_s,
+            ..Default::default()
+        },
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "orchestrate {} on {} — {} strategy, {} epochs × {:.0}s",
+            model.name,
+            mix.name,
+            opts.strategy.name(),
+            epochs,
+            tick_s
+        ),
+        &[
+            "epoch", "t", "event", "drift", "plan $/h", "migr $", "arrivals", "SLO %", "p90 s",
+            "rent $",
+        ],
+    );
+    for (e, s) in report.epochs.iter().zip(&result.epochs) {
+        let event = match e.event_kind {
+            MarketEventKind::Drift => "drift".to_string(),
+            MarketEventKind::Preemption { gpu, lost } => {
+                format!("preempt {}x{}", lost, gpu.name())
+            }
+            MarketEventKind::PriceSpike { gpu, factor } => {
+                format!("spike {} x{:.1}", gpu.name(), factor)
+            }
+        };
+        t.row(vec![
+            format!(
+                "{}{}{}",
+                e.index,
+                if e.infeasible {
+                    " (infeasible)"
+                } else if e.replanned {
+                    ""
+                } else {
+                    " (absorbed)"
+                },
+                if e.escalated { " (escalated)" } else { "" }
+            ),
+            format!("{:.0}", e.start_s),
+            event,
+            cell(e.drift),
+            cell(e.plan.cost(&e.problem)),
+            cell(e.migration.dollars),
+            s.arrivals.to_string(),
+            format!("{:.1}", s.slo_attainment * 100.0),
+            cell(s.p90_s),
+            cell(s.rental_usd),
+        ]);
+    }
+    t.print();
+    println!(
+        "totals: rental {:.2} $, migration {:.2} $, {} replans ({} escalations), \
+         {} plan transitions, {} replica moves, SLO {:.1}% at {:.0}s, makespan {:.0}s",
+        result.total_rental_usd,
+        report.total_migration.dollars,
+        report.replans,
+        report.escalations,
+        report.transitions,
+        result.transitions_applied,
+        result.slo_attainment(slo_s) * 100.0,
+        slo_s,
+        result.makespan
+    );
     Ok(())
 }
 

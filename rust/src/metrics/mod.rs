@@ -63,6 +63,20 @@ impl LatencyRecorder {
     pub fn merge(&mut self, other: &LatencyRecorder) {
         self.samples.extend_from_slice(&other.samples);
     }
+
+    /// Fraction of recorded requests whose latency is within `slo_s` (SLO
+    /// attainment). 1.0 for an empty recorder — no request missed the SLO.
+    pub fn slo_attainment(&self, slo_s: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        let within = self
+            .samples
+            .iter()
+            .filter(|&&(_, l)| l <= slo_s)
+            .count();
+        within as f64 / self.samples.len() as f64
+    }
 }
 
 /// Tracks busy time for utilization reporting.
@@ -104,6 +118,18 @@ mod tests {
         let grid = r.percentile_grid();
         assert_eq!(grid.len(), 20);
         assert_eq!(grid[19].0, 100.0);
+    }
+
+    #[test]
+    fn slo_attainment_counts_within_threshold() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=10 {
+            r.record(i as f64, i as f64); // latencies 1..=10
+        }
+        assert!((r.slo_attainment(5.0) - 0.5).abs() < 1e-12);
+        assert_eq!(r.slo_attainment(0.5), 0.0);
+        assert_eq!(r.slo_attainment(100.0), 1.0);
+        assert_eq!(LatencyRecorder::new().slo_attainment(1.0), 1.0);
     }
 
     #[test]

@@ -1,0 +1,414 @@
+//! Plan-diff engine: the minimal migration between two serving plans.
+//!
+//! Replanning after a market event produces a *new* [`ServingPlan`]; the
+//! cluster is still running the *old* one. The diff decomposes the
+//! transition into replica-level actions — keep, spin up, drain, or
+//! re-parallelize in place — and prices the migration with a simple
+//! downtime/dollar model. ThunderServe's observation motivates the split:
+//! most of a replan's benefit comes from cheap incremental moves, so the
+//! orchestrator must know exactly how much of the incumbent survives.
+
+use crate::sched::{SchedProblem, ServingPlan};
+
+/// Aggregate replica count per candidate index for a plan.
+pub fn replica_counts(p: &SchedProblem, plan: &ServingPlan) -> Vec<u32> {
+    let mut y = vec![0u32; p.candidates.len()];
+    for e in &plan.entries {
+        y[e.candidate] += e.replicas;
+    }
+    y
+}
+
+/// One replica-level migration action.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MigrationAction {
+    /// Replicas present in both plans: keep serving untouched.
+    Keep { candidate: usize, replicas: u32 },
+    /// New replicas: rent GPUs, load weights, then join routing.
+    SpinUp { candidate: usize, replicas: u32 },
+    /// Retired replicas: stop admitting, finish in-flight work, release.
+    Drain { candidate: usize, replicas: u32 },
+    /// Same GPU composition re-sharded into a different TP/PP layout: the
+    /// rented GPUs stay, only the weights are re-partitioned in place.
+    Reparallelize {
+        from: usize,
+        to: usize,
+        replicas: u32,
+    },
+}
+
+/// Time/price constants of a plan transition.
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationCostModel {
+    /// Provision + weight-load time for a new replica, seconds.
+    pub spin_up_s: f64,
+    /// Time for a retiring replica to finish its in-flight batch, seconds.
+    pub drain_s: f64,
+    /// In-place re-shard (weights redistributed over the same GPUs), seconds.
+    pub reshard_s: f64,
+}
+
+impl Default for MigrationCostModel {
+    fn default() -> Self {
+        Self {
+            spin_up_s: 180.0,
+            drain_s: 30.0,
+            reshard_s: 60.0,
+        }
+    }
+}
+
+/// Priced migration: serving capacity lost and dollars paid for GPUs that
+/// are rented but not serving during the transition.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MigrationCost {
+    /// Replica-seconds of capacity offline during the transition.
+    pub downtime_replica_s: f64,
+    /// Dollars spent on non-serving rented GPUs.
+    pub dollars: f64,
+}
+
+impl MigrationCost {
+    pub fn add(&mut self, other: &MigrationCost) {
+        self.downtime_replica_s += other.downtime_replica_s;
+        self.dollars += other.dollars;
+    }
+}
+
+/// The minimal migration between two plans over the same candidate set.
+#[derive(Clone, Debug, Default)]
+pub struct PlanDiff {
+    pub actions: Vec<MigrationAction>,
+}
+
+impl PlanDiff {
+    /// Diff `old → new`. Both plans must index the same candidate list of
+    /// `p` (the orchestrator re-prices candidates in place, preserving
+    /// order, so this holds across epochs).
+    pub fn between(p: &SchedProblem, old: &ServingPlan, new: &ServingPlan) -> PlanDiff {
+        let y_old = replica_counts(p, old);
+        let y_new = replica_counts(p, new);
+        let n = p.candidates.len();
+        let mut keep = vec![0u32; n];
+        let mut up = vec![0u32; n];
+        let mut down = vec![0u32; n];
+        for ci in 0..n {
+            keep[ci] = y_old[ci].min(y_new[ci]);
+            up[ci] = y_new[ci].saturating_sub(y_old[ci]);
+            down[ci] = y_old[ci].saturating_sub(y_new[ci]);
+        }
+
+        let mut actions = Vec::new();
+        // Pair surplus drains with spin-ups over identical GPU compositions
+        // of the *same model* first: those transitions keep the rented GPUs
+        // and the loaded weights, and only re-shard.
+        for ci in 0..n {
+            if down[ci] == 0 {
+                continue;
+            }
+            for cj in 0..n {
+                if ci == cj || up[cj] == 0 {
+                    continue;
+                }
+                if p.candidates[ci].model == p.candidates[cj].model
+                    && p.candidates[ci].gpu_counts == p.candidates[cj].gpu_counts
+                {
+                    let moved = down[ci].min(up[cj]);
+                    actions.push(MigrationAction::Reparallelize {
+                        from: ci,
+                        to: cj,
+                        replicas: moved,
+                    });
+                    down[ci] -= moved;
+                    up[cj] -= moved;
+                    if down[ci] == 0 {
+                        break;
+                    }
+                }
+            }
+        }
+        for ci in 0..n {
+            if keep[ci] > 0 {
+                actions.push(MigrationAction::Keep {
+                    candidate: ci,
+                    replicas: keep[ci],
+                });
+            }
+            if up[ci] > 0 {
+                actions.push(MigrationAction::SpinUp {
+                    candidate: ci,
+                    replicas: up[ci],
+                });
+            }
+            if down[ci] > 0 {
+                actions.push(MigrationAction::Drain {
+                    candidate: ci,
+                    replicas: down[ci],
+                });
+            }
+        }
+        PlanDiff { actions }
+    }
+
+    /// True when the transition moves nothing (only `Keep` actions).
+    pub fn is_empty(&self) -> bool {
+        self.actions
+            .iter()
+            .all(|a| matches!(a, MigrationAction::Keep { .. }))
+    }
+
+    /// Apply the diff to `old`'s replica set, returning the per-candidate
+    /// replica counts after migration. By construction this equals the new
+    /// plan's counts — the property tests pin that invariant.
+    pub fn apply_to(&self, p: &SchedProblem, old: &ServingPlan) -> Vec<u32> {
+        let mut y = replica_counts(p, old);
+        for a in &self.actions {
+            match *a {
+                MigrationAction::Keep { .. } => {}
+                MigrationAction::SpinUp {
+                    candidate,
+                    replicas,
+                } => y[candidate] += replicas,
+                MigrationAction::Drain {
+                    candidate,
+                    replicas,
+                } => y[candidate] -= replicas.min(y[candidate]),
+                MigrationAction::Reparallelize { from, to, replicas } => {
+                    y[from] -= replicas.min(y[from]);
+                    y[to] += replicas;
+                }
+            }
+        }
+        y
+    }
+
+    pub fn kept_replicas(&self) -> u32 {
+        self.count(|a| matches!(a, MigrationAction::Keep { .. }))
+    }
+    pub fn spun_up_replicas(&self) -> u32 {
+        self.count(|a| matches!(a, MigrationAction::SpinUp { .. }))
+    }
+    pub fn drained_replicas(&self) -> u32 {
+        self.count(|a| matches!(a, MigrationAction::Drain { .. }))
+    }
+    pub fn reparallelized_replicas(&self) -> u32 {
+        self.count(|a| matches!(a, MigrationAction::Reparallelize { .. }))
+    }
+
+    fn count(&self, pred: impl Fn(&MigrationAction) -> bool) -> u32 {
+        self.actions
+            .iter()
+            .filter(|&a| pred(a))
+            .map(|a| match *a {
+                MigrationAction::Keep { replicas, .. }
+                | MigrationAction::SpinUp { replicas, .. }
+                | MigrationAction::Drain { replicas, .. }
+                | MigrationAction::Reparallelize { replicas, .. } => replicas,
+            })
+            .sum()
+    }
+
+    /// Price the migration: downtime per moved replica, and dollars for
+    /// GPUs rented while not serving (spin-up warms at the new config's
+    /// price, drains bleed at the old config's price, re-shards pause the
+    /// same GPUs briefly).
+    pub fn migration_cost(&self, p: &SchedProblem, m: &MigrationCostModel) -> MigrationCost {
+        let mut cost = MigrationCost::default();
+        for a in &self.actions {
+            match *a {
+                MigrationAction::Keep { .. } => {}
+                MigrationAction::SpinUp {
+                    candidate,
+                    replicas,
+                } => {
+                    let r = replicas as f64;
+                    cost.downtime_replica_s += r * m.spin_up_s;
+                    cost.dollars += r * p.candidates[candidate].cost * m.spin_up_s / 3600.0;
+                }
+                MigrationAction::Drain {
+                    candidate,
+                    replicas,
+                } => {
+                    let r = replicas as f64;
+                    cost.downtime_replica_s += r * m.drain_s;
+                    cost.dollars += r * p.candidates[candidate].cost * m.drain_s / 3600.0;
+                }
+                MigrationAction::Reparallelize { to, replicas, .. } => {
+                    let r = replicas as f64;
+                    cost.downtime_replica_s += r * m.reshard_s;
+                    cost.dollars += r * p.candidates[to].cost * m.reshard_s / 3600.0;
+                }
+            }
+        }
+        cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::toy::simple_example;
+    use crate::sched::{Candidate, PlanEntry};
+    use crate::util::proptest::{check, prop_assert, Gen};
+    use crate::util::rng::Xoshiro256;
+
+    fn plan_from_y(p: &SchedProblem, y: &[u32]) -> ServingPlan {
+        let nw = p.demands.iter().map(|d| d.len()).max().unwrap_or(0);
+        let entries = y
+            .iter()
+            .enumerate()
+            .filter(|&(_, &k)| k > 0)
+            .map(|(ci, &k)| PlanEntry {
+                candidate: ci,
+                replicas: k,
+                fractions: vec![0.0; nw],
+            })
+            .collect();
+        ServingPlan {
+            entries,
+            makespan: 0.0,
+        }
+    }
+
+    fn gen_y_pair() -> Gen<(Vec<u32>, Vec<u32>)> {
+        fn mk(rng: &mut Xoshiro256) -> Vec<u32> {
+            (0..4).map(|_| rng.range_u64(0, 3) as u32).collect()
+        }
+        Gen::opaque(|rng| (mk(rng), mk(rng)))
+    }
+
+    #[test]
+    fn prop_diff_of_identical_plans_is_empty() {
+        let p = simple_example();
+        check(128, 0xD1FF_0001, gen_y_pair(), |(ya, _)| {
+            let a = plan_from_y(&p, ya);
+            let d = PlanDiff::between(&p, &a, &a);
+            prop_assert(d.is_empty(), "diff(a, a) not empty")?;
+            prop_assert(
+                d.spun_up_replicas() == 0 && d.drained_replicas() == 0,
+                "self-diff moves replicas",
+            )?;
+            prop_assert(
+                d.apply_to(&p, &a) == replica_counts(&p, &a),
+                "self-diff changes replica set",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_diff_applied_to_old_yields_new_replica_set() {
+        let p = simple_example();
+        check(256, 0xD1FF_0002, gen_y_pair(), |(ya, yb)| {
+            let a = plan_from_y(&p, ya);
+            let b = plan_from_y(&p, yb);
+            let d = PlanDiff::between(&p, &a, &b);
+            prop_assert(
+                d.apply_to(&p, &a) == replica_counts(&p, &b),
+                format!("apply(diff({ya:?} → {yb:?})) missed the target"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_migration_cost_symmetric_bounded() {
+        // With equal per-action times the diff prices identically in both
+        // directions; with unequal times the asymmetry is bounded by the
+        // ratio of the slowest to the fastest action.
+        let p = simple_example();
+        let eq = MigrationCostModel {
+            spin_up_s: 60.0,
+            drain_s: 60.0,
+            reshard_s: 60.0,
+        };
+        let default = MigrationCostModel::default();
+        let ratio = (default.spin_up_s.max(default.drain_s).max(default.reshard_s))
+            / (default.spin_up_s.min(default.drain_s).min(default.reshard_s));
+        check(256, 0xD1FF_0003, gen_y_pair(), |(ya, yb)| {
+            let a = plan_from_y(&p, ya);
+            let b = plan_from_y(&p, yb);
+            let fwd = PlanDiff::between(&p, &a, &b);
+            let rev = PlanDiff::between(&p, &b, &a);
+            let cf = fwd.migration_cost(&p, &eq);
+            let cr = rev.migration_cost(&p, &eq);
+            prop_assert(
+                (cf.downtime_replica_s - cr.downtime_replica_s).abs() < 1e-9
+                    && (cf.dollars - cr.dollars).abs() < 1e-9,
+                format!("equal-time model not symmetric: {cf:?} vs {cr:?}"),
+            )?;
+            let df = fwd.migration_cost(&p, &default);
+            let dr = rev.migration_cost(&p, &default);
+            prop_assert(
+                df.downtime_replica_s <= ratio * dr.downtime_replica_s + 1e-9
+                    && df.dollars <= ratio * dr.dollars + 1e-9,
+                format!("asymmetry beyond model ratio: {df:?} vs {dr:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn reparallelize_detected_for_same_gpu_composition() {
+        let mut p = simple_example();
+        // A second layout over the same two type-1 GPUs as "t2-tp2".
+        p.candidates.push(Candidate {
+            model: 0,
+            cost: 4.0,
+            gpu_counts: vec![0, 2, 0],
+            h: vec![1.8, 1.8],
+            label: "t2-pp2".to_string(),
+            replica: None,
+        });
+        let old = plan_from_y(&p, &[0, 0, 0, 2, 0]);
+        let new = plan_from_y(&p, &[0, 0, 0, 0, 2]);
+        let d = PlanDiff::between(&p, &old, &new);
+        assert_eq!(d.reparallelized_replicas(), 2);
+        assert_eq!(d.spun_up_replicas(), 0);
+        assert_eq!(d.drained_replicas(), 0);
+        assert_eq!(d.apply_to(&p, &old), replica_counts(&p, &new));
+        // Re-sharding two replicas is cheaper than drain + spin-up of two.
+        let m = MigrationCostModel::default();
+        let reshard = d.migration_cost(&p, &m);
+        let full_move = MigrationCost {
+            downtime_replica_s: 2.0 * (m.spin_up_s + m.drain_s),
+            dollars: 2.0 * 4.0 * (m.spin_up_s + m.drain_s) / 3600.0,
+        };
+        assert!(reshard.downtime_replica_s < full_move.downtime_replica_s);
+        assert!(reshard.dollars < full_move.dollars);
+    }
+
+    #[test]
+    fn no_reparallelize_across_models() {
+        // Same GPU composition but a different model: the weights must be
+        // fully reloaded, so this is a drain + spin-up, never a re-shard.
+        let mut p = simple_example();
+        p.demands.push(vec![10.0, 5.0]);
+        p.candidates.push(Candidate {
+            model: 1,
+            cost: 4.0,
+            gpu_counts: vec![0, 2, 0],
+            h: vec![1.8, 1.8],
+            label: "m1-t2-tp2".to_string(),
+            replica: None,
+        });
+        let old = plan_from_y(&p, &[0, 0, 0, 2, 0]);
+        let new = plan_from_y(&p, &[0, 0, 0, 0, 2]);
+        let d = PlanDiff::between(&p, &old, &new);
+        assert_eq!(d.reparallelized_replicas(), 0);
+        assert_eq!(d.drained_replicas(), 2);
+        assert_eq!(d.spun_up_replicas(), 2);
+        assert_eq!(d.apply_to(&p, &old), replica_counts(&p, &new));
+    }
+
+    #[test]
+    fn mixed_diff_classifies_all_actions() {
+        let p = simple_example();
+        let old = plan_from_y(&p, &[1, 2, 0, 1]);
+        let new = plan_from_y(&p, &[1, 1, 2, 1]);
+        let d = PlanDiff::between(&p, &old, &new);
+        assert_eq!(d.kept_replicas(), 3); // t1, one t2, tp2
+        assert_eq!(d.drained_replicas(), 1); // one t2
+        assert_eq!(d.spun_up_replicas(), 2); // two t3
+        assert!(!d.is_empty());
+        let cost = d.migration_cost(&p, &MigrationCostModel::default());
+        assert!(cost.downtime_replica_s > 0.0 && cost.dollars > 0.0);
+    }
+}

@@ -1,0 +1,462 @@
+//! Online replanning: the elastic control plane closing the loop between
+//! the cloud market, the scheduler, and the executing cluster.
+//!
+//! The one-shot planner ([`crate::sched`]) answers "what should we rent
+//! *right now*?" against a static [`crate::cloud::Availability`] snapshot.
+//! Real GPU markets fluctuate (Figure 2: A40 ranged 0–32 on Vast.ai within
+//! a day) — A100s vanish mid-run, 4090 prices spike. This module consumes
+//! the timestamped [`crate::cloud::MarketEventStream`], maintains an
+//! incumbent [`crate::sched::ServingPlan`], and on every event decides how
+//! to adapt:
+//!
+//! * [`diff`] — the plan-diff engine: minimal migration between two plans
+//!   (keep / spin up / drain / re-parallelize) with a migration cost model;
+//! * [`replan`] — the strategies: incremental repair, naive full re-solve,
+//!   and drift-thresholded escalation between them.
+//!
+//! The produced epoch timeline feeds [`crate::sim::simulate_timeline`],
+//! which executes the transitions mid-trace (draining retiring replicas,
+//! routing around ones still spinning up) and reports per-epoch cost and
+//! SLO attainment.
+
+pub mod diff;
+pub mod replan;
+
+pub use diff::{replica_counts, MigrationAction, MigrationCost, MigrationCostModel, PlanDiff};
+pub use replan::{
+    clamp_to_market, incremental_repair, market_drift, replan, ReplanOutcome, ReplanStrategy,
+};
+
+use crate::cloud::{MarketEvent, MarketEventKind, PriceBook};
+use crate::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use crate::sched::{SchedProblem, ServingPlan};
+
+/// Orchestration options.
+#[derive(Clone, Debug)]
+pub struct OrchestratorOptions {
+    pub strategy: ReplanStrategy,
+    pub search: BinarySearchOptions,
+    pub cost_model: MigrationCostModel,
+    /// Events whose [`market_drift`] stays below this floor are absorbed
+    /// without replanning when the incumbent remains feasible — migration
+    /// is not free, so noise should not move replicas. Drift is measured
+    /// against the market the incumbent was *last planned for* (not the
+    /// previous tick), so slow cumulative drift accumulates until it
+    /// crosses the floor instead of being absorbed forever.
+    pub min_drift: f64,
+}
+
+impl Default for OrchestratorOptions {
+    fn default() -> Self {
+        Self {
+            strategy: ReplanStrategy::Escalating {
+                drift_threshold: 0.25,
+            },
+            search: BinarySearchOptions::default(),
+            cost_model: MigrationCostModel::default(),
+            min_drift: 0.02,
+        }
+    }
+}
+
+/// One planning epoch: the plan in force from `start_s` until the next
+/// epoch, with the market state it was planned against.
+#[derive(Clone, Debug)]
+pub struct PlanEpoch {
+    pub index: usize,
+    pub start_s: f64,
+    pub event_kind: MarketEventKind,
+    /// The scheduling problem reflecting this epoch's market (availability
+    /// replaced, candidate costs re-priced). Candidate order is identical
+    /// across epochs, so plan entries are comparable between them.
+    pub problem: SchedProblem,
+    pub plan: ServingPlan,
+    pub diff: PlanDiff,
+    pub migration: MigrationCost,
+    pub replanned: bool,
+    pub escalated: bool,
+    /// True when no feasible plan existed for this market at all and the
+    /// stale incumbent was kept best-effort (distinct from a deliberate
+    /// low-drift absorption).
+    pub infeasible: bool,
+    pub drift: f64,
+}
+
+/// The full orchestration outcome.
+#[derive(Clone, Debug)]
+pub struct OrchestrationReport {
+    pub epochs: Vec<PlanEpoch>,
+    /// Epochs where the replanner ran (vs absorbed the event).
+    pub replans: usize,
+    /// Replans that fell through to a full re-solve.
+    pub escalations: usize,
+    /// Epochs whose diff actually moved replicas.
+    pub transitions: usize,
+    pub total_migration: MigrationCost,
+}
+
+impl OrchestrationReport {
+    /// Σ plan rental $/h × epoch duration, in dollars, over `horizon_s`
+    /// (the last epoch extends to the horizon).
+    pub fn rental_dollars(&self, horizon_s: f64) -> f64 {
+        let mut total = 0.0;
+        for (i, e) in self.epochs.iter().enumerate() {
+            let end = self
+                .epochs
+                .get(i + 1)
+                .map(|n| n.start_s)
+                .unwrap_or(horizon_s);
+            let hours = (end - e.start_s).max(0.0) / 3600.0;
+            total += e.plan.cost(&e.problem) * hours;
+        }
+        total
+    }
+
+    /// Rental + migration dollars over the horizon.
+    pub fn total_dollars(&self, horizon_s: f64) -> f64 {
+        self.rental_dollars(horizon_s) + self.total_migration.dollars
+    }
+
+    /// Borrow the epoch sequence as input for
+    /// [`crate::sim::simulate_timeline`].
+    pub fn timeline_steps(&self) -> Vec<crate::sim::TimelineStep<'_>> {
+        self.epochs
+            .iter()
+            .map(|e| crate::sim::TimelineStep {
+                start_s: e.start_s,
+                problem: &e.problem,
+                plan: &e.plan,
+            })
+            .collect()
+    }
+}
+
+/// Replace a problem's market state with an event's observation: swap the
+/// availability snapshot and re-price every candidate from its GPU counts.
+/// Candidate order (and hence plan entry indices) is preserved.
+pub fn apply_market(p: &mut SchedProblem, event: &MarketEvent) {
+    assert_eq!(
+        p.num_gpu_types, 6,
+        "market events describe the 6-type cloud catalog"
+    );
+    p.avail = event.avail.counts.to_vec();
+    reprice(p, &event.prices);
+}
+
+/// Re-price every candidate under a new price book.
+pub fn reprice(p: &mut SchedProblem, prices: &PriceBook) {
+    for c in p.candidates.iter_mut() {
+        c.cost = prices.composition_cost(&c.gpu_counts);
+    }
+}
+
+/// Run the orchestration loop: solve the first event's market from scratch,
+/// then fold every subsequent event through the configured strategy.
+/// Returns `None` when even the initial market admits no feasible plan.
+pub fn orchestrate(
+    base: &SchedProblem,
+    events: &[MarketEvent],
+    opts: &OrchestratorOptions,
+) -> Option<OrchestrationReport> {
+    let first = events.first()?;
+    let mut problem = base.clone();
+    apply_market(&mut problem, first);
+    let (initial, _) = solve_binary_search(&problem, &opts.search);
+    let mut incumbent = initial?;
+
+    let mut epochs = vec![PlanEpoch {
+        index: 0,
+        start_s: first.t_s,
+        event_kind: first.kind,
+        problem,
+        plan: incumbent.clone(),
+        diff: PlanDiff::default(),
+        migration: MigrationCost::default(),
+        replanned: true,
+        escalated: false,
+        infeasible: false,
+        drift: 0.0,
+    }];
+    // The market state the incumbent was planned against; drift accumulates
+    // relative to this basis and it advances only on a successful replan.
+    let mut basis_avail = first.avail.counts;
+    let mut basis_prices = first.prices.per_hour;
+
+    for (index, event) in events.iter().enumerate().skip(1) {
+        let drift = market_drift(
+            &basis_avail,
+            &event.avail.counts,
+            &basis_prices,
+            &event.prices.per_hour,
+        );
+        let mut next_problem = base.clone();
+        apply_market(&mut next_problem, event);
+
+        // Absorb low-drift events while the incumbent stays feasible.
+        if drift < opts.min_drift && incumbent.validate(&next_problem, 1e-4).is_ok() {
+            epochs.push(PlanEpoch {
+                index,
+                start_s: event.t_s,
+                event_kind: event.kind,
+                problem: next_problem,
+                plan: incumbent.clone(),
+                diff: PlanDiff::default(),
+                migration: MigrationCost::default(),
+                replanned: false,
+                escalated: false,
+                infeasible: false,
+                drift,
+            });
+            continue;
+        }
+
+        match replan(
+            &next_problem,
+            &incumbent,
+            &opts.strategy,
+            drift,
+            &opts.search,
+            &opts.cost_model,
+        ) {
+            Some(outcome) => {
+                epochs.push(PlanEpoch {
+                    index,
+                    start_s: event.t_s,
+                    event_kind: event.kind,
+                    problem: next_problem,
+                    plan: outcome.plan.clone(),
+                    diff: outcome.diff,
+                    migration: outcome.migration,
+                    replanned: true,
+                    escalated: outcome.escalated,
+                    infeasible: false,
+                    drift,
+                });
+                incumbent = outcome.plan;
+                basis_avail = event.avail.counts;
+                basis_prices = event.prices.per_hour;
+            }
+            None => {
+                // The market is too hostile for any feasible plan; keep the
+                // incumbent best-effort and try again on the next event.
+                epochs.push(PlanEpoch {
+                    index,
+                    start_s: event.t_s,
+                    event_kind: event.kind,
+                    problem: next_problem,
+                    plan: incumbent.clone(),
+                    diff: PlanDiff::default(),
+                    migration: MigrationCost::default(),
+                    replanned: false,
+                    escalated: false,
+                    infeasible: true,
+                    drift,
+                });
+            }
+        }
+    }
+
+    let replans = epochs.iter().skip(1).filter(|e| e.replanned).count();
+    let escalations = epochs.iter().filter(|e| e.escalated).count();
+    let transitions = epochs.iter().skip(1).filter(|e| !e.diff.is_empty()).count();
+    let mut total_migration = MigrationCost::default();
+    for e in &epochs {
+        total_migration.add(&e.migration);
+    }
+    Some(OrchestrationReport {
+        epochs,
+        replans,
+        escalations,
+        transitions,
+        total_migration,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::{Availability, MarketEventStream};
+    use crate::perf_model::{ModelSpec, PerfModel};
+    use crate::profiler::Profile;
+    use crate::sched::enumerate::EnumOptions;
+    use crate::workload::TraceMix;
+
+    fn market_problem(model: ModelSpec, budget: f64) -> SchedProblem {
+        let perf = PerfModel::default();
+        let profile = Profile::build(&model, &perf, &EnumOptions::default());
+        SchedProblem::from_profile(
+            &profile,
+            &TraceMix::trace1(),
+            1000.0,
+            &crate::cloud::availability(1),
+            budget,
+        )
+    }
+
+    fn fast_opts(strategy: ReplanStrategy) -> OrchestratorOptions {
+        OrchestratorOptions {
+            strategy,
+            search: BinarySearchOptions {
+                tolerance: 3.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn orchestrate_produces_valid_epoch_timeline() {
+        let base = market_problem(ModelSpec::llama3_70b(), 30.0);
+        let events: Vec<_> = MarketEventStream::new(21, 6, 900.0).collect();
+        let report = orchestrate(
+            &base,
+            &events,
+            &fast_opts(ReplanStrategy::Escalating {
+                drift_threshold: 0.25,
+            }),
+        )
+        .expect("orchestration");
+        assert_eq!(report.epochs.len(), events.len());
+        for e in &report.epochs {
+            if e.replanned {
+                e.plan
+                    .validate(&e.problem, 1e-3)
+                    .unwrap_or_else(|err| panic!("epoch {}: {err}", e.index));
+            }
+            assert!(e.plan.makespan.is_finite());
+        }
+        // Epochs are in event order and timestamped.
+        for (e, ev) in report.epochs.iter().zip(&events) {
+            assert!((e.start_s - ev.t_s).abs() < 1e-9);
+        }
+        assert!(report.total_dollars(events.len() as f64 * 900.0) > 0.0);
+    }
+
+    #[test]
+    fn market_swings_force_plan_transitions() {
+        // A scripted crash-and-recover market must force the orchestrator
+        // through ≥ 2 actual replica migrations: the crash pools rent for
+        // at most ~10 $/h, far below the ~30 $/h incumbent, forcing drains;
+        // the recovery re-rents capacity with the freed budget. Llama3-8B
+        // keeps every nonzero pool individually feasible.
+        let base = market_problem(ModelSpec::llama3_8b(), 30.0);
+        let calm = crate::cloud::availability(1);
+        let crash = Availability::new([2, 2, 2, 1, 1, 2]);
+        let mk = |t_s: f64, avail: Availability| crate::cloud::MarketEvent {
+            t_s,
+            avail,
+            prices: PriceBook::base(),
+            kind: crate::cloud::MarketEventKind::Drift,
+        };
+        let events = vec![mk(0.0, calm), mk(900.0, crash), mk(1800.0, calm)];
+        let report = orchestrate(
+            &base,
+            &events,
+            &fast_opts(ReplanStrategy::Incremental),
+        )
+        .expect("orchestration");
+        assert!(
+            report.transitions >= 2,
+            "only {} transitions across {} epochs",
+            report.transitions,
+            report.epochs.len()
+        );
+        assert!(report.total_migration.dollars > 0.0);
+        // The crash epoch must fit the collapsed pools.
+        let crash_epoch = &report.epochs[1];
+        let used = crash_epoch.plan.gpus_used(&crash_epoch.problem);
+        for (n, &u) in used.iter().enumerate() {
+            assert!(
+                u <= crash_epoch.problem.avail[n],
+                "type {n}: {u} rented with {} available",
+                crash_epoch.problem.avail[n]
+            );
+        }
+    }
+
+    #[test]
+    fn reprice_tracks_price_book_and_preserves_order() {
+        let mut p = market_problem(ModelSpec::llama3_70b(), 30.0);
+        let before: Vec<String> = p.candidates.iter().map(|c| c.label.clone()).collect();
+        let mut prices = PriceBook::base();
+        for v in prices.per_hour.iter_mut() {
+            *v *= 2.0;
+        }
+        let original: Vec<f64> = p.candidates.iter().map(|c| c.cost).collect();
+        reprice(&mut p, &prices);
+        let after: Vec<String> = p.candidates.iter().map(|c| c.label.clone()).collect();
+        assert_eq!(before, after);
+        for (c, &orig) in p.candidates.iter().zip(&original) {
+            assert!((c.cost - 2.0 * orig).abs() < 1e-9, "{}", c.label);
+        }
+    }
+
+    #[test]
+    fn absorbs_noise_without_migrating() {
+        let base = market_problem(ModelSpec::llama3_70b(), 30.0);
+        // Two identical observations: zero drift, so the second event must
+        // be absorbed without a replan.
+        let mut events: Vec<_> = MarketEventStream::new(5, 1, 900.0).collect();
+        let mut second = events[0].clone();
+        second.t_s = 900.0;
+        events.push(second);
+        let report = orchestrate(
+            &base,
+            &events,
+            &fast_opts(ReplanStrategy::FullResolve),
+        )
+        .expect("orchestration");
+        assert_eq!(report.epochs.len(), 2);
+        assert!(!report.epochs[1].replanned, "zero-drift event replanned");
+        assert_eq!(report.transitions, 0);
+    }
+
+    #[test]
+    fn cumulative_drift_eventually_triggers_replan() {
+        // Boiling-frog regression: each tick moves prices only 1% (below
+        // min_drift = 2%), but drift is measured against the last-replanned
+        // basis, so the third tick crosses the floor and replans. Prices
+        // fall so the incumbent stays budget-feasible throughout (a rise
+        // would trip the feasibility check instead of the drift check).
+        let base = market_problem(ModelSpec::llama3_8b(), 30.0);
+        let calm = crate::cloud::availability(1);
+        let mk = |t_s: f64, scale: f64| {
+            let mut prices = PriceBook::base();
+            for v in prices.per_hour.iter_mut() {
+                *v *= scale;
+            }
+            crate::cloud::MarketEvent {
+                t_s,
+                avail: calm,
+                prices,
+                kind: crate::cloud::MarketEventKind::Drift,
+            }
+        };
+        let events = vec![
+            mk(0.0, 1.0),
+            mk(900.0, 0.99),     // drift vs basis: 1.0% — absorbed
+            mk(1800.0, 0.9801),  // 1.99% — absorbed
+            mk(2700.0, 0.9703),  // 2.97% — replanned
+        ];
+        let report = orchestrate(
+            &base,
+            &events,
+            &fast_opts(ReplanStrategy::Incremental),
+        )
+        .expect("orchestration");
+        assert!(!report.epochs[1].replanned, "1% drift replanned");
+        assert!(!report.epochs[2].replanned, "cumulative 2% not yet over floor");
+        assert!(
+            report.epochs[3].replanned,
+            "cumulative drift never triggered a replan (boiling frog)"
+        );
+    }
+
+    #[test]
+    fn unlimited_sentinel_never_reaches_dollar_accounting() {
+        // Guard: the orchestrator's dollar accounting composes budget_cap /
+        // full_rental_cost; a sentinel pool must stay symbolic.
+        let a = Availability::unlimited();
+        assert!(a.budget_cap(42.0) == 42.0 && a.full_rental_cost().is_infinite());
+    }
+}

@@ -1,0 +1,407 @@
+//! Online replanning strategies.
+//!
+//! Given the incumbent plan and a freshly observed market state (new
+//! availability, new prices), produce the next plan:
+//!
+//! * **incremental repair** — drop replicas the market took away (or the
+//!   budget can no longer carry), re-spread workloads over the survivors
+//!   with the fixed-composition assignment LP, then greedily rent
+//!   replacements with the leftover budget ([`polish_plan`]). One LP per
+//!   step, no integer search — the ThunderServe-style lightweight pass.
+//! * **full re-solve** — Algorithm 1 from scratch on the new market
+//!   (the expensive gold standard, used naively by the baseline strategy).
+//! * **escalation** — incremental while the market drift is small,
+//!   warm-started full re-solve (incumbent makespan as the initial upper
+//!   bound) once drift crosses a threshold.
+
+use super::diff::{replica_counts, MigrationCost, MigrationCostModel, PlanDiff};
+use crate::sched::binary_search::{
+    polish_plan, solve_assignment_fixed_y, solve_binary_search, solve_binary_search_warm,
+    BinarySearchOptions, SearchStats,
+};
+use crate::sched::{SchedProblem, ServingPlan};
+
+/// How to react to a market event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReplanStrategy {
+    /// Never rent anything new: clamp the incumbent to feasibility and
+    /// re-spread workloads. The "do nothing" baseline.
+    Static,
+    /// Incremental repair; falls back to a warm-started full re-solve only
+    /// when repair cannot cover every workload any more.
+    Incremental,
+    /// Naive full re-solve from scratch on every event.
+    FullResolve,
+    /// Incremental below the drift threshold, warm-started full re-solve
+    /// above it.
+    Escalating { drift_threshold: f64 },
+}
+
+impl ReplanStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplanStrategy::Static => "static",
+            ReplanStrategy::Incremental => "incremental",
+            ReplanStrategy::FullResolve => "full-resolve",
+            ReplanStrategy::Escalating { .. } => "escalating",
+        }
+    }
+
+    /// CLI surface: `static`, `incremental`, `full`, `escalate[:<threshold>]`.
+    pub fn by_name(s: &str) -> Option<ReplanStrategy> {
+        match s {
+            "static" => Some(ReplanStrategy::Static),
+            "incremental" | "inc" => Some(ReplanStrategy::Incremental),
+            "full" | "full-resolve" | "resolve" => Some(ReplanStrategy::FullResolve),
+            "escalate" | "escalating" => Some(ReplanStrategy::Escalating {
+                drift_threshold: 0.25,
+            }),
+            other => {
+                let rest = other.strip_prefix("escalate:")?;
+                let t = rest.parse::<f64>().ok()?;
+                Some(ReplanStrategy::Escalating { drift_threshold: t })
+            }
+        }
+    }
+}
+
+/// Result of one replanning step.
+#[derive(Clone, Debug)]
+pub struct ReplanOutcome {
+    pub plan: ServingPlan,
+    pub diff: PlanDiff,
+    pub migration: MigrationCost,
+    /// True when the step fell through to a full re-solve.
+    pub escalated: bool,
+    pub stats: SearchStats,
+}
+
+/// Normalised market drift between two observations: relative L1 change of
+/// availability plus mean relative price change. Unlimited-sentinel pools
+/// are ignored (they carry no market signal — see
+/// [`crate::cloud::Availability::is_unlimited`]).
+pub fn market_drift(
+    old_avail: &[u32],
+    new_avail: &[u32],
+    old_prices: &[f64],
+    new_prices: &[f64],
+) -> f64 {
+    let unlimited = crate::cloud::Availability::UNLIMITED;
+    let mut total_old = 0.0f64;
+    let mut delta = 0.0f64;
+    for (&a, &b) in old_avail.iter().zip(new_avail) {
+        if a >= unlimited || b >= unlimited {
+            continue;
+        }
+        total_old += a as f64;
+        delta += (a as f64 - b as f64).abs();
+    }
+    // Normalise against the larger of the old pool and the move itself so
+    // a recovery from a total collapse reads as drift 1.0, not an
+    // unbounded absolute delta.
+    let avail_term = delta / total_old.max(delta).max(1.0);
+    let mut price_term = 0.0f64;
+    let mut priced = 0usize;
+    for (&a, &b) in old_prices.iter().zip(new_prices) {
+        if a > 0.0 {
+            price_term += (b / a - 1.0).abs();
+            priced += 1;
+        }
+    }
+    if priced > 0 {
+        price_term /= priced as f64;
+    }
+    avail_term + price_term
+}
+
+fn merge_stats(into: &mut SearchStats, from: &SearchStats) {
+    into.iterations += from.iterations;
+    into.feasibility_checks += from.feasibility_checks;
+    into.lp_solves += from.lp_solves;
+    into.elapsed += from.elapsed;
+}
+
+/// Throughput-per-dollar value of a candidate — victim selection keeps the
+/// most valuable replicas when the market forces evictions.
+fn density(p: &SchedProblem, ci: usize) -> f64 {
+    let c = &p.candidates[ci];
+    c.h.iter().sum::<f64>() / c.cost.max(1e-9)
+}
+
+/// Drop replicas until the incumbent fits the new availability and budget,
+/// then re-spread workloads over the survivors. Returns `None` when nothing
+/// survives or some workload loses coverage entirely.
+pub fn clamp_to_market(
+    p: &SchedProblem,
+    incumbent: &ServingPlan,
+    stats: &mut SearchStats,
+) -> Option<ServingPlan> {
+    let mut y = replica_counts(p, incumbent);
+
+    // Availability: evict the least valuable replica using an over-rented
+    // GPU type until every pool fits.
+    loop {
+        let mut used = vec![0u64; p.num_gpu_types];
+        for (ci, &k) in y.iter().enumerate() {
+            for (n, &d) in p.candidates[ci].gpu_counts.iter().enumerate() {
+                used[n] += d as u64 * k as u64;
+            }
+        }
+        let over = (0..p.num_gpu_types).find(|&n| used[n] > p.avail[n] as u64);
+        let Some(n) = over else { break };
+        let victim = (0..p.candidates.len())
+            .filter(|&ci| y[ci] > 0 && p.candidates[ci].gpu_counts[n] > 0)
+            .min_by(|&a, &b| density(p, a).partial_cmp(&density(p, b)).unwrap())?;
+        y[victim] -= 1;
+    }
+
+    // Budget (candidate costs reflect the new prices): evict the least
+    // valuable replica until affordable.
+    loop {
+        let cost: f64 = y
+            .iter()
+            .enumerate()
+            .map(|(ci, &k)| k as f64 * p.candidates[ci].cost)
+            .sum();
+        if cost <= p.budget + 1e-9 {
+            break;
+        }
+        let victim = (0..p.candidates.len())
+            .filter(|&ci| y[ci] > 0)
+            .min_by(|&a, &b| density(p, a).partial_cmp(&density(p, b)).unwrap())?;
+        y[victim] -= 1;
+    }
+
+    if y.iter().all(|&k| k == 0) {
+        return None;
+    }
+    solve_assignment_fixed_y(p, &y, f64::INFINITY, stats)
+}
+
+/// Incremental repair: clamp to the new market, then greedily spend the
+/// remaining budget on replacements.
+pub fn incremental_repair(
+    p: &SchedProblem,
+    incumbent: &ServingPlan,
+    stats: &mut SearchStats,
+) -> Option<ServingPlan> {
+    let clamped = clamp_to_market(p, incumbent, stats)?;
+    Some(polish_plan(p, clamped, stats))
+}
+
+/// One replanning step. `p` must already reflect the new market state
+/// (availability replaced, candidate costs re-priced); `drift` is the
+/// [`market_drift`] between the previous and the current observation.
+pub fn replan(
+    p: &SchedProblem,
+    incumbent: &ServingPlan,
+    strategy: &ReplanStrategy,
+    drift: f64,
+    opts: &BinarySearchOptions,
+    cost_model: &MigrationCostModel,
+) -> Option<ReplanOutcome> {
+    let mut stats = SearchStats::default();
+    let mut escalated = false;
+    let plan = match strategy {
+        ReplanStrategy::Static => clamp_to_market(p, incumbent, &mut stats)?,
+        ReplanStrategy::Incremental => match incremental_repair(p, incumbent, &mut stats) {
+            Some(plan) => plan,
+            None => {
+                escalated = true;
+                let (plan, s) = solve_binary_search_warm(p, opts, Some(incumbent.makespan));
+                merge_stats(&mut stats, &s);
+                plan?
+            }
+        },
+        ReplanStrategy::FullResolve => {
+            let (plan, s) = solve_binary_search(p, opts);
+            merge_stats(&mut stats, &s);
+            plan?
+        }
+        ReplanStrategy::Escalating { drift_threshold } => {
+            let incremental = if drift <= *drift_threshold {
+                incremental_repair(p, incumbent, &mut stats)
+            } else {
+                None
+            };
+            match incremental {
+                Some(plan) => plan,
+                None => {
+                    escalated = true;
+                    let (plan, s) = solve_binary_search_warm(p, opts, Some(incumbent.makespan));
+                    merge_stats(&mut stats, &s);
+                    plan?
+                }
+            }
+        }
+    };
+    let diff = PlanDiff::between(p, incumbent, &plan);
+    let migration = diff.migration_cost(p, cost_model);
+    Some(ReplanOutcome {
+        plan,
+        diff,
+        migration,
+        escalated,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::milp::MilpOptions;
+    use crate::sched::toy::simple_example;
+    use std::time::Duration;
+
+    fn opts() -> BinarySearchOptions {
+        BinarySearchOptions {
+            tolerance: 0.1,
+            milp: MilpOptions {
+                time_limit: Duration::from_secs(5),
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    fn solved_toy() -> (SchedProblem, ServingPlan) {
+        let p = simple_example();
+        let (plan, _) = solve_binary_search(&p, &opts());
+        (p.clone(), plan.expect("toy plan"))
+    }
+
+    #[test]
+    fn clamp_drops_preempted_replicas_and_stays_valid() {
+        let (p, incumbent) = solved_toy();
+        // Preempt every GPU of type 0 (the t1 candidate's pool).
+        let mut hostile = p.clone();
+        hostile.avail = vec![0, 2, 2];
+        let mut stats = SearchStats::default();
+        let clamped = clamp_to_market(&hostile, &incumbent, &mut stats).expect("clamped");
+        clamped.validate(&hostile, 1e-4).expect("valid after clamp");
+        assert_eq!(clamped.gpus_used(&hostile)[0], 0, "type-0 GPUs still rented");
+    }
+
+    #[test]
+    fn clamp_respects_price_spike_budget() {
+        let (p, incumbent) = solved_toy();
+        // Triple every price: the 8 $/h budget now buys far less.
+        let mut spiked = p.clone();
+        for c in spiked.candidates.iter_mut() {
+            c.cost *= 3.0;
+        }
+        let mut stats = SearchStats::default();
+        if let Some(clamped) = clamp_to_market(&spiked, &incumbent, &mut stats) {
+            clamped.validate(&spiked, 1e-4).expect("valid after spike");
+            assert!(clamped.cost(&spiked) <= spiked.budget + 1e-6);
+        }
+    }
+
+    #[test]
+    fn incremental_repair_rebuilds_capacity() {
+        let (p, incumbent) = solved_toy();
+        let mut hostile = p.clone();
+        hostile.avail = vec![0, 2, 2];
+        let mut stats = SearchStats::default();
+        let repaired = incremental_repair(&hostile, &incumbent, &mut stats).expect("repaired");
+        repaired.validate(&hostile, 1e-4).expect("valid");
+        // The repair must re-rent replacements: better than the bare clamp.
+        let mut stats2 = SearchStats::default();
+        let clamped = clamp_to_market(&hostile, &incumbent, &mut stats2).expect("clamped");
+        assert!(
+            repaired.makespan <= clamped.makespan + 1e-9,
+            "polish made it worse: {} vs {}",
+            repaired.makespan,
+            clamped.makespan
+        );
+    }
+
+    #[test]
+    fn strategies_produce_valid_plans_under_disruption() {
+        let (p, incumbent) = solved_toy();
+        let mut hostile = p.clone();
+        hostile.avail = vec![0, 2, 2];
+        for c in hostile.candidates.iter_mut() {
+            c.cost *= 1.4;
+        }
+        let drift = market_drift(
+            &[2, 2, 2],
+            &[0, 2, 2],
+            &[4.0, 2.0, 2.0, 4.0],
+            &[5.6, 2.8, 2.8, 5.6],
+        );
+        assert!(drift > 0.3, "drift {drift}");
+        for strategy in [
+            ReplanStrategy::Static,
+            ReplanStrategy::Incremental,
+            ReplanStrategy::FullResolve,
+            ReplanStrategy::Escalating {
+                drift_threshold: 0.25,
+            },
+        ] {
+            let out = replan(
+                &hostile,
+                &incumbent,
+                &strategy,
+                drift,
+                &opts(),
+                &MigrationCostModel::default(),
+            )
+            .unwrap_or_else(|| panic!("{} produced no plan", strategy.name()));
+            out.plan
+                .validate(&hostile, 1e-4)
+                .unwrap_or_else(|e| panic!("{}: {e}", strategy.name()));
+            if strategy == (ReplanStrategy::Escalating { drift_threshold: 0.25 }) {
+                assert!(out.escalated, "high drift must escalate");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_drift_keeps_incremental_cheap() {
+        let (p, incumbent) = solved_toy();
+        let out = replan(
+            &p,
+            &incumbent,
+            &ReplanStrategy::Escalating {
+                drift_threshold: 0.25,
+            },
+            0.0,
+            &opts(),
+            &MigrationCostModel::default(),
+        )
+        .expect("replan");
+        assert!(!out.escalated);
+        // Nothing changed in the market: the plan must not move replicas
+        // beyond what polishing adds.
+        assert_eq!(out.diff.drained_replicas(), 0, "drained on a calm market");
+    }
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for s in ["static", "incremental", "full", "escalate"] {
+            assert!(ReplanStrategy::by_name(s).is_some(), "{s}");
+        }
+        assert_eq!(
+            ReplanStrategy::by_name("escalate:0.4"),
+            Some(ReplanStrategy::Escalating {
+                drift_threshold: 0.4
+            })
+        );
+        assert!(ReplanStrategy::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn market_drift_measures_change_and_ignores_sentinels() {
+        assert!(market_drift(&[2, 2, 2], &[2, 2, 2], &[1.0, 1.0], &[1.0, 1.0]).abs() < 1e-12);
+        let d = market_drift(&[2, 2, 2], &[0, 2, 2], &[1.0], &[1.0]);
+        assert!((d - 2.0 / 6.0).abs() < 1e-9, "d={d}");
+        let u = crate::cloud::Availability::UNLIMITED;
+        let d2 = market_drift(&[u, 2, 2], &[u, 2, 2], &[1.0], &[2.0]);
+        assert!((d2 - 1.0).abs() < 1e-9, "sentinel leaked: {d2}");
+        // Recovery from a total collapse is bounded drift 1.0, not an
+        // absolute GPU count.
+        let d3 = market_drift(&[0, 0, 0], &[10, 10, 0], &[1.0], &[1.0]);
+        assert!((d3 - 1.0).abs() < 1e-9, "collapse recovery drift {d3}");
+    }
+}

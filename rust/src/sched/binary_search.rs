@@ -310,8 +310,11 @@ fn within_resources(p: &SchedProblem, y: &[u32]) -> bool {
 
 /// With the composition fixed, find fractions x minimising the realised
 /// makespan (an LP: min T' s.t. assignment + Σ x λ/h ≤ T'·y). Returns a plan
-/// when the realised makespan ≤ T̂ (+ small slack).
-fn solve_assignment_fixed_y(
+/// when the realised makespan ≤ T̂ (+ small slack). Pass `t_hat = ∞` for an
+/// unconditional re-assignment — the orchestrator's incremental repair uses
+/// this to re-spread workloads over the replicas that survive a market
+/// event.
+pub fn solve_assignment_fixed_y(
     p: &SchedProblem,
     y: &[u32],
     t_hat: f64,
@@ -466,25 +469,47 @@ pub fn solve_binary_search(
     p: &SchedProblem,
     opts: &BinarySearchOptions,
 ) -> (Option<ServingPlan>, SearchStats) {
+    solve_binary_search_warm(p, opts, None)
+}
+
+/// Algorithm 1 with an optional warm start: `warm_upper` is a makespan known
+/// (or believed) achievable — typically the incumbent plan's makespan when
+/// replanning after a market event. A feasible warm bound skips the loose
+/// analytic upper bound and most of the early bisection; an infeasible one
+/// costs a single extra feasibility check.
+pub fn solve_binary_search_warm(
+    p: &SchedProblem,
+    opts: &BinarySearchOptions,
+    warm_upper: Option<f64>,
+) -> (Option<ServingPlan>, SearchStats) {
     let start = Instant::now();
     let mut stats = SearchStats::default();
-    let Some(mut upper) = p.makespan_upper_bound() else {
+    let Some(ub) = p.makespan_upper_bound() else {
         return (None, stats);
     };
-    let mut lower = p.makespan_lower_bound().min(upper);
 
-    // The upper bound itself must be checked: it defines the fallback plan.
-    let mut best = check_feasible(p, upper, opts.feasibility, &opts.milp, &mut stats);
-    if best.is_none() {
-        // Even the worst-case bound failed (e.g. knapsack conservatism);
-        // widen once then give up if still infeasible.
-        upper *= 4.0;
-        best = check_feasible(p, upper, opts.feasibility, &opts.milp, &mut stats);
-        if best.is_none() {
-            stats.elapsed = start.elapsed();
-            return (None, stats);
+    // Candidate upper bounds, tightest first: the warm start (if it is
+    // tighter than the analytic bound), the analytic bound, and a widened
+    // fallback for knapsack conservatism. The first feasible one defines
+    // the incumbent plan.
+    let mut tries: Vec<f64> = Vec::new();
+    if let Some(w) = warm_upper {
+        if w.is_finite() && w > 0.0 && w < ub {
+            tries.push(w);
         }
     }
+    tries.push(ub);
+    tries.push(4.0 * ub);
+    let seeded = tries.into_iter().find_map(|t| {
+        check_feasible(p, t, opts.feasibility, &opts.milp, &mut stats)
+            .map(|plan| (plan.makespan.min(t), plan))
+    });
+    let Some((mut upper, seed_plan)) = seeded else {
+        stats.elapsed = start.elapsed();
+        return (None, stats);
+    };
+    let mut best = Some(seed_plan);
+    let mut lower = p.makespan_lower_bound().min(upper);
 
     while upper - lower > opts.tolerance && stats.iterations < opts.max_iters {
         stats.iterations += 1;

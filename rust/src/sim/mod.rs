@@ -6,6 +6,15 @@
 //! requests according to the plan's fractional assignment, tie-breaking by
 //! shortest queue. This is what regenerates the paper's end-to-end figures
 //! (throughput, percentile latencies, makespan) without real GPUs.
+//!
+//! [`timeline`] extends the simulator to *time-varying* plans: it executes
+//! an epoch sequence from the orchestrator, applying plan transitions
+//! mid-trace (drain retiring replicas, route around ones spinning up) and
+//! reporting per-epoch rental cost and SLO attainment.
+
+pub mod timeline;
+
+pub use timeline::{simulate_timeline, EpochStats, TimelineOptions, TimelineResult, TimelineStep};
 
 use crate::metrics::{BusyTracker, LatencyRecorder};
 use crate::perf_model::{ModelSpec, PerfModel, ReplicaConfig};

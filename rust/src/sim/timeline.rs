@@ -1,0 +1,876 @@
+//! Time-varying plan execution: run the discrete-event cluster simulator
+//! through a *sequence* of plan epochs instead of a single static plan.
+//!
+//! At every epoch boundary the replica fleet transitions make-before-break:
+//! replicas present in both plans keep serving untouched; new replicas
+//! **spin up** (rented immediately, serviceable only after the provisioning
+//! delay, with the router steering around them until then); retired
+//! replicas keep serving through that spin-up window, then **drain**
+//! (finish their in-flight batch, hand queued-but-unstarted requests back
+//! to survivors, admit nothing new). Rental dollars accrue for every rented
+//! second — the old and new fleets *overlap* for the spin-up window, which
+//! is exactly where naive full re-solves bleed money — and per-epoch SLO
+//! attainment is reported against the epoch a request *arrived* in.
+
+use super::SimOptions;
+use crate::metrics::{BusyTracker, LatencyRecorder};
+use crate::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
+use crate::sched::{SchedProblem, ServingPlan};
+use crate::util::rng::Xoshiro256;
+use crate::workload::{Request, Trace};
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+/// One epoch of the timeline: `plan` is in force from `start_s` until the
+/// next step. All steps must index the same candidate list (the
+/// orchestrator re-prices candidates in place, preserving order).
+#[derive(Clone, Copy)]
+pub struct TimelineStep<'a> {
+    pub start_s: f64,
+    pub problem: &'a SchedProblem,
+    pub plan: &'a ServingPlan,
+}
+
+/// Options for timeline execution.
+#[derive(Clone, Debug)]
+pub struct TimelineOptions {
+    pub seed: u64,
+    /// Cap on in-flight requests per replica.
+    pub max_batch: usize,
+    /// Delay between renting a replica and it accepting traffic.
+    pub spin_up_s: f64,
+    /// Per-request latency SLO for attainment accounting.
+    pub slo_latency_s: f64,
+}
+
+impl Default for TimelineOptions {
+    fn default() -> Self {
+        let sim = SimOptions::default();
+        Self {
+            seed: sim.seed,
+            max_batch: sim.max_batch,
+            // Single source of truth: the simulator executes the same
+            // spin-up the orchestrator's migration cost model prices.
+            spin_up_s: crate::orchestrator::MigrationCostModel::default().spin_up_s,
+            slo_latency_s: 120.0,
+        }
+    }
+}
+
+/// Per-epoch outcome.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Requests that arrived during this epoch.
+    pub arrivals: usize,
+    /// Of those, completed by the end of the simulation.
+    pub completed: usize,
+    /// Fraction of this epoch's arrivals finishing within the SLO.
+    pub slo_attainment: f64,
+    pub p90_s: f64,
+    /// Dollars paid for replicas rented during this epoch (at the epoch's
+    /// prices), including warm-up and drain time.
+    pub rental_usd: f64,
+}
+
+/// Result of executing a plan timeline.
+#[derive(Clone, Debug)]
+pub struct TimelineResult {
+    pub recorder: LatencyRecorder,
+    pub epochs: Vec<EpochStats>,
+    pub makespan: f64,
+    pub total_rental_usd: f64,
+    /// Replica spin-ups + retirements executed at epoch boundaries.
+    pub transitions_applied: usize,
+    pub replicas_peak: usize,
+}
+
+impl TimelineResult {
+    /// Overall SLO attainment across every request.
+    pub fn slo_attainment(&self, slo_s: f64) -> f64 {
+        self.recorder.slo_attainment(slo_s)
+    }
+}
+
+/// In-flight request state inside a replica engine.
+struct InFlight {
+    arrival_s: f64,
+    ctx_tokens: f64,
+    remaining_out: u32,
+    /// Epoch the request arrived in (for per-epoch accounting).
+    epoch: usize,
+}
+
+/// One replica instance with a rental lifetime.
+struct Instance {
+    config: ReplicaConfig,
+    model_idx: usize,
+    candidate: usize,
+    rent_from_s: f64,
+    /// Serviceable from here (rent_from + spin-up for mid-timeline rents).
+    active_from_s: f64,
+    /// Set when a later epoch retires the replica: admit nothing after
+    /// this; finish in-flight work, then release.
+    retire_at_s: Option<f64>,
+    queue: VecDeque<Request>,
+    batch: Vec<InFlight>,
+    token_capacity: f64,
+    busy: BusyTracker,
+    next_event: Option<f64>,
+}
+
+impl Instance {
+    fn tokens_in_use(&self) -> f64 {
+        self.batch.iter().map(|r| r.ctx_tokens).sum()
+    }
+
+    fn retired_by(&self, t: f64) -> bool {
+        self.retire_at_s.map(|r| t + 1e-9 >= r).unwrap_or(false)
+    }
+}
+
+/// Event queue entry ordered by time (min-heap via reversed ordering).
+#[derive(PartialEq)]
+struct Event {
+    time: f64,
+    replica: usize,
+}
+
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// Index of the epoch in force at time `t` (arrivals before the first step
+/// belong to epoch 0).
+fn epoch_of_time(steps: &[TimelineStep], t: f64) -> usize {
+    let mut e = 0;
+    for (i, s) in steps.iter().enumerate() {
+        if s.start_s <= t {
+            e = i;
+        } else {
+            break;
+        }
+    }
+    e
+}
+
+/// Admit one request into a replica's continuous batch: prefill occupies
+/// the engine once, then the request joins the decode rounds. Shared by the
+/// normal admission loop and the forced drain of stranded requests so the
+/// two paths can never diverge.
+fn admit_one(
+    r: &mut Instance,
+    req: Request,
+    steps: &[TimelineStep],
+    models: &[ModelSpec],
+    perf: &PerfModel,
+    now: f64,
+) {
+    let epoch = epoch_of_time(steps, req.arrival_s);
+    let model = &models[r.model_idx];
+    let pre = perf.prefill_cost(&r.config, model, req.input_tokens as f64);
+    r.batch.push(InFlight {
+        arrival_s: req.arrival_s,
+        ctx_tokens: req.input_tokens as f64,
+        remaining_out: req.output_tokens.max(1),
+        epoch,
+    });
+    r.busy.add_busy(now, pre);
+    r.next_event = Some(r.next_event.unwrap_or(now).max(now) + pre);
+}
+
+/// Execute a plan timeline against per-model traces.
+///
+/// `traces[m]` must contain requests whose `arrival_s` span the timeline
+/// horizon; each request is dispatched under the plan of the epoch it
+/// arrives in (deficit-credit over that plan's `x_{c,w}` fractions, then
+/// least-loaded among that entry's *active* replicas, steering around ones
+/// still spinning up).
+pub fn simulate_timeline(
+    steps: &[TimelineStep],
+    models: &[ModelSpec],
+    traces: &[Trace],
+    perf: &PerfModel,
+    opts: &TimelineOptions,
+) -> TimelineResult {
+    assert!(!steps.is_empty(), "timeline needs at least one step");
+    let ncand = steps[0].problem.candidates.len();
+    for s in steps {
+        assert_eq!(
+            s.problem.candidates.len(),
+            ncand,
+            "all timeline steps must share one candidate space"
+        );
+    }
+    let mut rng = Xoshiro256::seed_from_u64(opts.seed);
+
+    // ---- materialise the fleet across transitions -----------------------
+    let mut instances: Vec<Instance> = Vec::new();
+    // Alive instance ids per candidate, evolved step by step.
+    let mut alive: Vec<Vec<usize>> = vec![Vec::new(); ncand];
+    // Fleet snapshot per epoch: members[e][ci] = instance ids serving
+    // candidate ci during epoch e.
+    let mut members: Vec<Vec<Vec<usize>>> = Vec::with_capacity(steps.len());
+    let mut transitions_applied = 0usize;
+    for (si, step) in steps.iter().enumerate() {
+        let t = step.start_s;
+        let want = crate::orchestrator::replica_counts(step.problem, step.plan);
+        for (ci, &target) in want.iter().enumerate() {
+            let have = alive[ci].len() as u32;
+            if target > have {
+                let cand = &step.problem.candidates[ci];
+                let config = cand
+                    .replica
+                    .clone()
+                    .expect("simulate_timeline requires concrete replica configs");
+                let model = &models[cand.model];
+                let cap = perf.max_batch_tokens(&config, model);
+                for _ in 0..(target - have) {
+                    let id = instances.len();
+                    instances.push(Instance {
+                        config: config.clone(),
+                        model_idx: cand.model,
+                        candidate: ci,
+                        rent_from_s: t,
+                        active_from_s: if si == 0 { t } else { t + opts.spin_up_s },
+                        retire_at_s: None,
+                        queue: VecDeque::new(),
+                        batch: Vec::new(),
+                        token_capacity: cap,
+                        busy: BusyTracker::default(),
+                        next_event: None,
+                    });
+                    alive[ci].push(id);
+                    if si > 0 {
+                        transitions_applied += 1;
+                    }
+                }
+            } else if target < have {
+                // Retire the newest replicas first (they carry the least
+                // warmed-up state). Make-before-break: they keep serving
+                // through the replacements' spin-up window, then drain —
+                // the rental overlap this creates is the true price of a
+                // fleet reshuffle.
+                for _ in 0..(have - target) {
+                    let id = alive[ci].pop().unwrap();
+                    instances[id].retire_at_s = Some(t + opts.spin_up_s);
+                    transitions_applied += 1;
+                }
+            }
+        }
+        members.push(alive.clone());
+    }
+    assert!(!instances.is_empty(), "timeline has no replicas");
+    let replicas_peak = members
+        .iter()
+        .map(|m| m.iter().map(|ids| ids.len()).sum::<usize>())
+        .max()
+        .unwrap_or(0);
+
+    // Active fleet per epoch per model (for routing around spin-ups).
+    let nmodels = traces.len();
+    let mut model_members: Vec<Vec<Vec<usize>>> = Vec::with_capacity(steps.len());
+    for epoch_members in &members {
+        let mut per_model: Vec<Vec<usize>> = vec![Vec::new(); nmodels];
+        for ids in epoch_members {
+            for &id in ids {
+                per_model[instances[id].model_idx].push(id);
+            }
+        }
+        model_members.push(per_model);
+    }
+
+    // ---- dispatch requests ----------------------------------------------
+    // Same deficit-credit scheme as `simulate_plan`, but per epoch: each
+    // request consults the plan in force at its arrival.
+    let nw = steps[0]
+        .problem
+        .demands
+        .iter()
+        .map(|d| d.len())
+        .max()
+        .unwrap_or(0);
+    let mut arrivals: Vec<Vec<Request>> = vec![Vec::new(); instances.len()];
+    let mut inst_load: Vec<f64> = vec![0.0; instances.len()];
+    let mut credits: Vec<Vec<Vec<f64>>> = steps
+        .iter()
+        .map(|s| vec![vec![0.0; s.plan.entries.len()]; nmodels * nw])
+        .collect();
+    let mut epoch_arrivals = vec![0usize; steps.len()];
+    let total_requests: usize = traces.iter().map(|t| t.len()).sum();
+
+    for (m, trace) in traces.iter().enumerate() {
+        for req in &trace.requests {
+            let w = req.workload.index;
+            let e = epoch_of_time(steps, req.arrival_s);
+            epoch_arrivals[e] += 1;
+            let plan = steps[e].plan;
+            let problem = steps[e].problem;
+            let credit_row = &mut credits[e][m * nw + w];
+            let mut best: Option<usize> = None;
+            for (ei, entry) in plan.entries.iter().enumerate() {
+                if problem.candidates[entry.candidate].model != m {
+                    continue;
+                }
+                let f = entry.fractions.get(w).copied().unwrap_or(0.0);
+                if f <= 0.0 {
+                    continue;
+                }
+                credit_row[ei] += f;
+                if best.map(|b| credit_row[ei] > credit_row[b]).unwrap_or(true) {
+                    best = Some(ei);
+                }
+            }
+
+            // Replica selection: the chosen entry's active replicas first;
+            // otherwise any active replica of the model (route around
+            // spin-ups); otherwise the entry's earliest-activating replica
+            // (the request waits out the spin-up).
+            let active = |id: usize| instances[id].active_from_s <= req.arrival_s + 1e-9;
+            let least_loaded = |ids: &[usize]| -> Option<usize> {
+                ids.iter()
+                    .copied()
+                    .min_by(|&a, &b| inst_load[a].partial_cmp(&inst_load[b]).unwrap())
+            };
+            let mut chosen: Option<usize> = None;
+            if let Some(ei) = best {
+                credit_row[ei] -= 1.0;
+                let ci = plan.entries[ei].candidate;
+                let entry_ids = &members[e][ci];
+                let active_ids: Vec<usize> =
+                    entry_ids.iter().copied().filter(|&id| active(id)).collect();
+                chosen = least_loaded(&active_ids)
+                    .or_else(|| {
+                        let around: Vec<usize> = model_members[e][m]
+                            .iter()
+                            .copied()
+                            .filter(|&id| active(id))
+                            .collect();
+                        least_loaded(&around)
+                    })
+                    .or_else(|| {
+                        entry_ids.iter().copied().min_by(|&a, &b| {
+                            instances[a]
+                                .active_from_s
+                                .partial_cmp(&instances[b].active_from_s)
+                                .unwrap()
+                        })
+                    });
+            }
+            let ri = match chosen {
+                Some(ri) => ri,
+                None => {
+                    // Plan does not cover this workload in this epoch (or
+                    // the epoch has no replicas for the entry at all):
+                    // fall back to any replica of the model.
+                    let pool: Vec<usize> = if !model_members[e][m].is_empty() {
+                        model_members[e][m].clone()
+                    } else {
+                        instances
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, r)| r.model_idx == m)
+                            .map(|(i, _)| i)
+                            .collect()
+                    };
+                    assert!(!pool.is_empty(), "no replica for model {m}");
+                    pool[rng.index(pool.len())]
+                }
+            };
+            inst_load[ri] += (req.input_tokens + req.output_tokens) as f64;
+            arrivals[ri].push(req.clone());
+        }
+    }
+
+    // ---- event loop ------------------------------------------------------
+    let mut recorder = LatencyRecorder::new();
+    let mut epoch_recorders: Vec<LatencyRecorder> =
+        (0..steps.len()).map(|_| LatencyRecorder::new()).collect();
+    let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+    let mut arrival_idx = vec![0usize; instances.len()];
+
+    for (ri, reqs) in arrivals.iter().enumerate() {
+        if !reqs.is_empty() {
+            heap.push(Event {
+                time: reqs[0].arrival_s.max(instances[ri].active_from_s),
+                replica: ri,
+            });
+        }
+    }
+
+    let max_batch = opts.max_batch;
+    while let Some(Event { time, replica: ri }) = heap.pop() {
+        let now = time;
+        // Deliver arrivals up to `now`.
+        {
+            let reqs = &arrivals[ri];
+            let r = &mut instances[ri];
+            while arrival_idx[ri] < reqs.len() && reqs[arrival_idx[ri]].arrival_s <= now {
+                r.queue.push_back(reqs[arrival_idx[ri]].clone());
+                arrival_idx[ri] += 1;
+            }
+        }
+        if let Some(t) = instances[ri].next_event {
+            if t > now {
+                continue;
+            }
+        }
+
+        // Drain hand-off: a retired replica gives its queued (unstarted)
+        // requests to the least-loaded surviving replica of the model. If
+        // no survivor is active yet, it keeps draining them itself.
+        if instances[ri].retired_by(now) && !instances[ri].queue.is_empty() {
+            let model_idx = instances[ri].model_idx;
+            let target = instances
+                .iter()
+                .enumerate()
+                .filter(|&(i, r)| {
+                    i != ri
+                        && r.model_idx == model_idx
+                        && !r.retired_by(now)
+                        && r.active_from_s <= now + 1e-9
+                })
+                .min_by(|(_, a), (_, b)| {
+                    let la = a.tokens_in_use() + a.queue.len() as f64;
+                    let lb = b.tokens_in_use() + b.queue.len() as f64;
+                    la.partial_cmp(&lb).unwrap()
+                })
+                .map(|(i, _)| i);
+            if let Some(ti) = target {
+                let moved: Vec<Request> = instances[ri].queue.drain(..).collect();
+                for req in moved {
+                    instances[ti].queue.push_back(req);
+                }
+                heap.push(Event {
+                    time: now,
+                    replica: ti,
+                });
+            }
+        }
+
+        // Not serviceable yet (spinning up): come back when active.
+        if now + 1e-9 < instances[ri].active_from_s {
+            heap.push(Event {
+                time: instances[ri].active_from_s,
+                replica: ri,
+            });
+            continue;
+        }
+
+        // Work stealing among live replicas (see `simulate_plan`): an
+        // under-loaded active replica pulls queued requests from the
+        // longest same-model queue of another live replica.
+        if instances[ri].queue.is_empty() && !instances[ri].retired_by(now) {
+            let free = max_batch.saturating_sub(instances[ri].batch.len());
+            for _ in 0..free {
+                let model_idx = instances[ri].model_idx;
+                let donor = instances
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, r)| i != ri && r.model_idx == model_idx && r.queue.len() > 1)
+                    .max_by_key(|(_, r)| r.queue.len())
+                    .map(|(i, _)| i);
+                match donor {
+                    Some(d) => {
+                        let stolen = instances[d].queue.pop_back().unwrap();
+                        instances[ri].queue.push_back(stolen);
+                    }
+                    None => break,
+                }
+            }
+        }
+
+        // Step: admit (unless retired), then advance the in-flight batch.
+        let admit = !instances[ri].retired_by(now);
+        let (step_end, completed) = {
+            let r = &mut instances[ri];
+            r.next_event = None;
+            while admit && !r.queue.is_empty() && r.batch.len() < max_batch {
+                let req = r.queue.front().unwrap();
+                let need = req.input_tokens as f64 + req.output_tokens as f64;
+                if r.tokens_in_use() + need > r.token_capacity && !r.batch.is_empty() {
+                    break;
+                }
+                let req = r.queue.pop_front().unwrap();
+                admit_one(r, req, steps, models, perf, now);
+            }
+            // A retired replica with stranded requests (no survivor at
+            // hand-off time) still drains them rather than dropping them.
+            if !admit && r.batch.is_empty() && !r.queue.is_empty() {
+                let req = r.queue.pop_front().unwrap();
+                admit_one(r, req, steps, models, perf, now);
+            }
+
+            if r.batch.is_empty() {
+                (None, Vec::new())
+            } else {
+                let model = &models[r.model_idx];
+                let b = r.batch.len() as f64;
+                let mean_ctx = r.tokens_in_use() / b;
+                let step = perf.decode_step_time(&r.config, model, b, mean_ctx);
+                let start = r.next_event.unwrap_or(now).max(now);
+                let end = start + step;
+                r.busy.add_busy(start, step);
+                let mut completed = Vec::new();
+                for f in &mut r.batch {
+                    f.remaining_out -= 1;
+                    f.ctx_tokens += 1.0;
+                }
+                r.batch.retain(|f| {
+                    if f.remaining_out == 0 {
+                        completed.push((f.arrival_s, f.epoch));
+                        false
+                    } else {
+                        true
+                    }
+                });
+                r.next_event = Some(end);
+                (Some(end), completed)
+            }
+        };
+
+        match step_end {
+            Some(end) => {
+                for (arrival_s, epoch) in completed {
+                    recorder.record(end, end - arrival_s);
+                    epoch_recorders[epoch].record(end, end - arrival_s);
+                }
+                heap.push(Event {
+                    time: end,
+                    replica: ri,
+                });
+            }
+            None => {
+                if arrival_idx[ri] < arrivals[ri].len() {
+                    heap.push(Event {
+                        time: arrivals[ri][arrival_idx[ri]]
+                            .arrival_s
+                            .max(instances[ri].active_from_s),
+                        replica: ri,
+                    });
+                }
+            }
+        }
+    }
+
+    assert_eq!(
+        recorder.count(),
+        total_requests,
+        "timeline simulator lost requests"
+    );
+    let makespan = recorder.makespan();
+    let sim_end = makespan.max(steps.last().unwrap().start_s);
+
+    // ---- per-epoch accounting -------------------------------------------
+    let mut epochs = Vec::with_capacity(steps.len());
+    let mut total_rental_usd = 0.0;
+    for (i, s) in steps.iter().enumerate() {
+        let end = if i + 1 < steps.len() {
+            steps[i + 1].start_s
+        } else {
+            sim_end.max(s.start_s)
+        };
+        let mut rental = 0.0;
+        for inst in &instances {
+            let rent_end = match inst.retire_at_s {
+                Some(r) => r.max(inst.busy.last_event_s),
+                None => sim_end,
+            };
+            let o_start = inst.rent_from_s.max(s.start_s);
+            let o_end = rent_end.min(end);
+            if o_end > o_start {
+                rental +=
+                    (o_end - o_start) / 3600.0 * s.problem.candidates[inst.candidate].cost;
+            }
+        }
+        total_rental_usd += rental;
+        let rec = &epoch_recorders[i];
+        epochs.push(EpochStats {
+            start_s: s.start_s,
+            end_s: end,
+            arrivals: epoch_arrivals[i],
+            completed: rec.count(),
+            slo_attainment: rec.slo_attainment(opts.slo_latency_s),
+            p90_s: rec.latency_percentile(90.0),
+            rental_usd: rental,
+        });
+    }
+
+    TimelineResult {
+        recorder,
+        epochs,
+        makespan,
+        total_rental_usd,
+        transitions_applied,
+        replicas_peak,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::availability;
+    use crate::perf_model::{ModelSpec, PerfModel};
+    use crate::profiler::Profile;
+    use crate::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+    use crate::sched::enumerate::EnumOptions;
+    use crate::sched::SchedProblem;
+    use crate::workload::{synthesize_trace, SynthOptions, TraceMix};
+
+    struct Fixture {
+        model: ModelSpec,
+        perf: PerfModel,
+        problems: Vec<SchedProblem>,
+        plans: Vec<crate::sched::ServingPlan>,
+        starts: Vec<f64>,
+    }
+
+    impl Fixture {
+        fn steps(&self) -> Vec<TimelineStep<'_>> {
+            self.starts
+                .iter()
+                .enumerate()
+                .map(|(i, &start_s)| TimelineStep {
+                    start_s,
+                    problem: &self.problems[i],
+                    plan: &self.plans[i],
+                })
+                .collect()
+        }
+    }
+
+    /// Build a 3-epoch crash-and-recover timeline for Llama3-8B: full
+    /// budget, then a collapsed market, then recovery — ≥ 2 transitions.
+    fn crash_recover_fixture() -> Fixture {
+        let model = ModelSpec::llama3_8b();
+        let perf = PerfModel::default();
+        let profile = Profile::build(&model, &perf, &EnumOptions::default());
+        let mix = TraceMix::trace1();
+        let opts = BinarySearchOptions {
+            tolerance: 3.0,
+            ..Default::default()
+        };
+        let mk_problem = |avail_counts: [u32; 6], budget: f64| {
+            SchedProblem::from_profile(
+                &profile,
+                &mix,
+                600.0,
+                &crate::cloud::Availability::new(avail_counts),
+                budget,
+            )
+        };
+        let calm = availability(1).counts;
+        let crash = [2u32, 2, 2, 1, 1, 2];
+        let problems = vec![
+            mk_problem(calm, 30.0),
+            mk_problem(crash, 30.0),
+            mk_problem(calm, 30.0),
+        ];
+        let mut plans = Vec::new();
+        let mut incumbent: Option<crate::sched::ServingPlan> = None;
+        for p in &problems {
+            let plan = match &incumbent {
+                None => solve_binary_search(p, &opts).0.expect("initial plan"),
+                Some(inc) => {
+                    let mut stats = crate::sched::binary_search::SearchStats::default();
+                    crate::orchestrator::incremental_repair(p, inc, &mut stats)
+                        .or_else(|| solve_binary_search(p, &opts).0)
+                        .expect("replan")
+                }
+            };
+            plan.validate(p, 1e-3).expect("valid epoch plan");
+            incumbent = Some(plan.clone());
+            plans.push(plan);
+        }
+        Fixture {
+            model,
+            perf,
+            problems,
+            plans,
+            starts: vec![0.0, 120.0, 240.0],
+        }
+    }
+
+    fn trace_for(n: usize, rate: f64, seed: u64) -> Trace {
+        synthesize_trace(
+            &TraceMix::trace1(),
+            &SynthOptions {
+                num_requests: n,
+                arrival_rate: rate,
+                length_sigma: 0.15,
+                seed,
+            },
+        )
+    }
+
+    #[test]
+    fn timeline_executes_transitions_and_completes_all_requests() {
+        let fx = crash_recover_fixture();
+        let steps = fx.steps();
+        // ~2.5 req/s over 360 s spans all three epochs.
+        let trace = trace_for(900, 2.5, 17);
+        let result = simulate_timeline(
+            &steps,
+            std::slice::from_ref(&fx.model),
+            std::slice::from_ref(&trace),
+            &fx.perf,
+            &TimelineOptions {
+                spin_up_s: 30.0,
+                ..Default::default()
+            },
+        );
+        assert_eq!(result.recorder.count(), 900);
+        assert!(
+            result.transitions_applied >= 2,
+            "only {} transitions",
+            result.transitions_applied
+        );
+        assert_eq!(result.epochs.len(), 3);
+        assert!(result.makespan > 240.0, "makespan {}", result.makespan);
+        assert!(result.total_rental_usd > 0.0);
+        // Every epoch saw traffic and paid rent.
+        for e in &result.epochs {
+            assert!(e.arrivals > 0, "epoch at {} starved", e.start_s);
+            assert!(e.rental_usd > 0.0);
+            assert!(e.end_s > e.start_s);
+        }
+        let completed: usize = result.epochs.iter().map(|e| e.completed).sum();
+        assert_eq!(completed, 900, "per-epoch accounting lost requests");
+    }
+
+    #[test]
+    fn crash_epoch_pays_less_rent_per_second() {
+        // The crash plan rents a fraction of the calm fleet, so its rental
+        // rate must drop accordingly.
+        let fx = crash_recover_fixture();
+        let steps = fx.steps();
+        let trace = trace_for(600, 2.0, 23);
+        let result = simulate_timeline(
+            &steps,
+            std::slice::from_ref(&fx.model),
+            std::slice::from_ref(&trace),
+            &fx.perf,
+            &TimelineOptions {
+                spin_up_s: 20.0,
+                ..Default::default()
+            },
+        );
+        let rate = |e: &EpochStats| e.rental_usd / (e.end_s - e.start_s).max(1e-9);
+        // Epoch 1 runs the clamped crash plan; epoch 0 the full plan. The
+        // crash epoch still pays drain tails, so compare with headroom.
+        assert!(
+            rate(&result.epochs[1]) < rate(&result.epochs[0]),
+            "crash epoch rate {} vs calm {}",
+            rate(&result.epochs[1]),
+            rate(&result.epochs[0])
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let fx = crash_recover_fixture();
+        let steps = fx.steps();
+        let trace = trace_for(400, 2.0, 5);
+        let run = || {
+            simulate_timeline(
+                &steps,
+                std::slice::from_ref(&fx.model),
+                std::slice::from_ref(&trace),
+                &fx.perf,
+                &TimelineOptions::default(),
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.recorder.count(), b.recorder.count());
+        assert!((a.makespan - b.makespan).abs() < 1e-9);
+        assert!((a.total_rental_usd - b.total_rental_usd).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_step_timeline_matches_static_sim_contract() {
+        // A one-step timeline is the static case: all requests complete,
+        // no transitions, rent accrues for the whole horizon.
+        let fx = crash_recover_fixture();
+        let steps = vec![fx.steps()[0]];
+        let trace = trace_for(300, 0.0, 9);
+        let result = simulate_timeline(
+            &steps,
+            std::slice::from_ref(&fx.model),
+            std::slice::from_ref(&trace),
+            &fx.perf,
+            &TimelineOptions::default(),
+        );
+        assert_eq!(result.transitions_applied, 0);
+        assert_eq!(result.recorder.count(), 300);
+        assert_eq!(result.epochs.len(), 1);
+        let e = &result.epochs[0];
+        assert!((e.slo_attainment - result.slo_attainment(120.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ghost_fleet_without_repair_costs_at_least_as_much() {
+        // Keep the *calm* plan through the crash (a "ghost" fleet that
+        // pretends the preempted GPUs still exist) vs the repaired
+        // timeline: the ghost fleet is a superset of the repaired one at
+        // every instant, so it must pay at least as much rent.
+        let fx = crash_recover_fixture();
+        let steps = fx.steps();
+        let static_steps = vec![
+            TimelineStep {
+                start_s: fx.starts[0],
+                problem: &fx.problems[0],
+                plan: &fx.plans[0],
+            },
+            TimelineStep {
+                start_s: fx.starts[1],
+                problem: &fx.problems[1],
+                plan: &fx.plans[0],
+            },
+            TimelineStep {
+                start_s: fx.starts[2],
+                problem: &fx.problems[2],
+                plan: &fx.plans[0],
+            },
+        ];
+        let trace = trace_for(600, 2.0, 31);
+        let opts = TimelineOptions {
+            spin_up_s: 20.0,
+            ..Default::default()
+        };
+        let repaired = simulate_timeline(
+            &steps,
+            std::slice::from_ref(&fx.model),
+            std::slice::from_ref(&trace),
+            &fx.perf,
+            &opts,
+        );
+        let ghost = simulate_timeline(
+            &static_steps,
+            std::slice::from_ref(&fx.model),
+            std::slice::from_ref(&trace),
+            &fx.perf,
+            &opts,
+        );
+        // The ghost fleet keeps every calm-market replica rented through
+        // the crash — it must pay at least as much as the repaired fleet.
+        assert!(
+            ghost.total_rental_usd >= repaired.total_rental_usd - 1e-6,
+            "ghost {} vs repaired {}",
+            ghost.total_rental_usd,
+            repaired.total_rental_usd
+        );
+    }
+}

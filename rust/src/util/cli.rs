@@ -94,6 +94,19 @@ impl Args {
         self.positional.first().map(|s| s.as_str())
     }
 
+    /// The shared reproducibility surface: `--seed N`. Every stochastic
+    /// harness (orchestrate subcommand, fig2_replan bench, examples) reads
+    /// the seed through this so runs are replayable from the command line.
+    pub fn seed(&self, default: u64) -> u64 {
+        self.get_u64("seed", default)
+    }
+
+    /// The shared reproducibility surface: `--epochs N` — how many market
+    /// events / plan epochs a timeline harness should run.
+    pub fn epochs(&self, default: usize) -> usize {
+        self.get_usize("epochs", default)
+    }
+
     /// Comma-separated list option, e.g. `--budgets 15,30,60`.
     pub fn get_list_f64(&self, name: &str, default: &[f64]) -> Vec<f64> {
         match self.get(name) {
@@ -162,5 +175,15 @@ mod tests {
         assert_eq!(a.get_or("x", "d"), "d");
         assert_eq!(a.get_usize("n", 7), 7);
         assert_eq!(a.subcommand(), None);
+    }
+
+    #[test]
+    fn seed_and_epochs_surface() {
+        let a = parse("orchestrate --seed 42 --epochs 12", &[]);
+        assert_eq!(a.seed(7), 42);
+        assert_eq!(a.epochs(8), 12);
+        let d = parse("orchestrate", &[]);
+        assert_eq!(d.seed(7), 7);
+        assert_eq!(d.epochs(8), 8);
     }
 }

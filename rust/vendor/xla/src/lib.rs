@@ -1,0 +1,184 @@
+//! API stub of the `xla-rs` PJRT bindings for the offline build
+//! environment.
+//!
+//! The real serving path (`hetserve::runtime::Engine`) drives compiled HLO
+//! executables through a PJRT CPU client. That needs the native XLA runtime,
+//! which cannot be built in this container (no crates.io, no C++ toolchain
+//! artifacts). This crate keeps the exact type/method surface the runtime
+//! uses so the whole workspace compiles and the planner/simulator stack —
+//! which never touches PJRT — is fully usable. Constructing a client
+//! returns a descriptive error, so `hetserve serve` fails gracefully at
+//! startup instead of at link time.
+//!
+//! Swap this path dependency for the real `xla` crate to enable the PJRT
+//! engine; no call sites change.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversion into
+/// `anyhow::Error` (it implements `std::error::Error + Send + Sync`).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "the native XLA/PJRT runtime is unavailable in this offline build \
+     (rust/vendor/xla is an API stub); planner, simulator, and orchestrator \
+     paths do not need it";
+
+/// Element types a [`Literal`] can be built from.
+pub trait NativeType: Copy + 'static {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// A host-side tensor value. The stub only tracks the element count and the
+/// requested shape — enough to satisfy construction/reshape call sites that
+/// run before any executable is invoked.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    element_count: usize,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            element_count: data.len(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reshape; errors if the element count does not match the new shape.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.element_count {
+            return Err(Error::new(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.element_count
+            )));
+        }
+        Ok(Literal {
+            element_count: self.element_count,
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Split a tuple literal. Stub: tuples only come from executions, which
+    /// cannot happen without the native runtime.
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        Err(Error::new(UNAVAILABLE))
+    }
+
+    /// Copy out as a host vector. Stub: data never exists.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the native runtime).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// Compiled executable loaded on a client.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// PJRT client handle. `cpu()` fails in the stub — this is the single
+/// gate that makes `Engine::load` report unavailability up front.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::new(UNAVAILABLE))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(UNAVAILABLE))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_bookkeeping() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+}
