@@ -1,30 +1,36 @@
 //! Quickstart for the online replanning subsystem: stream a fluctuating
-//! GPU market, let the orchestrator adapt the serving plan epoch by epoch,
-//! and execute the resulting timeline in the time-varying simulator.
+//! GPU market *and* a drifting workload, let the orchestrator adapt the
+//! serving plan epoch by epoch on both axes, and execute the resulting
+//! timeline in the time-varying simulator.
 //!
 //! Run: `cargo run --release --example orchestrate -- --seed 7 --epochs 6`
 //! Flags: --seed N (default 7)  --epochs N (default 6)
 //!        --budget B (default 30)  --strategy static|incremental|full|escalate
+//!        --demand oracle|estimated|static (default estimated)
+//!        --demand-drift T (default 0.15)  --stationary (disable the shift)
 
-use hetserve::cloud::MarketEventStream;
-use hetserve::orchestrator::{orchestrate, OrchestratorOptions, ReplanStrategy};
+use hetserve::cloud::{MarketEvent, MarketEventStream};
+use hetserve::orchestrator::{OrchestratorOptions, ReplanStrategy};
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
 use hetserve::sched::enumerate::EnumOptions;
 use hetserve::sched::SchedProblem;
-use hetserve::sim::{simulate_timeline, TimelineOptions};
+use hetserve::sim::{run_closed_loop, ClosedLoopOptions, DemandMode, TimelineOptions};
 use hetserve::util::cli::Args;
-use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix};
+use hetserve::workload::{synthesize_trace_schedule, MixSchedule, SynthOptions, TraceMix};
 
 fn main() {
-    let args = Args::parse(&[]);
+    let args = Args::parse(&["stationary"]);
     let seed = args.seed(7);
     let epochs = args.epochs(6).max(1);
     let budget = args.get_f64("budget", 30.0);
     let strategy = ReplanStrategy::by_name(args.get_or("strategy", "escalate"))
         .expect("unknown --strategy");
+    let mode = DemandMode::by_name(args.get_or("demand", "estimated"))
+        .expect("unknown --demand (oracle|estimated|static)");
     let tick_s = 900.0;
     let rate = 2.0;
+    let horizon_s = epochs as f64 * tick_s;
 
     // 1. Profile once, as for one-shot planning.
     let model = ModelSpec::llama3_8b();
@@ -32,34 +38,71 @@ fn main() {
     let profile = Profile::build(&model, &perf, &EnumOptions::default());
     let mix = TraceMix::trace1();
 
-    // 2. Stream the market: availability + prices drift, spike, preempt.
-    let events: Vec<_> = MarketEventStream::new(seed, epochs, tick_s).collect();
+    // 2. The demand process: by default the mixture shifts trace1 → trace3
+    //    (Mélange's scenario: the request-size mixture should re-decide
+    //    the GPU composition) while the rate ramps 2 → 3 req/s.
+    let schedule = if args.flag("stationary") {
+        MixSchedule::constant(mix.clone(), rate)
+    } else {
+        MixSchedule::shift(
+            "trace1-to-trace3",
+            (mix.clone(), rate),
+            (TraceMix::trace3(), 1.5 * rate),
+            0.25 * horizon_s,
+            0.75 * horizon_s,
+        )
+        .expect("valid shift schedule")
+    };
+
+    // 3. Stream the market: availability + prices drift, spike, preempt.
+    let markets: Vec<MarketEvent> = MarketEventStream::new(seed, epochs, tick_s).collect();
     let base = SchedProblem::from_profile(
         &profile,
         &mix,
         rate * tick_s,
-        &events[0].avail,
+        &markets[0].avail,
         budget,
     );
 
-    // 3. Close the loop: one plan epoch per market event.
-    let report = orchestrate(
-        &base,
-        &events,
-        &OrchestratorOptions {
-            strategy,
+    // 4. Synthesize the *observed* arrivals from the schedule and close
+    //    the loop: the demand channel is an oracle, a causal estimator
+    //    over those arrivals, or frozen — per --demand.
+    let trace = synthesize_trace_schedule(
+        &schedule,
+        horizon_s,
+        &SynthOptions {
+            length_sigma: 0.2,
+            seed,
             ..Default::default()
         },
-    )
-    .expect("no feasible plan for the initial market");
-    for e in &report.epochs {
+    );
+    let opts = ClosedLoopOptions {
+        orchestrator: OrchestratorOptions {
+            strategy,
+            demand_drift_threshold: args.demand_drift(0.15),
+            ..Default::default()
+        },
+        timeline: TimelineOptions {
+            seed,
+            ..Default::default()
+        },
+        mode,
+        ..Default::default()
+    };
+    let r = run_closed_loop(&base, &markets, &schedule, &trace, &model, &perf, &opts)
+        .expect("no feasible plan for the initial world");
+
+    for (e, mix_err) in r.report.epochs.iter().zip(&r.mix_error) {
         println!(
-            "epoch {:>2} @ {:>6.0}s  drift {:.3}  plan {:>6.2} $/h  \
-             +{} / -{} replicas  migration {:.3} $  {}{}",
+            "epoch {:>2} @ {:>6.0}s  sup {:.3} dem {:.3} (mix err {:.3})  \
+             plan {:>6.2} $/h  {:.2} req/s  +{} / -{} replicas  migration {:.3} $  {}{}{}",
             e.index,
             e.start_s,
-            e.drift,
+            e.supply_drift,
+            e.demand_drift,
+            mix_err,
             e.plan.cost(&e.problem),
+            e.demand.rate_rps,
             e.diff.spun_up_replicas(),
             e.diff.drained_replicas(),
             e.migration.dollars,
@@ -71,40 +114,28 @@ fn main() {
                 "absorbed"
             },
             if e.escalated { " (escalated)" } else { "" },
+            if e.fast_path { " (fast path)" } else { "" },
         );
     }
 
-    // 4. Execute the timeline mid-trace: drains, spin-ups, SLO accounting.
-    let horizon_s = epochs as f64 * tick_s;
-    let trace = synthesize_trace(
-        &mix,
-        &SynthOptions {
-            num_requests: (rate * horizon_s) as usize,
-            arrival_rate: rate,
-            length_sigma: 0.2,
-            seed,
-        },
-    );
-    let steps = report.timeline_steps();
-    let result = simulate_timeline(
-        &steps,
-        std::slice::from_ref(&model),
-        std::slice::from_ref(&trace),
-        &perf,
-        &TimelineOptions {
-            seed,
-            ..Default::default()
-        },
-    );
+    // 5. The timeline was executed mid-trace: drains, spin-ups, SLO
+    //    accounting — all against the same observed arrivals the
+    //    estimator consumed.
     println!(
-        "served {} requests across {} epochs: rental {:.2} $, migration {:.2} $, \
-         {} replica moves, SLO(120s) {:.1}%, p90 {:.1}s",
-        result.recorder.count(),
-        report.epochs.len(),
-        result.total_rental_usd,
-        report.total_migration.dollars,
-        result.transitions_applied,
-        result.slo_attainment(120.0) * 100.0,
-        result.recorder.latency_percentile(90.0),
+        "served {} requests across {} epochs ({} demand): rental {:.2} $, migration {:.2} $, \
+         {} replans ({} escalations, {} fast-path), {} replica moves, \
+         SLO(120s) {:.1}%, p90 {:.1}s, mean mix err {:.3}",
+        r.sim.recorder.count(),
+        r.report.epochs.len(),
+        mode.name(),
+        r.sim.total_rental_usd,
+        r.report.total_migration.dollars,
+        r.report.replans,
+        r.report.escalations,
+        r.report.fast_paths,
+        r.sim.transitions_applied,
+        r.sim.slo_attainment(120.0) * 100.0,
+        r.sim.recorder.latency_percentile(90.0),
+        r.mean_mix_error(),
     );
 }

@@ -18,7 +18,7 @@
 //!
 //! Flags: --seed N --epochs N --tick-s S --rate RPS --budget B --slo S
 
-use hetserve::cloud::MarketEventStream;
+use hetserve::cloud::{attach_demand, MarketEvent, MarketEventStream};
 use hetserve::orchestrator::{orchestrate, OrchestratorOptions, ReplanStrategy};
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
@@ -27,7 +27,7 @@ use hetserve::sched::SchedProblem;
 use hetserve::sim::{simulate_timeline, TimelineOptions};
 use hetserve::util::bench::{cell, Table};
 use hetserve::util::cli::Args;
-use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix};
+use hetserve::workload::{synthesize_trace, MixSchedule, SynthOptions, TraceMix};
 
 struct StrategyOutcome {
     name: &'static str,
@@ -49,13 +49,16 @@ fn main() {
     let profile = Profile::build(&model, &perf, &EnumOptions::default());
     let mix = TraceMix::trace1();
 
-    let events: Vec<_> = MarketEventStream::new(seed, epochs, tick_s).collect();
+    // Supply-only scenario: the market fluctuates, the workload is
+    // stationary, so every strategy difference below is supply-driven.
+    let markets: Vec<MarketEvent> = MarketEventStream::new(seed, epochs, tick_s).collect();
+    let events = attach_demand(&markets, &MixSchedule::constant(mix.clone(), rate));
     let horizon_s = epochs as f64 * tick_s;
     let base = SchedProblem::from_profile(
         &profile,
         &mix,
         rate * tick_s,
-        &events[0].avail,
+        &markets[0].avail,
         budget,
     );
     let trace = synthesize_trace(

@@ -1,11 +1,16 @@
 //! Cloud GPU market model: real-time availability snapshots (Table 3),
 //! a Vast.ai-style fluctuating availability generator (Figure 2), per-type
-//! price books, a timestamped market *event stream* feeding the online
-//! replanner ([`crate::orchestrator`]), and rental-cost accounting.
+//! price books, rental-cost accounting, and the timestamped event streams
+//! feeding the online replanner ([`crate::orchestrator`]): the supply-only
+//! [`MarketEventStream`] and the unified [`WorldEventStream`] that pairs
+//! every market tick with a [`DemandSnapshot`] sampled from a
+//! [`MixSchedule`] — the two-channel *world signal* the orchestrator
+//! replans against.
 
 use crate::catalog::{GpuSpec, GpuType};
 use crate::util::json::Json;
 use crate::util::rng::Xoshiro256;
+use crate::workload::{DemandSnapshot, MixSchedule};
 
 /// How many GPUs of each type are rentable right now.
 /// Indexed by `GpuType::index()` (A6000, A40, L40, A100, H100, 4090).
@@ -212,9 +217,11 @@ impl PriceBook {
             .sum()
     }
 
-    /// Aggregate relative price deviation from the base book (mean of
-    /// |p/p_base − 1| across types) — the price half of the replanner's
-    /// drift metric.
+    /// Aggregate relative price deviation from the static Table 1 base
+    /// book (mean of |p/p_base − 1| across types). Diagnostic only — the
+    /// replanner's drift metric
+    /// ([`crate::orchestrator::market_drift`]) measures prices against
+    /// the incumbent's *basis* book, not this static base.
     pub fn deviation_from_base(&self) -> f64 {
         let base = Self::base();
         GpuType::ALL
@@ -361,6 +368,80 @@ impl Iterator for MarketEventStream {
             avail,
             prices,
             kind,
+        })
+    }
+}
+
+/// One tick of the unified world signal: the supply channel (a
+/// [`MarketEvent`]: availability + prices) paired with the demand channel
+/// (a [`DemandSnapshot`]: arrival rate + workload mixture) in force from
+/// `t_s()` until the next event. The orchestrator folds these instead of
+/// bare market events so plans track *both* sides of the drift.
+#[derive(Clone, Debug)]
+pub struct WorldEvent {
+    pub market: MarketEvent,
+    pub demand: DemandSnapshot,
+}
+
+impl WorldEvent {
+    /// Pair a market observation with whatever the demand channel carries
+    /// at that instant (a schedule sample, an estimator snapshot, or a
+    /// frozen stationary mix).
+    pub fn new(market: MarketEvent, demand: DemandSnapshot) -> WorldEvent {
+        WorldEvent { market, demand }
+    }
+
+    /// Simulated observation time, seconds from stream start.
+    pub fn t_s(&self) -> f64 {
+        self.market.t_s
+    }
+}
+
+/// Pair each market event with the schedule's demand snapshot at that
+/// event's timestamp. Deterministic: the market stream is seeded and the
+/// schedule is sampled exactly.
+pub fn attach_demand(markets: &[MarketEvent], schedule: &MixSchedule) -> Vec<WorldEvent> {
+    markets
+        .iter()
+        .map(|m| WorldEvent {
+            demand: schedule.at(m.t_s),
+            market: m.clone(),
+        })
+        .collect()
+}
+
+/// Iterator of [`WorldEvent`]s: the seeded [`MarketEventStream`] supply
+/// walk zipped with a [`MixSchedule`] demand channel sampled at each tick.
+/// Fully deterministic from the seed, like the market stream it wraps.
+#[derive(Clone, Debug)]
+pub struct WorldEventStream {
+    market: MarketEventStream,
+    schedule: MixSchedule,
+}
+
+impl WorldEventStream {
+    /// `ticks` events at `tick_s`-second spacing, first event at t = 0.
+    pub fn new(seed: u64, ticks: usize, tick_s: f64, schedule: MixSchedule) -> Self {
+        Self {
+            market: MarketEventStream::new(seed, ticks, tick_s),
+            schedule,
+        }
+    }
+
+    /// Total simulated horizon covered by the remaining events, seconds.
+    pub fn horizon_s(&self) -> f64 {
+        self.market.horizon_s()
+    }
+}
+
+impl Iterator for WorldEventStream {
+    type Item = WorldEvent;
+
+    fn next(&mut self) -> Option<WorldEvent> {
+        let market = self.market.next()?;
+        Some(WorldEvent {
+            demand: self.schedule.at(market.t_s),
+            market,
         })
     }
 }
@@ -516,6 +597,48 @@ mod tests {
                 let base = PriceBook::base().of(g);
                 assert!(p >= 0.5 * base - 1e-9 && p <= 4.0 * base + 1e-9, "price {p}");
             }
+        }
+    }
+
+    #[test]
+    fn world_event_stream_zips_market_with_schedule_demand() {
+        use crate::workload::TraceMix;
+        let schedule = MixSchedule::shift(
+            "world-shift",
+            (TraceMix::trace1(), 2.0),
+            (TraceMix::trace3(), 4.0),
+            0.0,
+            9.0 * 900.0,
+        )
+        .expect("valid shift");
+        let events: Vec<WorldEvent> =
+            WorldEventStream::new(7, 10, 900.0, schedule.clone()).collect();
+        assert_eq!(events.len(), 10);
+        // Market channel identical to the bare stream under the same seed.
+        let markets: Vec<MarketEvent> = MarketEventStream::new(7, 10, 900.0).collect();
+        for (w, m) in events.iter().zip(&markets) {
+            assert_eq!(w.market.avail, m.avail);
+            assert_eq!(w.market.prices, m.prices);
+            assert!((w.t_s() - m.t_s).abs() < 1e-9);
+            // Demand channel equals the schedule sampled at the tick.
+            let want = schedule.at(m.t_s);
+            assert_eq!(w.demand, want);
+        }
+        // The demand channel actually moves across the horizon.
+        assert!(events[0].demand.rate_rps < events[9].demand.rate_rps);
+        assert!(events[0].demand.mix.total_variation(&events[9].demand.mix) > 0.3);
+        // attach_demand agrees with the zipped stream.
+        let attached = attach_demand(&markets, &schedule);
+        for (a, b) in attached.iter().zip(&events) {
+            assert_eq!(a.demand, b.demand);
+            assert_eq!(a.market.avail, b.market.avail);
+        }
+        // Determinism end to end.
+        let again: Vec<WorldEvent> =
+            WorldEventStream::new(7, 10, 900.0, schedule).collect();
+        for (a, b) in events.iter().zip(&again) {
+            assert_eq!(a.demand, b.demand);
+            assert_eq!(a.market.prices, b.market.prices);
         }
     }
 

@@ -7,19 +7,34 @@
 //! The crate is organised bottom-up:
 //! * [`util`] — offline substrates (json, cli, rng, pool, stats, bench, proptest)
 //! * [`catalog`] — GPU types, Table 1 specs, interconnects
-//! * [`workload`] — the nine workload types, Table 4 traces, synthesizer
-//! * [`cloud`] — availability snapshots (Table 3), market simulator, costs
+//! * [`workload`] — the nine workload types, Table 4 traces, synthesizer;
+//!   plus demand drift: time-varying mix schedules, non-stationary trace
+//!   synthesis, and the online mixture estimator
+//! * [`cloud`] — availability snapshots (Table 3), market simulator, costs,
+//!   and the event streams: supply-only market events and the unified
+//!   world events carrying a demand channel
 //! * [`perf_model`] — analytical roofline model replacing real-GPU profiling
 //! * [`profiler`] — `h_{c,w}` throughput tables for the scheduler
 //! * [`milp`] — from-scratch simplex + branch-and-bound MILP solver
 //! * [`sched`] — the paper's scheduling algorithm (§4.3, App D–G)
 //! * [`baselines`] — homogeneous / HexGen-like / ablation planners
-//! * [`orchestrator`] — online replanning over the fluctuating market:
-//!   plan-diff engine, incremental/escalating replanner, epoch timeline
+//! * [`orchestrator`] — online replanning over the drifting *world*
+//!   (supply and demand): plan-diff engine, two-axis drift thresholds,
+//!   assignment-LP fast path, incremental/escalating replanner, epoch
+//!   timeline
 //! * [`sim`] — discrete-event cluster simulator executing serving plans,
-//!   including time-varying timelines with mid-trace plan transitions
+//!   including time-varying timelines with mid-trace plan transitions and
+//!   the closed demand loop (estimator-driven replanning)
 //! * [`runtime`] — PJRT engine: loads AOT HLO artifacts, paged KV cache
 //! * [`coordinator`] — the real serving path: router, batcher, workers
+
+// Lint policy: CI runs `cargo clippy --all-targets -- -D warnings`. The
+// numeric kernels (simplex tableau, roofline model, market walks) index
+// several parallel arrays per loop, where iterator rewrites obscure the
+// math without removing a bounds check — those two pedantic-leaning style
+// lints are opted out crate-wide instead of case by case.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_range_contains)]
 
 pub mod baselines;
 pub mod catalog;

@@ -11,19 +11,23 @@
 
 use hetserve::baselines::homogeneous_plan;
 use hetserve::catalog::GpuType;
-use hetserve::cloud::{availability, MarketEventKind, MarketEventStream, MarketSim};
+use hetserve::cloud::{availability, MarketEvent, MarketEventKind, MarketEventStream, MarketSim};
 use hetserve::coordinator::{serve, synth_requests, RouterPolicy, ServerOptions};
-use hetserve::orchestrator::{orchestrate, OrchestratorOptions, ReplanStrategy};
+use hetserve::orchestrator::{OrchestratorOptions, ReplanStrategy};
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
 use hetserve::runtime::{default_artifacts_dir, Engine};
 use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions, Feasibility};
 use hetserve::sched::enumerate::EnumOptions;
 use hetserve::sched::SchedProblem;
-use hetserve::sim::{simulate_plan, simulate_timeline, SimOptions, TimelineOptions};
+use hetserve::sim::{
+    run_closed_loop, simulate_plan, ClosedLoopOptions, DemandMode, SimOptions, TimelineOptions,
+};
 use hetserve::util::bench::{cell, Table};
 use hetserve::util::cli::Args;
-use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix, WorkloadType};
+use hetserve::workload::{
+    synthesize_trace, synthesize_trace_schedule, MixSchedule, SynthOptions, TraceMix, WorkloadType,
+};
 
 const HELP: &str = "\
 hetserve — cost-efficient LLM serving over heterogeneous GPUs
@@ -35,6 +39,9 @@ USAGE: hetserve <subcommand> [--options]
   orchestrate --model 8b --trace trace1 --budget 30 --epochs 8 --seed 7
               [--strategy static|incremental|full|escalate[:T]]
               [--tick-s 900] [--rate RPS] [--slo SECONDS]
+              [--demand oracle|estimated|static] [--demand-drift T]
+              [--shift-to TRACE|r1,..,r9] [--rate-end RPS]
+              [--shift-start FRAC] [--shift-end FRAC]
   serve       --requests 48 --replicas 2 --router jsq|rr [--arrival-rate RPS]
   profile     --model 70b
   market      --ticks 96 --seed 7
@@ -155,6 +162,29 @@ fn cmd_plan(args: &Args, run_sim: bool) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse `--shift-to`: a trace name (`trace3`) or nine comma-separated
+/// ratios (renormalised, so FP-rough CLI input is fine).
+fn parse_shift_target(args: &Args) -> anyhow::Result<Option<TraceMix>> {
+    let Some(spec) = args.get("shift-to") else {
+        return Ok(None);
+    };
+    if let Some(mix) = TraceMix::by_name(spec) {
+        return Ok(Some(mix));
+    }
+    let parts: Vec<&str> = spec.split(',').collect();
+    if parts.len() != 9 {
+        anyhow::bail!("--shift-to expects a trace name or 9 comma-separated ratios, got '{spec}'");
+    }
+    let mut arr = [0.0f64; 9];
+    for (r, p) in arr.iter_mut().zip(&parts) {
+        *r = p
+            .trim()
+            .parse::<f64>()
+            .map_err(|e| anyhow::anyhow!("--shift-to: bad ratio '{p}': {e}"))?;
+    }
+    Ok(Some(TraceMix::normalized("cli-shift-target", arr)?))
+}
+
 fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
     let model = ModelSpec::by_name(args.get_or("model", "8b")).expect("unknown --model");
     let perf = PerfModel::default();
@@ -165,67 +195,94 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
     let seed = args.seed(7);
     let tick_s = args.get_f64("tick-s", 900.0);
     let rate = args.get_f64("rate", 2.0);
+    let rate_end = args.get_f64("rate-end", rate);
     let slo_s = args.get_f64("slo", 120.0);
     let strategy = ReplanStrategy::by_name(args.get_or("strategy", "escalate"))
         .expect("unknown --strategy (static|incremental|full|escalate[:T])");
-
-    // The market: a deterministic Vast.ai-style event stream.
-    let events: Vec<_> = MarketEventStream::new(seed, epochs, tick_s).collect();
+    let mode = DemandMode::by_name(args.get_or("demand", "estimated"))
+        .expect("unknown --demand (oracle|estimated|static)");
+    let demand_threshold = args.demand_drift(0.15);
     let horizon_s = epochs as f64 * tick_s;
+
+    // The demand process: stationary, or a mixture/rate shift across the
+    // configured window of the horizon.
+    let shift_to = parse_shift_target(args)?;
+    let schedule = match shift_to {
+        None if (rate_end - rate).abs() < 1e-12 => MixSchedule::constant(mix.clone(), rate),
+        target => {
+            let to_mix = target.unwrap_or_else(|| mix.clone());
+            let start = args.get_f64("shift-start", 0.3).clamp(0.0, 1.0);
+            let end = args.get_f64("shift-end", 0.7).clamp(start, 1.0);
+            MixSchedule::shift(
+                &format!("{}-to-{}", mix.name, to_mix.name),
+                (mix.clone(), rate),
+                (to_mix, rate_end),
+                start * horizon_s,
+                end * horizon_s,
+            )?
+        }
+    };
+
+    // The market: a deterministic Vast.ai-style event stream; the demand
+    // channel is closed-loop (oracle / estimated / frozen per --demand).
+    let markets: Vec<MarketEvent> = MarketEventStream::new(seed, epochs, tick_s).collect();
     let base = SchedProblem::from_profile(
         &profile,
         &mix,
         rate * tick_s, // demand per epoch
-        &events[0].avail,
+        &markets[0].avail,
         budget,
     );
-
-    let opts = OrchestratorOptions {
-        strategy,
-        ..Default::default()
-    };
-    let report = orchestrate(&base, &events, &opts)
-        .ok_or_else(|| anyhow::anyhow!("no feasible plan for the initial market"))?;
-
-    // Execute the epoch timeline in the simulator against one continuous
-    // Poisson trace spanning the horizon.
-    let trace = synthesize_trace(
-        &mix,
+    let trace = synthesize_trace_schedule(
+        &schedule,
+        horizon_s,
         &SynthOptions {
-            num_requests: (rate * horizon_s) as usize,
-            arrival_rate: rate,
             length_sigma: 0.2,
             seed,
-        },
-    );
-    let steps = report.timeline_steps();
-    let result = simulate_timeline(
-        &steps,
-        std::slice::from_ref(&model),
-        std::slice::from_ref(&trace),
-        &perf,
-        &TimelineOptions {
-            seed,
-            slo_latency_s: slo_s,
             ..Default::default()
         },
     );
 
+    let opts = ClosedLoopOptions {
+        orchestrator: OrchestratorOptions {
+            strategy,
+            demand_drift_threshold: demand_threshold,
+            ..Default::default()
+        },
+        timeline: TimelineOptions {
+            seed,
+            slo_latency_s: slo_s,
+            ..Default::default()
+        },
+        mode,
+        ..Default::default()
+    };
+    let loop_result = run_closed_loop(&base, &markets, &schedule, &trace, &model, &perf, &opts)
+        .ok_or_else(|| anyhow::anyhow!("no feasible plan for the initial world"))?;
+    let report = &loop_result.report;
+    let result = &loop_result.sim;
+
     let mut t = Table::new(
         &format!(
-            "orchestrate {} on {} — {} strategy, {} epochs × {:.0}s",
+            "orchestrate {} on {} — {} strategy, {} demand, {} epochs × {:.0}s",
             model.name,
-            mix.name,
-            opts.strategy.name(),
+            schedule.name,
+            opts.orchestrator.strategy.name(),
+            mode.name(),
             epochs,
             tick_s
         ),
         &[
-            "epoch", "t", "event", "drift", "plan $/h", "migr $", "arrivals", "SLO %", "p90 s",
-            "rent $",
+            "epoch", "t", "event", "sup drift", "dem drift", "mix err", "plan $/h", "migr $",
+            "arrivals", "SLO %", "p90 s", "rent $",
         ],
     );
-    for (e, s) in report.epochs.iter().zip(&result.epochs) {
+    for ((e, s), mix_err) in report
+        .epochs
+        .iter()
+        .zip(&result.epochs)
+        .zip(&loop_result.mix_error)
+    {
         let event = match e.event_kind {
             MarketEventKind::Drift => "drift".to_string(),
             MarketEventKind::Preemption { gpu, lost } => {
@@ -235,22 +292,24 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
                 format!("spike {} x{:.1}", gpu.name(), factor)
             }
         };
+        let path = if e.infeasible {
+            " (infeasible)"
+        } else if !e.replanned {
+            " (absorbed)"
+        } else if e.escalated {
+            " (escalated)"
+        } else if e.fast_path {
+            " (fast)"
+        } else {
+            ""
+        };
         t.row(vec![
-            format!(
-                "{}{}{}",
-                e.index,
-                if e.infeasible {
-                    " (infeasible)"
-                } else if e.replanned {
-                    ""
-                } else {
-                    " (absorbed)"
-                },
-                if e.escalated { " (escalated)" } else { "" }
-            ),
+            format!("{}{}", e.index, path),
             format!("{:.0}", e.start_s),
             event,
-            cell(e.drift),
+            cell(e.supply_drift),
+            cell(e.demand_drift),
+            cell(*mix_err),
             cell(e.plan.cost(&e.problem)),
             cell(e.migration.dollars),
             s.arrivals.to_string(),
@@ -261,16 +320,19 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
     }
     t.print();
     println!(
-        "totals: rental {:.2} $, migration {:.2} $, {} replans ({} escalations), \
-         {} plan transitions, {} replica moves, SLO {:.1}% at {:.0}s, makespan {:.0}s",
+        "totals: rental {:.2} $, migration {:.2} $, {} replans ({} escalations, {} fast-path), \
+         {} plan transitions, {} replica moves, SLO {:.1}% at {:.0}s, \
+         mean mix err {:.3}, makespan {:.0}s",
         result.total_rental_usd,
         report.total_migration.dollars,
         report.replans,
         report.escalations,
+        report.fast_paths,
         report.transitions,
         result.transitions_applied,
         result.slo_attainment(slo_s) * 100.0,
         slo_s,
+        loop_result.mean_mix_error(),
         result.makespan
     );
     Ok(())

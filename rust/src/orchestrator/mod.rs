@@ -1,35 +1,47 @@
 //! Online replanning: the elastic control plane closing the loop between
-//! the cloud market, the scheduler, and the executing cluster.
+//! the cloud market, the workload, the scheduler, and the executing
+//! cluster.
 //!
 //! The one-shot planner ([`crate::sched`]) answers "what should we rent
-//! *right now*?" against a static [`crate::cloud::Availability`] snapshot.
-//! Real GPU markets fluctuate (Figure 2: A40 ranged 0–32 on Vast.ai within
-//! a day) — A100s vanish mid-run, 4090 prices spike. This module consumes
-//! the timestamped [`crate::cloud::MarketEventStream`], maintains an
-//! incumbent [`crate::sched::ServingPlan`], and on every event decides how
-//! to adapt:
+//! *right now*?" against a static [`crate::cloud::Availability`] snapshot
+//! and a fixed demand vector. Real serving drifts on **both** sides:
+//! supply fluctuates (Figure 2: A40 ranged 0–32 on Vast.ai within a day)
+//! and demand shifts (Mélange: the request-size mixture should re-decide
+//! the GPU composition). This module consumes the timestamped
+//! [`crate::cloud::WorldEvent`] stream — the market channel plus a
+//! [`crate::workload::DemandSnapshot`] channel — maintains an incumbent
+//! [`crate::sched::ServingPlan`], and on every event decides how to adapt:
 //!
 //! * [`diff`] — the plan-diff engine: minimal migration between two plans
 //!   (keep / spin up / drain / re-parallelize) with a migration cost model;
-//! * [`replan`] — the strategies: incremental repair, naive full re-solve,
-//!   and drift-thresholded escalation between them.
+//! * [`replan`] — the strategies: the Mélange-style assignment-LP-only
+//!   fast path for demand-led drift, incremental repair, naive full
+//!   re-solve, and two-axis drift-thresholded escalation between them.
 //!
 //! The produced epoch timeline feeds [`crate::sim::simulate_timeline`],
 //! which executes the transitions mid-trace (draining retiring replicas,
 //! routing around ones still spinning up) and reports per-epoch cost and
-//! SLO attainment.
+//! SLO attainment; [`crate::sim::run_closed_loop`] additionally feeds the
+//! *observed* arrivals back through a [`crate::workload::MixEstimator`] so
+//! replanning runs against estimated rather than oracle demand.
 
 pub mod diff;
 pub mod replan;
 
 pub use diff::{replica_counts, MigrationAction, MigrationCost, MigrationCostModel, PlanDiff};
 pub use replan::{
-    clamp_to_market, incremental_repair, market_drift, replan, ReplanOutcome, ReplanStrategy,
+    assignment_only_repair, clamp_to_market, incremental_repair, market_drift, replan,
+    replan_world, ReplanOutcome, ReplanStrategy, WorldDrift,
 };
 
-use crate::cloud::{MarketEvent, MarketEventKind, PriceBook};
+use crate::cloud::{MarketEvent, MarketEventKind, PriceBook, WorldEvent};
 use crate::sched::binary_search::{solve_binary_search, BinarySearchOptions};
 use crate::sched::{SchedProblem, ServingPlan};
+use crate::workload::{demand_drift, DemandSnapshot};
+
+/// Fallback epoch duration (seconds) when an event stream is too short to
+/// derive the demand-integration window from its own tick spacing.
+pub const DEFAULT_EPOCH_S: f64 = 900.0;
 
 /// Orchestration options.
 #[derive(Clone, Debug)]
@@ -37,13 +49,21 @@ pub struct OrchestratorOptions {
     pub strategy: ReplanStrategy,
     pub search: BinarySearchOptions,
     pub cost_model: MigrationCostModel,
-    /// Events whose [`market_drift`] stays below this floor are absorbed
-    /// without replanning when the incumbent remains feasible — migration
-    /// is not free, so noise should not move replicas. Drift is measured
-    /// against the market the incumbent was *last planned for* (not the
-    /// previous tick), so slow cumulative drift accumulates until it
-    /// crosses the floor instead of being absorbed forever.
+    /// Events whose supply-side [`market_drift`] stays below this floor are
+    /// absorbed without replanning when the incumbent remains feasible —
+    /// migration is not free, so noise should not move replicas. Drift is
+    /// measured against the world the incumbent was *last planned for*
+    /// (not the previous tick), so slow cumulative drift accumulates until
+    /// it crosses the floor instead of being absorbed forever.
     pub min_drift: f64,
+    /// The demand-side absorb floor, same contract as `min_drift` but over
+    /// [`crate::workload::demand_drift`]: mixture/rate jitter below it is
+    /// absorbed, anything above re-spreads the workload at least.
+    pub min_demand_drift: f64,
+    /// Demand drift at or below this threshold keeps the incumbent GPU
+    /// composition and repairs via the assignment LP alone (the Mélange
+    /// fast path); past it the composition itself is re-decided.
+    pub demand_drift_threshold: f64,
 }
 
 impl Default for OrchestratorOptions {
@@ -55,31 +75,41 @@ impl Default for OrchestratorOptions {
             search: BinarySearchOptions::default(),
             cost_model: MigrationCostModel::default(),
             min_drift: 0.02,
+            min_demand_drift: 0.02,
+            demand_drift_threshold: 0.15,
         }
     }
 }
 
 /// One planning epoch: the plan in force from `start_s` until the next
-/// epoch, with the market state it was planned against.
+/// epoch, with the world state it was planned against.
 #[derive(Clone, Debug)]
 pub struct PlanEpoch {
     pub index: usize,
     pub start_s: f64,
     pub event_kind: MarketEventKind,
-    /// The scheduling problem reflecting this epoch's market (availability
-    /// replaced, candidate costs re-priced). Candidate order is identical
-    /// across epochs, so plan entries are comparable between them.
+    /// The demand snapshot this epoch was planned against (oracle,
+    /// scheduled, or estimated — whatever the event stream carried).
+    pub demand: DemandSnapshot,
+    /// The scheduling problem reflecting this epoch's world (availability
+    /// replaced, candidate costs re-priced, demands rewritten). Candidate
+    /// order is identical across epochs, so plan entries are comparable
+    /// between them.
     pub problem: SchedProblem,
     pub plan: ServingPlan,
     pub diff: PlanDiff,
     pub migration: MigrationCost,
     pub replanned: bool,
     pub escalated: bool,
-    /// True when no feasible plan existed for this market at all and the
+    /// True when the epoch was repaired by the assignment-LP-only fast
+    /// path (composition untouched).
+    pub fast_path: bool,
+    /// True when no feasible plan existed for this world at all and the
     /// stale incumbent was kept best-effort (distinct from a deliberate
     /// low-drift absorption).
     pub infeasible: bool,
-    pub drift: f64,
+    pub supply_drift: f64,
+    pub demand_drift: f64,
 }
 
 /// The full orchestration outcome.
@@ -90,6 +120,8 @@ pub struct OrchestrationReport {
     pub replans: usize,
     /// Replans that fell through to a full re-solve.
     pub escalations: usize,
+    /// Replans served by the assignment-LP-only fast path.
+    pub fast_paths: usize,
     /// Epochs whose diff actually moved replicas.
     pub transitions: usize,
     pub total_migration: MigrationCost,
@@ -150,136 +182,269 @@ pub fn reprice(p: &mut SchedProblem, prices: &PriceBook) {
     }
 }
 
-/// Run the orchestration loop: solve the first event's market from scratch,
+/// Rewrite a problem's demand vectors from a demand snapshot: the
+/// snapshot's arrival rate integrated over `epoch_s` gives the epoch's
+/// total request count, split across models in proportion to their
+/// previous demand shares, each spread over the nine workload types by the
+/// snapshot's mixture.
+///
+/// Like [`apply_market`]'s 6-GPU-type contract, this asserts the problem
+/// uses the paper's 9-type workload grid — [`DemandSnapshot`] mixtures
+/// are defined over exactly that grid, so world-event orchestration (and
+/// hence [`orchestrate`] / [`Orchestrator::start`]) only accepts problems
+/// built from real profiles, not reduced toy grids.
+pub fn apply_demand(p: &mut SchedProblem, demand: &DemandSnapshot, epoch_s: f64) {
+    let epoch_demands = demand.demands_over(epoch_s);
+    let model_totals: Vec<f64> = p.demands.iter().map(|d| d.iter().sum::<f64>()).collect();
+    let grand: f64 = model_totals.iter().sum();
+    let nmodels = p.demands.len().max(1) as f64;
+    for (m, dm) in p.demands.iter_mut().enumerate() {
+        assert_eq!(
+            dm.len(),
+            9,
+            "demand snapshots describe the 9-type workload grid"
+        );
+        let share = if grand > 0.0 {
+            model_totals[m] / grand
+        } else {
+            1.0 / nmodels
+        };
+        for (d, &e) in dm.iter_mut().zip(&epoch_demands) {
+            *d = e * share;
+        }
+    }
+}
+
+/// Replace a problem's *world* state with an event's observation: market
+/// channel ([`apply_market`]) plus demand channel ([`apply_demand`]).
+pub fn apply_world(p: &mut SchedProblem, event: &WorldEvent, epoch_s: f64) {
+    apply_market(p, &event.market);
+    apply_demand(p, &event.demand, epoch_s);
+}
+
+/// The single [`PlanEpoch`] construction site. The epoch carries 14
+/// fields and grew the demand ones in this refactor; every orchestration
+/// outcome (initial solve / replanned / absorbed / infeasible) funnels
+/// through here so the copies cannot drift apart.
+struct EpochBuild<'a> {
+    index: usize,
+    event: &'a WorldEvent,
+    problem: SchedProblem,
+    drift: WorldDrift,
+}
+
+impl EpochBuild<'_> {
+    fn build(
+        self,
+        plan: ServingPlan,
+        outcome: Option<&ReplanOutcome>,
+        replanned: bool,
+        infeasible: bool,
+    ) -> PlanEpoch {
+        PlanEpoch {
+            index: self.index,
+            start_s: self.event.t_s(),
+            event_kind: self.event.market.kind,
+            demand: self.event.demand.clone(),
+            problem: self.problem,
+            plan,
+            diff: outcome.map(|o| o.diff.clone()).unwrap_or_default(),
+            migration: outcome.map(|o| o.migration).unwrap_or_default(),
+            replanned,
+            escalated: outcome.map(|o| o.escalated).unwrap_or(false),
+            fast_path: outcome.map(|o| o.fast_path).unwrap_or(false),
+            infeasible,
+            supply_drift: self.drift.supply,
+            demand_drift: self.drift.demand,
+        }
+    }
+
+    /// The from-scratch first epoch.
+    fn initial(self, plan: &ServingPlan) -> PlanEpoch {
+        self.build(plan.clone(), None, true, false)
+    }
+
+    /// A successfully replanned epoch.
+    fn replanned(self, outcome: &ReplanOutcome) -> PlanEpoch {
+        self.build(outcome.plan.clone(), Some(outcome), true, false)
+    }
+
+    /// An epoch that keeps the incumbent: a deliberate low-drift
+    /// absorption, or (`infeasible`) a hostile world with no plan at all.
+    fn kept(self, incumbent: &ServingPlan, infeasible: bool) -> PlanEpoch {
+        self.build(incumbent.clone(), None, false, infeasible)
+    }
+}
+
+/// The orchestration loop as a resumable state machine: [`orchestrate`]
+/// folds a whole event slice through it, while the closed-loop driver
+/// ([`crate::sim::run_closed_loop`]) interleaves [`Orchestrator::step`]
+/// with feeding observed arrivals to a demand estimator.
+pub struct Orchestrator {
+    base: SchedProblem,
+    opts: OrchestratorOptions,
+    incumbent: ServingPlan,
+    // The world state the incumbent was planned against; drift accumulates
+    // relative to this basis and it advances only on a successful replan.
+    basis_avail: [u32; 6],
+    basis_prices: [f64; 6],
+    basis_demand: DemandSnapshot,
+    epochs: Vec<PlanEpoch>,
+}
+
+impl Orchestrator {
+    /// Solve the first event's world from scratch. Returns `None` when
+    /// even the initial world admits no feasible plan.
+    pub fn start(
+        base: &SchedProblem,
+        first: &WorldEvent,
+        epoch_s: f64,
+        opts: &OrchestratorOptions,
+    ) -> Option<Orchestrator> {
+        let mut problem = base.clone();
+        apply_world(&mut problem, first, epoch_s);
+        let (initial, _) = solve_binary_search(&problem, &opts.search);
+        let incumbent = initial?;
+        let epoch = EpochBuild {
+            index: 0,
+            event: first,
+            problem,
+            drift: WorldDrift::default(),
+        }
+        .initial(&incumbent);
+        Some(Orchestrator {
+            base: base.clone(),
+            opts: opts.clone(),
+            incumbent,
+            basis_avail: first.market.avail.counts,
+            basis_prices: first.market.prices.per_hour,
+            basis_demand: first.demand.clone(),
+            epochs: vec![epoch],
+        })
+    }
+
+    /// The plan currently in force.
+    pub fn incumbent(&self) -> &ServingPlan {
+        &self.incumbent
+    }
+
+    /// Fold one world event: measure two-axis drift against the basis,
+    /// absorb when both axes sit below their floors and the incumbent
+    /// stays feasible, otherwise replan through
+    /// [`replan::replan_world`]'s ladder.
+    pub fn step(&mut self, event: &WorldEvent, epoch_s: f64) {
+        let drift = WorldDrift {
+            supply: market_drift(
+                &self.basis_avail,
+                &event.market.avail.counts,
+                &self.basis_prices,
+                &event.market.prices.per_hour,
+            ),
+            demand: demand_drift(&self.basis_demand, &event.demand),
+        };
+        let mut problem = self.base.clone();
+        apply_world(&mut problem, event, epoch_s);
+        let build = EpochBuild {
+            index: self.epochs.len(),
+            event,
+            problem,
+            drift,
+        };
+
+        // Absorb low-drift events while the incumbent stays feasible.
+        if drift.supply < self.opts.min_drift
+            && drift.demand < self.opts.min_demand_drift
+            && self.incumbent.validate(&build.problem, 1e-4).is_ok()
+        {
+            self.epochs.push(build.kept(&self.incumbent, false));
+            return;
+        }
+
+        match replan_world(&build.problem, &self.incumbent, &drift, &self.opts) {
+            Some(outcome) => {
+                let epoch = build.replanned(&outcome);
+                self.incumbent = outcome.plan;
+                self.basis_avail = event.market.avail.counts;
+                self.basis_prices = event.market.prices.per_hour;
+                self.basis_demand = event.demand.clone();
+                self.epochs.push(epoch);
+            }
+            None => {
+                // The world is too hostile for any feasible plan; keep the
+                // incumbent best-effort and try again on the next event.
+                self.epochs.push(build.kept(&self.incumbent, true));
+            }
+        }
+    }
+
+    /// Aggregate the epoch sequence into the final report.
+    pub fn finish(self) -> OrchestrationReport {
+        let epochs = self.epochs;
+        let replans = epochs.iter().skip(1).filter(|e| e.replanned).count();
+        let escalations = epochs.iter().filter(|e| e.escalated).count();
+        let fast_paths = epochs.iter().filter(|e| e.fast_path).count();
+        let transitions = epochs.iter().skip(1).filter(|e| !e.diff.is_empty()).count();
+        let mut total_migration = MigrationCost::default();
+        for e in &epochs {
+            total_migration.add(&e.migration);
+        }
+        OrchestrationReport {
+            epochs,
+            replans,
+            escalations,
+            fast_paths,
+            transitions,
+            total_migration,
+        }
+    }
+}
+
+/// Epoch duration for the event at index `i` of a timestamped stream: the
+/// spacing to the next timestamp, falling back to the previous spacing for
+/// the last event and to [`DEFAULT_EPOCH_S`] for single-event streams or
+/// degenerate (non-increasing) spacings. Shared by [`orchestrate`] and the
+/// closed-loop driver so the demand-integration window can never diverge
+/// between them.
+pub fn epoch_duration(timestamps: &[f64], i: usize) -> f64 {
+    let d = if timestamps.len() < 2 {
+        DEFAULT_EPOCH_S
+    } else if i + 1 < timestamps.len() {
+        timestamps[i + 1] - timestamps[i]
+    } else {
+        timestamps[i] - timestamps[i - 1]
+    };
+    if d > 0.0 {
+        d
+    } else {
+        DEFAULT_EPOCH_S
+    }
+}
+
+/// Run the orchestration loop: solve the first event's world from scratch,
 /// then fold every subsequent event through the configured strategy.
-/// Returns `None` when even the initial market admits no feasible plan.
+/// Returns `None` when even the initial world admits no feasible plan.
 pub fn orchestrate(
     base: &SchedProblem,
-    events: &[MarketEvent],
+    events: &[WorldEvent],
     opts: &OrchestratorOptions,
 ) -> Option<OrchestrationReport> {
     let first = events.first()?;
-    let mut problem = base.clone();
-    apply_market(&mut problem, first);
-    let (initial, _) = solve_binary_search(&problem, &opts.search);
-    let mut incumbent = initial?;
-
-    let mut epochs = vec![PlanEpoch {
-        index: 0,
-        start_s: first.t_s,
-        event_kind: first.kind,
-        problem,
-        plan: incumbent.clone(),
-        diff: PlanDiff::default(),
-        migration: MigrationCost::default(),
-        replanned: true,
-        escalated: false,
-        infeasible: false,
-        drift: 0.0,
-    }];
-    // The market state the incumbent was planned against; drift accumulates
-    // relative to this basis and it advances only on a successful replan.
-    let mut basis_avail = first.avail.counts;
-    let mut basis_prices = first.prices.per_hour;
-
-    for (index, event) in events.iter().enumerate().skip(1) {
-        let drift = market_drift(
-            &basis_avail,
-            &event.avail.counts,
-            &basis_prices,
-            &event.prices.per_hour,
-        );
-        let mut next_problem = base.clone();
-        apply_market(&mut next_problem, event);
-
-        // Absorb low-drift events while the incumbent stays feasible.
-        if drift < opts.min_drift && incumbent.validate(&next_problem, 1e-4).is_ok() {
-            epochs.push(PlanEpoch {
-                index,
-                start_s: event.t_s,
-                event_kind: event.kind,
-                problem: next_problem,
-                plan: incumbent.clone(),
-                diff: PlanDiff::default(),
-                migration: MigrationCost::default(),
-                replanned: false,
-                escalated: false,
-                infeasible: false,
-                drift,
-            });
-            continue;
-        }
-
-        match replan(
-            &next_problem,
-            &incumbent,
-            &opts.strategy,
-            drift,
-            &opts.search,
-            &opts.cost_model,
-        ) {
-            Some(outcome) => {
-                epochs.push(PlanEpoch {
-                    index,
-                    start_s: event.t_s,
-                    event_kind: event.kind,
-                    problem: next_problem,
-                    plan: outcome.plan.clone(),
-                    diff: outcome.diff,
-                    migration: outcome.migration,
-                    replanned: true,
-                    escalated: outcome.escalated,
-                    infeasible: false,
-                    drift,
-                });
-                incumbent = outcome.plan;
-                basis_avail = event.avail.counts;
-                basis_prices = event.prices.per_hour;
-            }
-            None => {
-                // The market is too hostile for any feasible plan; keep the
-                // incumbent best-effort and try again on the next event.
-                epochs.push(PlanEpoch {
-                    index,
-                    start_s: event.t_s,
-                    event_kind: event.kind,
-                    problem: next_problem,
-                    plan: incumbent.clone(),
-                    diff: PlanDiff::default(),
-                    migration: MigrationCost::default(),
-                    replanned: false,
-                    escalated: false,
-                    infeasible: true,
-                    drift,
-                });
-            }
-        }
+    let ts: Vec<f64> = events.iter().map(|e| e.t_s()).collect();
+    let mut orch = Orchestrator::start(base, first, epoch_duration(&ts, 0), opts)?;
+    for (i, event) in events.iter().enumerate().skip(1) {
+        orch.step(event, epoch_duration(&ts, i));
     }
-
-    let replans = epochs.iter().skip(1).filter(|e| e.replanned).count();
-    let escalations = epochs.iter().filter(|e| e.escalated).count();
-    let transitions = epochs.iter().skip(1).filter(|e| !e.diff.is_empty()).count();
-    let mut total_migration = MigrationCost::default();
-    for e in &epochs {
-        total_migration.add(&e.migration);
-    }
-    Some(OrchestrationReport {
-        epochs,
-        replans,
-        escalations,
-        transitions,
-        total_migration,
-    })
+    Some(orch.finish())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cloud::{Availability, MarketEventStream};
+    use crate::cloud::{Availability, MarketEventStream, WorldEventStream};
     use crate::perf_model::{ModelSpec, PerfModel};
     use crate::profiler::Profile;
     use crate::sched::enumerate::EnumOptions;
-    use crate::workload::TraceMix;
+    use crate::workload::{MixSchedule, TraceMix};
 
     fn market_problem(model: ModelSpec, budget: f64) -> SchedProblem {
         let perf = PerfModel::default();
@@ -291,6 +456,19 @@ mod tests {
             &crate::cloud::availability(1),
             budget,
         )
+    }
+
+    /// The stationary demand channel matching `market_problem`'s 1000
+    /// requests per 900 s epoch.
+    fn flat_demand() -> DemandSnapshot {
+        DemandSnapshot::new(1000.0 / 900.0, TraceMix::trace1())
+    }
+
+    fn stationary(markets: Vec<MarketEvent>) -> Vec<WorldEvent> {
+        markets
+            .into_iter()
+            .map(|m| WorldEvent::new(m, flat_demand()))
+            .collect()
     }
 
     fn fast_opts(strategy: ReplanStrategy) -> OrchestratorOptions {
@@ -307,7 +485,7 @@ mod tests {
     #[test]
     fn orchestrate_produces_valid_epoch_timeline() {
         let base = market_problem(ModelSpec::llama3_70b(), 30.0);
-        let events: Vec<_> = MarketEventStream::new(21, 6, 900.0).collect();
+        let events = stationary(MarketEventStream::new(21, 6, 900.0).collect());
         let report = orchestrate(
             &base,
             &events,
@@ -324,10 +502,12 @@ mod tests {
                     .unwrap_or_else(|err| panic!("epoch {}: {err}", e.index));
             }
             assert!(e.plan.makespan.is_finite());
+            // A stationary demand channel never reads as demand drift.
+            assert!(e.demand_drift.abs() < 1e-9, "epoch {}", e.index);
         }
         // Epochs are in event order and timestamped.
         for (e, ev) in report.epochs.iter().zip(&events) {
-            assert!((e.start_s - ev.t_s).abs() < 1e-9);
+            assert!((e.start_s - ev.t_s()).abs() < 1e-9);
         }
         assert!(report.total_dollars(events.len() as f64 * 900.0) > 0.0);
     }
@@ -342,19 +522,20 @@ mod tests {
         let base = market_problem(ModelSpec::llama3_8b(), 30.0);
         let calm = crate::cloud::availability(1);
         let crash = Availability::new([2, 2, 2, 1, 1, 2]);
-        let mk = |t_s: f64, avail: Availability| crate::cloud::MarketEvent {
-            t_s,
-            avail,
-            prices: PriceBook::base(),
-            kind: crate::cloud::MarketEventKind::Drift,
+        let mk = |t_s: f64, avail: Availability| {
+            WorldEvent::new(
+                MarketEvent {
+                    t_s,
+                    avail,
+                    prices: PriceBook::base(),
+                    kind: MarketEventKind::Drift,
+                },
+                flat_demand(),
+            )
         };
         let events = vec![mk(0.0, calm), mk(900.0, crash), mk(1800.0, calm)];
-        let report = orchestrate(
-            &base,
-            &events,
-            &fast_opts(ReplanStrategy::Incremental),
-        )
-        .expect("orchestration");
+        let report = orchestrate(&base, &events, &fast_opts(ReplanStrategy::Incremental))
+            .expect("orchestration");
         assert!(
             report.transitions >= 2,
             "only {} transitions across {} epochs",
@@ -392,20 +573,43 @@ mod tests {
     }
 
     #[test]
+    fn apply_demand_rewrites_demands_preserving_model_shares() {
+        let mut p = market_problem(ModelSpec::llama3_8b(), 30.0);
+        // Give the problem a second model by duplicating demands 1:3.
+        p.demands = vec![
+            TraceMix::trace1().demands(250.0).to_vec(),
+            TraceMix::trace1().demands(750.0).to_vec(),
+        ];
+        let snap = DemandSnapshot::new(2.0, TraceMix::trace3());
+        apply_demand(&mut p, &snap, 900.0);
+        let t0: f64 = p.demands[0].iter().sum();
+        let t1: f64 = p.demands[1].iter().sum();
+        assert!((t0 + t1 - 1800.0).abs() < 1e-9, "total {}", t0 + t1);
+        assert!((t1 / t0 - 3.0).abs() < 1e-9, "shares moved: {t0} vs {t1}");
+        // Each model's vector follows the snapshot mixture.
+        for dm in &p.demands {
+            let total: f64 = dm.iter().sum();
+            for (w, &d) in dm.iter().enumerate() {
+                assert!(
+                    (d / total - TraceMix::trace3().ratios[w]).abs() < 1e-9,
+                    "workload {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn absorbs_noise_without_migrating() {
         let base = market_problem(ModelSpec::llama3_70b(), 30.0);
-        // Two identical observations: zero drift, so the second event must
-        // be absorbed without a replan.
-        let mut events: Vec<_> = MarketEventStream::new(5, 1, 900.0).collect();
-        let mut second = events[0].clone();
+        // Two identical observations: zero drift on both axes, so the
+        // second event must be absorbed without a replan.
+        let mut markets: Vec<MarketEvent> = MarketEventStream::new(5, 1, 900.0).collect();
+        let mut second = markets[0].clone();
         second.t_s = 900.0;
-        events.push(second);
-        let report = orchestrate(
-            &base,
-            &events,
-            &fast_opts(ReplanStrategy::FullResolve),
-        )
-        .expect("orchestration");
+        markets.push(second);
+        let events = stationary(markets);
+        let report = orchestrate(&base, &events, &fast_opts(ReplanStrategy::FullResolve))
+            .expect("orchestration");
         assert_eq!(report.epochs.len(), 2);
         assert!(!report.epochs[1].replanned, "zero-drift event replanned");
         assert_eq!(report.transitions, 0);
@@ -425,30 +629,135 @@ mod tests {
             for v in prices.per_hour.iter_mut() {
                 *v *= scale;
             }
-            crate::cloud::MarketEvent {
-                t_s,
-                avail: calm,
-                prices,
-                kind: crate::cloud::MarketEventKind::Drift,
-            }
+            WorldEvent::new(
+                MarketEvent {
+                    t_s,
+                    avail: calm,
+                    prices,
+                    kind: MarketEventKind::Drift,
+                },
+                flat_demand(),
+            )
         };
         let events = vec![
             mk(0.0, 1.0),
-            mk(900.0, 0.99),     // drift vs basis: 1.0% — absorbed
-            mk(1800.0, 0.9801),  // 1.99% — absorbed
-            mk(2700.0, 0.9703),  // 2.97% — replanned
+            mk(900.0, 0.99),    // drift vs basis: 1.0% — absorbed
+            mk(1800.0, 0.9801), // 1.99% — absorbed
+            mk(2700.0, 0.9703), // 2.97% — replanned
+        ];
+        let report = orchestrate(&base, &events, &fast_opts(ReplanStrategy::Incremental))
+            .expect("orchestration");
+        assert!(!report.epochs[1].replanned, "1% drift replanned");
+        assert!(
+            !report.epochs[2].replanned,
+            "cumulative 2% not yet over floor"
+        );
+        assert!(
+            report.epochs[3].replanned,
+            "cumulative drift never triggered a replan (boiling frog)"
+        );
+    }
+
+    #[test]
+    fn demand_shift_fast_paths_then_escalates() {
+        // Calm market, drifting demand: a small mixture nudge must repair
+        // through the assignment-LP fast path (composition untouched),
+        // and a full trace1 → trace3 flip must escalate to a composition
+        // search. The market channel is frozen so every replan below is
+        // demand-led.
+        let base = market_problem(ModelSpec::llama3_8b(), 30.0);
+        let market = MarketEvent {
+            t_s: 0.0,
+            avail: crate::cloud::availability(1),
+            prices: PriceBook::base(),
+            kind: MarketEventKind::Drift,
+        };
+        let mk = |t_s: f64, demand: DemandSnapshot| {
+            let mut m = market.clone();
+            m.t_s = t_s;
+            WorldEvent::new(m, demand)
+        };
+        // A 6% total-variation nudge: move 6 points of type 0 onto type 4.
+        let mut nudged = TraceMix::trace1().ratios;
+        nudged[0] -= 0.06;
+        nudged[4] += 0.06;
+        let nudge = TraceMix::normalized("nudged", nudged).unwrap();
+        let rate = 1000.0 / 900.0;
+        let events = vec![
+            mk(0.0, flat_demand()),
+            mk(900.0, DemandSnapshot::new(rate, nudge)),
+            mk(1800.0, DemandSnapshot::new(rate, TraceMix::trace3())),
         ];
         let report = orchestrate(
             &base,
             &events,
-            &fast_opts(ReplanStrategy::Incremental),
+            &fast_opts(ReplanStrategy::Escalating {
+                drift_threshold: 0.25,
+            }),
         )
         .expect("orchestration");
-        assert!(!report.epochs[1].replanned, "1% drift replanned");
-        assert!(!report.epochs[2].replanned, "cumulative 2% not yet over floor");
+
+        let nudge_epoch = &report.epochs[1];
         assert!(
-            report.epochs[3].replanned,
-            "cumulative drift never triggered a replan (boiling frog)"
+            nudge_epoch.replanned && nudge_epoch.fast_path,
+            "small demand drift should fast-path (drift {})",
+            nudge_epoch.demand_drift
+        );
+        assert_eq!(
+            nudge_epoch.plan.gpus_used(&nudge_epoch.problem),
+            report.epochs[0].plan.gpus_used(&nudge_epoch.problem),
+            "fast path changed the GPU composition"
+        );
+        assert!(nudge_epoch.migration.dollars.abs() < 1e-12);
+
+        let flip_epoch = &report.epochs[2];
+        assert!(
+            flip_epoch.replanned && flip_epoch.escalated && !flip_epoch.fast_path,
+            "mixture flip must escalate (drift {})",
+            flip_epoch.demand_drift
+        );
+        assert!(flip_epoch.demand_drift > 0.5);
+        flip_epoch
+            .plan
+            .validate(&flip_epoch.problem, 1e-3)
+            .expect("valid escalated plan");
+        assert_eq!(report.fast_paths, 1);
+        assert_eq!(report.escalations, 1);
+    }
+
+    #[test]
+    fn orchestrate_over_world_stream_tracks_demand() {
+        // End-to-end over the zipped stream: a drifting schedule produces
+        // demand drift in the epochs and at least one demand-led replan.
+        let base = market_problem(ModelSpec::llama3_8b(), 30.0);
+        let schedule = MixSchedule::shift(
+            "stream-shift",
+            (TraceMix::trace1(), 1000.0 / 900.0),
+            (TraceMix::trace3(), 1500.0 / 900.0),
+            900.0,
+            4500.0,
+        )
+        .expect("valid shift");
+        let events: Vec<WorldEvent> = WorldEventStream::new(13, 7, 900.0, schedule).collect();
+        let report = orchestrate(
+            &base,
+            &events,
+            &fast_opts(ReplanStrategy::Escalating {
+                drift_threshold: 0.25,
+            }),
+        )
+        .expect("orchestration");
+        assert!(
+            report.epochs.iter().any(|e| e.demand_drift > 0.05),
+            "schedule drift never surfaced in the epochs"
+        );
+        assert!(report.replans >= 1);
+        // Demands in the epoch problems track the schedule's rate ramp.
+        let first_total: f64 = report.epochs[0].problem.demands[0].iter().sum();
+        let last_total: f64 = report.epochs[6].problem.demands[0].iter().sum();
+        assert!(
+            last_total > first_total * 1.2,
+            "demand totals did not ramp: {first_total} → {last_total}"
         );
     }
 

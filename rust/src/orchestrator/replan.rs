@@ -1,8 +1,12 @@
 //! Online replanning strategies.
 //!
-//! Given the incumbent plan and a freshly observed market state (new
-//! availability, new prices), produce the next plan:
+//! Given the incumbent plan and a freshly observed world state (new
+//! availability, new prices, new demand), produce the next plan:
 //!
+//! * **assignment-only repair** — the Mélange-style fast path for
+//!   demand-led drift: keep the GPU composition exactly, re-solve only the
+//!   fixed-composition assignment LP against the new demands
+//!   ([`assignment_only_repair`]). Zero migration by construction.
 //! * **incremental repair** — drop replicas the market took away (or the
 //!   budget can no longer carry), re-spread workloads over the survivors
 //!   with the fixed-composition assignment LP, then greedily rent
@@ -10,11 +14,12 @@
 //!   step, no integer search — the ThunderServe-style lightweight pass.
 //! * **full re-solve** — Algorithm 1 from scratch on the new market
 //!   (the expensive gold standard, used naively by the baseline strategy).
-//! * **escalation** — incremental while the market drift is small,
-//!   warm-started full re-solve (incumbent makespan as the initial upper
-//!   bound) once drift crosses a threshold.
+//! * **escalation** — the cheaper passes while drift is small, warm-started
+//!   full re-solve (incumbent makespan as the initial upper bound) once
+//!   either drift axis crosses its threshold ([`replan_world`]).
 
 use super::diff::{replica_counts, MigrationCost, MigrationCostModel, PlanDiff};
+use super::OrchestratorOptions;
 use crate::sched::binary_search::{
     polish_plan, solve_assignment_fixed_y, solve_binary_search, solve_binary_search_warm,
     BinarySearchOptions, SearchStats,
@@ -73,7 +78,21 @@ pub struct ReplanOutcome {
     pub migration: MigrationCost,
     /// True when the step fell through to a full re-solve.
     pub escalated: bool,
+    /// True when the step was the assignment-LP-only fast path (GPU
+    /// composition untouched, only the workload spread re-solved).
+    pub fast_path: bool,
     pub stats: SearchStats,
+}
+
+/// The two-axis drift of the world signal since the incumbent's basis:
+/// `supply` is [`market_drift`] (availability + prices), `demand` is
+/// [`crate::workload::demand_drift`] (arrival rate + mixture). The
+/// replanner thresholds the axes separately — a mixture shift and a price
+/// spike call for different repairs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorldDrift {
+    pub supply: f64,
+    pub demand: f64,
 }
 
 /// Normalised market drift between two observations: relative L1 change of
@@ -141,12 +160,7 @@ pub fn clamp_to_market(
     // Availability: evict the least valuable replica using an over-rented
     // GPU type until every pool fits.
     loop {
-        let mut used = vec![0u64; p.num_gpu_types];
-        for (ci, &k) in y.iter().enumerate() {
-            for (n, &d) in p.candidates[ci].gpu_counts.iter().enumerate() {
-                used[n] += d as u64 * k as u64;
-            }
-        }
+        let (used, _) = usage(p, &y);
         let over = (0..p.num_gpu_types).find(|&n| used[n] > p.avail[n] as u64);
         let Some(n) = over else { break };
         let victim = (0..p.candidates.len())
@@ -158,11 +172,7 @@ pub fn clamp_to_market(
     // Budget (candidate costs reflect the new prices): evict the least
     // valuable replica until affordable.
     loop {
-        let cost: f64 = y
-            .iter()
-            .enumerate()
-            .map(|(ci, &k)| k as f64 * p.candidates[ci].cost)
-            .sum();
+        let (_, cost) = usage(p, &y);
         if cost <= p.budget + 1e-9 {
             break;
         }
@@ -173,6 +183,50 @@ pub fn clamp_to_market(
     }
 
     if y.iter().all(|&k| k == 0) {
+        return None;
+    }
+    solve_assignment_fixed_y(p, &y, f64::INFINITY, stats)
+}
+
+/// Per-type GPU usage and total hourly cost of replica counts `y` — the
+/// one ledger shared by the eviction loops and the fast path's fit check,
+/// so the two can never disagree on what "fits" means.
+fn usage(p: &SchedProblem, y: &[u32]) -> (Vec<u64>, f64) {
+    let mut used = vec![0u64; p.num_gpu_types];
+    let mut cost = 0.0f64;
+    for (ci, &k) in y.iter().enumerate() {
+        if k == 0 {
+            continue;
+        }
+        cost += k as f64 * p.candidates[ci].cost;
+        for (n, &d) in p.candidates[ci].gpu_counts.iter().enumerate() {
+            used[n] += d as u64 * k as u64;
+        }
+    }
+    (used, cost)
+}
+
+/// True when replica counts `y` fit the problem's availability and budget
+/// (candidate costs must already reflect the current prices).
+fn composition_fits(p: &SchedProblem, y: &[u32]) -> bool {
+    let (used, cost) = usage(p, y);
+    cost <= p.budget + 1e-9 && used.iter().zip(&p.avail).all(|(&u, &a)| u <= a as u64)
+}
+
+/// Mélange-style fast path for demand-led drift: keep the incumbent's GPU
+/// composition *exactly* and re-solve only the fixed-composition assignment
+/// LP against the problem's (new) demands. No replica moves, no migration —
+/// the property tests pin that the returned plan's composition equals the
+/// incumbent's. Returns `None` when the composition no longer fits the
+/// market (availability or budget), or nothing is rented; callers must then
+/// fall through to a composition search.
+pub fn assignment_only_repair(
+    p: &SchedProblem,
+    incumbent: &ServingPlan,
+    stats: &mut SearchStats,
+) -> Option<ServingPlan> {
+    let y = replica_counts(p, incumbent);
+    if y.iter().all(|&k| k == 0) || !composition_fits(p, &y) {
         return None;
     }
     solve_assignment_fixed_y(p, &y, f64::INFINITY, stats)
@@ -242,8 +296,70 @@ pub fn replan(
         diff,
         migration,
         escalated,
+        fast_path: false,
         stats,
     })
+}
+
+/// One two-axis replanning step. `p` must already reflect the new world
+/// state ([`crate::orchestrator::apply_world`]: availability replaced,
+/// candidates re-priced, demands rewritten); `drift` is measured against
+/// the incumbent's basis. The ladder, cheapest rung first:
+///
+/// 1. *fast path* — supply essentially calm (below the absorb floor) and
+///    demand drift at most `opts.demand_drift_threshold`: the incumbent
+///    composition is still the right one, only the spread is stale, so
+///    re-solve the assignment LP alone ([`assignment_only_repair`]);
+/// 2. *demand escalation* — demand drift past the threshold forces a
+///    warm-started full re-solve for both adaptive strategies
+///    (`Incremental` and `Escalating`): a shifted mixture re-decides the
+///    GPU composition, which incremental eviction cannot do. `Static`
+///    (the do-nothing baseline) and `FullResolve` (which re-solves
+///    anyway) keep their contracts;
+/// 3. *strategy pass* — otherwise the configured [`ReplanStrategy`] as
+///    before, driven by the supply axis.
+pub fn replan_world(
+    p: &SchedProblem,
+    incumbent: &ServingPlan,
+    drift: &WorldDrift,
+    opts: &OrchestratorOptions,
+) -> Option<ReplanOutcome> {
+    let adaptive = matches!(
+        opts.strategy,
+        ReplanStrategy::Incremental | ReplanStrategy::Escalating { .. }
+    );
+    if adaptive && drift.supply < opts.min_drift && drift.demand <= opts.demand_drift_threshold {
+        let mut stats = SearchStats::default();
+        if let Some(plan) = assignment_only_repair(p, incumbent, &mut stats) {
+            let diff = PlanDiff::between(p, incumbent, &plan);
+            let migration = diff.migration_cost(p, &opts.cost_model);
+            return Some(ReplanOutcome {
+                plan,
+                diff,
+                migration,
+                escalated: false,
+                fast_path: true,
+                stats,
+            });
+        }
+    }
+    if adaptive && drift.demand > opts.demand_drift_threshold {
+        let mut stats = SearchStats::default();
+        let (plan, s) = solve_binary_search_warm(p, &opts.search, Some(incumbent.makespan));
+        merge_stats(&mut stats, &s);
+        let plan = plan?;
+        let diff = PlanDiff::between(p, incumbent, &plan);
+        let migration = diff.migration_cost(p, &opts.cost_model);
+        return Some(ReplanOutcome {
+            plan,
+            diff,
+            migration,
+            escalated: true,
+            fast_path: false,
+            stats,
+        });
+    }
+    replan(p, incumbent, &opts.strategy, drift.supply, &opts.search, &opts.cost_model)
 }
 
 #[cfg(test)]
@@ -375,6 +491,150 @@ mod tests {
         // Nothing changed in the market: the plan must not move replicas
         // beyond what polishing adds.
         assert_eq!(out.diff.drained_replicas(), 0, "drained on a calm market");
+    }
+
+    #[test]
+    fn prop_assignment_only_repair_never_changes_composition() {
+        // Property (alongside the diff.rs ones): whatever the incumbent
+        // composition and however the demands move, the fast path either
+        // returns a plan with the *identical* GPU composition or declines.
+        use crate::sched::PlanEntry;
+        use crate::util::proptest::{check, prop_assert, Gen};
+        use crate::util::rng::Xoshiro256;
+        let p = simple_example();
+        let gen = Gen::opaque(move |rng: &mut Xoshiro256| {
+            let y: Vec<u32> = (0..4).map(|_| rng.range_u64(0, 2) as u32).collect();
+            let scales: Vec<f64> = (0..2).map(|_| rng.range_f64(0.2, 3.0)).collect();
+            (y, scales)
+        });
+        check(256, 0xFA57_0001, gen, |(y, scales)| {
+            let mut p2 = p.clone();
+            for (w, lambda) in p2.demands[0].iter_mut().enumerate() {
+                *lambda *= scales[w];
+            }
+            let incumbent = ServingPlan {
+                entries: y
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &k)| k > 0)
+                    .map(|(ci, &k)| PlanEntry {
+                        candidate: ci,
+                        replicas: k,
+                        fractions: vec![0.0; 2],
+                    })
+                    .collect(),
+                makespan: 1.0,
+            };
+            let before = incumbent.gpus_used(&p2);
+            let mut stats = SearchStats::default();
+            match assignment_only_repair(&p2, &incumbent, &mut stats) {
+                Some(plan) => {
+                    prop_assert(
+                        plan.gpus_used(&p2) == before,
+                        format!(
+                            "fast path moved GPUs: {:?} -> {:?}",
+                            before,
+                            plan.gpus_used(&p2)
+                        ),
+                    )?;
+                    prop_assert(
+                        replica_counts(&p2, &plan) == *y,
+                        "fast path changed replica counts",
+                    )?;
+                    plan.validate(&p2, 1e-4)
+                        .map_err(|e| format!("fast-path plan invalid: {e}"))
+                }
+                None => {
+                    // Declining is only legal when there is nothing rented
+                    // or the composition genuinely no longer fits the
+                    // budget or the availability.
+                    let cost: f64 = y
+                        .iter()
+                        .enumerate()
+                        .map(|(ci, &k)| k as f64 * p2.candidates[ci].cost)
+                        .sum();
+                    let over_avail = {
+                        let mut used = vec![0u32; p2.num_gpu_types];
+                        for (ci, &k) in y.iter().enumerate() {
+                            for (n, &d) in p2.candidates[ci].gpu_counts.iter().enumerate() {
+                                used[n] += d * k;
+                            }
+                        }
+                        used.iter().zip(&p2.avail).any(|(&u, &a)| u > a)
+                    };
+                    prop_assert(
+                        y.iter().all(|&k| k == 0) || cost > p2.budget + 1e-9 || over_avail,
+                        "fast path declined a fitting composition",
+                    )
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn replan_world_demand_led_drift_takes_fast_path() {
+        let (p, incumbent) = solved_toy();
+        // Demand shifts (workload 0 grows 30%), supply is calm.
+        let mut shifted = p.clone();
+        shifted.demands[0][0] *= 1.3;
+        let world_opts = OrchestratorOptions {
+            strategy: ReplanStrategy::Escalating {
+                drift_threshold: 0.25,
+            },
+            search: opts(),
+            ..Default::default()
+        };
+        let drift = WorldDrift {
+            supply: 0.0,
+            demand: 0.08,
+        };
+        let out = replan_world(&shifted, &incumbent, &drift, &world_opts)
+            .expect("fast path replans");
+        assert!(out.fast_path, "small demand drift must use the fast path");
+        assert!(!out.escalated);
+        assert_eq!(
+            out.plan.gpus_used(&shifted),
+            incumbent.gpus_used(&shifted),
+            "fast path moved GPUs"
+        );
+        assert!(out.diff.is_empty(), "fast path produced a migration");
+        assert!(out.migration.dollars.abs() < 1e-12);
+        out.plan.validate(&shifted, 1e-4).expect("valid fast-path plan");
+    }
+
+    #[test]
+    fn replan_world_escalates_past_demand_threshold() {
+        let (p, incumbent) = solved_toy();
+        let mut shifted = p.clone();
+        // Invert the demand shape entirely.
+        shifted.demands[0] = vec![20.0, 80.0];
+        let drift = WorldDrift {
+            supply: 0.0,
+            demand: 0.6,
+        };
+        // Both adaptive strategies must re-decide the composition — the
+        // Incremental arm in particular must not quietly keep a
+        // composition shaped for the inverted mixture.
+        for strategy in [
+            ReplanStrategy::Escalating {
+                drift_threshold: 0.25,
+            },
+            ReplanStrategy::Incremental,
+        ] {
+            let world_opts = OrchestratorOptions {
+                strategy,
+                search: opts(),
+                ..Default::default()
+            };
+            let out = replan_world(&shifted, &incumbent, &drift, &world_opts)
+                .expect("escalated replan");
+            assert!(
+                out.escalated && !out.fast_path,
+                "{}: demand drift past the threshold must re-decide the composition",
+                world_opts.strategy.name()
+            );
+            out.plan.validate(&shifted, 1e-4).expect("valid plan");
+        }
     }
 
     #[test]

@@ -302,7 +302,10 @@ fn within_resources(p: &SchedProblem, y: &[u32]) -> bool {
     let mut used = vec![0u64; p.num_gpu_types];
     for (ci, &k) in y.iter().enumerate() {
         for (n, &d) in p.candidates[ci].gpu_counts.iter().enumerate() {
-            used[n] += (d * k) as u64;
+            // Widen before multiplying: with unlimited-availability
+            // baselines y can reach the sentinel range, where d * k
+            // overflows u32.
+            used[n] += d as u64 * k as u64;
         }
     }
     used.iter().zip(&p.avail).all(|(&u, &a)| u <= a as u64)

@@ -1,0 +1,417 @@
+//! The closed demand loop: orchestrate → simulate → observe → estimate →
+//! orchestrate.
+//!
+//! [`crate::orchestrator::orchestrate`] folds a pre-built
+//! [`crate::cloud::WorldEvent`] stream, which is fine when the demand
+//! channel is an oracle. A real deployment never sees the true mixture —
+//! it sees *arrivals*. This driver closes that loop: at every market tick
+//! it feeds the arrivals observed since the previous tick into a
+//! [`MixEstimator`], snapshots the estimate, and lets the orchestrator
+//! replan against it; the resulting epoch timeline is then executed by
+//! [`super::simulate_timeline`] on the very same trace. Per-epoch
+//! estimated-vs-true mixture error is reported so the estimator's lag is
+//! measurable against the oracle.
+//!
+//! Three demand modes make the fig3_drift comparison:
+//! * [`DemandMode::Oracle`] — the schedule's true snapshot at each tick
+//!   (an upper bound no real system attains);
+//! * [`DemandMode::Estimated`] — the causal estimator over observed
+//!   arrivals (what a real system can do);
+//! * [`DemandMode::Static`] — the initial snapshot frozen forever (the
+//!   pre-drift incumbent behaviour: replans on supply only).
+
+use super::timeline::{simulate_timeline, TimelineOptions, TimelineResult};
+use crate::cloud::{MarketEvent, WorldEvent};
+use crate::orchestrator::{
+    epoch_duration, OrchestrationReport, Orchestrator, OrchestratorOptions,
+};
+use crate::perf_model::{ModelSpec, PerfModel};
+use crate::sched::SchedProblem;
+use crate::workload::{DemandSnapshot, MixEstimator, MixSchedule, Trace, TraceMix};
+
+/// Where the demand channel of the world signal comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DemandMode {
+    /// True schedule snapshot at every tick.
+    Oracle,
+    /// Causal [`MixEstimator`] over the arrivals observed so far.
+    Estimated,
+    /// The first tick's snapshot, frozen — demand-blind replanning.
+    Static,
+}
+
+impl DemandMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DemandMode::Oracle => "oracle",
+            DemandMode::Estimated => "estimated",
+            DemandMode::Static => "static",
+        }
+    }
+
+    /// CLI surface: `oracle`, `estimated`/`est`, `static`/`frozen`.
+    pub fn by_name(s: &str) -> Option<DemandMode> {
+        match s {
+            "oracle" => Some(DemandMode::Oracle),
+            "estimated" | "est" | "estimator" => Some(DemandMode::Estimated),
+            "static" | "frozen" => Some(DemandMode::Static),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [DemandMode; 3] {
+        [DemandMode::Static, DemandMode::Oracle, DemandMode::Estimated]
+    }
+}
+
+/// Options for one closed-loop run.
+#[derive(Clone, Debug)]
+pub struct ClosedLoopOptions {
+    pub orchestrator: OrchestratorOptions,
+    pub timeline: TimelineOptions,
+    pub mode: DemandMode,
+    /// EWMA half-life of the demand estimator, seconds. Shorter tracks
+    /// shifts faster but jitters more; a fraction of the tick interval is
+    /// a reasonable default.
+    pub estimator_halflife_s: f64,
+}
+
+impl Default for ClosedLoopOptions {
+    fn default() -> Self {
+        Self {
+            orchestrator: OrchestratorOptions::default(),
+            timeline: TimelineOptions::default(),
+            mode: DemandMode::Estimated,
+            estimator_halflife_s: 600.0,
+        }
+    }
+}
+
+/// Outcome of a closed-loop run: the plan timeline, its simulated
+/// execution, and how well the demand channel tracked the truth.
+#[derive(Clone, Debug)]
+pub struct ClosedLoopResult {
+    pub report: OrchestrationReport,
+    pub sim: TimelineResult,
+    /// Per-epoch total-variation distance between the mixture the epoch
+    /// was planned against and the schedule's true mixture at that time.
+    pub mix_error: Vec<f64>,
+    /// Per-epoch relative rate error, |planned − true| / max(planned, true).
+    pub rate_error: Vec<f64>,
+    /// Per-epoch total-variation distance between the planned mixture and
+    /// the mixture *actually observed* in the simulator
+    /// ([`super::EpochStats::arrivals_by_type`]) — the error a deployed
+    /// system can measure without knowing the true schedule. Epochs with
+    /// no arrivals report 0.
+    pub observed_mix_error: Vec<f64>,
+}
+
+impl ClosedLoopResult {
+    pub fn mean_mix_error(&self) -> f64 {
+        mean(&self.mix_error)
+    }
+
+    pub fn mean_rate_error(&self) -> f64 {
+        mean(&self.rate_error)
+    }
+
+    pub fn mean_observed_mix_error(&self) -> f64 {
+        mean(&self.observed_mix_error)
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Run one closed-loop scenario: the market channel comes from `markets`,
+/// the demand channel from `opts.mode` (oracle schedule / causal estimator
+/// over `trace` / frozen initial snapshot), and the produced epoch
+/// timeline is executed against `trace` in the time-varying simulator.
+/// Returns `None` when the initial world admits no feasible plan.
+pub fn run_closed_loop(
+    base: &SchedProblem,
+    markets: &[MarketEvent],
+    schedule: &MixSchedule,
+    trace: &Trace,
+    model: &ModelSpec,
+    perf: &PerfModel,
+    opts: &ClosedLoopOptions,
+) -> Option<ClosedLoopResult> {
+    let first = markets.first()?;
+    let ts: Vec<f64> = markets.iter().map(|m| m.t_s).collect();
+    let initial_demand = schedule.at(first.t_s);
+    let mut estimator = MixEstimator::new(opts.estimator_halflife_s, initial_demand.clone());
+    let mut observed_to_s = first.t_s;
+
+    // The demand channel for the tick at `t`: causal — the estimator only
+    // ever sees arrivals strictly before the tick it plans.
+    let mut demand_at = |t_s: f64| -> DemandSnapshot {
+        match opts.mode {
+            DemandMode::Oracle => schedule.at(t_s),
+            DemandMode::Static => initial_demand.clone(),
+            DemandMode::Estimated => {
+                estimator.observe_trace_window(trace, observed_to_s, t_s);
+                observed_to_s = observed_to_s.max(t_s);
+                estimator.snapshot(t_s)
+            }
+        }
+    };
+
+    let first_event = WorldEvent::new(first.clone(), demand_at(first.t_s));
+    let mut orch = Orchestrator::start(
+        base,
+        &first_event,
+        epoch_duration(&ts, 0),
+        &opts.orchestrator,
+    )?;
+    for (i, market) in markets.iter().enumerate().skip(1) {
+        let event = WorldEvent::new(market.clone(), demand_at(market.t_s));
+        orch.step(&event, epoch_duration(&ts, i));
+    }
+    let report = orch.finish();
+
+    // Demand-tracking error vs the oracle schedule, per epoch.
+    let mut mix_error = Vec::with_capacity(report.epochs.len());
+    let mut rate_error = Vec::with_capacity(report.epochs.len());
+    for e in &report.epochs {
+        let truth = schedule.at(e.start_s);
+        mix_error.push(e.demand.mix.total_variation(&truth.mix));
+        let denom = e.demand.rate_rps.max(truth.rate_rps);
+        rate_error.push(if denom > 0.0 {
+            (e.demand.rate_rps - truth.rate_rps).abs() / denom
+        } else {
+            0.0
+        });
+    }
+
+    let steps = report.timeline_steps();
+    let sim = simulate_timeline(
+        &steps,
+        std::slice::from_ref(model),
+        std::slice::from_ref(trace),
+        perf,
+        &opts.timeline,
+    );
+    drop(steps);
+
+    // The measurable counterpart of `mix_error`: planned mixture vs the
+    // mixture the simulator actually saw arrive in each epoch.
+    let observed_mix_error: Vec<f64> = report
+        .epochs
+        .iter()
+        .zip(&sim.epochs)
+        .map(|(e, s)| {
+            let mut counts = [0.0f64; 9];
+            for (c, &n) in counts.iter_mut().zip(&s.arrivals_by_type) {
+                *c = n as f64;
+            }
+            match TraceMix::normalized("observed", counts) {
+                Ok(observed) => e.demand.mix.total_variation(&observed),
+                Err(_) => 0.0, // no arrivals this epoch
+            }
+        })
+        .collect();
+
+    Some(ClosedLoopResult {
+        report,
+        sim,
+        mix_error,
+        rate_error,
+        observed_mix_error,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::MarketEventStream;
+    use crate::orchestrator::ReplanStrategy;
+    use crate::profiler::Profile;
+    use crate::sched::binary_search::BinarySearchOptions;
+    use crate::sched::enumerate::EnumOptions;
+    use crate::workload::{synthesize_trace_schedule, SynthOptions, TraceMix};
+
+    struct Scenario {
+        model: ModelSpec,
+        perf: PerfModel,
+        base: SchedProblem,
+        markets: Vec<MarketEvent>,
+        schedule: MixSchedule,
+        trace: Trace,
+    }
+
+    fn shift_scenario(epochs: usize, seed: u64) -> Scenario {
+        let model = ModelSpec::llama3_8b();
+        let perf = PerfModel::default();
+        let profile = Profile::build(&model, &perf, &EnumOptions::default());
+        let tick_s = 600.0;
+        let horizon_s = epochs as f64 * tick_s;
+        let schedule = MixSchedule::shift(
+            "loop-shift",
+            (TraceMix::trace1(), 2.0),
+            (TraceMix::trace3(), 3.0),
+            0.25 * horizon_s,
+            0.75 * horizon_s,
+        )
+        .expect("valid shift");
+        let markets: Vec<MarketEvent> = MarketEventStream::new(seed, epochs, tick_s).collect();
+        let base = SchedProblem::from_profile(
+            &profile,
+            &TraceMix::trace1(),
+            2.0 * tick_s,
+            &markets[0].avail,
+            30.0,
+        );
+        let trace = synthesize_trace_schedule(
+            &schedule,
+            horizon_s,
+            &SynthOptions {
+                length_sigma: 0.15,
+                seed,
+                ..Default::default()
+            },
+        );
+        Scenario {
+            model,
+            perf,
+            base,
+            markets,
+            schedule,
+            trace,
+        }
+    }
+
+    fn loop_opts(mode: DemandMode) -> ClosedLoopOptions {
+        ClosedLoopOptions {
+            orchestrator: OrchestratorOptions {
+                strategy: ReplanStrategy::Escalating {
+                    drift_threshold: 0.25,
+                },
+                search: BinarySearchOptions {
+                    tolerance: 3.0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            mode,
+            estimator_halflife_s: 300.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn oracle_mode_has_zero_mix_error() {
+        let s = shift_scenario(6, 41);
+        let r = run_closed_loop(
+            &s.base,
+            &s.markets,
+            &s.schedule,
+            &s.trace,
+            &s.model,
+            &s.perf,
+            &loop_opts(DemandMode::Oracle),
+        )
+        .expect("closed loop");
+        assert_eq!(r.mix_error.len(), r.report.epochs.len());
+        for (i, err) in r.mix_error.iter().enumerate() {
+            assert!(err.abs() < 1e-9, "epoch {i}: oracle mix error {err}");
+        }
+        assert!(r.mean_rate_error() < 1e-9);
+        // All trace requests complete through the simulator.
+        assert_eq!(r.sim.recorder.count(), s.trace.len());
+        // The observed-mixture error is defined per epoch and bounded;
+        // with oracle demand it is pure sampling noise, far below the
+        // 0.55 TV of the full shift.
+        assert_eq!(r.observed_mix_error.len(), r.report.epochs.len());
+        for &err in &r.observed_mix_error {
+            assert!((0.0..=1.0).contains(&err), "observed TV {err}");
+        }
+        assert!(
+            r.mean_observed_mix_error() < 0.2,
+            "oracle observed-mix error {}",
+            r.mean_observed_mix_error()
+        );
+    }
+
+    #[test]
+    fn static_mode_accumulates_error_estimator_tracks() {
+        let s = shift_scenario(6, 43);
+        let frozen = run_closed_loop(
+            &s.base,
+            &s.markets,
+            &s.schedule,
+            &s.trace,
+            &s.model,
+            &s.perf,
+            &loop_opts(DemandMode::Static),
+        )
+        .expect("static loop");
+        let est = run_closed_loop(
+            &s.base,
+            &s.markets,
+            &s.schedule,
+            &s.trace,
+            &s.model,
+            &s.perf,
+            &loop_opts(DemandMode::Estimated),
+        )
+        .expect("estimated loop");
+        // By the last epoch the shift is complete: the frozen channel is
+        // ~0.55 TV wrong, the estimator must have closed most of that.
+        let last = frozen.mix_error.len() - 1;
+        assert!(
+            frozen.mix_error[last] > 0.4,
+            "frozen channel should be badly wrong at the end: {}",
+            frozen.mix_error[last]
+        );
+        assert!(
+            est.mix_error[last] < frozen.mix_error[last] * 0.5,
+            "estimator ({}) should at least halve the frozen error ({})",
+            est.mix_error[last],
+            frozen.mix_error[last]
+        );
+        assert!(est.mean_mix_error() < frozen.mean_mix_error());
+        // Static mode never reads demand drift, so it never fast-paths.
+        assert_eq!(frozen.report.fast_paths, 0);
+    }
+
+    #[test]
+    fn closed_loop_deterministic() {
+        let s = shift_scenario(4, 47);
+        let run = || {
+            run_closed_loop(
+                &s.base,
+                &s.markets,
+                &s.schedule,
+                &s.trace,
+                &s.model,
+                &s.perf,
+                &loop_opts(DemandMode::Estimated),
+            )
+            .expect("closed loop")
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.report.replans, b.report.replans);
+        assert_eq!(a.report.fast_paths, b.report.fast_paths);
+        assert!((a.sim.total_rental_usd - b.sim.total_rental_usd).abs() < 1e-9);
+        for (x, y) in a.mix_error.iter().zip(&b.mix_error) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn demand_mode_names_roundtrip() {
+        for m in DemandMode::all() {
+            assert_eq!(DemandMode::by_name(m.name()), Some(m));
+        }
+        assert_eq!(DemandMode::by_name("est"), Some(DemandMode::Estimated));
+        assert_eq!(DemandMode::by_name("frozen"), Some(DemandMode::Static));
+        assert!(DemandMode::by_name("nope").is_none());
+    }
+}

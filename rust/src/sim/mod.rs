@@ -11,9 +11,16 @@
 //! an epoch sequence from the orchestrator, applying plan transitions
 //! mid-trace (drain retiring replicas, route around ones spinning up) and
 //! reporting per-epoch rental cost and SLO attainment.
+//!
+//! [`closed_loop`] closes the demand loop on top of that: the simulator's
+//! observed arrivals feed a [`crate::workload::MixEstimator`] so the
+//! orchestrator replans against estimated (not oracle) demand, with
+//! per-epoch estimated-vs-true mixture error reported.
 
+pub mod closed_loop;
 pub mod timeline;
 
+pub use closed_loop::{run_closed_loop, ClosedLoopOptions, ClosedLoopResult, DemandMode};
 pub use timeline::{simulate_timeline, EpochStats, TimelineOptions, TimelineResult, TimelineStep};
 
 use crate::metrics::{BusyTracker, LatencyRecorder};

@@ -64,6 +64,11 @@ pub struct EpochStats {
     pub end_s: f64,
     /// Requests that arrived during this epoch.
     pub arrivals: usize,
+    /// Arrivals broken down by workload type — the *observed* mixture of
+    /// the epoch. [`super::run_closed_loop`] normalises this against the
+    /// mixture the epoch was planned for to report the measurable
+    /// (schedule-free) side of the demand-tracking error.
+    pub arrivals_by_type: [usize; 9],
     /// Of those, completed by the end of the simulation.
     pub completed: usize,
     /// Fraction of this epoch's arrivals finishing within the SLO.
@@ -309,6 +314,7 @@ pub fn simulate_timeline(
         .map(|s| vec![vec![0.0; s.plan.entries.len()]; nmodels * nw])
         .collect();
     let mut epoch_arrivals = vec![0usize; steps.len()];
+    let mut epoch_type_arrivals = vec![[0usize; 9]; steps.len()];
     let total_requests: usize = traces.iter().map(|t| t.len()).sum();
 
     for (m, trace) in traces.iter().enumerate() {
@@ -316,6 +322,7 @@ pub fn simulate_timeline(
             let w = req.workload.index;
             let e = epoch_of_time(steps, req.arrival_s);
             epoch_arrivals[e] += 1;
+            epoch_type_arrivals[e][w] += 1;
             let plan = steps[e].plan;
             let problem = steps[e].problem;
             let credit_row = &mut credits[e][m * nw + w];
@@ -601,6 +608,7 @@ pub fn simulate_timeline(
             start_s: s.start_s,
             end_s: end,
             arrivals: epoch_arrivals[i],
+            arrivals_by_type: epoch_type_arrivals[i],
             completed: rec.count(),
             slo_attainment: rec.slo_attainment(opts.slo_latency_s),
             p90_s: rec.latency_percentile(90.0),
@@ -740,11 +748,13 @@ mod tests {
         assert_eq!(result.epochs.len(), 3);
         assert!(result.makespan > 240.0, "makespan {}", result.makespan);
         assert!(result.total_rental_usd > 0.0);
-        // Every epoch saw traffic and paid rent.
+        // Every epoch saw traffic and paid rent, and the per-type
+        // breakdown is consistent with the totals.
         for e in &result.epochs {
             assert!(e.arrivals > 0, "epoch at {} starved", e.start_s);
             assert!(e.rental_usd > 0.0);
             assert!(e.end_s > e.start_s);
+            assert_eq!(e.arrivals_by_type.iter().sum::<usize>(), e.arrivals);
         }
         let completed: usize = result.epochs.iter().map(|e| e.completed).sum();
         assert_eq!(completed, 900, "per-epoch accounting lost requests");

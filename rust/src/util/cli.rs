@@ -107,6 +107,15 @@ impl Args {
         self.get_usize("epochs", default)
     }
 
+    /// The shared drift surface: `--demand-drift T` — the demand-drift
+    /// threshold past which the orchestrator re-decides the GPU
+    /// composition (below it the assignment-LP fast path repairs in
+    /// place). Read by the orchestrate subcommand and the fig3_drift
+    /// bench so sweeps stay comparable.
+    pub fn demand_drift(&self, default: f64) -> f64 {
+        self.get_f64("demand-drift", default)
+    }
+
     /// Comma-separated list option, e.g. `--budgets 15,30,60`.
     pub fn get_list_f64(&self, name: &str, default: &[f64]) -> Vec<f64> {
         match self.get(name) {
@@ -185,5 +194,13 @@ mod tests {
         let d = parse("orchestrate", &[]);
         assert_eq!(d.seed(7), 7);
         assert_eq!(d.epochs(8), 8);
+    }
+
+    #[test]
+    fn demand_drift_surface() {
+        let a = parse("orchestrate --demand-drift 0.3", &[]);
+        assert!((a.demand_drift(0.15) - 0.3).abs() < 1e-12);
+        let d = parse("orchestrate", &[]);
+        assert!((d.demand_drift(0.15) - 0.15).abs() < 1e-12);
     }
 }

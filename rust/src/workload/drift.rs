@@ -1,0 +1,529 @@
+//! Demand-side drift: time-varying workload schedules and online mixture
+//! estimation.
+//!
+//! The paper's plan is cost-optimal only for the mixture it was solved
+//! against; Mélange (Griggs et al.) shows the GPU composition should be
+//! re-decided as the request-size mixture shifts. This module supplies the
+//! demand half of the orchestrator's world signal:
+//!
+//! * [`MixSchedule`] — a piecewise-linear time-varying ([`TraceMix`],
+//!   arrival-rate) pair, the *ground truth* demand process a scenario
+//!   replays (mixture shifts, diurnal rate ramps);
+//! * [`DemandSnapshot`] — one observation of that process (rate + mixture),
+//!   the demand channel of [`crate::cloud::WorldEvent`];
+//! * [`demand_drift`] — the scale-invariant distance between two snapshots
+//!   that the replanner thresholds on;
+//! * [`MixEstimator`] — an exponentially-weighted online estimator over
+//!   *observed* arrivals, so the closed loop can replan against estimated
+//!   (not oracle) demand.
+
+use super::{Trace, TraceMix};
+
+/// One observation of the demand process: aggregate arrival rate plus the
+/// mixture over the nine workload types.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DemandSnapshot {
+    /// Aggregate arrival rate, requests/second.
+    pub rate_rps: f64,
+    /// Mixture over workload types 1..9.
+    pub mix: TraceMix,
+}
+
+impl DemandSnapshot {
+    pub fn new(rate_rps: f64, mix: TraceMix) -> DemandSnapshot {
+        DemandSnapshot { rate_rps, mix }
+    }
+
+    /// Request demand per workload type over a planning epoch of
+    /// `epoch_s` seconds.
+    pub fn demands_over(&self, epoch_s: f64) -> [f64; 9] {
+        self.mix.demands(self.rate_rps * epoch_s)
+    }
+}
+
+/// Normalised demand drift between two snapshots: total-variation distance
+/// of the mixtures plus the relative rate change. Zero for identical
+/// snapshots; invariant under scaling both rates by the same factor (the
+/// metric reacts to the *shape* of demand, and to rate changes only in
+/// relative terms). Each term lies in [0, 1], so the sum is in [0, 2] —
+/// the same scale as [`crate::orchestrator::market_drift`]'s supply axis.
+pub fn demand_drift(old: &DemandSnapshot, new: &DemandSnapshot) -> f64 {
+    let mix_term = old.mix.total_variation(&new.mix);
+    let denom = old.rate_rps.max(new.rate_rps);
+    let rate_term = if denom > 0.0 {
+        (old.rate_rps - new.rate_rps).abs() / denom
+    } else {
+        0.0
+    };
+    mix_term + rate_term
+}
+
+/// One keyframe of a demand schedule: the mixture and rate in force at
+/// `t_s`, linearly interpolated toward the next keyframe.
+#[derive(Clone, Debug)]
+pub struct MixKeyframe {
+    pub t_s: f64,
+    pub mix: TraceMix,
+    pub rate_rps: f64,
+}
+
+/// A piecewise-linear time-varying demand process: `TraceMix` ratios and
+/// the aggregate arrival rate are both interpolated between keyframes
+/// (clamped to the first/last keyframe outside their span). Because the
+/// rate is piecewise linear, its maximum over any horizon is attained at a
+/// keyframe — which is what lets [`super::synthesize_trace_schedule`] use
+/// exact Poisson thinning.
+#[derive(Clone, Debug)]
+pub struct MixSchedule {
+    pub name: String,
+    keyframes: Vec<MixKeyframe>,
+}
+
+impl MixSchedule {
+    /// Build from keyframes. Rejects empty lists, unsorted or non-finite
+    /// times, and negative rates.
+    pub fn new(name: &str, keyframes: Vec<MixKeyframe>) -> anyhow::Result<MixSchedule> {
+        if keyframes.is_empty() {
+            anyhow::bail!("schedule '{name}' has no keyframes");
+        }
+        for k in &keyframes {
+            if !k.t_s.is_finite() || !k.rate_rps.is_finite() || k.rate_rps < 0.0 {
+                anyhow::bail!(
+                    "schedule '{name}': bad keyframe (t={}, rate={})",
+                    k.t_s,
+                    k.rate_rps
+                );
+            }
+        }
+        for w in keyframes.windows(2) {
+            if w[1].t_s < w[0].t_s {
+                anyhow::bail!(
+                    "schedule '{name}': keyframes out of order ({} after {})",
+                    w[1].t_s,
+                    w[0].t_s
+                );
+            }
+        }
+        Ok(MixSchedule {
+            name: name.to_string(),
+            keyframes,
+        })
+    }
+
+    /// A stationary schedule: one mixture, one rate, forever.
+    pub fn constant(mix: TraceMix, rate_rps: f64) -> MixSchedule {
+        let name = format!("const-{}", mix.name);
+        MixSchedule::new(
+            &name,
+            vec![MixKeyframe {
+                t_s: 0.0,
+                mix,
+                rate_rps,
+            }],
+        )
+        .expect("constant schedule is always valid")
+    }
+
+    /// The canonical drift scenario: hold `(from_mix, from_rate)` until
+    /// `ramp_start_s`, linearly shift to `(to_mix, to_rate)` by
+    /// `ramp_end_s`, then hold.
+    pub fn shift(
+        name: &str,
+        from: (TraceMix, f64),
+        to: (TraceMix, f64),
+        ramp_start_s: f64,
+        ramp_end_s: f64,
+    ) -> anyhow::Result<MixSchedule> {
+        if ramp_end_s < ramp_start_s {
+            anyhow::bail!(
+                "schedule '{name}': ramp ends ({ramp_end_s}) before it starts ({ramp_start_s})"
+            );
+        }
+        let (from_mix, from_rate) = from;
+        let (to_mix, to_rate) = to;
+        MixSchedule::new(
+            name,
+            vec![
+                MixKeyframe {
+                    t_s: ramp_start_s,
+                    mix: from_mix,
+                    rate_rps: from_rate,
+                },
+                MixKeyframe {
+                    t_s: ramp_end_s,
+                    mix: to_mix,
+                    rate_rps: to_rate,
+                },
+            ],
+        )
+    }
+
+    /// Arrival rate at time `t_s` (requests/second).
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        match self.bracket(t_s) {
+            Bracket::Before(k) | Bracket::After(k) => k.rate_rps,
+            Bracket::Between(a, b, alpha) => a.rate_rps + alpha * (b.rate_rps - a.rate_rps),
+        }
+    }
+
+    /// Mixture at time `t_s`: ratios linearly interpolated between the
+    /// bracketing keyframes and renormalised (FP-safe via
+    /// [`TraceMix::normalized`]).
+    pub fn mix_at(&self, t_s: f64) -> TraceMix {
+        match self.bracket(t_s) {
+            Bracket::Before(k) | Bracket::After(k) => k.mix.clone(),
+            Bracket::Between(a, b, alpha) => {
+                let mut ratios = [0.0; 9];
+                for (i, r) in ratios.iter_mut().enumerate() {
+                    *r = a.mix.ratios[i] + alpha * (b.mix.ratios[i] - a.mix.ratios[i]);
+                }
+                TraceMix::normalized(&self.name, ratios)
+                    .expect("interpolation of valid mixes stays valid")
+            }
+        }
+    }
+
+    /// The full demand snapshot at time `t_s`.
+    pub fn at(&self, t_s: f64) -> DemandSnapshot {
+        DemandSnapshot {
+            rate_rps: self.rate_at(t_s),
+            mix: self.mix_at(t_s),
+        }
+    }
+
+    /// Maximum arrival rate over the whole schedule. Piecewise linearity
+    /// puts the max at a keyframe, so this bounds `rate_at` everywhere —
+    /// the thinning envelope of the non-stationary trace synthesizer.
+    pub fn max_rate(&self) -> f64 {
+        self.keyframes.iter().map(|k| k.rate_rps).fold(0.0, f64::max)
+    }
+
+    fn bracket(&self, t_s: f64) -> Bracket<'_> {
+        let first = self.keyframes.first().expect("schedule is non-empty");
+        if t_s <= first.t_s {
+            return Bracket::Before(first);
+        }
+        for w in self.keyframes.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            if t_s <= b.t_s {
+                let span = b.t_s - a.t_s;
+                let alpha = if span > 0.0 { (t_s - a.t_s) / span } else { 1.0 };
+                return Bracket::Between(a, b, alpha);
+            }
+        }
+        Bracket::After(self.keyframes.last().expect("schedule is non-empty"))
+    }
+}
+
+enum Bracket<'a> {
+    Before(&'a MixKeyframe),
+    Between(&'a MixKeyframe, &'a MixKeyframe, f64),
+    After(&'a MixKeyframe),
+}
+
+/// Exponentially-weighted online estimator of the demand process from
+/// observed arrivals. Every observation carries weight 1 at its arrival
+/// time and decays with the configured half-life; the mixture estimate is
+/// the normalised decayed per-type mass, and the rate estimate uses the
+/// steady-state identity E[mass] = λ/k for a Poisson process observed
+/// through an exponential window with decay constant k.
+///
+/// Until enough mass has accumulated (a few requests), `snapshot` falls
+/// back to the prior it was constructed with, so a cold-started closed
+/// loop plans against the same demand a static planner would.
+#[derive(Clone, Debug)]
+pub struct MixEstimator {
+    halflife_s: f64,
+    counts: [f64; 9],
+    total: f64,
+    last_t_s: f64,
+    /// Time of the first observation — the start of the window the decayed
+    /// mass actually covers, used to bias-correct the rate estimate.
+    start_t_s: Option<f64>,
+    prior: DemandSnapshot,
+}
+
+/// Decayed observation mass below which the estimator reports its prior.
+const MIN_ESTIMATOR_MASS: f64 = 5.0;
+
+impl MixEstimator {
+    pub fn new(halflife_s: f64, prior: DemandSnapshot) -> MixEstimator {
+        assert!(
+            halflife_s.is_finite() && halflife_s > 0.0,
+            "estimator half-life must be positive, got {halflife_s}"
+        );
+        MixEstimator {
+            halflife_s,
+            counts: [0.0; 9],
+            total: 0.0,
+            last_t_s: 0.0,
+            start_t_s: None,
+            prior,
+        }
+    }
+
+    /// Record one observed arrival of workload type `workload` at `t_s`.
+    /// Out-of-order arrivals are tolerated (decay never runs backwards).
+    pub fn observe(&mut self, t_s: f64, workload: usize) {
+        if self.start_t_s.is_none() {
+            self.start_t_s = Some(t_s);
+            self.last_t_s = t_s;
+        }
+        self.decay_to(t_s);
+        self.counts[workload] += 1.0;
+        self.total += 1.0;
+    }
+
+    /// Feed every arrival of `trace` with `from_s <= arrival < to_s` —
+    /// the causal window a closed loop observes between two replans.
+    /// Arrivals are sorted, so the window is located by binary search.
+    pub fn observe_trace_window(&mut self, trace: &Trace, from_s: f64, to_s: f64) {
+        let start = trace.requests.partition_point(|r| r.arrival_s < from_s);
+        for r in &trace.requests[start..] {
+            if r.arrival_s >= to_s {
+                break;
+            }
+            self.observe(r.arrival_s, r.workload.index);
+        }
+    }
+
+    /// Decayed observation mass currently held (diagnostic).
+    pub fn mass(&self) -> f64 {
+        self.total
+    }
+
+    /// The demand estimate as of `t_s`.
+    pub fn snapshot(&mut self, t_s: f64) -> DemandSnapshot {
+        self.decay_to(t_s);
+        if self.total < MIN_ESTIMATOR_MASS {
+            return self.prior.clone();
+        }
+        let mix = TraceMix::normalized("estimated", self.counts)
+            .expect("positive mass normalises");
+        let k = std::f64::consts::LN_2 / self.halflife_s;
+        // Cold-start bias correction: after observing for W seconds the
+        // expected decayed mass of a rate-λ Poisson stream is
+        // (λ/k)·(1 − 2^(−W/halflife)), not λ/k — without the correction
+        // the first few ticks' rate reads systematically low and the
+        // closed loop under-provisions (and sees spurious rate drift).
+        let window_s = self
+            .start_t_s
+            .map(|t0| (t_s - t0).max(0.0))
+            .unwrap_or(0.0);
+        let coverage = 1.0 - 0.5f64.powf(window_s / self.halflife_s);
+        if coverage <= 0.0 {
+            return self.prior.clone();
+        }
+        DemandSnapshot {
+            rate_rps: self.total * k / coverage,
+            mix,
+        }
+    }
+
+    fn decay_to(&mut self, t_s: f64) {
+        let dt = t_s - self.last_t_s;
+        if dt > 0.0 {
+            let f = 0.5f64.powf(dt / self.halflife_s);
+            for c in self.counts.iter_mut() {
+                *c *= f;
+            }
+            self.total *= f;
+            self.last_t_s = t_s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{synthesize_trace, SynthOptions};
+
+    fn snap(rate: f64, mix: TraceMix) -> DemandSnapshot {
+        DemandSnapshot::new(rate, mix)
+    }
+
+    #[test]
+    fn demand_drift_zero_on_identical_snapshots() {
+        let a = snap(2.0, TraceMix::trace1());
+        let b = snap(2.0, TraceMix::trace1());
+        assert!(demand_drift(&a, &b).abs() < 1e-12);
+        // Zero-rate edge: no NaN, still zero for identical.
+        let z = snap(0.0, TraceMix::trace2());
+        assert!(demand_drift(&z, &z).abs() < 1e-12);
+    }
+
+    #[test]
+    fn demand_drift_scale_invariant_in_rate() {
+        let a = snap(2.0, TraceMix::trace1());
+        let b = snap(3.0, TraceMix::trace3());
+        let d1 = demand_drift(&a, &b);
+        let a10 = snap(20.0, TraceMix::trace1());
+        let b10 = snap(30.0, TraceMix::trace3());
+        let d10 = demand_drift(&a10, &b10);
+        assert!((d1 - d10).abs() < 1e-12, "{d1} vs {d10}");
+        assert!(d1 > 0.5, "trace1→trace3 shift should read as large: {d1}");
+    }
+
+    #[test]
+    fn demand_drift_bounded_and_symmetric() {
+        let a = snap(1.0, TraceMix::trace1());
+        let b = snap(100.0, TraceMix::trace3());
+        let d = demand_drift(&a, &b);
+        assert!(d <= 2.0 + 1e-12, "d={d}");
+        assert!((d - demand_drift(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedule_interpolates_and_clamps() {
+        let s = MixSchedule::shift(
+            "t1-to-t3",
+            (TraceMix::trace1(), 2.0),
+            (TraceMix::trace3(), 4.0),
+            100.0,
+            300.0,
+        )
+        .expect("valid shift");
+        // Clamped outside the ramp.
+        assert_eq!(s.mix_at(-50.0).ratios, TraceMix::trace1().ratios);
+        assert_eq!(s.mix_at(0.0).ratios, TraceMix::trace1().ratios);
+        assert_eq!(s.mix_at(1000.0).ratios, TraceMix::trace3().ratios);
+        assert!((s.rate_at(0.0) - 2.0).abs() < 1e-12);
+        assert!((s.rate_at(300.0) - 4.0).abs() < 1e-12);
+        // Midpoint: mean ratios, mean rate, still a valid mixture.
+        let mid = s.mix_at(200.0);
+        let sum: f64 = mid.ratios.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "midpoint ratios sum {sum}");
+        for (i, &r) in mid.ratios.iter().enumerate() {
+            let want = 0.5 * (TraceMix::trace1().ratios[i] + TraceMix::trace3().ratios[i]);
+            assert!((r - want).abs() < 1e-9, "type {i}: {r} vs {want}");
+        }
+        assert!((s.rate_at(200.0) - 3.0).abs() < 1e-12);
+        assert!((s.max_rate() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedule_rejects_bad_keyframes() {
+        assert!(MixSchedule::new("empty", Vec::new()).is_err());
+        let out_of_order = vec![
+            MixKeyframe {
+                t_s: 10.0,
+                mix: TraceMix::trace1(),
+                rate_rps: 1.0,
+            },
+            MixKeyframe {
+                t_s: 5.0,
+                mix: TraceMix::trace2(),
+                rate_rps: 1.0,
+            },
+        ];
+        assert!(MixSchedule::new("backwards", out_of_order).is_err());
+        assert!(MixSchedule::shift(
+            "bad-ramp",
+            (TraceMix::trace1(), 1.0),
+            (TraceMix::trace2(), 1.0),
+            200.0,
+            100.0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn estimator_converges_on_stationary_trace() {
+        let mix = TraceMix::trace2();
+        let rate = 20.0;
+        let trace = synthesize_trace(
+            &mix,
+            &SynthOptions {
+                num_requests: 20_000,
+                arrival_rate: rate,
+                length_sigma: 0.0,
+                seed: 99,
+            },
+        );
+        // A prior far from the truth, so convergence is the estimator's.
+        let prior = DemandSnapshot::new(1.0, TraceMix::trace3());
+        let mut est = MixEstimator::new(100.0, prior);
+        let end = trace.requests.last().unwrap().arrival_s;
+        est.observe_trace_window(&trace, 0.0, end + 1.0);
+        let got = est.snapshot(end);
+        let tv = got.mix.total_variation(&mix);
+        assert!(tv < 0.05, "mixture TV {tv} after {} arrivals", trace.len());
+        assert!(
+            (got.rate_rps / rate - 1.0).abs() < 0.15,
+            "rate estimate {} vs true {rate}",
+            got.rate_rps
+        );
+    }
+
+    #[test]
+    fn estimator_rate_unbiased_from_cold_start() {
+        // One half-life of observation: the decayed mass is only ~50% of
+        // its steady state, so the naive total·k estimate would read ~half
+        // the true rate; the coverage correction must repair it.
+        let rate = 10.0;
+        let trace = synthesize_trace(
+            &TraceMix::trace1(),
+            &SynthOptions {
+                num_requests: 3_000,
+                arrival_rate: rate,
+                length_sigma: 0.0,
+                seed: 5,
+            },
+        );
+        let mut est = MixEstimator::new(300.0, DemandSnapshot::new(1.0, TraceMix::trace3()));
+        est.observe_trace_window(&trace, 0.0, 300.0);
+        let got = est.snapshot(300.0);
+        assert!(
+            (got.rate_rps / rate - 1.0).abs() < 0.15,
+            "cold-start rate {} vs true {rate}",
+            got.rate_rps
+        );
+    }
+
+    #[test]
+    fn estimator_cold_start_returns_prior() {
+        let prior = DemandSnapshot::new(2.5, TraceMix::trace1());
+        let mut est = MixEstimator::new(300.0, prior.clone());
+        assert_eq!(est.snapshot(0.0), prior);
+        // A couple of observations are still below the mass floor.
+        est.observe(1.0, 0);
+        est.observe(2.0, 4);
+        assert_eq!(est.snapshot(3.0), prior);
+    }
+
+    #[test]
+    fn estimator_tracks_a_shift() {
+        // Saturate on trace1, then feed trace3 for many half-lives: the
+        // estimate must move to the new mixture.
+        let opts_a = SynthOptions {
+            num_requests: 5_000,
+            arrival_rate: 10.0,
+            length_sigma: 0.0,
+            seed: 7,
+        };
+        let a = synthesize_trace(&TraceMix::trace1(), &opts_a);
+        let a_end = a.requests.last().unwrap().arrival_s;
+        let b = synthesize_trace(&TraceMix::trace3(), &SynthOptions { seed: 8, ..opts_a });
+        let mut est = MixEstimator::new(50.0, DemandSnapshot::new(10.0, TraceMix::trace1()));
+        est.observe_trace_window(&a, 0.0, f64::INFINITY);
+        for r in &b.requests {
+            est.observe(a_end + r.arrival_s, r.workload.index);
+        }
+        let t_end = a_end + b.requests.last().unwrap().arrival_s;
+        let got = est.snapshot(t_end);
+        let to_new = got.mix.total_variation(&TraceMix::trace3());
+        let to_old = got.mix.total_variation(&TraceMix::trace1());
+        assert!(
+            to_new < 0.1 && to_old > 0.3,
+            "estimate did not track the shift: TV(new)={to_new} TV(old)={to_old}"
+        );
+    }
+
+    #[test]
+    fn demands_over_scales_with_epoch() {
+        let s = snap(2.0, TraceMix::trace1());
+        let d = s.demands_over(900.0);
+        assert!((d.iter().sum::<f64>() - 1800.0).abs() < 1e-9);
+        assert!((d[0] - 0.33 * 1800.0).abs() < 1e-9);
+    }
+}

@@ -1,11 +1,15 @@
 //! Workload model: the paper's nine workload types (input length ∈
 //! {2455, 824, 496} × output length ∈ {510, 253, 18}), the three evaluation
-//! traces (Table 4 mixtures of those types), request records, and a trace
-//! synthesizer with Poisson arrivals and log-normal length jitter.
+//! traces (Table 4 mixtures of those types), request records, a trace
+//! synthesizer with Poisson arrivals and log-normal length jitter, and the
+//! demand-drift layer ([`drift`]): time-varying mix schedules, demand
+//! snapshots, and the online mixture estimator.
 
+pub mod drift;
 pub mod synth;
 
-pub use synth::{synthesize_trace, SynthOptions};
+pub use drift::{demand_drift, DemandSnapshot, MixEstimator, MixKeyframe, MixSchedule};
+pub use synth::{synthesize_trace, synthesize_trace_schedule, SynthOptions};
 
 use crate::util::json::Json;
 
@@ -137,6 +141,42 @@ impl TraceMix {
             name: name.to_string(),
             ratios,
         }
+    }
+
+    /// Like [`TraceMix::new`], but renormalises instead of asserting the
+    /// ratios sum to 1. The assert in `new()` is the right contract for the
+    /// hand-written Table 4 mixtures, but wrong for drift-interpolated,
+    /// estimator-derived, or CLI-supplied mixes subject to FP error — those
+    /// call sites route through here. Errors on negative, non-finite, or
+    /// all-zero ratios.
+    pub fn normalized(name: &str, ratios: [f64; 9]) -> anyhow::Result<TraceMix> {
+        if ratios.iter().any(|r| !r.is_finite() || *r < 0.0) {
+            anyhow::bail!("trace mix '{name}': negative or non-finite ratio in {ratios:?}");
+        }
+        let sum: f64 = ratios.iter().sum();
+        if sum <= 0.0 {
+            anyhow::bail!("trace mix '{name}': ratios sum to {sum}, nothing to normalise");
+        }
+        let mut out = ratios;
+        for r in out.iter_mut() {
+            *r /= sum;
+        }
+        Ok(TraceMix {
+            name: name.to_string(),
+            ratios: out,
+        })
+    }
+
+    /// Total-variation distance to another mixture: ½·Σ|aᵢ − bᵢ| ∈ [0, 1].
+    /// The mixture half of the demand-drift metric.
+    pub fn total_variation(&self, other: &TraceMix) -> f64 {
+        let l1: f64 = self
+            .ratios
+            .iter()
+            .zip(&other.ratios)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        0.5 * l1
     }
 
     /// Demand per workload type for a total of `total_requests` requests.
@@ -293,6 +333,41 @@ mod tests {
         assert_eq!(TraceMix::by_name("trace1").unwrap().name, "trace1-swiss-ai");
         assert_eq!(TraceMix::by_name("azure").unwrap().name, "trace2-azure");
         assert!(TraceMix::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn normalized_renormalizes_instead_of_panicking() {
+        // A drift-interpolated mix off by FP error: new() would assert,
+        // normalized() repairs it.
+        let mut ratios = TraceMix::trace1().ratios;
+        ratios[0] += 1e-4;
+        let m = TraceMix::normalized("fp-jitter", ratios).expect("renormalised");
+        assert!((m.ratios.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // Unnormalised counts (estimator-style) work too.
+        let counts = [3.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let m = TraceMix::normalized("counts", counts).expect("counts normalise");
+        assert!((m.ratios[0] - 0.75).abs() < 1e-12);
+        assert!((m.ratios[1] - 0.25).abs() < 1e-12);
+        // Degenerate inputs are errors, not panics.
+        assert!(TraceMix::normalized("zero", [0.0; 9]).is_err());
+        let mut neg = TraceMix::trace1().ratios;
+        neg[3] = -0.1;
+        assert!(TraceMix::normalized("neg", neg).is_err());
+        let mut nan = TraceMix::trace1().ratios;
+        nan[2] = f64::NAN;
+        assert!(TraceMix::normalized("nan", nan).is_err());
+    }
+
+    #[test]
+    fn total_variation_is_a_distance() {
+        let a = TraceMix::trace1();
+        let b = TraceMix::trace3();
+        assert!(a.total_variation(&a).abs() < 1e-12);
+        let d = a.total_variation(&b);
+        assert!((d - b.total_variation(&a)).abs() < 1e-12);
+        assert!(d > 0.0 && d <= 1.0, "tv={d}");
+        // Known value for the paper mixtures: ½·Σ|Δ| = 0.55.
+        assert!((d - 0.55).abs() < 1e-9, "tv={d}");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! aggregate rate. See DESIGN.md §Hardware-Adaptation for the substitution
 //! argument.
 
-use super::{Request, Trace, TraceMix, WorkloadType};
+use super::{MixSchedule, Request, Trace, TraceMix, WorkloadType};
 use crate::util::rng::Xoshiro256;
 
 #[derive(Clone, Debug)]
@@ -66,6 +66,50 @@ pub fn synthesize_trace(mix: &TraceMix, opts: &SynthOptions) -> Trace {
     }
     Trace {
         name: mix.name.clone(),
+        requests,
+    }
+}
+
+/// Generate a non-stationary trace from a [`MixSchedule`] over
+/// `[0, horizon_s)`: arrivals follow an inhomogeneous Poisson process with
+/// the schedule's time-varying rate (exact thinning against the piecewise-
+/// linear maximum), and each arrival samples its workload type from the
+/// mixture in force at its own arrival time. Deterministic from
+/// `opts.seed`; `opts.num_requests` and `opts.arrival_rate` are ignored —
+/// the schedule drives both.
+pub fn synthesize_trace_schedule(
+    schedule: &MixSchedule,
+    horizon_s: f64,
+    opts: &SynthOptions,
+) -> Trace {
+    let mut rng = Xoshiro256::seed_from_u64(opts.seed);
+    let envelope = schedule.max_rate();
+    let mut requests = Vec::new();
+    if envelope > 0.0 && horizon_s > 0.0 {
+        let mut t = 0.0f64;
+        loop {
+            t += rng.exponential(envelope);
+            if t >= horizon_s {
+                break;
+            }
+            // Thinning: accept with probability rate(t)/envelope.
+            if !rng.bernoulli(schedule.rate_at(t) / envelope) {
+                continue;
+            }
+            let mix = schedule.mix_at(t);
+            let w = WorkloadType::by_index(rng.weighted_index(&mix.ratios));
+            let (input, output) = jitter_lengths(&mut rng, w, opts.length_sigma);
+            requests.push(Request {
+                id: requests.len() as u64,
+                arrival_s: t,
+                workload: w,
+                input_tokens: input,
+                output_tokens: output,
+            });
+        }
+    }
+    Trace {
+        name: schedule.name.clone(),
         requests,
     }
 }
@@ -188,6 +232,83 @@ mod tests {
         let a = synthesize_trace(&TraceMix::trace1(), &opts);
         let b = synthesize_trace(&TraceMix::trace1(), &opts);
         assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn schedule_trace_follows_rate_ramp_and_mixture_shift() {
+        use crate::workload::MixSchedule;
+        // Rate ramps 2 → 6 req/s and the mixture shifts trace1 → trace3
+        // across the middle half of a 4000 s horizon.
+        let schedule = MixSchedule::shift(
+            "ramp",
+            (TraceMix::trace1(), 2.0),
+            (TraceMix::trace3(), 6.0),
+            1000.0,
+            3000.0,
+        )
+        .expect("valid shift");
+        let trace = synthesize_trace_schedule(
+            &schedule,
+            4000.0,
+            &SynthOptions {
+                length_sigma: 0.0,
+                seed: 31,
+                ..Default::default()
+            },
+        );
+        // Expected totals: 2·1000 + ∫ramp (8000) + 6·1000 = 16000.
+        let n = trace.len() as f64;
+        assert!((n / 16_000.0 - 1.0).abs() < 0.05, "total arrivals {n}");
+        let head: Vec<_> = trace
+            .requests
+            .iter()
+            .filter(|r| r.arrival_s < 1000.0)
+            .collect();
+        let tail: Vec<_> = trace
+            .requests
+            .iter()
+            .filter(|r| r.arrival_s >= 3000.0)
+            .collect();
+        // Rate tripled between the holds.
+        let ratio = tail.len() as f64 / head.len() as f64;
+        assert!((ratio - 3.0).abs() < 0.4, "tail/head arrival ratio {ratio}");
+        // Mixture matches the hold-phase mixes at each end.
+        let frac = |reqs: &[&Request], w: usize| {
+            reqs.iter().filter(|r| r.workload.index == w).count() as f64 / reqs.len() as f64
+        };
+        assert!(
+            (frac(&head, 0) - 0.33).abs() < 0.05,
+            "head type-0 fraction {}",
+            frac(&head, 0)
+        );
+        assert!(
+            (frac(&tail, 5) - 0.27).abs() < 0.05,
+            "tail type-5 fraction {}",
+            frac(&tail, 5)
+        );
+        // Sorted arrivals, ids in order, inside the horizon.
+        for w in trace.requests.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s && w[0].id < w[1].id);
+        }
+        assert!(trace.requests.last().unwrap().arrival_s < 4000.0);
+    }
+
+    #[test]
+    fn schedule_trace_deterministic_and_degenerate_safe() {
+        use crate::workload::MixSchedule;
+        let schedule = MixSchedule::constant(TraceMix::trace2(), 3.0);
+        let opts = SynthOptions {
+            seed: 11,
+            ..Default::default()
+        };
+        let a = synthesize_trace_schedule(&schedule, 500.0, &opts);
+        let b = synthesize_trace_schedule(&schedule, 500.0, &opts);
+        assert_eq!(a.requests, b.requests);
+        assert!((a.len() as f64 / 1500.0 - 1.0).abs() < 0.1);
+        // Zero rate and zero horizon yield empty traces, not hangs.
+        let zero = MixSchedule::constant(TraceMix::trace2(), 0.0);
+        assert!(synthesize_trace_schedule(&zero, 500.0, &opts).is_empty());
+        assert!(synthesize_trace_schedule(&schedule, 0.0, &opts).is_empty());
     }
 
     #[test]
