@@ -1,0 +1,193 @@
+//! Solver bench: cold vs warm MILP solves on planner-shaped instances.
+//!
+//! Two workloads, both straight off the production path:
+//!
+//! * **binary-search sweep** — Algorithm 1 with the *exact* feasibility
+//!   oracle: every bisection iterate is a cost-minimisation MILP, the
+//!   warm run re-solves branch-and-bound nodes by dual simplex from the
+//!   incumbent basis and carries each feasible iterate as the next
+//!   check's starting incumbent; the cold run solves every node LP from
+//!   scratch (the pre-warm-start behaviour);
+//! * **direct MILP** — the §4.3 big-M formulation solved once, warm vs
+//!   cold.
+//!
+//! Emits a machine-readable `BENCH_solver.json` line with pivot counts,
+//! node counts, warm-hit rates and wall times.
+//!
+//! SHAPE CHECK: the warm-started runs finish the same work with ≥2×
+//! fewer simplex pivots than cold, and no more wall time.
+//!
+//! Flags: --model 8b|70b --budget B --tol T --quick
+
+use hetserve::cloud::availability;
+use hetserve::milp::MilpOptions;
+use hetserve::perf_model::{ModelSpec, PerfModel};
+use hetserve::profiler::Profile;
+use hetserve::sched::binary_search::{
+    solve_binary_search, BinarySearchOptions, Feasibility, SearchStats,
+};
+use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::formulation::solve_direct;
+use hetserve::sched::SchedProblem;
+use hetserve::util::bench::{cell, Table};
+use hetserve::util::cli::Args;
+use hetserve::util::json::Json;
+use hetserve::workload::TraceMix;
+use std::time::{Duration, Instant};
+
+struct Run {
+    label: &'static str,
+    pivots: u64,
+    lp_solves: usize,
+    nodes: usize,
+    warm_hit: f64,
+    wall: Duration,
+    makespan: f64,
+}
+
+fn main() {
+    let args = Args::parse(&["quick"]);
+    let quick = args.flag("quick");
+    let model = ModelSpec::by_name(args.get_or("model", "8b")).expect("unknown --model");
+    let budget = args.get_f64("budget", 30.0);
+    let tol = args.get_f64("tol", if quick { 4.0 } else { 2.0 });
+
+    let perf = PerfModel::default();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let mix = TraceMix::trace1();
+    let problem = SchedProblem::from_profile(&profile, &mix, 1500.0, &availability(1), budget);
+
+    let milp = MilpOptions {
+        max_nodes: if quick { 2_000 } else { 20_000 },
+        time_limit: Duration::from_secs(if quick { 2 } else { 10 }),
+        ..Default::default()
+    };
+
+    // ---- binary-search sweep (exact feasibility oracle) ------------------
+    let sweep = |warm: bool| -> Run {
+        let opts = BinarySearchOptions {
+            tolerance: tol,
+            feasibility: Feasibility::Exact,
+            milp: MilpOptions {
+                warm_start: warm,
+                ..milp.clone()
+            },
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let (plan, stats): (_, SearchStats) = solve_binary_search(&problem, &opts);
+        Run {
+            label: if warm { "sweep warm" } else { "sweep cold" },
+            pivots: stats.pivots,
+            lp_solves: stats.lp_solves,
+            nodes: stats.milp_nodes,
+            warm_hit: stats.warm_hit_rate(),
+            wall: t0.elapsed(),
+            makespan: plan.map(|p| p.makespan).unwrap_or(f64::NAN),
+        }
+    };
+    let sweep_cold = sweep(false);
+    let sweep_warm = sweep(true);
+
+    // ---- direct MILP (§4.3 big-M formulation) ----------------------------
+    let direct = |warm: bool| -> Run {
+        let opts = MilpOptions {
+            warm_start: warm,
+            ..milp.clone()
+        };
+        let t0 = Instant::now();
+        let (plan, stats) = solve_direct(&problem, &opts);
+        Run {
+            label: if warm { "direct warm" } else { "direct cold" },
+            pivots: stats.pivots,
+            lp_solves: stats.lp_solves,
+            nodes: stats.nodes,
+            warm_hit: stats.warm_hit_rate(),
+            wall: t0.elapsed(),
+            makespan: plan.map(|p| p.makespan).unwrap_or(f64::NAN),
+        }
+    };
+    let direct_cold = direct(false);
+    let direct_warm = direct(true);
+
+    let mut t = Table::new(
+        &format!(
+            "fig_solver — {} on {}, budget {} $/h, tol {}s{}",
+            model.name,
+            mix.name,
+            budget,
+            tol,
+            if quick { " (quick)" } else { "" }
+        ),
+        &[
+            "run", "pivots", "LP solves", "B&B nodes", "warm hit %", "wall ms", "makespan s",
+        ],
+    );
+    let runs = [&sweep_cold, &sweep_warm, &direct_cold, &direct_warm];
+    for r in runs {
+        t.row(vec![
+            r.label.to_string(),
+            r.pivots.to_string(),
+            r.lp_solves.to_string(),
+            r.nodes.to_string(),
+            format!("{:.0}", r.warm_hit * 100.0),
+            format!("{:.1}", r.wall.as_secs_f64() * 1e3),
+            cell(r.makespan),
+        ]);
+    }
+    t.print();
+
+    let entry = |r: &Run| {
+        Json::obj(vec![
+            ("pivots", Json::num(r.pivots as f64)),
+            ("lp_solves", Json::num(r.lp_solves as f64)),
+            ("nodes", Json::num(r.nodes as f64)),
+            ("warm_hit_rate", Json::num(r.warm_hit)),
+            ("wall_ms", Json::num(r.wall.as_secs_f64() * 1e3)),
+            ("makespan_s", Json::num(r.makespan)),
+        ])
+    };
+    let cold_pivots = sweep_cold.pivots + direct_cold.pivots;
+    let warm_pivots = sweep_warm.pivots + direct_warm.pivots;
+    let cold_wall = sweep_cold.wall + direct_cold.wall;
+    let warm_wall = sweep_warm.wall + direct_warm.wall;
+    let ratio = cold_pivots as f64 / (warm_pivots.max(1)) as f64;
+    let report = Json::obj(vec![
+        ("bench", Json::str("fig_solver")),
+        ("model", Json::str(&model.name)),
+        ("budget", Json::num(budget)),
+        ("tolerance_s", Json::num(tol)),
+        ("quick", Json::Bool(quick)),
+        ("sweep_cold", entry(&sweep_cold)),
+        ("sweep_warm", entry(&sweep_warm)),
+        ("direct_cold", entry(&direct_cold)),
+        ("direct_warm", entry(&direct_warm)),
+        ("pivot_ratio_cold_over_warm", Json::num(ratio)),
+        (
+            "wall_ratio_cold_over_warm",
+            Json::num(cold_wall.as_secs_f64() / warm_wall.as_secs_f64().max(1e-9)),
+        ),
+    ]);
+    let line = report.to_string();
+    println!("BENCH_solver.json {line}");
+
+    // SHAPE CHECK: warm must do the same planning with ≥2× fewer pivots
+    // and must not be slower; the sweeps must agree on the plan quality.
+    let agree = (sweep_warm.makespan - sweep_cold.makespan).abs() <= tol.max(0.5)
+        || (sweep_warm.makespan.is_nan() && sweep_cold.makespan.is_nan());
+    let pivots_ok = warm_pivots * 2 <= cold_pivots;
+    let wall_ok = warm_wall <= cold_wall;
+    println!(
+        "SHAPE CHECK: warm {warm_pivots} vs cold {cold_pivots} pivots ({ratio:.2}x), \
+         wall {:.1} vs {:.1} ms, makespans {} vs {} => {}",
+        warm_wall.as_secs_f64() * 1e3,
+        cold_wall.as_secs_f64() * 1e3,
+        cell(sweep_warm.makespan),
+        cell(sweep_cold.makespan),
+        if pivots_ok && wall_ok && agree {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+}

@@ -1,19 +1,25 @@
 //! Performance micro-benchmarks (§Perf in EXPERIMENTS.md): the L3 hot
-//! paths — simplex pivots, feasibility LP, full planner, discrete-event
-//! simulator throughput, perf-model evaluations, and router decisions.
+//! paths — simplex pivots, warm vs cold LP re-solves, feasibility LP, full
+//! planner, discrete-event simulator throughput, perf-model evaluations,
+//! and router decisions.
+//!
+//! Flags: --quick (short warmup/measure windows — the CI smoke mode).
 
 use hetserve::cloud::availability;
-use hetserve::milp::{solve, Cmp, Lp};
+use hetserve::milp::{solve, BoundedSimplex, Cmp, Lp};
 use hetserve::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
 use hetserve::profiler::Profile;
 use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
 use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::formulation::build_direct;
 use hetserve::sched::SchedProblem;
 use hetserve::sim::{simulate_plan, SimOptions};
-use hetserve::util::bench::{bench_quick, black_box, report_header};
+use hetserve::util::bench::{bench, bench_quick, black_box, report_header, BenchResult};
+use hetserve::util::cli::Args;
 use hetserve::util::rng::Xoshiro256;
 use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix, WorkloadType};
 use hetserve::catalog::GpuType;
+use std::time::Duration;
 
 fn random_lp(n: usize, m: usize, seed: u64) -> Lp {
     let mut rng = Xoshiro256::seed_from_u64(seed);
@@ -28,12 +34,27 @@ fn random_lp(n: usize, m: usize, seed: u64) -> Lp {
     lp
 }
 
+fn run<F: FnMut()>(quick: bool, name: &str, f: F) -> BenchResult {
+    if quick {
+        bench(
+            name,
+            Duration::from_millis(30),
+            Duration::from_millis(120),
+            f,
+        )
+    } else {
+        bench_quick(name, f)
+    }
+}
+
 fn main() {
+    let args = Args::parse(&["quick"]);
+    let quick = args.flag("quick");
     println!("{}", report_header());
 
     // L3: simplex on a medium dense LP.
     let lp = random_lp(120, 80, 3);
-    let r = bench_quick("simplex 120v x 80c", || {
+    let r = run(quick, "simplex 120v x 80c", || {
         black_box(solve(&lp));
     });
     println!("{}", r.report());
@@ -43,13 +64,13 @@ fn main() {
     let perf = PerfModel::default();
     let cfg = ReplicaConfig::uniform(GpuType::A40, 2, 2);
     let w = WorkloadType::by_index(0);
-    let r = bench_quick("perf_model::estimate", || {
+    let r = run(quick, "perf_model::estimate", || {
         black_box(perf.estimate(&cfg, &model, &w));
     });
     println!("{}", r.report());
 
     // L3: full profile build (enumeration + 9 workloads × ~50 configs).
-    let r = bench_quick("profiler::build(70B)", || {
+    let r = run(quick, "profiler::build(70B)", || {
         black_box(Profile::build(&model, &perf, &EnumOptions::default()));
     });
     println!("{}", r.report());
@@ -63,8 +84,36 @@ fn main() {
         tolerance: 2.0,
         ..Default::default()
     };
-    let r = bench_quick("planner::binary_search(knapsack)", || {
+    let r = run(quick, "planner::binary_search(knapsack)", || {
         black_box(solve_binary_search(&problem, &opts));
+    });
+    println!("{}", r.report());
+
+    // L3: one branch decision on the planner MILP — warm dual re-solve
+    // from the incumbent basis vs a from-scratch cold solve at the same
+    // bounds (what every B&B node used to pay).
+    let direct = build_direct(&problem).expect("direct milp");
+    let v = direct.integer_vars[0];
+    let mut arena = BoundedSimplex::new(&direct.lp);
+    arena.solve_cold();
+    let mut hi = 0.0;
+    let r = run(quick, "solver::node_resolve(warm dual)", || {
+        hi = 1.0 - hi; // toggle the branch bound y ∈ {0} / y ∈ [0,1]
+        arena.set_var_bounds(v, 0.0, hi);
+        if arena.dual_ready() && !arena.refresh_due() {
+            black_box(arena.resolve_dual());
+        } else {
+            black_box(arena.solve_cold());
+        }
+    });
+    println!("{}", r.report());
+    let mut hi = 0.0;
+    let r = run(quick, "solver::node_resolve(cold)", || {
+        hi = 1.0 - hi;
+        let mut lp = direct.lp.clone();
+        lp.set_bounds(v, 0.0, hi);
+        let mut s = BoundedSimplex::new(&lp);
+        black_box(s.solve_cold());
     });
     println!("{}", r.report());
 
@@ -81,7 +130,7 @@ fn main() {
         },
     );
     let models = [model.clone()];
-    let r = bench_quick("simulator 1000 reqs", || {
+    let r = run(quick, "simulator 1000 reqs", || {
         black_box(simulate_plan(
             &problem,
             &plan,
@@ -96,7 +145,7 @@ fn main() {
     println!("{}   [{:.0} sim-reqs/s]", r.report(), reqs_per_s);
 
     // Trace synthesis throughput.
-    let r = bench_quick("synthesize_trace 10k", || {
+    let r = run(quick, "synthesize_trace 10k", || {
         black_box(synthesize_trace(
             &mix,
             &SynthOptions {

@@ -15,7 +15,9 @@
 //!   world events carrying a demand channel
 //! * [`perf_model`] — analytical roofline model replacing real-GPU profiling
 //! * [`profiler`] — `h_{c,w}` throughput tables for the scheduler
-//! * [`milp`] — from-scratch simplex + branch-and-bound MILP solver
+//! * [`milp`] — from-scratch MILP solver: bounded-variable simplex arena
+//!   with dual-simplex warm starts, branch & bound whose branches are
+//!   pure bound tightenings (see `milp/README.md`)
 //! * [`sched`] — the paper's scheduling algorithm (§4.3, App D–G)
 //! * [`baselines`] — homogeneous / HexGen-like / ablation planners
 //! * [`orchestrator`] — online replanning over the drifting *world*

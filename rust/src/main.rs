@@ -274,7 +274,7 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
         ),
         &[
             "epoch", "t", "event", "sup drift", "dem drift", "mix err", "plan $/h", "migr $",
-            "arrivals", "SLO %", "p90 s", "rent $",
+            "LPs", "pivots", "arrivals", "SLO %", "p90 s", "rent $",
         ],
     );
     for ((e, s), mix_err) in report
@@ -312,6 +312,8 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
             cell(*mix_err),
             cell(e.plan.cost(&e.problem)),
             cell(e.migration.dollars),
+            e.stats.lp_solves.to_string(),
+            e.stats.pivots.to_string(),
             s.arrivals.to_string(),
             format!("{:.1}", s.slo_attainment * 100.0),
             cell(s.p90_s),
@@ -334,6 +336,17 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
         slo_s,
         loop_result.mean_mix_error(),
         result.makespan
+    );
+    println!(
+        "solver: {} LP solves, {} pivots, {} B&B nodes, warm-start hit rate {:.0}% \
+         ({} warm / {} cold), {:?} total",
+        report.solver.lp_solves,
+        report.solver.pivots,
+        report.solver.milp_nodes,
+        report.solver.warm_hit_rate() * 100.0,
+        report.solver.warm_solves,
+        report.solver.cold_solves,
+        report.solver.elapsed
     );
     Ok(())
 }

@@ -1,12 +1,34 @@
-//! Branch-and-bound MILP solver on top of the simplex LP relaxation.
+//! Branch-and-bound MILP solver on the warm-started bounded-variable
+//! simplex arena.
 //!
 //! Minimises cᵀx subject to linear constraints with a designated subset of
 //! variables required integral. Branching splits on the most-fractional
-//! integer variable (x ≤ ⌊v⌋ vs x ≥ ⌈v⌉), best-first on the LP bound, with
-//! incumbent pruning, node and time budgets, and an optional absolute gap
-//! for early stop (the Appendix G early-stopping criterion).
+//! integer variable — but a branch `x ≤ ⌊v⌋` / `x ≥ ⌈v⌉` is a *bound
+//! tightening* on one shared [`BoundedSimplex`] tableau, never a new
+//! constraint row and never a clone of the problem: nodes carry only their
+//! `(var, lo, hi)` patch against the root bounds.
+//!
+//! The search order is **best-first with plunging**: a binary heap keeps
+//! open nodes ordered by LP bound, but after solving a node the search
+//! immediately descends into the child nearer the fractional value (one
+//! bound change, re-solved by dual simplex from the parent's basis — a
+//! handful of pivots) and pushes the other child onto the heap. Plunging
+//! keeps consecutive LP solves one bound apart, which is what makes warm
+//! starting pay: popping heap nodes jumps across the tree and costs a
+//! bigger re-solve, so it happens only when a plunge dies. The first
+//! plunge doubles as the classic diving heuristic — it runs straight to
+//! an integral incumbent (plus an LP-rounding attempt at the first
+//! fractional node), so pruning starts immediately. The two-phase primal
+//! runs only at the root, on basis breakdown, on the periodic
+//! refactorisation ([`BoundedSimplex::refresh_due`]), or when
+//! `warm_start` is off (the cold baseline the solver bench compares
+//! against). `MilpStats` reports pivots and the warm/cold solve split so
+//! callers can see the warm path is actually taken.
 
-use super::simplex::{solve, Cmp, Lp, LpResult};
+use super::bounds::{BoundedSimplex, SolveOutcome};
+use super::simplex::Lp;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
@@ -19,6 +41,14 @@ pub struct MilpOptions {
     pub abs_gap: f64,
     /// Integrality tolerance.
     pub int_tol: f64,
+    /// Re-solve child LPs by dual simplex from the parent basis; `false`
+    /// runs every node cold from scratch (the pre-warm-start behaviour,
+    /// kept as the benchmark baseline).
+    pub warm_start: bool,
+    /// Objective cutoff: solutions costing more than this are useless to
+    /// the caller, so nodes bounded above it are pruned even without an
+    /// incumbent (the scheduler passes its budget here).
+    pub cutoff: f64,
 }
 
 impl Default for MilpOptions {
@@ -28,6 +58,8 @@ impl Default for MilpOptions {
             time_limit: Duration::from_secs(120),
             abs_gap: 1e-6,
             int_tol: 1e-6,
+            warm_start: true,
+            cutoff: f64::INFINITY,
         }
     }
 }
@@ -61,116 +93,251 @@ impl MilpResult {
 pub struct MilpStats {
     pub nodes: usize,
     pub lp_solves: usize,
+    /// Simplex pivots across every LP solve of the search.
+    pub pivots: u64,
+    /// Node LPs re-solved warm (dual simplex from the incumbent basis).
+    pub warm_solves: usize,
+    /// Node LPs solved cold (two-phase primal from scratch).
+    pub cold_solves: usize,
     pub elapsed: Duration,
 }
 
+impl MilpStats {
+    /// Fraction of LP solves served by the warm path.
+    pub fn warm_hit_rate(&self) -> f64 {
+        let total = self.warm_solves + self.cold_solves;
+        if total == 0 {
+            0.0
+        } else {
+            self.warm_solves as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &MilpStats) {
+        self.nodes += other.nodes;
+        self.lp_solves += other.lp_solves;
+        self.pivots += other.pivots;
+        self.warm_solves += other.warm_solves;
+        self.cold_solves += other.cold_solves;
+        self.elapsed += other.elapsed;
+    }
+}
+
+/// An open node: only the bound-patch path from the root, never a clone of
+/// the problem.
 struct Node {
-    /// Extra bounds as (var, is_upper, value) triples.
-    bounds: Vec<(usize, bool, f64)>,
-    /// LP bound inherited from the parent (for best-first ordering).
+    /// Branch decisions as (var, lo, hi) overrides of the root bounds, in
+    /// path order (later entries are tighter).
+    patch: Vec<(usize, f64, f64)>,
+}
+
+/// Heap entry: min-ordered by LP bound, FIFO on ties.
+struct Open {
     bound: f64,
+    seq: u64,
+    node: Node,
+}
+
+impl PartialEq for Open {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Open {}
+impl PartialOrd for Open {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Open {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we pop the smallest bound.
+        other
+            .bound
+            .total_cmp(&self.bound)
+            .then(other.seq.cmp(&self.seq))
+    }
 }
 
 /// Solve a MILP: `integer_vars[i]` indexes variables that must be integral.
 pub fn solve_milp(lp: &Lp, integer_vars: &[usize], opts: &MilpOptions) -> (MilpResult, MilpStats) {
+    solve_milp_seeded(lp, integer_vars, opts, None)
+}
+
+/// [`solve_milp`] with an optional starting incumbent: a solution vector
+/// known (or believed) feasible — typically the previous plan when the
+/// orchestrator replans, or the previous bisection iterate in the
+/// binary-search scheduler. An infeasible or non-integral seed is checked
+/// once and dropped; a valid one prunes from the first node.
+pub fn solve_milp_seeded(
+    lp: &Lp,
+    integer_vars: &[usize],
+    opts: &MilpOptions,
+    seed: Option<&[f64]>,
+) -> (MilpResult, MilpStats) {
     let start = Instant::now();
     let mut stats = MilpStats::default();
+    let mut arena = BoundedSimplex::new(lp);
 
     let mut best_x: Option<Vec<f64>> = None;
     let mut best_obj = f64::INFINITY;
+    if let Some(sx) = seed {
+        if sx.len() == lp.num_vars
+            && integer_vars
+                .iter()
+                .all(|&v| (sx[v] - sx[v].round()).abs() <= opts.int_tol)
+            && lp.is_feasible(sx, 1e-6)
+        {
+            best_obj = dot(&lp.objective, sx);
+            best_x = Some(sx.to_vec());
+        }
+    }
 
-    // Best-first queue ordered by bound (Vec + manual min extraction is fine
-    // at our node counts and avoids an ordered-float dependency).
-    let mut queue: Vec<Node> = vec![Node {
-        bounds: Vec::new(),
+    let root_bounds: Vec<(f64, f64)> = (0..lp.num_vars)
+        .map(|v| (lp.lower[v], lp.upper[v]))
+        .collect();
+    let mut target = root_bounds.clone(); // per-node scratch
+
+    let mut heap: BinaryHeap<Open> = BinaryHeap::new();
+    heap.push(Open {
         bound: f64::NEG_INFINITY,
-    }];
+        seq: 0,
+        node: Node { patch: Vec::new() },
+    });
+    let mut seq: u64 = 0;
     let mut global_bound = f64::NEG_INFINITY;
+    let mut tried_rounding = false;
 
-    while let Some(pos) = best_node(&queue) {
+    'search: while let Some(open) = heap.pop() {
         if stats.nodes >= opts.max_nodes || start.elapsed() > opts.time_limit {
+            heap.push(open); // stays open: the search is not exhausted
             break;
         }
-        let node = queue.swap_remove(pos);
-        global_bound = node.bound;
-        if node.bound > best_obj - opts.abs_gap {
-            continue; // pruned by incumbent
-        }
-        stats.nodes += 1;
-
-        // Build the node LP = base + branch bounds.
-        let mut node_lp = lp.clone();
-        for &(var, is_upper, value) in &node.bounds {
-            node_lp.add(
-                vec![(var, 1.0)],
-                if is_upper { Cmp::Le } else { Cmp::Ge },
-                value,
-            );
-        }
-        stats.lp_solves += 1;
-        let relax = solve(&node_lp);
-        let (x, obj) = match relax {
-            LpResult::Optimal { x, objective } => (x, objective),
-            LpResult::Infeasible => continue,
-            LpResult::Unbounded => {
-                // An unbounded relaxation of a minimisation MILP with a
-                // bounded integer hull can't be handled here; treat the
-                // whole problem as unbounded-ish and give up on this node.
-                continue;
-            }
-            LpResult::Stalled => continue,
-        };
-        if obj > best_obj - opts.abs_gap {
-            continue;
+        global_bound = open.bound;
+        if open.bound > best_obj.min(opts.cutoff) - opts.abs_gap {
+            continue; // pruned by incumbent or caller cutoff
         }
 
-        // Find the most fractional integer variable.
-        let mut branch_var = None;
-        let mut best_frac = opts.int_tol;
-        for &v in integer_vars {
-            let frac = (x[v] - x[v].round()).abs();
-            if frac > best_frac {
-                best_frac = frac;
-                branch_var = Some(v);
+        // Point the shared arena at this node: root bounds overridden by
+        // the patch, applied as a diff against wherever the arena is now.
+        target.copy_from_slice(&root_bounds);
+        for &(v, lo, hi) in &open.node.patch {
+            target[v] = (lo, hi);
+        }
+        for (v, &(tlo, thi)) in target.iter().enumerate() {
+            let (clo, chi) = arena.var_bounds(v);
+            if tlo != clo || thi != chi {
+                arena.set_var_bounds(v, tlo, thi);
             }
         }
 
-        match branch_var {
-            None => {
-                // Integral solution: candidate incumbent. Round the integer
-                // coordinates exactly.
-                let mut xi = x.clone();
-                for &v in integer_vars {
-                    xi[v] = xi[v].round();
+        // Plunge: solve this node, then keep descending into the nearer
+        // child (one bound change, dual re-solve from the parent basis)
+        // while pushing the farther child onto the heap.
+        let mut patch = open.node.patch;
+        loop {
+            stats.nodes += 1;
+            if lp_resolve(&mut arena, opts, &mut stats) != SolveOutcome::Optimal {
+                break; // infeasible, unbounded or stalled: drop the node
+            }
+            let (x, obj) = arena.extract();
+            if obj > best_obj.min(opts.cutoff) - opts.abs_gap {
+                break;
+            }
+
+            // Find the most fractional integer variable.
+            let mut branch_var = None;
+            let mut best_frac = opts.int_tol;
+            for &v in integer_vars {
+                let frac = (x[v] - x[v].round()).abs();
+                if frac > best_frac {
+                    best_frac = frac;
+                    branch_var = Some(v);
                 }
-                if obj < best_obj {
+            }
+            let Some(v) = branch_var else {
+                // Integral: candidate incumbent. Round the integer
+                // coordinates exactly and re-verify against the problem —
+                // the warm path trades refactorisation for speed, so the
+                // incumbent must not rest on accumulated tableau error.
+                let mut xi = x.clone();
+                for &w in integer_vars {
+                    xi[w] = xi[w].round();
+                }
+                if obj < best_obj && lp.is_feasible(&xi, 1e-5) {
                     best_obj = obj;
                     best_x = Some(xi);
                 }
+                break;
+            };
+            if !tried_rounding {
+                // Once, at the first fractional node: try the rounded LP
+                // solution as an incumbent before any branching happens.
+                tried_rounding = true;
+                let mut xr = x.clone();
+                for &w in integer_vars {
+                    xr[w] = xr[w].round();
+                }
+                if lp.is_feasible(&xr, 1e-7) {
+                    let o = dot(&lp.objective, &xr);
+                    if o < best_obj {
+                        best_obj = o;
+                        best_x = Some(xr);
+                    }
+                }
             }
-            Some(v) => {
-                let floor = x[v].floor();
-                let mut down = node.bounds.clone();
-                down.push((v, true, floor));
-                let mut up = node.bounds;
-                up.push((v, false, floor + 1.0));
-                queue.push(Node {
-                    bounds: down,
+            let (lo_v, hi_v) = {
+                let mut cur = root_bounds[v];
+                for &(pv, plo, phi) in &patch {
+                    if pv == v {
+                        cur = (plo, phi);
+                    }
+                }
+                cur
+            };
+            let floor = x[v].floor();
+            let down = (lo_v, hi_v.min(floor));
+            let up = (lo_v.max(floor + 1.0), hi_v);
+            // Descend toward the rounding of x[v]; the other child waits.
+            let (near, far) = if x[v] - floor < 0.5 {
+                (down, up)
+            } else {
+                (up, down)
+            };
+            if far.0 <= far.1 + 1e-9 {
+                let mut fpatch = patch.clone();
+                fpatch.push((v, far.0, far.1));
+                seq += 1;
+                heap.push(Open {
                     bound: obj,
+                    seq,
+                    node: Node { patch: fpatch },
                 });
-                queue.push(Node {
-                    bounds: up,
+            }
+            if near.0 > near.1 + 1e-9 {
+                break; // empty near child: the plunge dies here
+            }
+            patch.push((v, near.0, near.1));
+            arena.set_var_bounds(v, near.0, near.1);
+            if stats.nodes >= opts.max_nodes || start.elapsed() > opts.time_limit {
+                // Out of budget mid-plunge: keep the un-solved child open.
+                seq += 1;
+                heap.push(Open {
                     bound: obj,
+                    seq,
+                    node: Node { patch },
                 });
+                break 'search;
             }
         }
     }
 
     stats.elapsed = start.elapsed();
-    let exhausted = queue.is_empty()
-        || best_node(&queue)
-            .map(|p| queue[p].bound > best_obj - opts.abs_gap)
-            .unwrap_or(true);
+    let cutoff_now = best_obj.min(opts.cutoff);
+    let exhausted = heap
+        .peek()
+        .map(|o| o.bound > cutoff_now - opts.abs_gap)
+        .unwrap_or(true);
     let result = match best_x {
         Some(x) => {
             if exhausted {
@@ -197,22 +364,48 @@ pub fn solve_milp(lp: &Lp, integer_vars: &[usize], opts: &MilpOptions) -> (MilpR
     (result, stats)
 }
 
-fn best_node(queue: &[Node]) -> Option<usize> {
-    if queue.is_empty() {
-        return None;
-    }
-    let mut best = 0;
-    for (i, n) in queue.iter().enumerate().skip(1) {
-        if n.bound < queue[best].bound {
-            best = i;
+fn dot(c: &[f64], x: &[f64]) -> f64 {
+    c.iter().zip(x).map(|(a, b)| a * b).sum()
+}
+
+/// One node LP: dual simplex from the incumbent basis when allowed, the
+/// basis is dual feasible and the periodic refactorisation is not due;
+/// cold two-phase primal otherwise. Two warm outcomes re-run cold: a
+/// stalled dual (basis breakdown), and an *infeasible* verdict — it
+/// prunes a whole subtree, and on big-M formulations tableau drift can
+/// fake one, so it is never trusted from a warm basis alone.
+fn lp_resolve(
+    arena: &mut BoundedSimplex,
+    opts: &MilpOptions,
+    stats: &mut MilpStats,
+) -> SolveOutcome {
+    stats.lp_solves += 1;
+    let before = arena.pivots();
+    let out = if opts.warm_start && arena.dual_ready() && !arena.refresh_due() {
+        match arena.resolve_dual() {
+            SolveOutcome::Stalled | SolveOutcome::Infeasible => {
+                // Served cold after all (the failed warm attempt's pivots
+                // still count — they were paid).
+                stats.cold_solves += 1;
+                arena.solve_cold()
+            }
+            out => {
+                stats.warm_solves += 1;
+                out
+            }
         }
-    }
-    Some(best)
+    } else {
+        stats.cold_solves += 1;
+        arena.solve_cold()
+    };
+    stats.pivots += arena.pivots() - before;
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::milp::simplex::Cmp;
 
     fn optimal(lp: &Lp, ints: &[usize]) -> (Vec<f64>, f64) {
         let (res, _) = solve_milp(lp, ints, &MilpOptions::default());
@@ -237,6 +430,22 @@ mod tests {
         let (x, obj) = optimal(&lp, &[0, 1, 2]);
         assert!((obj + 20.0).abs() < 1e-6, "x={x:?} obj={obj}");
         assert!((x[1] - 1.0).abs() < 1e-6 && (x[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn knapsack_with_native_bounds() {
+        // Same knapsack with binaries as native [0,1] bounds: no rows.
+        let mut lp = Lp::new(3);
+        lp.set_objective(0, -10.0);
+        lp.set_objective(1, -13.0);
+        lp.set_objective(2, -7.0);
+        for v in 0..3 {
+            lp.set_bounds(v, 0.0, 1.0);
+        }
+        lp.add(vec![(0, 3.0), (1, 4.0), (2, 2.0)], Cmp::Le, 6.0);
+        let (x, obj) = optimal(&lp, &[0, 1, 2]);
+        assert!((obj + 20.0).abs() < 1e-6, "x={x:?} obj={obj}");
+        assert_eq!(lp.constraints.len(), 1, "bounds must not become rows");
     }
 
     #[test]
@@ -349,5 +558,110 @@ mod tests {
         let (x, obj) = optimal(&lp, &[0, 1]);
         assert!((obj + 13.0).abs() < 1e-6, "x={x:?}");
         assert!((x[0] - 3.0).abs() < 1e-6 && (x[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn warm_path_is_taken_and_counted() {
+        // A problem with a real tree: the warm run must serve most node
+        // LPs by dual re-solve and record pivots.
+        let mut lp = Lp::new(8);
+        for i in 0..8 {
+            lp.set_objective(i, -((i % 3) as f64 + 1.0));
+            lp.set_bounds(i, 0.0, 3.0);
+        }
+        lp.add((0..8).map(|i| (i, 1.0 + (i % 2) as f64)).collect(), Cmp::Le, 7.5);
+        lp.add((0..8).map(|i| (i, 1.0)).collect(), Cmp::Le, 6.5);
+        let ints: Vec<usize> = (0..8).collect();
+        let (res, stats) = solve_milp(&lp, &ints, &MilpOptions::default());
+        assert!(matches!(res, MilpResult::Optimal { .. }), "{res:?}");
+        assert!(stats.pivots > 0);
+        assert!(
+            stats.warm_solves > stats.cold_solves,
+            "warm {} vs cold {} — warm path not taken",
+            stats.warm_solves,
+            stats.cold_solves
+        );
+        assert!(stats.warm_hit_rate() > 0.5);
+    }
+
+    #[test]
+    fn warm_and_cold_agree() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(0x5EED);
+        for case in 0..25 {
+            let n = 2 + rng.index(4);
+            let mut lp = Lp::new(n);
+            for i in 0..n {
+                lp.set_objective(i, -rng.range_f64(0.5, 5.0).round());
+                lp.set_bounds(i, 0.0, 4.0);
+            }
+            let terms: Vec<(usize, f64)> =
+                (0..n).map(|i| (i, rng.range_f64(0.5, 3.0).round())).collect();
+            lp.add(terms, Cmp::Le, rng.range_f64(4.0, 12.0).round());
+            let ints: Vec<usize> = (0..n).collect();
+            let warm = solve_milp(&lp, &ints, &MilpOptions::default()).0;
+            let cold = solve_milp(
+                &lp,
+                &ints,
+                &MilpOptions {
+                    warm_start: false,
+                    ..Default::default()
+                },
+            )
+            .0;
+            match (&warm, &cold) {
+                (
+                    MilpResult::Optimal { objective: a, .. },
+                    MilpResult::Optimal { objective: b, .. },
+                ) => assert!((a - b).abs() < 1e-6, "case {case}: warm {a} vs cold {b}"),
+                (MilpResult::Infeasible, MilpResult::Infeasible) => {}
+                other => panic!("case {case}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn seed_becomes_incumbent_and_cutoff_prunes() {
+        let mut lp = Lp::new(3);
+        lp.set_objective(0, -10.0);
+        lp.set_objective(1, -13.0);
+        lp.set_objective(2, -7.0);
+        for v in 0..3 {
+            lp.set_bounds(v, 0.0, 1.0);
+        }
+        lp.add(vec![(0, 3.0), (1, 4.0), (2, 2.0)], Cmp::Le, 6.0);
+        let ints = [0, 1, 2];
+        // Seed with the known optimum: still optimal, same objective.
+        let seed = [0.0, 1.0, 1.0];
+        let (res, _) = solve_milp_seeded(&lp, &ints, &MilpOptions::default(), Some(&seed));
+        let (_, obj) = match res {
+            MilpResult::Optimal { x, objective } => (x, objective),
+            other => panic!("{other:?}"),
+        };
+        assert!((obj + 20.0).abs() < 1e-6);
+        // An infeasible seed is ignored, not trusted.
+        let bad = [1.0, 1.0, 1.0]; // weight 9 > 6
+        let (res, _) = solve_milp_seeded(&lp, &ints, &MilpOptions::default(), Some(&bad));
+        assert!((res.solution().unwrap().1 + 20.0).abs() < 1e-6);
+        // A cutoff below every solution yields Infeasible (nothing usable).
+        let (res, _) = solve_milp(
+            &lp,
+            &ints,
+            &MilpOptions {
+                cutoff: -30.0,
+                ..Default::default()
+            },
+        );
+        assert_eq!(res, MilpResult::Infeasible);
+        // A cutoff above the optimum must not cut it off.
+        let (res, _) = solve_milp(
+            &lp,
+            &ints,
+            &MilpOptions {
+                cutoff: -19.0,
+                ..Default::default()
+            },
+        );
+        assert!((res.solution().unwrap().1 + 20.0).abs() < 1e-6);
     }
 }

@@ -1,12 +1,25 @@
 //! Mixed-integer linear programming substrate, built from scratch:
-//! * [`simplex`] — dense two-phase simplex LP solver;
-//! * [`branch_bound`] — best-first branch & bound for integer variables;
+//! * [`bounds`] — the bounded-variable simplex core: one tableau arena
+//!   per problem, native variable bounds (no `x ≤ u` rows), cold
+//!   two-phase primal and warm dual-simplex re-solves under bound
+//!   changes;
+//! * [`simplex`] — the [`Lp`] problem type and one-shot solve entry
+//!   points on top of the core;
+//! * [`branch_bound`] — best-first branch & bound with plunging for
+//!   integer variables: branches are pure bound tightenings dual-re-solved
+//!   from the parent basis, with LP-rounding/diving incumbents and
+//!   warm/cold/pivot accounting in [`MilpStats`];
 //! * [`knapsack`] — greedy bounded knapsack used by the Appendix F
 //!   approximate feasibility check.
+//!
+//! See `rust/src/milp/README.md` for the tableau representation and the
+//! warm-start invariants.
 
+pub mod bounds;
 pub mod branch_bound;
 pub mod knapsack;
 pub mod simplex;
 
-pub use branch_bound::{solve_milp, MilpOptions, MilpResult, MilpStats};
-pub use simplex::{solve, Cmp, Constraint, Lp, LpResult};
+pub use bounds::{BoundedSimplex, SolveOutcome};
+pub use branch_bound::{solve_milp, solve_milp_seeded, MilpOptions, MilpResult, MilpStats};
+pub use simplex::{solve, solve_counted, Cmp, Constraint, Lp, LpResult};

@@ -1,17 +1,14 @@
-//! Dense two-phase simplex LP solver (built from scratch — no LP library is
-//! available offline, and the paper's scheduler needs one at its core).
+//! LP front end: the problem type and the one-shot solve entry points.
 //!
-//! Solves  minimize cᵀx  s.t.  Ax {≤,≥,=} b,  x ≥ 0.
+//! Solves  minimize cᵀx  s.t.  Ax {≤,≥,=} b,  lo ≤ x ≤ hi.
 //!
-//! Implementation notes:
-//! * dense tableau in a single flat `Vec<f64>` (row-major) — the pivot loop
-//!   is the hot path and benefits from contiguity;
-//! * phase 1 minimises the sum of artificial variables; a positive optimum
-//!   means infeasible;
-//! * Dantzig pricing with a Bland's-rule fallback after a stall threshold to
-//!   guarantee termination under degeneracy;
-//! * upper bounds are the caller's job (add explicit rows); the scheduler's
-//!   formulations are naturally bounded.
+//! Variable bounds default to [0, ∞) so pre-bounds callers are unchanged,
+//! but formulations should prefer [`Lp::set_bounds`] over explicit `x ≤ u`
+//! rows: native bounds keep the tableau smaller and make branch-and-bound
+//! decisions pure bound tightenings (see [`super::bounds`], which holds
+//! the actual bounded-variable simplex the solve runs on).
+
+use super::bounds::{BoundedSimplex, SolveOutcome};
 
 /// Comparison sense of a constraint row.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,6 +33,9 @@ pub struct Lp {
     /// Objective coefficients (len = num_vars); minimised.
     pub objective: Vec<f64>,
     pub constraints: Vec<Constraint>,
+    /// Per-variable bounds (finite lower required; upper may be ∞).
+    pub lower: Vec<f64>,
+    pub upper: Vec<f64>,
 }
 
 impl Lp {
@@ -44,11 +44,20 @@ impl Lp {
             num_vars,
             objective: vec![0.0; num_vars],
             constraints: Vec::new(),
+            lower: vec![0.0; num_vars],
+            upper: vec![f64::INFINITY; num_vars],
         }
     }
 
     pub fn set_objective(&mut self, var: usize, coef: f64) {
         self.objective[var] = coef;
+    }
+
+    /// Set native bounds lo ≤ x[var] ≤ hi (no constraint row is added).
+    pub fn set_bounds(&mut self, var: usize, lo: f64, hi: f64) {
+        debug_assert!(lo.is_finite() && lo <= hi);
+        self.lower[var] = lo;
+        self.upper[var] = hi;
     }
 
     pub fn add(&mut self, terms: Vec<(usize, f64)>, cmp: Cmp, rhs: f64) {
@@ -61,10 +70,13 @@ impl Lp {
         row.terms.iter().map(|&(i, c)| c * x[i]).sum()
     }
 
-    /// Verify a candidate solution satisfies every constraint within tol.
+    /// Verify a candidate solution satisfies every bound and constraint
+    /// within tol.
     pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
-        if x.iter().any(|&v| v < -tol) {
-            return false;
+        for (j, &v) in x.iter().enumerate() {
+            if v < self.lower[j] - tol || v > self.upper[j] + tol {
+                return false;
+            }
         }
         self.constraints.iter().all(|c| {
             let lhs = self.lhs(c, x);
@@ -86,297 +98,27 @@ pub enum LpResult {
     Stalled,
 }
 
-const EPS: f64 = 1e-9;
-const PIVOT_EPS: f64 = 1e-7;
-
-/// Dense simplex tableau.
-struct Tableau {
-    rows: usize,
-    cols: usize, // includes RHS column
-    a: Vec<f64>,
-    basis: Vec<usize>,
-    /// Scratch copy of the pivot row (avoids aliasing in elimination and
-    /// lets the inner loop run as a vectorizable axpy).
-    scratch: Vec<f64>,
-}
-
-impl Tableau {
-    #[inline]
-    fn at(&self, r: usize, c: usize) -> f64 {
-        self.a[r * self.cols + c]
-    }
-    #[inline]
-    fn set(&mut self, r: usize, c: usize, v: f64) {
-        self.a[r * self.cols + c] = v;
-    }
-
-    /// Pivot on (pr, pc): normalise the pivot row and eliminate the column
-    /// elsewhere. This is the hot loop of the whole planner — written as a
-    /// scaled row copy + per-row branchless axpy so LLVM vectorizes it.
-    fn pivot(&mut self, pr: usize, pc: usize) {
-        let cols = self.cols;
-        let pivot = self.at(pr, pc);
-        debug_assert!(pivot.abs() > EPS);
-        let inv = 1.0 / pivot;
-        let row_start = pr * cols;
-        // Normalise the pivot row into scratch, then write it back.
-        for (dst, src) in self.scratch.iter_mut().zip(&self.a[row_start..row_start + cols]) {
-            *dst = *src * inv;
-        }
-        self.a[row_start..row_start + cols].copy_from_slice(&self.scratch);
-        // Eliminate the pivot column from every other row: row -= f * pivot.
-        for r in 0..self.rows {
-            if r == pr {
-                continue;
-            }
-            let factor = self.at(r, pc);
-            if factor.abs() <= EPS {
-                if factor != 0.0 {
-                    self.set(r, pc, 0.0);
-                }
-                continue;
-            }
-            let dst = &mut self.a[r * cols..r * cols + cols];
-            // Branchless axpy — auto-vectorized.
-            for (d, s) in dst.iter_mut().zip(&self.scratch) {
-                *d -= factor * *s;
-            }
-            dst[pc] = 0.0;
-        }
-        self.basis[pr] = pc;
-    }
-}
-
-/// Solve an LP by two-phase simplex.
+/// Solve an LP from scratch (two-phase bounded primal simplex).
 pub fn solve(lp: &Lp) -> LpResult {
-    let m = lp.constraints.len();
-    let n = lp.num_vars;
-
-    // Count auxiliary columns.
-    let mut num_slack = 0; // one per Le or Ge
-    let mut num_art = 0; // one per Ge or Eq
-    for c in &lp.constraints {
-        // Normalise rows to rhs >= 0 first; sense may flip.
-        let (cmp, _) = normalised_sense(c);
-        match cmp {
-            Cmp::Le => num_slack += 1,
-            Cmp::Ge => {
-                num_slack += 1;
-                num_art += 1;
-            }
-            Cmp::Eq => num_art += 1,
-        }
-    }
-
-    let total = n + num_slack + num_art;
-    let cols = total + 1; // + RHS
-    let rows = m + 1; // + objective row
-    let mut t = Tableau {
-        rows,
-        cols,
-        a: vec![0.0; rows * cols],
-        basis: vec![usize::MAX; m],
-        scratch: vec![0.0; cols],
-    };
-
-    let mut slack_idx = n;
-    let mut art_idx = n + num_slack;
-    let mut art_cols: Vec<usize> = Vec::with_capacity(num_art);
-
-    for (r, c) in lp.constraints.iter().enumerate() {
-        let (cmp, flip) = normalised_sense(c);
-        let sign = if flip { -1.0 } else { 1.0 };
-        for &(i, coef) in &c.terms {
-            let cur = t.at(r, i);
-            t.set(r, i, cur + sign * coef);
-        }
-        t.set(r, total, sign * c.rhs);
-        match cmp {
-            Cmp::Le => {
-                t.set(r, slack_idx, 1.0);
-                t.basis[r] = slack_idx;
-                slack_idx += 1;
-            }
-            Cmp::Ge => {
-                t.set(r, slack_idx, -1.0);
-                slack_idx += 1;
-                t.set(r, art_idx, 1.0);
-                t.basis[r] = art_idx;
-                art_cols.push(art_idx);
-                art_idx += 1;
-            }
-            Cmp::Eq => {
-                t.set(r, art_idx, 1.0);
-                t.basis[r] = art_idx;
-                art_cols.push(art_idx);
-                art_idx += 1;
-            }
-        }
-    }
-
-    let max_iters = 50 * (m + n).max(100);
-
-    // ---- Phase 1: minimise sum of artificials --------------------------
-    if num_art > 0 {
-        // Objective row = -(sum of artificial rows) so reduced costs start
-        // consistent with the basis.
-        for &ac in &art_cols {
-            t.set(m, ac, 1.0);
-        }
-        for r in 0..m {
-            if art_cols.contains(&t.basis[r]) {
-                // subtract row r from objective row
-                for j in 0..cols {
-                    let v = t.at(m, j) - t.at(r, j);
-                    t.set(m, j, v);
-                }
-            }
-        }
-        match run_simplex(&mut t, max_iters) {
-            SimplexOutcome::Optimal => {}
-            SimplexOutcome::Unbounded => return LpResult::Infeasible, // phase 1 bounded by construction
-            SimplexOutcome::Stalled => return LpResult::Stalled,
-        }
-        let phase1_obj = -t.at(m, total);
-        if phase1_obj > 1e-6 {
-            return LpResult::Infeasible;
-        }
-        // Drive any artificial still in the basis out (degenerate).
-        for r in 0..m {
-            if art_cols.contains(&t.basis[r]) {
-                // Find a non-artificial column with nonzero entry to pivot in.
-                let mut pivoted = false;
-                for j in 0..(n + num_slack) {
-                    if t.at(r, j).abs() > PIVOT_EPS {
-                        t.pivot(r, j);
-                        pivoted = true;
-                        break;
-                    }
-                }
-                if !pivoted {
-                    // Row is all-zero: redundant constraint; leave it.
-                }
-            }
-        }
-        // Zero out artificial columns so they can never re-enter.
-        for &ac in &art_cols {
-            for r in 0..rows {
-                t.set(r, ac, 0.0);
-            }
-        }
-        // Reset objective row for phase 2.
-        for j in 0..cols {
-            t.set(m, j, 0.0);
-        }
-    }
-
-    // ---- Phase 2: original objective ------------------------------------
-    for (i, &c) in lp.objective.iter().enumerate() {
-        t.set(m, i, c);
-    }
-    // Make the objective row consistent with the current basis.
-    for r in 0..m {
-        let b = t.basis[r];
-        if b < total {
-            let coef = t.at(m, b);
-            if coef.abs() > EPS {
-                for j in 0..cols {
-                    let v = t.at(m, j) - coef * t.at(r, j);
-                    t.set(m, j, v);
-                }
-            }
-        }
-    }
-
-    match run_simplex(&mut t, max_iters) {
-        SimplexOutcome::Optimal => {}
-        SimplexOutcome::Unbounded => return LpResult::Unbounded,
-        SimplexOutcome::Stalled => return LpResult::Stalled,
-    }
-
-    // Extract solution.
-    let mut x = vec![0.0; n];
-    for r in 0..m {
-        let b = t.basis[r];
-        if b < n {
-            x[b] = t.at(r, total);
-        }
-    }
-    let objective = lp
-        .objective
-        .iter()
-        .zip(&x)
-        .map(|(c, v)| c * v)
-        .sum::<f64>();
-    LpResult::Optimal { x, objective }
+    let mut pivots = 0;
+    solve_counted(lp, &mut pivots)
 }
 
-fn normalised_sense(c: &Constraint) -> (Cmp, bool) {
-    if c.rhs < 0.0 {
-        let flipped = match c.cmp {
-            Cmp::Le => Cmp::Ge,
-            Cmp::Ge => Cmp::Le,
-            Cmp::Eq => Cmp::Eq,
-        };
-        (flipped, true)
-    } else {
-        (c.cmp, false)
+/// [`solve`] that also accumulates the pivot count into `pivots` — the
+/// planner's search statistics thread this through every LP it touches.
+pub fn solve_counted(lp: &Lp, pivots: &mut u64) -> LpResult {
+    let mut s = BoundedSimplex::new(lp);
+    let out = s.solve_cold();
+    *pivots += s.pivots();
+    match out {
+        SolveOutcome::Optimal => {
+            let (x, objective) = s.extract();
+            LpResult::Optimal { x, objective }
+        }
+        SolveOutcome::Infeasible => LpResult::Infeasible,
+        SolveOutcome::Unbounded => LpResult::Unbounded,
+        SolveOutcome::Stalled => LpResult::Stalled,
     }
-}
-
-enum SimplexOutcome {
-    Optimal,
-    Unbounded,
-    Stalled,
-}
-
-/// Run primal simplex iterations on the tableau until optimal.
-fn run_simplex(t: &mut Tableau, max_iters: usize) -> SimplexOutcome {
-    let m = t.rows - 1;
-    let total = t.cols - 1;
-    let bland_after = max_iters / 2;
-    for iter in 0..max_iters {
-        // Entering column: most negative reduced cost (Dantzig), or the
-        // first negative (Bland) when close to the iteration cap.
-        let use_bland = iter >= bland_after;
-        let mut pc = usize::MAX;
-        let mut best = -PIVOT_EPS;
-        for j in 0..total {
-            let rc = t.at(m, j);
-            if rc < best {
-                pc = j;
-                if use_bland {
-                    break;
-                }
-                best = rc;
-            }
-        }
-        if pc == usize::MAX {
-            return SimplexOutcome::Optimal;
-        }
-        // Leaving row: min ratio test; Bland tie-break on basis index.
-        let mut pr = usize::MAX;
-        let mut best_ratio = f64::INFINITY;
-        for r in 0..m {
-            let a = t.at(r, pc);
-            if a > PIVOT_EPS {
-                let ratio = t.at(r, total) / a;
-                if ratio < best_ratio - EPS
-                    || (ratio < best_ratio + EPS
-                        && pr != usize::MAX
-                        && t.basis[r] < t.basis[pr])
-                {
-                    best_ratio = ratio;
-                    pr = r;
-                }
-            }
-        }
-        if pr == usize::MAX {
-            return SimplexOutcome::Unbounded;
-        }
-        t.pivot(pr, pc);
-    }
-    SimplexOutcome::Stalled
 }
 
 #[cfg(test)]
@@ -406,6 +148,21 @@ mod tests {
     }
 
     #[test]
+    fn textbook_via_native_bounds() {
+        // Same optimum with the single-variable rows as native bounds.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -3.0);
+        lp.set_objective(1, -5.0);
+        lp.set_bounds(0, 0.0, 4.0);
+        lp.set_bounds(1, 0.0, 6.0);
+        lp.add(vec![(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        let (x, obj) = opt(&lp);
+        assert!((x[0] - 2.0).abs() < 1e-6, "x={x:?}");
+        assert!((x[1] - 6.0).abs() < 1e-6);
+        assert!((obj + 36.0).abs() < 1e-6);
+    }
+
+    #[test]
     fn equality_and_ge_constraints() {
         // min x + 2y s.t. x + y = 10, x >= 3, y >= 2  => x=8, y=2, obj=12.
         let mut lp = Lp::new(2);
@@ -421,10 +178,34 @@ mod tests {
     }
 
     #[test]
+    fn nonzero_lower_bounds() {
+        // min x + 2y with x in [3,∞), y in [2,∞), x + y = 10 — same as
+        // above but with the Ge rows as native lower bounds.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.set_objective(1, 2.0);
+        lp.set_bounds(0, 3.0, f64::INFINITY);
+        lp.set_bounds(1, 2.0, f64::INFINITY);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Eq, 10.0);
+        let (x, obj) = opt(&lp);
+        assert!((x[0] - 8.0).abs() < 1e-6, "x={x:?}");
+        assert!((obj - 12.0).abs() < 1e-6);
+    }
+
+    #[test]
     fn infeasible_detected() {
         // x <= 1, x >= 2.
         let mut lp = Lp::new(1);
         lp.add(vec![(0, 1.0)], Cmp::Le, 1.0);
+        lp.add(vec![(0, 1.0)], Cmp::Ge, 2.0);
+        assert_eq!(solve(&lp), LpResult::Infeasible);
+    }
+
+    #[test]
+    fn infeasible_bounds_detected() {
+        // x in [0,1] bound vs x >= 2 row.
+        let mut lp = Lp::new(1);
+        lp.set_bounds(0, 0.0, 1.0);
         lp.add(vec![(0, 1.0)], Cmp::Ge, 2.0);
         assert_eq!(solve(&lp), LpResult::Infeasible);
     }
@@ -486,6 +267,25 @@ mod tests {
         assert!(lp.is_feasible(&[0.5, 0.5], 1e-9));
         assert!(!lp.is_feasible(&[0.8, 0.5], 1e-9));
         assert!(!lp.is_feasible(&[-0.1, 0.0], 1e-9));
+        // Bounds participate in the check.
+        lp.set_bounds(1, 0.0, 0.4);
+        assert!(!lp.is_feasible(&[0.4, 0.5], 1e-9));
+    }
+
+    #[test]
+    fn solve_counted_accumulates_pivots() {
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -3.0);
+        lp.set_objective(1, -5.0);
+        lp.add(vec![(0, 1.0)], Cmp::Le, 4.0);
+        lp.add(vec![(1, 2.0)], Cmp::Le, 12.0);
+        lp.add(vec![(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        let mut pivots = 0;
+        assert!(matches!(
+            solve_counted(&lp, &mut pivots),
+            LpResult::Optimal { .. }
+        ));
+        assert!(pivots > 0, "no pivots recorded");
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub use replan::{
 };
 
 use crate::cloud::{MarketEvent, MarketEventKind, PriceBook, WorldEvent};
-use crate::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use crate::sched::binary_search::{solve_binary_search, BinarySearchOptions, SearchStats};
 use crate::sched::{SchedProblem, ServingPlan};
 use crate::workload::{demand_drift, DemandSnapshot};
 
@@ -110,6 +110,9 @@ pub struct PlanEpoch {
     pub infeasible: bool,
     pub supply_drift: f64,
     pub demand_drift: f64,
+    /// What this epoch's (re)planning cost the solver: LP solves, simplex
+    /// pivots, MILP nodes, warm/cold split. Zero for absorbed epochs.
+    pub stats: SearchStats,
 }
 
 /// The full orchestration outcome.
@@ -125,6 +128,8 @@ pub struct OrchestrationReport {
     /// Epochs whose diff actually moved replicas.
     pub transitions: usize,
     pub total_migration: MigrationCost,
+    /// Aggregate solver cost across every epoch (the replanning bill).
+    pub solver: SearchStats,
 }
 
 impl OrchestrationReport {
@@ -222,10 +227,10 @@ pub fn apply_world(p: &mut SchedProblem, event: &WorldEvent, epoch_s: f64) {
     apply_demand(p, &event.demand, epoch_s);
 }
 
-/// The single [`PlanEpoch`] construction site. The epoch carries 14
-/// fields and grew the demand ones in this refactor; every orchestration
-/// outcome (initial solve / replanned / absorbed / infeasible) funnels
-/// through here so the copies cannot drift apart.
+/// The single [`PlanEpoch`] construction site. The epoch carries 15
+/// fields (the solver-stats one landed with the warm-started MILP core);
+/// every orchestration outcome (initial solve / replanned / absorbed /
+/// infeasible) funnels through here so the copies cannot drift apart.
 struct EpochBuild<'a> {
     index: usize,
     event: &'a WorldEvent,
@@ -240,6 +245,7 @@ impl EpochBuild<'_> {
         outcome: Option<&ReplanOutcome>,
         replanned: bool,
         infeasible: bool,
+        stats: SearchStats,
     ) -> PlanEpoch {
         PlanEpoch {
             index: self.index,
@@ -256,23 +262,25 @@ impl EpochBuild<'_> {
             infeasible,
             supply_drift: self.drift.supply,
             demand_drift: self.drift.demand,
+            stats,
         }
     }
 
-    /// The from-scratch first epoch.
-    fn initial(self, plan: &ServingPlan) -> PlanEpoch {
-        self.build(plan.clone(), None, true, false)
+    /// The from-scratch first epoch (carrying the initial solve's cost).
+    fn initial(self, plan: &ServingPlan, stats: SearchStats) -> PlanEpoch {
+        self.build(plan.clone(), None, true, false, stats)
     }
 
     /// A successfully replanned epoch.
     fn replanned(self, outcome: &ReplanOutcome) -> PlanEpoch {
-        self.build(outcome.plan.clone(), Some(outcome), true, false)
+        let stats = outcome.stats.clone();
+        self.build(outcome.plan.clone(), Some(outcome), true, false, stats)
     }
 
     /// An epoch that keeps the incumbent: a deliberate low-drift
     /// absorption, or (`infeasible`) a hostile world with no plan at all.
     fn kept(self, incumbent: &ServingPlan, infeasible: bool) -> PlanEpoch {
-        self.build(incumbent.clone(), None, false, infeasible)
+        self.build(incumbent.clone(), None, false, infeasible, SearchStats::default())
     }
 }
 
@@ -303,7 +311,7 @@ impl Orchestrator {
     ) -> Option<Orchestrator> {
         let mut problem = base.clone();
         apply_world(&mut problem, first, epoch_s);
-        let (initial, _) = solve_binary_search(&problem, &opts.search);
+        let (initial, solve_stats) = solve_binary_search(&problem, &opts.search);
         let incumbent = initial?;
         let epoch = EpochBuild {
             index: 0,
@@ -311,7 +319,7 @@ impl Orchestrator {
             problem,
             drift: WorldDrift::default(),
         }
-        .initial(&incumbent);
+        .initial(&incumbent, solve_stats);
         Some(Orchestrator {
             base: base.clone(),
             opts: opts.clone(),
@@ -385,8 +393,10 @@ impl Orchestrator {
         let fast_paths = epochs.iter().filter(|e| e.fast_path).count();
         let transitions = epochs.iter().skip(1).filter(|e| !e.diff.is_empty()).count();
         let mut total_migration = MigrationCost::default();
+        let mut solver = SearchStats::default();
         for e in &epochs {
             total_migration.add(&e.migration);
+            solver.merge(&e.stats);
         }
         OrchestrationReport {
             epochs,
@@ -395,6 +405,7 @@ impl Orchestrator {
             fast_paths,
             transitions,
             total_migration,
+            solver,
         }
     }
 }
@@ -510,6 +521,9 @@ mod tests {
             assert!((e.start_s - ev.t_s()).abs() < 1e-9);
         }
         assert!(report.total_dollars(events.len() as f64 * 900.0) > 0.0);
+        // Replanning cost is observable: the initial solve alone runs LPs.
+        assert!(report.solver.lp_solves > 0 && report.solver.pivots > 0);
+        assert!(report.epochs[0].stats.lp_solves > 0);
     }
 
     #[test]

@@ -21,7 +21,7 @@
 use super::diff::{replica_counts, MigrationCost, MigrationCostModel, PlanDiff};
 use super::OrchestratorOptions;
 use crate::sched::binary_search::{
-    polish_plan, solve_assignment_fixed_y, solve_binary_search, solve_binary_search_warm,
+    polish_plan, solve_assignment_fixed_y, solve_binary_search, solve_binary_search_seeded,
     BinarySearchOptions, SearchStats,
 };
 use crate::sched::{SchedProblem, ServingPlan};
@@ -131,13 +131,6 @@ pub fn market_drift(
         price_term /= priced as f64;
     }
     avail_term + price_term
-}
-
-fn merge_stats(into: &mut SearchStats, from: &SearchStats) {
-    into.iterations += from.iterations;
-    into.feasibility_checks += from.feasibility_checks;
-    into.lp_solves += from.lp_solves;
-    into.elapsed += from.elapsed;
 }
 
 /// Throughput-per-dollar value of a candidate — victim selection keeps the
@@ -262,14 +255,19 @@ pub fn replan(
             Some(plan) => plan,
             None => {
                 escalated = true;
-                let (plan, s) = solve_binary_search_warm(p, opts, Some(incumbent.makespan));
-                merge_stats(&mut stats, &s);
+                let (plan, s) = solve_binary_search_seeded(
+                    p,
+                    opts,
+                    Some(incumbent.makespan),
+                    Some(incumbent),
+                );
+                stats.merge(&s);
                 plan?
             }
         },
         ReplanStrategy::FullResolve => {
             let (plan, s) = solve_binary_search(p, opts);
-            merge_stats(&mut stats, &s);
+            stats.merge(&s);
             plan?
         }
         ReplanStrategy::Escalating { drift_threshold } => {
@@ -282,8 +280,13 @@ pub fn replan(
                 Some(plan) => plan,
                 None => {
                     escalated = true;
-                    let (plan, s) = solve_binary_search_warm(p, opts, Some(incumbent.makespan));
-                    merge_stats(&mut stats, &s);
+                    let (plan, s) = solve_binary_search_seeded(
+                        p,
+                        opts,
+                        Some(incumbent.makespan),
+                        Some(incumbent),
+                    );
+                    stats.merge(&s);
                     plan?
                 }
             }
@@ -345,8 +348,13 @@ pub fn replan_world(
     }
     if adaptive && drift.demand > opts.demand_drift_threshold {
         let mut stats = SearchStats::default();
-        let (plan, s) = solve_binary_search_warm(p, &opts.search, Some(incumbent.makespan));
-        merge_stats(&mut stats, &s);
+        let (plan, s) = solve_binary_search_seeded(
+            p,
+            &opts.search,
+            Some(incumbent.makespan),
+            Some(incumbent),
+        );
+        stats.merge(&s);
         let plan = plan?;
         let diff = PlanDiff::between(p, incumbent, &plan);
         let migration = diff.migration_cost(p, &opts.cost_model);

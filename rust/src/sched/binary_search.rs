@@ -17,7 +17,9 @@
 //!   infeasible by a small margin) but much faster.
 
 use super::{PlanEntry, SchedProblem, ServingPlan};
-use crate::milp::{solve, solve_milp, Cmp, Lp, LpResult, MilpOptions, MilpResult};
+use crate::milp::{
+    solve_counted, solve_milp_seeded, Cmp, Lp, LpResult, MilpOptions, MilpResult, MilpStats,
+};
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,7 +61,50 @@ pub struct SearchStats {
     pub iterations: usize,
     pub feasibility_checks: usize,
     pub lp_solves: usize,
+    /// Simplex pivots across every LP the search touched (assignment LPs,
+    /// knapsack roundings, and the exact-mode MILP nodes alike).
+    pub pivots: u64,
+    /// Branch-and-bound nodes explored by the exact feasibility MILPs.
+    pub milp_nodes: usize,
+    /// MILP node LPs re-solved warm (dual simplex from the parent basis).
+    pub warm_solves: usize,
+    /// MILP node LPs solved cold (two-phase primal from scratch).
+    pub cold_solves: usize,
     pub elapsed: Duration,
+}
+
+impl SearchStats {
+    /// Fold one exact feasibility MILP's statistics into the search totals.
+    fn absorb_milp(&mut self, m: &MilpStats) {
+        self.lp_solves += m.lp_solves;
+        self.pivots += m.pivots;
+        self.milp_nodes += m.nodes;
+        self.warm_solves += m.warm_solves;
+        self.cold_solves += m.cold_solves;
+    }
+
+    /// Accumulate another search's statistics (replanning ladders and the
+    /// orchestrator's per-horizon totals fold through here).
+    pub fn merge(&mut self, other: &SearchStats) {
+        self.iterations += other.iterations;
+        self.feasibility_checks += other.feasibility_checks;
+        self.lp_solves += other.lp_solves;
+        self.pivots += other.pivots;
+        self.milp_nodes += other.milp_nodes;
+        self.warm_solves += other.warm_solves;
+        self.cold_solves += other.cold_solves;
+        self.elapsed += other.elapsed;
+    }
+
+    /// Fraction of MILP node LPs served by the warm (dual-simplex) path.
+    pub fn warm_hit_rate(&self) -> f64 {
+        let total = self.warm_solves + self.cold_solves;
+        if total == 0 {
+            0.0
+        } else {
+            self.warm_solves as f64 / total as f64
+        }
+    }
 }
 
 /// The feasibility LP/MILP at a fixed T̂.
@@ -94,9 +139,33 @@ fn build_feasibility(p: &SchedProblem, t_hat: f64) -> Option<FeasModel> {
     let num_vars = y_base + p.candidates.len();
     let mut lp = Lp::new(num_vars);
 
-    // Objective: minimise rental cost.
+    // Workload fractions are shares: x ∈ [0, 1] natively.
+    for v in 0..y_base {
+        lp.set_bounds(v, 0.0, 1.0);
+    }
+
+    // Objective: minimise rental cost. Native per-candidate caps from the
+    // budget and the per-type pools give every y a finite range, which the
+    // warm-started B&B exploits (finite ranges flip instead of pivoting,
+    // and reverted branches never pass through an infinite bound).
     for (ci, c) in p.candidates.iter().enumerate() {
         lp.set_objective(y_base + ci, c.cost);
+        let by_budget = if c.cost > 0.0 {
+            (p.budget / c.cost).floor()
+        } else {
+            f64::INFINITY
+        };
+        let by_avail = c
+            .gpu_counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &d)| d > 0)
+            .map(|(n, &d)| (p.avail[n] / d) as f64)
+            .fold(f64::INFINITY, f64::min);
+        let cap = by_budget.min(by_avail);
+        if cap.is_finite() {
+            lp.set_bounds(y_base + ci, 0.0, cap);
+        }
     }
 
     // Assignment rows.
@@ -160,27 +229,54 @@ fn build_feasibility(p: &SchedProblem, t_hat: f64) -> Option<FeasModel> {
     })
 }
 
-/// Outcome of one feasibility check: a concrete plan if feasible.
+/// Map a serving plan onto the feasibility model's variable layout — the
+/// seed the exact MILP starts from. The layout depends only on the problem
+/// (not on T̂), so one vector carries across every bisection iteration.
+fn plan_solution(model: &FeasModel, plan: &ServingPlan) -> Vec<f64> {
+    let mut x = vec![0.0; model.lp.num_vars];
+    for e in &plan.entries {
+        x[model.y_base + e.candidate] = e.replicas as f64;
+        for (w, &v) in model.x_index[e.candidate].iter().enumerate() {
+            if v != usize::MAX {
+                if let Some(&f) = e.fractions.get(w) {
+                    x[v] = f;
+                }
+            }
+        }
+    }
+    x
+}
+
+/// Outcome of one feasibility check: a concrete plan if feasible. `carry`
+/// holds the previous feasible MILP solution (same layout for every T̂);
+/// it seeds the exact solver's incumbent and is replaced on success.
 fn check_feasible(
     p: &SchedProblem,
     t_hat: f64,
-    mode: Feasibility,
-    milp_opts: &MilpOptions,
+    opts: &BinarySearchOptions,
+    carry: &mut Option<Vec<f64>>,
     stats: &mut SearchStats,
 ) -> Option<ServingPlan> {
     let model = build_feasibility(p, t_hat)?;
     stats.feasibility_checks += 1;
-    match mode {
+    match opts.feasibility {
         Feasibility::Exact => {
             let ints: Vec<usize> =
                 (model.y_base..model.lp.num_vars).collect();
-            let (res, mstats) = solve_milp(&model.lp, &ints, milp_opts);
-            stats.lp_solves += mstats.lp_solves;
+            // Plans over budget are useless: let the B&B prune on it.
+            let milp_opts = MilpOptions {
+                cutoff: p.budget + 1e-6,
+                ..opts.milp.clone()
+            };
+            let (res, mstats) =
+                solve_milp_seeded(&model.lp, &ints, &milp_opts, carry.as_deref());
+            stats.absorb_milp(&mstats);
             match res {
                 MilpResult::Optimal { x, objective } | MilpResult::Feasible { x, objective, .. } => {
                     if objective <= p.budget + 1e-6 {
                         let plan = extract(p, &model, &x, t_hat);
                         plan.validate(p, 1e-4).ok()?;
+                        *carry = Some(x);
                         Some(plan)
                     } else {
                         None
@@ -214,7 +310,7 @@ fn check_feasible(
                     return None; // rounding failed to converge
                 }
                 stats.lp_solves += 1;
-                let LpResult::Optimal { x, .. } = solve(&lp) else {
+                let LpResult::Optimal { x, .. } = solve_counted(&lp, &mut stats.pivots) else {
                     return None;
                 };
                 // Most fractional activation (largest value among them).
@@ -233,15 +329,20 @@ fn check_feasible(
                         .collect();
                 };
                 // Prefer rounding up (more capacity), fall back to down.
+                // Fixing is a native bound change (no row, no LP clone),
+                // reverted in place when the direction is infeasible.
                 let yvar = model.y_base + ci;
+                let (olo, ohi) = (lp.lower[yvar], lp.upper[yvar]);
                 let mut try_fix = |value: f64| -> bool {
-                    let mut trial = lp.clone();
-                    trial.add(vec![(yvar, 1.0)], Cmp::Eq, value);
+                    lp.set_bounds(yvar, value, value);
                     stats.lp_solves += 1;
-                    if matches!(solve(&trial), LpResult::Optimal { .. }) {
-                        lp = trial;
+                    if matches!(
+                        solve_counted(&lp, &mut stats.pivots),
+                        LpResult::Optimal { .. }
+                    ) {
                         true
                     } else {
+                        lp.set_bounds(yvar, olo, ohi);
                         false
                     }
                 };
@@ -345,6 +446,9 @@ pub fn solve_assignment_fixed_y(
     let t_var = next;
     let mut lp = Lp::new(t_var + 1);
     lp.set_objective(t_var, 1.0);
+    for v in 0..t_var {
+        lp.set_bounds(v, 0.0, 1.0); // fractions are shares
+    }
     for (m, dm) in p.demands.iter().enumerate() {
         for (w, &lambda) in dm.iter().enumerate() {
             if lambda <= 0.0 {
@@ -385,7 +489,7 @@ pub fn solve_assignment_fixed_y(
         lp.add(terms, Cmp::Le, 0.0);
     }
     stats.lp_solves += 1;
-    let LpResult::Optimal { x, objective } = solve(&lp) else {
+    let LpResult::Optimal { x, objective } = solve_counted(&lp, &mut stats.pivots) else {
         return None;
     };
     // Allow 1% slack over T̂ — the rounding added capacity, so the realised
@@ -485,11 +589,28 @@ pub fn solve_binary_search_warm(
     opts: &BinarySearchOptions,
     warm_upper: Option<f64>,
 ) -> (Option<ServingPlan>, SearchStats) {
+    solve_binary_search_seeded(p, opts, warm_upper, None)
+}
+
+/// [`solve_binary_search_warm`] that additionally seeds the exact-mode
+/// feasibility MILPs with a known plan (the orchestrator passes the
+/// incumbent when replanning): its solution vector becomes the B&B's
+/// first feasible point, so pruning starts before the first branch. Each
+/// feasible bisection iterate then seeds the next check — the model
+/// layout is identical across T̂ values.
+pub fn solve_binary_search_seeded(
+    p: &SchedProblem,
+    opts: &BinarySearchOptions,
+    warm_upper: Option<f64>,
+    seed_plan: Option<&ServingPlan>,
+) -> (Option<ServingPlan>, SearchStats) {
     let start = Instant::now();
     let mut stats = SearchStats::default();
     let Some(ub) = p.makespan_upper_bound() else {
         return (None, stats);
     };
+    let mut carry: Option<Vec<f64>> = seed_plan
+        .and_then(|plan| build_feasibility(p, ub).map(|model| plan_solution(&model, plan)));
 
     // Candidate upper bounds, tightest first: the warm start (if it is
     // tighter than the analytic bound), the analytic bound, and a widened
@@ -504,7 +625,7 @@ pub fn solve_binary_search_warm(
     tries.push(ub);
     tries.push(4.0 * ub);
     let seeded = tries.into_iter().find_map(|t| {
-        check_feasible(p, t, opts.feasibility, &opts.milp, &mut stats)
+        check_feasible(p, t, opts, &mut carry, &mut stats)
             .map(|plan| (plan.makespan.min(t), plan))
     });
     let Some((mut upper, seed_plan)) = seeded else {
@@ -517,7 +638,7 @@ pub fn solve_binary_search_warm(
     while upper - lower > opts.tolerance && stats.iterations < opts.max_iters {
         stats.iterations += 1;
         let t_hat = 0.5 * (upper + lower);
-        match check_feasible(p, t_hat, opts.feasibility, &opts.milp, &mut stats) {
+        match check_feasible(p, t_hat, opts, &mut carry, &mut stats) {
             Some(plan) => {
                 // Feasible: tighten from above. The realised makespan can be
                 // far below T̂ — exploit it.
@@ -634,6 +755,33 @@ mod tests {
             poor.makespan,
             rich.makespan
         );
+    }
+
+    #[test]
+    fn exact_mode_reports_solver_stats_and_seeding_agrees() {
+        let p = simple_example();
+        let opts = BinarySearchOptions {
+            tolerance: 0.05,
+            feasibility: Feasibility::Exact,
+            ..Default::default()
+        };
+        let (plan, stats) = solve_binary_search(&p, &opts);
+        let plan = plan.unwrap();
+        assert!(stats.pivots > 0, "no pivots recorded");
+        assert!(stats.milp_nodes > 0, "no B&B nodes recorded");
+        // Replanning seeded with the incumbent must agree (within the
+        // bisection tolerance) and still produce a valid plan.
+        let (plan2, stats2) =
+            solve_binary_search_seeded(&p, &opts, Some(plan.makespan), Some(&plan));
+        let plan2 = plan2.unwrap();
+        plan2.validate(&p, 1e-4).unwrap();
+        assert!(
+            (plan2.makespan - plan.makespan).abs() <= 0.2,
+            "seeded {} vs fresh {}",
+            plan2.makespan,
+            plan.makespan
+        );
+        assert!(stats2.pivots > 0);
     }
 
     #[test]

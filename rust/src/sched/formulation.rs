@@ -92,6 +92,10 @@ pub fn build_direct(p: &SchedProblem) -> Option<DirectMilp> {
 
     let mut lp = Lp::new(num_vars);
     lp.set_objective(t_var, 1.0);
+    // Workload fractions are shares: x ∈ [0, 1] natively.
+    for v in 0..y_base {
+        lp.set_bounds(v, 0.0, 1.0);
+    }
 
     // Assignment: ∀(m,w) with λ>0: Σ over variants of model m: x = 1.
     for (m, dm) in p.demands.iter().enumerate() {
@@ -142,8 +146,9 @@ pub fn build_direct(p: &SchedProblem) -> Option<DirectMilp> {
             row.push((y, -w_count));
             lp.add(row, Cmp::Le, 0.0);
         }
-        // y binary: y ≤ 1.
-        lp.add(vec![(y, 1.0)], Cmp::Le, 1.0);
+        // y binary: a native variable bound, not a row — branching on y is
+        // then a pure bound tightening in the warm-started B&B.
+        lp.set_bounds(y, 0.0, 1.0);
     }
 
     // Budget: Σ k·o_c·y ≤ B.

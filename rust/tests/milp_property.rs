@@ -1,6 +1,8 @@
 //! Property tests for the MILP substrate: the simplex against brute-force
-//! vertex enumeration on small LPs, and branch & bound against exhaustive
-//! search on small integer programs.
+//! vertex enumeration on small LPs, branch & bound against exhaustive
+//! search on small integer programs, and the warm-started bound-tightening
+//! B&B against both a cold run and the old row-based branching scheme on
+//! randomized planner-shaped MILPs.
 
 use hetserve::milp::{solve, solve_milp, Cmp, Lp, LpResult, MilpOptions, MilpResult};
 use hetserve::util::proptest::{check, prop_assert, prop_assert_close, Gen};
@@ -109,6 +111,159 @@ fn branch_bound_matches_exhaustive_on_small_ips() {
                 prop_assert_close(-objective, best, 1e-6, "milp vs exhaustive")
             }
             other => Err(format!("expected optimal, got {other:?}")),
+        }
+    });
+}
+
+/// The pre-warm-start branching scheme, kept as a reference oracle: clone
+/// the problem at every node and add each branch decision `x ≤ ⌊v⌋` /
+/// `x ≥ ⌈v⌉` as a fresh constraint row (DFS, incumbent pruning).
+fn solve_milp_row_based(lp: &Lp, ints: &[usize]) -> Option<f64> {
+    let mut best: Option<f64> = None;
+    let mut stack: Vec<Vec<(usize, bool, f64)>> = vec![Vec::new()];
+    while let Some(branches) = stack.pop() {
+        let mut node = lp.clone();
+        for &(v, upper, val) in &branches {
+            node.add(
+                vec![(v, 1.0)],
+                if upper { Cmp::Le } else { Cmp::Ge },
+                val,
+            );
+        }
+        let LpResult::Optimal { x, objective } = solve(&node) else {
+            continue;
+        };
+        if best.map(|b| objective > b - 1e-9).unwrap_or(false) {
+            continue;
+        }
+        let frac = ints
+            .iter()
+            .copied()
+            .max_by(|&a, &b| {
+                let fa = (x[a] - x[a].round()).abs();
+                let fb = (x[b] - x[b].round()).abs();
+                fa.partial_cmp(&fb).unwrap()
+            })
+            .filter(|&v| (x[v] - x[v].round()).abs() > 1e-6);
+        match frac {
+            None => {
+                if best.map(|b| objective < b).unwrap_or(true) {
+                    best = Some(objective);
+                }
+            }
+            Some(v) => {
+                let mut down = branches.clone();
+                down.push((v, true, x[v].floor()));
+                let mut up = branches;
+                up.push((v, false, x[v].floor() + 1.0));
+                stack.push(down);
+                stack.push(up);
+            }
+        }
+    }
+    best
+}
+
+/// A random instance shaped like the scheduler's feasibility MILP at a
+/// fixed T̂: continuous assignment shares x ∈ [0,1] with Σ_c x = 1 per
+/// workload, integer activations y with per-candidate caps, makespan rows
+/// Σ_w x·λ/h − T̂·y ≤ 0, one pooled availability row, min Σ cost·y.
+fn planner_shaped(rng: &mut Xoshiro256) -> (Lp, Vec<usize>) {
+    let ncand = 4 + rng.index(2);
+    let nw = 3 + rng.index(2);
+    let t_hat = 20.0;
+    let lambda: Vec<f64> = (0..nw).map(|_| rng.range_f64(5.0, 40.0)).collect();
+    let h: Vec<Vec<f64>> = (0..ncand)
+        .map(|_| {
+            (0..nw)
+                .map(|_| {
+                    if rng.range_f64(0.0, 1.0) < 0.85 {
+                        rng.range_f64(0.5, 4.0)
+                    } else {
+                        0.0
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let gpus: Vec<u64> = (0..ncand).map(|_| 1 + rng.range_u64(0, 3)).collect();
+    let avail = 4 + rng.range_u64(0, 8);
+    let nx = ncand * nw;
+    let mut lp = Lp::new(nx + ncand);
+    let xid = |c: usize, w: usize| c * nw + w;
+    for c in 0..ncand {
+        lp.set_objective(nx + c, rng.range_f64(1.0, 6.0));
+        let cap = (avail / gpus[c]).min(8) as f64;
+        lp.set_bounds(nx + c, 0.0, cap);
+        for w in 0..nw {
+            lp.set_bounds(xid(c, w), 0.0, if h[c][w] > 0.0 { 1.0 } else { 0.0 });
+        }
+    }
+    for w in 0..nw {
+        let terms: Vec<(usize, f64)> = (0..ncand)
+            .filter(|&c| h[c][w] > 0.0)
+            .map(|c| (xid(c, w), 1.0))
+            .collect();
+        if terms.is_empty() {
+            // Unservable workload: make the row trivially infeasible so
+            // every solver agrees on Infeasible.
+            lp.add(vec![(xid(0, w), 1.0)], Cmp::Ge, 2.0);
+        } else {
+            lp.add(terms, Cmp::Eq, 1.0);
+        }
+    }
+    for c in 0..ncand {
+        let mut terms: Vec<(usize, f64)> = (0..nw)
+            .filter(|&w| h[c][w] > 0.0)
+            .map(|w| (xid(c, w), lambda[w] / h[c][w]))
+            .collect();
+        if terms.is_empty() {
+            continue;
+        }
+        terms.push((nx + c, -t_hat));
+        lp.add(terms, Cmp::Le, 0.0);
+    }
+    lp.add(
+        (0..ncand).map(|c| (nx + c, gpus[c] as f64)).collect(),
+        Cmp::Le,
+        avail as f64,
+    );
+    let ints: Vec<usize> = (0..ncand).map(|c| nx + c).collect();
+    (lp, ints)
+}
+
+#[test]
+fn warm_cold_and_row_based_branching_agree_on_planner_milps() {
+    let gen = Gen::opaque(planner_shaped);
+    check(48, 0xD0A1_B0B, gen, |(lp, ints)| {
+        let warm = solve_milp(lp, ints, &MilpOptions::default()).0;
+        let cold = solve_milp(
+            lp,
+            ints,
+            &MilpOptions {
+                warm_start: false,
+                ..Default::default()
+            },
+        )
+        .0;
+        let row_based = solve_milp_row_based(lp, ints);
+        match (&warm, &cold, &row_based) {
+            (
+                MilpResult::Optimal { objective: w, x },
+                MilpResult::Optimal { objective: c, .. },
+                Some(r),
+            ) => {
+                prop_assert(lp.is_feasible(x, 1e-5), "warm solution infeasible")?;
+                prop_assert_close(*w, *c, 1e-6, "warm vs cold")?;
+                prop_assert_close(*w, *r, 1e-6, "bound-tightening vs row-based")
+            }
+            (MilpResult::Infeasible, MilpResult::Infeasible, None) => Ok(()),
+            // The headline regression this guards: bound tightening must
+            // never lose solutions the row-based scheme finds.
+            (MilpResult::Infeasible, _, Some(r)) => Err(format!(
+                "bound-tightening Infeasible but row-based found {r}"
+            )),
+            other => Err(format!("solvers disagree: {other:?}")),
         }
     });
 }
