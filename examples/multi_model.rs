@@ -8,8 +8,9 @@ use hetserve::catalog::GpuType;
 use hetserve::cloud::availability;
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::binary_search::BinarySearchOptions;
 use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::planner::plan_once;
 use hetserve::sched::SchedProblem;
 use hetserve::util::cli::Args;
 use hetserve::workload::TraceMix;
@@ -36,7 +37,8 @@ fn main() {
         &avail,
         budget,
     );
-    let (plan, stats) = solve_binary_search(&problem, &BinarySearchOptions::default());
+    let report = plan_once(&problem, &BinarySearchOptions::default());
+    let (plan, stats) = (report.plan, report.stats);
     let plan = plan.expect("no feasible multi-model plan");
     plan.validate(&problem, 1e-4).expect("invalid plan");
 

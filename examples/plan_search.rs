@@ -10,8 +10,9 @@ use hetserve::catalog::GpuType;
 use hetserve::cloud::availability;
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::binary_search::BinarySearchOptions;
 use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::planner::plan_once;
 use hetserve::sched::SchedProblem;
 use hetserve::util::bench::{cell, Table};
 use hetserve::util::cli::Args;
@@ -49,8 +50,7 @@ fn main() {
 
     for &budget in &budgets {
         let p = SchedProblem::from_profile(&profile, &mix, total_requests, &avail, budget);
-        let (ours, _) = solve_binary_search(&p, &opts);
-        let ours = ours.expect("no plan");
+        let ours = plan_once(&p, &opts).into_plan().expect("no plan");
         let thr = total_requests / ours.makespan;
 
         let homo = |gpu: GpuType| -> f64 {

@@ -7,8 +7,9 @@
 use hetserve::cloud::availability;
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::binary_search::BinarySearchOptions;
 use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::planner::{PlanRequest, Planner, PlannerSession};
 use hetserve::sched::SchedProblem;
 use hetserve::sim::{simulate_plan, SimOptions};
 use hetserve::workload::{synthesize_trace, SynthOptions, TraceMix};
@@ -31,9 +32,13 @@ fn main() {
     let budget = 30.0;
     let problem = SchedProblem::from_profile(&profile, &mix, 2000.0, &avail, budget);
 
-    // 3. Solve with binary-search-on-T (Algorithm 1).
-    let (plan, stats) = solve_binary_search(&problem, &BinarySearchOptions::default());
-    let plan = plan.expect("no feasible plan");
+    // 3. Solve with binary-search-on-T (Algorithm 1) through the unified
+    //    Planner API. A session would also carry warm solver state into
+    //    any follow-up solve on the same problem family.
+    let mut planner = PlannerSession::new(BinarySearchOptions::default());
+    let report = planner.plan(&PlanRequest::new(&problem));
+    let stats = report.stats;
+    let plan = report.plan.expect("no feasible plan");
     plan.validate(&problem, 1e-4).expect("invalid plan");
     println!(
         "plan: makespan {:.1}s  cost {:.2}$/h (budget {budget})  [{} iterations, {:?}]",

@@ -7,8 +7,9 @@ use hetserve::catalog::GpuType;
 use hetserve::cloud::availability;
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::binary_search::BinarySearchOptions;
 use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::planner::plan_once;
 use hetserve::sched::SchedProblem;
 use hetserve::util::bench::{cell, Table};
 use hetserve::util::cli::Args;
@@ -41,7 +42,7 @@ fn main() {
             &avail,
             budget,
         );
-        let (ours, _) = solve_binary_search(&p, &opts);
+        let ours = plan_once(&p, &opts).into_plan();
         let Some(ours) = ours else { continue };
         let ours_thr = n / ours.makespan;
 

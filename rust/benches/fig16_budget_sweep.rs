@@ -8,8 +8,9 @@ use hetserve::catalog::GpuType;
 use hetserve::cloud::availability;
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::binary_search::BinarySearchOptions;
 use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::planner::plan_once;
 use hetserve::sched::SchedProblem;
 use hetserve::util::bench::{cell, Table};
 use hetserve::util::cli::Args;
@@ -35,7 +36,7 @@ fn main() {
     let mut gaps = Vec::new();
     for budget in [7.5, 15.0, 30.0, 45.0, 60.0] {
         let p = SchedProblem::from_profile(&profile, &mix, n, &avail, budget);
-        let (ours, _) = solve_binary_search(&p, &opts);
+        let ours = plan_once(&p, &opts).into_plan();
         let Some(ours) = ours else { continue };
         let ours_thr = n / ours.makespan;
         let best_homo = [GpuType::H100, GpuType::A6000, GpuType::Rtx4090]

@@ -12,8 +12,9 @@ use hetserve::catalog::GpuType;
 use hetserve::cloud::availability;
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::binary_search::BinarySearchOptions;
 use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::planner::plan_once;
 use hetserve::sched::{SchedProblem, ServingPlan};
 use hetserve::sim::{simulate_plan, SimOptions};
 use hetserve::util::bench::{cell, Table};
@@ -82,7 +83,7 @@ fn main() {
         let avail = availability(*avail_idx);
         for &budget in &budgets {
             let p = SchedProblem::from_profile(&profile, mix, n as f64, &avail, budget);
-            let (ours, _) = solve_binary_search(&p, &opts);
+            let ours = plan_once(&p, &opts).into_plan();
             let Some(ours) = ours else {
                 continue;
             };

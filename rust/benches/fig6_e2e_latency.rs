@@ -9,8 +9,9 @@ use hetserve::catalog::GpuType;
 use hetserve::cloud::availability;
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::binary_search::BinarySearchOptions;
 use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::planner::plan_once;
 use hetserve::sched::{SchedProblem, ServingPlan};
 use hetserve::sim::{simulate_plan, SimOptions, SimResult};
 use hetserve::util::bench::{cell, Table};
@@ -60,8 +61,7 @@ fn main() {
     };
 
     let p = SchedProblem::from_profile(&profile, &mix, n as f64, &avail, budget);
-    let (ours, _) = solve_binary_search(&p, &opts);
-    let ours = ours.expect("plan");
+    let ours = plan_once(&p, &opts).into_plan().expect("plan");
     let ours_res = run(&p, &ours, &model, &mix, n, &perf);
 
     let mut rows: Vec<(String, SimResult)> = vec![("Ours".to_string(), ours_res)];

@@ -8,8 +8,9 @@ use hetserve::baselines::{
 use hetserve::cloud::availability;
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::binary_search::BinarySearchOptions;
 use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::planner::plan_once;
 use hetserve::sched::SchedProblem;
 use hetserve::util::bench::{cell, Table};
 use hetserve::util::cli::Args;
@@ -45,7 +46,7 @@ fn main() {
         let avail = availability(avail_idx);
         for budget in [30.0, 60.0] {
             let p = SchedProblem::from_profile(&profile, &mix, n, &avail, budget);
-            let (full, _) = solve_binary_search(&p, &opts);
+            let full = plan_once(&p, &opts).into_plan();
             let Some(full) = full else { continue };
             let thr_full = n / full.makespan;
             let cases = [

@@ -8,10 +8,9 @@ use hetserve::cloud::Availability;
 use hetserve::milp::MilpOptions;
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{
-    solve_binary_search, BinarySearchOptions, Feasibility,
-};
+use hetserve::sched::binary_search::{BinarySearchOptions, Feasibility};
 use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::planner::plan_once;
 use hetserve::sched::formulation::solve_direct;
 use hetserve::sched::SchedProblem;
 use hetserve::util::bench::{cell, Table};
@@ -87,7 +86,7 @@ fn main() {
         let milp_time = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
-        let (bs_plan, bstats) = solve_binary_search(
+        let bs_report = plan_once(
             &p,
             &BinarySearchOptions {
                 tolerance: 2.0,
@@ -95,6 +94,7 @@ fn main() {
                 ..Default::default()
             },
         );
+        let (bs_plan, bstats) = (bs_report.plan, bs_report.stats);
         let bs_time = t1.elapsed().as_secs_f64();
 
         let (Some(mp), Some(bp)) = (milp_plan, bs_plan) else {

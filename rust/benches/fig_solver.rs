@@ -1,21 +1,30 @@
 //! Solver bench: cold vs warm MILP solves on planner-shaped instances.
 //!
-//! Two workloads, both straight off the production path:
+//! Three workloads, all straight off the production path:
 //!
 //! * **binary-search sweep** — Algorithm 1 with the *exact* feasibility
 //!   oracle: every bisection iterate is a cost-minimisation MILP, the
 //!   warm run re-solves branch-and-bound nodes by dual simplex from the
 //!   incumbent basis and carries each feasible iterate as the next
 //!   check's starting incumbent; the cold run solves every node LP from
-//!   scratch (the pre-warm-start behaviour);
+//!   scratch (the pre-warm-start behaviour). Both rebuild the tableau
+//!   arena per T̂ (the PR-4 state of the world);
+//! * **session** — the same sweep through a basis-carrying
+//!   `PlannerSession`: the terminal root basis of each feasibility MILP
+//!   crash-warms the next root, across T̂ iterates and across repeated
+//!   session solves, instead of rebuilding the arena per T̂. Per-iterate
+//!   warm-hit rates come from `SearchStats::iterates`;
 //! * **direct MILP** — the §4.3 big-M formulation solved once, warm vs
 //!   cold.
 //!
 //! Emits a machine-readable `BENCH_solver.json` line with pivot counts,
-//! node counts, warm-hit rates and wall times.
+//! node counts, warm-hit rates, per-iterate session profiles, and wall
+//! times.
 //!
-//! SHAPE CHECK: the warm-started runs finish the same work with ≥2×
-//! fewer simplex pivots than cold, and no more wall time.
+//! SHAPE CHECK: (1) the warm-started runs finish the same work with ≥2×
+//! fewer simplex pivots than cold and no more wall time; (2) the
+//! basis-carrying session finishes the sweep with measurably fewer total
+//! pivots than the per-iterate cold-arena path.
 //!
 //! Flags: --model 8b|70b --budget B --tol T --quick
 
@@ -23,11 +32,10 @@ use hetserve::cloud::availability;
 use hetserve::milp::MilpOptions;
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{
-    solve_binary_search, BinarySearchOptions, Feasibility, SearchStats,
-};
+use hetserve::sched::binary_search::{BinarySearchOptions, Feasibility, SearchStats};
 use hetserve::sched::enumerate::EnumOptions;
 use hetserve::sched::formulation::solve_direct;
+use hetserve::sched::planner::{PlanRequest, Planner, PlannerSession};
 use hetserve::sched::SchedProblem;
 use hetserve::util::bench::{cell, Table};
 use hetserve::util::cli::Args;
@@ -41,8 +49,33 @@ struct Run {
     lp_solves: usize,
     nodes: usize,
     warm_hit: f64,
+    basis_roots: usize,
     wall: Duration,
     makespan: f64,
+    iterates: Vec<(f64, bool, u64, f64, bool)>, // (t_hat, feasible, pivots, warm_hit, from_basis)
+}
+
+fn run_from_stats(
+    label: &'static str,
+    stats: &SearchStats,
+    wall: Duration,
+    makespan: f64,
+) -> Run {
+    Run {
+        label,
+        pivots: stats.pivots,
+        lp_solves: stats.lp_solves,
+        nodes: stats.milp_nodes,
+        warm_hit: stats.warm_hit_rate(),
+        basis_roots: stats.basis_roots,
+        wall,
+        makespan,
+        iterates: stats
+            .iterates
+            .iter()
+            .map(|i| (i.t_hat, i.feasible, i.pivots, i.warm_hit_rate(), i.from_basis))
+            .collect(),
+    }
 }
 
 fn main() {
@@ -62,32 +95,44 @@ fn main() {
         time_limit: Duration::from_secs(if quick { 2 } else { 10 }),
         ..Default::default()
     };
+    let exact_opts = |warm: bool, carry_basis: bool| BinarySearchOptions {
+        tolerance: tol,
+        feasibility: Feasibility::Exact,
+        milp: MilpOptions {
+            warm_start: warm,
+            ..milp.clone()
+        },
+        carry_basis,
+        ..Default::default()
+    };
 
-    // ---- binary-search sweep (exact feasibility oracle) ------------------
+    // ---- binary-search sweep (exact oracle, per-T̂ arena rebuild) --------
     let sweep = |warm: bool| -> Run {
-        let opts = BinarySearchOptions {
-            tolerance: tol,
-            feasibility: Feasibility::Exact,
-            milp: MilpOptions {
-                warm_start: warm,
-                ..milp.clone()
-            },
-            ..Default::default()
-        };
+        let mut planner = PlannerSession::new(exact_opts(warm, false));
         let t0 = Instant::now();
-        let (plan, stats): (_, SearchStats) = solve_binary_search(&problem, &opts);
-        Run {
-            label: if warm { "sweep warm" } else { "sweep cold" },
-            pivots: stats.pivots,
-            lp_solves: stats.lp_solves,
-            nodes: stats.milp_nodes,
-            warm_hit: stats.warm_hit_rate(),
-            wall: t0.elapsed(),
-            makespan: plan.map(|p| p.makespan).unwrap_or(f64::NAN),
-        }
+        let report = planner.plan(&PlanRequest::new(&problem));
+        run_from_stats(
+            if warm { "sweep warm" } else { "sweep cold" },
+            &report.stats,
+            t0.elapsed(),
+            report.plan.map(|p| p.makespan).unwrap_or(f64::NAN),
+        )
     };
     let sweep_cold = sweep(false);
     let sweep_warm = sweep(true);
+
+    // ---- session (terminal basis carried across T̂ iterates) -------------
+    let session = {
+        let mut planner = PlannerSession::new(exact_opts(true, true));
+        let t0 = Instant::now();
+        let report = planner.plan(&PlanRequest::new(&problem));
+        run_from_stats(
+            "session",
+            &report.stats,
+            t0.elapsed(),
+            report.plan.map(|p| p.makespan).unwrap_or(f64::NAN),
+        )
+    };
 
     // ---- direct MILP (§4.3 big-M formulation) ----------------------------
     let direct = |warm: bool| -> Run {
@@ -103,8 +148,10 @@ fn main() {
             lp_solves: stats.lp_solves,
             nodes: stats.nodes,
             warm_hit: stats.warm_hit_rate(),
+            basis_roots: stats.basis_roots,
             wall: t0.elapsed(),
             makespan: plan.map(|p| p.makespan).unwrap_or(f64::NAN),
+            iterates: Vec::new(),
         }
     };
     let direct_cold = direct(false);
@@ -120,10 +167,11 @@ fn main() {
             if quick { " (quick)" } else { "" }
         ),
         &[
-            "run", "pivots", "LP solves", "B&B nodes", "warm hit %", "wall ms", "makespan s",
+            "run", "pivots", "LP solves", "B&B nodes", "warm hit %", "basis roots", "wall ms",
+            "makespan s",
         ],
     );
-    let runs = [&sweep_cold, &sweep_warm, &direct_cold, &direct_warm];
+    let runs = [&sweep_cold, &sweep_warm, &session, &direct_cold, &direct_warm];
     for r in runs {
         t.row(vec![
             r.label.to_string(),
@@ -131,18 +179,55 @@ fn main() {
             r.lp_solves.to_string(),
             r.nodes.to_string(),
             format!("{:.0}", r.warm_hit * 100.0),
+            r.basis_roots.to_string(),
             format!("{:.1}", r.wall.as_secs_f64() * 1e3),
             cell(r.makespan),
         ]);
     }
     t.print();
 
+    // Per-iterate warm profile of the session vs the per-T̂-arena sweep.
+    let mut it = Table::new(
+        "session per-iterate warm profile (vs per-T̂ arena rebuild)",
+        &[
+            "iterate", "T̂ s", "feasible", "session pivots", "warm hit %", "from basis",
+            "per-T̂ pivots",
+        ],
+    );
+    for (i, s) in session.iterates.iter().enumerate() {
+        let per_t = sweep_warm.iterates.get(i);
+        it.row(vec![
+            i.to_string(),
+            cell(s.0),
+            s.1.to_string(),
+            s.2.to_string(),
+            format!("{:.0}", s.3 * 100.0),
+            s.4.to_string(),
+            per_t.map(|p| p.2.to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    it.print();
+
+    let iterate_json = |r: &Run| {
+        Json::arr(r.iterates.iter().map(
+            |&(t_hat, feasible, pivots, warm_hit, from_basis)| {
+                Json::obj(vec![
+                    ("t_hat", Json::num(t_hat)),
+                    ("feasible", Json::Bool(feasible)),
+                    ("pivots", Json::num(pivots as f64)),
+                    ("warm_hit_rate", Json::num(warm_hit)),
+                    ("from_basis", Json::Bool(from_basis)),
+                ])
+            },
+        ))
+    };
     let entry = |r: &Run| {
         Json::obj(vec![
             ("pivots", Json::num(r.pivots as f64)),
             ("lp_solves", Json::num(r.lp_solves as f64)),
             ("nodes", Json::num(r.nodes as f64)),
             ("warm_hit_rate", Json::num(r.warm_hit)),
+            ("basis_roots", Json::num(r.basis_roots as f64)),
             ("wall_ms", Json::num(r.wall.as_secs_f64() * 1e3)),
             ("makespan_s", Json::num(r.makespan)),
         ])
@@ -152,6 +237,7 @@ fn main() {
     let cold_wall = sweep_cold.wall + direct_cold.wall;
     let warm_wall = sweep_warm.wall + direct_warm.wall;
     let ratio = cold_pivots as f64 / (warm_pivots.max(1)) as f64;
+    let session_ratio = sweep_warm.pivots as f64 / (session.pivots.max(1)) as f64;
     let report = Json::obj(vec![
         ("bench", Json::str("fig_solver")),
         ("model", Json::str(&model.name)),
@@ -160,9 +246,19 @@ fn main() {
         ("quick", Json::Bool(quick)),
         ("sweep_cold", entry(&sweep_cold)),
         ("sweep_warm", entry(&sweep_warm)),
+        ("session", entry(&session)),
+        ("session_iterates", iterate_json(&session)),
         ("direct_cold", entry(&direct_cold)),
         ("direct_warm", entry(&direct_warm)),
         ("pivot_ratio_cold_over_warm", Json::num(ratio)),
+        (
+            "pivot_ratio_per_iterate_over_session",
+            Json::num(session_ratio),
+        ),
+        (
+            "session_pivot_delta",
+            Json::num(sweep_warm.pivots as f64 - session.pivots as f64),
+        ),
         (
             "wall_ratio_cold_over_warm",
             Json::num(cold_wall.as_secs_f64() / warm_wall.as_secs_f64().max(1e-9)),
@@ -171,7 +267,7 @@ fn main() {
     let line = report.to_string();
     println!("BENCH_solver.json {line}");
 
-    // SHAPE CHECK: warm must do the same planning with ≥2× fewer pivots
+    // SHAPE CHECK 1: warm must do the same planning with ≥2× fewer pivots
     // and must not be slower; the sweeps must agree on the plan quality.
     let agree = (sweep_warm.makespan - sweep_cold.makespan).abs() <= tol.max(0.5)
         || (sweep_warm.makespan.is_nan() && sweep_cold.makespan.is_nan());
@@ -185,6 +281,28 @@ fn main() {
         cell(sweep_warm.makespan),
         cell(sweep_cold.makespan),
         if pivots_ok && wall_ok && agree {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+
+    // SHAPE CHECK 2: carrying the terminal basis across bisection iterates
+    // must beat rebuilding the arena per T̂ — measurably fewer total
+    // pivots at the same plan quality, with the carried roots visible.
+    let session_agree = (session.makespan - sweep_warm.makespan).abs() <= tol.max(0.5)
+        || (session.makespan.is_nan() && sweep_warm.makespan.is_nan());
+    let session_ok = (session.pivots as f64) < 0.95 * sweep_warm.pivots as f64;
+    let roots_ok = session.basis_roots > 0;
+    println!(
+        "SHAPE CHECK (session): basis-carried {} vs per-T̂ arena {} pivots ({session_ratio:.2}x), \
+         {} roots crash-warmed, makespans {} vs {} => {}",
+        session.pivots,
+        sweep_warm.pivots,
+        session.basis_roots,
+        cell(session.makespan),
+        cell(sweep_warm.makespan),
+        if session_ok && roots_ok && session_agree {
             "PASS"
         } else {
             "FAIL"

@@ -9,9 +9,10 @@ use hetserve::cloud::availability;
 use hetserve::milp::{solve, BoundedSimplex, Cmp, Lp};
 use hetserve::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::binary_search::BinarySearchOptions;
 use hetserve::sched::enumerate::EnumOptions;
 use hetserve::sched::formulation::build_direct;
+use hetserve::sched::planner::plan_once;
 use hetserve::sched::SchedProblem;
 use hetserve::sim::{simulate_plan, SimOptions};
 use hetserve::util::bench::{bench, bench_quick, black_box, report_header, BenchResult};
@@ -85,7 +86,7 @@ fn main() {
         ..Default::default()
     };
     let r = run(quick, "planner::binary_search(knapsack)", || {
-        black_box(solve_binary_search(&problem, &opts));
+        black_box(plan_once(&problem, &opts));
     });
     println!("{}", r.report());
 
@@ -118,8 +119,7 @@ fn main() {
     println!("{}", r.report());
 
     // L3: discrete-event simulator — requests/second of simulation.
-    let (plan, _) = solve_binary_search(&problem, &opts);
-    let plan = plan.unwrap();
+    let plan = plan_once(&problem, &opts).into_plan().unwrap();
     let trace = synthesize_trace(
         &mix,
         &SynthOptions {

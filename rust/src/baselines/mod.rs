@@ -1,51 +1,84 @@
 //! Baseline planners (§5.1 Baselines, Figure 7 HexGen comparison, Figure 8
-//! ablations):
+//! ablations), all implementing [`crate::sched::planner::Planner`] so the
+//! `compare` CLI, the benches, and the property tests sweep them through
+//! the same [`PlanRequest`]/[`PlanReport`] contract as the production
+//! planner:
 //!
-//! * **Homogeneous** — a single GPU type with an *unlimited* pool (the
-//!   paper's assumption for homogeneous baselines), deployment and workload
-//!   assignment still optimised by our scheduler ("we fine-tune the
-//!   deployment configurations and workload assignments using our
+//! * [`HomogeneousPlanner`] — a single GPU type with an *unlimited* pool
+//!   (the paper's assumption for homogeneous baselines), deployment and
+//!   workload assignment still optimised by our scheduler ("we fine-tune
+//!   the deployment configurations and workload assignments using our
 //!   scheduling algorithm to optimize the performance of each homogeneous
-//!   baseline");
-//! * **HexGen-like** — a *fixed* GPU composition (uniform across types
-//!   within budget, or a composition supplied by our planner), deployment
+//!   baseline"). Its plans answer a counterfactual (unlimited supply), so
+//!   they deliberately do not validate against the request's availability;
+//! * [`HexGenPlanner`] — a *fixed* GPU composition (uniform across types
+//!   within budget, or a composition supplied by the caller), deployment
 //!   optimised within it, but workload assignment *not* workload-aware:
 //!   requests are spread proportionally to aggregate replica rates;
-//! * **Ablations** — disable exactly one of the three optimisations:
+//! * [`AblationPlanner`] — disable exactly one of the three optimisations:
 //!   uniform composition, uniform deployment (TP-only, one global degree),
 //!   round-robin workload assignment.
+//!
+//! The pre-redesign free functions ([`homogeneous_plan`], [`hexgen_plan`],
+//! [`ablation_uniform_composition`], …) remain as thin wrappers over the
+//! planner impls.
 
 use crate::catalog::{GpuSpec, GpuType};
 use crate::cloud::Availability;
-use crate::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use crate::sched::binary_search::{BinarySearchOptions, SearchStats};
+use crate::sched::planner::{
+    plan_once, Infeasibility, PlanReport, PlanRequest, Planner, Provenance,
+};
 use crate::sched::{PlanEntry, SchedProblem, ServingPlan};
 
 /// Restrict a problem's candidates to one GPU type and lift availability
 /// (the paper's homogeneous setting), then run the full scheduler.
-pub fn homogeneous_plan(
-    p: &SchedProblem,
-    gpu: GpuType,
-    opts: &BinarySearchOptions,
-) -> Option<ServingPlan> {
-    let mut hp = p.clone();
-    hp.avail = Availability::unlimited().counts.to_vec();
-    let keep: Vec<bool> = p
-        .candidates
-        .iter()
-        .map(|c| {
-            c.gpu_counts
-                .iter()
-                .enumerate()
-                .all(|(n, &d)| d == 0 || n == gpu.index())
-                && c.gpu_counts[gpu.index()] > 0
-        })
-        .collect();
-    hp.candidates = filter_candidates(&hp, &keep);
-    if hp.candidates.is_empty() {
-        return None;
+pub struct HomogeneousPlanner {
+    pub gpu: GpuType,
+    pub opts: BinarySearchOptions,
+}
+
+impl Planner for HomogeneousPlanner {
+    fn name(&self) -> String {
+        format!("homogeneous-{}", self.gpu.name())
     }
-    let (plan, _) = solve_binary_search(&hp, opts);
-    plan.map(|pl| remap_plan(pl, &keep, p))
+
+    fn plan(&mut self, req: &PlanRequest) -> PlanReport {
+        let p = req.problem;
+        let provenance = Provenance::cold(self.name());
+        let mut hp = p.clone();
+        hp.avail = Availability::unlimited().counts.to_vec();
+        let keep: Vec<bool> = p
+            .candidates
+            .iter()
+            .map(|c| {
+                c.gpu_counts
+                    .iter()
+                    .enumerate()
+                    .all(|(n, &d)| d == 0 || n == self.gpu.index())
+                    && c.gpu_counts[self.gpu.index()] > 0
+            })
+            .collect();
+        hp.candidates = filter_candidates(&hp, &keep);
+        if hp.candidates.is_empty() {
+            return PlanReport::not_found(
+                Infeasibility::NoCandidates,
+                SearchStats::default(),
+                provenance,
+            );
+        }
+        let inner = plan_once(&hp, &req.effective_opts(&self.opts));
+        match inner.plan {
+            Some(plan) => {
+                PlanReport::found(remap_plan(plan, &keep, p), inner.stats, provenance)
+            }
+            None => PlanReport::not_found(
+                inner.infeasible.unwrap_or(Infeasibility::Exhausted),
+                inner.stats,
+                provenance,
+            ),
+        }
+    }
 }
 
 /// The uniform GPU composition of Figure 7/8: rent GPUs evenly across all
@@ -74,26 +107,67 @@ pub fn uniform_composition(budget: f64, avail: &Availability) -> [u32; 6] {
 /// (our scheduler restricted to the composition); workload assignment
 /// replaced with rate-proportional spreading (HexGen is "unaware of the
 /// workload heterogeneity, and only consider uniform workload assignment").
-pub fn hexgen_plan(
-    p: &SchedProblem,
-    composition: &[u32; 6],
-    opts: &BinarySearchOptions,
-) -> Option<ServingPlan> {
-    let mut hp = p.clone();
-    hp.avail = composition.to_vec();
-    // Budget is already spent on the composition: the scheduler may use all
-    // of it (cost bounded by the composition's rental price).
-    hp.budget = composition
-        .iter()
-        .enumerate()
-        .map(|(n, &k)| k as f64 * GpuSpec::of(GpuType::ALL[n]).price_per_hour)
-        .sum::<f64>()
-        + 1e-9;
-    let (plan, _) = solve_binary_search(&hp, opts)
-        ;
-    let plan = plan?;
-    // Replace the workload-aware fractions with rate-proportional ones.
-    Some(rate_proportional_assignment(&hp, plan))
+/// With no explicit composition, the Figure-7 uniform one is derived from
+/// the request's budget and availability.
+pub struct HexGenPlanner {
+    /// `None` derives the uniform composition from the request.
+    pub composition: Option<[u32; 6]>,
+    pub opts: BinarySearchOptions,
+}
+
+impl Planner for HexGenPlanner {
+    fn name(&self) -> String {
+        match self.composition {
+            Some(_) => "hexgen-fixed".to_string(),
+            None => "hexgen-uniform".to_string(),
+        }
+    }
+
+    fn plan(&mut self, req: &PlanRequest) -> PlanReport {
+        let p = req.problem;
+        let provenance = Provenance::cold(self.name());
+        if p.num_gpu_types != 6 {
+            // Compositions are defined over the 6-type cloud catalog.
+            return PlanReport::not_found(
+                Infeasibility::NoCandidates,
+                SearchStats::default(),
+                provenance,
+            );
+        }
+        let composition = self.composition.unwrap_or_else(|| {
+            uniform_composition(
+                p.budget,
+                &Availability::new([
+                    p.avail[0], p.avail[1], p.avail[2], p.avail[3], p.avail[4], p.avail[5],
+                ]),
+            )
+        });
+        let mut hp = p.clone();
+        hp.avail = composition.to_vec();
+        // Budget is already spent on the composition: the scheduler may use
+        // all of it (cost bounded by the composition's rental price).
+        hp.budget = composition
+            .iter()
+            .enumerate()
+            .map(|(n, &k)| k as f64 * GpuSpec::of(GpuType::ALL[n]).price_per_hour)
+            .sum::<f64>()
+            + 1e-9;
+        let inner = plan_once(&hp, &req.effective_opts(&self.opts));
+        match inner.plan {
+            // Replace the workload-aware fractions with rate-proportional
+            // ones.
+            Some(plan) => PlanReport::found(
+                rate_proportional_assignment(&hp, plan),
+                inner.stats,
+                provenance,
+            ),
+            None => PlanReport::not_found(
+                inner.infeasible.unwrap_or(Infeasibility::Exhausted),
+                inner.stats,
+                provenance,
+            ),
+        }
+    }
 }
 
 /// Re-assign workload fractions proportionally to each entry's aggregate
@@ -131,95 +205,249 @@ pub fn rate_proportional_assignment(p: &SchedProblem, plan: ServingPlan) -> Serv
     out
 }
 
-/// Ablation (i): uniform GPU composition, everything else optimised.
+/// Which single optimisation a Figure-8 ablation disables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ablation {
+    /// (i) uniform GPU composition, everything else optimised.
+    UniformComposition,
+    /// (ii) uniform deployment configuration — "TP is uniformly applied
+    /// across all replicas": every replica is a single-stage full-node TP
+    /// group, regardless of model, workload, or GPU type.
+    UniformDeployment,
+    /// (iii) round-robin request assignment — composition and deployment
+    /// from the full planner, fractions replaced by replica-count-
+    /// proportional spreading.
+    RoundRobin,
+}
+
+impl Ablation {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Ablation::UniformComposition => "ablation-uniform-comp",
+            Ablation::UniformDeployment => "ablation-uniform-deploy",
+            Ablation::RoundRobin => "ablation-round-robin",
+        }
+    }
+}
+
+/// A Figure-8 ablation as a [`Planner`].
+pub struct AblationPlanner {
+    pub kind: Ablation,
+    pub opts: BinarySearchOptions,
+}
+
+impl Planner for AblationPlanner {
+    fn name(&self) -> String {
+        self.kind.label().to_string()
+    }
+
+    fn plan(&mut self, req: &PlanRequest) -> PlanReport {
+        let p = req.problem;
+        let provenance = Provenance::cold(self.name());
+        let opts = req.effective_opts(&self.opts);
+        let empty = |reason| {
+            PlanReport::not_found(reason, SearchStats::default(), Provenance::cold(self.name()))
+        };
+        match self.kind {
+            Ablation::UniformComposition => {
+                if p.num_gpu_types != 6 {
+                    return empty(Infeasibility::NoCandidates);
+                }
+                let avail = Availability::new(uniform_composition(
+                    p.budget,
+                    &Availability::new([
+                        p.avail[0], p.avail[1], p.avail[2], p.avail[3], p.avail[4], p.avail[5],
+                    ]),
+                ));
+                let mut hp = p.clone();
+                hp.avail = avail.counts.to_vec();
+                let inner = plan_once(&hp, &opts);
+                PlanReport {
+                    provenance,
+                    ..inner
+                }
+            }
+            Ablation::UniformDeployment => {
+                let keep: Vec<bool> = p
+                    .candidates
+                    .iter()
+                    .map(|c| match &c.replica {
+                        Some(r) => {
+                            r.pp() == 1
+                                && r.is_homogeneous()
+                                && r.stages[0].tp
+                                    == GpuSpec::of(r.stages[0].gpu).max_gpus_per_node.min(8)
+                        }
+                        None => false,
+                    })
+                    .collect();
+                if !keep.iter().any(|&k| k) {
+                    return empty(Infeasibility::NoCandidates);
+                }
+                let mut hp = p.clone();
+                hp.candidates = filter_candidates(&hp, &keep);
+                let servable =
+                    (0..p.demands.len()).all(|m| hp.candidates.iter().any(|c| c.model == m));
+                if !servable {
+                    return empty(Infeasibility::NoCandidates);
+                }
+                let inner = plan_once(&hp, &opts);
+                match inner.plan {
+                    Some(plan) => PlanReport::found(
+                        remap_plan(plan, &keep, p),
+                        inner.stats,
+                        provenance,
+                    ),
+                    None => PlanReport::not_found(
+                        inner.infeasible.unwrap_or(Infeasibility::Exhausted),
+                        inner.stats,
+                        provenance,
+                    ),
+                }
+            }
+            Ablation::RoundRobin => {
+                let inner = plan_once(p, &opts);
+                let Some(plan) = inner.plan else {
+                    return PlanReport::not_found(
+                        inner.infeasible.unwrap_or(Infeasibility::Exhausted),
+                        inner.stats,
+                        provenance,
+                    );
+                };
+                let mut entries = plan.entries;
+                let nw = p.demands.iter().map(|d| d.len()).max().unwrap_or(0);
+                for m in 0..p.demands.len() {
+                    let total_replicas: u32 = entries
+                        .iter()
+                        .filter(|e| p.candidates[e.candidate].model == m)
+                        .map(|e| e.replicas)
+                        .sum();
+                    if total_replicas == 0 {
+                        continue;
+                    }
+                    for w in 0..nw {
+                        if p.demands[m].get(w).copied().unwrap_or(0.0) <= 0.0 {
+                            continue;
+                        }
+                        for e in entries.iter_mut() {
+                            let c = &p.candidates[e.candidate];
+                            if c.model == m {
+                                e.fractions[w] =
+                                    e.replicas as f64 / total_replicas as f64;
+                            }
+                        }
+                    }
+                }
+                let mut out = ServingPlan {
+                    entries,
+                    makespan: 0.0,
+                };
+                out.makespan = out.evaluate_makespan(p);
+                PlanReport::found(out, inner.stats, provenance)
+            }
+        }
+    }
+}
+
+/// Every baseline strategy (plus the production bisection) as boxed
+/// [`Planner`]s — the `compare` subcommand and the trait-level property
+/// test sweep this registry.
+pub fn all_planners(opts: &BinarySearchOptions) -> Vec<Box<dyn Planner>> {
+    let mut planners: Vec<Box<dyn Planner>> = vec![Box::new(
+        crate::sched::planner::BisectionPlanner::new(opts.clone()),
+    )];
+    for gpu in [GpuType::H100, GpuType::A6000, GpuType::Rtx4090] {
+        planners.push(Box::new(HomogeneousPlanner {
+            gpu,
+            opts: opts.clone(),
+        }));
+    }
+    planners.push(Box::new(HexGenPlanner {
+        composition: None,
+        opts: opts.clone(),
+    }));
+    for kind in [
+        Ablation::UniformComposition,
+        Ablation::UniformDeployment,
+        Ablation::RoundRobin,
+    ] {
+        planners.push(Box::new(AblationPlanner {
+            kind,
+            opts: opts.clone(),
+        }));
+    }
+    planners
+}
+
+// ---- pre-redesign free-function wrappers ------------------------------------
+
+/// Homogeneous baseline as a one-shot call (wrapper over
+/// [`HomogeneousPlanner`]).
+pub fn homogeneous_plan(
+    p: &SchedProblem,
+    gpu: GpuType,
+    opts: &BinarySearchOptions,
+) -> Option<ServingPlan> {
+    HomogeneousPlanner {
+        gpu,
+        opts: opts.clone(),
+    }
+    .plan(&PlanRequest::new(p))
+    .into_plan()
+}
+
+/// HexGen-like baseline as a one-shot call (wrapper over
+/// [`HexGenPlanner`]).
+pub fn hexgen_plan(
+    p: &SchedProblem,
+    composition: &[u32; 6],
+    opts: &BinarySearchOptions,
+) -> Option<ServingPlan> {
+    HexGenPlanner {
+        composition: Some(*composition),
+        opts: opts.clone(),
+    }
+    .plan(&PlanRequest::new(p))
+    .into_plan()
+}
+
+/// Ablation (i) as a one-shot call (wrapper over [`AblationPlanner`]).
 pub fn ablation_uniform_composition(
     p: &SchedProblem,
     opts: &BinarySearchOptions,
 ) -> Option<ServingPlan> {
-    let avail = Availability::new(uniform_composition(
-        p.budget,
-        &Availability::new([
-            p.avail[0], p.avail[1], p.avail[2], p.avail[3], p.avail[4], p.avail[5],
-        ]),
-    ));
-    let mut hp = p.clone();
-    hp.avail = avail.counts.to_vec();
-    let (plan, _) = solve_binary_search(&hp, opts);
-    plan
+    AblationPlanner {
+        kind: Ablation::UniformComposition,
+        opts: opts.clone(),
+    }
+    .plan(&PlanRequest::new(p))
+    .into_plan()
 }
 
-/// Ablation (ii): uniform deployment configuration — "TP is uniformly
-/// applied across all replicas" (Figure 8): every replica is a single-stage
-/// full-node TP group (tp = the GPU's node size), regardless of model,
-/// workload, or GPU type. No per-replica deployment optimisation.
+/// Ablation (ii) as a one-shot call (wrapper over [`AblationPlanner`]).
 pub fn ablation_uniform_deployment(
     p: &SchedProblem,
     opts: &BinarySearchOptions,
 ) -> Option<ServingPlan> {
-    let keep: Vec<bool> = p
-        .candidates
-        .iter()
-        .map(|c| match &c.replica {
-            Some(r) => {
-                r.pp() == 1
-                    && r.is_homogeneous()
-                    && r.stages[0].tp
-                        == GpuSpec::of(r.stages[0].gpu).max_gpus_per_node.min(8)
-            }
-            None => false,
-        })
-        .collect();
-    if !keep.iter().any(|&k| k) {
-        return None;
+    AblationPlanner {
+        kind: Ablation::UniformDeployment,
+        opts: opts.clone(),
     }
-    let mut hp = p.clone();
-    hp.candidates = filter_candidates(&hp, &keep);
-    let servable = (0..p.demands.len()).all(|m| hp.candidates.iter().any(|c| c.model == m));
-    if !servable {
-        return None;
-    }
-    let (plan, _) = solve_binary_search(&hp, opts);
-    plan.map(|pl| remap_plan(pl, &keep, p))
+    .plan(&PlanRequest::new(p))
+    .into_plan()
 }
 
-/// Ablation (iii): round-robin request assignment — composition and
-/// deployment from the full planner, fractions replaced by replica-count-
-/// proportional spreading (every replica receives the same request mix).
+/// Ablation (iii) as a one-shot call (wrapper over [`AblationPlanner`]).
 pub fn ablation_round_robin(
     p: &SchedProblem,
     opts: &BinarySearchOptions,
 ) -> Option<ServingPlan> {
-    let (plan, _) = solve_binary_search(p, opts);
-    let plan = plan?;
-    let mut entries = plan.entries;
-    let nw = p.demands.iter().map(|d| d.len()).max().unwrap_or(0);
-    for m in 0..p.demands.len() {
-        let total_replicas: u32 = entries
-            .iter()
-            .filter(|e| p.candidates[e.candidate].model == m)
-            .map(|e| e.replicas)
-            .sum();
-        if total_replicas == 0 {
-            continue;
-        }
-        for w in 0..nw {
-            if p.demands[m].get(w).copied().unwrap_or(0.0) <= 0.0 {
-                continue;
-            }
-            for e in entries.iter_mut() {
-                let c = &p.candidates[e.candidate];
-                if c.model == m {
-                    e.fractions[w] = e.replicas as f64 / total_replicas as f64;
-                }
-            }
-        }
+    AblationPlanner {
+        kind: Ablation::RoundRobin,
+        opts: opts.clone(),
     }
-    let mut out = ServingPlan {
-        entries,
-        makespan: 0.0,
-    };
-    out.makespan = out.evaluate_makespan(p);
-    Some(out)
+    .plan(&PlanRequest::new(p))
+    .into_plan()
 }
 
 // ---- helpers ----------------------------------------------------------------
@@ -287,13 +515,16 @@ mod tests {
         }
     }
 
+    fn ours(p: &SchedProblem) -> ServingPlan {
+        plan_once(p, &opts()).into_plan().expect("our plan")
+    }
+
     #[test]
     fn ours_beats_every_homogeneous_baseline() {
         // The paper's headline: the heterogeneous plan outperforms H100,
         // A6000, and 4090 homogeneous setups at the same budget.
         let p = problem(30.0);
-        let (ours, _) = solve_binary_search(&p, &opts());
-        let ours = ours.unwrap();
+        let ours = ours(&p);
         for gpu in [GpuType::H100, GpuType::A6000] {
             let homo = homogeneous_plan(&p, gpu, &opts()).unwrap();
             assert!(
@@ -330,8 +561,7 @@ mod tests {
     #[test]
     fn hexgen_uniform_worse_than_ours() {
         let p = problem(30.0);
-        let (ours, _) = solve_binary_search(&p, &opts());
-        let ours = ours.unwrap();
+        let ours = ours(&p);
         let comp = uniform_composition(30.0, &availability(1));
         let hex = hexgen_plan(&p, &comp, &opts()).unwrap();
         assert!(
@@ -347,8 +577,7 @@ mod tests {
         // Figure 7 second bar: HexGen with the optimal composition still
         // loses because assignment is rate-proportional, not workload-aware.
         let p = problem(30.0);
-        let (ours, _) = solve_binary_search(&p, &opts());
-        let ours = ours.unwrap();
+        let ours = ours(&p);
         let comp_vec = ours.gpus_used(&p);
         let comp = [
             comp_vec[0], comp_vec[1], comp_vec[2], comp_vec[3], comp_vec[4], comp_vec[5],
@@ -365,8 +594,7 @@ mod tests {
     #[test]
     fn ablations_degrade_or_match() {
         let p = problem(30.0);
-        let (ours, _) = solve_binary_search(&p, &opts());
-        let ours = ours.unwrap();
+        let ours = ours(&p);
         let cases: Vec<(&str, Option<ServingPlan>)> = vec![
             ("uniform-comp", ablation_uniform_composition(&p, &opts())),
             ("uniform-deploy", ablation_uniform_deployment(&p, &opts())),
@@ -394,5 +622,25 @@ mod tests {
             let cover: f64 = plan.entries.iter().map(|e| e.fractions[w]).sum();
             assert!((cover - 1.0).abs() < 1e-6, "w{w} cover={cover}");
         }
+    }
+
+    #[test]
+    fn planner_registry_covers_every_strategy_with_provenance() {
+        let p = problem(30.0);
+        let mut seen = Vec::new();
+        for planner in all_planners(&opts()).iter_mut() {
+            let report = planner.plan(&PlanRequest::new(&p));
+            assert_eq!(report.provenance.strategy, planner.name());
+            assert!(
+                report.plan.is_some() != report.infeasible.is_some(),
+                "{}: exactly one of plan/infeasible must be set",
+                planner.name()
+            );
+            seen.push(planner.name());
+        }
+        assert!(seen.contains(&"bisection".to_string()));
+        assert!(seen.contains(&"hexgen-uniform".to_string()));
+        assert!(seen.iter().any(|n| n.starts_with("homogeneous-")));
+        assert!(seen.iter().any(|n| n.starts_with("ablation-")));
     }
 }

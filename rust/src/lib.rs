@@ -16,14 +16,21 @@
 //! * [`perf_model`] — analytical roofline model replacing real-GPU profiling
 //! * [`profiler`] — `h_{c,w}` throughput tables for the scheduler
 //! * [`milp`] — from-scratch MILP solver: bounded-variable simplex arena
-//!   with dual-simplex warm starts, branch & bound whose branches are
+//!   with dual-simplex warm starts, basis snapshots that crash-warm the
+//!   next structurally identical solve, branch & bound whose branches are
 //!   pure bound tightenings (see `milp/README.md`)
-//! * [`sched`] — the paper's scheduling algorithm (§4.3, App D–G)
-//! * [`baselines`] — homogeneous / HexGen-like / ablation planners
+//! * [`sched`] — the paper's scheduling algorithm (§4.3, App D–G), topped
+//!   by [`sched::planner`]: the unified planning surface — one `Planner`
+//!   trait and `PlanRequest`/`PlanReport` contract for every strategy,
+//!   with the stateful `PlannerSession` carrying warm solver state
+//!   (incumbent plan + terminal MILP basis) across bisection iterates,
+//!   replan epochs, and baseline sweeps
+//! * [`baselines`] — homogeneous / HexGen-like / ablation planners, all
+//!   `sched::planner::Planner` impls behind one registry
 //! * [`orchestrator`] — online replanning over the drifting *world*
 //!   (supply and demand): plan-diff engine, two-axis drift thresholds,
-//!   assignment-LP fast path, incremental/escalating replanner, epoch
-//!   timeline
+//!   assignment-LP fast path, incremental/escalating replanner composed
+//!   over a `PlannerSession`, epoch timeline
 //! * [`sim`] — discrete-event cluster simulator executing serving plans,
 //!   including time-varying timelines with mid-trace plan transitions and
 //!   the closed demand loop (estimator-driven replanning)

@@ -4,12 +4,13 @@
 //!   plan        — compute the cost-optimal serving plan (§4)
 //!   simulate    — run a plan through the discrete-event cluster simulator
 //!   orchestrate — online replanning over a fluctuating market + timeline sim
+//!   compare     — sweep every `Planner` (ours + all baselines) on one problem
 //!   serve       — real serving on the PJRT engine (AOT artifacts required)
 //!   profile     — print the h_{c,w} throughput table (one-time profiling)
 //!   market      — print a Figure 2-style availability series
 //!   help        — this text
 
-use hetserve::baselines::homogeneous_plan;
+use hetserve::baselines::{all_planners, homogeneous_plan};
 use hetserve::catalog::GpuType;
 use hetserve::cloud::{availability, MarketEvent, MarketEventKind, MarketEventStream, MarketSim};
 use hetserve::coordinator::{serve, synth_requests, RouterPolicy, ServerOptions};
@@ -17,8 +18,9 @@ use hetserve::orchestrator::{OrchestratorOptions, ReplanStrategy};
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
 use hetserve::runtime::{default_artifacts_dir, Engine};
-use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions, Feasibility};
+use hetserve::sched::binary_search::{BinarySearchOptions, Feasibility};
 use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::planner::{PlanRequest, Planner, PlannerSession};
 use hetserve::sched::SchedProblem;
 use hetserve::sim::{
     run_closed_loop, simulate_plan, ClosedLoopOptions, DemandMode, SimOptions, TimelineOptions,
@@ -42,6 +44,7 @@ USAGE: hetserve <subcommand> [--options]
               [--demand oracle|estimated|static] [--demand-drift T]
               [--shift-to TRACE|r1,..,r9] [--rate-end RPS]
               [--shift-start FRAC] [--shift-end FRAC]
+  compare     (plan options) — ours vs every baseline planner, one table
   serve       --requests 48 --replicas 2 --router jsq|rr [--arrival-rate RPS]
   profile     --model 70b
   market      --ticks 96 --seed 7
@@ -56,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         Some("plan") => cmd_plan(&args, false),
         Some("simulate") => cmd_plan(&args, true),
         Some("orchestrate") => cmd_orchestrate(&args),
+        Some("compare") => cmd_compare(&args),
         Some("serve") => cmd_serve(&args),
         Some("profile") => cmd_profile(&args),
         Some("market") => cmd_market(&args),
@@ -78,19 +82,30 @@ fn build_problem(args: &Args) -> (ModelSpec, PerfModel, Profile, TraceMix, Sched
     (model, perf, profile, mix, problem)
 }
 
-fn cmd_plan(args: &Args, run_sim: bool) -> anyhow::Result<()> {
-    let (model, perf, _profile, mix, problem) = build_problem(args);
-    let opts = BinarySearchOptions {
+fn search_opts(args: &Args) -> BinarySearchOptions {
+    BinarySearchOptions {
         feasibility: if args.flag("exact") {
             Feasibility::Exact
         } else {
             Feasibility::Knapsack
         },
         ..Default::default()
-    };
-    let (plan, stats) = solve_binary_search(&problem, &opts);
-    let Some(plan) = plan else {
-        anyhow::bail!("no feasible plan under these constraints");
+    }
+}
+
+fn cmd_plan(args: &Args, run_sim: bool) -> anyhow::Result<()> {
+    let (model, perf, _profile, mix, problem) = build_problem(args);
+    let opts = search_opts(args);
+    let mut planner = PlannerSession::new(opts.clone());
+    let report = planner.plan(&PlanRequest::new(&problem));
+    let stats = &report.stats;
+    let Some(plan) = &report.plan else {
+        anyhow::bail!(
+            "no feasible plan under these constraints: {}",
+            report
+                .infeasible
+                .expect("infeasible report carries a reason")
+        );
     };
     plan.validate(&problem, 1e-4).map_err(|e| anyhow::anyhow!(e))?;
     println!(
@@ -162,6 +177,78 @@ fn cmd_plan(args: &Args, run_sim: bool) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Sweep the production planner and every baseline over one problem
+/// through the uniform `Planner` contract, printing makespan, cost, and
+/// solver effort per strategy — including structured infeasibility
+/// reasons for strategies that decline the problem.
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let (model, _perf, _profile, mix, problem) = build_problem(args);
+    let opts = search_opts(args);
+    let mut t = Table::new(
+        &format!(
+            "compare — {} on {} (budget {} $/h)",
+            model.name, mix.name, problem.budget
+        ),
+        &[
+            "planner", "makespan s", "cost $/h", "GPUs", "LPs", "pivots", "outcome",
+        ],
+    );
+    let mut ours: Option<f64> = None;
+    for planner in all_planners(&opts).iter_mut() {
+        let report = planner.plan(&PlanRequest::new(&problem));
+        let name = report.provenance.strategy.clone();
+        match &report.plan {
+            Some(plan) => {
+                if name == "bisection" {
+                    ours = Some(plan.makespan);
+                }
+                let vs = if name == "bisection" {
+                    "reference".to_string()
+                } else {
+                    match ours {
+                        Some(best) => {
+                            format!("{:+.1}% vs ours", (plan.makespan / best - 1.0) * 100.0)
+                        }
+                        // The production planner found nothing to compare
+                        // against (e.g. it is availability-bound while a
+                        // counterfactual baseline is not).
+                        None => "no reference".to_string(),
+                    }
+                };
+                t.row(vec![
+                    name,
+                    cell(plan.makespan),
+                    cell(plan.cost(&problem)),
+                    plan.gpus_used(&problem)
+                        .iter()
+                        .map(|u| u.to_string())
+                        .collect::<Vec<_>>()
+                        .join(","),
+                    report.stats.lp_solves.to_string(),
+                    report.stats.pivots.to_string(),
+                    vs,
+                ]);
+            }
+            None => {
+                let reason = report
+                    .infeasible
+                    .expect("infeasible report carries a reason");
+                t.row(vec![
+                    name,
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    report.stats.lp_solves.to_string(),
+                    report.stats.pivots.to_string(),
+                    format!("infeasible: {reason}"),
+                ]);
+            }
+        }
+    }
+    t.print();
+    Ok(())
+}
+
 /// Parse `--shift-to`: a trace name (`trace3`) or nine comma-separated
 /// ratios (renormalised, so FP-rough CLI input is fine).
 fn parse_shift_target(args: &Args) -> anyhow::Result<Option<TraceMix>> {
@@ -197,8 +284,8 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
     let rate = args.get_f64("rate", 2.0);
     let rate_end = args.get_f64("rate-end", rate);
     let slo_s = args.get_f64("slo", 120.0);
-    let strategy = ReplanStrategy::by_name(args.get_or("strategy", "escalate"))
-        .expect("unknown --strategy (static|incremental|full|escalate[:T])");
+    let strategy = ReplanStrategy::parse(args.get_or("strategy", "escalate"))
+        .map_err(|e| anyhow::anyhow!("--strategy: {e}"))?;
     let mode = DemandMode::by_name(args.get_or("demand", "estimated"))
         .expect("unknown --demand (oracle|estimated|static)");
     let demand_threshold = args.demand_drift(0.15);

@@ -41,6 +41,35 @@ pub enum SolveOutcome {
     Stalled,
 }
 
+/// A portable basis: which column is basic in each row, and which nonbasic
+/// columns rest at their upper bound. Exported from one arena's optimum
+/// ([`BoundedSimplex::snapshot`]) and crashed into another arena over a
+/// *structurally identical* problem ([`BoundedSimplex::solve_warm_from`])
+/// whose coefficients moved — the next bisection iterate's T̂, the next
+/// replan epoch's demands/prices. The snapshot carries no tableau numbers,
+/// only combinatorial state, so it stays valid across coefficient changes;
+/// the dimensions pin the structure and a mismatch refuses the import.
+#[derive(Clone, Debug)]
+pub struct BasisSnapshot {
+    n: usize,
+    m: usize,
+    total: usize,
+    basis: Vec<usize>,
+    flipped: Vec<bool>,
+}
+
+impl BasisSnapshot {
+    /// Number of structural variables of the problem this basis came from.
+    pub fn num_vars(&self) -> usize {
+        self.n
+    }
+
+    /// Number of constraint rows of the problem this basis came from.
+    pub fn num_rows(&self) -> usize {
+        self.m
+    }
+}
+
 /// The tableau arena: built once per problem, re-solved many times under
 /// changing variable bounds.
 pub struct BoundedSimplex {
@@ -580,6 +609,140 @@ impl BoundedSimplex {
         SolveOutcome::Stalled
     }
 
+    // ---- basis snapshots (cross-solve warm starts) -----------------------
+
+    /// Export the incumbent basis for a later [`solve_warm_from`] on a
+    /// structurally identical problem. Only an optimal basis is worth
+    /// carrying, so this returns `None` unless the arena is at a dual
+    /// feasible optimum (`dual_ready`).
+    ///
+    /// [`solve_warm_from`]: Self::solve_warm_from
+    pub fn snapshot(&self) -> Option<BasisSnapshot> {
+        if !self.dual_ready {
+            return None;
+        }
+        Some(BasisSnapshot {
+            n: self.n,
+            m: self.m,
+            total: self.total,
+            basis: self.basis.clone(),
+            flipped: self.flipped.clone(),
+        })
+    }
+
+    /// Solve by crashing a carried basis into a fresh tableau instead of
+    /// the two-phase cold start: rebuild at the current bounds, restore the
+    /// snapshot's resting bounds and basic set by direct elimination, then
+    /// finish with whichever simplex the restored point admits — primal
+    /// when the basis is still primal feasible, dual when only the reduced
+    /// costs survived the coefficient change. Returns `None` when the
+    /// snapshot cannot be applied (structural mismatch, a flip onto an
+    /// infinite bound, or a basis that is neither primal nor dual feasible
+    /// after the crash) — the caller falls back to [`solve_cold`].
+    ///
+    /// The crash skips phase 1 entirely: artificial columns are frozen at
+    /// range zero, and any row the crash could not cover stays on its
+    /// artificial, which the feasibility classification then treats like
+    /// any other out-of-range basic variable.
+    ///
+    /// [`solve_cold`]: Self::solve_cold
+    pub fn solve_warm_from(&mut self, snap: &BasisSnapshot) -> Option<SolveOutcome> {
+        if snap.n != self.n || snap.m != self.m || snap.total != self.total {
+            return None;
+        }
+        self.rebuild();
+        // Restore resting bounds while every structural column is still
+        // nonbasic: a flip onto an infinite range is unrepresentable, so
+        // the whole snapshot is refused rather than half-applied.
+        for j in 0..self.n {
+            if snap.flipped[j] {
+                if !self.range[j].is_finite() {
+                    return None;
+                }
+                self.flip_column(j);
+            }
+        }
+        for j in self.n..self.total {
+            if snap.flipped[j] {
+                return None; // slacks/artificials have no upper bound
+            }
+        }
+        // Crash the basic set in. Rows whose slack the snapshot keeps basic
+        // are already in place; for the rest, eliminate the snapshot column
+        // into the row with the largest pivot magnitude among rows whose
+        // current basic variable is *not* wanted (stability over speed —
+        // each crash pivot is a full tableau elimination either way).
+        let mut wanted = vec![false; self.total];
+        for &b in &snap.basis {
+            if b < self.art_base {
+                wanted[b] = true;
+            }
+        }
+        for &j in &snap.basis {
+            if j >= self.art_base || self.basic_row_of(j).is_some() {
+                continue;
+            }
+            let mut pr = usize::MAX;
+            let mut best = PIVOT_EPS;
+            for r in 0..self.m {
+                if wanted[self.basis[r]] {
+                    continue;
+                }
+                let a = self.at(r, j).abs();
+                if a > best {
+                    best = a;
+                    pr = r;
+                }
+            }
+            if pr == usize::MAX {
+                continue; // singular direction: partial crash is fine
+            }
+            self.pivot(pr, j);
+        }
+        // Phase 1 never ran: freeze every artificial so it can only leave.
+        for j in self.art_base..self.total {
+            self.range[j] = 0.0;
+        }
+        // Phase-2 objective row over the crashed basis.
+        let mrow = self.m;
+        for j in 0..self.cols {
+            self.set(mrow, j, 0.0);
+        }
+        for j in 0..self.n {
+            let c = self.lp.objective[j];
+            self.set(mrow, j, if self.flipped[j] { -c } else { c });
+        }
+        for r in 0..self.m {
+            let b = self.basis[r];
+            let coef = self.at(mrow, b);
+            if coef.abs() > EPS {
+                for j in 0..self.cols {
+                    let v = self.at(mrow, j) - coef * self.at(r, j);
+                    self.set(mrow, j, v);
+                }
+            }
+        }
+        // Classify the restored point and finish with the matching method.
+        let primal_ok = (0..self.m).all(|r| {
+            let v = self.at(r, self.total);
+            let rb = self.range[self.basis[r]];
+            v >= -FEAS_EPS && v <= rb + FEAS_EPS
+        });
+        if primal_ok {
+            let max_iters = self.max_iters();
+            let out = self.run_primal(max_iters);
+            self.dual_ready = out == SolveOutcome::Optimal;
+            return Some(out);
+        }
+        let dual_ok = (0..self.total)
+            .all(|j| self.range[j] <= EPS || self.at(mrow, j) >= -PIVOT_EPS);
+        if dual_ok {
+            self.dual_ready = true;
+            return Some(self.resolve_dual());
+        }
+        None
+    }
+
     // ---- extraction ------------------------------------------------------
 
     /// The structural solution and its objective value under the original
@@ -722,6 +885,116 @@ mod tests {
         s.set_var_bounds(0, 0.0, f64::INFINITY);
         s.set_var_bounds(1, 0.0, f64::INFINITY);
         assert_eq!(s.resolve_dual(), SolveOutcome::Optimal);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_identical_problem() {
+        // Crash-warming an arena on the *same* problem must land on the
+        // same optimum, and the snapshot requires an optimal basis.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 2.0);
+        lp.set_objective(1, 3.0);
+        lp.set_bounds(1, 0.0, 3.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Ge, 4.0);
+        let fresh = BoundedSimplex::new(&lp);
+        assert!(fresh.snapshot().is_none(), "unsolved arena has no basis");
+        let (s, obj) = cold(&lp);
+        let snap = s.snapshot().expect("optimal basis");
+        assert_eq!(snap.num_vars(), 2);
+        let mut s2 = BoundedSimplex::new(&lp);
+        let out = s2.solve_warm_from(&snap).expect("crash applies");
+        assert_eq!(out, SolveOutcome::Optimal);
+        let (_, obj2) = s2.extract();
+        assert!((obj - obj2).abs() < 1e-9, "{obj} vs {obj2}");
+    }
+
+    #[test]
+    fn snapshot_refuses_structural_mismatch() {
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Ge, 2.0);
+        let (s, _) = cold(&lp);
+        let snap = s.snapshot().unwrap();
+        let mut other = Lp::new(3);
+        other.set_objective(0, 1.0);
+        other.add(vec![(0, 1.0), (1, 1.0), (2, 1.0)], Cmp::Ge, 2.0);
+        let mut arena = BoundedSimplex::new(&other);
+        assert!(arena.solve_warm_from(&snap).is_none());
+    }
+
+    #[test]
+    fn randomized_crash_warm_matches_cold_under_coefficient_drift() {
+        // The cross-solve scenario: same structure, perturbed coefficients
+        // and RHS (a moved T̂ / re-priced epoch). The crash-warmed solve
+        // must agree with a cold solve on the perturbed problem whenever it
+        // applies, and must never misreport feasibility.
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(0xC4A5);
+        let mut applied = 0usize;
+        for case in 0..60 {
+            let n = 3 + rng.index(4);
+            let m = 2 + rng.index(4);
+            let mut lp = Lp::new(n);
+            for j in 0..n {
+                lp.set_objective(j, rng.range_f64(0.1, 3.0));
+                if rng.index(2) == 0 {
+                    lp.set_bounds(j, 0.0, rng.range_f64(1.0, 6.0));
+                }
+            }
+            let mut rows: Vec<(Vec<(usize, f64)>, Cmp, f64)> = Vec::new();
+            for _ in 0..m {
+                let terms: Vec<(usize, f64)> =
+                    (0..n).map(|j| (j, rng.range_f64(0.1, 2.0))).collect();
+                let cmp = match rng.index(3) {
+                    0 => Cmp::Le,
+                    1 => Cmp::Eq,
+                    _ => Cmp::Ge,
+                };
+                rows.push((terms, cmp, rng.range_f64(1.0, 5.0)));
+            }
+            for (terms, cmp, rhs) in &rows {
+                lp.add(terms.clone(), *cmp, *rhs);
+            }
+            let mut s = BoundedSimplex::new(&lp);
+            if s.solve_cold() != SolveOutcome::Optimal {
+                continue;
+            }
+            let snap = s.snapshot().unwrap();
+            // Perturb every coefficient by up to ±10% (same sparsity).
+            let mut lp2 = Lp::new(n);
+            for j in 0..n {
+                lp2.set_objective(j, lp.objective[j]);
+                lp2.set_bounds(j, lp.lower[j], lp.upper[j]);
+            }
+            for (terms, cmp, rhs) in &rows {
+                let terms2: Vec<(usize, f64)> = terms
+                    .iter()
+                    .map(|&(j, c)| (j, c * rng.range_f64(0.9, 1.1)))
+                    .collect();
+                lp2.add(terms2, *cmp, rhs * rng.range_f64(0.9, 1.1));
+            }
+            let mut warm_arena = BoundedSimplex::new(&lp2);
+            let warm = warm_arena.solve_warm_from(&snap);
+            let mut cold_arena = BoundedSimplex::new(&lp2);
+            let reference = cold_arena.solve_cold();
+            match (warm, reference) {
+                (Some(SolveOutcome::Optimal), SolveOutcome::Optimal) => {
+                    applied += 1;
+                    let (_, a) = warm_arena.extract();
+                    let (_, b) = cold_arena.extract();
+                    assert!(
+                        (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0),
+                        "case {case}: crash-warm {a} vs cold {b}"
+                    );
+                }
+                (Some(SolveOutcome::Infeasible), SolveOutcome::Infeasible) => {}
+                // A refused or inconclusive crash is always allowed — the
+                // caller re-solves cold. A *wrong* verdict is not.
+                (None | Some(SolveOutcome::Stalled), _) => {}
+                (w, c) => panic!("case {case}: crash-warm {w:?} vs cold {c:?}"),
+            }
+        }
+        assert!(applied >= 10, "crash warm almost never applied ({applied})");
     }
 
     #[test]

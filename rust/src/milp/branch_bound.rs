@@ -25,7 +25,7 @@
 //! against). `MilpStats` reports pivots and the warm/cold solve split so
 //! callers can see the warm path is actually taken.
 
-use super::bounds::{BoundedSimplex, SolveOutcome};
+use super::bounds::{BasisSnapshot, BoundedSimplex, SolveOutcome};
 use super::simplex::Lp;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -99,6 +99,9 @@ pub struct MilpStats {
     pub warm_solves: usize,
     /// Node LPs solved cold (two-phase primal from scratch).
     pub cold_solves: usize,
+    /// Root LPs served by crashing a basis carried in from a *previous*
+    /// solve ([`solve_milp_session`]) instead of a cold two-phase start.
+    pub basis_roots: usize,
     pub elapsed: Duration,
 }
 
@@ -119,6 +122,7 @@ impl MilpStats {
         self.pivots += other.pivots;
         self.warm_solves += other.warm_solves;
         self.cold_solves += other.cold_solves;
+        self.basis_roots += other.basis_roots;
         self.elapsed += other.elapsed;
     }
 }
@@ -175,9 +179,30 @@ pub fn solve_milp_seeded(
     opts: &MilpOptions,
     seed: Option<&[f64]>,
 ) -> (MilpResult, MilpStats) {
+    let (res, stats, _) = solve_milp_session(lp, integer_vars, opts, seed, None);
+    (res, stats)
+}
+
+/// [`solve_milp_seeded`] for a planning *session*: additionally accepts the
+/// terminal root basis of a previous, structurally identical solve and
+/// crash-warms this solve's root LP from it ([`BoundedSimplex::solve_warm_from`]),
+/// skipping the two-phase cold start the root otherwise pays. Returns the
+/// root basis of *this* solve (when the root reached an optimum) so the
+/// caller can carry it into the next iterate/epoch. Only an `Optimal`
+/// crash outcome is trusted — anything else re-runs the root cold, same as
+/// the in-tree warm policy.
+pub fn solve_milp_session(
+    lp: &Lp,
+    integer_vars: &[usize],
+    opts: &MilpOptions,
+    seed: Option<&[f64]>,
+    root_basis: Option<&BasisSnapshot>,
+) -> (MilpResult, MilpStats, Option<BasisSnapshot>) {
     let start = Instant::now();
     let mut stats = MilpStats::default();
     let mut arena = BoundedSimplex::new(lp);
+    let mut crash = root_basis;
+    let mut out_basis: Option<BasisSnapshot> = None;
 
     let mut best_x: Option<Vec<f64>> = None;
     let mut best_obj = f64::INFINITY;
@@ -237,7 +262,13 @@ pub fn solve_milp_seeded(
         let mut patch = open.node.patch;
         loop {
             stats.nodes += 1;
-            if lp_resolve(&mut arena, opts, &mut stats) != SolveOutcome::Optimal {
+            let out = lp_resolve(&mut arena, opts, &mut stats, crash.take());
+            if stats.lp_solves == 1 && out == SolveOutcome::Optimal {
+                // The root optimum's basis is the session carry: the next
+                // structurally identical solve crashes from here.
+                out_basis = arena.snapshot();
+            }
+            if out != SolveOutcome::Optimal {
                 break; // infeasible, unbounded or stalled: drop the node
             }
             let (x, obj) = arena.extract();
@@ -361,7 +392,7 @@ pub fn solve_milp_seeded(
             }
         }
     };
-    (result, stats)
+    (result, stats, out_basis)
 }
 
 fn dot(c: &[f64], x: &[f64]) -> f64 {
@@ -373,15 +404,32 @@ fn dot(c: &[f64], x: &[f64]) -> f64 {
 /// cold two-phase primal otherwise. Two warm outcomes re-run cold: a
 /// stalled dual (basis breakdown), and an *infeasible* verdict — it
 /// prunes a whole subtree, and on big-M formulations tableau drift can
-/// fake one, so it is never trusted from a warm basis alone.
+/// fake one, so it is never trusted from a warm basis alone. The same
+/// distrust applies to `crash` (a basis carried in from a previous solve,
+/// only offered at the root): anything but `Optimal` re-runs cold.
 fn lp_resolve(
     arena: &mut BoundedSimplex,
     opts: &MilpOptions,
     stats: &mut MilpStats,
+    crash: Option<&BasisSnapshot>,
 ) -> SolveOutcome {
     stats.lp_solves += 1;
     let before = arena.pivots();
-    let out = if opts.warm_start && arena.dual_ready() && !arena.refresh_due() {
+    let out = if let Some(snap) = crash.filter(|_| opts.warm_start) {
+        match arena.solve_warm_from(snap) {
+            Some(SolveOutcome::Optimal) => {
+                stats.warm_solves += 1;
+                stats.basis_roots += 1;
+                SolveOutcome::Optimal
+            }
+            _ => {
+                // Refused or inconclusive crash: served cold after all
+                // (the crash pivots still count — they were paid).
+                stats.cold_solves += 1;
+                arena.solve_cold()
+            }
+        }
+    } else if opts.warm_start && arena.dual_ready() && !arena.refresh_due() {
         match arena.resolve_dual() {
             SolveOutcome::Stalled | SolveOutcome::Infeasible => {
                 // Served cold after all (the failed warm attempt's pivots
@@ -618,6 +666,56 @@ mod tests {
                 other => panic!("case {case}: {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn session_carries_root_basis_across_solves() {
+        // Two structurally identical MILPs whose coefficients drift (the
+        // bisection's moving T̂): the second solve crashes its root from
+        // the first solve's exported basis and must agree with a cold run.
+        let build = |t: f64| {
+            let mut lp = Lp::new(4);
+            for v in 0..4 {
+                lp.set_objective(v, 1.0 + v as f64);
+                lp.set_bounds(v, 0.0, 5.0);
+            }
+            lp.add(
+                vec![(0, 1.0), (1, 1.5), (2, 0.5), (3, 1.0)],
+                Cmp::Ge,
+                t,
+            );
+            lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 6.0);
+            lp
+        };
+        let ints = [0, 1, 2, 3];
+        let opts = MilpOptions::default();
+        let (res1, _, basis) = solve_milp_session(&build(4.0), &ints, &opts, None, None);
+        assert!(matches!(res1, MilpResult::Optimal { .. }));
+        let basis = basis.expect("root basis exported");
+        let lp2 = build(5.5);
+        let (warm, wstats, basis2) =
+            solve_milp_session(&lp2, &ints, &opts, None, Some(&basis));
+        assert!(basis2.is_some(), "session must keep exporting the basis");
+        assert_eq!(
+            wstats.basis_roots, 1,
+            "root was not served from the carried basis"
+        );
+        let (cold, _) = solve_milp(&lp2, &ints, &opts);
+        match (&warm, &cold) {
+            (
+                MilpResult::Optimal { objective: a, .. },
+                MilpResult::Optimal { objective: b, .. },
+            ) => assert!((a - b).abs() < 1e-6, "warm {a} vs cold {b}"),
+            other => panic!("{other:?}"),
+        }
+        // A structurally different problem refuses the basis and still
+        // solves correctly.
+        let mut lp3 = Lp::new(2);
+        lp3.set_objective(0, 1.0);
+        lp3.add(vec![(0, 1.0), (1, 1.0)], Cmp::Ge, 3.0);
+        let (res3, s3, _) = solve_milp_session(&lp3, &[0, 1], &opts, None, Some(&basis));
+        assert!(matches!(res3, MilpResult::Optimal { .. }));
+        assert_eq!(s3.basis_roots, 0);
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Mixed-integer linear programming substrate, built from scratch:
 //! * [`bounds`] — the bounded-variable simplex core: one tableau arena
 //!   per problem, native variable bounds (no `x ≤ u` rows), cold
-//!   two-phase primal and warm dual-simplex re-solves under bound
-//!   changes;
+//!   two-phase primal, warm dual-simplex re-solves under bound changes,
+//!   and [`BasisSnapshot`] export/import so the terminal basis of one
+//!   solve crash-warms the next, structurally identical one;
 //! * [`simplex`] — the [`Lp`] problem type and one-shot solve entry
 //!   points on top of the core;
 //! * [`branch_bound`] — best-first branch & bound with plunging for
@@ -20,6 +21,8 @@ pub mod branch_bound;
 pub mod knapsack;
 pub mod simplex;
 
-pub use bounds::{BoundedSimplex, SolveOutcome};
-pub use branch_bound::{solve_milp, solve_milp_seeded, MilpOptions, MilpResult, MilpStats};
+pub use bounds::{BasisSnapshot, BoundedSimplex, SolveOutcome};
+pub use branch_bound::{
+    solve_milp, solve_milp_seeded, solve_milp_session, MilpOptions, MilpResult, MilpStats,
+};
 pub use simplex::{solve, solve_counted, Cmp, Constraint, Lp, LpResult};

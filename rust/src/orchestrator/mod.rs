@@ -17,6 +17,10 @@
 //! * [`replan`] — the strategies: the Mélange-style assignment-LP-only
 //!   fast path for demand-led drift, incremental repair, naive full
 //!   re-solve, and two-axis drift-thresholded escalation between them.
+//!   The ladder is composition over [`crate::sched::planner`] planners:
+//!   every full re-solve goes through the orchestrator's stateful
+//!   [`crate::sched::planner::PlannerSession`], which carries the
+//!   incumbent seed and the terminal MILP basis across epochs.
 //!
 //! The produced epoch timeline feeds [`crate::sim::simulate_timeline`],
 //! which executes the transitions mid-trace (draining retiring replicas,
@@ -31,11 +35,12 @@ pub mod replan;
 pub use diff::{replica_counts, MigrationAction, MigrationCost, MigrationCostModel, PlanDiff};
 pub use replan::{
     assignment_only_repair, clamp_to_market, incremental_repair, market_drift, replan,
-    replan_world, ReplanOutcome, ReplanStrategy, WorldDrift,
+    replan_world, ReplanOutcome, ReplanStrategy, StrategyPlanner, WorldDrift,
 };
 
 use crate::cloud::{MarketEvent, MarketEventKind, PriceBook, WorldEvent};
-use crate::sched::binary_search::{solve_binary_search, BinarySearchOptions, SearchStats};
+use crate::sched::binary_search::{BinarySearchOptions, SearchStats};
+use crate::sched::planner::{PlanRequest, Planner, PlannerSession};
 use crate::sched::{SchedProblem, ServingPlan};
 use crate::workload::{demand_drift, DemandSnapshot};
 
@@ -292,6 +297,11 @@ pub struct Orchestrator {
     base: SchedProblem,
     opts: OrchestratorOptions,
     incumbent: ServingPlan,
+    /// The stateful planner every composition search goes through: it
+    /// carries the incumbent seed *and* the terminal MILP basis across
+    /// epochs, so escalated re-solves crash-warm their roots instead of
+    /// rebuilding the arena per T̂.
+    session: PlannerSession,
     // The world state the incumbent was planned against; drift accumulates
     // relative to this basis and it advances only on a successful replan.
     basis_avail: [u32; 6],
@@ -311,19 +321,21 @@ impl Orchestrator {
     ) -> Option<Orchestrator> {
         let mut problem = base.clone();
         apply_world(&mut problem, first, epoch_s);
-        let (initial, solve_stats) = solve_binary_search(&problem, &opts.search);
-        let incumbent = initial?;
+        let mut session = PlannerSession::new(opts.search.clone());
+        let report = session.plan(&PlanRequest::new(&problem));
+        let incumbent = report.plan?;
         let epoch = EpochBuild {
             index: 0,
             event: first,
             problem,
             drift: WorldDrift::default(),
         }
-        .initial(&incumbent, solve_stats);
+        .initial(&incumbent, report.stats);
         Some(Orchestrator {
             base: base.clone(),
             opts: opts.clone(),
             incumbent,
+            session,
             basis_avail: first.market.avail.counts,
             basis_prices: first.market.prices.per_hour,
             basis_demand: first.demand.clone(),
@@ -368,10 +380,20 @@ impl Orchestrator {
             return;
         }
 
-        match replan_world(&build.problem, &self.incumbent, &drift, &self.opts) {
+        match replan_world(
+            &build.problem,
+            &self.incumbent,
+            &drift,
+            &self.opts,
+            &mut self.session,
+        ) {
             Some(outcome) => {
                 let epoch = build.replanned(&outcome);
                 self.incumbent = outcome.plan;
+                // Fast-path/incremental repairs bypass the session: keep
+                // its seed tracking the plan actually in force so a stale
+                // incumbent can never leak into a later escalation.
+                self.session.observe_incumbent(&self.incumbent);
                 self.basis_avail = event.market.avail.counts;
                 self.basis_prices = event.market.prices.per_hour;
                 self.basis_demand = event.demand.clone();

@@ -20,11 +20,14 @@
 
 use super::diff::{replica_counts, MigrationCost, MigrationCostModel, PlanDiff};
 use super::OrchestratorOptions;
-use crate::sched::binary_search::{
-    polish_plan, solve_assignment_fixed_y, solve_binary_search, solve_binary_search_seeded,
-    BinarySearchOptions, SearchStats,
+use crate::sched::binary_search::{polish_plan, solve_assignment_fixed_y, SearchStats};
+use crate::sched::planner::{
+    BisectionPlanner, Infeasibility, PlanReport, PlanRequest, Planner, PlannerSession,
+    Provenance,
 };
 use crate::sched::{SchedProblem, ServingPlan};
+
+pub use crate::sched::planner::WorldDrift;
 
 /// How to react to a market event.
 #[derive(Clone, Debug, PartialEq)]
@@ -52,21 +55,45 @@ impl ReplanStrategy {
         }
     }
 
-    /// CLI surface: `static`, `incremental`, `full`, `escalate[:<threshold>]`.
-    pub fn by_name(s: &str) -> Option<ReplanStrategy> {
-        match s {
-            "static" => Some(ReplanStrategy::Static),
-            "incremental" | "inc" => Some(ReplanStrategy::Incremental),
-            "full" | "full-resolve" | "resolve" => Some(ReplanStrategy::FullResolve),
-            "escalate" | "escalating" => Some(ReplanStrategy::Escalating {
+    /// CLI surface: `static`, `incremental`, `full`, `escalate[:<threshold>]`
+    /// — matched case-insensitively. Returns a message listing the valid
+    /// strategy names on a miss, so the CLI can surface a real error
+    /// instead of a bare panic.
+    pub fn parse(s: &str) -> Result<ReplanStrategy, String> {
+        const VALID: &str =
+            "static, incremental (inc), full (full-resolve, resolve), escalate[:THRESHOLD]";
+        let lower = s.trim().to_ascii_lowercase();
+        match lower.as_str() {
+            "static" => Ok(ReplanStrategy::Static),
+            "incremental" | "inc" => Ok(ReplanStrategy::Incremental),
+            "full" | "full-resolve" | "resolve" => Ok(ReplanStrategy::FullResolve),
+            "escalate" | "escalating" => Ok(ReplanStrategy::Escalating {
                 drift_threshold: 0.25,
             }),
             other => {
-                let rest = other.strip_prefix("escalate:")?;
-                let t = rest.parse::<f64>().ok()?;
-                Some(ReplanStrategy::Escalating { drift_threshold: t })
+                if let Some(rest) = other
+                    .strip_prefix("escalate:")
+                    .or_else(|| other.strip_prefix("escalating:"))
+                {
+                    let t = rest.parse::<f64>().map_err(|e| {
+                        format!(
+                            "invalid escalate threshold '{rest}': {e} \
+                             (expected e.g. 'escalate:0.25')"
+                        )
+                    })?;
+                    return Ok(ReplanStrategy::Escalating { drift_threshold: t });
+                }
+                Err(format!(
+                    "unknown replan strategy '{s}'; valid strategies: {VALID}"
+                ))
             }
         }
+    }
+
+    /// [`parse`](Self::parse) flattened to an `Option` for callers that
+    /// only care whether the name resolves.
+    pub fn by_name(s: &str) -> Option<ReplanStrategy> {
+        Self::parse(s).ok()
     }
 }
 
@@ -82,17 +109,6 @@ pub struct ReplanOutcome {
     /// composition untouched, only the workload spread re-solved).
     pub fast_path: bool,
     pub stats: SearchStats,
-}
-
-/// The two-axis drift of the world signal since the incumbent's basis:
-/// `supply` is [`market_drift`] (availability + prices), `demand` is
-/// [`crate::workload::demand_drift`] (arrival rate + mixture). The
-/// replanner thresholds the axes separately — a mixture shift and a price
-/// spike call for different repairs.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct WorldDrift {
-    pub supply: f64,
-    pub demand: f64,
 }
 
 /// Normalised market drift between two observations: relative L1 change of
@@ -236,15 +252,33 @@ pub fn incremental_repair(
     Some(polish_plan(p, clamped, stats))
 }
 
+/// Warm-started full re-solve through the session: the incumbent seeds
+/// the MILPs and bounds the bisection, and the session's carried basis
+/// crash-warms the roots (the cross-epoch warm start).
+fn escalate_resolve(
+    p: &SchedProblem,
+    incumbent: &ServingPlan,
+    session: &mut PlannerSession,
+    stats: &mut SearchStats,
+) -> Option<ServingPlan> {
+    let report = session.plan(&PlanRequest::new(p).with_seed(incumbent));
+    stats.merge(&report.stats);
+    report.into_plan()
+}
+
 /// One replanning step. `p` must already reflect the new market state
 /// (availability replaced, candidate costs re-priced); `drift` is the
 /// [`market_drift`] between the previous and the current observation.
+/// `session` is the caller's stateful planner: every full re-solve rung
+/// goes through it (and inherits its carried warm state), except the
+/// deliberately naive [`ReplanStrategy::FullResolve`], which plans cold
+/// through a fresh [`BisectionPlanner`] to preserve its baseline contract.
 pub fn replan(
     p: &SchedProblem,
     incumbent: &ServingPlan,
     strategy: &ReplanStrategy,
     drift: f64,
-    opts: &BinarySearchOptions,
+    session: &mut PlannerSession,
     cost_model: &MigrationCostModel,
 ) -> Option<ReplanOutcome> {
     let mut stats = SearchStats::default();
@@ -255,20 +289,14 @@ pub fn replan(
             Some(plan) => plan,
             None => {
                 escalated = true;
-                let (plan, s) = solve_binary_search_seeded(
-                    p,
-                    opts,
-                    Some(incumbent.makespan),
-                    Some(incumbent),
-                );
-                stats.merge(&s);
-                plan?
+                escalate_resolve(p, incumbent, session, &mut stats)?
             }
         },
         ReplanStrategy::FullResolve => {
-            let (plan, s) = solve_binary_search(p, opts);
-            stats.merge(&s);
-            plan?
+            let report = BisectionPlanner::new(session.opts().clone())
+                .plan(&PlanRequest::new(p));
+            stats.merge(&report.stats);
+            report.into_plan()?
         }
         ReplanStrategy::Escalating { drift_threshold } => {
             let incremental = if drift <= *drift_threshold {
@@ -280,14 +308,7 @@ pub fn replan(
                 Some(plan) => plan,
                 None => {
                     escalated = true;
-                    let (plan, s) = solve_binary_search_seeded(
-                        p,
-                        opts,
-                        Some(incumbent.makespan),
-                        Some(incumbent),
-                    );
-                    stats.merge(&s);
-                    plan?
+                    escalate_resolve(p, incumbent, session, &mut stats)?
                 }
             }
         }
@@ -321,11 +342,17 @@ pub fn replan(
 ///    anyway) keep their contracts;
 /// 3. *strategy pass* — otherwise the configured [`ReplanStrategy`] as
 ///    before, driven by the supply axis.
+///
+/// Every full re-solve rung plans through `session`, the caller's
+/// stateful [`PlannerSession`]: the incumbent seeds the search and the
+/// session's carried terminal basis crash-warms the MILP roots across
+/// epochs (the ladder is *composition over planners*).
 pub fn replan_world(
     p: &SchedProblem,
     incumbent: &ServingPlan,
     drift: &WorldDrift,
     opts: &OrchestratorOptions,
+    session: &mut PlannerSession,
 ) -> Option<ReplanOutcome> {
     let adaptive = matches!(
         opts.strategy,
@@ -348,14 +375,7 @@ pub fn replan_world(
     }
     if adaptive && drift.demand > opts.demand_drift_threshold {
         let mut stats = SearchStats::default();
-        let (plan, s) = solve_binary_search_seeded(
-            p,
-            &opts.search,
-            Some(incumbent.makespan),
-            Some(incumbent),
-        );
-        stats.merge(&s);
-        let plan = plan?;
+        let plan = escalate_resolve(p, incumbent, session, &mut stats)?;
         let diff = PlanDiff::between(p, incumbent, &plan);
         let migration = diff.migration_cost(p, &opts.cost_model);
         return Some(ReplanOutcome {
@@ -367,13 +387,86 @@ pub fn replan_world(
             stats,
         });
     }
-    replan(p, incumbent, &opts.strategy, drift.supply, &opts.search, &opts.cost_model)
+    replan(p, incumbent, &opts.strategy, drift.supply, session, &opts.cost_model)
+}
+
+/// The whole replan ladder as a [`Planner`]: the request's seed plan is
+/// the incumbent, the request's [`WorldDrift`] context picks the rung
+/// (fast path / repair / escalation), and the report's [`Provenance`]
+/// carries the *real* fast-path/escalation flags — the trait-level face
+/// of [`replan_world`]. With no seed (a first solve), it degenerates to
+/// a plain warm-session solve. The wrapped [`PlannerSession`] carries the
+/// incumbent and terminal basis across calls, exactly like the
+/// orchestrator's own.
+pub struct StrategyPlanner {
+    opts: OrchestratorOptions,
+    session: PlannerSession,
+}
+
+impl StrategyPlanner {
+    pub fn new(opts: OrchestratorOptions) -> Self {
+        let session = PlannerSession::new(opts.search.clone());
+        Self { opts, session }
+    }
+
+    /// The wrapped warm session (its incumbent tracks every plan this
+    /// planner returns, including fast-path repairs).
+    pub fn session(&self) -> &PlannerSession {
+        &self.session
+    }
+}
+
+impl Planner for StrategyPlanner {
+    fn name(&self) -> String {
+        format!("replan-{}", self.opts.strategy.name())
+    }
+
+    fn plan(&mut self, req: &PlanRequest) -> PlanReport {
+        // Clone the incumbent out eagerly: the ladder below needs the
+        // session mutably, so no borrow of it may survive this match.
+        let seeded: Option<ServingPlan> = match req.seed_plan {
+            Some(plan) => Some(plan.clone()),
+            None => self.session.incumbent().cloned(),
+        };
+        let Some(incumbent) = seeded else {
+            // Nothing to replan from: a plain (session-warm) first solve.
+            let mut report = self.session.plan(req);
+            report.provenance.strategy = self.name();
+            return report;
+        };
+        let drift = req.drift.unwrap_or_default();
+        match replan_world(req.problem, &incumbent, &drift, &self.opts, &mut self.session) {
+            Some(outcome) => {
+                // Fast-path/incremental rungs bypass the session; keep its
+                // seed tracking the plan actually in force.
+                self.session.observe_incumbent(&outcome.plan);
+                PlanReport {
+                    plan: Some(outcome.plan),
+                    infeasible: None,
+                    stats: outcome.stats,
+                    provenance: Provenance {
+                        strategy: self.name(),
+                        fast_path: outcome.fast_path,
+                        escalated: outcome.escalated,
+                        warmed: true,
+                    },
+                }
+            }
+            None => PlanReport::not_found(
+                Infeasibility::Exhausted,
+                SearchStats::default(),
+                Provenance::cold(self.name()),
+            ),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::milp::MilpOptions;
+    use crate::sched::binary_search::BinarySearchOptions;
+    use crate::sched::planner::plan_once;
     use crate::sched::toy::simple_example;
     use std::time::Duration;
 
@@ -388,9 +481,13 @@ mod tests {
         }
     }
 
+    fn session() -> PlannerSession {
+        PlannerSession::new(opts())
+    }
+
     fn solved_toy() -> (SchedProblem, ServingPlan) {
         let p = simple_example();
-        let (plan, _) = solve_binary_search(&p, &opts());
+        let plan = plan_once(&p, &opts()).into_plan();
         (p.clone(), plan.expect("toy plan"))
     }
 
@@ -468,7 +565,7 @@ mod tests {
                 &incumbent,
                 &strategy,
                 drift,
-                &opts(),
+                &mut session(),
                 &MigrationCostModel::default(),
             )
             .unwrap_or_else(|| panic!("{} produced no plan", strategy.name()));
@@ -491,7 +588,7 @@ mod tests {
                 drift_threshold: 0.25,
             },
             0.0,
-            &opts(),
+            &mut session(),
             &MigrationCostModel::default(),
         )
         .expect("replan");
@@ -596,7 +693,7 @@ mod tests {
             supply: 0.0,
             demand: 0.08,
         };
-        let out = replan_world(&shifted, &incumbent, &drift, &world_opts)
+        let out = replan_world(&shifted, &incumbent, &drift, &world_opts, &mut session())
             .expect("fast path replans");
         assert!(out.fast_path, "small demand drift must use the fast path");
         assert!(!out.escalated);
@@ -634,8 +731,9 @@ mod tests {
                 search: opts(),
                 ..Default::default()
             };
-            let out = replan_world(&shifted, &incumbent, &drift, &world_opts)
-                .expect("escalated replan");
+            let out =
+                replan_world(&shifted, &incumbent, &drift, &world_opts, &mut session())
+                    .expect("escalated replan");
             assert!(
                 out.escalated && !out.fast_path,
                 "{}: demand drift past the threshold must re-decide the composition",
@@ -657,6 +755,137 @@ mod tests {
             })
         );
         assert!(ReplanStrategy::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn strategy_planner_reports_real_fast_path_and_escalation_flags() {
+        // The ladder as a Planner: provenance flags come from the rung
+        // actually taken, and the drift context on the request picks it.
+        let (p, incumbent) = solved_toy();
+        let world_opts = OrchestratorOptions {
+            strategy: ReplanStrategy::Escalating {
+                drift_threshold: 0.25,
+            },
+            search: opts(),
+            ..Default::default()
+        };
+        let mut ladder = StrategyPlanner::new(world_opts);
+        assert_eq!(ladder.name(), "replan-escalating");
+
+        // No seed and an empty session: a plain first solve, cold flags.
+        let first = ladder.plan(&PlanRequest::new(&p));
+        assert!(first.plan.is_some());
+        assert!(!first.provenance.fast_path && !first.provenance.escalated);
+        assert!(ladder.session().incumbent().is_some());
+
+        // Small demand-led drift on a calm market: the fast-path rung.
+        let mut nudged = p.clone();
+        nudged.demands[0][0] *= 1.3;
+        let report = ladder.plan(
+            &PlanRequest::new(&nudged)
+                .with_seed(&incumbent)
+                .with_drift(WorldDrift {
+                    supply: 0.0,
+                    demand: 0.08,
+                }),
+        );
+        assert!(
+            report.provenance.fast_path && !report.provenance.escalated,
+            "fast path not reported: {:?}",
+            report.provenance
+        );
+        report.plan.expect("fast-path plan");
+
+        // A flipped mixture past the threshold: the escalation rung.
+        let mut flipped = p.clone();
+        flipped.demands[0] = vec![20.0, 80.0];
+        let report = ladder.plan(
+            &PlanRequest::new(&flipped)
+                .with_seed(&incumbent)
+                .with_drift(WorldDrift {
+                    supply: 0.0,
+                    demand: 0.6,
+                }),
+        );
+        assert!(
+            report.provenance.escalated && !report.provenance.fast_path,
+            "escalation not reported: {:?}",
+            report.provenance
+        );
+        report
+            .plan
+            .expect("escalated plan")
+            .validate(&flipped, 1e-4)
+            .expect("valid escalated plan");
+    }
+
+    #[test]
+    fn escalation_reuses_session_basis_across_steps() {
+        // The ROADMAP follow-on this PR lands: the terminal basis carries
+        // across replan epochs. An escalated re-solve through the session
+        // must crash-warm its MILP roots from the initial solve's basis.
+        use crate::sched::binary_search::Feasibility;
+        let p = simple_example();
+        let mut session = PlannerSession::new(BinarySearchOptions {
+            tolerance: 0.1,
+            feasibility: Feasibility::Exact,
+            ..Default::default()
+        });
+        let incumbent = session
+            .plan(&PlanRequest::new(&p))
+            .into_plan()
+            .expect("initial plan");
+        assert!(session.has_warm_basis());
+        // A flipped demand mixture with drift over the threshold forces
+        // the escalation rung.
+        let mut shifted = p.clone();
+        shifted.demands[0] = vec![20.0, 80.0];
+        let out = replan(
+            &shifted,
+            &incumbent,
+            &ReplanStrategy::Escalating {
+                drift_threshold: 0.25,
+            },
+            0.9,
+            &mut session,
+            &MigrationCostModel::default(),
+        )
+        .expect("escalated replan");
+        assert!(out.escalated);
+        out.plan.validate(&shifted, 1e-4).expect("valid plan");
+        assert!(
+            out.stats.basis_roots > 0,
+            "escalated re-solve never crash-warmed a root from the session basis"
+        );
+    }
+
+    #[test]
+    fn strategy_parse_is_case_insensitive_and_reports_misses() {
+        // Near-misses that used to silently return None.
+        assert_eq!(
+            ReplanStrategy::by_name("Escalate"),
+            Some(ReplanStrategy::Escalating {
+                drift_threshold: 0.25
+            })
+        );
+        assert_eq!(
+            ReplanStrategy::by_name("STATIC"),
+            Some(ReplanStrategy::Static)
+        );
+        assert_eq!(
+            ReplanStrategy::by_name("Escalating:0.4"),
+            Some(ReplanStrategy::Escalating {
+                drift_threshold: 0.4
+            })
+        );
+        // A malformed threshold names the problem instead of vanishing.
+        let err = ReplanStrategy::parse("escalate:0,4").unwrap_err();
+        assert!(err.contains("0,4"), "{err}");
+        // An unknown name lists every valid strategy.
+        let err = ReplanStrategy::parse("nope").unwrap_err();
+        for name in ["static", "incremental", "full", "escalate"] {
+            assert!(err.contains(name), "'{name}' missing from: {err}");
+        }
     }
 
     #[test]

@@ -18,7 +18,8 @@
 
 use super::{PlanEntry, SchedProblem, ServingPlan};
 use crate::milp::{
-    solve_counted, solve_milp_seeded, Cmp, Lp, LpResult, MilpOptions, MilpResult, MilpStats,
+    solve_counted, solve_milp_session, BasisSnapshot, Cmp, Lp, LpResult, MilpOptions,
+    MilpResult, MilpStats,
 };
 use std::time::{Duration, Instant};
 
@@ -39,6 +40,13 @@ pub struct BinarySearchOptions {
     pub milp: MilpOptions,
     /// Hard cap on bisection iterations.
     pub max_iters: usize,
+    /// Carry the terminal root basis of each exact feasibility MILP into
+    /// the next one (crash-warming the root instead of a two-phase cold
+    /// start) — across T̂ iterates within a run, and across runs when the
+    /// caller is a [`crate::sched::planner::PlannerSession`]. `false`
+    /// rebuilds the arena cold per T̂ (the pre-session behaviour, kept as
+    /// the `fig_solver` baseline).
+    pub carry_basis: bool,
 }
 
 impl Default for BinarySearchOptions {
@@ -52,6 +60,38 @@ impl Default for BinarySearchOptions {
                 ..Default::default()
             },
             max_iters: 64,
+            carry_basis: true,
+        }
+    }
+}
+
+/// Per-feasibility-check statistics of one bisection run — the `fig_solver`
+/// bench reports the warm-hit profile *per iterate* from these.
+#[derive(Clone, Copy, Debug)]
+pub struct IterateStat {
+    /// The makespan guess T̂ this feasibility check probed.
+    pub t_hat: f64,
+    /// Whether a feasible plan existed within T̂.
+    pub feasible: bool,
+    /// Simplex pivots this check cost.
+    pub pivots: u64,
+    /// MILP node LPs served warm (dual simplex) during this check.
+    pub warm_solves: usize,
+    /// MILP node LPs solved cold during this check.
+    pub cold_solves: usize,
+    /// True when this check's root LP was crash-warmed from a basis
+    /// carried in from a previous iterate (or a previous session solve).
+    pub from_basis: bool,
+}
+
+impl IterateStat {
+    /// Fraction of this check's LP solves served by a warm path.
+    pub fn warm_hit_rate(&self) -> f64 {
+        let total = self.warm_solves + self.cold_solves;
+        if total == 0 {
+            0.0
+        } else {
+            self.warm_solves as f64 / total as f64
         }
     }
 }
@@ -70,6 +110,11 @@ pub struct SearchStats {
     pub warm_solves: usize,
     /// MILP node LPs solved cold (two-phase primal from scratch).
     pub cold_solves: usize,
+    /// Feasibility MILPs whose root LP was crash-warmed from the basis
+    /// carried across T̂ iterates / session solves.
+    pub basis_roots: usize,
+    /// One entry per feasibility check, in probe order.
+    pub iterates: Vec<IterateStat>,
     pub elapsed: Duration,
 }
 
@@ -81,6 +126,7 @@ impl SearchStats {
         self.milp_nodes += m.nodes;
         self.warm_solves += m.warm_solves;
         self.cold_solves += m.cold_solves;
+        self.basis_roots += m.basis_roots;
     }
 
     /// Accumulate another search's statistics (replanning ladders and the
@@ -93,6 +139,8 @@ impl SearchStats {
         self.milp_nodes += other.milp_nodes;
         self.warm_solves += other.warm_solves;
         self.cold_solves += other.cold_solves;
+        self.basis_roots += other.basis_roots;
+        self.iterates.extend_from_slice(&other.iterates);
         self.elapsed += other.elapsed;
     }
 
@@ -247,14 +295,49 @@ fn plan_solution(model: &FeasModel, plan: &ServingPlan) -> Vec<f64> {
     x
 }
 
-/// Outcome of one feasibility check: a concrete plan if feasible. `carry`
-/// holds the previous feasible MILP solution (same layout for every T̂);
-/// it seeds the exact solver's incumbent and is replaced on success.
+/// Outcome of one feasibility check: a concrete plan if feasible, plus an
+/// [`IterateStat`] appended to `stats.iterates`. `carry` holds the previous
+/// feasible MILP solution (same layout for every T̂); it seeds the exact
+/// solver's incumbent and is replaced on success. `basis` is the terminal
+/// root basis of the previous exact MILP: with `opts.carry_basis` it
+/// crash-warms this check's root and is replaced by this check's own.
 fn check_feasible(
     p: &SchedProblem,
     t_hat: f64,
     opts: &BinarySearchOptions,
     carry: &mut Option<Vec<f64>>,
+    basis: &mut Option<BasisSnapshot>,
+    stats: &mut SearchStats,
+) -> Option<ServingPlan> {
+    let checks_before = stats.feasibility_checks;
+    let before = (
+        stats.pivots,
+        stats.warm_solves,
+        stats.cold_solves,
+        stats.basis_roots,
+    );
+    let plan = check_feasible_inner(p, t_hat, opts, carry, basis, stats);
+    // One record per actual check (a problem whose feasibility model
+    // cannot even be built runs no check and records nothing).
+    if stats.feasibility_checks > checks_before {
+        stats.iterates.push(IterateStat {
+            t_hat,
+            feasible: plan.is_some(),
+            pivots: stats.pivots - before.0,
+            warm_solves: stats.warm_solves - before.1,
+            cold_solves: stats.cold_solves - before.2,
+            from_basis: stats.basis_roots > before.3,
+        });
+    }
+    plan
+}
+
+fn check_feasible_inner(
+    p: &SchedProblem,
+    t_hat: f64,
+    opts: &BinarySearchOptions,
+    carry: &mut Option<Vec<f64>>,
+    basis: &mut Option<BasisSnapshot>,
     stats: &mut SearchStats,
 ) -> Option<ServingPlan> {
     let model = build_feasibility(p, t_hat)?;
@@ -268,9 +351,20 @@ fn check_feasible(
                 cutoff: p.budget + 1e-6,
                 ..opts.milp.clone()
             };
-            let (res, mstats) =
-                solve_milp_seeded(&model.lp, &ints, &milp_opts, carry.as_deref());
+            let root_basis = if opts.carry_basis { basis.as_ref() } else { None };
+            let (res, mstats, terminal) = solve_milp_session(
+                &model.lp,
+                &ints,
+                &milp_opts,
+                carry.as_deref(),
+                root_basis,
+            );
             stats.absorb_milp(&mstats);
+            if opts.carry_basis {
+                if let Some(snap) = terminal {
+                    *basis = Some(snap);
+                }
+            }
             match res {
                 MilpResult::Optimal { x, objective } | MilpResult::Feasible { x, objective, .. } => {
                     if objective <= p.budget + 1e-6 {
@@ -572,37 +666,66 @@ pub fn polish_plan(
 }
 
 /// Run Algorithm 1. Returns the best plan found and search statistics.
+///
+/// This is the one free entry point kept on the module; every consumer
+/// outside `sched::` goes through [`crate::sched::planner`] instead, and
+/// cross-call warm state (incumbent + terminal basis) lives in
+/// [`crate::sched::planner::PlannerSession`].
 pub fn solve_binary_search(
     p: &SchedProblem,
     opts: &BinarySearchOptions,
 ) -> (Option<ServingPlan>, SearchStats) {
-    solve_binary_search_warm(p, opts, None)
+    let mut basis = None;
+    solve_binary_search_core(p, opts, None, None, &mut basis)
 }
 
-/// Algorithm 1 with an optional warm start: `warm_upper` is a makespan known
-/// (or believed) achievable — typically the incumbent plan's makespan when
-/// replanning after a market event. A feasible warm bound skips the loose
-/// analytic upper bound and most of the early bisection; an infeasible one
-/// costs a single extra feasibility check.
+/// Deprecated shim for the pre-`Planner` warm entry point.
+#[deprecated(
+    note = "build a sched::planner::PlanRequest with warm_upper and plan through \
+            BisectionPlanner / PlannerSession instead"
+)]
 pub fn solve_binary_search_warm(
     p: &SchedProblem,
     opts: &BinarySearchOptions,
     warm_upper: Option<f64>,
 ) -> (Option<ServingPlan>, SearchStats) {
-    solve_binary_search_seeded(p, opts, warm_upper, None)
+    let mut basis = None;
+    solve_binary_search_core(p, opts, warm_upper, None, &mut basis)
 }
 
-/// [`solve_binary_search_warm`] that additionally seeds the exact-mode
-/// feasibility MILPs with a known plan (the orchestrator passes the
-/// incumbent when replanning): its solution vector becomes the B&B's
-/// first feasible point, so pruning starts before the first branch. Each
-/// feasible bisection iterate then seeds the next check — the model
-/// layout is identical across T̂ values.
+/// Deprecated shim for the pre-`Planner` seeded entry point.
+#[deprecated(
+    note = "build a sched::planner::PlanRequest with a seed plan and plan through \
+            BisectionPlanner / PlannerSession instead"
+)]
 pub fn solve_binary_search_seeded(
     p: &SchedProblem,
     opts: &BinarySearchOptions,
     warm_upper: Option<f64>,
     seed_plan: Option<&ServingPlan>,
+) -> (Option<ServingPlan>, SearchStats) {
+    let mut basis = None;
+    solve_binary_search_core(p, opts, warm_upper, seed_plan, &mut basis)
+}
+
+/// Algorithm 1 with the full warm surface: `warm_upper` is a makespan known
+/// (or believed) achievable — typically the incumbent plan's makespan when
+/// replanning after a market event; a feasible warm bound skips the loose
+/// analytic upper bound and most of the early bisection, an infeasible one
+/// costs a single extra feasibility check. `seed_plan` seeds the exact-mode
+/// feasibility MILPs with a known plan: its solution vector becomes the
+/// B&B's first feasible point, so pruning starts before the first branch,
+/// and each feasible bisection iterate then seeds the next check (the model
+/// layout is identical across T̂ values). `basis` carries the terminal root
+/// basis *across* T̂ iterates — and across whole calls when the caller is a
+/// [`crate::sched::planner::PlannerSession`] — so each exact root is
+/// crash-warmed instead of rebuilt cold.
+pub(crate) fn solve_binary_search_core(
+    p: &SchedProblem,
+    opts: &BinarySearchOptions,
+    warm_upper: Option<f64>,
+    seed_plan: Option<&ServingPlan>,
+    basis: &mut Option<BasisSnapshot>,
 ) -> (Option<ServingPlan>, SearchStats) {
     let start = Instant::now();
     let mut stats = SearchStats::default();
@@ -625,7 +748,7 @@ pub fn solve_binary_search_seeded(
     tries.push(ub);
     tries.push(4.0 * ub);
     let seeded = tries.into_iter().find_map(|t| {
-        check_feasible(p, t, opts, &mut carry, &mut stats)
+        check_feasible(p, t, opts, &mut carry, basis, &mut stats)
             .map(|plan| (plan.makespan.min(t), plan))
     });
     let Some((mut upper, seed_plan)) = seeded else {
@@ -638,7 +761,7 @@ pub fn solve_binary_search_seeded(
     while upper - lower > opts.tolerance && stats.iterations < opts.max_iters {
         stats.iterations += 1;
         let t_hat = 0.5 * (upper + lower);
-        match check_feasible(p, t_hat, opts, &mut carry, &mut stats) {
+        match check_feasible(p, t_hat, opts, &mut carry, basis, &mut stats) {
             Some(plan) => {
                 // Feasible: tighten from above. The realised makespan can be
                 // far below T̂ — exploit it.
@@ -769,8 +892,21 @@ mod tests {
         let plan = plan.unwrap();
         assert!(stats.pivots > 0, "no pivots recorded");
         assert!(stats.milp_nodes > 0, "no B&B nodes recorded");
+        // The default run carries the basis across T̂ iterates: after the
+        // first check, roots come from the carried basis, and the
+        // per-iterate records account for every check.
+        assert!(
+            stats.basis_roots > 0,
+            "no root was crash-warmed across iterates"
+        );
+        assert_eq!(stats.iterates.len(), stats.feasibility_checks);
+        assert!(!stats.iterates[0].from_basis, "first root had no carry");
+        let total_pivots: u64 = stats.iterates.iter().map(|i| i.pivots).sum();
+        assert!(total_pivots <= stats.pivots);
         // Replanning seeded with the incumbent must agree (within the
-        // bisection tolerance) and still produce a valid plan.
+        // bisection tolerance) and still produce a valid plan. The
+        // deprecated shims stay compile-checked here until removal.
+        #[allow(deprecated)]
         let (plan2, stats2) =
             solve_binary_search_seeded(&p, &opts, Some(plan.makespan), Some(&plan));
         let plan2 = plan2.unwrap();
@@ -782,6 +918,32 @@ mod tests {
             plan.makespan
         );
         assert!(stats2.pivots > 0);
+        #[allow(deprecated)]
+        let (plan3, _) = solve_binary_search_warm(&p, &opts, Some(plan.makespan));
+        assert!(plan3.is_some());
+    }
+
+    #[test]
+    fn basis_carry_matches_per_iterate_cold_arena() {
+        // carry_basis only changes how roots are warmed, never the answer.
+        let p = simple_example();
+        let mk = |carry_basis: bool| BinarySearchOptions {
+            tolerance: 0.05,
+            feasibility: Feasibility::Exact,
+            carry_basis,
+            ..Default::default()
+        };
+        let (with, s_with) = solve_binary_search(&p, &mk(true));
+        let (without, s_without) = solve_binary_search(&p, &mk(false));
+        let (a, b) = (with.unwrap(), without.unwrap());
+        assert!(
+            (a.makespan - b.makespan).abs() <= 0.2,
+            "carry {} vs cold-arena {}",
+            a.makespan,
+            b.makespan
+        );
+        assert!(s_with.basis_roots > 0);
+        assert_eq!(s_without.basis_roots, 0);
     }
 
     #[test]

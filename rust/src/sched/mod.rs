@@ -8,12 +8,18 @@
 //!   our branch & bound;
 //! * [`binary_search`] — Algorithm 1: binary-search-on-T with exact or
 //!   knapsack-approximate feasibility checks (App F);
+//! * [`planner`] — the unified planning surface: the [`planner::Planner`]
+//!   trait every strategy (Algorithm 1, sessions, baselines) implements,
+//!   the [`planner::PlanRequest`]/[`planner::PlanReport`] contract, and
+//!   the stateful [`planner::PlannerSession`] carrying warm solver state
+//!   across calls. Every consumer outside `sched::` plans through here;
 //! * multi-model serving (App E) is inherent: a [`SchedProblem`] carries a
 //!   list of models, each with its own demands and candidate set.
 
 pub mod binary_search;
 pub mod enumerate;
 pub mod formulation;
+pub mod planner;
 
 use crate::cloud::Availability;
 use crate::perf_model::ReplicaConfig;

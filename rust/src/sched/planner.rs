@@ -1,0 +1,536 @@
+//! The unified planning surface: one contract for every way the codebase
+//! deduces a serving plan.
+//!
+//! The paper's pipeline re-plans constantly — per bisection iterate, per
+//! replan epoch, per baseline sweep — and before this module each of those
+//! callers held its own free-function entry point with its own
+//! `(Option<ServingPlan>, SearchStats)` tuple threading. The redesign makes
+//! planning a *session* with persistent state, in line with ThunderServe's
+//! lightweight online rescheduling and Mélange's composition-only fast
+//! path:
+//!
+//! * [`PlanRequest`] — a builder-style request: the problem, an optional
+//!   seed plan and warm makespan bound, the drift context the caller
+//!   observed, and solver budget overrides (deadline / node caps);
+//! * [`PlanReport`] — the uniform answer: the plan (or a structured
+//!   [`Infeasibility`] reason), merged [`SearchStats`], and [`Provenance`]
+//!   (strategy name plus fast-path/escalation/warm flags);
+//! * [`Planner`] — the one trait every strategy implements: Algorithm 1
+//!   ([`BisectionPlanner`]), the stateful [`PlannerSession`], and all the
+//!   baselines in [`crate::baselines`];
+//! * [`PlannerSession`] — the centerpiece: a planner that *owns* warm
+//!   state. It carries the incumbent plan (seeding each exact MILP's first
+//!   incumbent) and the terminal [`BasisSnapshot`] of the last feasibility
+//!   root, which crash-warms the next root — across bisection iterates
+//!   *and* across calls, so replan epochs no longer rebuild the arena per
+//!   T̂ (see `milp/README.md`, "Basis snapshots").
+
+use super::binary_search::{solve_binary_search_core, BinarySearchOptions, SearchStats};
+use super::{SchedProblem, ServingPlan};
+use crate::milp::BasisSnapshot;
+use std::time::Duration;
+
+/// The two-axis drift of the world signal since a plan's basis: `supply`
+/// is market drift (availability + prices), `demand` is workload drift
+/// (arrival rate + mixture). Callers attach it to a [`PlanRequest`] so a
+/// planner can tell a price spike from a mixture shift; the orchestrator's
+/// replan ladder thresholds the axes separately.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorldDrift {
+    pub supply: f64,
+    pub demand: f64,
+}
+
+/// A planning request: what to plan and what the caller already knows.
+/// Built with the `with_*` builder methods; only the problem is mandatory.
+#[derive(Clone, Copy)]
+pub struct PlanRequest<'a> {
+    /// The problem to plan (budget, demands, availability, candidates).
+    pub problem: &'a SchedProblem,
+    /// A plan believed feasible — the incumbent when replanning. Seeds the
+    /// exact feasibility MILPs' first incumbent.
+    pub seed_plan: Option<&'a ServingPlan>,
+    /// A makespan known (or believed) achievable; tightens the bisection's
+    /// initial upper bound.
+    pub warm_upper: Option<f64>,
+    /// The drift the caller observed since the seed plan's world. The
+    /// bisection planners ignore it; ladder planners (the orchestrator's
+    /// `StrategyPlanner`) pick their rung — fast path, repair, escalation
+    /// — from it.
+    pub drift: Option<WorldDrift>,
+    /// Wall-clock budget override for each feasibility MILP.
+    pub deadline: Option<Duration>,
+    /// Node-cap override for each feasibility MILP.
+    pub max_nodes: Option<usize>,
+}
+
+impl<'a> PlanRequest<'a> {
+    pub fn new(problem: &'a SchedProblem) -> Self {
+        Self {
+            problem,
+            seed_plan: None,
+            warm_upper: None,
+            drift: None,
+            deadline: None,
+            max_nodes: None,
+        }
+    }
+
+    /// Seed with an incumbent plan; its makespan becomes the warm upper
+    /// bound unless one was set explicitly.
+    pub fn with_seed(mut self, plan: &'a ServingPlan) -> Self {
+        self.seed_plan = Some(plan);
+        if self.warm_upper.is_none() {
+            self.warm_upper = Some(plan.makespan);
+        }
+        self
+    }
+
+    pub fn with_warm_upper(mut self, makespan: f64) -> Self {
+        self.warm_upper = Some(makespan);
+        self
+    }
+
+    pub fn with_drift(mut self, drift: WorldDrift) -> Self {
+        self.drift = Some(drift);
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_max_nodes(mut self, max_nodes: usize) -> Self {
+        self.max_nodes = Some(max_nodes);
+        self
+    }
+
+    /// Search options with this request's solver-budget overrides applied.
+    pub fn effective_opts(&self, base: &BinarySearchOptions) -> BinarySearchOptions {
+        let mut opts = base.clone();
+        if let Some(d) = self.deadline {
+            opts.milp.time_limit = d;
+        }
+        if let Some(n) = self.max_nodes {
+            opts.milp.max_nodes = n;
+        }
+        opts
+    }
+}
+
+/// Why a planner returned no plan — structured, so callers can tell "this
+/// workload can never be served" from "the search came up empty here".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Infeasibility {
+    /// Some demanded (model, workload) pair has no candidate that can
+    /// serve it at all (no finite makespan exists).
+    Uncoverable,
+    /// Candidates exist but no composition fits the budget and
+    /// availability at any makespan the search probed.
+    Exhausted,
+    /// The planner's own restriction (a baseline's GPU-type or deployment
+    /// filter) left no usable candidates for some model.
+    NoCandidates,
+}
+
+impl std::fmt::Display for Infeasibility {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Infeasibility::Uncoverable => {
+                write!(f, "a demanded workload has no candidate that can serve it")
+            }
+            Infeasibility::Exhausted => {
+                write!(f, "no composition fits the budget and availability")
+            }
+            Infeasibility::NoCandidates => {
+                write!(f, "the planner's restriction left no usable candidates")
+            }
+        }
+    }
+}
+
+/// Where a report came from and which path produced it.
+#[derive(Clone, Debug)]
+pub struct Provenance {
+    /// The producing strategy's name ([`Planner::name`]).
+    pub strategy: String,
+    /// The plan came from a composition-preserving fast path (assignment
+    /// LP only, no replica moves). Set by ladder planners (the
+    /// orchestrator's `StrategyPlanner`); the plain bisection planners
+    /// have no fast path and always report `false`.
+    pub fast_path: bool,
+    /// The strategy escalated to a full re-solve to produce this plan
+    /// (ladder planners only, like `fast_path`).
+    pub escalated: bool,
+    /// The solve started from carried warm state (a seed plan, a warm
+    /// upper bound, or a session basis) rather than from scratch.
+    pub warmed: bool,
+}
+
+impl Provenance {
+    pub fn cold(strategy: impl Into<String>) -> Self {
+        Provenance {
+            strategy: strategy.into(),
+            fast_path: false,
+            escalated: false,
+            warmed: false,
+        }
+    }
+}
+
+/// The uniform planning answer: exactly one of `plan` / `infeasible` is
+/// set, alongside the merged solver statistics and the provenance.
+#[derive(Clone, Debug)]
+pub struct PlanReport {
+    pub plan: Option<ServingPlan>,
+    pub infeasible: Option<Infeasibility>,
+    pub stats: SearchStats,
+    pub provenance: Provenance,
+}
+
+impl PlanReport {
+    /// A feasible report.
+    pub fn found(plan: ServingPlan, stats: SearchStats, provenance: Provenance) -> Self {
+        PlanReport {
+            plan: Some(plan),
+            infeasible: None,
+            stats,
+            provenance,
+        }
+    }
+
+    /// An infeasible report with a structured reason.
+    pub fn not_found(
+        reason: Infeasibility,
+        stats: SearchStats,
+        provenance: Provenance,
+    ) -> Self {
+        PlanReport {
+            plan: None,
+            infeasible: Some(reason),
+            stats,
+            provenance,
+        }
+    }
+
+    /// Consume the report, keeping only the plan (the pre-redesign shape).
+    pub fn into_plan(self) -> Option<ServingPlan> {
+        self.plan
+    }
+}
+
+/// One planning strategy. Everything that deduces a serving plan — the
+/// production bisection, the stateful session, every baseline — answers
+/// the same `plan()` contract, so sweeps and comparisons iterate over
+/// `Box<dyn Planner>` instead of divergent free functions.
+pub trait Planner {
+    /// Strategy name, used as the report's provenance and in CLI tables.
+    fn name(&self) -> String;
+
+    /// Produce a plan for the request. Must set exactly one of
+    /// `PlanReport::plan` / `PlanReport::infeasible`.
+    fn plan(&mut self, req: &PlanRequest) -> PlanReport;
+}
+
+/// Classify why a bisection came up empty on `p`.
+fn bisection_infeasibility(p: &SchedProblem) -> Infeasibility {
+    if p.makespan_upper_bound().is_none() {
+        Infeasibility::Uncoverable
+    } else {
+        Infeasibility::Exhausted
+    }
+}
+
+/// Algorithm 1 (binary-search-on-T) as a stateless [`Planner`]: each call
+/// plans from scratch, using only the warm hints the request itself
+/// carries. Use [`PlannerSession`] when consecutive calls should feed each
+/// other.
+#[derive(Clone, Debug)]
+pub struct BisectionPlanner {
+    pub opts: BinarySearchOptions,
+}
+
+impl BisectionPlanner {
+    pub fn new(opts: BinarySearchOptions) -> Self {
+        Self { opts }
+    }
+}
+
+impl Planner for BisectionPlanner {
+    fn name(&self) -> String {
+        "bisection".to_string()
+    }
+
+    fn plan(&mut self, req: &PlanRequest) -> PlanReport {
+        let opts = req.effective_opts(&self.opts);
+        let mut basis = None;
+        let (plan, stats) = solve_binary_search_core(
+            req.problem,
+            &opts,
+            req.warm_upper,
+            req.seed_plan,
+            &mut basis,
+        );
+        let mut provenance = Provenance::cold(self.name());
+        provenance.warmed = req.seed_plan.is_some() || req.warm_upper.is_some();
+        match plan {
+            Some(plan) => PlanReport::found(plan, stats, provenance),
+            None => {
+                PlanReport::not_found(bisection_infeasibility(req.problem), stats, provenance)
+            }
+        }
+    }
+}
+
+/// The stateful planner: Algorithm 1 plus persistent warm state across
+/// calls. The session owns
+///
+/// * the **incumbent plan** of its last successful solve — used as the
+///   seed (first MILP incumbent + warm makespan bound) whenever the
+///   request doesn't bring its own; and
+/// * the **terminal basis** ([`BasisSnapshot`]) of the last exact
+///   feasibility root — crash-warming the first root of the next call, so
+///   consecutive bisections (replan epochs, baseline sweeps over the same
+///   problem family) skip the two-phase cold start entirely.
+///
+/// Both carries are self-guarding: a seed that doesn't map onto the
+/// request's candidate space is dropped, and a basis whose dimensions
+/// don't match the new feasibility model is refused by the arena itself.
+#[derive(Debug, Default)]
+pub struct PlannerSession {
+    opts: BinarySearchOptions,
+    incumbent: Option<ServingPlan>,
+    basis: Option<BasisSnapshot>,
+    /// Calls served so far (diagnostics).
+    solves: usize,
+}
+
+impl PlannerSession {
+    pub fn new(opts: BinarySearchOptions) -> Self {
+        Self {
+            opts,
+            incumbent: None,
+            basis: None,
+            solves: 0,
+        }
+    }
+
+    /// The search options this session plans with.
+    pub fn opts(&self) -> &BinarySearchOptions {
+        &self.opts
+    }
+
+    /// The incumbent plan of the last successful solve, if any.
+    pub fn incumbent(&self) -> Option<&ServingPlan> {
+        self.incumbent.as_ref()
+    }
+
+    /// True when the next call will crash-warm its root from a carried
+    /// basis.
+    pub fn has_warm_basis(&self) -> bool {
+        self.basis.is_some() && self.opts.carry_basis
+    }
+
+    /// Calls served so far.
+    pub fn solves(&self) -> usize {
+        self.solves
+    }
+
+    /// Drop all carried warm state (incumbent and basis) — e.g. when the
+    /// caller switches to an unrelated problem family.
+    pub fn reset(&mut self) {
+        self.incumbent = None;
+        self.basis = None;
+    }
+
+    /// Adopt an externally produced plan (a fast-path or incremental
+    /// repair that did not run through the session) as the incumbent, so
+    /// the session's seed tracks the plan actually in force. The carried
+    /// basis is untouched — it belongs to the last full solve, which is
+    /// exactly the right crash start for the next escalation.
+    pub fn observe_incumbent(&mut self, plan: &ServingPlan) {
+        self.incumbent = Some(plan.clone());
+    }
+
+    /// A seed plan is only usable when it indexes into this problem's
+    /// candidate space (sessions survive problem swaps; stale seeds must
+    /// not).
+    fn seed_applies(plan: &ServingPlan, p: &SchedProblem) -> bool {
+        plan.entries.iter().all(|e| e.candidate < p.candidates.len())
+    }
+}
+
+impl Planner for PlannerSession {
+    fn name(&self) -> String {
+        "session".to_string()
+    }
+
+    fn plan(&mut self, req: &PlanRequest) -> PlanReport {
+        let opts = req.effective_opts(&self.opts);
+        let own_seed = self
+            .incumbent
+            .as_ref()
+            .filter(|plan| Self::seed_applies(plan, req.problem));
+        let seed = req
+            .seed_plan
+            .filter(|plan| Self::seed_applies(plan, req.problem))
+            .or(own_seed);
+        let warm_upper = req.warm_upper.or_else(|| seed.map(|plan| plan.makespan));
+        let warmed = seed.is_some() || warm_upper.is_some() || self.has_warm_basis();
+        if !opts.carry_basis {
+            self.basis = None;
+        }
+        let (plan, stats) =
+            solve_binary_search_core(req.problem, &opts, warm_upper, seed, &mut self.basis);
+        self.solves += 1;
+        let mut provenance = Provenance::cold(self.name());
+        provenance.warmed = warmed;
+        match plan {
+            Some(plan) => {
+                self.incumbent = Some(plan.clone());
+                PlanReport::found(plan, stats, provenance)
+            }
+            None => {
+                PlanReport::not_found(bisection_infeasibility(req.problem), stats, provenance)
+            }
+        }
+    }
+}
+
+/// One-shot convenience: plan `p` with Algorithm 1 under `opts` through
+/// the [`Planner`] contract (benches and examples use this where no state
+/// needs to persist).
+pub fn plan_once(p: &SchedProblem, opts: &BinarySearchOptions) -> PlanReport {
+    BisectionPlanner::new(opts.clone()).plan(&PlanRequest::new(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::binary_search::Feasibility;
+    use crate::sched::toy::simple_example;
+
+    fn exact_opts() -> BinarySearchOptions {
+        BinarySearchOptions {
+            tolerance: 0.05,
+            feasibility: Feasibility::Exact,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn bisection_planner_reports_plan_and_stats() {
+        let p = simple_example();
+        let report = plan_once(&p, &exact_opts());
+        let plan = report.plan.as_ref().expect("toy plan");
+        plan.validate(&p, 1e-4).unwrap();
+        assert!(report.infeasible.is_none());
+        assert_eq!(report.provenance.strategy, "bisection");
+        assert!(!report.provenance.warmed);
+        assert!(report.stats.pivots > 0);
+        assert_eq!(report.stats.iterates.len(), report.stats.feasibility_checks);
+    }
+
+    #[test]
+    fn infeasibility_reasons_are_structured() {
+        // Zero availability: candidates exist but nothing fits.
+        let mut starved = simple_example();
+        starved.avail = vec![0, 0, 0];
+        let r = plan_once(&starved, &exact_opts());
+        assert_eq!(r.infeasible, Some(Infeasibility::Exhausted), "{:?}", r.plan);
+        // No candidate at all for the demanded workloads.
+        let mut uncoverable = simple_example();
+        uncoverable.candidates.clear();
+        let r = plan_once(&uncoverable, &exact_opts());
+        assert_eq!(r.infeasible, Some(Infeasibility::Uncoverable));
+        assert!(format!("{}", r.infeasible.unwrap()).contains("no candidate"));
+    }
+
+    #[test]
+    fn session_carries_incumbent_and_basis_across_calls() {
+        let p = simple_example();
+        let mut session = PlannerSession::new(exact_opts());
+        assert!(!session.has_warm_basis());
+        let first = session.plan(&PlanRequest::new(&p));
+        let first_plan = first.plan.expect("first plan");
+        assert!(!first.provenance.warmed, "first call has nothing to warm");
+        assert!(session.has_warm_basis(), "terminal basis not captured");
+        assert!(session.incumbent().is_some());
+
+        let second = session.plan(&PlanRequest::new(&p));
+        let second_plan = second.plan.expect("second plan");
+        assert!(second.provenance.warmed);
+        assert!(
+            second.stats.basis_roots > 0,
+            "second call never crash-warmed a root from the carried basis"
+        );
+        assert!(
+            (second_plan.makespan - first_plan.makespan).abs() <= 0.2,
+            "session drifted: {} vs {}",
+            second_plan.makespan,
+            first_plan.makespan
+        );
+        assert_eq!(session.solves(), 2);
+    }
+
+    #[test]
+    fn session_cost_matches_cold_planner_to_tolerance() {
+        let p = simple_example();
+        let cold = plan_once(&p, &exact_opts()).plan.expect("cold plan");
+        let mut session = PlannerSession::new(exact_opts());
+        session.plan(&PlanRequest::new(&p));
+        let warm = session
+            .plan(&PlanRequest::new(&p))
+            .plan
+            .expect("warm plan");
+        assert!(
+            (warm.makespan - cold.makespan).abs() <= 0.2,
+            "warm {} vs cold {}",
+            warm.makespan,
+            cold.makespan
+        );
+        // Both stay within the same budget, so cost can only differ by
+        // which equal-makespan optimum was picked.
+        assert!(warm.cost(&p) <= p.budget + 1e-6);
+    }
+
+    #[test]
+    fn session_drops_stale_seed_on_problem_swap() {
+        let p = simple_example();
+        let mut session = PlannerSession::new(exact_opts());
+        session.plan(&PlanRequest::new(&p));
+        // A problem with fewer candidates: the stored incumbent indexes
+        // out of range and must be dropped, not crash the solve.
+        let mut smaller = simple_example();
+        smaller.candidates.truncate(2);
+        let report = session.plan(&PlanRequest::new(&smaller));
+        if let Some(plan) = &report.plan {
+            plan.validate(&smaller, 1e-4).unwrap();
+        }
+        session.reset();
+        assert!(session.incumbent().is_none() && !session.has_warm_basis());
+    }
+
+    #[test]
+    fn request_builder_applies_overrides() {
+        let p = simple_example();
+        let plan = plan_once(&p, &exact_opts()).plan.unwrap();
+        let req = PlanRequest::new(&p)
+            .with_seed(&plan)
+            .with_drift(WorldDrift {
+                supply: 0.1,
+                demand: 0.0,
+            })
+            .with_deadline(Duration::from_secs(3))
+            .with_max_nodes(500);
+        assert_eq!(req.warm_upper, Some(plan.makespan));
+        let eff = req.effective_opts(&exact_opts());
+        assert_eq!(eff.milp.max_nodes, 500);
+        assert_eq!(eff.milp.time_limit, Duration::from_secs(3));
+        let report = BisectionPlanner::new(exact_opts()).plan(&req);
+        assert!(report.provenance.warmed);
+        let got = report.plan.expect("seeded plan");
+        assert!((got.makespan - plan.makespan).abs() <= 0.2);
+    }
+}

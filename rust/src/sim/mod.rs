@@ -394,8 +394,9 @@ mod tests {
     use crate::cloud::availability;
     use crate::perf_model::{ModelSpec, PerfModel};
     use crate::profiler::Profile;
-    use crate::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+    use crate::sched::binary_search::BinarySearchOptions;
     use crate::sched::enumerate::EnumOptions;
+    use crate::sched::planner::plan_once;
     use crate::workload::{synthesize_trace, SynthOptions, TraceMix};
 
     fn plan_and_sim(budget: f64, n_requests: usize) -> (SimResult, f64) {
@@ -410,8 +411,9 @@ mod tests {
             &availability(1),
             budget,
         );
-        let (plan, _) = solve_binary_search(&problem, &BinarySearchOptions::default());
-        let plan = plan.expect("plan");
+        let plan = plan_once(&problem, &BinarySearchOptions::default())
+            .into_plan()
+            .expect("plan");
         plan.validate(&problem, 1e-4).unwrap();
         let trace = synthesize_trace(
             &mix,

@@ -7,10 +7,15 @@
 //! delay, with the router steering around them until then); retired
 //! replicas keep serving through that spin-up window, then **drain**
 //! (finish their in-flight batch, hand queued-but-unstarted requests back
-//! to survivors, admit nothing new). Rental dollars accrue for every rented
-//! second — the old and new fleets *overlap* for the spin-up window, which
-//! is exactly where naive full re-solves bleed money — and per-epoch SLO
-//! attainment is reported against the epoch a request *arrived* in.
+//! to survivors, admit nothing new). A same-model plan change over the
+//! *same GPUs* (the plan diff's `Reparallelize` action) keeps the
+//! instances in place and merely **pauses** them for the re-shard window —
+//! no drain, no spin-up, no rental overlap — so simulated rent agrees with
+//! [`crate::orchestrator::MigrationCostModel`]'s cheap in-place re-shard
+//! pricing. Rental dollars accrue for every rented second — the old and
+//! new fleets *overlap* for the spin-up window on genuine replacements,
+//! which is exactly where naive full re-solves bleed money — and per-epoch
+//! SLO attainment is reported against the epoch a request *arrived* in.
 
 use super::SimOptions;
 use crate::metrics::{BusyTracker, LatencyRecorder};
@@ -39,6 +44,9 @@ pub struct TimelineOptions {
     pub max_batch: usize,
     /// Delay between renting a replica and it accepting traffic.
     pub spin_up_s: f64,
+    /// In-place re-shard pause: a replica whose layout changes over the
+    /// same GPUs stays rented but serves nothing for this long.
+    pub reshard_s: f64,
     /// Per-request latency SLO for attainment accounting.
     pub slo_latency_s: f64,
 }
@@ -46,12 +54,15 @@ pub struct TimelineOptions {
 impl Default for TimelineOptions {
     fn default() -> Self {
         let sim = SimOptions::default();
+        let migration = crate::orchestrator::MigrationCostModel::default();
         Self {
             seed: sim.seed,
             max_batch: sim.max_batch,
             // Single source of truth: the simulator executes the same
-            // spin-up the orchestrator's migration cost model prices.
-            spin_up_s: crate::orchestrator::MigrationCostModel::default().spin_up_s,
+            // spin-up / re-shard the orchestrator's migration cost model
+            // prices.
+            spin_up_s: migration.spin_up_s,
+            reshard_s: migration.reshard_s,
             slo_latency_s: 120.0,
         }
     }
@@ -86,8 +97,12 @@ pub struct TimelineResult {
     pub epochs: Vec<EpochStats>,
     pub makespan: f64,
     pub total_rental_usd: f64,
-    /// Replica spin-ups + retirements executed at epoch boundaries.
+    /// Replica spin-ups + retirements + in-place re-shards executed at
+    /// epoch boundaries.
     pub transitions_applied: usize,
+    /// Of those, re-parallelizations executed in place (instance kept,
+    /// paused for the re-shard window).
+    pub reshards_applied: usize,
     pub replicas_peak: usize,
 }
 
@@ -118,6 +133,9 @@ struct Instance {
     /// Set when a later epoch retires the replica: admit nothing after
     /// this; finish in-flight work, then release.
     retire_at_s: Option<f64>,
+    /// Re-shard pause windows `[from, until)`: the instance stays rented
+    /// but serves nothing while its weights re-partition in place.
+    pauses: Vec<(f64, f64)>,
     queue: VecDeque<Request>,
     batch: Vec<InFlight>,
     token_capacity: f64,
@@ -132,6 +150,19 @@ impl Instance {
 
     fn retired_by(&self, t: f64) -> bool {
         self.retire_at_s.map(|r| t + 1e-9 >= r).unwrap_or(false)
+    }
+
+    /// End of the re-shard pause covering `t`, if any.
+    fn pause_until(&self, t: f64) -> Option<f64> {
+        self.pauses
+            .iter()
+            .find(|&&(from, until)| t + 1e-9 >= from && t + 1e-9 < until)
+            .map(|&(_, until)| until)
+    }
+
+    /// Active (spun up) and not mid-re-shard at `t`.
+    fn serviceable_at(&self, t: f64) -> bool {
+        self.active_from_s <= t + 1e-9 && self.pause_until(t).is_none()
     }
 }
 
@@ -229,9 +260,54 @@ pub fn simulate_timeline(
     // candidate ci during epoch e.
     let mut members: Vec<Vec<Vec<usize>>> = Vec::with_capacity(steps.len());
     let mut transitions_applied = 0usize;
+    let mut reshards_applied = 0usize;
     for (si, step) in steps.iter().enumerate() {
         let t = step.start_s;
         let want = crate::orchestrator::replica_counts(step.problem, step.plan);
+        // Re-parallelize pass (mirrors `PlanDiff::between`'s pairing):
+        // surplus replicas of one candidate cover deficits of another
+        // candidate of the *same model over the same GPUs* by converting
+        // the instance in place — the GPUs stay rented, the weights
+        // re-partition, and the instance pauses for the re-shard window
+        // instead of draining while a replacement spins up.
+        for ci in 0..ncand {
+            let mut surplus =
+                (alive[ci].len() as u32).saturating_sub(want[ci]);
+            if surplus == 0 {
+                continue;
+            }
+            for cj in 0..ncand {
+                if ci == cj || surplus == 0 {
+                    continue;
+                }
+                let deficit = want[cj].saturating_sub(alive[cj].len() as u32);
+                if deficit == 0 {
+                    continue;
+                }
+                let (a, b) = (&step.problem.candidates[ci], &step.problem.candidates[cj]);
+                if a.model != b.model || a.gpu_counts != b.gpu_counts {
+                    continue;
+                }
+                let config = b
+                    .replica
+                    .clone()
+                    .expect("simulate_timeline requires concrete replica configs");
+                let cap = perf.max_batch_tokens(&config, &models[b.model]);
+                let moved = surplus.min(deficit);
+                for _ in 0..moved {
+                    let id = alive[ci].pop().unwrap();
+                    let inst = &mut instances[id];
+                    inst.candidate = cj;
+                    inst.config = config.clone();
+                    inst.token_capacity = cap;
+                    inst.pauses.push((t, t + opts.reshard_s));
+                    alive[cj].push(id);
+                    transitions_applied += 1;
+                    reshards_applied += 1;
+                }
+                surplus -= moved;
+            }
+        }
         for (ci, &target) in want.iter().enumerate() {
             let have = alive[ci].len() as u32;
             if target > have {
@@ -251,6 +327,7 @@ pub fn simulate_timeline(
                         rent_from_s: t,
                         active_from_s: if si == 0 { t } else { t + opts.spin_up_s },
                         retire_at_s: None,
+                        pauses: Vec::new(),
                         queue: VecDeque::new(),
                         batch: Vec::new(),
                         token_capacity: cap,
@@ -343,9 +420,10 @@ pub fn simulate_timeline(
 
             // Replica selection: the chosen entry's active replicas first;
             // otherwise any active replica of the model (route around
-            // spin-ups); otherwise the entry's earliest-activating replica
-            // (the request waits out the spin-up).
-            let active = |id: usize| instances[id].active_from_s <= req.arrival_s + 1e-9;
+            // spin-ups and re-shard pauses); otherwise the entry's
+            // earliest-activating replica (the request waits out the
+            // spin-up).
+            let active = |id: usize| instances[id].serviceable_at(req.arrival_s);
             let least_loaded = |ids: &[usize]| -> Option<usize> {
                 ids.iter()
                     .copied()
@@ -447,7 +525,7 @@ pub fn simulate_timeline(
                     i != ri
                         && r.model_idx == model_idx
                         && !r.retired_by(now)
-                        && r.active_from_s <= now + 1e-9
+                        && r.serviceable_at(now)
                 })
                 .min_by(|(_, a), (_, b)| {
                     let la = a.tokens_in_use() + a.queue.len() as f64;
@@ -471,6 +549,16 @@ pub fn simulate_timeline(
         if now + 1e-9 < instances[ri].active_from_s {
             heap.push(Event {
                 time: instances[ri].active_from_s,
+                replica: ri,
+            });
+            continue;
+        }
+
+        // Mid-re-shard: the instance stays rented but serves nothing until
+        // the pause ends; everything it owes waits it out.
+        if let Some(until) = instances[ri].pause_until(now) {
+            heap.push(Event {
+                time: until,
                 replica: ri,
             });
             continue;
@@ -622,6 +710,7 @@ pub fn simulate_timeline(
         makespan,
         total_rental_usd,
         transitions_applied,
+        reshards_applied,
         replicas_peak,
     }
 }
@@ -632,8 +721,9 @@ mod tests {
     use crate::cloud::availability;
     use crate::perf_model::{ModelSpec, PerfModel};
     use crate::profiler::Profile;
-    use crate::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+    use crate::sched::binary_search::BinarySearchOptions;
     use crate::sched::enumerate::EnumOptions;
+    use crate::sched::planner::plan_once;
     use crate::sched::SchedProblem;
     use crate::workload::{synthesize_trace, SynthOptions, TraceMix};
 
@@ -690,11 +780,11 @@ mod tests {
         let mut incumbent: Option<crate::sched::ServingPlan> = None;
         for p in &problems {
             let plan = match &incumbent {
-                None => solve_binary_search(p, &opts).0.expect("initial plan"),
+                None => plan_once(p, &opts).into_plan().expect("initial plan"),
                 Some(inc) => {
                     let mut stats = crate::sched::binary_search::SearchStats::default();
                     crate::orchestrator::incremental_repair(p, inc, &mut stats)
-                        .or_else(|| solve_binary_search(p, &opts).0)
+                        .or_else(|| plan_once(p, &opts).into_plan())
                         .expect("replan")
                 }
             };
@@ -828,6 +918,98 @@ mod tests {
         assert_eq!(result.epochs.len(), 1);
         let e = &result.epochs[0];
         assert!((e.slo_attainment - result.slo_attainment(120.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reparallelize_keeps_instances_and_pays_no_overlap() {
+        // Regression for the ROADMAP item: a `Reparallelize` plan change
+        // (same model, same GPUs, new TP/PP layout) must execute as an
+        // in-place pause, not drain + spin-up — so the simulated rent is
+        // the continuous single-fleet rent the migration cost model's
+        // cheap re-shard pricing assumes, with no overlap window.
+        use crate::catalog::{GpuSpec, GpuType};
+        use crate::orchestrator::PlanDiff;
+        use crate::perf_model::ReplicaConfig;
+        use crate::sched::{Candidate, PlanEntry, ServingPlan};
+
+        let model = ModelSpec::llama3_8b();
+        let perf = PerfModel::default();
+        let price = GpuSpec::of(GpuType::A40).price_per_hour * 2.0;
+        let mk_cand = |tp: usize, pp: usize, label: &str| Candidate {
+            model: 0,
+            cost: price,
+            gpu_counts: vec![0, 2, 0, 0, 0, 0], // two A40s either way
+            h: vec![1.0; 9],
+            label: label.to_string(),
+            replica: Some(ReplicaConfig::uniform(GpuType::A40, tp, pp)),
+        };
+        let p = SchedProblem {
+            num_gpu_types: 6,
+            avail: availability(1).counts.to_vec(),
+            budget: 4.0 * price,
+            demands: vec![TraceMix::trace1().demands(400.0).to_vec()],
+            candidates: vec![mk_cand(2, 1, "a40-tp2"), mk_cand(1, 2, "a40-pp2")],
+        };
+        let mk_plan = |c: usize| ServingPlan {
+            entries: vec![PlanEntry {
+                candidate: c,
+                replicas: 2,
+                fractions: vec![1.0; 9],
+            }],
+            makespan: 0.0,
+        };
+        let (plan_a, plan_b) = (mk_plan(0), mk_plan(1));
+        // The diff engine classifies this transition as a pure re-shard.
+        let diff = PlanDiff::between(&p, &plan_a, &plan_b);
+        assert_eq!(diff.reparallelized_replicas(), 2);
+        assert_eq!(diff.spun_up_replicas(), 0);
+
+        let steps = vec![
+            TimelineStep {
+                start_s: 0.0,
+                problem: &p,
+                plan: &plan_a,
+            },
+            TimelineStep {
+                start_s: 120.0,
+                problem: &p,
+                plan: &plan_b,
+            },
+        ];
+        let trace = trace_for(400, 2.0, 11);
+        let opts = TimelineOptions {
+            spin_up_s: 60.0,
+            reshard_s: 20.0,
+            ..Default::default()
+        };
+        let result = simulate_timeline(
+            &steps,
+            std::slice::from_ref(&model),
+            std::slice::from_ref(&trace),
+            &perf,
+            &opts,
+        );
+        assert_eq!(result.recorder.count(), 400, "requests lost in re-shard");
+        assert_eq!(result.reshards_applied, 2);
+        assert_eq!(result.transitions_applied, 2);
+        // The instances were kept: never more than the two replicas, and
+        // the rent is the continuous two-replica rent — the drain+spin-up
+        // execution would have rented four replicas for the whole
+        // overlap window.
+        assert_eq!(result.replicas_peak, 2);
+        let sim_end = result.epochs.last().unwrap().end_s;
+        let continuous = 2.0 * price * sim_end / 3600.0;
+        assert!(
+            (result.total_rental_usd - continuous).abs() < 1e-6,
+            "rent {} vs continuous single-fleet {}",
+            result.total_rental_usd,
+            continuous
+        );
+        let overlap_rent = 2.0 * price * opts.spin_up_s / 3600.0;
+        assert!(
+            result.total_rental_usd < continuous + overlap_rent - 1e-9,
+            "re-shard paid a drain+spin-up overlap"
+        );
     }
 
     #[test]

@@ -5,8 +5,9 @@
 use hetserve::cloud::{availability, Availability};
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{solve_binary_search, BinarySearchOptions};
+use hetserve::sched::binary_search::BinarySearchOptions;
 use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::planner::plan_once;
 use hetserve::sched::SchedProblem;
 use hetserve::sim::{simulate_plan, SimOptions};
 use hetserve::util::proptest::{check, gen_u64, prop_assert, Gen};
@@ -34,8 +35,7 @@ fn plans_valid_across_the_grid() {
                     &availability(avail_idx),
                     budget,
                 );
-                let (plan, _) = solve_binary_search(&p, &opts());
-                let plan = plan.unwrap_or_else(|| {
+                let plan = plan_once(&p, &opts()).into_plan().unwrap_or_else(|| {
                     panic!("no plan: {} {} b={budget}", model.name, mix.name)
                 });
                 plan.validate(&p, 1e-4).expect("plan invariants");
@@ -59,7 +59,7 @@ fn makespan_monotone_in_budget() {
         let hi = lo + 15;
         let build = |b: f64| {
             let p = SchedProblem::from_profile(&profile, &mix, 1000.0, &avail, b);
-            solve_binary_search(&p, &opts()).0.map(|pl| pl.makespan)
+            plan_once(&p, &opts()).into_plan().map(|pl| pl.makespan)
         };
         let (m_lo, m_hi) = (build(lo as f64), build((hi) as f64));
         match (m_lo, m_hi) {
@@ -81,7 +81,7 @@ fn more_availability_never_hurts() {
     let mix = TraceMix::trace1();
     let solve_with = |avail: Availability| {
         let p = SchedProblem::from_profile(&profile, &mix, 1000.0, &avail, 30.0);
-        solve_binary_search(&p, &opts()).0.map(|pl| pl.makespan)
+        plan_once(&p, &opts()).into_plan().map(|pl| pl.makespan)
     };
     let tight = solve_with(Availability::new([2, 2, 2, 2, 2, 2]));
     let loose = solve_with(Availability::new([16, 16, 16, 16, 16, 16]));
@@ -127,7 +127,7 @@ fn random_problems_never_produce_invalid_plans() {
             &Availability::new([avail[0], avail[1], avail[2], avail[3], avail[4], avail[5]]),
             *budget,
         );
-        match solve_binary_search(&p, &opts()).0 {
+        match plan_once(&p, &opts()).into_plan() {
             Some(plan) => {
                 plan.validate(&p, 1e-3).map_err(|e| format!("invalid plan: {e}"))?;
                 prop_assert(plan.makespan > 0.0, "positive makespan")
@@ -156,8 +156,7 @@ fn simulator_agrees_with_planner_ordering() {
     );
     let run = |budget: f64| {
         let p = SchedProblem::from_profile(&profile, &mix, 600.0, &availability(1), budget);
-        let (plan, _) = solve_binary_search(&p, &opts());
-        let plan = plan.unwrap();
+        let plan = plan_once(&p, &opts()).into_plan().unwrap();
         let res = simulate_plan(
             &p,
             &plan,

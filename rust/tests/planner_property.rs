@@ -1,0 +1,178 @@
+//! Trait-level property test for the unified `Planner` surface: every
+//! planner implementation — the production bisection, the stateful
+//! session, and all the baselines — is run over randomized planner-shaped
+//! problems and must honour the one `PlanRequest` → `PlanReport` contract:
+//!
+//! * exactly one of `plan` / `infeasible` is set, with provenance naming
+//!   the producing strategy;
+//! * every returned plan passes `ServingPlan::validate` against the
+//!   problem the planner actually answered (homogeneous baselines answer
+//!   an unlimited-supply counterfactual and are exempt from the
+//!   availability check by design);
+//! * the report's statistics are internally consistent (per-iterate
+//!   records account for every feasibility check, warm/cold splits never
+//!   exceed the LP total);
+//! * a basis-carrying `PlannerSession` matches a cold per-T̂ planner's
+//!   plan cost/makespan to tolerance on the same problem.
+
+use hetserve::baselines::all_planners;
+use hetserve::sched::binary_search::{BinarySearchOptions, Feasibility};
+use hetserve::sched::planner::{
+    BisectionPlanner, PlanRequest, Planner, PlannerSession,
+};
+use hetserve::sched::{Candidate, SchedProblem};
+use hetserve::util::proptest::{check, prop_assert, Gen};
+use hetserve::util::rng::Xoshiro256;
+
+/// A random planner-shaped problem over the 6-type cloud catalog: a
+/// handful of candidates (one-hot GPU compositions, partial workload
+/// coverage), random demands, budget, and availability.
+fn gen_problem() -> Gen<SchedProblem> {
+    Gen::opaque(|rng: &mut Xoshiro256| {
+        let nw = 2 + rng.index(2); // 2..=3 workload types
+        let ncand = 3 + rng.index(4); // 3..=6 candidates
+        let mut candidates = Vec::with_capacity(ncand);
+        for ci in 0..ncand {
+            let gpu = rng.index(6);
+            let count = 1 + rng.index(2) as u32;
+            let mut gpu_counts = vec![0u32; 6];
+            gpu_counts[gpu] = count;
+            // Every candidate serves workload 0 so coverage is possible;
+            // the rest of the row is hit-or-miss.
+            let h: Vec<f64> = (0..nw)
+                .map(|w| {
+                    if w == 0 || rng.index(3) > 0 {
+                        rng.range_f64(0.2, 3.0)
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            candidates.push(Candidate {
+                model: 0,
+                cost: rng.range_f64(0.5, 5.0),
+                gpu_counts,
+                h,
+                label: format!("c{ci}"),
+                replica: None,
+            });
+        }
+        let demands: Vec<f64> = (0..nw).map(|_| rng.range_f64(5.0, 60.0)).collect();
+        let avail: Vec<u32> = (0..6).map(|_| rng.range_u64(0, 4) as u32).collect();
+        SchedProblem {
+            num_gpu_types: 6,
+            avail,
+            budget: rng.range_f64(2.0, 25.0),
+            demands: vec![demands],
+            candidates,
+        }
+    })
+}
+
+fn exact_opts(carry_basis: bool) -> BinarySearchOptions {
+    BinarySearchOptions {
+        tolerance: 0.2,
+        feasibility: Feasibility::Exact,
+        carry_basis,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_planner_honours_the_report_contract() {
+    check(24, 0x9147_0001, gen_problem(), |p| {
+        for planner in all_planners(&exact_opts(true)).iter_mut() {
+            let name = planner.name();
+            // The request's solver-budget overrides bound the worst case.
+            let req = PlanRequest::new(p)
+                .with_max_nodes(2_000)
+                .with_deadline(std::time::Duration::from_millis(500));
+            let report = planner.plan(&req);
+            prop_assert(
+                report.plan.is_some() != report.infeasible.is_some(),
+                format!("{name}: exactly one of plan/infeasible must be set"),
+            )?;
+            prop_assert(
+                report.provenance.strategy == name,
+                format!(
+                    "{name}: provenance says {}",
+                    report.provenance.strategy
+                ),
+            )?;
+            // Stats consistency.
+            let s = &report.stats;
+            prop_assert(
+                s.warm_solves + s.cold_solves <= s.lp_solves,
+                format!("{name}: warm+cold exceeds LP solves"),
+            )?;
+            prop_assert(
+                s.iterates.len() == s.feasibility_checks,
+                format!(
+                    "{name}: {} iterate records for {} checks",
+                    s.iterates.len(),
+                    s.feasibility_checks
+                ),
+            )?;
+            prop_assert(
+                s.basis_roots <= s.feasibility_checks,
+                format!("{name}: more basis roots than checks"),
+            )?;
+            let iterate_pivots: u64 = s.iterates.iter().map(|i| i.pivots).sum();
+            prop_assert(
+                iterate_pivots <= s.pivots,
+                format!("{name}: iterate pivots exceed the total"),
+            )?;
+            if let Some(plan) = &report.plan {
+                prop_assert(
+                    plan.makespan.is_finite() && plan.makespan >= 0.0,
+                    format!("{name}: bad makespan {}", plan.makespan),
+                )?;
+                // Homogeneous baselines answer an unlimited-supply
+                // counterfactual: their plans deliberately ignore the
+                // problem's availability.
+                if !name.starts_with("homogeneous-") {
+                    plan.validate(p, 1e-3)
+                        .map_err(|e| format!("{name}: invalid plan: {e}"))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn basis_carrying_session_matches_cold_planner_cost() {
+    check(16, 0x9147_0002, gen_problem(), |p| {
+        let cold = BisectionPlanner::new(exact_opts(false)).plan(&PlanRequest::new(p));
+        let mut session = PlannerSession::new(exact_opts(true));
+        let first = session.plan(&PlanRequest::new(p));
+        let second = session.plan(&PlanRequest::new(p));
+        prop_assert(
+            cold.plan.is_some() == first.plan.is_some()
+                && first.plan.is_some() == second.plan.is_some(),
+            format!(
+                "feasibility verdicts diverge: cold {:?} first {:?} second {:?}",
+                cold.infeasible, first.infeasible, second.infeasible
+            ),
+        )?;
+        if let (Some(c), Some(a), Some(b)) = (&cold.plan, &first.plan, &second.plan) {
+            // The bisection tolerance (plus the realised-makespan slack the
+            // polish step exploits, plus alternative-optima vertex choice)
+            // bounds how far two runs can land apart.
+            let tol = 1.0 + 0.10 * c.makespan.abs();
+            prop_assert(
+                (a.makespan - c.makespan).abs() <= tol
+                    && (b.makespan - c.makespan).abs() <= tol,
+                format!(
+                    "session drifted from cold: cold {} first {} second {}",
+                    c.makespan, a.makespan, b.makespan
+                ),
+            )?;
+            prop_assert(
+                b.cost(p) <= p.budget + 1e-6 && a.cost(p) <= p.budget + 1e-6,
+                "session plan broke the budget",
+            )?;
+        }
+        Ok(())
+    });
+}

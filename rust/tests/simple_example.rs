@@ -3,10 +3,9 @@
 //! optimality of the jointly-optimised plan.
 
 use hetserve::milp::MilpOptions;
-use hetserve::sched::binary_search::{
-    solve_binary_search, BinarySearchOptions, Feasibility,
-};
+use hetserve::sched::binary_search::{BinarySearchOptions, Feasibility};
 use hetserve::sched::formulation::solve_direct;
+use hetserve::sched::planner::plan_once;
 use hetserve::sched::{proportional_makespan, Candidate, SchedProblem};
 
 /// Build the toy instance from §4.2: three GPU types (2 each at 4/2/2 $/h),
@@ -80,14 +79,15 @@ fn binary_search_matches_direct_on_toy() {
     let (direct, _) = solve_direct(&p, &MilpOptions::default());
     let direct = direct.unwrap();
     for feas in [Feasibility::Exact, Feasibility::Knapsack] {
-        let (bs, _) = solve_binary_search(
+        let bs = plan_once(
             &p,
             &BinarySearchOptions {
                 tolerance: 0.05,
                 feasibility: feas,
                 ..Default::default()
             },
-        );
+        )
+        .into_plan();
         let bs = bs.unwrap();
         bs.validate(&p, 1e-4).unwrap();
         assert!(
