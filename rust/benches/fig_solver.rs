@@ -37,6 +37,7 @@ use hetserve::sched::enumerate::EnumOptions;
 use hetserve::sched::formulation::solve_direct;
 use hetserve::sched::planner::{PlanRequest, Planner, PlannerSession};
 use hetserve::sched::SchedProblem;
+use hetserve::telemetry;
 use hetserve::util::bench::{cell, Table};
 use hetserve::util::cli::Args;
 use hetserve::util::json::Json;
@@ -157,6 +158,32 @@ fn main() {
     let direct_cold = direct(false);
     let direct_warm = direct(true);
 
+    // ---- telemetry probe cost -------------------------------------------
+    // The same basis-carrying session solve with the metric registry and
+    // span sink live. The wall-time delta over the untraced `session` run
+    // above goes into the JSON line so dashboards can track the probe
+    // cost against its ≤5% budget. (Single-run walls are noisy in --quick
+    // mode; small negative readings mean "unmeasurable".)
+    let traced_wall = {
+        telemetry::set_enabled(true);
+        let mut planner = PlannerSession::new(exact_opts(true, true));
+        let t0 = Instant::now();
+        let report = planner.plan(&PlanRequest::new(&problem));
+        let wall = t0.elapsed();
+        telemetry::set_enabled(false);
+        let _ = telemetry::drain_events();
+        if report.stats.lp_solves != session.lp_solves {
+            println!(
+                "note: traced session did {} LP solves vs {} untraced (time-limit jitter) — \
+                 overhead reading is unreliable",
+                report.stats.lp_solves, session.lp_solves
+            );
+        }
+        wall
+    };
+    let telemetry_overhead_pct =
+        (traced_wall.as_secs_f64() / session.wall.as_secs_f64().max(1e-9) - 1.0) * 100.0;
+
     let mut t = Table::new(
         &format!(
             "fig_solver — {} on {}, budget {} $/h, tol {}s{}",
@@ -263,9 +290,11 @@ fn main() {
             "wall_ratio_cold_over_warm",
             Json::num(cold_wall.as_secs_f64() / warm_wall.as_secs_f64().max(1e-9)),
         ),
+        ("telemetry_overhead_pct", Json::num(telemetry_overhead_pct)),
     ]);
     let line = report.to_string();
     println!("BENCH_solver.json {line}");
+    println!("telemetry overhead on session solve: {telemetry_overhead_pct:+.1}% (budget: <=5%)");
 
     // SHAPE CHECK 1: warm must do the same planning with ≥2× fewer pivots
     // and must not be slower; the sweeps must agree on the plan quality.

@@ -15,6 +15,7 @@ use hetserve::sched::formulation::build_direct;
 use hetserve::sched::planner::plan_once;
 use hetserve::sched::SchedProblem;
 use hetserve::sim::{simulate_plan, SimOptions};
+use hetserve::telemetry;
 use hetserve::util::bench::{bench, bench_quick, black_box, report_header, BenchResult};
 use hetserve::util::cli::Args;
 use hetserve::util::rng::Xoshiro256;
@@ -117,6 +118,38 @@ fn main() {
         black_box(s.solve_cold());
     });
     println!("{}", r.report());
+
+    // L3: telemetry probe cost on the warm-resolve micro — the identical
+    // loop with the metric registry live vs telemetry compiled in but
+    // disabled. Budget: ≤5% when enabled; disabled is a single relaxed
+    // atomic load per solve and must be lost in the noise.
+    telemetry::set_enabled(true);
+    let mut hi = 0.0;
+    let r_on = run(quick, "node_resolve telemetry=on", || {
+        hi = 1.0 - hi;
+        arena.set_var_bounds(v, 0.0, hi);
+        if arena.dual_ready() && !arena.refresh_due() {
+            black_box(arena.resolve_dual());
+        } else {
+            black_box(arena.solve_cold());
+        }
+    });
+    telemetry::set_enabled(false);
+    let _ = telemetry::drain_events();
+    println!("{}", r_on.report());
+    let mut hi = 0.0;
+    let r_off = run(quick, "node_resolve telemetry=off", || {
+        hi = 1.0 - hi;
+        arena.set_var_bounds(v, 0.0, hi);
+        if arena.dual_ready() && !arena.refresh_due() {
+            black_box(arena.resolve_dual());
+        } else {
+            black_box(arena.solve_cold());
+        }
+    });
+    println!("{}", r_off.report());
+    let overhead_pct = (r_on.mean_ns / r_off.mean_ns.max(1e-9) - 1.0) * 100.0;
+    println!("telemetry overhead on warm resolve: {overhead_pct:+.2}% (budget: <=5% enabled)");
 
     // L3: discrete-event simulator — requests/second of simulation.
     let plan = plan_once(&problem, &opts).into_plan().unwrap();

@@ -34,6 +34,11 @@
 //! * [`sim`] — discrete-event cluster simulator executing serving plans,
 //!   including time-varying timelines with mid-trace plan transitions and
 //!   the closed demand loop (estimator-driven replanning)
+//! * [`telemetry`] — unified observability: a global metric registry
+//!   (atomic counters / gauges / log-bucketed histograms), RAII nesting
+//!   spans with thread-aware buffering, Chrome trace-event export
+//!   (`--trace-out`, perfetto-viewable), and the `TelemetrySnapshot`
+//!   report merged into command output
 //! * [`runtime`] — PJRT engine: loads AOT HLO artifacts, paged KV cache
 //! * [`coordinator`] — the real serving path: router, batcher, workers
 
@@ -57,5 +62,6 @@ pub mod profiler;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod workload;

@@ -48,14 +48,28 @@ USAGE: hetserve <subcommand> [--options]
   serve       --requests 48 --replicas 2 --router jsq|rr [--arrival-rate RPS]
   profile     --model 70b
   market      --ticks 96 --seed 7
+
+Global options:
+  --log error|warn|info|debug|trace   set the stderr log level
+  --verbose                           shorthand for --log debug
+  --trace-out PATH   enable telemetry and write a Chrome trace-event JSON
+                     (view at https://ui.perfetto.dev); also prints the
+                     telemetry snapshot (counters/gauges/histograms)
 ";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(&["exact", "verbose"]);
-    if args.flag("verbose") {
-        hetserve::util::logging::set_level_from_str("debug");
+    if let Some(level) = args.get("log") {
+        hetserve::util::logging::set_level_from_str(level)
+            .map_err(|e| anyhow::anyhow!("--log: {e}"))?;
+    } else if args.flag("verbose") {
+        hetserve::util::logging::set_level_from_str("debug").expect("literal level is valid");
     }
-    match args.subcommand() {
+    let trace_out = args.get("trace-out").map(str::to_string);
+    if trace_out.is_some() {
+        hetserve::telemetry::set_enabled(true);
+    }
+    let result = match args.subcommand() {
         Some("plan") => cmd_plan(&args, false),
         Some("simulate") => cmd_plan(&args, true),
         Some("orchestrate") => cmd_orchestrate(&args),
@@ -67,7 +81,17 @@ fn main() -> anyhow::Result<()> {
             print!("{HELP}");
             Ok(())
         }
+    };
+    if let Some(path) = trace_out {
+        // Export even after a failed run — a trace of a failure is the
+        // one you actually want to look at.
+        let snap = hetserve::telemetry::snapshot_json().to_string();
+        println!("telemetry: {snap}");
+        hetserve::telemetry::write_chrome_trace(&path)
+            .map_err(|e| anyhow::anyhow!("--trace-out {path}: {e}"))?;
+        println!("trace written to {path} (open in https://ui.perfetto.dev)");
     }
+    result
 }
 
 fn build_problem(args: &Args) -> (ModelSpec, PerfModel, Profile, TraceMix, SchedProblem) {

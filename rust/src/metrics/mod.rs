@@ -3,12 +3,28 @@
 //! every benchmark harness.
 
 use crate::util::stats::{paper_percentile_grid, percentile};
+use std::sync::{Arc, Mutex};
 
 /// Collects per-request latencies and completion times.
-#[derive(Clone, Debug, Default)]
+#[derive(Debug, Default)]
 pub struct LatencyRecorder {
     /// (completion_time_s, latency_s) pairs.
     samples: Vec<(f64, f64)>,
+    /// Lazily-built ascending latency view shared by every percentile
+    /// query. Percentile callers used to re-sort the full sample vector on
+    /// *every* call (the per-epoch reporting loop made that quadratic);
+    /// now the first query after a mutation sorts once and the rest reuse
+    /// the cached view. Mutations (`record`/`merge`) invalidate it.
+    sorted: Mutex<Option<Arc<Vec<f64>>>>,
+}
+
+impl Clone for LatencyRecorder {
+    fn clone(&self) -> Self {
+        Self {
+            samples: self.samples.clone(),
+            sorted: Mutex::new(self.sorted.lock().unwrap().clone()),
+        }
+    }
 }
 
 impl LatencyRecorder {
@@ -18,6 +34,7 @@ impl LatencyRecorder {
 
     pub fn record(&mut self, completion_s: f64, latency_s: f64) {
         self.samples.push((completion_s, latency_s));
+        *self.sorted.get_mut().unwrap() = None;
     }
 
     pub fn count(&self) -> usize {
@@ -43,25 +60,37 @@ impl LatencyRecorder {
         }
     }
 
-    /// Latency percentile (p in [0,100]).
-    pub fn latency_percentile(&self, p: f64) -> f64 {
+    /// The sorted latency view behind every percentile query: built on the
+    /// first call after a mutation, shared (via `Arc`) afterwards.
+    fn sorted_latencies(&self) -> Arc<Vec<f64>> {
+        let mut guard = self.sorted.lock().unwrap();
+        if let Some(v) = guard.as_ref() {
+            return Arc::clone(v);
+        }
         let mut v = self.latencies();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        percentile(&v, p)
+        let v = Arc::new(v);
+        *guard = Some(Arc::clone(&v));
+        v
+    }
+
+    /// Latency percentile (p in [0,100]).
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        percentile(self.sorted_latencies().as_slice(), p)
     }
 
     /// The paper's p5..p100 latency grid.
     pub fn percentile_grid(&self) -> Vec<(f64, f64)> {
-        let mut v = self.latencies();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let v = self.sorted_latencies();
         paper_percentile_grid()
             .into_iter()
-            .map(|p| (p, percentile(&v, p)))
+            .map(|p| (p, percentile(v.as_slice(), p)))
             .collect()
     }
 
     pub fn merge(&mut self, other: &LatencyRecorder) {
         self.samples.extend_from_slice(&other.samples);
+        *self.sorted.get_mut().unwrap() = None;
     }
 
     /// Fraction of recorded requests whose latency is within `slo_s` (SLO
@@ -141,6 +170,41 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert_eq!(a.makespan(), 2.0);
+    }
+
+    #[test]
+    fn cached_percentiles_match_naive_resort() {
+        // The cached sorted view must be observationally identical to the
+        // old sort-on-every-call behaviour, including across mutations
+        // that invalidate it.
+        let naive = |r: &LatencyRecorder, p: f64| {
+            let mut v = r.latencies();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            percentile(&v, p)
+        };
+        let mut r = LatencyRecorder::new();
+        // Deliberately unsorted arrivals, with duplicates.
+        for (i, &l) in [5.0, 1.0, 3.0, 3.0, 9.0, 2.0, 7.0].iter().enumerate() {
+            r.record(i as f64, l);
+        }
+        for p in [0.0, 5.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(r.latency_percentile(p), naive(&r, p), "p{p}");
+            // Second call answers from the cache — still identical.
+            assert_eq!(r.latency_percentile(p), naive(&r, p), "cached p{p}");
+        }
+        // Mutating after a cached query must invalidate the view.
+        r.record(100.0, 0.5);
+        assert_eq!(r.latency_percentile(0.0), 0.5);
+        let mut other = LatencyRecorder::new();
+        other.record(101.0, 42.0);
+        r.merge(&other);
+        assert_eq!(r.latency_percentile(100.0), 42.0);
+        // A clone carries consistent state too.
+        let c = r.clone();
+        assert_eq!(c.latency_percentile(50.0), naive(&c, 50.0));
+        for (p, v) in r.percentile_grid() {
+            assert_eq!(v, naive(&r, p), "grid p{p}");
+        }
     }
 
     #[test]

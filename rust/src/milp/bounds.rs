@@ -25,6 +25,7 @@
 //! and force a cold fallback; see `set_var_bounds`.
 
 use super::simplex::{Cmp, Lp};
+use crate::telemetry;
 
 pub(crate) const EPS: f64 = 1e-9;
 pub(crate) const PIVOT_EPS: f64 = 1e-7;
@@ -93,6 +94,11 @@ pub struct BoundedSimplex {
     var_hi: Vec<f64>,
     scratch: Vec<f64>,
     pivots: u64,
+    /// Bound flips (nonbasic column complements) — plain field, mirrored
+    /// into the telemetry registry at solve granularity.
+    flips: u64,
+    /// Cold tableau refactorisations ([`rebuild`](Self::rebuild) calls).
+    rebuilds: u64,
     /// Pivot counter at the last cold rebuild — the eliminated tableau
     /// accumulates FP error with every pivot, so warm chains refactorise
     /// periodically (see [`refresh_due`](Self::refresh_due)).
@@ -132,6 +138,8 @@ impl BoundedSimplex {
             var_hi,
             scratch: vec![0.0; cols],
             pivots: 0,
+            flips: 0,
+            rebuilds: 0,
             pivots_at_rebuild: 0,
             dual_ready: false,
         }
@@ -140,6 +148,16 @@ impl BoundedSimplex {
     /// Total simplex pivots performed by this arena so far.
     pub fn pivots(&self) -> u64 {
         self.pivots
+    }
+
+    /// Total bound flips (nonbasic column complements) so far.
+    pub fn bound_flips(&self) -> u64 {
+        self.flips
+    }
+
+    /// Total cold tableau refactorisations so far.
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
     }
 
     /// True when enough pivots have accumulated on the eliminated tableau
@@ -225,6 +243,7 @@ impl BoundedSimplex {
             self.set(r, j, neg);
         }
         self.flipped[j] = !self.flipped[j];
+        self.flips += 1;
     }
 
     /// Complement the BASIC variable of row `r` (its own column stays the
@@ -359,6 +378,7 @@ impl BoundedSimplex {
         self.num_art = art - self.art_base;
         self.art_used_end = art;
         self.pivots_at_rebuild = self.pivots;
+        self.rebuilds += 1;
         // Unused artificial slots can never enter.
         for j in art..self.total {
             self.range[j] = 0.0;
@@ -369,6 +389,25 @@ impl BoundedSimplex {
     /// Two-phase bounded primal simplex from a fresh tableau at the
     /// current bounds.
     pub fn solve_cold(&mut self) -> SolveOutcome {
+        if !telemetry::enabled() {
+            return self.solve_cold_inner();
+        }
+        let (p0, f0, r0) = (self.pivots, self.flips, self.rebuilds);
+        let out = self.solve_cold_inner();
+        telemetry::count("milp.cold_solves", 1);
+        self.report_deltas(p0, f0, r0);
+        out
+    }
+
+    /// Mirror per-solve counter deltas into the telemetry registry (called
+    /// once per solve, never inside the pivot loop).
+    fn report_deltas(&self, p0: u64, f0: u64, r0: u64) {
+        telemetry::count("milp.pivots", self.pivots - p0);
+        telemetry::count("milp.bound_flips", self.flips - f0);
+        telemetry::count("milp.refactorisations", self.rebuilds - r0);
+    }
+
+    fn solve_cold_inner(&mut self) -> SolveOutcome {
         self.rebuild();
         let max_iters = self.max_iters();
         let m = self.m;
@@ -523,6 +562,17 @@ impl BoundedSimplex {
     /// [`solve_cold`](Self::solve_cold) otherwise. Maintains d ≥ 0
     /// throughout, so `Infeasible` is a proof, not a guess.
     pub fn resolve_dual(&mut self) -> SolveOutcome {
+        if !telemetry::enabled() {
+            return self.resolve_dual_inner();
+        }
+        let (p0, f0, r0) = (self.pivots, self.flips, self.rebuilds);
+        let out = self.resolve_dual_inner();
+        telemetry::count("milp.warm_solves", 1);
+        self.report_deltas(p0, f0, r0);
+        out
+    }
+
+    fn resolve_dual_inner(&mut self) -> SolveOutcome {
         debug_assert!(self.dual_ready);
         let max_iters = self.max_iters();
         let m = self.m;
@@ -647,6 +697,19 @@ impl BoundedSimplex {
     ///
     /// [`solve_cold`]: Self::solve_cold
     pub fn solve_warm_from(&mut self, snap: &BasisSnapshot) -> Option<SolveOutcome> {
+        if !telemetry::enabled() {
+            return self.solve_warm_from_inner(snap);
+        }
+        let (p0, f0, r0) = (self.pivots, self.flips, self.rebuilds);
+        let out = self.solve_warm_from_inner(snap);
+        if out.is_some() {
+            telemetry::count("milp.crash_warm_solves", 1);
+        }
+        self.report_deltas(p0, f0, r0);
+        out
+    }
+
+    fn solve_warm_from_inner(&mut self, snap: &BasisSnapshot) -> Option<SolveOutcome> {
         if snap.n != self.n || snap.m != self.m || snap.total != self.total {
             return None;
         }
@@ -738,7 +801,7 @@ impl BoundedSimplex {
             .all(|j| self.range[j] <= EPS || self.at(mrow, j) >= -PIVOT_EPS);
         if dual_ok {
             self.dual_ready = true;
-            return Some(self.resolve_dual());
+            return Some(self.resolve_dual_inner());
         }
         None
     }

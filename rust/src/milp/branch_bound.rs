@@ -27,6 +27,7 @@
 
 use super::bounds::{BasisSnapshot, BoundedSimplex, SolveOutcome};
 use super::simplex::Lp;
+use crate::telemetry;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::time::{Duration, Instant};
@@ -199,6 +200,9 @@ pub fn solve_milp_session(
     root_basis: Option<&BasisSnapshot>,
 ) -> (MilpResult, MilpStats, Option<BasisSnapshot>) {
     let start = Instant::now();
+    let mut tspan = telemetry::span("milp.solve", "milp");
+    let mut plunges: u64 = 0;
+    let mut incumbent_updates: u64 = 0;
     let mut stats = MilpStats::default();
     let mut arena = BoundedSimplex::new(lp);
     let mut crash = root_basis;
@@ -298,6 +302,7 @@ pub fn solve_milp_session(
                 if obj < best_obj && lp.is_feasible(&xi, 1e-5) {
                     best_obj = obj;
                     best_x = Some(xi);
+                    incumbent_updates += 1;
                 }
                 break;
             };
@@ -314,6 +319,7 @@ pub fn solve_milp_session(
                     if o < best_obj {
                         best_obj = o;
                         best_x = Some(xr);
+                        incumbent_updates += 1;
                     }
                 }
             }
@@ -348,6 +354,7 @@ pub fn solve_milp_session(
             if near.0 > near.1 + 1e-9 {
                 break; // empty near child: the plunge dies here
             }
+            plunges += 1;
             patch.push((v, near.0, near.1));
             arena.set_var_bounds(v, near.0, near.1);
             if stats.nodes >= opts.max_nodes || start.elapsed() > opts.time_limit {
@@ -392,6 +399,21 @@ pub fn solve_milp_session(
             }
         }
     };
+    if telemetry::enabled() {
+        telemetry::count("bnb.nodes", stats.nodes as u64);
+        telemetry::count("bnb.plunges", plunges);
+        telemetry::count("bnb.incumbent_updates", incumbent_updates);
+        telemetry::count("bnb.lp_solves", stats.lp_solves as u64);
+        telemetry::count("bnb.warm_solves", stats.warm_solves as u64);
+        telemetry::count("bnb.cold_solves", stats.cold_solves as u64);
+        telemetry::count("bnb.basis_roots", stats.basis_roots as u64);
+        tspan.tag("nodes", stats.nodes);
+        tspan.tag("plunges", plunges);
+        tspan.tag("incumbent_updates", incumbent_updates);
+        tspan.tag("warm_solves", stats.warm_solves);
+        tspan.tag("cold_solves", stats.cold_solves);
+        tspan.tag("pivots", stats.pivots);
+    }
     (result, stats, out_basis)
 }
 

@@ -42,6 +42,7 @@ use crate::cloud::{MarketEvent, MarketEventKind, PriceBook, WorldEvent};
 use crate::sched::binary_search::{BinarySearchOptions, SearchStats};
 use crate::sched::planner::{PlanRequest, Planner, PlannerSession};
 use crate::sched::{SchedProblem, ServingPlan};
+use crate::telemetry;
 use crate::workload::{demand_drift, DemandSnapshot};
 
 /// Fallback epoch duration (seconds) when an event stream is too short to
@@ -319,11 +320,18 @@ impl Orchestrator {
         epoch_s: f64,
         opts: &OrchestratorOptions,
     ) -> Option<Orchestrator> {
+        let mut tspan = telemetry::span("orch.epoch", "orchestrator");
         let mut problem = base.clone();
         apply_world(&mut problem, first, epoch_s);
         let mut session = PlannerSession::new(opts.search.clone());
         let report = session.plan(&PlanRequest::new(&problem));
-        let incumbent = report.plan?;
+        let incumbent = match report.plan {
+            Some(p) => p,
+            None => {
+                tspan.tag("rung", "infeasible");
+                return None;
+            }
+        };
         let epoch = EpochBuild {
             index: 0,
             event: first,
@@ -331,6 +339,7 @@ impl Orchestrator {
             drift: WorldDrift::default(),
         }
         .initial(&incumbent, report.stats);
+        Self::note_epoch(&mut tspan, &epoch);
         Some(Orchestrator {
             base: base.clone(),
             opts: opts.clone(),
@@ -353,6 +362,7 @@ impl Orchestrator {
     /// stays feasible, otherwise replan through
     /// [`replan::replan_world`]'s ladder.
     pub fn step(&mut self, event: &WorldEvent, epoch_s: f64) {
+        let mut tspan = telemetry::span("orch.epoch", "orchestrator");
         let drift = WorldDrift {
             supply: market_drift(
                 &self.basis_avail,
@@ -377,6 +387,7 @@ impl Orchestrator {
             && self.incumbent.validate(&build.problem, 1e-4).is_ok()
         {
             self.epochs.push(build.kept(&self.incumbent, false));
+            Self::note_epoch(&mut tspan, self.epochs.last().unwrap());
             return;
         }
 
@@ -405,6 +416,51 @@ impl Orchestrator {
                 self.epochs.push(build.kept(&self.incumbent, true));
             }
         }
+        Self::note_epoch(&mut tspan, self.epochs.last().unwrap());
+    }
+
+    /// Mirror one finished epoch into the telemetry registry and tag its
+    /// span with the replan rung the ladder landed on. Counter names follow
+    /// the `orch.` prefix; the drift gauges track the *latest* epoch (time
+    /// series live in the trace, not the registry).
+    fn note_epoch(tspan: &mut telemetry::Span, e: &PlanEpoch) {
+        if !telemetry::enabled() {
+            return;
+        }
+        let rung = if e.index == 0 {
+            "initial"
+        } else if e.infeasible {
+            "infeasible"
+        } else if !e.replanned {
+            "absorbed"
+        } else if e.fast_path {
+            "fast_path"
+        } else if e.escalated {
+            "escalated"
+        } else {
+            "incremental"
+        };
+        telemetry::count("orch.epochs", 1);
+        telemetry::count(
+            match rung {
+                "initial" => "orch.initial_solves",
+                "infeasible" => "orch.infeasible_epochs",
+                "absorbed" => "orch.absorbed",
+                "fast_path" => "orch.fast_paths",
+                "escalated" => "orch.escalations",
+                _ => "orch.incremental_repairs",
+            },
+            1,
+        );
+        telemetry::gauge_set("orch.drift.supply", e.supply_drift);
+        telemetry::gauge_set("orch.drift.demand", e.demand_drift);
+        telemetry::observe("orch.migration_dollars", e.migration.dollars);
+        tspan.tag("epoch", e.index);
+        tspan.tag("rung", rung);
+        tspan.tag("supply_drift", e.supply_drift);
+        tspan.tag("demand_drift", e.demand_drift);
+        tspan.tag("migration_dollars", e.migration.dollars);
+        tspan.tag("lp_solves", e.stats.lp_solves as u64);
     }
 
     /// Aggregate the epoch sequence into the final report.

@@ -21,6 +21,7 @@ use crate::milp::{
     solve_counted, solve_milp_session, BasisSnapshot, Cmp, Lp, LpResult, MilpOptions,
     MilpResult, MilpStats,
 };
+use crate::telemetry;
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -309,6 +310,8 @@ fn check_feasible(
     basis: &mut Option<BasisSnapshot>,
     stats: &mut SearchStats,
 ) -> Option<ServingPlan> {
+    let mut tspan = telemetry::span("planner.iterate", "planner");
+    let t0 = Instant::now();
     let checks_before = stats.feasibility_checks;
     let before = (
         stats.pivots,
@@ -320,14 +323,33 @@ fn check_feasible(
     // One record per actual check (a problem whose feasibility model
     // cannot even be built runs no check and records nothing).
     if stats.feasibility_checks > checks_before {
-        stats.iterates.push(IterateStat {
+        let it = IterateStat {
             t_hat,
             feasible: plan.is_some(),
             pivots: stats.pivots - before.0,
             warm_solves: stats.warm_solves - before.1,
             cold_solves: stats.cold_solves - before.2,
             from_basis: stats.basis_roots > before.3,
-        });
+        };
+        stats.iterates.push(it);
+        if telemetry::enabled() {
+            telemetry::count("planner.iterates", 1);
+            telemetry::count(
+                if it.from_basis {
+                    "planner.basis_hits"
+                } else {
+                    "planner.basis_misses"
+                },
+                1,
+            );
+            telemetry::observe("planner.iterate_ms", t0.elapsed().as_secs_f64() * 1e3);
+            tspan.tag("t_hat", t_hat);
+            tspan.tag("feasible", it.feasible);
+            tspan.tag("from_basis", it.from_basis);
+            tspan.tag("pivots", it.pivots);
+            tspan.tag("warm_solves", it.warm_solves);
+            tspan.tag("cold_solves", it.cold_solves);
+        }
     }
     plan
 }
@@ -386,6 +408,12 @@ fn check_feasible_inner(
             // a nearby integer and re-solve, falling back to the other
             // rounding direction on infeasibility. Conservative but close to
             // exact, and each step is just one LP.
+            //
+            // The rounding loop is this mode's stand-in for the exact MILP,
+            // so it reports under the same `milp.solve` span name (the
+            // exact arm gets its span inside `solve_milp_session`).
+            let mut tspan = telemetry::span("milp.solve", "milp");
+            tspan.tag("mode", "knapsack");
             let mut lp = model.lp.clone();
             lp.add(
                 p.candidates
@@ -444,6 +472,7 @@ fn check_feasible_inner(
                     return None;
                 }
             };
+            tspan.tag("rounds", rounds);
             if !within_resources(p, &y) {
                 return None;
             }

@@ -27,6 +27,7 @@ use crate::orchestrator::{
 };
 use crate::perf_model::{ModelSpec, PerfModel};
 use crate::sched::SchedProblem;
+use crate::telemetry;
 use crate::workload::{DemandSnapshot, MixEstimator, MixSchedule, Trace, TraceMix};
 
 /// Where the demand channel of the world signal comes from.
@@ -143,6 +144,8 @@ pub fn run_closed_loop(
     opts: &ClosedLoopOptions,
 ) -> Option<ClosedLoopResult> {
     let first = markets.first()?;
+    let mut tspan = telemetry::span("loop.run", "sim");
+    tspan.tag("mode", opts.mode.name());
     let ts: Vec<f64> = markets.iter().map(|m| m.t_s).collect();
     let initial_demand = schedule.at(first.t_s);
     let mut estimator = MixEstimator::new(opts.estimator_halflife_s, initial_demand.clone());
@@ -217,13 +220,27 @@ pub fn run_closed_loop(
         })
         .collect();
 
-    Some(ClosedLoopResult {
+    let result = ClosedLoopResult {
         report,
         sim,
         mix_error,
         rate_error,
         observed_mix_error,
-    })
+    };
+    if telemetry::enabled() {
+        telemetry::count("loop.runs", 1);
+        telemetry::gauge_set("loop.mean_mix_error", result.mean_mix_error());
+        telemetry::gauge_set("loop.mean_rate_error", result.mean_rate_error());
+        telemetry::gauge_set(
+            "loop.mean_observed_mix_error",
+            result.mean_observed_mix_error(),
+        );
+        tspan.tag("epochs", result.report.epochs.len());
+        tspan.tag("replans", result.report.replans);
+        tspan.tag("mean_mix_error", result.mean_mix_error());
+        tspan.tag("mean_rate_error", result.mean_rate_error());
+    }
+    Some(result)
 }
 
 #[cfg(test)]

@@ -21,6 +21,7 @@ use super::SimOptions;
 use crate::metrics::{BusyTracker, LatencyRecorder};
 use crate::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
 use crate::sched::{SchedProblem, ServingPlan};
+use crate::telemetry;
 use crate::util::rng::Xoshiro256;
 use crate::workload::{Request, Trace};
 use std::collections::BinaryHeap;
@@ -242,6 +243,7 @@ pub fn simulate_timeline(
     opts: &TimelineOptions,
 ) -> TimelineResult {
     assert!(!steps.is_empty(), "timeline needs at least one step");
+    let mut tspan = telemetry::span("sim.timeline", "sim");
     let ncand = steps[0].problem.candidates.len();
     for s in steps {
         assert_eq!(
@@ -496,6 +498,9 @@ pub fn simulate_timeline(
     }
 
     let max_batch = opts.max_batch;
+    // Deepest per-replica queue seen anywhere in the run (plain local —
+    // the event loop is hot, so telemetry reads it once at the end).
+    let mut queue_peak = 0usize;
     while let Some(Event { time, replica: ri }) = heap.pop() {
         let now = time;
         // Deliver arrivals up to `now`.
@@ -506,6 +511,7 @@ pub fn simulate_timeline(
                 r.queue.push_back(reqs[arrival_idx[ri]].clone());
                 arrival_idx[ri] += 1;
             }
+            queue_peak = queue_peak.max(r.queue.len());
         }
         if let Some(t) = instances[ri].next_event {
             if t > now {
@@ -702,6 +708,29 @@ pub fn simulate_timeline(
             p90_s: rec.latency_percentile(90.0),
             rental_usd: rental,
         });
+    }
+
+    if telemetry::enabled() {
+        telemetry::count("sim.epochs", steps.len() as u64);
+        telemetry::count("sim.transitions", transitions_applied as u64);
+        telemetry::count("sim.reshards", reshards_applied as u64);
+        telemetry::count("sim.requests", total_requests as u64);
+        telemetry::gauge_set("sim.replicas_peak", replicas_peak as f64);
+        telemetry::gauge_set("sim.queue_peak", queue_peak as f64);
+        telemetry::gauge_set(
+            "sim.slo_attainment",
+            recorder.slo_attainment(opts.slo_latency_s),
+        );
+        for e in &epochs {
+            telemetry::observe("sim.epoch_slo", e.slo_attainment);
+            telemetry::observe("sim.epoch_rental_usd", e.rental_usd);
+        }
+        tspan.tag("epochs", steps.len());
+        tspan.tag("requests", total_requests);
+        tspan.tag("transitions", transitions_applied);
+        tspan.tag("reshards", reshards_applied);
+        tspan.tag("replicas_peak", replicas_peak);
+        tspan.tag("makespan_s", makespan);
     }
 
     TimelineResult {

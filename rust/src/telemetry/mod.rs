@@ -1,0 +1,859 @@
+//! Unified telemetry: metric registry, RAII spans, Chrome-trace export.
+//!
+//! Every layer of the stack (simplex arena → branch & bound → planner →
+//! orchestrator → simulator) reports into one process-global substrate
+//! instead of growing its own counters:
+//!
+//! * **Registry** — [`Counter`] / [`Gauge`] / [`Histogram`] handles interned
+//!   by static name ([`counter`], [`gauge`], [`histogram`]). Handles are
+//!   `&'static`: look one up once, then every update is a single relaxed
+//!   atomic op — cheap enough to sit next to the simplex pivot loop.
+//! * **Spans** — [`span`] returns an RAII guard that records a begin/end
+//!   event pair into a thread-local buffer; nesting falls out of the
+//!   begin/end ordering per thread (Chrome trace `B`/`E` semantics).
+//!   Buffers flush into the shared [`drain_events`] sink when the
+//!   outermost span of a thread closes, on an explicit [`flush_thread`],
+//!   and after every `util::threadpool` job.
+//! * **Export** — [`write_chrome_trace`] emits the Chrome trace-event JSON
+//!   format (open in <https://ui.perfetto.dev>), one event per line;
+//!   [`snapshot`] summarises the registry into a [`TelemetrySnapshot`]
+//!   merged into `orchestrate`/`simulate`/`compare` output.
+//!
+//! The whole subsystem is gated on a process-global flag ([`set_enabled`]):
+//! when disabled — the default — every entry point is a single relaxed
+//! atomic load and an early return, the same discipline as
+//! [`crate::util::logging::enabled`]. See `README.md` in this directory for
+//! the event model and the overhead budget.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+// ---- global gate and clock --------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Whether telemetry is collecting. One relaxed load; callers on hot paths
+/// check this before doing any per-event work.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn collection on or off process-wide. Pins the trace clock epoch on
+/// first enable so event timestamps start near zero.
+pub fn set_enabled(on: bool) {
+    if on {
+        EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Microseconds since the trace epoch (pinned at first use).
+#[inline]
+fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+// ---- metric kinds -----------------------------------------------------------
+
+/// Monotonic atomic counter. Updates are relaxed `fetch_add`s, gated on the
+/// global enable flag.
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.value.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.value.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-value gauge storing an `f64` as atomic bits. Reads NaN until first
+/// set (NaN serialises as JSON `null`).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if enabled() {
+            self.bits.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    fn reset(&self) {
+        self.bits.store(f64::NAN.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Log-bucketed atomic histogram: the lock-free sibling of
+/// [`crate::util::stats::LogHistogram`], with identical bucket semantics
+/// (value on a boundary falls into the bucket above it; out-of-range values
+/// land in the underflow/overflow buckets).
+pub struct Histogram {
+    /// `n + 1` log-spaced boundaries over `[lo, hi]`.
+    bounds: Vec<f64>,
+    /// `n + 2` buckets: `[underflow, b0..b1, ..., overflow]`.
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n >= 2);
+        let ratio = (hi / lo).powf(1.0 / n as f64);
+        let mut bounds = Vec::with_capacity(n + 1);
+        let mut b = lo;
+        for _ in 0..=n {
+            bounds.push(b);
+            b *= ratio;
+        }
+        let len = bounds.len();
+        Self {
+            bounds,
+            counts: (0..len + 1).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, x: f64) {
+        if !enabled() {
+            return;
+        }
+        let idx = match self.bounds.binary_search_by(|b| b.partial_cmp(&x).unwrap()) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        };
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + x).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            f64::NAN
+        } else {
+            f64::from_bits(self.sum_bits.load(Ordering::Relaxed)) / n as f64
+        }
+    }
+
+    /// Raw bucket count (index 0 is underflow, last is overflow) — exposed
+    /// for boundary tests.
+    pub fn bucket_count(&self, idx: usize) -> u64 {
+        self.counts[idx].load(Ordering::Relaxed)
+    }
+
+    /// Number of buckets including underflow/overflow.
+    pub fn num_buckets(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// The log-spaced bucket boundaries (length `num_buckets() - 1`).
+    pub fn boundaries(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Approximate quantile (returns a bucket boundary), `q` in `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return if i == 0 {
+                    self.bounds[0]
+                } else if i > self.bounds.len() - 1 {
+                    *self.bounds.last().unwrap()
+                } else {
+                    self.bounds[i]
+                };
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+
+    fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.total.store(0, Ordering::Relaxed);
+        self.sum_bits.store(0.0f64.to_bits(), Ordering::Relaxed);
+    }
+}
+
+// ---- registry ---------------------------------------------------------------
+
+#[derive(Default)]
+struct Registry {
+    counters: Mutex<BTreeMap<&'static str, &'static Counter>>,
+    gauges: Mutex<BTreeMap<&'static str, &'static Gauge>>,
+    histograms: Mutex<BTreeMap<&'static str, &'static Histogram>>,
+}
+
+fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::default)
+}
+
+/// Intern the counter registered under `name`. The handle is `&'static`
+/// (one leaked allocation per distinct static name — a bounded set): look
+/// it up once outside a loop, then `add` is a single relaxed atomic op.
+pub fn counter(name: &'static str) -> &'static Counter {
+    let mut map = registry().counters.lock().unwrap();
+    *map.entry(name).or_insert_with(|| {
+        Box::leak(Box::new(Counter {
+            value: AtomicU64::new(0),
+        }))
+    })
+}
+
+/// Intern the gauge registered under `name`.
+pub fn gauge(name: &'static str) -> &'static Gauge {
+    let mut map = registry().gauges.lock().unwrap();
+    *map.entry(name).or_insert_with(|| {
+        Box::leak(Box::new(Gauge {
+            bits: AtomicU64::new(f64::NAN.to_bits()),
+        }))
+    })
+}
+
+/// Intern the histogram registered under `name`, log-bucketed over
+/// `[lo, hi]` with `n` buckets. Bucket parameters are fixed by the first
+/// registration; later calls with different parameters get the original.
+pub fn histogram(name: &'static str, lo: f64, hi: f64, n: usize) -> &'static Histogram {
+    let mut map = registry().histograms.lock().unwrap();
+    *map.entry(name)
+        .or_insert_with(|| Box::leak(Box::new(Histogram::new(lo, hi, n))))
+}
+
+/// Convenience: bump a counter by name. Early-returns (one atomic load)
+/// when telemetry is disabled, before touching the registry lock.
+#[inline]
+pub fn count(name: &'static str, n: u64) {
+    if enabled() {
+        counter(name).add(n);
+    }
+}
+
+/// Convenience: set a gauge by name (same gating as [`count`]).
+#[inline]
+pub fn gauge_set(name: &'static str, v: f64) {
+    if enabled() {
+        gauge(name).set(v);
+    }
+}
+
+/// Convenience: record into a default-ranged histogram (`1e-3 .. 1e5`, 64
+/// buckets — sized for millisecond-scale durations).
+#[inline]
+pub fn observe(name: &'static str, x: f64) {
+    if enabled() {
+        histogram(name, 1e-3, 1e5, 64).record(x);
+    }
+}
+
+/// Zero every registered metric and clear buffered/flushed trace events
+/// (current thread + shared sink). For benches and tests; call between
+/// runs, not while spans are open.
+pub fn reset() {
+    let r = registry();
+    for c in r.counters.lock().unwrap().values() {
+        c.reset();
+    }
+    for g in r.gauges.lock().unwrap().values() {
+        g.reset();
+    }
+    for h in r.histograms.lock().unwrap().values() {
+        h.reset();
+    }
+    LOCAL.with(|l| l.borrow_mut().events.clear());
+    sink().lock().unwrap().clear();
+}
+
+// ---- spans and trace events -------------------------------------------------
+
+/// A tag value attached to a span (emitted into the Chrome event `args`).
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl From<f64> for ArgValue {
+    fn from(x: f64) -> Self {
+        ArgValue::Num(x)
+    }
+}
+impl From<u64> for ArgValue {
+    fn from(x: u64) -> Self {
+        ArgValue::Num(x as f64)
+    }
+}
+impl From<usize> for ArgValue {
+    fn from(x: usize) -> Self {
+        ArgValue::Num(x as f64)
+    }
+}
+impl From<bool> for ArgValue {
+    fn from(x: bool) -> Self {
+        ArgValue::Bool(x)
+    }
+}
+impl From<&str> for ArgValue {
+    fn from(x: &str) -> Self {
+        ArgValue::Str(x.to_string())
+    }
+}
+impl From<String> for ArgValue {
+    fn from(x: String) -> Self {
+        ArgValue::Str(x)
+    }
+}
+
+/// One Chrome trace event: a begin (`ph == 'B'`) or end (`ph == 'E'`) of a
+/// span, on one thread. Nesting is implied by per-thread B/E ordering.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub ph: char,
+    pub ts_us: u64,
+    pub tid: u64,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+struct LocalBuf {
+    tid: u64,
+    depth: u32,
+    events: Vec<TraceEvent>,
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        depth: 0,
+        events: Vec::new(),
+    });
+}
+
+fn sink() -> &'static Mutex<Vec<TraceEvent>> {
+    static SINK: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+    &SINK
+}
+
+/// RAII span guard: created by [`span`], records the end event on drop.
+/// Inert (field checks only) when telemetry was disabled at creation.
+pub struct Span {
+    active: bool,
+    name: &'static str,
+    cat: &'static str,
+    args: Vec<(&'static str, ArgValue)>,
+}
+
+/// Open a span named `name` in category `cat`. Bind the guard to a named
+/// variable (`let _span = ...`) so it lives to the end of the scope.
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    if !enabled() {
+        return Span {
+            active: false,
+            name,
+            cat,
+            args: Vec::new(),
+        };
+    }
+    let ts_us = now_us();
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        let tid = l.tid;
+        l.depth += 1;
+        l.events.push(TraceEvent {
+            name,
+            cat,
+            ph: 'B',
+            ts_us,
+            tid,
+            args: Vec::new(),
+        });
+    });
+    Span {
+        active: true,
+        name,
+        cat,
+        args: Vec::new(),
+    }
+}
+
+impl Span {
+    /// Attach a tag; emitted in the end event's `args`.
+    pub fn tag(&mut self, key: &'static str, v: impl Into<ArgValue>) {
+        if self.active {
+            self.args.push((key, v.into()));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        // The end event is emitted even if telemetry was disabled mid-span,
+        // so exported traces always contain well-formed B/E pairs.
+        let ts_us = now_us();
+        let args = std::mem::take(&mut self.args);
+        let flush = LOCAL.with(|l| {
+            let mut l = l.borrow_mut();
+            let tid = l.tid;
+            l.events.push(TraceEvent {
+                name: self.name,
+                cat: self.cat,
+                ph: 'E',
+                ts_us,
+                tid,
+                args,
+            });
+            l.depth = l.depth.saturating_sub(1);
+            l.depth == 0
+        });
+        if flush {
+            flush_thread();
+        }
+    }
+}
+
+/// Move the current thread's buffered events into the shared sink. Called
+/// automatically when a thread's outermost span closes and after every
+/// `util::threadpool` job; threads outside those paths call it explicitly
+/// before exiting.
+pub fn flush_thread() {
+    let drained: Vec<TraceEvent> = LOCAL.with(|l| std::mem::take(&mut l.borrow_mut().events));
+    if !drained.is_empty() {
+        sink().lock().unwrap().extend(drained);
+    }
+}
+
+/// Flush the current thread, then take every event out of the shared sink.
+pub fn drain_events() -> Vec<TraceEvent> {
+    flush_thread();
+    std::mem::take(&mut *sink().lock().unwrap())
+}
+
+/// Flush the current thread, then copy the shared sink without draining it
+/// (for tests that must not steal events from a concurrent exporter).
+pub fn events_snapshot() -> Vec<TraceEvent> {
+    flush_thread();
+    sink().lock().unwrap().clone()
+}
+
+// ---- Chrome trace export ----------------------------------------------------
+
+fn event_json(e: &TraceEvent) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("name", Json::str(e.name)),
+        ("cat", Json::str(e.cat)),
+        ("ph", Json::Str(e.ph.to_string())),
+        ("ts", Json::num(e.ts_us as f64)),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(e.tid as f64)),
+    ];
+    if !e.args.is_empty() {
+        let args: Vec<(&str, Json)> = e
+            .args
+            .iter()
+            .map(|(k, v)| {
+                let j = match v {
+                    ArgValue::Num(x) => Json::num(*x),
+                    ArgValue::Str(s) => Json::str(s),
+                    ArgValue::Bool(b) => Json::Bool(*b),
+                };
+                (*k, j)
+            })
+            .collect();
+        fields.push(("args", Json::obj(args)));
+    }
+    Json::obj(fields)
+}
+
+/// Build the Chrome trace-event JSON document for a set of events.
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events.iter().map(event_json))),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Drain all buffered events and write them to `path` as Chrome trace-event
+/// JSON — JSONL-style, one event object per line inside the `traceEvents`
+/// array, so the file is both valid JSON and line-greppable. Open it at
+/// <https://ui.perfetto.dev> or `chrome://tracing`.
+pub fn write_chrome_trace(path: &str) -> std::io::Result<()> {
+    let events = drain_events();
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\n\"traceEvents\":[\n");
+    for (i, e) in events.iter().enumerate() {
+        out.push_str(&event_json(e).to_string());
+        if i + 1 < events.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]}\n");
+    std::fs::write(path, out)
+}
+
+// ---- snapshot report --------------------------------------------------------
+
+/// Percentile summary of one registered histogram.
+#[derive(Clone, Debug)]
+pub struct HistogramSummary {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+/// A point-in-time summary of the registry, merged into command output.
+#[derive(Clone, Debug)]
+pub struct TelemetrySnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub histograms: Vec<(String, HistogramSummary)>,
+}
+
+impl TelemetrySnapshot {
+    pub fn to_json(&self) -> Json {
+        let counters: Vec<(&str, Json)> = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::num(*v as f64)))
+            .collect();
+        let gauges: Vec<(&str, Json)> = self
+            .gauges
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::num(*v)))
+            .collect();
+        let hists: Vec<(&str, Json)> = self
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.as_str(),
+                    Json::obj(vec![
+                        ("count", Json::num(h.count as f64)),
+                        ("mean", Json::num(h.mean)),
+                        ("p50", Json::num(h.p50)),
+                        ("p90", Json::num(h.p90)),
+                        ("p99", Json::num(h.p99)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("gauges", Json::obj(gauges)),
+            ("histograms", Json::obj(hists)),
+        ])
+    }
+}
+
+/// Summarise every registered metric.
+pub fn snapshot() -> TelemetrySnapshot {
+    let r = registry();
+    let counters = r
+        .counters
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, c)| (k.to_string(), c.get()))
+        .collect();
+    let gauges = r
+        .gauges
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, g)| (k.to_string(), g.get()))
+        .collect();
+    let histograms = r
+        .histograms
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, h)| {
+            (
+                k.to_string(),
+                HistogramSummary {
+                    count: h.count(),
+                    mean: h.mean(),
+                    p50: h.quantile(0.5),
+                    p90: h.quantile(0.9),
+                    p99: h.quantile(0.99),
+                },
+            )
+        })
+        .collect();
+    TelemetrySnapshot {
+        counters,
+        gauges,
+        histograms,
+    }
+}
+
+/// [`snapshot`] serialised to JSON.
+pub fn snapshot_json() -> Json {
+    snapshot().to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialises tests that toggle the global enable flag.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        match LOCK.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    #[test]
+    fn disabled_metrics_do_not_move() {
+        let _g = test_lock();
+        set_enabled(false);
+        let c = counter("test.disabled_counter");
+        let before = c.get();
+        c.add(5);
+        assert_eq!(c.get(), before);
+        let h = histogram("test.disabled_hist", 0.1, 100.0, 8);
+        let n = h.count();
+        h.record(1.0);
+        assert_eq!(h.count(), n);
+    }
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let _g = test_lock();
+        set_enabled(true);
+        let c = counter("test.ctr");
+        c.reset();
+        c.add(3);
+        c.incr();
+        assert_eq!(c.get(), 4);
+        let g = gauge("test.gauge");
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        set_enabled(false);
+    }
+
+    #[test]
+    fn histogram_matches_loghistogram_semantics() {
+        let _g = test_lock();
+        set_enabled(true);
+        let h = histogram("test.hist_semantics", 1.0, 100.0, 4);
+        h.reset();
+        // Mirror the same stream into util::stats::LogHistogram and compare
+        // quantiles — the two implementations share bucket semantics.
+        let mut reference = crate::util::stats::LogHistogram::new(1.0, 100.0, 4);
+        for x in [0.5, 1.0, 3.0, 9.0, 30.0, 99.0, 150.0, 7.0, 2.0] {
+            h.record(x);
+            reference.record(x);
+        }
+        assert_eq!(h.count(), reference.count());
+        for q in [0.1, 0.5, 0.9, 1.0] {
+            assert_eq!(h.quantile(q), reference.quantile(q), "q={q}");
+        }
+        set_enabled(false);
+    }
+
+    #[test]
+    fn snapshot_reports_registered_metrics() {
+        let _g = test_lock();
+        set_enabled(true);
+        counter("test.snap_ctr").reset();
+        counter("test.snap_ctr").add(7);
+        gauge_set("test.snap_gauge", 1.25);
+        let snap = snapshot();
+        let c = snap
+            .counters
+            .iter()
+            .find(|(k, _)| k == "test.snap_ctr")
+            .expect("registered counter in snapshot");
+        assert_eq!(c.1, 7);
+        let j = snap.to_json();
+        assert_eq!(j.get("counters").get("test.snap_ctr").as_u64(), Some(7));
+        assert_eq!(j.get("gauges").get("test.snap_gauge").as_f64(), Some(1.25));
+        set_enabled(false);
+    }
+
+    #[test]
+    fn spans_emit_balanced_pairs_on_this_thread() {
+        let _g = test_lock();
+        set_enabled(true);
+        flush_thread();
+        let tid_here = LOCAL.with(|l| l.borrow().tid);
+        {
+            let mut outer = span("test.outer", "test");
+            outer.tag("k", 1.0);
+            let _inner = span("test.inner", "test");
+        }
+        let events: Vec<TraceEvent> = events_snapshot()
+            .into_iter()
+            .filter(|e| e.tid == tid_here && e.cat == "test")
+            .collect();
+        let names: Vec<(&str, char)> = events.iter().map(|e| (e.name, e.ph)).collect();
+        assert_eq!(
+            names,
+            vec![
+                ("test.outer", 'B'),
+                ("test.inner", 'B'),
+                ("test.inner", 'E'),
+                ("test.outer", 'E'),
+            ]
+        );
+        set_enabled(false);
+        drain_events();
+    }
+
+    #[test]
+    fn disabled_spans_emit_nothing() {
+        let _g = test_lock();
+        set_enabled(false);
+        flush_thread();
+        let n0 = LOCAL.with(|l| l.borrow().events.len());
+        {
+            let _s = span("test.noop", "test");
+        }
+        assert_eq!(LOCAL.with(|l| l.borrow().events.len()), n0);
+    }
+
+    #[test]
+    fn chrome_trace_json_shape() {
+        let _g = test_lock();
+        set_enabled(true);
+        drain_events();
+        {
+            let mut s = span("test.export", "test");
+            s.tag("epoch", 3usize);
+            s.tag("rung", "fast_path");
+        }
+        let events = drain_events();
+        set_enabled(false);
+        let doc = chrome_trace(&events);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).expect("trace serialises to valid JSON");
+        let evs = parsed.get("traceEvents").as_arr().expect("traceEvents");
+        // Other lib tests may flush their own events concurrently; only
+        // assert on the span this test created.
+        let ours: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("name").as_str() == Some("test.export"))
+            .collect();
+        assert_eq!(ours.len(), 2, "one B/E pair for test.export");
+        let begin = ours[0];
+        assert_eq!(begin.get("ph").as_str(), Some("B"));
+        assert!(begin.get("ts").as_f64().is_some());
+        assert!(begin.get("tid").as_f64().is_some());
+        let end = ours[1];
+        assert_eq!(end.get("ph").as_str(), Some("E"));
+        assert_eq!(end.get("args").get("rung").as_str(), Some("fast_path"));
+        assert_eq!(end.get("args").get("epoch").as_u64(), Some(3));
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        let _g = test_lock();
+        set_enabled(true);
+        let h = histogram("test.hist_bounds", 1.0, 16.0, 4);
+        h.reset();
+        // 4 log buckets over [1, 16]: boundaries ~[1, 2, 4, 8, 16], plus
+        // underflow (index 0) and overflow (index 5). Boundary values are
+        // read back from the histogram so the exact-hit cases stay exact
+        // regardless of how libm rounds the log spacing.
+        assert_eq!(h.num_buckets(), 6);
+        let bs: Vec<f64> = h.boundaries().to_vec();
+        assert_eq!(bs.len(), 5);
+        assert_eq!(bs[0], 1.0, "first boundary is exactly lo");
+        h.record(0.5); // below lo → underflow
+        h.record(bs[0]); // exactly on lo → first real bucket
+        h.record(bs[1]); // on an interior boundary → the bucket above it
+        h.record(bs[2] * 0.99); // just under a boundary → bucket below it
+        h.record(bs[4]); // exactly on hi → overflow (open top)
+        h.record(1e9); // far above hi → overflow
+        assert_eq!(h.bucket_count(0), 1, "underflow");
+        assert_eq!(h.bucket_count(1), 1, "[b0,b1)");
+        assert_eq!(h.bucket_count(2), 2, "[b1,b2)");
+        assert_eq!(h.bucket_count(3), 0, "[b2,b3)");
+        assert_eq!(h.bucket_count(4), 0, "[b3,b4)");
+        assert_eq!(h.bucket_count(5), 2, "overflow");
+        assert_eq!(h.count(), 6);
+        // Quantiles clamp to the boundary range at the extremes.
+        assert_eq!(h.quantile(0.0), bs[0]);
+        assert_eq!(h.quantile(1.0), bs[4]);
+        set_enabled(false);
+    }
+
+    #[test]
+    fn histogram_mean_tracks_sum() {
+        let _g = test_lock();
+        set_enabled(true);
+        let h = histogram("test.hist_mean", 0.1, 10.0, 4);
+        h.reset();
+        assert!(h.mean().is_nan(), "empty histogram mean is NaN");
+        for x in [1.0, 2.0, 3.0] {
+            h.record(x);
+        }
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+        set_enabled(false);
+    }
+}

@@ -22,15 +22,23 @@ pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
-pub fn set_level_from_str(s: &str) {
-    set_level(match s.to_ascii_lowercase().as_str() {
+/// Parse and install a log level by name. Unknown names are a caller
+/// error, not a crash: the CLI turns the `Err` into a usage message.
+pub fn set_level_from_str(s: &str) -> Result<(), String> {
+    let level = match s.to_ascii_lowercase().as_str() {
         "error" => Level::Error,
         "warn" => Level::Warn,
         "info" => Level::Info,
         "debug" => Level::Debug,
         "trace" => Level::Trace,
-        other => panic!("unknown log level '{other}'"),
-    });
+        other => {
+            return Err(format!(
+                "unknown log level '{other}' (expected error|warn|info|debug|trace)"
+            ))
+        }
+    };
+    set_level(level);
+    Ok(())
 }
 
 pub fn enabled(level: Level) -> bool {
@@ -89,8 +97,14 @@ mod tests {
 
     #[test]
     fn level_from_str() {
-        set_level_from_str("debug");
+        set_level_from_str("debug").expect("valid level");
         assert!(enabled(Level::Debug));
-        set_level_from_str("info");
+        set_level_from_str("info").expect("valid level");
+    }
+
+    #[test]
+    fn level_from_str_rejects_unknown() {
+        let err = set_level_from_str("chatty").expect_err("invalid level");
+        assert!(err.contains("chatty"), "error should name the input: {err}");
     }
 }

@@ -43,6 +43,12 @@ impl ThreadPool {
                         match msg {
                             Ok(Msg::Run(job)) => {
                                 job();
+                                // Hand any telemetry events the job buffered
+                                // on this worker to the shared sink before
+                                // the thread goes back to sleep — a parked
+                                // worker would otherwise hold its spans
+                                // hostage until the next job runs.
+                                crate::telemetry::flush_thread();
                                 let (lock, cvar) = &*pending;
                                 let mut n = lock.lock().unwrap();
                                 *n -= 1;
@@ -178,5 +184,49 @@ mod tests {
         pool.submit(|| {});
         pool.wait_idle();
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn hammer_many_threads_many_increments() {
+        // N workers × M jobs × K increments each, through both submission
+        // paths, twice over: every count must land exactly.
+        const WORKERS: usize = 8;
+        const JOBS: usize = 200;
+        const INCRS: u64 = 500;
+        let pool = ThreadPool::new(WORKERS);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..2u64 {
+            for _ in 0..JOBS {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    for _ in 0..INCRS {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(
+                counter.load(Ordering::SeqCst),
+                (round + 1) * JOBS as u64 * INCRS
+            );
+        }
+        // run_batch on the same (reused) pool: per-job sums survive the
+        // scatter/gather exactly.
+        let jobs: Vec<_> = (0..JOBS)
+            .map(|i| {
+                move || {
+                    let mut s = 0u64;
+                    for k in 0..INCRS {
+                        s += i as u64 + k;
+                    }
+                    s
+                }
+            })
+            .collect();
+        let out = pool.run_batch(jobs);
+        for (i, &got) in out.iter().enumerate() {
+            let want: u64 = (0..INCRS).map(|k| i as u64 + k).sum();
+            assert_eq!(got, want, "job {i}");
+        }
     }
 }

@@ -1,0 +1,188 @@
+//! Integration: drive a real orchestration through the telemetry subsystem
+//! and check the exported Chrome trace end to end — well-formed B/E span
+//! pairs per thread, the orchestrator → planner → MILP nesting the
+//! acceptance criterion asks for, and a file that parses as valid JSON
+//! with the expected top-level keys.
+//!
+//! This runs in its own process (Rust integration tests are separate
+//! binaries), so the process-global telemetry state cannot interfere with
+//! the library's unit tests.
+
+use hetserve::cloud::{MarketEventStream, WorldEvent};
+use hetserve::orchestrator::{orchestrate, OrchestratorOptions, ReplanStrategy};
+use hetserve::perf_model::{ModelSpec, PerfModel};
+use hetserve::profiler::Profile;
+use hetserve::sched::binary_search::BinarySearchOptions;
+use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::SchedProblem;
+use hetserve::telemetry;
+use hetserve::util::json::Json;
+use hetserve::workload::{DemandSnapshot, TraceMix};
+
+/// Serialises the tests in this binary: telemetry state (enable flag,
+/// event sink, registry) is process-global.
+fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    match LOCK.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Run a small orchestration with telemetry on and return the drained
+/// trace events.
+fn traced_orchestration() -> Vec<telemetry::TraceEvent> {
+    let model = ModelSpec::llama3_8b();
+    let perf = PerfModel::default();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let base = SchedProblem::from_profile(
+        &profile,
+        &TraceMix::trace1(),
+        1000.0,
+        &hetserve::cloud::availability(1),
+        30.0,
+    );
+    let events: Vec<WorldEvent> = MarketEventStream::new(21, 4, 900.0)
+        .map(|m| WorldEvent::new(m, DemandSnapshot::new(1000.0 / 900.0, TraceMix::trace1())))
+        .collect();
+    let opts = OrchestratorOptions {
+        strategy: ReplanStrategy::Escalating {
+            drift_threshold: 0.25,
+        },
+        search: BinarySearchOptions {
+            tolerance: 3.0,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    telemetry::set_enabled(true);
+    let report = orchestrate(&base, &events, &opts).expect("orchestration");
+    assert_eq!(report.epochs.len(), events.len());
+    let drained = telemetry::drain_events();
+    telemetry::set_enabled(false);
+    drained
+}
+
+#[test]
+fn trace_spans_nest_and_export_validates() {
+    let _g = test_lock();
+    let events = traced_orchestration();
+    assert!(!events.is_empty(), "orchestration emitted no trace events");
+
+    // ---- per-thread stack discipline: every E matches the innermost
+    // open B of the same name, and every thread ends balanced.
+    use std::collections::BTreeMap;
+    let mut stacks: BTreeMap<u64, Vec<&str>> = BTreeMap::new();
+    let mut deepest_at_milp: Option<Vec<String>> = None;
+    for e in &events {
+        let stack = stacks.entry(e.tid).or_default();
+        match e.ph {
+            'B' => {
+                if e.name == "milp.solve" {
+                    let mut path: Vec<String> =
+                        stack.iter().map(|s| s.to_string()).collect();
+                    path.push(e.name.to_string());
+                    deepest_at_milp = Some(path);
+                }
+                stack.push(e.name);
+            }
+            'E' => {
+                let open = stack.pop().unwrap_or_else(|| {
+                    panic!("E event '{}' on tid {} with no open span", e.name, e.tid)
+                });
+                assert_eq!(
+                    open, e.name,
+                    "mismatched span pair on tid {}: B '{open}' closed by E '{}'",
+                    e.tid, e.name
+                );
+            }
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "tid {tid} left spans open: {stack:?}");
+    }
+
+    // ---- the acceptance nesting: an epoch span encloses a planner
+    // iterate which encloses a MILP solve, on one thread.
+    let path = deepest_at_milp.expect("no milp.solve span in the trace");
+    assert!(
+        path.contains(&"orch.epoch".to_string())
+            && path.contains(&"planner.iterate".to_string()),
+        "milp.solve not nested under orch.epoch > planner.iterate: {path:?}"
+    );
+
+    // ---- span names carry their layer as the Chrome `cat` field.
+    for e in &events {
+        match e.name {
+            "orch.epoch" => assert_eq!(e.cat, "orchestrator"),
+            "planner.iterate" => assert_eq!(e.cat, "planner"),
+            "milp.solve" => assert_eq!(e.cat, "milp"),
+            _ => {}
+        }
+    }
+
+    // ---- the serialized document is valid JSON in Chrome trace shape.
+    let doc = telemetry::chrome_trace(&events);
+    let parsed = Json::parse(&doc.to_string()).expect("valid trace JSON");
+    let evs = parsed.get("traceEvents").as_arr().expect("traceEvents array");
+    assert_eq!(evs.len(), events.len());
+    assert_eq!(parsed.get("displayTimeUnit").as_str(), Some("ms"));
+    for e in evs {
+        assert!(e.get("name").as_str().is_some());
+        assert!(e.get("ts").as_f64().is_some());
+        assert!(e.get("pid").as_u64().is_some());
+        assert!(e.get("tid").as_u64().is_some());
+    }
+
+    // ---- end-to-end file export round-trips through the parser.
+    let path = std::env::temp_dir().join("hetserve_telemetry_trace_test.json");
+    let path_str = path.to_str().expect("utf-8 temp path");
+    telemetry::set_enabled(true);
+    {
+        let mut s = telemetry::span("test.file_export", "test");
+        s.tag("ok", true);
+    }
+    telemetry::write_chrome_trace(path_str).expect("trace written");
+    telemetry::set_enabled(false);
+    let text = std::fs::read_to_string(&path).expect("trace readable");
+    let parsed = Json::parse(&text).expect("file is valid JSON");
+    let evs = parsed.get("traceEvents").as_arr().expect("traceEvents");
+    assert_eq!(evs.len(), 2, "one B/E pair in the exported file");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn snapshot_counters_track_the_run() {
+    // Registry counters survive after the trace is drained and report the
+    // layers the run went through. (Same process as the other test — the
+    // registry is global and monotonic, which is exactly what we check.)
+    let _g = test_lock();
+    let events = traced_orchestration();
+    assert!(!events.is_empty());
+    let snap = telemetry::snapshot();
+    let get = |name: &str| {
+        snap.counters
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|&(_, v)| v)
+            .unwrap_or(0)
+    };
+    assert!(get("orch.epochs") >= 4, "orch.epochs = {}", get("orch.epochs"));
+    assert!(get("planner.iterates") > 0);
+    assert!(get("milp.pivots") > 0, "simplex pivots not mirrored");
+    let hits = get("planner.basis_hits");
+    let misses = get("planner.basis_misses");
+    assert_eq!(
+        hits + misses,
+        get("planner.iterates"),
+        "every iterate is classified hit or miss"
+    );
+    // The JSON snapshot carries the same numbers.
+    let j = telemetry::snapshot_json();
+    assert_eq!(
+        j.get("counters").get("planner.iterates").as_u64(),
+        Some(get("planner.iterates"))
+    );
+}
