@@ -10,5 +10,5 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, Completion, ServeRequest};
-pub use router::{Router, RouterPolicy};
+pub use router::{AdmissionPolicy, Router, RouterPolicy};
 pub use server::{serve, synth_requests, ServeReport, ServerOptions};

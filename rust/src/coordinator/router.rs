@@ -7,8 +7,46 @@
 //!   replicas are chosen with probabilities proportional to the plan's
 //!   `x_{c,w}` fractions, tie-breaking by shortest queue among the top
 //!   candidates.
+//!
+//! Orthogonally to the placement policy, an [`AdmissionPolicy`] decides
+//! whether a request is accepted at all: with a `max_queue` bound, requests
+//! arriving while every replica's queue is at the bound are shed instead of
+//! queued (route via [`Router::route_admitted`]). Shedding keeps tail
+//! latency bounded during overload at the cost of lost requests — the
+//! trade-off the cost-efficiency experiments need to surface rather than
+//! hide inside unbounded queues.
 
+use crate::telemetry;
 use crate::util::rng::Xoshiro256;
+
+/// Admission control applied before placement. `Default` admits everything.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionPolicy {
+    /// Shed a request when the chosen replica already holds this many queued
+    /// requests. `None` = unbounded queues (historical behavior).
+    pub max_queue: Option<usize>,
+}
+
+impl AdmissionPolicy {
+    pub fn unlimited() -> AdmissionPolicy {
+        AdmissionPolicy { max_queue: None }
+    }
+
+    pub fn capped(max_queue: usize) -> AdmissionPolicy {
+        AdmissionPolicy {
+            max_queue: Some(max_queue),
+        }
+    }
+
+    /// Can a replica currently holding `load` queued requests accept one more?
+    #[inline]
+    pub fn admits(&self, load: usize) -> bool {
+        match self.max_queue {
+            Some(cap) => load < cap,
+            None => true,
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub enum RouterPolicy {
@@ -20,13 +58,24 @@ pub enum RouterPolicy {
 
 pub struct Router {
     policy: RouterPolicy,
+    admission: AdmissionPolicy,
     rr_next: usize,
     rng: Xoshiro256,
     num_replicas: usize,
+    shed: u64,
 }
 
 impl Router {
     pub fn new(policy: RouterPolicy, num_replicas: usize, seed: u64) -> Router {
+        Self::with_admission(policy, AdmissionPolicy::unlimited(), num_replicas, seed)
+    }
+
+    pub fn with_admission(
+        policy: RouterPolicy,
+        admission: AdmissionPolicy,
+        num_replicas: usize,
+        seed: u64,
+    ) -> Router {
         if let RouterPolicy::WorkloadAware { fractions } = &policy {
             for (w, fr) in fractions.iter().enumerate() {
                 assert_eq!(
@@ -38,10 +87,21 @@ impl Router {
         }
         Router {
             policy,
+            admission,
             rr_next: 0,
             rng: Xoshiro256::seed_from_u64(seed),
             num_replicas,
+            shed: 0,
         }
+    }
+
+    /// Requests shed by [`Router::route_admitted`] so far.
+    pub fn shed_count(&self) -> u64 {
+        self.shed
+    }
+
+    pub fn admission(&self) -> AdmissionPolicy {
+        self.admission
     }
 
     /// Choose a replica for a request of workload type `workload`, given the
@@ -72,6 +132,30 @@ impl Router {
                 self.rng.weighted_index(fr)
             }
         }
+    }
+
+    /// Like [`Router::route`], but subject to the admission policy: returns
+    /// `None` (and counts a shed) when every replica's queue is at the
+    /// bound. When only the policy's preferred replica is full, the request
+    /// overflows to the least-loaded admissible replica (lowest index on
+    /// ties) rather than being shed — shedding is a last resort.
+    pub fn route_admitted(&mut self, workload: usize, loads: &[usize]) -> Option<usize> {
+        assert_eq!(loads.len(), self.num_replicas);
+        if !loads.iter().any(|&l| self.admission.admits(l)) {
+            self.shed += 1;
+            telemetry::count("router.shed", 1);
+            return None;
+        }
+        let pick = self.route(workload, loads);
+        if self.admission.admits(loads[pick]) {
+            return Some(pick);
+        }
+        loads
+            .iter()
+            .enumerate()
+            .filter(|&(_, &l)| self.admission.admits(l))
+            .min_by_key(|&(i, &l)| (l, i))
+            .map(|(i, _)| i)
     }
 }
 
@@ -118,6 +202,63 @@ mod tests {
         let fractions = vec![vec![0.0, 0.0]];
         let mut r = Router::new(RouterPolicy::WorkloadAware { fractions }, 2, 3);
         assert_eq!(r.route(0, &[4, 1]), 1);
+    }
+
+    #[test]
+    fn unlimited_admission_never_sheds() {
+        let mut r = Router::new(RouterPolicy::Jsq, 2, 1);
+        for _ in 0..100 {
+            assert_eq!(r.route_admitted(0, &[1_000_000, 1_000_001]), Some(0));
+        }
+        assert_eq!(r.shed_count(), 0);
+    }
+
+    #[test]
+    fn capped_admission_sheds_when_all_full() {
+        let mut r =
+            Router::with_admission(RouterPolicy::Jsq, AdmissionPolicy::capped(4), 3, 1);
+        // Room somewhere → admitted at the least-loaded replica.
+        assert_eq!(r.route_admitted(0, &[4, 2, 4]), Some(1));
+        // Everyone at the cap → shed.
+        assert_eq!(r.route_admitted(0, &[4, 4, 4]), None);
+        assert_eq!(r.route_admitted(0, &[5, 9, 4]), None);
+        assert_eq!(r.shed_count(), 2);
+    }
+
+    #[test]
+    fn full_preferred_replica_overflows_before_shedding() {
+        // Workload 0 is pinned to replica 0; when replica 0 is at the cap
+        // the request overflows to the admissible least-loaded replica.
+        let fractions = vec![vec![1.0, 0.0, 0.0]];
+        let mut r = Router::with_admission(
+            RouterPolicy::WorkloadAware { fractions },
+            AdmissionPolicy::capped(2),
+            3,
+            7,
+        );
+        assert_eq!(r.route_admitted(0, &[2, 1, 0]), Some(2));
+        assert_eq!(r.shed_count(), 0);
+    }
+
+    #[test]
+    fn round_robin_skips_full_replicas() {
+        let mut r = Router::with_admission(
+            RouterPolicy::RoundRobin,
+            AdmissionPolicy::capped(1),
+            2,
+            1,
+        );
+        // Replica 0 (the round-robin pick) is full → overflow to replica 1.
+        assert_eq!(r.route_admitted(0, &[1, 0]), Some(1));
+    }
+
+    #[test]
+    fn admission_policy_predicates() {
+        assert!(AdmissionPolicy::unlimited().admits(usize::MAX - 1));
+        let capped = AdmissionPolicy::capped(3);
+        assert!(capped.admits(2));
+        assert!(!capped.admits(3));
+        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::unlimited());
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! * [`catalog`] — GPU types, Table 1 specs, interconnects
 //! * [`workload`] — the nine workload types, Table 4 traces, synthesizer;
 //!   plus demand drift: time-varying mix schedules, non-stationary trace
-//!   synthesis, and the online mixture estimator
+//!   synthesis, and the online mixture estimator; `workload::stream` is
+//!   the O(1)-memory lazy arrival generator the materializer now wraps
 //! * [`cloud`] — availability snapshots (Table 3), market simulator, costs,
 //!   and the event streams: supply-only market events and the unified
 //!   world events carrying a demand channel
@@ -33,7 +34,10 @@
 //!   over a `PlannerSession`, epoch timeline
 //! * [`sim`] — discrete-event cluster simulator executing serving plans,
 //!   including time-varying timelines with mid-trace plan transitions and
-//!   the closed demand loop (estimator-driven replanning)
+//!   the closed demand loop (estimator-driven replanning); `sim::engine`
+//!   is the sharded million-request core: per-replica queues advance in
+//!   parallel on the threadpool, fed by streamed arrivals, bit-identical
+//!   at any thread count (see `sim/README.md`)
 //! * [`telemetry`] — unified observability: a global metric registry
 //!   (atomic counters / gauges / log-bucketed histograms), RAII nesting
 //!   spans with thread-aware buffering, Chrome trace-event export

@@ -13,7 +13,7 @@
 use hetserve::baselines::{all_planners, homogeneous_plan};
 use hetserve::catalog::GpuType;
 use hetserve::cloud::{availability, MarketEvent, MarketEventKind, MarketEventStream, MarketSim};
-use hetserve::coordinator::{serve, synth_requests, RouterPolicy, ServerOptions};
+use hetserve::coordinator::{serve, synth_requests, AdmissionPolicy, RouterPolicy, ServerOptions};
 use hetserve::orchestrator::{OrchestratorOptions, ReplanStrategy};
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
@@ -23,7 +23,8 @@ use hetserve::sched::enumerate::EnumOptions;
 use hetserve::sched::planner::{PlanRequest, Planner, PlannerSession};
 use hetserve::sched::SchedProblem;
 use hetserve::sim::{
-    run_closed_loop, simulate_plan, ClosedLoopOptions, DemandMode, SimOptions, TimelineOptions,
+    run_closed_loop, run_closed_loop_streamed, simulate_plan, ClosedLoopOptions, DemandMode,
+    EngineOptions, SimOptions, StreamedLoopOptions, TimelineOptions,
 };
 use hetserve::util::bench::{cell, Table};
 use hetserve::util::cli::Args;
@@ -44,6 +45,11 @@ USAGE: hetserve <subcommand> [--options]
               [--demand oracle|estimated|static] [--demand-drift T]
               [--shift-to TRACE|r1,..,r9] [--rate-end RPS]
               [--shift-start FRAC] [--shift-end FRAC]
+              [--engine] [--sim-shards N] [--threads N]
+              [--chunk-s SECONDS] [--max-queue N]
+              (--engine streams arrivals through the sharded event
+               engine instead of materializing a trace; same seed ⇒
+               bit-identical results at any --threads)
   compare     (plan options) — ours vs every baseline planner, one table
   serve       --requests 48 --replicas 2 --router jsq|rr [--arrival-rate RPS]
   profile     --model 70b
@@ -58,7 +64,7 @@ Global options:
 ";
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::parse(&["exact", "verbose"]);
+    let args = Args::parse(&["exact", "verbose", "engine"]);
     if let Some(level) = args.get("log") {
         hetserve::util::logging::set_level_from_str(level)
             .map_err(|e| anyhow::anyhow!("--log: {e}"))?;
@@ -344,6 +350,98 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
         &markets[0].avail,
         budget,
     );
+    // --engine: the million-request path. Arrivals stream straight into the
+    // sharded event engine — no trace is ever materialized.
+    if args.flag("engine") {
+        let max_queue = match args.get("max-queue") {
+            Some(s) => Some(
+                s.parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("--max-queue: {e}"))?,
+            ),
+            None => None,
+        };
+        let sopts = StreamedLoopOptions {
+            orchestrator: OrchestratorOptions {
+                strategy: strategy.clone(),
+                demand_drift_threshold: demand_threshold,
+                ..Default::default()
+            },
+            engine: EngineOptions {
+                seed,
+                slo_latency_s: slo_s,
+                shards: args.get_usize("sim-shards", 0),
+                threads: args.get_usize("threads", 0),
+                chunk_s: args.get_f64("chunk-s", 120.0),
+                admission: max_queue.map(AdmissionPolicy::capped).unwrap_or_default(),
+                ..Default::default()
+            },
+            mode,
+            synth: SynthOptions {
+                length_sigma: 0.2,
+                seed,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r = run_closed_loop_streamed(
+            &base, &markets, &schedule, horizon_s, &model, &perf, &sopts,
+        )
+        .ok_or_else(|| anyhow::anyhow!("no feasible plan for the initial world"))?;
+        let engine = &r.engine;
+        let mut t = Table::new(
+            &format!(
+                "orchestrate --engine {} on {} — {} strategy, {} demand, {} shards × {} threads",
+                model.name,
+                schedule.name,
+                sopts.orchestrator.strategy.name(),
+                mode.name(),
+                engine.shards,
+                engine.threads
+            ),
+            &[
+                "epoch", "t", "arrivals", "shed", "done", "SLO %", "p90 s", "rent $", "mix err",
+            ],
+        );
+        for ((e, s), mix_err) in r.report.epochs.iter().zip(&engine.epochs).zip(&r.mix_error) {
+            t.row(vec![
+                e.index.to_string(),
+                format!("{:.0}", s.start_s),
+                s.arrivals.to_string(),
+                s.shed.to_string(),
+                s.completed.to_string(),
+                format!("{:.1}", s.slo_attainment * 100.0),
+                cell(s.p90_s),
+                cell(s.rental_usd),
+                cell(*mix_err),
+            ]);
+        }
+        t.print();
+        println!(
+            "engine: {} streamed, {} completed, {} shed, SLO {:.1}% at {:.0}s, \
+             rental {:.2} $, makespan {:.0}s, peak arrival buffer {}, queue peak {}",
+            engine.requests_streamed,
+            engine.requests_completed,
+            engine.requests_shed,
+            engine.slo_attainment * 100.0,
+            slo_s,
+            engine.total_rental_usd,
+            engine.makespan,
+            engine.peak_arrival_buffer,
+            engine.queue_peak
+        );
+        println!(
+            "perf: {:.0} simulated req/s over {:.2}s wall ({} shards, {} threads, \
+             {} transitions), fingerprint {:016x}",
+            engine.sim_reqs_per_s(),
+            engine.wall_s,
+            engine.shards,
+            engine.threads,
+            engine.transitions_applied,
+            engine.fingerprint()
+        );
+        return Ok(());
+    }
+
     let trace = synthesize_trace_schedule(
         &schedule,
         horizon_s,

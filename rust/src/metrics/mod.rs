@@ -2,13 +2,32 @@
 //! throughput — shared by the simulator, the real serving coordinator, and
 //! every benchmark harness.
 
+use crate::util::rng::Xoshiro256;
 use crate::util::stats::{paper_percentile_grid, percentile};
 use std::sync::{Arc, Mutex};
 
+/// Reservoir state for the fixed-memory recording mode (Algorithm R):
+/// every recorded sample is kept until `cap` is reached, after which each
+/// new sample replaces a stored one with probability `cap / seen` — the
+/// stored pool stays a uniform sample of everything ever recorded.
+#[derive(Clone, Debug)]
+struct Reservoir {
+    cap: usize,
+    rng: Xoshiro256,
+}
+
 /// Collects per-request latencies and completion times.
+///
+/// Two modes:
+/// * **exact** ([`LatencyRecorder::new`]) — every sample stored; counts,
+///   makespan, and percentiles are exact. O(n) memory.
+/// * **bounded** ([`LatencyRecorder::bounded`]) — at most `cap` samples
+///   stored in a uniform reservoir; `count` and `makespan` stay *exact*
+///   (tracked separately), percentiles and SLO attainment are reservoir
+///   estimates. O(cap) memory — what million-request simulation runs use.
 #[derive(Debug, Default)]
 pub struct LatencyRecorder {
-    /// (completion_time_s, latency_s) pairs.
+    /// (completion_time_s, latency_s) pairs (the reservoir, in bounded mode).
     samples: Vec<(f64, f64)>,
     /// Lazily-built ascending latency view shared by every percentile
     /// query. Percentile callers used to re-sort the full sample vector on
@@ -16,6 +35,12 @@ pub struct LatencyRecorder {
     /// now the first query after a mutation sorts once and the rest reuse
     /// the cached view. Mutations (`record`/`merge`) invalidate it.
     sorted: Mutex<Option<Arc<Vec<f64>>>>,
+    /// `Some` in bounded mode.
+    reservoir: Option<Reservoir>,
+    /// Total samples ever recorded (== `samples.len()` in exact mode).
+    seen: usize,
+    /// Exact max completion time across every recorded sample.
+    max_completion_s: f64,
 }
 
 impl Clone for LatencyRecorder {
@@ -23,6 +48,9 @@ impl Clone for LatencyRecorder {
         Self {
             samples: self.samples.clone(),
             sorted: Mutex::new(self.sorted.lock().unwrap().clone()),
+            reservoir: self.reservoir.clone(),
+            seen: self.seen,
+            max_completion_s: self.max_completion_s,
         }
     }
 }
@@ -32,13 +60,62 @@ impl LatencyRecorder {
         Self::default()
     }
 
+    /// Fixed-memory recorder: keeps a deterministic (seeded) uniform
+    /// reservoir of at most `cap` samples.
+    pub fn bounded(cap: usize, seed: u64) -> Self {
+        Self::bounded_from_rng(cap, Xoshiro256::seed_from_u64(seed))
+    }
+
+    /// Like [`Self::bounded`] but with a caller-supplied generator — the
+    /// sharded simulator hands each shard's recorder its own
+    /// [`Xoshiro256::substream`] so reservoirs stay independent *and*
+    /// deterministic from one seed.
+    pub fn bounded_from_rng(cap: usize, rng: Xoshiro256) -> Self {
+        assert!(cap > 0, "bounded recorder needs a positive capacity");
+        Self {
+            samples: Vec::new(),
+            sorted: Mutex::new(None),
+            reservoir: Some(Reservoir { cap, rng }),
+            seen: 0,
+            max_completion_s: 0.0,
+        }
+    }
+
+    /// Whether this recorder subsamples (bounded mode).
+    pub fn is_bounded(&self) -> bool {
+        self.reservoir.is_some()
+    }
+
+    /// Stored-sample count (== `count()` in exact mode, ≤ cap in bounded).
+    pub fn stored(&self) -> usize {
+        self.samples.len()
+    }
+
     pub fn record(&mut self, completion_s: f64, latency_s: f64) {
-        self.samples.push((completion_s, latency_s));
+        self.seen += 1;
+        self.max_completion_s = self.max_completion_s.max(completion_s);
+        match &mut self.reservoir {
+            None => self.samples.push((completion_s, latency_s)),
+            Some(r) => {
+                if self.samples.len() < r.cap {
+                    self.samples.push((completion_s, latency_s));
+                } else {
+                    // Algorithm R: keep with probability cap/seen.
+                    let j = r.rng.next_below(self.seen as u64) as usize;
+                    if j < r.cap {
+                        self.samples[j] = (completion_s, latency_s);
+                    } else {
+                        return; // stored pool untouched: cache stays valid
+                    }
+                }
+            }
+        }
         *self.sorted.get_mut().unwrap() = None;
     }
 
+    /// Total samples ever recorded (exact in both modes).
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.seen
     }
 
     pub fn latencies(&self) -> Vec<f64> {
@@ -46,8 +123,9 @@ impl LatencyRecorder {
     }
 
     /// Time of the last completion (the makespan when arrivals are batched).
+    /// Exact in both modes.
     pub fn makespan(&self) -> f64 {
-        self.samples.iter().map(|&(t, _)| t).fold(0.0, f64::max)
+        self.max_completion_s
     }
 
     /// Overall throughput: completions / makespan.
@@ -88,13 +166,28 @@ impl LatencyRecorder {
             .collect()
     }
 
+    /// Merge another recorder into this one. Counts and makespan merge
+    /// exactly in every mode. In bounded mode the stored pools are
+    /// concatenated and, if over capacity, deterministically resampled
+    /// down to `cap` — an approximation (the union is resampled uniformly
+    /// over *stored* samples, not weighted by the true per-recorder
+    /// counts), adequate for the percentile reporting it feeds.
     pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.seen += other.seen;
+        self.max_completion_s = self.max_completion_s.max(other.max_completion_s);
         self.samples.extend_from_slice(&other.samples);
+        if let Some(r) = &mut self.reservoir {
+            if self.samples.len() > r.cap {
+                r.rng.shuffle(&mut self.samples);
+                self.samples.truncate(r.cap);
+            }
+        }
         *self.sorted.get_mut().unwrap() = None;
     }
 
     /// Fraction of recorded requests whose latency is within `slo_s` (SLO
     /// attainment). 1.0 for an empty recorder — no request missed the SLO.
+    /// A reservoir estimate in bounded mode.
     pub fn slo_attainment(&self, slo_s: f64) -> f64 {
         if self.samples.is_empty() {
             return 1.0;
@@ -205,6 +298,72 @@ mod tests {
         for (p, v) in r.percentile_grid() {
             assert_eq!(v, naive(&r, p), "grid p{p}");
         }
+    }
+
+    #[test]
+    fn bounded_reservoir_tracks_exact_percentiles() {
+        // The satellite contract: a 4096-sample reservoir over a 50k-sample
+        // heavy-tailed stream must agree with exact percentiles within a
+        // few percent, while counts and makespan stay *exact*.
+        let mut rng = Xoshiro256::seed_from_u64(0xB0B);
+        let mut exact = LatencyRecorder::new();
+        let mut bounded = LatencyRecorder::bounded(4096, 0xCAFE);
+        let n = 50_000;
+        for i in 0..n {
+            let latency = rng.lognormal(1.0, 0.6);
+            let t = i as f64 * 0.05;
+            exact.record(t, latency);
+            bounded.record(t, latency);
+        }
+        assert!(bounded.is_bounded() && !exact.is_bounded());
+        assert_eq!(bounded.count(), n);
+        assert_eq!(bounded.stored(), 4096);
+        assert_eq!(bounded.makespan(), exact.makespan());
+        for p in [50.0, 90.0, 99.0] {
+            let (e, b) = (exact.latency_percentile(p), bounded.latency_percentile(p));
+            // ~3% sampling error expected at p90 for a 4096 reservoir;
+            // p99 is noisier — 10% is a comfortable determinism-safe bound.
+            assert!(
+                (b / e - 1.0).abs() < 0.10,
+                "p{p}: bounded {b} vs exact {e}"
+            );
+        }
+        let slo = exact.latency_percentile(80.0);
+        assert!(
+            (bounded.slo_attainment(slo) - exact.slo_attainment(slo)).abs() < 0.02,
+            "slo estimate {} vs exact {}",
+            bounded.slo_attainment(slo),
+            exact.slo_attainment(slo)
+        );
+        // Deterministic from the seed.
+        let mut again = LatencyRecorder::bounded(4096, 0xCAFE);
+        let mut rng2 = Xoshiro256::seed_from_u64(0xB0B);
+        for i in 0..n {
+            again.record(i as f64 * 0.05, rng2.lognormal(1.0, 0.6));
+        }
+        assert_eq!(again.latencies(), bounded.latencies());
+    }
+
+    #[test]
+    fn bounded_merge_keeps_exact_counts_and_capacity() {
+        let mut a = LatencyRecorder::bounded(100, 1);
+        let mut b = LatencyRecorder::bounded(100, 2);
+        for i in 0..500 {
+            a.record(i as f64, 1.0 + (i % 7) as f64);
+            b.record(1000.0 + i as f64, 2.0 + (i % 5) as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 1000);
+        assert_eq!(a.stored(), 100);
+        assert_eq!(a.makespan(), 1499.0);
+        // Below capacity, merge keeps everything.
+        let mut c = LatencyRecorder::bounded(100, 3);
+        let mut d = LatencyRecorder::bounded(100, 4);
+        c.record(1.0, 0.1);
+        d.record(2.0, 0.2);
+        c.merge(&d);
+        assert_eq!(c.stored(), 2);
+        assert_eq!(c.count(), 2);
     }
 
     #[test]

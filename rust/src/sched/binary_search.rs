@@ -708,35 +708,6 @@ pub fn solve_binary_search(
     solve_binary_search_core(p, opts, None, None, &mut basis)
 }
 
-/// Deprecated shim for the pre-`Planner` warm entry point.
-#[deprecated(
-    note = "build a sched::planner::PlanRequest with warm_upper and plan through \
-            BisectionPlanner / PlannerSession instead"
-)]
-pub fn solve_binary_search_warm(
-    p: &SchedProblem,
-    opts: &BinarySearchOptions,
-    warm_upper: Option<f64>,
-) -> (Option<ServingPlan>, SearchStats) {
-    let mut basis = None;
-    solve_binary_search_core(p, opts, warm_upper, None, &mut basis)
-}
-
-/// Deprecated shim for the pre-`Planner` seeded entry point.
-#[deprecated(
-    note = "build a sched::planner::PlanRequest with a seed plan and plan through \
-            BisectionPlanner / PlannerSession instead"
-)]
-pub fn solve_binary_search_seeded(
-    p: &SchedProblem,
-    opts: &BinarySearchOptions,
-    warm_upper: Option<f64>,
-    seed_plan: Option<&ServingPlan>,
-) -> (Option<ServingPlan>, SearchStats) {
-    let mut basis = None;
-    solve_binary_search_core(p, opts, warm_upper, seed_plan, &mut basis)
-}
-
 /// Algorithm 1 with the full warm surface: `warm_upper` is a makespan known
 /// (or believed) achievable — typically the incumbent plan's makespan when
 /// replanning after a market event; a feasible warm bound skips the loose
@@ -812,6 +783,7 @@ pub(crate) fn solve_binary_search_core(
 mod tests {
     use super::*;
     use crate::sched::formulation::solve_direct;
+    use crate::sched::planner::{BisectionPlanner, PlanRequest, Planner};
     use crate::sched::toy::simple_example;
 
     #[test]
@@ -933,12 +905,17 @@ mod tests {
         let total_pivots: u64 = stats.iterates.iter().map(|i| i.pivots).sum();
         assert!(total_pivots <= stats.pivots);
         // Replanning seeded with the incumbent must agree (within the
-        // bisection tolerance) and still produce a valid plan. The
-        // deprecated shims stay compile-checked here until removal.
-        #[allow(deprecated)]
-        let (plan2, stats2) =
-            solve_binary_search_seeded(&p, &opts, Some(plan.makespan), Some(&plan));
-        let plan2 = plan2.unwrap();
+        // bisection tolerance) and still produce a valid plan. The warm
+        // surface is the planner API: a `PlanRequest` carrying the
+        // incumbent as warm bound and MILP seed.
+        let mut planner = BisectionPlanner::new(opts.clone());
+        let report = planner.plan(
+            &PlanRequest::new(&p)
+                .with_warm_upper(plan.makespan)
+                .with_seed(&plan),
+        );
+        assert!(report.stats.pivots > 0);
+        let plan2 = report.into_plan().unwrap();
         plan2.validate(&p, 1e-4).unwrap();
         assert!(
             (plan2.makespan - plan.makespan).abs() <= 0.2,
@@ -946,10 +923,8 @@ mod tests {
             plan2.makespan,
             plan.makespan
         );
-        assert!(stats2.pivots > 0);
-        #[allow(deprecated)]
-        let (plan3, _) = solve_binary_search_warm(&p, &opts, Some(plan.makespan));
-        assert!(plan3.is_some());
+        let warm_only = planner.plan(&PlanRequest::new(&p).with_warm_upper(plan.makespan));
+        assert!(warm_only.into_plan().is_some());
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! * [`DemandMode::Static`] — the initial snapshot frozen forever (the
 //!   pre-drift incumbent behaviour: replans on supply only).
 
+use super::engine::{run_engine, EngineOptions, EngineReport};
 use super::timeline::{simulate_timeline, TimelineOptions, TimelineResult};
 use crate::cloud::{MarketEvent, WorldEvent};
 use crate::orchestrator::{
@@ -28,7 +29,10 @@ use crate::orchestrator::{
 use crate::perf_model::{ModelSpec, PerfModel};
 use crate::sched::SchedProblem;
 use crate::telemetry;
-use crate::workload::{DemandSnapshot, MixEstimator, MixSchedule, Trace, TraceMix};
+use crate::workload::{
+    ArrivalStream, DemandSnapshot, MixEstimator, MixSchedule, Request, SynthOptions, Trace,
+    TraceMix,
+};
 
 /// Where the demand channel of the world signal comes from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -243,6 +247,184 @@ pub fn run_closed_loop(
     Some(result)
 }
 
+/// Options for [`run_closed_loop_streamed`]: the engine-backed loop keeps
+/// the [`DemandMode`] surface of [`ClosedLoopOptions`] but swaps the
+/// materialized trace + timeline simulator for a streamed
+/// [`ArrivalStream`] + [`super::engine`].
+#[derive(Clone, Debug)]
+pub struct StreamedLoopOptions {
+    pub orchestrator: OrchestratorOptions,
+    pub engine: EngineOptions,
+    pub mode: DemandMode,
+    /// EWMA half-life of the demand estimator, seconds.
+    pub estimator_halflife_s: f64,
+    /// Stream synthesis parameters — only `seed` and `length_sigma` are
+    /// read; rate and mixture come from the schedule.
+    pub synth: SynthOptions,
+}
+
+impl Default for StreamedLoopOptions {
+    fn default() -> Self {
+        Self {
+            orchestrator: OrchestratorOptions::default(),
+            engine: EngineOptions::default(),
+            mode: DemandMode::Estimated,
+            estimator_halflife_s: 600.0,
+            synth: SynthOptions::default(),
+        }
+    }
+}
+
+/// Outcome of a streamed closed-loop run — [`ClosedLoopResult`] with the
+/// timeline execution replaced by an [`EngineReport`].
+#[derive(Clone, Debug)]
+pub struct StreamedLoopResult {
+    pub report: OrchestrationReport,
+    pub engine: EngineReport,
+    pub mix_error: Vec<f64>,
+    pub rate_error: Vec<f64>,
+    pub observed_mix_error: Vec<f64>,
+}
+
+impl StreamedLoopResult {
+    pub fn mean_mix_error(&self) -> f64 {
+        mean(&self.mix_error)
+    }
+
+    pub fn mean_rate_error(&self) -> f64 {
+        mean(&self.rate_error)
+    }
+
+    pub fn mean_observed_mix_error(&self) -> f64 {
+        mean(&self.observed_mix_error)
+    }
+}
+
+/// The million-request closed loop: like [`run_closed_loop`], but no trace
+/// is ever materialized. Arrivals stream from `schedule` over
+/// `[0, horizon_s)`; in [`DemandMode::Estimated`] the estimator lazily
+/// consumes its *own* same-seed copy of the stream (so it observes exactly
+/// the arrivals the engine will simulate, causally, in O(1) memory), and
+/// the produced epoch timeline is executed by the sharded
+/// [`super::engine::run_engine`]. Returns `None` when the initial world
+/// admits no feasible plan.
+pub fn run_closed_loop_streamed(
+    base: &SchedProblem,
+    markets: &[MarketEvent],
+    schedule: &MixSchedule,
+    horizon_s: f64,
+    model: &ModelSpec,
+    perf: &PerfModel,
+    opts: &StreamedLoopOptions,
+) -> Option<StreamedLoopResult> {
+    let first = markets.first()?;
+    let mut tspan = telemetry::span("loop.run_streamed", "sim");
+    tspan.tag("mode", opts.mode.name());
+    let ts: Vec<f64> = markets.iter().map(|m| m.t_s).collect();
+    let initial_demand = schedule.at(first.t_s);
+    let mut estimator = MixEstimator::new(opts.estimator_halflife_s, initial_demand.clone());
+    let mut est_stream = ArrivalStream::new(schedule, horizon_s, &opts.synth);
+    let mut est_carry: Option<Request> = None;
+
+    // Causal demand channel: before planning the tick at `t`, feed the
+    // estimator every arrival strictly before `t` that it has not seen
+    // yet (one request of look-ahead carried between ticks).
+    let mut demand_at = |t_s: f64| -> DemandSnapshot {
+        match opts.mode {
+            DemandMode::Oracle => schedule.at(t_s),
+            DemandMode::Static => initial_demand.clone(),
+            DemandMode::Estimated => {
+                loop {
+                    let r = match est_carry.take() {
+                        Some(r) => r,
+                        None => match est_stream.next() {
+                            Some(r) => r,
+                            None => break,
+                        },
+                    };
+                    if r.arrival_s >= t_s {
+                        est_carry = Some(r);
+                        break;
+                    }
+                    estimator.observe(r.arrival_s, r.workload.index);
+                }
+                estimator.snapshot(t_s)
+            }
+        }
+    };
+
+    let first_event = WorldEvent::new(first.clone(), demand_at(first.t_s));
+    let mut orch = Orchestrator::start(
+        base,
+        &first_event,
+        epoch_duration(&ts, 0),
+        &opts.orchestrator,
+    )?;
+    for (i, market) in markets.iter().enumerate().skip(1) {
+        let event = WorldEvent::new(market.clone(), demand_at(market.t_s));
+        orch.step(&event, epoch_duration(&ts, i));
+    }
+    let report = orch.finish();
+
+    let mut mix_error = Vec::with_capacity(report.epochs.len());
+    let mut rate_error = Vec::with_capacity(report.epochs.len());
+    for e in &report.epochs {
+        let truth = schedule.at(e.start_s);
+        mix_error.push(e.demand.mix.total_variation(&truth.mix));
+        let denom = e.demand.rate_rps.max(truth.rate_rps);
+        rate_error.push(if denom > 0.0 {
+            (e.demand.rate_rps - truth.rate_rps).abs() / denom
+        } else {
+            0.0
+        });
+    }
+
+    let steps = report.timeline_steps();
+    let engine = run_engine(
+        &steps,
+        model,
+        ArrivalStream::new(schedule, horizon_s, &opts.synth),
+        perf,
+        &opts.engine,
+    );
+    drop(steps);
+
+    let observed_mix_error: Vec<f64> = report
+        .epochs
+        .iter()
+        .zip(&engine.epochs)
+        .map(|(e, s)| {
+            let mut counts = [0.0f64; 9];
+            for (c, &n) in counts.iter_mut().zip(&s.arrivals_by_type) {
+                *c = n as f64;
+            }
+            match TraceMix::normalized("observed", counts) {
+                Ok(observed) => e.demand.mix.total_variation(&observed),
+                Err(_) => 0.0, // no arrivals this epoch
+            }
+        })
+        .collect();
+
+    let result = StreamedLoopResult {
+        report,
+        engine,
+        mix_error,
+        rate_error,
+        observed_mix_error,
+    };
+    if telemetry::enabled() {
+        telemetry::count("loop.streamed_runs", 1);
+        telemetry::gauge_set("loop.mean_mix_error", result.mean_mix_error());
+        telemetry::gauge_set("loop.mean_rate_error", result.mean_rate_error());
+        tspan.tag("epochs", result.report.epochs.len());
+        tspan.tag("replans", result.report.replans);
+        tspan.tag("requests_streamed", result.engine.requests_streamed);
+        tspan.tag("requests_shed", result.engine.requests_shed);
+        tspan.tag("mean_mix_error", result.mean_mix_error());
+    }
+    Some(result)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,6 +602,108 @@ mod tests {
         for (x, y) in a.mix_error.iter().zip(&b.mix_error) {
             assert!((x - y).abs() < 1e-12);
         }
+    }
+
+    fn streamed_opts(mode: DemandMode, seed: u64, threads: usize) -> StreamedLoopOptions {
+        StreamedLoopOptions {
+            orchestrator: loop_opts(mode).orchestrator,
+            engine: EngineOptions {
+                shards: 4,
+                threads,
+                ..Default::default()
+            },
+            mode,
+            estimator_halflife_s: 300.0,
+            synth: SynthOptions {
+                length_sigma: 0.15,
+                seed,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn streamed_loop_completes_stream_and_is_thread_deterministic() {
+        // Streamed oracle loop: zero demand error, every streamed request
+        // completes, the stream replays exactly the trace the materializing
+        // loop would synthesize, and thread count never changes results.
+        let s = shift_scenario(4, 53);
+        let horizon_s = 4.0 * 600.0;
+        let run = |threads: usize| {
+            run_closed_loop_streamed(
+                &s.base,
+                &s.markets,
+                &s.schedule,
+                horizon_s,
+                &s.model,
+                &s.perf,
+                &streamed_opts(DemandMode::Oracle, 53, threads),
+            )
+            .expect("streamed loop")
+        };
+        let a = run(1);
+        for err in &a.mix_error {
+            assert!(err.abs() < 1e-9, "oracle mix error {err}");
+        }
+        assert_eq!(a.engine.requests_shed, 0);
+        assert_eq!(a.engine.requests_completed, a.engine.requests_streamed);
+        assert_eq!(
+            a.engine.requests_streamed,
+            s.trace.len(),
+            "stream must replay the materialized trace"
+        );
+        assert!(a.engine.peak_arrival_buffer < s.trace.len() / 2);
+        let b = run(4);
+        assert_eq!(a.engine.fingerprint(), b.engine.fingerprint());
+        assert!(b.engine.threads > a.engine.threads || b.engine.shards == 1);
+    }
+
+    #[test]
+    fn streamed_estimator_matches_trace_fed_estimator() {
+        // The lazily-consumed estimator stream observes exactly the same
+        // causal arrival windows as `observe_trace_window` over the
+        // materialized trace, so both loops must plan against identical
+        // demand snapshots epoch for epoch.
+        let s = shift_scenario(4, 59);
+        let horizon_s = 4.0 * 600.0;
+        let materialized = run_closed_loop(
+            &s.base,
+            &s.markets,
+            &s.schedule,
+            &s.trace,
+            &s.model,
+            &s.perf,
+            &loop_opts(DemandMode::Estimated),
+        )
+        .expect("materialized loop");
+        let streamed = run_closed_loop_streamed(
+            &s.base,
+            &s.markets,
+            &s.schedule,
+            horizon_s,
+            &s.model,
+            &s.perf,
+            &streamed_opts(DemandMode::Estimated, 59, 1),
+        )
+        .expect("streamed loop");
+        assert_eq!(streamed.report.replans, materialized.report.replans);
+        assert_eq!(
+            streamed.report.epochs.len(),
+            materialized.report.epochs.len()
+        );
+        for (se, me) in streamed.report.epochs.iter().zip(&materialized.report.epochs) {
+            assert!(
+                (se.demand.rate_rps - me.demand.rate_rps).abs() < 1e-9,
+                "rate {} vs {}",
+                se.demand.rate_rps,
+                me.demand.rate_rps
+            );
+            assert!(se.demand.mix.total_variation(&me.demand.mix) < 1e-9);
+        }
+        for (x, y) in streamed.mix_error.iter().zip(&materialized.mix_error) {
+            assert!((x - y).abs() < 1e-9);
+        }
+        assert_eq!(streamed.engine.requests_streamed, s.trace.len());
     }
 
     #[test]

@@ -1,0 +1,1217 @@
+//! Sharded discrete-event simulation engine for streamed arrivals.
+//!
+//! [`super::simulate_timeline`] materializes the whole trace, pre-assigns
+//! every request, and walks one global event heap — fine at thousands of
+//! requests, a wall at millions. This engine scales the same replica
+//! semantics (continuous batching, prefill + decode step times from the
+//! analytical perf model, spin-up delays, retire-and-drain) to
+//! million-request closed loops:
+//!
+//! * **Streaming arrivals.** Requests come from any time-ordered iterator
+//!   (normally [`crate::workload::ArrivalStream`]) and are consumed in
+//!   bounded chunks, so arrival memory is O(chunk), not O(trace).
+//! * **Sharding.** Each replica lives in exactly one shard; a shard owns
+//!   its replicas' queues, batches, and event heap, and advances
+//!   independently. Shards exchange nothing while running — coupling
+//!   happens only on the main thread, between chunks, through the routing
+//!   pass and the queue-depth snapshots it reads.
+//! * **Determinism.** Routing is sequential and RNG-free (deficit-credit
+//!   over the epoch plan's fractions, then least-cumulative-tokens with
+//!   lowest-id tie-breaks), shard advancement touches only shard-local
+//!   state, and results merge in shard-index order. Thread count therefore
+//!   changes only which OS thread runs a shard, never any simulated value:
+//!   same seed ⇒ bit-identical [`EngineReport::fingerprint`] at any
+//!   `threads` setting (pinned by a test below).
+//! * **Admission control.** A [`AdmissionPolicy`] cap sheds arrivals when
+//!   every eligible replica's queue is at the limit; shed counts surface
+//!   per epoch, in the report, and in telemetry.
+//!
+//! Two deliberate divergences from the timeline simulator, both in the
+//! name of shard independence: plan changes always execute as
+//! retire + spin-up (no in-place re-shard pairing), and a retired replica
+//! drains its own queue instead of handing it to survivors (work stealing
+//! across replicas would couple shards mid-chunk).
+
+use super::timeline::{TimelineOptions, TimelineStep};
+use crate::coordinator::AdmissionPolicy;
+use crate::metrics::{BusyTracker, LatencyRecorder};
+use crate::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
+use crate::telemetry;
+use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::ThreadPool;
+use crate::workload::Request;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Options for the sharded engine.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    pub seed: u64,
+    /// Cap on in-flight requests per replica.
+    pub max_batch: usize,
+    /// Delay between renting a replica and it accepting traffic.
+    pub spin_up_s: f64,
+    /// Per-request latency SLO for attainment accounting.
+    pub slo_latency_s: f64,
+    /// Shard count (0 = auto: one per replica, capped at 8).
+    pub shards: usize,
+    /// Worker threads advancing shards (0 = auto: available parallelism
+    /// capped at the shard count; 1 = fully sequential, no pool).
+    pub threads: usize,
+    /// Routing/advancement window in simulated seconds; also the arrival
+    /// memory bound. Chunks never straddle an epoch boundary.
+    pub chunk_s: f64,
+    /// Queue-depth shed policy, evaluated against each replica's depth as
+    /// of the last chunk boundary plus same-chunk assignments.
+    pub admission: AdmissionPolicy,
+    /// Reservoir capacity per shard for latency percentiles (0 = exact,
+    /// which stores every sample — avoid for million-request runs).
+    pub latency_reservoir: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        let tl = TimelineOptions::default();
+        Self {
+            seed: tl.seed,
+            max_batch: tl.max_batch,
+            spin_up_s: tl.spin_up_s,
+            slo_latency_s: tl.slo_latency_s,
+            shards: 0,
+            threads: 0,
+            chunk_s: 120.0,
+            admission: AdmissionPolicy::unlimited(),
+            latency_reservoir: 16_384,
+        }
+    }
+}
+
+/// Per-epoch outcome (the engine's analogue of [`super::EpochStats`],
+/// plus shed accounting).
+#[derive(Clone, Debug)]
+pub struct EngineEpochStats {
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Requests that arrived (streamed) during this epoch, shed included.
+    pub arrivals: usize,
+    /// Arrivals broken down by workload type.
+    pub arrivals_by_type: [usize; 9],
+    /// Arrivals rejected by the admission policy.
+    pub shed: usize,
+    /// Admitted arrivals of this epoch completed by the end of the run
+    /// (exact count, not a reservoir estimate).
+    pub completed: usize,
+    /// Fraction of this epoch's completions within the SLO (exact).
+    pub slo_attainment: f64,
+    /// Reservoir-estimated p90 latency of this epoch's completions.
+    pub p90_s: f64,
+    pub rental_usd: f64,
+}
+
+/// Result of an engine run.
+#[derive(Clone, Debug)]
+pub struct EngineReport {
+    /// Merged latency recorder: exact `count()`/`makespan()`, percentile
+    /// estimates from the bounded reservoir (exact when
+    /// `latency_reservoir == 0`).
+    pub recorder: LatencyRecorder,
+    pub epochs: Vec<EngineEpochStats>,
+    pub makespan: f64,
+    pub total_rental_usd: f64,
+    /// Requests pulled from the arrival stream.
+    pub requests_streamed: usize,
+    /// Of those, rejected by admission control.
+    pub requests_shed: usize,
+    /// Of those, admitted and completed (`streamed == shed + completed`).
+    pub requests_completed: usize,
+    /// Overall SLO attainment across completions (exact counters).
+    pub slo_attainment: f64,
+    /// Largest number of arrivals ever buffered between stream and
+    /// shards — the O(chunk) memory bound, vs O(n) materialization.
+    pub peak_arrival_buffer: usize,
+    /// Deepest per-replica queue observed at any chunk boundary.
+    pub queue_peak: usize,
+    pub replicas_peak: usize,
+    /// Spin-ups + retirements executed at epoch boundaries.
+    pub transitions_applied: usize,
+    /// Shard/thread geometry the run actually used (excluded from the
+    /// fingerprint: they must not change simulated results).
+    pub shards: usize,
+    pub threads: usize,
+    /// Wall-clock seconds spent inside the engine (not fingerprinted).
+    pub wall_s: f64,
+}
+
+impl EngineReport {
+    /// Simulated requests completed per wall-clock second — the speed
+    /// metric `perf_sim` tracks.
+    pub fn sim_reqs_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.requests_completed as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// FNV-1a over every simulated quantity (f64s by bit pattern). Two
+    /// runs at the same seed must produce the same fingerprint regardless
+    /// of `threads`; `shards`, `threads`, and wall-clock fields are
+    /// deliberately excluded.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        h = fnv1a(h, self.requests_streamed as u64);
+        h = fnv1a(h, self.requests_shed as u64);
+        h = fnv1a(h, self.requests_completed as u64);
+        h = fnv1a(h, self.makespan.to_bits());
+        h = fnv1a(h, self.total_rental_usd.to_bits());
+        h = fnv1a(h, self.slo_attainment.to_bits());
+        h = fnv1a(h, self.queue_peak as u64);
+        h = fnv1a(h, self.replicas_peak as u64);
+        h = fnv1a(h, self.transitions_applied as u64);
+        for e in &self.epochs {
+            h = fnv1a(h, e.arrivals as u64);
+            h = fnv1a(h, e.shed as u64);
+            h = fnv1a(h, e.completed as u64);
+            for &n in &e.arrivals_by_type {
+                h = fnv1a(h, n as u64);
+            }
+            h = fnv1a(h, e.slo_attainment.to_bits());
+            h = fnv1a(h, e.p90_s.to_bits());
+            h = fnv1a(h, e.rental_usd.to_bits());
+        }
+        h
+    }
+}
+
+fn fnv1a(mut h: u64, x: u64) -> u64 {
+    for b in x.to_le_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Index of the epoch in force at `t` (arrivals before the first start
+/// belong to epoch 0). `starts` is ascending.
+fn epoch_of(starts: &[f64], t: f64) -> usize {
+    starts.partition_point(|&s| s <= t).saturating_sub(1)
+}
+
+/// In-flight request state inside a replica engine.
+struct InFlight {
+    arrival_s: f64,
+    ctx_tokens: f64,
+    remaining_out: u32,
+    epoch: usize,
+}
+
+/// One replica owned by a shard.
+struct EngineInstance {
+    /// Global instance id (index into the main thread's meta tables).
+    id: usize,
+    config: ReplicaConfig,
+    active_from_s: f64,
+    retire_at_s: Option<f64>,
+    /// Requests routed to this replica but not yet delivered to its queue
+    /// (delivery happens at their arrival time inside the shard clock).
+    pending: VecDeque<Request>,
+    queue: VecDeque<Request>,
+    batch: Vec<InFlight>,
+    token_capacity: f64,
+    busy: BusyTracker,
+    next_event: Option<f64>,
+}
+
+impl EngineInstance {
+    fn tokens_in_use(&self) -> f64 {
+        self.batch.iter().map(|r| r.ctx_tokens).sum()
+    }
+
+    fn retired_by(&self, t: f64) -> bool {
+        self.retire_at_s.map(|r| t + 1e-9 >= r).unwrap_or(false)
+    }
+}
+
+/// Event queue entry ordered by time (min-heap via reversed ordering).
+#[derive(Clone, Copy, PartialEq)]
+struct Event {
+    time: f64,
+    instance: usize,
+}
+
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// One shard: a disjoint set of replicas plus everything needed to advance
+/// them without touching shared state (own model/perf copies, own event
+/// heap, own latency reservoirs on an RNG substream).
+struct Shard {
+    model: ModelSpec,
+    perf: PerfModel,
+    max_batch: usize,
+    slo_s: f64,
+    epoch_starts: Vec<f64>,
+    instances: Vec<EngineInstance>,
+    heap: BinaryHeap<Event>,
+    recorder: LatencyRecorder,
+    epoch_recorders: Vec<LatencyRecorder>,
+    epoch_completed: Vec<usize>,
+    epoch_slo_hits: Vec<usize>,
+    /// Reused completion buffer: (end_s, latency_s, arrival epoch).
+    scratch: Vec<(f64, f64, usize)>,
+}
+
+impl Shard {
+    /// Hand a routed request to a replica. Called on the main thread
+    /// between chunk advances; the wake event delivers it at arrival time.
+    fn enqueue(&mut self, local: usize, req: Request) {
+        let wake = req.arrival_s.max(self.instances[local].active_from_s);
+        self.instances[local].pending.push_back(req);
+        self.heap.push(Event {
+            time: wake,
+            instance: local,
+        });
+    }
+
+    /// Run this shard's event loop up to (excluding) `t_end`.
+    fn advance_to(&mut self, t_end: f64) {
+        while self.heap.peek().map(|e| e.time < t_end).unwrap_or(false) {
+            let Event { time: now, instance: li } = self.heap.pop().unwrap();
+            let wake = advance_instance(
+                &mut self.instances[li],
+                &self.model,
+                &self.perf,
+                &self.epoch_starts,
+                self.max_batch,
+                now,
+                &mut self.scratch,
+            );
+            for i in 0..self.scratch.len() {
+                let (end, latency, epoch) = self.scratch[i];
+                self.recorder.record(end, latency);
+                self.epoch_recorders[epoch].record(end, latency);
+                self.epoch_completed[epoch] += 1;
+                if latency <= self.slo_s {
+                    self.epoch_slo_hits[epoch] += 1;
+                }
+            }
+            self.scratch.clear();
+            if let Some(t) = wake {
+                self.heap.push(Event {
+                    time: t,
+                    instance: li,
+                });
+            }
+        }
+    }
+}
+
+/// Admit one request into a replica's continuous batch: prefill occupies
+/// the engine once, then the request joins the decode rounds. Mirrors the
+/// timeline simulator's `admit_one`.
+fn admit_req(
+    inst: &mut EngineInstance,
+    req: Request,
+    epoch_starts: &[f64],
+    model: &ModelSpec,
+    perf: &PerfModel,
+    now: f64,
+) {
+    let epoch = epoch_of(epoch_starts, req.arrival_s);
+    let pre = perf.prefill_cost(&inst.config, model, req.input_tokens as f64);
+    inst.batch.push(InFlight {
+        arrival_s: req.arrival_s,
+        ctx_tokens: req.input_tokens as f64,
+        remaining_out: req.output_tokens.max(1),
+        epoch,
+    });
+    inst.busy.add_busy(now, pre);
+    inst.next_event = Some(inst.next_event.unwrap_or(now).max(now) + pre);
+}
+
+/// Process one event for one replica: deliver due arrivals, admit, run a
+/// decode step. Returns the next wake time to schedule (None = the replica
+/// is idle or already has a later event in the heap); completions are
+/// appended to `completed` as (end, latency, epoch). Free function so the
+/// shard can split its borrows.
+fn advance_instance(
+    inst: &mut EngineInstance,
+    model: &ModelSpec,
+    perf: &PerfModel,
+    epoch_starts: &[f64],
+    max_batch: usize,
+    now: f64,
+    completed: &mut Vec<(f64, f64, usize)>,
+) -> Option<f64> {
+    // Deliver arrivals up to `now`. Pending requests beyond `now` keep
+    // their own wake events (pushed at enqueue), so an idle replica never
+    // needs re-arming here.
+    while let Some(r) = inst.pending.front() {
+        if r.arrival_s <= now {
+            let r = inst.pending.pop_front().unwrap();
+            inst.queue.push_back(r);
+        } else {
+            break;
+        }
+    }
+    // A step already in flight past `now`: its completion event re-enters.
+    if let Some(t) = inst.next_event {
+        if t > now {
+            return None;
+        }
+    }
+    // Still spinning up: come back when active.
+    if now + 1e-9 < inst.active_from_s {
+        return Some(inst.active_from_s);
+    }
+
+    // Admit (unless retired), then advance the in-flight batch. A retired
+    // replica with stranded queued requests drains them one at a time
+    // rather than dropping them — it cannot hand work across shards.
+    let admit = !inst.retired_by(now);
+    inst.next_event = None;
+    while admit && !inst.queue.is_empty() && inst.batch.len() < max_batch {
+        let req = inst.queue.front().unwrap();
+        let need = req.input_tokens as f64 + req.output_tokens as f64;
+        if inst.tokens_in_use() + need > inst.token_capacity && !inst.batch.is_empty() {
+            break;
+        }
+        let req = inst.queue.pop_front().unwrap();
+        admit_req(inst, req, epoch_starts, model, perf, now);
+    }
+    if !admit && inst.batch.is_empty() && !inst.queue.is_empty() {
+        let req = inst.queue.pop_front().unwrap();
+        admit_req(inst, req, epoch_starts, model, perf, now);
+    }
+
+    if inst.batch.is_empty() {
+        return None;
+    }
+    let b = inst.batch.len() as f64;
+    let mean_ctx = inst.tokens_in_use() / b;
+    let step = perf.decode_step_time(&inst.config, model, b, mean_ctx);
+    let start = inst.next_event.unwrap_or(now).max(now);
+    let end = start + step;
+    inst.busy.add_busy(start, step);
+    for f in &mut inst.batch {
+        f.remaining_out -= 1;
+        f.ctx_tokens += 1.0;
+    }
+    inst.batch.retain(|f| {
+        if f.remaining_out == 0 {
+            completed.push((end, end - f.arrival_s, f.epoch));
+            false
+        } else {
+            true
+        }
+    });
+    inst.next_event = Some(end);
+    Some(end)
+}
+
+/// Fleet metadata the main thread keeps per instance (the mutable serving
+/// state lives inside the owning shard).
+struct InstanceMeta {
+    candidate: usize,
+    config: ReplicaConfig,
+    token_capacity: f64,
+    rent_from_s: f64,
+    active_from_s: f64,
+    retire_at_s: Option<f64>,
+    shard: usize,
+    local: usize,
+}
+
+/// Advance every shard to `t_end`, in parallel when a pool is present.
+/// Shards are mutually independent, so the sequential path and the pooled
+/// path compute identical state.
+fn advance_all(shards: &[Arc<Mutex<Shard>>], pool: Option<&ThreadPool>, t_end: f64) {
+    match pool {
+        Some(pool) => {
+            let jobs: Vec<_> = shards
+                .iter()
+                .enumerate()
+                .map(|(si, sh)| {
+                    let sh = Arc::clone(sh);
+                    move || {
+                        let mut span = telemetry::span("sim.shard", "sim");
+                        let done = {
+                            let mut g = sh.lock().unwrap();
+                            g.advance_to(t_end);
+                            g.recorder.count()
+                        };
+                        span.tag("shard", si);
+                        span.tag("completed_total", done);
+                    }
+                })
+                .collect();
+            pool.run_batch(jobs);
+        }
+        None => {
+            for (si, sh) in shards.iter().enumerate() {
+                let mut span = telemetry::span("sim.shard", "sim");
+                let done = {
+                    let mut g = sh.lock().unwrap();
+                    g.advance_to(t_end);
+                    g.recorder.count()
+                };
+                span.tag("shard", si);
+                span.tag("completed_total", done);
+            }
+        }
+    }
+}
+
+/// Execute a plan timeline against a streamed, time-ordered arrival
+/// iterator (single-model: every plan entry must reference model 0, which
+/// `model` describes).
+///
+/// The run alternates a sequential routing pass (assign each chunk of
+/// arrivals to a replica under the epoch plan's deficit-credit fractions)
+/// with a parallel advancement pass (each shard simulates its replicas up
+/// to the chunk end), then drains. See the module docs for the
+/// determinism argument.
+pub fn run_engine(
+    steps: &[TimelineStep],
+    model: &ModelSpec,
+    arrivals: impl Iterator<Item = Request>,
+    perf: &PerfModel,
+    opts: &EngineOptions,
+) -> EngineReport {
+    let wall_start = Instant::now();
+    let mut tspan = telemetry::span("sim.engine", "sim");
+    assert!(!steps.is_empty(), "engine needs at least one step");
+    let ncand = steps[0].problem.candidates.len();
+    for s in steps {
+        assert_eq!(
+            s.problem.candidates.len(),
+            ncand,
+            "all timeline steps must share one candidate space"
+        );
+        for e in &s.plan.entries {
+            assert_eq!(
+                s.problem.candidates[e.candidate].model, 0,
+                "run_engine is single-model; use simulate_timeline for multi-model plans"
+            );
+        }
+    }
+    let nepochs = steps.len();
+    let epoch_starts: Vec<f64> = steps.iter().map(|s| s.start_s).collect();
+
+    // ---- materialise the fleet across transitions -----------------------
+    // Same evolution as the timeline simulator, minus the re-shard pairing:
+    // every plan change executes as retire + spin-up so each instance's
+    // lifetime (and shard) is fixed up front.
+    let mut metas: Vec<InstanceMeta> = Vec::new();
+    let mut alive: Vec<Vec<usize>> = vec![Vec::new(); ncand];
+    let mut members: Vec<Vec<Vec<usize>>> = Vec::with_capacity(nepochs);
+    let mut transitions_applied = 0usize;
+    for (si, step) in steps.iter().enumerate() {
+        let t = step.start_s;
+        let want = crate::orchestrator::replica_counts(step.problem, step.plan);
+        for (ci, &target) in want.iter().enumerate() {
+            let have = alive[ci].len() as u32;
+            if target > have {
+                let cand = &step.problem.candidates[ci];
+                let config = cand
+                    .replica
+                    .clone()
+                    .expect("run_engine requires concrete replica configs");
+                let cap = perf.max_batch_tokens(&config, model);
+                for _ in 0..(target - have) {
+                    let id = metas.len();
+                    metas.push(InstanceMeta {
+                        candidate: ci,
+                        config: config.clone(),
+                        token_capacity: cap,
+                        rent_from_s: t,
+                        active_from_s: if si == 0 { t } else { t + opts.spin_up_s },
+                        retire_at_s: None,
+                        shard: 0,
+                        local: 0,
+                    });
+                    alive[ci].push(id);
+                    if si > 0 {
+                        transitions_applied += 1;
+                    }
+                }
+            } else if target < have {
+                // Retire the newest replicas first; they keep serving
+                // through the spin-up window, then drain in place.
+                for _ in 0..(have - target) {
+                    let id = alive[ci].pop().unwrap();
+                    metas[id].retire_at_s = Some(t + opts.spin_up_s);
+                    transitions_applied += 1;
+                }
+            }
+        }
+        members.push(alive.clone());
+    }
+    assert!(!metas.is_empty(), "engine has no replicas");
+    let replicas_peak = members
+        .iter()
+        .map(|m| m.iter().map(|ids| ids.len()).sum::<usize>())
+        .max()
+        .unwrap_or(0);
+    // All instances alive in each epoch, id-sorted (single model).
+    let epoch_all: Vec<Vec<usize>> = members
+        .iter()
+        .map(|per_cand| {
+            let mut ids: Vec<usize> =
+                per_cand.iter().flat_map(|v| v.iter().copied()).collect();
+            ids.sort_unstable();
+            ids
+        })
+        .collect();
+
+    // ---- shard assignment and construction ------------------------------
+    let nshards = if opts.shards == 0 {
+        metas.len().min(8)
+    } else {
+        opts.shards.min(metas.len())
+    }
+    .max(1);
+    let mut shard_sizes = vec![0usize; nshards];
+    for (id, m) in metas.iter_mut().enumerate() {
+        m.shard = id % nshards;
+        m.local = shard_sizes[m.shard];
+        shard_sizes[m.shard] += 1;
+    }
+    let cap = opts.latency_reservoir;
+    let mut insts_by_shard: Vec<Vec<EngineInstance>> =
+        (0..nshards).map(|_| Vec::new()).collect();
+    for (id, m) in metas.iter().enumerate() {
+        insts_by_shard[m.shard].push(EngineInstance {
+            id,
+            config: m.config.clone(),
+            active_from_s: m.active_from_s,
+            retire_at_s: m.retire_at_s,
+            pending: VecDeque::new(),
+            queue: VecDeque::new(),
+            batch: Vec::new(),
+            token_capacity: m.token_capacity,
+            busy: BusyTracker::default(),
+            next_event: None,
+        });
+    }
+    let mk_recorder = |seed: u64| {
+        if cap > 0 {
+            LatencyRecorder::bounded_from_rng(cap, Xoshiro256::seed_from_u64(seed))
+        } else {
+            LatencyRecorder::new()
+        }
+    };
+    let shards: Vec<Arc<Mutex<Shard>>> = insts_by_shard
+        .into_iter()
+        .enumerate()
+        .map(|(s, instances)| {
+            // Per-shard reservoir RNGs on non-overlapping substreams; the
+            // per-epoch reservoirs get splitmix-scrambled seeds (a jump
+            // per recorder would cost shards × epochs × 2^128 advances of
+            // setup work for no extra statistical benefit).
+            let recorder = if cap > 0 {
+                LatencyRecorder::bounded_from_rng(
+                    cap,
+                    Xoshiro256::substream(opts.seed, s as u64 + 1),
+                )
+            } else {
+                LatencyRecorder::new()
+            };
+            let epoch_recorders: Vec<LatencyRecorder> = (0..nepochs)
+                .map(|e| {
+                    let k = (s * nepochs + e + 1) as u64;
+                    mk_recorder(opts.seed ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                })
+                .collect();
+            Arc::new(Mutex::new(Shard {
+                model: model.clone(),
+                perf: perf.clone(),
+                max_batch: opts.max_batch,
+                slo_s: opts.slo_latency_s,
+                epoch_starts: epoch_starts.clone(),
+                instances,
+                heap: BinaryHeap::new(),
+                recorder,
+                epoch_recorders,
+                epoch_completed: vec![0; nepochs],
+                epoch_slo_hits: vec![0; nepochs],
+                scratch: Vec::new(),
+            }))
+        })
+        .collect();
+
+    let threads = if opts.threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(nshards)
+    } else {
+        opts.threads.min(nshards)
+    }
+    .max(1);
+    let pool = (threads > 1).then(|| ThreadPool::new(threads));
+
+    // ---- chunked route-then-advance loop --------------------------------
+    let nw = steps[0]
+        .problem
+        .demands
+        .iter()
+        .map(|d| d.len())
+        .max()
+        .unwrap_or(0);
+    let mut credits: Vec<Vec<Vec<f64>>> = steps
+        .iter()
+        .map(|s| vec![vec![0.0; s.plan.entries.len()]; nw])
+        .collect();
+    // Cumulative routed tokens per instance — the same load proxy the
+    // timeline router uses (a pure function of routing history, so it
+    // cannot depend on shard execution order).
+    let mut est_tokens = vec![0.0f64; metas.len()];
+    // Queue depth as of the last chunk boundary + this chunk's routes.
+    let mut qlen = vec![0usize; metas.len()];
+    let mut epoch_arrivals = vec![0usize; nepochs];
+    let mut epoch_type_arrivals = vec![[0usize; 9]; nepochs];
+    let mut epoch_shed = vec![0usize; nepochs];
+
+    let chunk_s = if opts.chunk_s > 0.0 { opts.chunk_s } else { 120.0 };
+    let mut stream = arrivals;
+    let mut carry: Option<Request> = None;
+    let mut chunk: Vec<Request> = Vec::new();
+    let mut stream_done = false;
+    let mut streamed = 0usize;
+    let mut shed_total = 0usize;
+    let mut peak_buffer = 0usize;
+    let mut queue_peak = 0usize;
+    let mut chunks = 0usize;
+    let mut last_arrival = f64::NEG_INFINITY;
+    let mut t0 = steps[0].start_s.min(0.0);
+    let mut boundary = 1usize;
+    loop {
+        // Chunk window [t0, t_end): capped by the next epoch start so a
+        // routing pass never spans two plans' queue-feedback regimes.
+        while boundary < nepochs && epoch_starts[boundary] <= t0 + 1e-9 {
+            boundary += 1;
+        }
+        let mut t_end = t0 + chunk_s;
+        if boundary < nepochs && epoch_starts[boundary] < t_end {
+            t_end = epoch_starts[boundary];
+        }
+
+        // Gather this chunk's arrivals (one request of look-ahead).
+        chunk.clear();
+        if let Some(r) = carry.take() {
+            if r.arrival_s < t_end {
+                chunk.push(r);
+            } else {
+                carry = Some(r);
+            }
+        }
+        while carry.is_none() && !stream_done {
+            match stream.next() {
+                Some(r) => {
+                    assert!(
+                        r.arrival_s >= last_arrival,
+                        "engine arrivals must be time-ordered"
+                    );
+                    last_arrival = r.arrival_s;
+                    if r.arrival_s < t_end {
+                        chunk.push(r);
+                    } else {
+                        carry = Some(r);
+                    }
+                }
+                None => stream_done = true,
+            }
+        }
+        streamed += chunk.len();
+        peak_buffer = peak_buffer.max(chunk.len());
+
+        // Sequential, deterministic routing pass.
+        for req in chunk.drain(..) {
+            let e = epoch_of(&epoch_starts, req.arrival_s);
+            let w = req.workload.index;
+            epoch_arrivals[e] += 1;
+            epoch_type_arrivals[e][w] += 1;
+            let plan = steps[e].plan;
+            let credit_row = &mut credits[e][w];
+            let mut best: Option<usize> = None;
+            for (ei, entry) in plan.entries.iter().enumerate() {
+                let f = entry.fractions.get(w).copied().unwrap_or(0.0);
+                if f <= 0.0 {
+                    continue;
+                }
+                credit_row[ei] += f;
+                if best.map(|b| credit_row[ei] > credit_row[b]).unwrap_or(true) {
+                    best = Some(ei);
+                }
+            }
+            let chosen = {
+                let admissible = |id: usize| opts.admission.admits(qlen[id]);
+                let active = |id: usize| metas[id].active_from_s <= req.arrival_s + 1e-9;
+                let least = |ids: &[usize]| {
+                    ids.iter()
+                        .copied()
+                        .filter(|&id| active(id) && admissible(id))
+                        .min_by(|&a, &b| {
+                            est_tokens[a]
+                                .partial_cmp(&est_tokens[b])
+                                .unwrap()
+                                .then(a.cmp(&b))
+                        })
+                };
+                // The chosen entry's active+admissible replicas first;
+                // otherwise any active+admissible replica of the epoch;
+                // otherwise wait out the earliest spin-up; otherwise shed.
+                let mut chosen = None;
+                if let Some(ei) = best {
+                    credit_row[ei] -= 1.0;
+                    chosen = least(&members[e][plan.entries[ei].candidate]);
+                }
+                chosen.or_else(|| least(&epoch_all[e])).or_else(|| {
+                    epoch_all[e]
+                        .iter()
+                        .copied()
+                        .filter(|&id| admissible(id))
+                        .min_by(|&a, &b| {
+                            metas[a]
+                                .active_from_s
+                                .partial_cmp(&metas[b].active_from_s)
+                                .unwrap()
+                                .then(a.cmp(&b))
+                        })
+                })
+            };
+            match chosen {
+                Some(id) => {
+                    est_tokens[id] += (req.input_tokens + req.output_tokens) as f64;
+                    qlen[id] += 1;
+                    let m = &metas[id];
+                    shards[m.shard].lock().unwrap().enqueue(m.local, req);
+                }
+                None => {
+                    shed_total += 1;
+                    epoch_shed[e] += 1;
+                }
+            }
+        }
+
+        // Parallel advancement pass, then refresh queue snapshots in
+        // shard-index order.
+        chunks += 1;
+        advance_all(&shards, pool.as_ref(), t_end);
+        for sh in &shards {
+            let g = sh.lock().unwrap();
+            for inst in &g.instances {
+                let depth = inst.queue.len() + inst.pending.len();
+                qlen[inst.id] = depth;
+                queue_peak = queue_peak.max(depth);
+            }
+        }
+        t0 = t_end;
+        if stream_done && carry.is_none() {
+            break;
+        }
+    }
+    // Drain: run every shard dry.
+    advance_all(&shards, pool.as_ref(), f64::INFINITY);
+
+    // ---- merge shard results (shard-index order: deterministic) ---------
+    let mut recorder = mk_recorder(opts.seed);
+    let mut epoch_recs: Vec<LatencyRecorder> =
+        (0..nepochs).map(|_| LatencyRecorder::new()).collect();
+    let mut epoch_completed = vec![0usize; nepochs];
+    let mut epoch_slo = vec![0usize; nepochs];
+    let mut last_busy = vec![0.0f64; metas.len()];
+    for sh in &shards {
+        let g = sh.lock().unwrap();
+        recorder.merge(&g.recorder);
+        for e in 0..nepochs {
+            epoch_recs[e].merge(&g.epoch_recorders[e]);
+            epoch_completed[e] += g.epoch_completed[e];
+            epoch_slo[e] += g.epoch_slo_hits[e];
+        }
+        for inst in &g.instances {
+            last_busy[inst.id] = inst.busy.last_event_s;
+            assert!(
+                inst.pending.is_empty() && inst.queue.is_empty() && inst.batch.is_empty(),
+                "engine left work in flight after drain"
+            );
+        }
+    }
+    let completed = recorder.count();
+    assert_eq!(
+        completed + shed_total,
+        streamed,
+        "engine lost requests (completed {completed} + shed {shed_total} != streamed {streamed})"
+    );
+    let slo_hits: usize = epoch_slo.iter().sum();
+    let slo_attainment = if completed > 0 {
+        slo_hits as f64 / completed as f64
+    } else {
+        1.0
+    };
+    let makespan = recorder.makespan();
+    let sim_end = makespan.max(steps.last().unwrap().start_s);
+
+    // ---- per-epoch accounting (same rental formula as the timeline) -----
+    let mut epochs = Vec::with_capacity(nepochs);
+    let mut total_rental_usd = 0.0;
+    for (i, s) in steps.iter().enumerate() {
+        let end = if i + 1 < nepochs {
+            steps[i + 1].start_s
+        } else {
+            sim_end.max(s.start_s)
+        };
+        let mut rental = 0.0;
+        for (id, m) in metas.iter().enumerate() {
+            let rent_end = match m.retire_at_s {
+                Some(r) => r.max(last_busy[id]),
+                None => sim_end,
+            };
+            let o_start = m.rent_from_s.max(s.start_s);
+            let o_end = rent_end.min(end);
+            if o_end > o_start {
+                rental += (o_end - o_start) / 3600.0 * s.problem.candidates[m.candidate].cost;
+            }
+        }
+        total_rental_usd += rental;
+        epochs.push(EngineEpochStats {
+            start_s: s.start_s,
+            end_s: end,
+            arrivals: epoch_arrivals[i],
+            arrivals_by_type: epoch_type_arrivals[i],
+            shed: epoch_shed[i],
+            completed: epoch_completed[i],
+            slo_attainment: if epoch_completed[i] > 0 {
+                epoch_slo[i] as f64 / epoch_completed[i] as f64
+            } else {
+                1.0
+            },
+            p90_s: epoch_recs[i].latency_percentile(90.0),
+            rental_usd: rental,
+        });
+    }
+
+    if telemetry::enabled() {
+        telemetry::count("sim.engine.requests", streamed as u64);
+        telemetry::count("sim.engine.admitted", (streamed - shed_total) as u64);
+        telemetry::count("sim.engine.shed", shed_total as u64);
+        telemetry::count("sim.engine.chunks", chunks as u64);
+        telemetry::count("sim.engine.transitions", transitions_applied as u64);
+        telemetry::gauge_set("sim.engine.requests_simulated", completed as f64);
+        telemetry::gauge_set("sim.engine.peak_arrival_buffer", peak_buffer as f64);
+        telemetry::gauge_set("sim.engine.queue_peak", queue_peak as f64);
+        telemetry::gauge_set("sim.engine.replicas_peak", replicas_peak as f64);
+        telemetry::gauge_set("sim.engine.slo_attainment", slo_attainment);
+        tspan.tag("epochs", nepochs);
+        tspan.tag("requests", streamed);
+        tspan.tag("shed", shed_total);
+        tspan.tag("shards", nshards);
+        tspan.tag("threads", threads);
+        tspan.tag("chunks", chunks);
+        tspan.tag("makespan_s", makespan);
+    }
+
+    EngineReport {
+        recorder,
+        epochs,
+        makespan,
+        total_rental_usd,
+        requests_streamed: streamed,
+        requests_shed: shed_total,
+        requests_completed: completed,
+        slo_attainment,
+        peak_arrival_buffer: peak_buffer,
+        queue_peak,
+        replicas_peak,
+        transitions_applied,
+        shards: nshards,
+        threads,
+        wall_s: wall_start.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{GpuSpec, GpuType};
+    use crate::cloud::availability;
+    use crate::sched::{Candidate, PlanEntry, SchedProblem, ServingPlan};
+    use crate::sim::timeline::simulate_timeline;
+    use crate::workload::{
+        synthesize_trace_schedule, ArrivalStream, MixSchedule, SynthOptions, TraceMix,
+    };
+
+    fn mk_problem() -> SchedProblem {
+        let price = GpuSpec::of(GpuType::A40).price_per_hour * 2.0;
+        let mk_cand = |tp: usize, pp: usize, label: &str| Candidate {
+            model: 0,
+            cost: price,
+            gpu_counts: vec![0, 2, 0, 0, 0, 0],
+            h: vec![1.0; 9],
+            label: label.to_string(),
+            replica: Some(crate::perf_model::ReplicaConfig::uniform(GpuType::A40, tp, pp)),
+        };
+        SchedProblem {
+            num_gpu_types: 6,
+            avail: availability(1).counts.to_vec(),
+            budget: 8.0 * price,
+            demands: vec![TraceMix::trace1().demands(1000.0).to_vec()],
+            candidates: vec![mk_cand(2, 1, "a40-tp2"), mk_cand(1, 2, "a40-pp2")],
+        }
+    }
+
+    fn mk_plan(candidate: usize, replicas: u32) -> ServingPlan {
+        ServingPlan {
+            entries: vec![PlanEntry {
+                candidate,
+                replicas,
+                fractions: vec![1.0; 9],
+            }],
+            makespan: 0.0,
+        }
+    }
+
+    fn constant_stream(rate: f64, horizon_s: f64, seed: u64) -> (MixSchedule, SynthOptions, f64) {
+        let schedule = MixSchedule::constant(TraceMix::trace1(), rate);
+        let synth = SynthOptions {
+            length_sigma: 0.15,
+            seed,
+            ..Default::default()
+        };
+        (schedule, synth, horizon_s)
+    }
+
+    #[test]
+    fn engine_completes_all_streamed_requests() {
+        let model = crate::perf_model::ModelSpec::llama3_8b();
+        let perf = PerfModel::default();
+        let p = mk_problem();
+        let plan = mk_plan(0, 3);
+        let steps = vec![TimelineStep {
+            start_s: 0.0,
+            problem: &p,
+            plan: &plan,
+        }];
+        let (schedule, synth, horizon) = constant_stream(2.0, 300.0, 13);
+        let report = run_engine(
+            &steps,
+            &model,
+            ArrivalStream::new(&schedule, horizon, &synth),
+            &perf,
+            &EngineOptions {
+                shards: 3,
+                threads: 1,
+                chunk_s: 30.0,
+                ..Default::default()
+            },
+        );
+        assert!(report.requests_streamed > 400, "thin stream: {}", report.requests_streamed);
+        assert_eq!(report.requests_shed, 0);
+        assert_eq!(report.requests_completed, report.requests_streamed);
+        assert_eq!(report.recorder.count(), report.requests_completed);
+        assert!(report.makespan > 0.0);
+        assert!(report.total_rental_usd > 0.0);
+        assert_eq!(report.epochs.len(), 1);
+        let e = &report.epochs[0];
+        assert_eq!(e.arrivals, report.requests_streamed);
+        assert_eq!(e.arrivals_by_type.iter().sum::<usize>(), e.arrivals);
+        assert_eq!(e.completed, report.requests_completed);
+        assert!((0.0..=1.0).contains(&report.slo_attainment));
+        // O(chunk) arrival memory: far below the full stream.
+        assert!(
+            report.peak_arrival_buffer < report.requests_streamed / 2,
+            "buffer {} vs streamed {}",
+            report.peak_arrival_buffer,
+            report.requests_streamed
+        );
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let model = crate::perf_model::ModelSpec::llama3_8b();
+        let perf = PerfModel::default();
+        let p = mk_problem();
+        let plan_a = mk_plan(0, 4);
+        let plan_b = mk_plan(1, 2);
+        let steps = vec![
+            TimelineStep {
+                start_s: 0.0,
+                problem: &p,
+                plan: &plan_a,
+            },
+            TimelineStep {
+                start_s: 300.0,
+                problem: &p,
+                plan: &plan_b,
+            },
+        ];
+        let (schedule, synth, horizon) = constant_stream(2.0, 600.0, 91);
+        let run = |threads: usize| {
+            run_engine(
+                &steps,
+                &model,
+                ArrivalStream::new(&schedule, horizon, &synth),
+                &perf,
+                &EngineOptions {
+                    seed: 7,
+                    shards: 4,
+                    threads,
+                    chunk_s: 45.0,
+                    ..Default::default()
+                },
+            )
+        };
+        let single = run(1);
+        let quad = run(4);
+        assert_eq!(single.threads, 1);
+        assert_eq!(quad.threads, 4);
+        assert_eq!(single.shards, quad.shards);
+        // Bit-identical simulated results at any thread count.
+        assert_eq!(single.fingerprint(), quad.fingerprint());
+        assert_eq!(single.requests_streamed, quad.requests_streamed);
+        assert_eq!(single.requests_completed, quad.requests_completed);
+        assert_eq!(single.makespan.to_bits(), quad.makespan.to_bits());
+        assert_eq!(
+            single.total_rental_usd.to_bits(),
+            quad.total_rental_usd.to_bits()
+        );
+        for (a, b) in single.epochs.iter().zip(&quad.epochs) {
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.shed, b.shed);
+            assert_eq!(a.p90_s.to_bits(), b.p90_s.to_bits());
+            assert_eq!(a.rental_usd.to_bits(), b.rental_usd.to_bits());
+        }
+        // And the run exercised a real transition (retire 4 + spin up 2).
+        assert_eq!(single.transitions_applied, 6);
+        assert!(single.requests_completed == single.requests_streamed);
+    }
+
+    #[test]
+    fn admission_cap_sheds_under_overload() {
+        let model = crate::perf_model::ModelSpec::llama3_8b();
+        let perf = PerfModel::default();
+        let p = mk_problem();
+        let plan = mk_plan(0, 1);
+        let steps = vec![TimelineStep {
+            start_s: 0.0,
+            problem: &p,
+            plan: &plan,
+        }];
+        let (schedule, synth, horizon) = constant_stream(20.0, 60.0, 29);
+        let run = |admission: AdmissionPolicy| {
+            run_engine(
+                &steps,
+                &model,
+                ArrivalStream::new(&schedule, horizon, &synth),
+                &perf,
+                &EngineOptions {
+                    admission,
+                    chunk_s: 10.0,
+                    threads: 1,
+                    ..Default::default()
+                },
+            )
+        };
+        let capped = run(AdmissionPolicy::capped(6));
+        assert!(capped.requests_shed > 0, "overload never shed");
+        assert_eq!(
+            capped.requests_completed + capped.requests_shed,
+            capped.requests_streamed
+        );
+        assert_eq!(
+            capped.epochs[0].shed + capped.epochs[0].completed,
+            capped.epochs[0].arrivals
+        );
+        // Unlimited admission completes everything, and queues deeper.
+        let open = run(AdmissionPolicy::unlimited());
+        assert_eq!(open.requests_shed, 0);
+        assert_eq!(open.requests_completed, open.requests_streamed);
+        assert!(open.queue_peak > capped.queue_peak);
+    }
+
+    #[test]
+    fn engine_agrees_with_timeline_on_totals() {
+        // Same single-epoch scenario through both simulators: identical
+        // request sets (the stream replays the materializer), all
+        // complete, and the makespans land in the same regime even though
+        // routing details differ.
+        let model = crate::perf_model::ModelSpec::llama3_8b();
+        let perf = PerfModel::default();
+        let p = mk_problem();
+        let plan = mk_plan(0, 3);
+        let steps = vec![TimelineStep {
+            start_s: 0.0,
+            problem: &p,
+            plan: &plan,
+        }];
+        let (schedule, synth, horizon) = constant_stream(2.0, 240.0, 57);
+        let trace = synthesize_trace_schedule(&schedule, horizon, &synth);
+        let tl = simulate_timeline(
+            &steps,
+            std::slice::from_ref(&model),
+            std::slice::from_ref(&trace),
+            &perf,
+            &TimelineOptions::default(),
+        );
+        let eng = run_engine(
+            &steps,
+            &model,
+            ArrivalStream::new(&schedule, horizon, &synth),
+            &perf,
+            &EngineOptions::default(),
+        );
+        assert_eq!(eng.requests_streamed, trace.len());
+        assert_eq!(eng.requests_completed, tl.recorder.count());
+        let ratio = eng.makespan / tl.makespan;
+        assert!(
+            (0.25..4.0).contains(&ratio),
+            "engine {} vs timeline {}",
+            eng.makespan,
+            tl.makespan
+        );
+        assert!(eng.total_rental_usd > 0.0);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_different_runs() {
+        let model = crate::perf_model::ModelSpec::llama3_8b();
+        let perf = PerfModel::default();
+        let p = mk_problem();
+        let plan = mk_plan(0, 2);
+        let steps = vec![TimelineStep {
+            start_s: 0.0,
+            problem: &p,
+            plan: &plan,
+        }];
+        let run = |seed: u64| {
+            let (schedule, synth, horizon) = constant_stream(2.0, 120.0, seed);
+            run_engine(
+                &steps,
+                &model,
+                ArrivalStream::new(&schedule, horizon, &synth),
+                &perf,
+                &EngineOptions::default(),
+            )
+        };
+        let a = run(1);
+        let b = run(1);
+        let c = run(2);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same seed must agree");
+        assert_ne!(a.fingerprint(), c.fingerprint(), "different traces collide");
+    }
+}

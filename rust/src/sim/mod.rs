@@ -16,11 +16,22 @@
 //! observed arrivals feed a [`crate::workload::MixEstimator`] so the
 //! orchestrator replans against estimated (not oracle) demand, with
 //! per-epoch estimated-vs-true mixture error reported.
+//!
+//! [`engine`] is the production-scale core: a *sharded* event-driven
+//! simulator fed by a streamed arrival iterator
+//! ([`crate::workload::ArrivalStream`]), chunked routing + parallel shard
+//! advancement on [`crate::util::threadpool::ThreadPool`], deterministic
+//! at any thread count. See `rust/src/sim/README.md` for the design note.
 
 pub mod closed_loop;
+pub mod engine;
 pub mod timeline;
 
-pub use closed_loop::{run_closed_loop, ClosedLoopOptions, ClosedLoopResult, DemandMode};
+pub use closed_loop::{
+    run_closed_loop, run_closed_loop_streamed, ClosedLoopOptions, ClosedLoopResult, DemandMode,
+    StreamedLoopOptions, StreamedLoopResult,
+};
+pub use engine::{run_engine, EngineEpochStats, EngineOptions, EngineReport};
 pub use timeline::{simulate_timeline, EpochStats, TimelineOptions, TimelineResult, TimelineStep};
 
 use crate::metrics::{BusyTracker, LatencyRecorder};

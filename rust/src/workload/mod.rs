@@ -1,14 +1,18 @@
 //! Workload model: the paper's nine workload types (input length ∈
 //! {2455, 824, 496} × output length ∈ {510, 253, 18}), the three evaluation
 //! traces (Table 4 mixtures of those types), request records, a trace
-//! synthesizer with Poisson arrivals and log-normal length jitter, and the
+//! synthesizer with Poisson arrivals and log-normal length jitter, the
 //! demand-drift layer ([`drift`]): time-varying mix schedules, demand
-//! snapshots, and the online mixture estimator.
+//! snapshots, and the online mixture estimator — and the streaming arrival
+//! generator ([`stream`]) that yields the same synthetic arrivals lazily in
+//! O(1) memory for million-request simulations.
 
 pub mod drift;
+pub mod stream;
 pub mod synth;
 
 pub use drift::{demand_drift, DemandSnapshot, MixEstimator, MixKeyframe, MixSchedule};
+pub use stream::ArrivalStream;
 pub use synth::{synthesize_trace, synthesize_trace_schedule, SynthOptions};
 
 use crate::util::json::Json;

@@ -1,0 +1,247 @@
+//! Streaming trace synthesis: arrivals generated on the fly in O(1) memory.
+//!
+//! [`super::synthesize_trace_schedule`] materializes the whole trace up
+//! front — fine for thousands of requests, a wall at millions. This module
+//! provides the same inhomogeneous-Poisson thinning as a lazy iterator:
+//! [`ArrivalStream`] holds one PRNG, one clock, and one id counter, and
+//! yields [`Request`]s one at a time. It performs the *identical RNG call
+//! sequence* as the materializer (exponential inter-arrival → thinning
+//! Bernoulli → mixture draw → length jitter), so at the same seed the
+//! stream replays the materialized trace request for request — pinned by
+//! the tests below against an inlined reference copy of the original loop.
+//!
+//! Consumers that need several independent generators from one seed (the
+//! sharded simulation engine's per-shard reservoirs) pair this with
+//! [`Xoshiro256::substream`].
+
+use super::synth::jitter_lengths;
+use super::{MixSchedule, Request, SynthOptions, WorkloadType};
+use crate::util::rng::Xoshiro256;
+
+/// Lazy inhomogeneous-Poisson arrival generator over `[0, horizon_s)`.
+///
+/// Memory is O(1): no request is stored. The iterator ends when the next
+/// candidate arrival crosses the horizon. `opts.num_requests` and
+/// `opts.arrival_rate` are ignored, exactly as in the materializer — the
+/// schedule drives both the rate and the mixture.
+#[derive(Clone, Debug)]
+pub struct ArrivalStream<'a> {
+    schedule: &'a MixSchedule,
+    horizon_s: f64,
+    /// Thinning envelope: the schedule's max rate bounds `rate_at`
+    /// everywhere (piecewise-linear ⇒ the max sits on a keyframe).
+    envelope: f64,
+    length_sigma: f64,
+    rng: Xoshiro256,
+    t: f64,
+    next_id: u64,
+    exhausted: bool,
+}
+
+impl<'a> ArrivalStream<'a> {
+    pub fn new(schedule: &'a MixSchedule, horizon_s: f64, opts: &SynthOptions) -> ArrivalStream<'a> {
+        let envelope = schedule.max_rate();
+        ArrivalStream {
+            schedule,
+            horizon_s,
+            envelope,
+            length_sigma: opts.length_sigma,
+            rng: Xoshiro256::seed_from_u64(opts.seed),
+            t: 0.0,
+            next_id: 0,
+            // Zero rate or zero horizon yields an empty stream, not a hang.
+            exhausted: !(envelope > 0.0 && horizon_s > 0.0),
+        }
+    }
+
+    /// Requests produced so far (ids are assigned 0..emitted in order).
+    pub fn emitted(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Current clock: the arrival time of the last emitted request (or the
+    /// rejected candidate beyond it).
+    pub fn clock_s(&self) -> f64 {
+        self.t
+    }
+}
+
+impl Iterator for ArrivalStream<'_> {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.exhausted {
+            return None;
+        }
+        loop {
+            self.t += self.rng.exponential(self.envelope);
+            if self.t >= self.horizon_s {
+                self.exhausted = true;
+                return None;
+            }
+            // Thinning: accept with probability rate(t)/envelope.
+            if !self.rng.bernoulli(self.schedule.rate_at(self.t) / self.envelope) {
+                continue;
+            }
+            let mix = self.schedule.mix_at(self.t);
+            let w = WorkloadType::by_index(self.rng.weighted_index(&mix.ratios));
+            let (input, output) = jitter_lengths(&mut self.rng, w, self.length_sigma);
+            let id = self.next_id;
+            self.next_id += 1;
+            return Some(Request {
+                id,
+                arrival_s: self.t,
+                workload: w,
+                input_tokens: input,
+                output_tokens: output,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{synthesize_trace_schedule, Trace, TraceMix};
+
+    /// Reference copy of the pre-stream materializer loop: pins the RNG
+    /// call contract the iterator must honour. If someone reorders the
+    /// draws in `ArrivalStream::next`, this catches it even though the
+    /// production materializer now delegates to the stream.
+    fn reference_materialize(
+        schedule: &MixSchedule,
+        horizon_s: f64,
+        opts: &SynthOptions,
+    ) -> Vec<Request> {
+        let mut rng = Xoshiro256::seed_from_u64(opts.seed);
+        let envelope = schedule.max_rate();
+        let mut requests = Vec::new();
+        if envelope > 0.0 && horizon_s > 0.0 {
+            let mut t = 0.0f64;
+            loop {
+                t += rng.exponential(envelope);
+                if t >= horizon_s {
+                    break;
+                }
+                if !rng.bernoulli(schedule.rate_at(t) / envelope) {
+                    continue;
+                }
+                let mix = schedule.mix_at(t);
+                let w = WorkloadType::by_index(rng.weighted_index(&mix.ratios));
+                let (input, output) = jitter_lengths(&mut rng, w, opts.length_sigma);
+                requests.push(Request {
+                    id: requests.len() as u64,
+                    arrival_s: t,
+                    workload: w,
+                    input_tokens: input,
+                    output_tokens: output,
+                });
+            }
+        }
+        requests
+    }
+
+    fn shift_schedule(horizon_s: f64) -> MixSchedule {
+        MixSchedule::shift(
+            "stream-shift",
+            (TraceMix::trace1(), 2.0),
+            (TraceMix::trace3(), 6.0),
+            0.25 * horizon_s,
+            0.75 * horizon_s,
+        )
+        .expect("valid shift")
+    }
+
+    #[test]
+    fn stream_replays_reference_materializer_exactly() {
+        let schedule = shift_schedule(4000.0);
+        for sigma in [0.0, 0.2] {
+            let opts = SynthOptions {
+                length_sigma: sigma,
+                seed: 0xFEED,
+                ..Default::default()
+            };
+            let reference = reference_materialize(&schedule, 4000.0, &opts);
+            let streamed: Vec<Request> =
+                ArrivalStream::new(&schedule, 4000.0, &opts).collect();
+            assert!(!reference.is_empty());
+            assert_eq!(streamed, reference, "sigma={sigma}");
+        }
+    }
+
+    #[test]
+    fn materializer_delegates_to_stream() {
+        // synthesize_trace_schedule is now a collecting wrapper — same
+        // seed, same requests, trace named after the schedule.
+        let schedule = shift_schedule(2000.0);
+        let opts = SynthOptions {
+            length_sigma: 0.15,
+            seed: 77,
+            ..Default::default()
+        };
+        let trace: Trace = synthesize_trace_schedule(&schedule, 2000.0, &opts);
+        let streamed: Vec<Request> = ArrivalStream::new(&schedule, 2000.0, &opts).collect();
+        assert_eq!(trace.requests, streamed);
+        assert_eq!(trace.name, schedule.name);
+    }
+
+    #[test]
+    fn stream_is_lazy_and_counts_emitted() {
+        // A horizon that would materialize millions of requests costs
+        // nothing to open and only as much as is consumed.
+        let schedule = MixSchedule::constant(TraceMix::trace1(), 50.0);
+        let opts = SynthOptions::default();
+        let mut stream = ArrivalStream::new(&schedule, 1e9, &opts);
+        assert_eq!(stream.emitted(), 0);
+        let first_hundred: Vec<Request> = stream.by_ref().take(100).collect();
+        assert_eq!(first_hundred.len(), 100);
+        assert_eq!(stream.emitted(), 100);
+        for (i, r) in first_hundred.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        for w in first_hundred.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        assert!(stream.clock_s() < 10.0, "clock {}", stream.clock_s());
+    }
+
+    #[test]
+    fn long_stream_rate_and_mix_statistics() {
+        // Satellite contract: rate and mixture checks on a long stream. A
+        // constant 5 req/s schedule over 20_000 s ⇒ ~100k arrivals within
+        // 2%, mixture within 1% TV of trace2.
+        let mix = TraceMix::trace2();
+        let schedule = MixSchedule::constant(mix.clone(), 5.0);
+        let opts = SynthOptions {
+            seed: 4242,
+            ..Default::default()
+        };
+        let mut counts = [0usize; 9];
+        let mut n = 0usize;
+        let mut last_arrival = 0.0f64;
+        for r in ArrivalStream::new(&schedule, 20_000.0, &opts) {
+            counts[r.workload.index] += 1;
+            n += 1;
+            assert!(r.arrival_s >= last_arrival && r.arrival_s < 20_000.0);
+            last_arrival = r.arrival_s;
+        }
+        let rate = n as f64 / 20_000.0;
+        assert!((rate / 5.0 - 1.0).abs() < 0.02, "rate {rate}");
+        let observed = TraceMix::normalized(
+            "observed",
+            counts.map(|c| c as f64),
+        )
+        .expect("non-empty stream");
+        let tv = observed.total_variation(&mix);
+        assert!(tv < 0.01, "mixture TV {tv}");
+    }
+
+    #[test]
+    fn degenerate_streams_are_empty() {
+        let zero_rate = MixSchedule::constant(TraceMix::trace1(), 0.0);
+        let opts = SynthOptions::default();
+        assert_eq!(ArrivalStream::new(&zero_rate, 100.0, &opts).count(), 0);
+        let live = MixSchedule::constant(TraceMix::trace1(), 3.0);
+        assert_eq!(ArrivalStream::new(&live, 0.0, &opts).count(), 0);
+    }
+}

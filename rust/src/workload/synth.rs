@@ -77,47 +77,27 @@ pub fn synthesize_trace(mix: &TraceMix, opts: &SynthOptions) -> Trace {
 /// mixture in force at its own arrival time. Deterministic from
 /// `opts.seed`; `opts.num_requests` and `opts.arrival_rate` are ignored —
 /// the schedule drives both.
+///
+/// This is the *materializing* wrapper over
+/// [`super::stream::ArrivalStream`]: the streaming iterator performs the
+/// identical RNG call sequence, so collecting it reproduces this function's
+/// historical output bit for bit — large runs should iterate the stream
+/// directly instead of holding the whole trace in memory.
 pub fn synthesize_trace_schedule(
     schedule: &MixSchedule,
     horizon_s: f64,
     opts: &SynthOptions,
 ) -> Trace {
-    let mut rng = Xoshiro256::seed_from_u64(opts.seed);
-    let envelope = schedule.max_rate();
-    let mut requests = Vec::new();
-    if envelope > 0.0 && horizon_s > 0.0 {
-        let mut t = 0.0f64;
-        loop {
-            t += rng.exponential(envelope);
-            if t >= horizon_s {
-                break;
-            }
-            // Thinning: accept with probability rate(t)/envelope.
-            if !rng.bernoulli(schedule.rate_at(t) / envelope) {
-                continue;
-            }
-            let mix = schedule.mix_at(t);
-            let w = WorkloadType::by_index(rng.weighted_index(&mix.ratios));
-            let (input, output) = jitter_lengths(&mut rng, w, opts.length_sigma);
-            requests.push(Request {
-                id: requests.len() as u64,
-                arrival_s: t,
-                workload: w,
-                input_tokens: input,
-                output_tokens: output,
-            });
-        }
-    }
     Trace {
         name: schedule.name.clone(),
-        requests,
+        requests: super::stream::ArrivalStream::new(schedule, horizon_s, opts).collect(),
     }
 }
 
 /// Log-normal jitter with the type mean preserved:
 /// if X ~ LogNormal(mu, sigma) then E[X] = exp(mu + sigma^2/2), so we set
 /// mu = ln(mean) - sigma^2/2.
-fn jitter_lengths(rng: &mut Xoshiro256, w: WorkloadType, sigma: f64) -> (u32, u32) {
+pub(crate) fn jitter_lengths(rng: &mut Xoshiro256, w: WorkloadType, sigma: f64) -> (u32, u32) {
     if sigma <= 0.0 {
         return (w.avg_input, w.avg_output);
     }
