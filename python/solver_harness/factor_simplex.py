@@ -1,0 +1,629 @@
+"""Reference prototype of the factorized bounded-variable revised simplex.
+
+This is the algorithm-validation twin of ``rust/src/milp/{factor,bounds}.rs``:
+an *unshifted* bounded-variable revised simplex over an LU-factorized basis
+with a product-form eta file, periodic refactorisation, dual steepest-edge
+pricing (Forrest-Goldfarb reference weights) and a composite phase-1 primal.
+The Rust implementation is a line-for-line transcription of this file;
+``validate.py`` / ``tests/test_factor_simplex.py`` check it against scipy
+``linprog`` on randomized planner-shaped LPs, including warm bound-walk and
+crash-warm sequences.
+
+Problem form (mirrors ``milp::simplex::Lp``)::
+
+    min c.x   s.t.  A x {<=,>=,=} b,   lo <= x <= hi
+
+One logical column per row (total = n + m): ``a_i.x + s_i = b_i`` with
+``s_i in [0, inf)`` for Le, ``(-inf, 0]`` for Ge (resting at upper bound 0)
+and ``[0, 0]`` for Eq.  No artificial variables: cold starts are classified
+as primal-feasible (primal phase 2), dual-feasible (dual simplex) or neither
+(composite phase 1 minimizing the sum of infeasibilities).
+"""
+
+import math
+
+import numpy as np
+
+INF = math.inf
+DTOL = 1e-7  # dual feasibility tolerance on reduced costs
+FTOL = 1e-7  # primal feasibility tolerance on basic values
+ATOL = 1e-9  # treat tableau coefficients below this as zero
+SING_EPS = 1e-10  # factorization pivot magnitude below this = singular
+RATIO_TIE = 1e-7  # near-tie window in ratio tests (prefer big pivots)
+GAMMA_FLOOR = 1e-10  # dual steepest-edge weight floor
+
+LE, GE, EQ = 0, 1, 2
+
+OPTIMAL = "optimal"
+INFEASIBLE = "infeasible"
+UNBOUNDED = "unbounded"
+STALLED = "stalled"
+
+
+def beats(val, best):
+    """Ratio-test comparison: (strictly better, within the near-tie window).
+
+    ``best == INF`` counts as strictly beaten by any finite value (the
+    subtraction form would produce NaN there).
+    """
+    if not math.isfinite(best):
+        return math.isfinite(val), False
+    win = RATIO_TIE * (1.0 + abs(best))
+    better = val < best - win
+    return better, (not better) and val <= best + win
+
+
+class FactorSimplex:
+    """Bounded-variable revised simplex over an LU+eta factorized basis."""
+
+    def __init__(self, n, c, rows, lo, hi):
+        self.n = n
+        self.m = m = len(rows)
+        total = self.total = n + m
+        self.c = np.zeros(total)
+        self.c[:n] = c
+        self.A = np.zeros((m, total))
+        self.b = np.zeros(m)
+        self.lo = np.full(total, 0.0)
+        self.hi = np.full(total, 0.0)
+        self.lo[:n] = lo
+        self.hi[:n] = hi
+        for i, (terms, cmp, rhs) in enumerate(rows):
+            for j, a in terms:
+                self.A[i, j] += a
+            self.A[i, n + i] = 1.0
+            self.b[i] = rhs
+            if cmp == LE:
+                self.lo[n + i], self.hi[n + i] = 0.0, INF
+            elif cmp == GE:
+                self.lo[n + i], self.hi[n + i] = -INF, 0.0
+            else:
+                self.lo[n + i], self.hi[n + i] = 0.0, 0.0
+        self.basis = np.array([n + i for i in range(m)], dtype=int)
+        self.pos = np.full(total, -1, dtype=int)
+        for i, j in enumerate(self.basis):
+            self.pos[j] = i
+        self.at_upper = np.zeros(total, dtype=bool)
+        self.xb = np.zeros(m)
+        self.xb_dirty = True
+        self.dual_ok = False
+        self.y = np.zeros(m)
+        self.lu = None
+        self.perm = None
+        self.etas = []
+        self.need_factor = True
+        self.gamma = np.ones(m)
+        # stats
+        self.pivots = 0
+        self.bound_flips = 0
+        self.refactorisations = 0
+        self.eta_updates = 0
+        self.dse_pivots = 0
+
+    # ---------------- factorization ----------------
+
+    def eta_limit(self):
+        return max(2 * self.m, 20)
+
+    def factorize(self):
+        """(Re)factorize B = A[:, basis] as P.B = L.U with partial pivoting.
+
+        A dependent basis column is repaired by substituting the logical of
+        an unpivoted row (snapshot crash across coefficient drift can hand
+        us a singular basis); the ejected variable rests at a finite bound.
+        """
+        m = self.m
+        for _attempt in range(m + 1):
+            lu = self.A[:, self.basis].copy()
+            perm = np.arange(m)
+            ok = True
+            for k in range(m):
+                p = k + int(np.argmax(np.abs(lu[k:, k])))
+                if abs(lu[p, k]) < SING_EPS:
+                    if not self._repair_singular(k, perm):
+                        raise RuntimeError("unrepairable singular basis")
+                    ok = False
+                    break
+                if p != k:
+                    lu[[k, p], :] = lu[[p, k], :]
+                    perm[[k, p]] = perm[[p, k]]
+                piv = lu[k, k]
+                if k + 1 < m:
+                    lu[k + 1 :, k] /= piv
+                    lu[k + 1 :, k + 1 :] -= np.outer(lu[k + 1 :, k], lu[k, k + 1 :])
+            if ok:
+                self.lu = lu
+                self.perm = perm
+                self.etas = []
+                self.gamma = np.ones(m)
+                self.refactorisations += 1
+                self.need_factor = False
+                return
+        raise RuntimeError("factorize loop did not converge")
+
+    def _repair_singular(self, k, perm):
+        # basis column k is dependent on columns 0..k-1: swap in the logical
+        # of a not-yet-pivoted row (one of perm[k:]) that is nonbasic.
+        for q in range(k, self.m):
+            lg = self.n + int(perm[q])
+            if self.pos[lg] < 0:
+                old = self.basis[k]
+                self.pos[old] = -1
+                if math.isfinite(self.lo[old]):
+                    self.at_upper[old] = False
+                elif math.isfinite(self.hi[old]):
+                    self.at_upper[old] = True
+                self.basis[k] = lg
+                self.pos[lg] = k
+                self.xb_dirty = True
+                return True
+        return False
+
+    def ftran(self, v):
+        """Solve B.x = v through the LU factors and the eta file."""
+        m = self.m
+        x = np.asarray(v, dtype=float)[self.perm].copy()
+        for k in range(m):
+            if x[k] != 0.0:
+                x[k + 1 :] -= self.lu[k + 1 :, k] * x[k]
+        for k in range(m - 1, -1, -1):
+            if k + 1 < m:
+                x[k] -= self.lu[k, k + 1 :] @ x[k + 1 :]
+            x[k] /= self.lu[k, k]
+        for r, alpha in self.etas:
+            t = x[r] / alpha[r]
+            if t != 0.0:
+                x -= alpha * t
+            x[r] = t
+        return x
+
+    def btran(self, v):
+        """Solve B^T.x = v: reversed eta file first, then the LU transpose."""
+        m = self.m
+        x = np.asarray(v, dtype=float).copy()
+        for r, alpha in reversed(self.etas):
+            x[r] = (x[r] - (alpha @ x - alpha[r] * x[r])) / alpha[r]
+        for k in range(m):
+            if k > 0:
+                x[k] -= self.lu[:k, k] @ x[:k]
+            x[k] /= self.lu[k, k]
+        for k in range(m - 1, -1, -1):
+            if k + 1 < m:
+                x[k] -= self.lu[k + 1 :, k] @ x[k + 1 :]
+        out = np.zeros(m)
+        out[self.perm] = x
+        return out
+
+    # ---------------- state helpers ----------------
+
+    def nb_val(self, j):
+        if self.at_upper[j]:
+            if math.isfinite(self.hi[j]):
+                return self.hi[j]
+            return self.lo[j] if math.isfinite(self.lo[j]) else 0.0
+        if math.isfinite(self.lo[j]):
+            return self.lo[j]
+        return self.hi[j] if math.isfinite(self.hi[j]) else 0.0
+
+    def compute_xb(self):
+        rhs = self.b.copy()
+        for j in range(self.total):
+            if self.pos[j] < 0:
+                v = self.nb_val(j)
+                if v != 0.0:
+                    rhs -= self.A[:, j] * v
+        self.xb = self.ftran(rhs)
+        self.xb_dirty = False
+
+    def price_full(self, cvec):
+        """y = B^-T c_B; returns reduced costs d = c - y.A for all columns."""
+        y = self.btran(cvec[self.basis])
+        if cvec is self.c:
+            self.y = y
+        return cvec - y @ self.A, y
+
+    def push_pivot(self, r, q, alpha):
+        leaving = self.basis[r]
+        self.pos[leaving] = -1
+        self.basis[r] = q
+        self.pos[q] = r
+        self.etas.append((r, alpha.copy()))
+        self.eta_updates += 1
+        self.pivots += 1
+        if len(self.etas) >= self.eta_limit():
+            self.factorize()
+            self.compute_xb()
+
+    def primal_feasible(self):
+        for i in range(self.m):
+            j = self.basis[i]
+            if self.xb[i] < self.lo[j] - FTOL or self.xb[i] > self.hi[j] + FTOL:
+                return False
+        return True
+
+    def dual_feasible(self):
+        d, _ = self.price_full(self.c)
+        for j in range(self.total):
+            if self.pos[j] >= 0 or self.lo[j] == self.hi[j]:
+                continue
+            if self.at_upper[j] and math.isfinite(self.hi[j]):
+                if d[j] > DTOL:
+                    return False
+            elif math.isfinite(self.lo[j]) and not self.at_upper[j]:
+                if d[j] < -DTOL:
+                    return False
+            elif abs(d[j]) > DTOL:  # free column resting at 0
+                return False
+        return True
+
+    def max_iters(self):
+        return 50 * max(self.m + self.total, 100)
+
+    # ---------------- primal phase 2 ----------------
+
+    def primal2(self):
+        cap = self.max_iters()
+        it = 0
+        while True:
+            it += 1
+            if it > cap:
+                return STALLED
+            bland = it > cap // 2
+            d, _ = self.price_full(self.c)
+            q, sigma, score = -1, 0, DTOL
+            for j in range(self.total):
+                if self.pos[j] >= 0 or self.lo[j] == self.hi[j]:
+                    continue
+                up = self.at_upper[j] and math.isfinite(self.hi[j])
+                if not up and d[j] < -DTOL:
+                    s, sg = -d[j], 1
+                elif (up or not math.isfinite(self.lo[j])) and d[j] > DTOL:
+                    s, sg = d[j], -1
+                else:
+                    continue
+                if bland:
+                    q, sigma = j, sg
+                    break
+                if s > score:
+                    q, sigma, score = j, sg, s
+            if q < 0:
+                return OPTIMAL
+            alpha = self.ftran(self.A[:, q])
+            out = self._primal_step(q, sigma, alpha, bland)
+            if out is not None:
+                return out
+
+    def _primal_step(self, q, sigma, alpha, bland):
+        """Bounded ratio test + pivot/flip for entering q moving sigma*t."""
+        rng = self.hi[q] - self.lo[q]
+        t_best = rng if math.isfinite(rng) else INF
+        block, leave_up, mag = -1, False, 0.0
+        for i in range(self.m):
+            a = sigma * alpha[i]
+            if abs(a) <= ATOL:
+                continue
+            j = self.basis[i]
+            if a > 0.0:  # basic value decreases toward its lower bound
+                if not math.isfinite(self.lo[j]):
+                    continue
+                t = (self.xb[i] - self.lo[j]) / a
+                lu = False
+            else:  # increases toward its upper bound
+                if not math.isfinite(self.hi[j]):
+                    continue
+                t = (self.hi[j] - self.xb[i]) / (-a)
+                lu = True
+            if t < 0.0:
+                t = 0.0
+            better, tied = beats(t, t_best)
+            if better or (tied and not bland and abs(alpha[i]) > mag):
+                t_best, block, leave_up, mag = min(t, t_best) if tied else t, i, lu, abs(alpha[i])
+        if t_best == INF:
+            return UNBOUNDED
+        if block < 0:
+            # bound flip: entering crosses its whole range, no pivot
+            self.xb -= sigma * alpha * t_best
+            self.at_upper[q] = not self.at_upper[q]
+            self.bound_flips += 1
+            return None
+        self.xb -= sigma * alpha * t_best
+        newval = self.nb_val(q) + sigma * t_best
+        self.at_upper[self.basis[block]] = leave_up
+        self.xb[block] = newval
+        self.push_pivot(block, q, alpha)
+        return None
+
+    # ---------------- dual simplex with steepest-edge ----------------
+
+    def dual_loop(self):
+        cap = self.max_iters()
+        it = 0
+        while True:
+            it += 1
+            if it > cap:
+                return STALLED
+            bland = it > cap // 2
+            r, score = -1, 0.0
+            for i in range(self.m):
+                j = self.basis[i]
+                if self.xb[i] < self.lo[j] - FTOL:
+                    delta = self.lo[j] - self.xb[i]
+                elif self.xb[i] > self.hi[j] + FTOL:
+                    delta = self.xb[i] - self.hi[j]
+                else:
+                    continue
+                s = delta * delta / self.gamma[i]
+                if bland:
+                    r = i
+                    break
+                if s > score:
+                    r, score = i, s
+            if r < 0:
+                return OPTIMAL
+            j_leave = self.basis[r]
+            below = self.xb[r] < self.lo[j_leave]
+            rho = self.btran(np.eye(self.m)[r])
+            d, _ = self.price_full(self.c)
+            row = rho @ self.A
+            q, best, mag = -1, INF, 0.0
+            for j in range(self.total):
+                if self.pos[j] >= 0 or self.lo[j] == self.hi[j]:
+                    continue
+                arj = row[j]
+                if abs(arj) <= ATOL:
+                    continue
+                up = self.at_upper[j] and math.isfinite(self.hi[j])
+                if below:
+                    if not up and arj < -ATOL:
+                        ratio = max(d[j], 0.0) / (-arj)
+                    elif up and arj > ATOL:
+                        ratio = max(-d[j], 0.0) / arj
+                    else:
+                        continue
+                else:
+                    if not up and arj > ATOL:
+                        ratio = max(d[j], 0.0) / arj
+                    elif up and arj < -ATOL:
+                        ratio = max(-d[j], 0.0) / (-arj)
+                    else:
+                        continue
+                better, tied = beats(ratio, best)
+                if better or (tied and not bland and abs(arj) > mag):
+                    best, q, mag = min(ratio, best) if tied else ratio, j, abs(arj)
+            if q < 0:
+                return INFEASIBLE  # dual unbounded => primal infeasible
+            alpha = self.ftran(self.A[:, q])
+            if abs(alpha[r]) <= ATOL:
+                # refactorize and retry once; a pivot this small is drift
+                self.factorize()
+                self.compute_xb()
+                continue
+            sigma = 1 if not (self.at_upper[q] and math.isfinite(self.hi[q])) else -1
+            target = self.lo[j_leave] if below else self.hi[j_leave]
+            t = (target - self.xb[r]) / (-sigma * alpha[r])
+            if t < 0.0:
+                t = 0.0
+            # Forrest-Goldfarb weight update before the basis change
+            tau = self.ftran(rho)
+            gr = self.gamma[r]
+            ar = alpha[r]
+            for i in range(self.m):
+                if i == r:
+                    continue
+                w = alpha[i] / ar
+                self.gamma[i] = max(self.gamma[i] - 2.0 * w * tau[i] + w * w * gr, GAMMA_FLOOR)
+            self.gamma[r] = max(gr / (ar * ar), GAMMA_FLOOR)
+            self.xb -= sigma * alpha * t
+            newval = self.nb_val(q) + sigma * t
+            self.at_upper[j_leave] = not below
+            self.xb[r] = newval
+            self.push_pivot(r, q, alpha)
+            self.dse_pivots += 1
+
+    # ---------------- composite phase 1 ----------------
+
+    def phase1(self):
+        cap = self.max_iters()
+        it = 0
+        while True:
+            it += 1
+            if it > cap:
+                return STALLED
+            bland = it > cap // 2
+            w = np.zeros(self.total)
+            infeas = 0.0
+            for i in range(self.m):
+                j = self.basis[i]
+                if self.xb[i] < self.lo[j] - FTOL:
+                    w[j] = -1.0
+                    infeas += self.lo[j] - self.xb[i]
+                elif self.xb[i] > self.hi[j] + FTOL:
+                    w[j] = 1.0
+                    infeas += self.xb[i] - self.hi[j]
+            if infeas <= FTOL:
+                return OPTIMAL
+            d, _ = self.price_full(w)
+            q, sigma, score = -1, 0, DTOL
+            for j in range(self.total):
+                if self.pos[j] >= 0 or self.lo[j] == self.hi[j]:
+                    continue
+                up = self.at_upper[j] and math.isfinite(self.hi[j])
+                if not up and d[j] < -DTOL:
+                    s, sg = -d[j], 1
+                elif (up or not math.isfinite(self.lo[j])) and d[j] > DTOL:
+                    s, sg = d[j], -1
+                else:
+                    continue
+                if bland:
+                    q, sigma = j, sg
+                    break
+                if s > score:
+                    q, sigma, score = j, sg, s
+            if q < 0:
+                return INFEASIBLE
+            alpha = self.ftran(self.A[:, q])
+            out = self._phase1_step(q, sigma, alpha, bland)
+            if out is not None:
+                return out
+
+    def _phase1_step(self, q, sigma, alpha, bland):
+        """Short-step ratio test: stop at the first bound crossing."""
+        rng = self.hi[q] - self.lo[q]
+        t_best = rng if math.isfinite(rng) else INF
+        block, leave_up, mag = -1, False, 0.0
+        for i in range(self.m):
+            a = sigma * alpha[i]
+            if abs(a) <= ATOL:
+                continue
+            j = self.basis[i]
+            v = self.xb[i]
+            t, lu = None, False
+            if a > 0.0:  # basic decreases
+                if v > self.hi[j] + FTOL:
+                    t, lu = (v - self.hi[j]) / a, True
+                elif v >= self.lo[j] - FTOL and math.isfinite(self.lo[j]):
+                    t, lu = (v - self.lo[j]) / a, False
+            else:  # basic increases
+                if v < self.lo[j] - FTOL:
+                    t, lu = (self.lo[j] - v) / (-a), False
+                elif v <= self.hi[j] + FTOL and math.isfinite(self.hi[j]):
+                    t, lu = (self.hi[j] - v) / (-a), True
+            if t is None:
+                continue
+            if t < 0.0:
+                t = 0.0
+            better, tied = beats(t, t_best)
+            if better or (tied and not bland and abs(alpha[i]) > mag):
+                t_best, block, leave_up, mag = min(t, t_best) if tied else t, i, lu, abs(alpha[i])
+        if t_best == INF:
+            return STALLED
+        if block < 0:
+            self.xb -= sigma * alpha * t_best
+            self.at_upper[q] = not self.at_upper[q]
+            self.bound_flips += 1
+            return None
+        self.xb -= sigma * alpha * t_best
+        newval = self.nb_val(q) + sigma * t_best
+        self.at_upper[self.basis[block]] = leave_up
+        self.xb[block] = newval
+        self.push_pivot(block, q, alpha)
+        return None
+
+    # ---------------- public API (mirrors BoundedSimplex) ----------------
+
+    def solve_cold(self):
+        n, m = self.n, self.m
+        self.basis = np.array([n + i for i in range(m)], dtype=int)
+        self.pos = np.full(self.total, -1, dtype=int)
+        for i, j in enumerate(self.basis):
+            self.pos[j] = i
+        for j in range(n):
+            self.at_upper[j] = self.c[j] < 0.0 and math.isfinite(self.hi[j])
+        for i in range(m):
+            self.at_upper[n + i] = not math.isfinite(self.lo[n + i])
+        self.factorize()
+        self.compute_xb()
+        return self._finish()
+
+    def _finish(self):
+        if self.primal_feasible():
+            out = self.primal2()
+        elif self.dual_feasible():
+            out = self.dual_loop()
+            if out == OPTIMAL:
+                out = self.primal2()
+        else:
+            out = self.phase1()
+            if out == OPTIMAL:
+                out = self.primal2()
+        if out == OPTIMAL:
+            self.dual_ok = True
+            self.price_full(self.c)  # refresh cached y at the terminal basis
+        return out
+
+    def resolve_dual(self):
+        if self.need_factor:
+            self.factorize()
+        if self.xb_dirty:
+            self.compute_xb()
+        out = self.dual_loop()
+        if out == OPTIMAL:
+            out = self.primal2()
+        if out == OPTIMAL:
+            self.dual_ok = True
+            self.price_full(self.c)
+        return out
+
+    def dual_ready(self):
+        return self.dual_ok
+
+    def var_bounds(self, v):
+        return self.lo[v], self.hi[v]
+
+    def set_var_bounds(self, v, lo, hi):
+        self.lo[v], self.hi[v] = lo, hi
+        self.xb_dirty = True
+        if self.pos[v] >= 0 or lo == hi:
+            return  # basic: bounds only re-score feasibility; fixed: any d
+        # nonbasic: keep a rest side whose sign condition matches d_v;
+        # reduced costs are bound-independent in the unshifted form, so the
+        # cached y prices d_v exactly.
+        dv = self.c[v] - self.y @ self.A[:, v]
+        lower_ok = math.isfinite(lo) and dv >= -DTOL
+        upper_ok = math.isfinite(hi) and dv <= DTOL
+        if self.at_upper[v]:
+            if upper_ok:
+                return
+            if lower_ok:
+                self.at_upper[v] = False
+                return
+        else:
+            if lower_ok:
+                return
+            if upper_ok:
+                self.at_upper[v] = True
+                return
+        if math.isfinite(lo):
+            self.at_upper[v] = False
+            self.dual_ok = False
+        elif math.isfinite(hi):
+            self.at_upper[v] = True
+            self.dual_ok = False
+        else:
+            self.at_upper[v] = False
+            if abs(dv) > DTOL:
+                self.dual_ok = False
+
+    def snapshot(self):
+        return dict(
+            n=self.n,
+            m=self.m,
+            total=self.total,
+            basis=self.basis.copy(),
+            flipped=self.at_upper.copy(),
+        )
+
+    def solve_warm_from(self, snap):
+        if snap["n"] != self.n or snap["m"] != self.m or snap["total"] != self.total:
+            return None
+        self.basis = snap["basis"].copy()
+        self.at_upper = snap["flipped"].copy()
+        self.pos = np.full(self.total, -1, dtype=int)
+        for i, j in enumerate(self.basis):
+            self.pos[j] = i
+        self.factorize()
+        self.compute_xb()
+        return self._finish()
+
+    def extract(self):
+        x = np.array([self.nb_val(j) for j in range(self.total)])
+        for i in range(self.m):
+            x[self.basis[i]] = self.xb[i]
+        return x[: self.n].copy(), float(self.c @ x)
+
+    def residual(self):
+        """Max row violation of A.x = b at the current factorized point."""
+        x = np.array([self.nb_val(j) for j in range(self.total)])
+        for i in range(self.m):
+            x[self.basis[i]] = self.xb[i]
+        return float(np.max(np.abs(self.A @ x - self.b))) if self.m else 0.0

@@ -1,0 +1,322 @@
+"""Validate the factorized revised-simplex prototype against scipy linprog.
+
+Four suites, mirroring how the Rust arena is used by the planner:
+
+  cold        randomized planner-shaped LPs, cold solve vs scipy (verdict +
+              objective)
+  walk        warm bound-walk sequences: tighten/widen/fix random variables,
+              resolve by dual simplex when the arena says dual_ready, cold
+              otherwise; every step checked against scipy at the same bounds
+  crash       snapshot -> +-10% coefficient drift -> solve_warm_from on the
+              drifted twin, vs scipy
+  chain       one arena, hundreds of consecutive warm re-solves on a
+              branching-style bound walk with periodic reverts; every step
+              vs a fresh cold arena AND scipy (the long-warm-chain numerical
+              regression suite)
+
+Run:  python3 validate.py [--quick]
+"""
+
+import math
+import sys
+
+import numpy as np
+from scipy.optimize import linprog
+
+from factor_simplex import (
+    EQ,
+    GE,
+    INF,
+    INFEASIBLE,
+    LE,
+    OPTIMAL,
+    UNBOUNDED,
+    FactorSimplex,
+)
+
+OBJ_TOL = 1e-5
+
+
+def planner_shaped(rng):
+    """Random LP shaped like the planner feasibility model: assignment Eq
+    rows, coverage Ge rows, capacity Le rows, integer-ish bounded vars."""
+    cand = rng.integers(4, 6)
+    wl = rng.integers(3, 5)
+    n = cand * wl + cand  # x[w,c] fractions + y[c] replica counts
+    c = np.zeros(n)
+    lo = np.zeros(n)
+    hi = np.zeros(n)
+    for k in range(cand * wl):
+        hi[k] = 1.0
+    for j in range(cand):
+        c[cand * wl + j] = rng.uniform(0.5, 4.0)  # replica price
+        hi[cand * wl + j] = float(rng.integers(2, 7))
+    rows = []
+    # assignment: each workload fully routed
+    for w in range(wl):
+        rows.append(([(w * cand + j, 1.0) for j in range(cand)], EQ, 1.0))
+    # throughput coverage: sum_j rate[j,w] * x[w,j] * y[j] is linearized as
+    # rate * x only (planner fixes y in the rounding LP); keep it linear.
+    for w in range(wl):
+        terms = [(w * cand + j, rng.uniform(0.5, 3.0)) for j in range(cand)]
+        rows.append((terms, GE, rng.uniform(0.2, 0.9)))
+    # capacity: replica counts consume a pooled budget
+    rows.append(
+        ([(cand * wl + j, rng.uniform(0.5, 2.0)) for j in range(cand)], LE, rng.uniform(4.0, 12.0))
+    )
+    # makespan-ish coupling rows with mixed signs
+    for _ in range(rng.integers(1, 3)):
+        terms = []
+        for j in range(cand):
+            terms.append((w_pick(rng, wl) * cand + j, rng.uniform(-1.0, 2.0)))
+            terms.append((cand * wl + j, rng.uniform(-0.5, 1.5)))
+        rows.append((terms, LE if rng.random() < 0.7 else GE, rng.uniform(-1.0, 5.0)))
+    # sometimes a negative objective entry (exercises phase 1 / primal)
+    if rng.random() < 0.3:
+        c[rng.integers(0, cand * wl)] = -rng.uniform(0.1, 1.0)
+    # sometimes an unbounded-looking column
+    if rng.random() < 0.1:
+        j = cand * wl + rng.integers(0, cand)
+        hi[j] = INF
+    return n, c, rows, lo, hi
+
+
+def w_pick(rng, wl):
+    return int(rng.integers(0, wl))
+
+
+def scipy_solve(n, c, rows, lo, hi):
+    a_ub, b_ub, a_eq, b_eq = [], [], [], []
+    for terms, cmp, rhs in rows:
+        row = np.zeros(n)
+        for j, a in terms:
+            row[j] += a
+        if cmp == LE:
+            a_ub.append(row)
+            b_ub.append(rhs)
+        elif cmp == GE:
+            a_ub.append(-row)
+            b_ub.append(-rhs)
+        else:
+            a_eq.append(row)
+            b_eq.append(rhs)
+    bounds = [(lo[j], None if hi[j] == INF else hi[j]) for j in range(n)]
+    res = linprog(
+        c,
+        A_ub=np.array(a_ub) if a_ub else None,
+        b_ub=np.array(b_ub) if b_ub else None,
+        A_eq=np.array(a_eq) if a_eq else None,
+        b_eq=np.array(b_eq) if b_eq else None,
+        bounds=bounds,
+        method="highs",
+    )
+    if res.status == 0:
+        return OPTIMAL, res.fun
+    if res.status == 2:
+        return INFEASIBLE, None
+    if res.status == 3:
+        return UNBOUNDED, None
+    return "other", None
+
+
+def check_against_scipy(fs, out, n, c, rows, lo, hi, label):
+    want, obj = scipy_solve(n, c, rows, lo, hi)
+    if want == "other":
+        return True  # scipy numerical trouble; skip
+    if out != want:
+        print(f"MISMATCH[{label}] verdict ours={out} scipy={want}")
+        return False
+    if out == OPTIMAL:
+        _, ours = fs.extract()
+        if abs(ours - obj) > OBJ_TOL * (1.0 + abs(obj)):
+            print(f"MISMATCH[{label}] objective ours={ours:.9f} scipy={obj:.9f}")
+            return False
+        if fs.residual() > 1e-6:
+            print(f"MISMATCH[{label}] residual {fs.residual():.2e}")
+            return False
+    return True
+
+
+def suite_cold(ncases, seed0):
+    bad = 0
+    for k in range(ncases):
+        rng = np.random.default_rng(seed0 + k)
+        n, c, rows, lo, hi = planner_shaped(rng)
+        fs = FactorSimplex(n, c, rows, lo, hi)
+        out = fs.solve_cold()
+        if not check_against_scipy(fs, out, n, c, rows, lo, hi, f"cold#{k}"):
+            bad += 1
+    return bad
+
+
+def suite_walk(ncases, steps, seed0):
+    bad = 0
+    dual_used = 0
+    for k in range(ncases):
+        rng = np.random.default_rng(10_000 + seed0 + k)
+        n, c, rows, lo, hi = planner_shaped(rng)
+        fs = FactorSimplex(n, c, rows, lo, hi)
+        out = fs.solve_cold()
+        cur = [(lo[j], hi[j]) for j in range(n)]
+        for s in range(steps):
+            v = int(rng.integers(0, n))
+            olo, ohi = cur[v]
+            mode = rng.random()
+            if mode < 0.35 and ohi != INF:  # fix (branching down/up)
+                t = round(rng.uniform(olo, ohi if ohi != INF else olo + 3))
+                nlo = nhi = float(t)
+            elif mode < 0.6:  # tighten upper
+                nlo, nhi = olo, (olo + ohi) / 2 if ohi != INF else olo + 1.0
+            elif mode < 0.8:  # tighten lower
+                nlo = math.ceil((olo + (ohi if ohi != INF else olo + 2)) / 2)
+                nhi = ohi
+                if nlo > (nhi if nhi != INF else nlo):
+                    nlo = olo
+            else:  # revert / widen
+                nlo, nhi = 0.0, ohi if ohi != INF else INF
+                if v < n and rng.random() < 0.3:
+                    nhi = INF
+            fs.set_var_bounds(v, nlo, nhi)
+            cur[v] = (nlo, nhi)
+            if fs.dual_ready():
+                out = fs.resolve_dual()
+                dual_used += 1
+            else:
+                out = fs.solve_cold()
+            lo2 = np.array([a for a, _ in cur])
+            hi2 = np.array([b for _, b in cur])
+            if out == "stalled":
+                out = fs.solve_cold()
+            if not check_against_scipy(fs, out, n, c, rows, lo2, hi2, f"walk#{k}.{s}"):
+                bad += 1
+                break
+    return bad, dual_used
+
+
+def suite_crash(ncases, seed0):
+    bad = 0
+    applied = 0
+    for k in range(ncases):
+        rng = np.random.default_rng(20_000 + seed0 + k)
+        n, c, rows, lo, hi = planner_shaped(rng)
+        fs = FactorSimplex(n, c, rows, lo, hi)
+        if fs.solve_cold() != OPTIMAL:
+            continue
+        snap = fs.snapshot()
+        # +-10% coefficient drift, same structure
+        rows2 = []
+        for terms, cmp, rhs in rows:
+            rows2.append(
+                (
+                    [(j, a * rng.uniform(0.9, 1.1)) for j, a in terms],
+                    cmp,
+                    rhs * rng.uniform(0.9, 1.1),
+                )
+            )
+        c2 = c * rng.uniform(0.9, 1.1, size=n)
+        fs2 = FactorSimplex(n, c2, rows2, lo, hi)
+        out = fs2.solve_warm_from(snap)
+        if out is None:
+            continue
+        applied += 1
+        if not check_against_scipy(fs2, out, n, c2, rows2, lo, hi, f"crash#{k}"):
+            bad += 1
+    return bad, applied
+
+
+def suite_chain(nchains, length, seed0):
+    """Long warm chains: one arena re-solved warm for `length` consecutive
+    branching steps; objective vs a fresh cold arena at every step."""
+    bad = 0
+    warm = 0
+    max_dev = 0.0
+    max_res = 0.0
+    for k in range(nchains):
+        rng = np.random.default_rng(30_000 + seed0 + k)
+        n, c, rows, lo, hi = planner_shaped(rng)
+        fs = FactorSimplex(n, c, rows, lo, hi)
+        fs.solve_cold()
+        ints = [j for j in range(n) if hi[j] != INF]
+        cur = [(lo[j], hi[j]) for j in range(n)]
+        base = [(lo[j], hi[j]) for j in range(n)]
+        for s in range(length):
+            if rng.random() < 0.25:  # backtrack: revert one var to root bounds
+                v = int(rng.integers(0, n))
+                nlo, nhi = base[v]
+            else:  # branch: fix or halve an integer-ish var
+                v = ints[int(rng.integers(0, len(ints)))]
+                olo, ohi = cur[v]
+                if olo == ohi or rng.random() < 0.5:
+                    t = float(rng.integers(0, int(base[v][1]) + 1))
+                    nlo = nhi = t
+                else:
+                    nlo, nhi = olo, max(olo, math.floor((olo + ohi) / 2))
+            fs.set_var_bounds(v, nlo, nhi)
+            cur[v] = (nlo, nhi)
+            if fs.dual_ready():
+                out = fs.resolve_dual()
+                warm += 1
+            else:
+                out = fs.solve_cold()
+            if out == "stalled":
+                out = fs.solve_cold()
+            # cold reference arena at identical bounds
+            lo2 = np.array([a for a, _ in cur])
+            hi2 = np.array([b for _, b in cur])
+            ref = FactorSimplex(n, c, rows, lo2, hi2)
+            rout = ref.solve_cold()
+            if out != rout:
+                print(f"CHAIN[{k}.{s}] verdict warm={out} cold={rout}")
+                bad += 1
+                break
+            if out == OPTIMAL:
+                _, wobj = fs.extract()
+                _, cobj = ref.extract()
+                dev = abs(wobj - cobj) / (1.0 + abs(cobj))
+                max_dev = max(max_dev, dev)
+                max_res = max(max_res, fs.residual())
+                if dev > OBJ_TOL:
+                    print(f"CHAIN[{k}.{s}] obj warm={wobj:.9f} cold={cobj:.9f}")
+                    bad += 1
+                    break
+                if not check_against_scipy(fs, out, n, c, rows, lo2, hi2, f"chain#{k}.{s}"):
+                    bad += 1
+                    break
+    return bad, warm, max_dev, max_res
+
+
+def main():
+    quick = "--quick" in sys.argv
+    ncold = 60 if quick else 300
+    nwalk = 20 if quick else 80
+    ncrash = 30 if quick else 150
+    nchain = 2 if quick else 6
+    chain_len = 60 if quick else 250
+
+    bad = suite_cold(ncold, 1)
+    print(f"cold : {ncold} LPs, {bad} mismatches")
+    total_bad = bad
+
+    bad, dual_used = suite_walk(nwalk, 25, 1)
+    print(f"walk : {nwalk} walks x 25 steps, {bad} mismatches, {dual_used} dual re-solves")
+    total_bad += bad
+
+    bad, applied = suite_crash(ncrash, 1)
+    print(f"crash: {ncrash} drifted twins, {applied} applied, {bad} mismatches")
+    total_bad += bad
+
+    bad, warm, max_dev, max_res = suite_chain(nchain, chain_len, 1)
+    print(
+        f"chain: {nchain} chains x {chain_len}, {bad} mismatches, "
+        f"{warm} warm, max obj dev {max_dev:.2e}, max residual {max_res:.2e}"
+    )
+    total_bad += bad
+
+    if total_bad:
+        print(f"FAIL: {total_bad} mismatches")
+        sys.exit(1)
+    print("OK: factorized revised simplex matches scipy on all suites")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""L2 correctness for the factorized revised-simplex prototype: a quick
+pytest wrapper around the solver_harness validation suites (cold solves,
+warm bound-walks, crash warm starts, long warm chains), each checked
+against scipy linprog. The full-size runs live in
+``solver_harness/validate.py``; this is the fast CI-sized subset.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+pytest.importorskip("scipy")
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "solver_harness"))
+
+import validate  # noqa: E402
+
+
+def test_cold_solves_match_scipy():
+    assert validate.suite_cold(40, 1) == 0
+
+
+def test_warm_bound_walks_match_scipy():
+    bad, dual_used = validate.suite_walk(12, 25, 1)
+    assert bad == 0
+    # The walk must actually exercise the dual warm path, not fall back to
+    # cold solves throughout.
+    assert dual_used > 0
+
+
+def test_crash_warm_starts_match_scipy():
+    bad, applied = validate.suite_crash(20, 1)
+    assert bad == 0
+    assert applied > 0
+
+
+def test_long_warm_chain_stays_accurate():
+    bad, warm, max_dev, max_res = validate.suite_chain(2, 60, 1)
+    assert bad == 0
+    assert warm > 0
+    assert max_dev <= validate.OBJ_TOL
+    assert max_res <= 1e-6

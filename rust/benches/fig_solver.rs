@@ -1,38 +1,47 @@
-//! Solver bench: cold vs warm MILP solves on planner-shaped instances.
+//! Solver bench: the factorized revised simplex path against the dense
+//! eliminated-tableau baseline, on planner-shaped instances straight off
+//! the production path.
 //!
-//! Three workloads, all straight off the production path:
+//! Scenarios:
 //!
-//! * **binary-search sweep** — Algorithm 1 with the *exact* feasibility
-//!   oracle: every bisection iterate is a cost-minimisation MILP, the
-//!   warm run re-solves branch-and-bound nodes by dual simplex from the
-//!   incumbent basis and carries each feasible iterate as the next
-//!   check's starting incumbent; the cold run solves every node LP from
-//!   scratch (the pre-warm-start behaviour). Both rebuild the tableau
-//!   arena per T̂ (the PR-4 state of the world);
-//! * **session** — the same sweep through a basis-carrying
-//!   `PlannerSession`: the terminal root basis of each feasibility MILP
-//!   crash-warms the next root, across T̂ iterates and across repeated
-//!   session solves, instead of rebuilding the arena per T̂. Per-iterate
-//!   warm-hit rates come from `SearchStats::iterates`;
+//! * **dense baseline** — Algorithm 1 with the *exact* feasibility oracle
+//!   on the legacy dense tableau core (`LpCore::Dense`), cold and warm:
+//!   the pre-factorization state of the solver;
+//! * **factorized sweep / session** — the same sweep on the LU-factorized
+//!   core with dual steepest-edge pricing; the session additionally
+//!   carries the terminal root basis across T̂ iterates and session
+//!   solves. Per-iterate warm-hit rates come from `SearchStats::iterates`;
+//! * **knapsack carry** — the default (knapsack) feasibility path, whose
+//!   rounding LPs now run on one arena with a carried root basis: the
+//!   rounding warm-hit rate and crash-warmed roots must be nonzero;
+//! * **parallel B&B** — the direct §4.3 MILP with subtree waves forced on,
+//!   at 1 and 4 threads: plans must be bit-identical, walls are recorded;
 //! * **direct MILP** — the §4.3 big-M formulation solved once, warm vs
-//!   cold.
+//!   cold, on the factorized core.
 //!
 //! Emits a machine-readable `BENCH_solver.json` line with pivot counts,
-//! node counts, warm-hit rates, per-iterate session profiles, and wall
-//! times.
+//! factorization counters (refactorisations, eta updates, steepest-edge
+//! pivots), warm-hit rates, per-iterate session profiles, and wall times.
+//! CI guards the contractual metrics against
+//! `rust/benches/baseline_solver.json` (>15% regression fails).
 //!
-//! SHAPE CHECK: (1) the warm-started runs finish the same work with ≥2×
-//! fewer simplex pivots than cold and no more wall time; (2) the
-//! basis-carrying session finishes the sweep with measurably fewer total
-//! pivots than the per-iterate cold-arena path.
+//! SHAPE CHECK: (1) warm runs finish the same planning with ≥2× fewer
+//! pivots than cold and no more wall time; (2) the basis-carrying session
+//! beats the per-T̂ arena rebuild; (3) the factorized path finishes the
+//! sweep ≥2× faster (wall-clock) than the dense baseline at the same plan
+//! quality; (4) parallel B&B returns bit-identical plans at any thread
+//! count; (5) the knapsack rounding path reports a nonzero basis warm-hit
+//! rate.
 //!
 //! Flags: --model 8b|70b --budget B --tol T --quick
 
 use hetserve::cloud::availability;
-use hetserve::milp::MilpOptions;
+use hetserve::milp::{LpCore, MilpOptions};
 use hetserve::perf_model::{ModelSpec, PerfModel};
 use hetserve::profiler::Profile;
-use hetserve::sched::binary_search::{BinarySearchOptions, Feasibility, SearchStats};
+use hetserve::sched::binary_search::{
+    solve_binary_search, BinarySearchOptions, Feasibility, SearchStats,
+};
 use hetserve::sched::enumerate::EnumOptions;
 use hetserve::sched::formulation::solve_direct;
 use hetserve::sched::planner::{PlanRequest, Planner, PlannerSession};
@@ -51,6 +60,9 @@ struct Run {
     nodes: usize,
     warm_hit: f64,
     basis_roots: usize,
+    refactorisations: u64,
+    eta_updates: u64,
+    dse_pivots: u64,
     wall: Duration,
     makespan: f64,
     iterates: Vec<(f64, bool, u64, f64, bool)>, // (t_hat, feasible, pivots, warm_hit, from_basis)
@@ -69,6 +81,9 @@ fn run_from_stats(
         nodes: stats.milp_nodes,
         warm_hit: stats.warm_hit_rate(),
         basis_roots: stats.basis_roots,
+        refactorisations: stats.refactorisations,
+        eta_updates: stats.eta_updates,
+        dse_pivots: stats.dse_pivots,
         wall,
         makespan,
         iterates: stats
@@ -96,67 +111,105 @@ fn main() {
         time_limit: Duration::from_secs(if quick { 2 } else { 10 }),
         ..Default::default()
     };
-    let exact_opts = |warm: bool, carry_basis: bool| BinarySearchOptions {
+    let exact_opts = |warm: bool, carry_basis: bool, core: LpCore| BinarySearchOptions {
         tolerance: tol,
         feasibility: Feasibility::Exact,
         milp: MilpOptions {
             warm_start: warm,
+            core,
             ..milp.clone()
         },
         carry_basis,
         ..Default::default()
     };
-
-    // ---- binary-search sweep (exact oracle, per-T̂ arena rebuild) --------
-    let sweep = |warm: bool| -> Run {
-        let mut planner = PlannerSession::new(exact_opts(warm, false));
+    let exact_session = |label: &'static str, warm: bool, carry: bool, core: LpCore| -> Run {
+        let mut planner = PlannerSession::new(exact_opts(warm, carry, core));
         let t0 = Instant::now();
         let report = planner.plan(&PlanRequest::new(&problem));
         run_from_stats(
-            if warm { "sweep warm" } else { "sweep cold" },
-            &report.stats,
-            t0.elapsed(),
-            report.plan.map(|p| p.makespan).unwrap_or(f64::NAN),
-        )
-    };
-    let sweep_cold = sweep(false);
-    let sweep_warm = sweep(true);
-
-    // ---- session (terminal basis carried across T̂ iterates) -------------
-    let session = {
-        let mut planner = PlannerSession::new(exact_opts(true, true));
-        let t0 = Instant::now();
-        let report = planner.plan(&PlanRequest::new(&problem));
-        run_from_stats(
-            "session",
+            label,
             &report.stats,
             t0.elapsed(),
             report.plan.map(|p| p.makespan).unwrap_or(f64::NAN),
         )
     };
 
-    // ---- direct MILP (§4.3 big-M formulation) ----------------------------
-    let direct = |warm: bool| -> Run {
-        let opts = MilpOptions {
-            warm_start: warm,
-            ..milp.clone()
+    // ---- dense baseline (legacy eliminated tableau, LpCore::Dense) -------
+    let dense_cold = exact_session("dense cold sweep", false, false, LpCore::Dense);
+    let dense_warm = exact_session("dense session", true, true, LpCore::Dense);
+
+    // ---- factorized sweep / session (LU + dual steepest-edge) ------------
+    let sweep_cold = exact_session("fact cold sweep", false, false, LpCore::Factorized);
+    let sweep_warm = exact_session("fact sweep", true, false, LpCore::Factorized);
+    let session = exact_session("fact session", true, true, LpCore::Factorized);
+
+    // ---- knapsack path (rounding LPs on a basis-carrying arena) ----------
+    let knapsack = |label: &'static str, carry_basis: bool| -> Run {
+        let opts = BinarySearchOptions {
+            tolerance: tol,
+            feasibility: Feasibility::Knapsack,
+            milp: milp.clone(),
+            carry_basis,
+            ..Default::default()
         };
         let t0 = Instant::now();
-        let (plan, stats) = solve_direct(&problem, &opts);
+        let (plan, stats) = solve_binary_search(&problem, &opts);
+        run_from_stats(
+            label,
+            &stats,
+            t0.elapsed(),
+            plan.map(|p| p.makespan).unwrap_or(f64::NAN),
+        )
+    };
+    let knap_cold = knapsack("knapsack cold roots", false);
+    let knap_carry = knapsack("knapsack carry", true);
+
+    // ---- direct MILP (§4.3 big-M formulation) ----------------------------
+    let direct = |label: &'static str, opts: &MilpOptions| -> Run {
+        let t0 = Instant::now();
+        let (plan, stats) = solve_direct(&problem, opts);
         Run {
-            label: if warm { "direct warm" } else { "direct cold" },
+            label,
             pivots: stats.pivots,
             lp_solves: stats.lp_solves,
             nodes: stats.nodes,
             warm_hit: stats.warm_hit_rate(),
             basis_roots: stats.basis_roots,
+            refactorisations: stats.refactorisations,
+            eta_updates: stats.eta_updates,
+            dse_pivots: stats.dse_pivots,
             wall: t0.elapsed(),
             makespan: plan.map(|p| p.makespan).unwrap_or(f64::NAN),
             iterates: Vec::new(),
         }
     };
-    let direct_cold = direct(false);
-    let direct_warm = direct(true);
+    let direct_cold = direct(
+        "direct cold",
+        &MilpOptions {
+            warm_start: false,
+            ..milp.clone()
+        },
+    );
+    let direct_warm = direct("direct warm", &milp);
+
+    // ---- parallel B&B determinism (subtree waves forced on) --------------
+    // Same direct MILP with the partition thresholds lowered so the tree
+    // actually fans out; the plans must agree bit for bit across thread
+    // counts (Debug formatting compares every float exactly).
+    let parallel = |threads: usize| {
+        let opts = MilpOptions {
+            threads,
+            partition_heap: 6,
+            partition_nodes: 12,
+            ..milp.clone()
+        };
+        let t0 = Instant::now();
+        let (plan, stats) = solve_direct(&problem, &opts);
+        (format!("{plan:?}"), stats, t0.elapsed())
+    };
+    let (plan_t1, par_stats_t1, wall_t1) = parallel(1);
+    let (plan_t4, _par_stats_t4, wall_t4) = parallel(4);
+    let parallel_identical = plan_t1 == plan_t4;
 
     // ---- telemetry probe cost -------------------------------------------
     // The same basis-carrying session solve with the metric registry and
@@ -166,7 +219,7 @@ fn main() {
     // mode; small negative readings mean "unmeasurable".)
     let traced_wall = {
         telemetry::set_enabled(true);
-        let mut planner = PlannerSession::new(exact_opts(true, true));
+        let mut planner = PlannerSession::new(exact_opts(true, true, LpCore::Factorized));
         let t0 = Instant::now();
         let report = planner.plan(&PlanRequest::new(&problem));
         let wall = t0.elapsed();
@@ -194,11 +247,21 @@ fn main() {
             if quick { " (quick)" } else { "" }
         ),
         &[
-            "run", "pivots", "LP solves", "B&B nodes", "warm hit %", "basis roots", "wall ms",
-            "makespan s",
+            "run", "pivots", "LP solves", "B&B nodes", "warm hit %", "basis roots", "refactors",
+            "etas", "DSE pivots", "wall ms", "makespan s",
         ],
     );
-    let runs = [&sweep_cold, &sweep_warm, &session, &direct_cold, &direct_warm];
+    let runs = [
+        &dense_cold,
+        &dense_warm,
+        &sweep_cold,
+        &sweep_warm,
+        &session,
+        &knap_cold,
+        &knap_carry,
+        &direct_cold,
+        &direct_warm,
+    ];
     for r in runs {
         t.row(vec![
             r.label.to_string(),
@@ -207,6 +270,9 @@ fn main() {
             r.nodes.to_string(),
             format!("{:.0}", r.warm_hit * 100.0),
             r.basis_roots.to_string(),
+            r.refactorisations.to_string(),
+            r.eta_updates.to_string(),
+            r.dse_pivots.to_string(),
             format!("{:.1}", r.wall.as_secs_f64() * 1e3),
             cell(r.makespan),
         ]);
@@ -255,6 +321,9 @@ fn main() {
             ("nodes", Json::num(r.nodes as f64)),
             ("warm_hit_rate", Json::num(r.warm_hit)),
             ("basis_roots", Json::num(r.basis_roots as f64)),
+            ("refactorisations", Json::num(r.refactorisations as f64)),
+            ("eta_updates", Json::num(r.eta_updates as f64)),
+            ("dse_pivots", Json::num(r.dse_pivots as f64)),
             ("wall_ms", Json::num(r.wall.as_secs_f64() * 1e3)),
             ("makespan_s", Json::num(r.makespan)),
         ])
@@ -265,16 +334,24 @@ fn main() {
     let warm_wall = sweep_warm.wall + direct_warm.wall;
     let ratio = cold_pivots as f64 / (warm_pivots.max(1)) as f64;
     let session_ratio = sweep_warm.pivots as f64 / (session.pivots.max(1)) as f64;
+    let core_wall_ratio =
+        dense_warm.wall.as_secs_f64() / session.wall.as_secs_f64().max(1e-9);
+    let time_per_solve_ms =
+        session.wall.as_secs_f64() * 1e3 / (session.lp_solves.max(1)) as f64;
     let report = Json::obj(vec![
         ("bench", Json::str("fig_solver")),
         ("model", Json::str(&model.name)),
         ("budget", Json::num(budget)),
         ("tolerance_s", Json::num(tol)),
         ("quick", Json::Bool(quick)),
+        ("dense_cold", entry(&dense_cold)),
+        ("dense_warm", entry(&dense_warm)),
         ("sweep_cold", entry(&sweep_cold)),
         ("sweep_warm", entry(&sweep_warm)),
         ("session", entry(&session)),
         ("session_iterates", iterate_json(&session)),
+        ("knapsack_cold", entry(&knap_cold)),
+        ("knapsack_carry", entry(&knap_carry)),
         ("direct_cold", entry(&direct_cold)),
         ("direct_warm", entry(&direct_warm)),
         ("pivot_ratio_cold_over_warm", Json::num(ratio)),
@@ -289,6 +366,22 @@ fn main() {
         (
             "wall_ratio_cold_over_warm",
             Json::num(cold_wall.as_secs_f64() / warm_wall.as_secs_f64().max(1e-9)),
+        ),
+        ("wall_ratio_dense_over_fact", Json::num(core_wall_ratio)),
+        ("time_per_solve_ms", Json::num(time_per_solve_ms)),
+        (
+            "parallel",
+            Json::obj(vec![
+                ("wall_ms_t1", Json::num(wall_t1.as_secs_f64() * 1e3)),
+                ("wall_ms_t4", Json::num(wall_t4.as_secs_f64() * 1e3)),
+                ("waves", Json::num(par_stats_t1.waves as f64)),
+                ("subtrees", Json::num(par_stats_t1.subtrees as f64)),
+                ("identical", Json::Bool(parallel_identical)),
+            ]),
+        ),
+        (
+            "knapsack_warm_hit_rate",
+            Json::num(knap_carry.warm_hit),
         ),
         ("telemetry_overhead_pct", Json::num(telemetry_overhead_pct)),
     ]);
@@ -336,5 +429,45 @@ fn main() {
         } else {
             "FAIL"
         }
+    );
+
+    // SHAPE CHECK 3: the factorized core (LU + eta updates + steepest-edge
+    // pricing) must finish the same basis-carried sweep ≥2× faster than
+    // the dense eliminated-tableau baseline at the same plan quality.
+    let core_agree = (session.makespan - dense_warm.makespan).abs() <= tol.max(0.5)
+        || (session.makespan.is_nan() && dense_warm.makespan.is_nan());
+    let core_ok = core_wall_ratio >= 2.0;
+    println!(
+        "SHAPE CHECK (core): factorized {:.1} ms vs dense {:.1} ms ({core_wall_ratio:.2}x), \
+         makespans {} vs {} => {}",
+        session.wall.as_secs_f64() * 1e3,
+        dense_warm.wall.as_secs_f64() * 1e3,
+        cell(session.makespan),
+        cell(dense_warm.makespan),
+        if core_ok && core_agree { "PASS" } else { "FAIL" }
+    );
+
+    // SHAPE CHECK 4: parallel subtree waves must not change the answer —
+    // bit-identical plans at 1 and 4 threads.
+    println!(
+        "SHAPE CHECK (parallel): {} waves / {} subtrees, wall {:.1} ms (t=1) vs {:.1} ms (t=4), \
+         plans bit-identical: {} => {}",
+        par_stats_t1.waves,
+        par_stats_t1.subtrees,
+        wall_t1.as_secs_f64() * 1e3,
+        wall_t4.as_secs_f64() * 1e3,
+        parallel_identical,
+        if parallel_identical { "PASS" } else { "FAIL" }
+    );
+
+    // SHAPE CHECK 5: the knapsack rounding path must actually use its
+    // carried basis — nonzero crash-warmed roots and warm-hit rate.
+    let knap_ok = knap_carry.basis_roots > 0 && knap_carry.warm_hit > 0.0;
+    println!(
+        "SHAPE CHECK (knapsack): {} roots crash-warmed, warm hit {:.0}% (cold-root run: {}) => {}",
+        knap_carry.basis_roots,
+        knap_carry.warm_hit * 100.0,
+        knap_cold.basis_roots,
+        if knap_ok { "PASS" } else { "FAIL" }
     );
 }

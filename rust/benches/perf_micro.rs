@@ -6,7 +6,7 @@
 //! Flags: --quick (short warmup/measure windows — the CI smoke mode).
 
 use hetserve::cloud::availability;
-use hetserve::milp::{solve, BoundedSimplex, Cmp, Lp};
+use hetserve::milp::{solve, BoundedSimplex, Cmp, DenseSimplex, Lp};
 use hetserve::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
 use hetserve::profiler::Profile;
 use hetserve::sched::binary_search::BinarySearchOptions;
@@ -106,6 +106,21 @@ fn main() {
             black_box(arena.resolve_dual());
         } else {
             black_box(arena.solve_cold());
+        }
+    });
+    println!("{}", r.report());
+    // The same branch toggle on the legacy dense eliminated-tableau arena —
+    // the A/B baseline the factorized core replaced (LpCore::Dense).
+    let mut dense = DenseSimplex::new(&direct.lp);
+    dense.solve_cold();
+    let mut hi = 0.0;
+    let r = run(quick, "solver::node_resolve(dense tableau)", || {
+        hi = 1.0 - hi;
+        dense.set_var_bounds(v, 0.0, hi);
+        if dense.dual_ready() && !dense.refresh_due() {
+            black_box(dense.resolve_dual());
+        } else {
+            black_box(dense.solve_cold());
         }
     });
     println!("{}", r.report());

@@ -16,16 +16,21 @@
 //!   world events carrying a demand channel
 //! * [`perf_model`] — analytical roofline model replacing real-GPU profiling
 //! * [`profiler`] — `h_{c,w}` throughput tables for the scheduler
-//! * [`milp`] — from-scratch MILP solver: bounded-variable simplex arena
-//!   with dual-simplex warm starts, basis snapshots that crash-warm the
-//!   next structurally identical solve, branch & bound whose branches are
-//!   pure bound tightenings (see `milp/README.md`)
+//! * [`milp`] — from-scratch MILP solver: a factorized revised simplex
+//!   (LU basis + product-form eta updates with periodic refactorisation,
+//!   dual steepest-edge pricing) behind a bounded-variable arena with
+//!   dual-simplex warm starts, basis snapshots that crash-warm the next
+//!   structurally identical solve, and a deterministic parallel branch &
+//!   bound whose branches are pure bound tightenings; the legacy dense
+//!   eliminated-tableau arena survives as the A/B reference core (see
+//!   `milp/README.md`)
 //! * [`sched`] — the paper's scheduling algorithm (§4.3, App D–G), topped
 //!   by [`sched::planner`]: the unified planning surface — one `Planner`
 //!   trait and `PlanRequest`/`PlanReport` contract for every strategy,
 //!   with the stateful `PlannerSession` carrying warm solver state
-//!   (incumbent plan + terminal MILP basis) across bisection iterates,
-//!   replan epochs, and baseline sweeps
+//!   (incumbent plan + per-oracle root bases for both the exact-MILP and
+//!   knapsack-rounding paths) across bisection iterates, replan epochs,
+//!   and baseline sweeps
 //! * [`baselines`] — homogeneous / HexGen-like / ablation planners, all
 //!   `sched::planner::Planner` impls behind one registry
 //! * [`orchestrator`] — online replanning over the drifting *world*

@@ -547,14 +547,19 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
         result.makespan
     );
     println!(
-        "solver: {} LP solves, {} pivots, {} B&B nodes, warm-start hit rate {:.0}% \
-         ({} warm / {} cold), {:?} total",
+        "solver: {} LP solves, {} pivots ({} steepest-edge), {} B&B nodes, \
+         warm-start hit rate {:.0}% ({} warm / {} cold, {} basis roots), \
+         {} refactorisations, {} eta updates, {:?} total",
         report.solver.lp_solves,
         report.solver.pivots,
+        report.solver.dse_pivots,
         report.solver.milp_nodes,
         report.solver.warm_hit_rate() * 100.0,
         report.solver.warm_solves,
         report.solver.cold_solves,
+        report.solver.basis_roots,
+        report.solver.refactorisations,
+        report.solver.eta_updates,
         report.solver.elapsed
     );
     Ok(())

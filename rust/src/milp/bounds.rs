@@ -1,36 +1,57 @@
-//! Bounded-variable simplex core with dual-simplex warm starting — the
-//! tableau arena behind both [`super::simplex::solve`] and the
-//! branch-and-bound MILP solver.
+//! Factorized bounded-variable revised simplex — the LP arena behind both
+//! [`super::simplex::solve`] and the branch-and-bound MILP solver.
 //!
-//! Variable lower/upper bounds are handled *natively* in the tableau
-//! instead of as constraint rows, so a branch decision `x ≤ ⌊v⌋` /
-//! `x ≥ ⌈v⌉` is a pure bound tightening: no new row, no artificial
-//! variable, no phase 1. The representation is the classic
-//! complemented-column ("bound flipping") scheme:
+//! This is a *revised* simplex over an LU-factorized basis
+//! ([`super::factor::LuFactors`]) with a product-form eta file: each pivot
+//! appends one eta column instead of re-eliminating a dense tableau, so the
+//! per-pivot cost is the FTRAN/BTRAN work of the factor solves rather than
+//! O(m·n) row operations, and the factorization is rebuilt from scratch every
+//! [`BoundedSimplex::eta_limit`] pivots — which both caps the eta-file cost
+//! and erases accumulated floating-point drift. A warm chain therefore never
+//! strays far from an exactly-factorized point; the branch-and-bound
+//! incumbent check is a cheap [`residual`](BoundedSimplex::residual) test
+//! instead of a from-scratch feasibility re-solve.
 //!
-//! * every column j stores the *shifted* variable x̃_j ∈ [0, range_j]
-//!   with range_j = hi_j − lo_j; `flipped[j]` means x_j = hi_j − x̃_j
-//!   (the column rests at its upper bound), otherwise x_j = lo_j + x̃_j;
-//! * all nonbasic columns rest at x̃ = 0, so dual feasibility is the
-//!   uniform condition d_j ≥ 0 — independent of the bound values;
-//! * the RHS column stores the shifted values of the basic variables.
+//! The problem is kept *unshifted*: `min c·x` s.t. `A·x {≤,≥,=} b`,
+//! `lo ≤ x ≤ hi`, with one logical column per row (`a_i·x + s_i = b_i`,
+//! `s_i ∈ [0,∞)` for ≤, `(−∞,0]` for ≥ — resting at its upper bound 0 —
+//! and `[0,0]` for =). There are no artificial variables: a cold start is
+//! classified as primal feasible (primal phase 2), dual feasible (dual
+//! simplex) or neither (composite phase 1 minimising the sum of
+//! infeasibilities). Because reduced costs in this form do not depend on the
+//! bound values at all, a branch decision `x ≤ ⌊v⌋` / `x ≥ ⌈v⌉` is a pure
+//! bound tightening ([`set_var_bounds`](BoundedSimplex::set_var_bounds) is
+//! O(m)) and [`resolve_dual`](BoundedSimplex::resolve_dual) re-optimises
+//! from the incumbent basis by dual simplex.
 //!
-//! Because reduced costs do not depend on `b` or on the bounds, a basis
-//! that was optimal for *any* bound configuration stays dual feasible
-//! under *any other* bound configuration. [`BoundedSimplex::set_var_bounds`]
-//! therefore only shifts the RHS column (O(m) per changed variable) and
-//! [`BoundedSimplex::resolve_dual`] re-optimises by dual simplex from the
-//! incumbent basis — typically a handful of pivots, versus a full
-//! two-phase cold solve. Two documented cases break the warm invariant
-//! and force a cold fallback; see `set_var_bounds`.
+//! The dual simplex prices its leaving row by **dual steepest edge**
+//! (Forrest–Goldfarb reference weights, reset to 1 at every
+//! refactorisation): the row with the largest `δ²/γ_r` leaves, where `γ_r`
+//! approximates `‖B⁻ᵀe_r‖²` — far fewer pivots than the most-infeasible
+//! (Dantzig) rule on planner-shaped walks. See `milp/README.md` for the
+//! scheme, the weight update, and the numerical argument.
+//!
+//! The algorithm is a line-for-line transcription of
+//! `python/solver_harness/factor_simplex.py`, which is validated against
+//! scipy `linprog` on randomized planner-shaped LPs — cold, warm bound
+//! walks, crash warm starts, and long warm chains. The previous dense
+//! eliminated-tableau arena survives as [`super::dense::DenseSimplex`] for
+//! A/B property tests and benchmarks.
 
+use super::factor::LuFactors;
 use super::simplex::{Cmp, Lp};
 use crate::telemetry;
 
-pub(crate) const EPS: f64 = 1e-9;
-pub(crate) const PIVOT_EPS: f64 = 1e-7;
-/// Primal feasibility tolerance for the dual simplex leaving test.
-const FEAS_EPS: f64 = 1e-7;
+/// Treat tableau coefficients below this as zero.
+const ATOL: f64 = 1e-9;
+/// Dual feasibility tolerance on reduced costs.
+const DTOL: f64 = 1e-7;
+/// Primal feasibility tolerance on basic values.
+const FTOL: f64 = 1e-7;
+/// Near-tie window in ratio tests (prefer large pivot magnitudes).
+const RATIO_TIE: f64 = 1e-7;
+/// Dual steepest-edge weight floor.
+const GAMMA_FLOOR: f64 = 1e-10;
 
 /// Outcome of a simplex run on the arena.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,16 +68,17 @@ pub enum SolveOutcome {
 /// ([`BoundedSimplex::snapshot`]) and crashed into another arena over a
 /// *structurally identical* problem ([`BoundedSimplex::solve_warm_from`])
 /// whose coefficients moved — the next bisection iterate's T̂, the next
-/// replan epoch's demands/prices. The snapshot carries no tableau numbers,
-/// only combinatorial state, so it stays valid across coefficient changes;
-/// the dimensions pin the structure and a mismatch refuses the import.
+/// replan epoch's demands/prices. The snapshot carries no factorization
+/// numbers, only combinatorial state, so it stays valid across coefficient
+/// changes; the dimensions pin the structure and a mismatch refuses the
+/// import.
 #[derive(Clone, Debug)]
 pub struct BasisSnapshot {
-    n: usize,
-    m: usize,
-    total: usize,
-    basis: Vec<usize>,
-    flipped: Vec<bool>,
+    pub(crate) n: usize,
+    pub(crate) m: usize,
+    pub(crate) total: usize,
+    pub(crate) basis: Vec<usize>,
+    pub(crate) flipped: Vec<bool>,
 }
 
 impl BasisSnapshot {
@@ -71,77 +93,157 @@ impl BasisSnapshot {
     }
 }
 
-/// The tableau arena: built once per problem, re-solved many times under
+/// Resting value of a nonbasic column: its active bound, preferring the
+/// flagged side when finite, else the other finite side, else 0 (free).
+#[inline]
+fn rest_val(lo: f64, hi: f64, at_upper: bool) -> f64 {
+    if at_upper {
+        if hi.is_finite() {
+            hi
+        } else if lo.is_finite() {
+            lo
+        } else {
+            0.0
+        }
+    } else if lo.is_finite() {
+        lo
+    } else if hi.is_finite() {
+        hi
+    } else {
+        0.0
+    }
+}
+
+/// Ratio-test comparison: (strictly better, within the near-tie window).
+/// `best == ∞` counts as strictly beaten by any finite value — the
+/// subtraction form would produce NaN there and silently break the
+/// first-candidate acceptance under Bland's rule.
+#[inline]
+fn beats(val: f64, best: f64) -> (bool, bool) {
+    if !best.is_finite() {
+        return (val.is_finite(), false);
+    }
+    let win = RATIO_TIE * (1.0 + best.abs());
+    let better = val < best - win;
+    (better, !better && val <= best + win)
+}
+
+/// The factorized arena: built once per problem, re-solved many times under
 /// changing variable bounds.
 pub struct BoundedSimplex {
-    /// The problem (cloned once at construction — never per node).
-    lp: Lp,
     n: usize,
     m: usize,
-    /// Columns: [structural 0..n) [slacks) [artificials art_base..total).
+    /// Columns: [structural 0..n) [logicals n..n+m).
     total: usize,
-    cols: usize, // total + 1 (RHS)
-    art_base: usize,
-    art_used_end: usize,
-    num_art: usize,
+    /// Column-major `m × total` constraint matrix (logicals included).
     a: Vec<f64>,
+    b: Vec<f64>,
+    /// Objective over all columns (zero on logicals).
+    c: Vec<f64>,
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+    /// `basis[i]` = column basic in position `i`.
     basis: Vec<usize>,
-    /// Shifted-space bounds per column: lo is always 0, `hi` is the range.
-    range: Vec<f64>,
-    flipped: Vec<bool>,
-    /// Active *original* structural bounds (branching mutates these).
-    var_lo: Vec<f64>,
-    var_hi: Vec<f64>,
-    scratch: Vec<f64>,
+    /// `pos[j]` = basis position of column `j`, `usize::MAX` if nonbasic.
+    pos: Vec<usize>,
+    /// Nonbasic resting side (also the leaving side of basics).
+    at_upper: Vec<bool>,
+    /// Basic values, in basis-position order.
+    xb: Vec<f64>,
+    xb_dirty: bool,
+    factors: LuFactors,
+    need_factor: bool,
+    /// Dual steepest-edge weights γ_i ≈ ‖B⁻ᵀe_i‖², reset at refactorisation.
+    gamma: Vec<f64>,
+    /// Cached duals `y = B⁻ᵀ c_B` at the last phase-2 pricing — bounds do
+    /// not enter the reduced costs, so `set_var_bounds` prices with it.
+    y: Vec<f64>,
+    dual_ok: bool,
+    // Scratch (allocated once; the pivot loops are allocation-free).
+    d: Vec<f64>,
+    w: Vec<f64>,
+    row: Vec<f64>,
+    alpha: Vec<f64>,
+    rho: Vec<f64>,
+    tau: Vec<f64>,
+    cb: Vec<f64>,
+    tmp: Vec<f64>,
+    bmat: Vec<f64>,
+    // Stats.
     pivots: u64,
-    /// Bound flips (nonbasic column complements) — plain field, mirrored
-    /// into the telemetry registry at solve granularity.
     flips: u64,
-    /// Cold tableau refactorisations ([`rebuild`](Self::rebuild) calls).
-    rebuilds: u64,
-    /// Pivot counter at the last cold rebuild — the eliminated tableau
-    /// accumulates FP error with every pivot, so warm chains refactorise
-    /// periodically (see [`refresh_due`](Self::refresh_due)).
-    pivots_at_rebuild: u64,
-    /// True while the current basis is known dual feasible (d_j ≥ 0 for
-    /// every column) — the precondition for `resolve_dual`.
-    dual_ready: bool,
+    refactors: u64,
+    eta_updates: u64,
+    dse_pivots: u64,
 }
 
 impl BoundedSimplex {
-    /// Clone the problem into a fresh arena. Bounds start at the problem's
+    /// Build a fresh arena from the problem. Bounds start at the problem's
     /// own `lower`/`upper`.
     pub fn new(lp: &Lp) -> Self {
         let n = lp.num_vars;
         let m = lp.constraints.len();
-        let num_slack = lp.constraints.iter().filter(|c| c.cmp != Cmp::Eq).count();
-        let art_base = n + num_slack;
-        let total = art_base + m; // worst case: one artificial per row
-        let cols = total + 1;
-        let var_lo = lp.lower.clone();
-        let var_hi = lp.upper.clone();
-        debug_assert!(var_lo.iter().all(|l| l.is_finite()), "finite lower bounds required");
+        let total = n + m;
+        let mut a = vec![0.0; m * total];
+        let mut b = vec![0.0; m];
+        let mut c = vec![0.0; total];
+        c[..n].copy_from_slice(&lp.objective);
+        let mut lo = vec![0.0; total];
+        let mut hi = vec![0.0; total];
+        lo[..n].copy_from_slice(&lp.lower);
+        hi[..n].copy_from_slice(&lp.upper);
+        debug_assert!(lp.lower.iter().all(|l| l.is_finite()), "finite lower bounds required");
+        for (i, row) in lp.constraints.iter().enumerate() {
+            for &(j, coef) in &row.terms {
+                a[j * m + i] += coef;
+            }
+            a[(n + i) * m + i] = 1.0;
+            b[i] = row.rhs;
+            let (slo, shi) = match row.cmp {
+                Cmp::Le => (0.0, f64::INFINITY),
+                Cmp::Ge => (f64::NEG_INFINITY, 0.0),
+                Cmp::Eq => (0.0, 0.0),
+            };
+            lo[n + i] = slo;
+            hi[n + i] = shi;
+        }
+        let mut pos = vec![usize::MAX; total];
+        for (i, p) in pos[n..].iter_mut().enumerate() {
+            *p = i;
+        }
         BoundedSimplex {
-            lp: lp.clone(),
             n,
             m,
             total,
-            cols,
-            art_base,
-            art_used_end: art_base,
-            num_art: 0,
-            a: vec![0.0; (m + 1) * cols],
-            basis: vec![usize::MAX; m],
-            range: vec![f64::INFINITY; total],
-            flipped: vec![false; total],
-            var_lo,
-            var_hi,
-            scratch: vec![0.0; cols],
+            a,
+            b,
+            c,
+            lo,
+            hi,
+            basis: (n..total).collect(),
+            pos,
+            at_upper: vec![false; total],
+            xb: vec![0.0; m],
+            xb_dirty: true,
+            factors: LuFactors::new(m),
+            need_factor: true,
+            gamma: vec![1.0; m],
+            y: vec![0.0; m],
+            dual_ok: false,
+            d: vec![0.0; total],
+            w: vec![0.0; total],
+            row: vec![0.0; total],
+            alpha: vec![0.0; m],
+            rho: vec![0.0; m],
+            tau: vec![0.0; m],
+            cb: vec![0.0; m],
+            tmp: vec![0.0; m],
+            bmat: vec![0.0; m * m],
             pivots: 0,
             flips: 0,
-            rebuilds: 0,
-            pivots_at_rebuild: 0,
-            dual_ready: false,
+            refactors: 0,
+            eta_updates: 0,
+            dse_pivots: 0,
         }
     }
 
@@ -150,513 +252,757 @@ impl BoundedSimplex {
         self.pivots
     }
 
-    /// Total bound flips (nonbasic column complements) so far.
+    /// Total bound flips (nonbasic columns switching resting side) so far.
     pub fn bound_flips(&self) -> u64 {
         self.flips
     }
 
-    /// Total cold tableau refactorisations so far.
+    /// Total basis refactorisations so far (kept under the dense arena's
+    /// historical name; alias of [`refactorisations`](Self::refactorisations)).
     pub fn rebuilds(&self) -> u64 {
-        self.rebuilds
+        self.refactors
     }
 
-    /// True when enough pivots have accumulated on the eliminated tableau
-    /// that the next solve should refactorise cold: the per-pivot FP error
-    /// compounds across a warm chain, and ~20 pivots per row is where it
-    /// starts to bite on planner-sized instances.
+    /// Total LU refactorisations of the basis so far.
+    pub fn refactorisations(&self) -> u64 {
+        self.refactors
+    }
+
+    /// Total product-form eta updates (factorized pivots) so far.
+    pub fn eta_updates(&self) -> u64 {
+        self.eta_updates
+    }
+
+    /// Dual simplex pivots chosen by steepest-edge pricing so far.
+    pub fn dse_pivots(&self) -> u64 {
+        self.dse_pivots
+    }
+
+    /// Always `false`: the factorized core refactorises *internally* every
+    /// [`eta_limit`](Self::eta_limit) pivots, so warm chains no longer need
+    /// a caller-driven periodic cold refresh the way the dense eliminated
+    /// tableau did.
     pub fn refresh_due(&self) -> bool {
-        self.pivots - self.pivots_at_rebuild > 20 * (self.m as u64 + 1)
+        false
     }
 
     /// Whether the incumbent basis can warm-start a dual re-solve.
     pub fn dual_ready(&self) -> bool {
-        self.dual_ready
+        self.dual_ok
     }
 
-    /// The active original bounds of structural variable `v`.
+    /// The active bounds of structural variable `v`.
     pub fn var_bounds(&self, v: usize) -> (f64, f64) {
-        (self.var_lo[v], self.var_hi[v])
+        (self.lo[v], self.hi[v])
     }
 
-    /// O(1) artificial predicate: artificials occupy a contiguous column
-    /// range, so membership is an index comparison, not a list scan.
-    #[inline]
-    fn is_artificial(&self, j: usize) -> bool {
-        j >= self.art_base
+    /// Eta-file length that triggers an internal refactorisation: long
+    /// enough to amortise the O(m³) rebuild, short enough to bound both the
+    /// per-FTRAN eta cost and the accumulated floating-point drift.
+    pub fn eta_limit(&self) -> usize {
+        (2 * self.m).max(20)
     }
 
-    #[inline]
-    fn at(&self, r: usize, c: usize) -> f64 {
-        self.a[r * self.cols + c]
-    }
-    #[inline]
-    fn set(&mut self, r: usize, c: usize, v: f64) {
-        self.a[r * self.cols + c] = v;
+    fn max_iters(&self) -> usize {
+        50 * (self.m + self.total).max(100)
     }
 
-    // ---- tableau primitives ---------------------------------------------
+    // ---- factorization ---------------------------------------------------
 
-    /// Pivot on (pr, pc): normalise the pivot row and eliminate the column
-    /// everywhere else, objective row included. The hot loop — scaled row
-    /// copy + per-row branchless axpy so LLVM vectorizes it.
-    fn pivot(&mut self, pr: usize, pc: usize) {
-        let cols = self.cols;
-        let pivot = self.at(pr, pc);
-        debug_assert!(pivot.abs() > EPS);
-        let inv = 1.0 / pivot;
-        let row_start = pr * cols;
-        for (dst, src) in self.scratch.iter_mut().zip(&self.a[row_start..row_start + cols]) {
-            *dst = *src * inv;
-        }
-        self.a[row_start..row_start + cols].copy_from_slice(&self.scratch);
-        for r in 0..=self.m {
-            if r == pr {
-                continue;
+    /// (Re)factorize `B = A[:, basis]`. A dependent basis column (a snapshot
+    /// crashed across coefficient drift can hand us one) is repaired by
+    /// substituting the logical of an unpivoted row; each repair either
+    /// succeeds at a strictly later elimination step on the next attempt or
+    /// runs out of candidates, so the loop terminates within `m` retries.
+    /// The unconditional fallback resets to the all-logical basis, which is
+    /// triangular and always factorizes.
+    fn refactorize(&mut self) {
+        let m = self.m;
+        for _attempt in 0..=m {
+            for (i, &j) in self.basis.iter().enumerate() {
+                self.bmat[i * m..(i + 1) * m].copy_from_slice(&self.a[j * m..(j + 1) * m]);
             }
-            let factor = self.at(r, pc);
-            if factor.abs() <= EPS {
-                if factor != 0.0 {
-                    self.set(r, pc, 0.0);
+            match self.factors.factorize(&self.bmat) {
+                Ok(()) => {
+                    self.gamma.fill(1.0);
+                    self.refactors += 1;
+                    self.need_factor = false;
+                    return;
                 }
-                continue;
-            }
-            let dst = &mut self.a[r * cols..r * cols + cols];
-            for (d, s) in dst.iter_mut().zip(&self.scratch) {
-                *d -= factor * *s;
-            }
-            dst[pc] = 0.0;
-        }
-        self.basis[pr] = pc;
-        self.pivots += 1;
-    }
-
-    /// Complement a NONBASIC column: it now rests at the opposite bound.
-    /// O(m); requires a finite range.
-    fn flip_column(&mut self, j: usize) {
-        let rng = self.range[j];
-        debug_assert!(rng.is_finite());
-        let rhs = self.total;
-        for r in 0..=self.m {
-            let v = self.at(r, rhs) - self.at(r, j) * rng;
-            self.set(r, rhs, v);
-            let neg = -self.at(r, j);
-            self.set(r, j, neg);
-        }
-        self.flipped[j] = !self.flipped[j];
-        self.flips += 1;
-    }
-
-    /// Complement the BASIC variable of row `r` (its own column stays the
-    /// unit vector; reduced costs are unchanged).
-    fn complement_basic(&mut self, r: usize) {
-        let b = self.basis[r];
-        let rng = self.range[b];
-        debug_assert!(rng.is_finite());
-        for j in 0..self.cols {
-            if j != b {
-                let neg = -self.at(r, j);
-                self.set(r, j, neg);
-            }
-        }
-        let v = rng + self.at(r, self.total); // rng − old_rhs, post-negation
-        self.set(r, self.total, v);
-        self.flipped[b] = !self.flipped[b];
-    }
-
-    fn basic_row_of(&self, v: usize) -> Option<usize> {
-        self.basis.iter().position(|&b| b == v)
-    }
-
-    // ---- bound updates ---------------------------------------------------
-
-    /// Replace the bounds of structural variable `v`, keeping the tableau
-    /// consistent: only the RHS column shifts (O(m)). The basis stays dual
-    /// feasible except in two documented cases, which clear `dual_ready`
-    /// and force the next solve to run cold:
-    ///
-    /// 1. a column resting at a *finite* upper bound must un-flip when the
-    ///    new upper bound is infinite; un-flipping negates its reduced
-    ///    cost, which may go negative;
-    /// 2. widening a *fixed* (zero-range) column: while fixed it was
-    ///    excluded from the ratio tests, so its reduced cost may have
-    ///    drifted negative — complementing is free at range zero and
-    ///    restores d ≥ 0, except when it is ruled out by case 1.
-    pub fn set_var_bounds(&mut self, v: usize, new_lo: f64, new_hi: f64) {
-        debug_assert!(v < self.n && new_lo.is_finite() && new_lo <= new_hi + EPS);
-        // Case 2: repair a widened fixed column's reduced cost by a free
-        // complement (range is zero, so the RHS does not move).
-        if self.range[v] <= EPS
-            && new_hi - new_lo > EPS
-            && self.at(self.m, v) < -EPS
-            && self.basic_row_of(v).is_none()
-        {
-            self.flip_column(v);
-        }
-        // Case 1: un-flip before the reference bound becomes infinite.
-        if self.flipped[v] && !new_hi.is_finite() {
-            match self.basic_row_of(v) {
-                Some(r) => self.complement_basic(r), // reduced costs intact
-                None => {
-                    self.flip_column(v);
-                    if self.at(self.m, v) < -EPS {
-                        self.dual_ready = false;
+                Err(k) => {
+                    if !self.repair_singular(k) {
+                        self.reset_logical_basis();
                     }
                 }
             }
         }
-        // Shift the reference bound: x̃ = x̃' + σ·(ref' − ref), so every
-        // row's RHS moves by −a_rv·σ·δ.
-        let sigma = if self.flipped[v] { -1.0 } else { 1.0 };
-        let ref_old = if self.flipped[v] { self.var_hi[v] } else { self.var_lo[v] };
-        let ref_new = if self.flipped[v] { new_hi } else { new_lo };
-        let delta = ref_new - ref_old;
-        if delta != 0.0 {
-            let rhs = self.total;
-            for r in 0..=self.m {
-                let val = self.at(r, rhs) - self.at(r, v) * sigma * delta;
-                self.set(r, rhs, val);
-            }
-        }
-        self.var_lo[v] = new_lo;
-        self.var_hi[v] = new_hi;
-        self.range[v] = new_hi - new_lo;
+        // The logical-basis fallback is triangular; reaching here would mean
+        // it failed to factorize, which cannot happen for finite input.
+        unreachable!("logical basis failed to factorize");
     }
 
-    // ---- cold build ------------------------------------------------------
+    /// Basis position `k` is linearly dependent on positions `0..k`: swap in
+    /// the logical of a not-yet-pivoted row whose logical is nonbasic. The
+    /// ejected variable is parked at a finite bound.
+    fn repair_singular(&mut self, k: usize) -> bool {
+        let mut lg = usize::MAX;
+        for &r in self.factors.unpivoted_rows(k) {
+            if self.pos[self.n + r] == usize::MAX {
+                lg = self.n + r;
+                break;
+            }
+        }
+        if lg == usize::MAX {
+            return false;
+        }
+        let old = self.basis[k];
+        self.pos[old] = usize::MAX;
+        if self.lo[old].is_finite() {
+            self.at_upper[old] = false;
+        } else if self.hi[old].is_finite() {
+            self.at_upper[old] = true;
+        }
+        self.basis[k] = lg;
+        self.pos[lg] = k;
+        self.xb_dirty = true;
+        self.dual_ok = false;
+        true
+    }
 
-    /// Rebuild the tableau from the problem at the *current* structural
-    /// bounds: shift every variable to rest at its lower bound, add one
-    /// slack per inequality, normalise rows to nonnegative RHS, and seed
-    /// the basis with slacks where possible, artificials elsewhere.
-    fn rebuild(&mut self) {
-        self.a.fill(0.0);
-        self.basis.fill(usize::MAX);
-        self.flipped.fill(false);
+    /// Hard reset to the all-logical (triangular) basis with every
+    /// structural parked at a finite bound.
+    fn reset_logical_basis(&mut self) {
+        self.pos.fill(usize::MAX);
+        for (i, bj) in self.basis.iter_mut().enumerate() {
+            *bj = self.n + i;
+            self.pos[self.n + i] = i;
+        }
         for j in 0..self.n {
-            self.range[j] = self.var_hi[j] - self.var_lo[j];
+            self.at_upper[j] = !self.lo[j].is_finite() && self.hi[j].is_finite();
         }
-        for j in self.n..self.total {
-            self.range[j] = f64::INFINITY;
+        for i in 0..self.m {
+            self.at_upper[self.n + i] = !self.lo[self.n + i].is_finite();
         }
-        let mut slack = self.n;
-        let mut art = self.art_base;
-        let rhs_col = self.total;
-        let rows = std::mem::take(&mut self.lp.constraints);
-        for (r, c) in rows.iter().enumerate() {
-            let mut b = c.rhs;
-            for &(i, coef) in &c.terms {
-                let cur = self.at(r, i);
-                self.set(r, i, cur + coef);
-                b -= coef * self.var_lo[i];
-            }
-            let sc = if c.cmp != Cmp::Eq {
-                let col = slack;
-                slack += 1;
-                self.set(r, col, if c.cmp == Cmp::Le { 1.0 } else { -1.0 });
-                Some(col)
-            } else {
-                None
-            };
-            if b < 0.0 {
-                for j in 0..self.total {
-                    let neg = -self.at(r, j);
-                    self.set(r, j, neg);
-                }
-                b = -b;
-            }
-            self.set(r, rhs_col, b);
-            match sc {
-                Some(col) if self.at(r, col) > 0.5 => self.basis[r] = col,
-                _ => {
-                    self.set(r, art, 1.0);
-                    self.basis[r] = art;
-                    art += 1;
-                }
-            }
-        }
-        self.lp.constraints = rows;
-        self.num_art = art - self.art_base;
-        self.art_used_end = art;
-        self.pivots_at_rebuild = self.pivots;
-        self.rebuilds += 1;
-        // Unused artificial slots can never enter.
-        for j in art..self.total {
-            self.range[j] = 0.0;
-        }
-        self.dual_ready = false;
+        self.dual_ok = false;
+        self.xb_dirty = true;
     }
 
-    /// Two-phase bounded primal simplex from a fresh tableau at the
-    /// current bounds.
+    /// Copy column `q` of `A` into the `alpha` scratch and FTRAN it.
+    fn ftran_col(&mut self, q: usize) {
+        let m = self.m;
+        self.alpha.copy_from_slice(&self.a[q * m..(q + 1) * m]);
+        self.factors.ftran(&mut self.alpha, &mut self.tmp);
+    }
+
+    /// Recompute the basic values from scratch through the factorization:
+    /// `x_B = B⁻¹(b − Σ_nonbasic a_j·rest_j)`. Called at solve entry and
+    /// after every refactorisation — this is what erases drift.
+    fn compute_xb(&mut self) {
+        let m = self.m;
+        self.xb.copy_from_slice(&self.b);
+        for j in 0..self.total {
+            if self.pos[j] == usize::MAX {
+                let v = rest_val(self.lo[j], self.hi[j], self.at_upper[j]);
+                if v != 0.0 {
+                    let col = &self.a[j * m..(j + 1) * m];
+                    for (x, aij) in self.xb.iter_mut().zip(col) {
+                        *x -= aij * v;
+                    }
+                }
+            }
+        }
+        self.factors.ftran(&mut self.xb, &mut self.tmp);
+        self.xb_dirty = false;
+    }
+
+    /// Full pricing: `y = B⁻ᵀ c_B`, `d = c − yᵀA` into the `d` scratch.
+    /// With `phase1` the infeasibility costs in `w` replace `c`. The
+    /// phase-2 duals are cached in `y` for `set_var_bounds`.
+    fn price(&mut self, phase1: bool) {
+        let m = self.m;
+        for (i, &j) in self.basis.iter().enumerate() {
+            self.cb[i] = if phase1 { self.w[j] } else { self.c[j] };
+        }
+        self.factors.btran(&mut self.cb, &mut self.tmp);
+        if !phase1 {
+            self.y.copy_from_slice(&self.cb);
+        }
+        for j in 0..self.total {
+            let col = &self.a[j * m..(j + 1) * m];
+            let mut dot = 0.0;
+            for (yi, aij) in self.cb.iter().zip(col) {
+                dot += yi * aij;
+            }
+            self.d[j] = if phase1 { self.w[j] } else { self.c[j] } - dot;
+        }
+    }
+
+    /// Execute the basis change "column `q` replaces position `r`" whose
+    /// FTRAN image is already in `alpha`: update `pos`/`basis`, append the
+    /// eta, and refactorize (+ recompute `x_B`) once the eta file is full.
+    fn push_pivot(&mut self, r: usize, q: usize) {
+        let leaving = self.basis[r];
+        self.pos[leaving] = usize::MAX;
+        self.basis[r] = q;
+        self.pos[q] = r;
+        self.factors.push_eta(r, self.alpha.clone());
+        self.eta_updates += 1;
+        self.pivots += 1;
+        if self.factors.eta_count() >= self.eta_limit() {
+            self.refactorize();
+            self.compute_xb();
+        }
+    }
+
+    fn primal_feasible(&self) -> bool {
+        self.basis
+            .iter()
+            .zip(&self.xb)
+            .all(|(&j, &v)| v >= self.lo[j] - FTOL && v <= self.hi[j] + FTOL)
+    }
+
+    fn dual_feasible(&mut self) -> bool {
+        self.price(false);
+        for j in 0..self.total {
+            if self.pos[j] != usize::MAX || self.lo[j] == self.hi[j] {
+                continue;
+            }
+            let dj = self.d[j];
+            if self.at_upper[j] && self.hi[j].is_finite() {
+                if dj > DTOL {
+                    return false;
+                }
+            } else if self.lo[j].is_finite() && !self.at_upper[j] {
+                if dj < -DTOL {
+                    return false;
+                }
+            } else if dj.abs() > DTOL {
+                // free column resting at 0
+                return false;
+            }
+        }
+        true
+    }
+
+    // ---- primal phase 2 --------------------------------------------------
+
+    /// Bounded-variable primal simplex on the true objective: Dantzig
+    /// pricing with a Bland fallback past half the iteration cap.
+    fn primal2(&mut self) -> SolveOutcome {
+        let cap = self.max_iters();
+        let mut it = 0usize;
+        loop {
+            it += 1;
+            if it > cap {
+                return SolveOutcome::Stalled;
+            }
+            let bland = it > cap / 2;
+            self.price(false);
+            let mut q = usize::MAX;
+            let mut sigma = 0.0;
+            let mut score = DTOL;
+            for j in 0..self.total {
+                if self.pos[j] != usize::MAX || self.lo[j] == self.hi[j] {
+                    continue;
+                }
+                let up = self.at_upper[j] && self.hi[j].is_finite();
+                let (s, sg) = if !up && self.d[j] < -DTOL {
+                    (-self.d[j], 1.0)
+                } else if (up || !self.lo[j].is_finite()) && self.d[j] > DTOL {
+                    (self.d[j], -1.0)
+                } else {
+                    continue;
+                };
+                if bland {
+                    q = j;
+                    sigma = sg;
+                    break;
+                }
+                if s > score {
+                    q = j;
+                    sigma = sg;
+                    score = s;
+                }
+            }
+            if q == usize::MAX {
+                return SolveOutcome::Optimal;
+            }
+            self.ftran_col(q);
+            if let Some(out) = self.primal_step(q, sigma, bland) {
+                return out;
+            }
+        }
+    }
+
+    /// Bounded ratio test + pivot/flip for entering `q` moving `sigma·t`:
+    /// a basic may leave at its lower *or* upper bound, and the entering
+    /// column's own range competes (a bound flip, no pivot). Near-tied
+    /// blocks prefer the largest |α| — pivoting on a tiny element amplifies
+    /// error by 1/|α|.
+    fn primal_step(&mut self, q: usize, sigma: f64, bland: bool) -> Option<SolveOutcome> {
+        let rng = self.hi[q] - self.lo[q];
+        let mut t_best = if rng.is_finite() { rng } else { f64::INFINITY };
+        let mut block = usize::MAX;
+        let mut leave_up = false;
+        let mut mag = 0.0;
+        for i in 0..self.m {
+            let step = sigma * self.alpha[i];
+            if step.abs() <= ATOL {
+                continue;
+            }
+            let j = self.basis[i];
+            let (t, lu) = if step > 0.0 {
+                // basic value decreases toward its lower bound
+                if !self.lo[j].is_finite() {
+                    continue;
+                }
+                (((self.xb[i] - self.lo[j]) / step).max(0.0), false)
+            } else {
+                // increases toward its upper bound
+                if !self.hi[j].is_finite() {
+                    continue;
+                }
+                (((self.hi[j] - self.xb[i]) / (-step)).max(0.0), true)
+            };
+            let (better, tied) = beats(t, t_best);
+            if better || (tied && !bland && self.alpha[i].abs() > mag) {
+                t_best = if tied { t.min(t_best) } else { t };
+                block = i;
+                leave_up = lu;
+                mag = self.alpha[i].abs();
+            }
+        }
+        if t_best.is_infinite() {
+            return Some(SolveOutcome::Unbounded);
+        }
+        for (x, av) in self.xb.iter_mut().zip(&self.alpha) {
+            *x -= sigma * av * t_best;
+        }
+        if block == usize::MAX {
+            // bound flip: the entering column crosses its whole range
+            self.at_upper[q] = !self.at_upper[q];
+            self.flips += 1;
+            return None;
+        }
+        let newval = rest_val(self.lo[q], self.hi[q], self.at_upper[q]) + sigma * t_best;
+        self.at_upper[self.basis[block]] = leave_up;
+        self.xb[block] = newval;
+        self.push_pivot(block, q);
+        None
+    }
+
+    // ---- dual simplex with steepest-edge pricing -------------------------
+
+    /// Dual simplex from a dual-feasible basis. The leaving row maximises
+    /// `δ²/γ_r` (dual steepest edge, Forrest–Goldfarb weights); the bounded
+    /// dual ratio test picks the entering column, near-ties resolved toward
+    /// the largest pivot magnitude. Maintains dual feasibility throughout,
+    /// so `Infeasible` is a proof, not a guess.
+    fn dual_loop(&mut self) -> SolveOutcome {
+        let cap = self.max_iters();
+        let mut it = 0usize;
+        loop {
+            it += 1;
+            if it > cap {
+                return SolveOutcome::Stalled;
+            }
+            let bland = it > cap / 2;
+            // Leaving: steepest-edge score over infeasible basics.
+            let mut r = usize::MAX;
+            let mut score = 0.0;
+            for i in 0..self.m {
+                let j = self.basis[i];
+                let delta = if self.xb[i] < self.lo[j] - FTOL {
+                    self.lo[j] - self.xb[i]
+                } else if self.xb[i] > self.hi[j] + FTOL {
+                    self.xb[i] - self.hi[j]
+                } else {
+                    continue;
+                };
+                let s = delta * delta / self.gamma[i];
+                if bland {
+                    r = i;
+                    break;
+                }
+                if s > score {
+                    r = i;
+                    score = s;
+                }
+            }
+            if r == usize::MAX {
+                return SolveOutcome::Optimal;
+            }
+            let j_leave = self.basis[r];
+            let below = self.xb[r] < self.lo[j_leave];
+            // ρ = B⁻ᵀ e_r; the pivot row is ρᵀA.
+            self.rho.fill(0.0);
+            self.rho[r] = 1.0;
+            self.factors.btran(&mut self.rho, &mut self.tmp);
+            self.price(false);
+            let m = self.m;
+            for j in 0..self.total {
+                let col = &self.a[j * m..(j + 1) * m];
+                let mut dot = 0.0;
+                for (ri, aij) in self.rho.iter().zip(col) {
+                    dot += ri * aij;
+                }
+                self.row[j] = dot;
+            }
+            // Entering: bounded dual ratio test.
+            let mut q = usize::MAX;
+            let mut best = f64::INFINITY;
+            let mut mag = 0.0;
+            for j in 0..self.total {
+                if self.pos[j] != usize::MAX || self.lo[j] == self.hi[j] {
+                    continue;
+                }
+                let arj = self.row[j];
+                if arj.abs() <= ATOL {
+                    continue;
+                }
+                let up = self.at_upper[j] && self.hi[j].is_finite();
+                let ratio = if below {
+                    if !up && arj < -ATOL {
+                        self.d[j].max(0.0) / (-arj)
+                    } else if up && arj > ATOL {
+                        (-self.d[j]).max(0.0) / arj
+                    } else {
+                        continue;
+                    }
+                } else if !up && arj > ATOL {
+                    self.d[j].max(0.0) / arj
+                } else if up && arj < -ATOL {
+                    (-self.d[j]).max(0.0) / (-arj)
+                } else {
+                    continue;
+                };
+                let (better, tied) = beats(ratio, best);
+                if better || (tied && !bland && arj.abs() > mag) {
+                    best = if tied { ratio.min(best) } else { ratio };
+                    q = j;
+                    mag = arj.abs();
+                }
+            }
+            if q == usize::MAX {
+                // Dual unbounded on the violated row ⇒ primal infeasible.
+                return SolveOutcome::Infeasible;
+            }
+            self.ftran_col(q);
+            if self.alpha[r].abs() <= ATOL {
+                // A pivot this small is eta-file drift: refactorize and
+                // retry. With a fresh factorization it is a genuine stall.
+                if self.factors.eta_count() == 0 {
+                    return SolveOutcome::Stalled;
+                }
+                self.refactorize();
+                self.compute_xb();
+                continue;
+            }
+            let sigma = if self.at_upper[q] && self.hi[q].is_finite() { -1.0 } else { 1.0 };
+            let target = if below { self.lo[j_leave] } else { self.hi[j_leave] };
+            let t = ((target - self.xb[r]) / (-sigma * self.alpha[r])).max(0.0);
+            // Forrest–Goldfarb weight update before the basis change:
+            // τ = B⁻¹ρ, γ_i ← γ_i − 2(α_i/α_r)τ_i + (α_i/α_r)²γ_r.
+            self.tau.copy_from_slice(&self.rho);
+            self.factors.ftran(&mut self.tau, &mut self.tmp);
+            let gr = self.gamma[r];
+            let ar = self.alpha[r];
+            for i in 0..m {
+                if i == r {
+                    continue;
+                }
+                let wi = self.alpha[i] / ar;
+                self.gamma[i] =
+                    (self.gamma[i] - 2.0 * wi * self.tau[i] + wi * wi * gr).max(GAMMA_FLOOR);
+            }
+            self.gamma[r] = (gr / (ar * ar)).max(GAMMA_FLOOR);
+            for (x, av) in self.xb.iter_mut().zip(&self.alpha) {
+                *x -= sigma * av * t;
+            }
+            let newval = rest_val(self.lo[q], self.hi[q], self.at_upper[q]) + sigma * t;
+            self.at_upper[j_leave] = !below;
+            self.xb[r] = newval;
+            self.push_pivot(r, q);
+            self.dse_pivots += 1;
+        }
+    }
+
+    // ---- composite phase 1 -----------------------------------------------
+
+    /// Composite phase 1: minimise the sum of bound infeasibilities of the
+    /// basics with per-iteration costs `w ∈ {−1, 0, +1}` and a short-step
+    /// ratio test (stop at the *first* bound crossing, so a previously
+    /// infeasible basic never overshoots the far bound).
+    fn phase1(&mut self) -> SolveOutcome {
+        let cap = self.max_iters();
+        let mut it = 0usize;
+        loop {
+            it += 1;
+            if it > cap {
+                return SolveOutcome::Stalled;
+            }
+            let bland = it > cap / 2;
+            self.w.fill(0.0);
+            let mut infeas = 0.0;
+            for (i, &j) in self.basis.iter().enumerate() {
+                if self.xb[i] < self.lo[j] - FTOL {
+                    self.w[j] = -1.0;
+                    infeas += self.lo[j] - self.xb[i];
+                } else if self.xb[i] > self.hi[j] + FTOL {
+                    self.w[j] = 1.0;
+                    infeas += self.xb[i] - self.hi[j];
+                }
+            }
+            if infeas <= FTOL {
+                return SolveOutcome::Optimal;
+            }
+            self.price(true);
+            let mut q = usize::MAX;
+            let mut sigma = 0.0;
+            let mut score = DTOL;
+            for j in 0..self.total {
+                if self.pos[j] != usize::MAX || self.lo[j] == self.hi[j] {
+                    continue;
+                }
+                let up = self.at_upper[j] && self.hi[j].is_finite();
+                let (s, sg) = if !up && self.d[j] < -DTOL {
+                    (-self.d[j], 1.0)
+                } else if (up || !self.lo[j].is_finite()) && self.d[j] > DTOL {
+                    (self.d[j], -1.0)
+                } else {
+                    continue;
+                };
+                if bland {
+                    q = j;
+                    sigma = sg;
+                    break;
+                }
+                if s > score {
+                    q = j;
+                    sigma = sg;
+                    score = s;
+                }
+            }
+            if q == usize::MAX {
+                return SolveOutcome::Infeasible;
+            }
+            self.ftran_col(q);
+            if let Some(out) = self.phase1_step(q, sigma, bland) {
+                return out;
+            }
+        }
+    }
+
+    /// Short-step ratio test: an infeasible basic blocks at its violated
+    /// bound, a feasible basic at its far bound; the entering range flip
+    /// competes as in phase 2.
+    fn phase1_step(&mut self, q: usize, sigma: f64, bland: bool) -> Option<SolveOutcome> {
+        let rng = self.hi[q] - self.lo[q];
+        let mut t_best = if rng.is_finite() { rng } else { f64::INFINITY };
+        let mut block = usize::MAX;
+        let mut leave_up = false;
+        let mut mag = 0.0;
+        for i in 0..self.m {
+            let step = sigma * self.alpha[i];
+            if step.abs() <= ATOL {
+                continue;
+            }
+            let j = self.basis[i];
+            let v = self.xb[i];
+            let (t, lu) = if step > 0.0 {
+                // basic decreases
+                if v > self.hi[j] + FTOL {
+                    ((v - self.hi[j]) / step, true)
+                } else if v >= self.lo[j] - FTOL && self.lo[j].is_finite() {
+                    ((v - self.lo[j]) / step, false)
+                } else {
+                    continue;
+                }
+            } else {
+                // basic increases
+                if v < self.lo[j] - FTOL {
+                    ((self.lo[j] - v) / (-step), false)
+                } else if v <= self.hi[j] + FTOL && self.hi[j].is_finite() {
+                    ((self.hi[j] - v) / (-step), true)
+                } else {
+                    continue;
+                }
+            };
+            let t = t.max(0.0);
+            let (better, tied) = beats(t, t_best);
+            if better || (tied && !bland && self.alpha[i].abs() > mag) {
+                t_best = if tied { t.min(t_best) } else { t };
+                block = i;
+                leave_up = lu;
+                mag = self.alpha[i].abs();
+            }
+        }
+        if t_best.is_infinite() {
+            return Some(SolveOutcome::Stalled);
+        }
+        for (x, av) in self.xb.iter_mut().zip(&self.alpha) {
+            *x -= sigma * av * t_best;
+        }
+        if block == usize::MAX {
+            self.at_upper[q] = !self.at_upper[q];
+            self.flips += 1;
+            return None;
+        }
+        let newval = rest_val(self.lo[q], self.hi[q], self.at_upper[q]) + sigma * t_best;
+        self.at_upper[self.basis[block]] = leave_up;
+        self.xb[block] = newval;
+        self.push_pivot(block, q);
+        None
+    }
+
+    // ---- solve entry points ----------------------------------------------
+
+    /// Classify the current factorized point and finish with the matching
+    /// method; primal phase 2 always runs last as the optimality safety
+    /// net. On `Optimal` the cached duals `y` are refreshed at the terminal
+    /// basis so `set_var_bounds` prices exactly.
+    fn finish(&mut self) -> SolveOutcome {
+        let out = if self.primal_feasible() {
+            self.primal2()
+        } else if self.dual_feasible() {
+            match self.dual_loop() {
+                SolveOutcome::Optimal => self.primal2(),
+                other => other,
+            }
+        } else {
+            match self.phase1() {
+                SolveOutcome::Optimal => self.primal2(),
+                other => other,
+            }
+        };
+        if out == SolveOutcome::Optimal {
+            self.dual_ok = true;
+            self.price(false);
+        }
+        out
+    }
+
+    /// Solve from the all-logical starting basis at the current bounds.
+    /// Structurals with a negative cost and a finite upper bound rest at
+    /// their upper bound, so pure-minimisation LPs often start dual
+    /// feasible and skip phase 1 entirely.
     pub fn solve_cold(&mut self) -> SolveOutcome {
         if !telemetry::enabled() {
             return self.solve_cold_inner();
         }
-        let (p0, f0, r0) = (self.pivots, self.flips, self.rebuilds);
+        let s0 = self.stat_marks();
         let out = self.solve_cold_inner();
         telemetry::count("milp.cold_solves", 1);
-        self.report_deltas(p0, f0, r0);
+        self.report_deltas(s0);
         out
-    }
-
-    /// Mirror per-solve counter deltas into the telemetry registry (called
-    /// once per solve, never inside the pivot loop).
-    fn report_deltas(&self, p0: u64, f0: u64, r0: u64) {
-        telemetry::count("milp.pivots", self.pivots - p0);
-        telemetry::count("milp.bound_flips", self.flips - f0);
-        telemetry::count("milp.refactorisations", self.rebuilds - r0);
     }
 
     fn solve_cold_inner(&mut self) -> SolveOutcome {
-        self.rebuild();
-        let max_iters = self.max_iters();
-        let m = self.m;
-        if self.num_art > 0 {
-            // Phase 1: minimise the artificial sum; start the objective row
-            // consistent with the artificial basis.
-            for j in self.art_base..self.art_used_end {
-                self.set(m, j, 1.0);
-            }
-            for r in 0..m {
-                if self.is_artificial(self.basis[r]) {
-                    for j in 0..self.cols {
-                        let v = self.at(m, j) - self.at(r, j);
-                        self.set(m, j, v);
-                    }
-                }
-            }
-            match self.run_primal(max_iters) {
-                SolveOutcome::Optimal => {}
-                SolveOutcome::Unbounded => return SolveOutcome::Infeasible, // phase 1 is bounded
-                out => return out,
-            }
-            let phase1 = -self.at(m, self.total);
-            if phase1 > 1e-6 {
-                return SolveOutcome::Infeasible;
-            }
-            // Drive degenerate basic artificials out, then freeze them all.
-            for r in 0..m {
-                if self.is_artificial(self.basis[r]) {
-                    for j in 0..self.art_base {
-                        if self.at(r, j).abs() > PIVOT_EPS {
-                            self.pivot(r, j);
-                            break;
-                        }
-                    }
-                }
-            }
-            for j in self.art_base..self.total {
-                self.range[j] = 0.0;
-            }
-            for j in 0..self.cols {
-                self.set(m, j, 0.0);
-            }
+        let n = self.n;
+        self.pos.fill(usize::MAX);
+        for (i, bj) in self.basis.iter_mut().enumerate() {
+            *bj = n + i;
+            self.pos[n + i] = i;
         }
-        // Phase 2: the original objective, sign-adjusted for columns phase 1
-        // left resting at their upper bound.
-        for j in 0..self.n {
-            let c = self.lp.objective[j];
-            self.set(m, j, if self.flipped[j] { -c } else { c });
+        for j in 0..n {
+            self.at_upper[j] = self.c[j] < 0.0 && self.hi[j].is_finite();
         }
-        for r in 0..m {
-            let b = self.basis[r];
-            let coef = self.at(m, b);
-            if coef.abs() > EPS {
-                for j in 0..self.cols {
-                    let v = self.at(m, j) - coef * self.at(r, j);
-                    self.set(m, j, v);
-                }
-            }
+        for i in 0..self.m {
+            self.at_upper[n + i] = !self.lo[n + i].is_finite();
         }
-        let out = self.run_primal(max_iters);
-        self.dual_ready = out == SolveOutcome::Optimal;
-        out
+        self.dual_ok = false;
+        self.refactorize();
+        self.compute_xb();
+        self.finish()
     }
-
-    fn max_iters(&self) -> usize {
-        50 * (self.m + self.n).max(100)
-    }
-
-    /// Primal simplex with the bounded-variable ratio test: a basic
-    /// variable may leave at its lower *or* upper bound, and the entering
-    /// variable's own range caps the step (a bound flip, no pivot).
-    fn run_primal(&mut self, max_iters: usize) -> SolveOutcome {
-        let m = self.m;
-        let total = self.total;
-        let bland_after = max_iters / 2;
-        for iter in 0..max_iters {
-            let use_bland = iter >= bland_after;
-            // Entering: most negative reduced cost (Dantzig), first
-            // negative under Bland; fixed columns can never improve.
-            let mut pc = usize::MAX;
-            let mut best = -PIVOT_EPS;
-            for j in 0..total {
-                if self.range[j] <= EPS {
-                    continue;
-                }
-                let rc = self.at(m, j);
-                if rc < best {
-                    pc = j;
-                    if use_bland {
-                        break;
-                    }
-                    best = rc;
-                }
-            }
-            if pc == usize::MAX {
-                return SolveOutcome::Optimal;
-            }
-            // Ratio test: rows limit the step at either bound of their
-            // basic variable; the entering column's own range competes.
-            let mut best_t = self.range[pc];
-            let mut pr = usize::MAX;
-            let mut at_upper = false;
-            for r in 0..m {
-                let alpha = self.at(r, pc);
-                if alpha > PIVOT_EPS {
-                    let t = self.at(r, total) / alpha;
-                    if t < best_t - EPS
-                        || (t < best_t + EPS
-                            && pr != usize::MAX
-                            && self.basis[r] < self.basis[pr])
-                    {
-                        best_t = t;
-                        pr = r;
-                        at_upper = false;
-                    }
-                } else if alpha < -PIVOT_EPS {
-                    let rb = self.range[self.basis[r]];
-                    if rb.is_finite() {
-                        let t = (rb - self.at(r, total)) / (-alpha);
-                        if t < best_t - EPS
-                            || (t < best_t + EPS
-                                && pr != usize::MAX
-                                && self.basis[r] < self.basis[pr])
-                        {
-                            best_t = t;
-                            pr = r;
-                            at_upper = true;
-                        }
-                    }
-                }
-            }
-            if pr == usize::MAX {
-                if best_t.is_infinite() {
-                    return SolveOutcome::Unbounded;
-                }
-                self.flip_column(pc); // step capped by the entering range
-                continue;
-            }
-            if at_upper {
-                self.complement_basic(pr);
-            }
-            self.pivot(pr, pc);
-        }
-        SolveOutcome::Stalled
-    }
-
-    // ---- dual simplex ----------------------------------------------------
 
     /// Re-optimise after bound changes by dual simplex from the incumbent
-    /// basis. Precondition: `dual_ready()` — the caller must fall back to
-    /// [`solve_cold`](Self::solve_cold) otherwise. Maintains d ≥ 0
-    /// throughout, so `Infeasible` is a proof, not a guess.
+    /// basis. Precondition: [`dual_ready`](Self::dual_ready) — the caller
+    /// must fall back to [`solve_cold`](Self::solve_cold) otherwise.
     pub fn resolve_dual(&mut self) -> SolveOutcome {
         if !telemetry::enabled() {
             return self.resolve_dual_inner();
         }
-        let (p0, f0, r0) = (self.pivots, self.flips, self.rebuilds);
+        let s0 = self.stat_marks();
         let out = self.resolve_dual_inner();
         telemetry::count("milp.warm_solves", 1);
-        self.report_deltas(p0, f0, r0);
+        self.report_deltas(s0);
         out
     }
 
     fn resolve_dual_inner(&mut self) -> SolveOutcome {
-        debug_assert!(self.dual_ready);
-        let max_iters = self.max_iters();
-        let m = self.m;
-        let total = self.total;
-        for _ in 0..max_iters {
-            // Leaving: the most infeasible basic variable (below its lower
-            // bound, or above its — necessarily finite — range).
-            let mut pr = usize::MAX;
-            let mut worst = FEAS_EPS;
-            let mut above = false;
-            for r in 0..m {
-                let v = self.at(r, total);
-                let rb = self.range[self.basis[r]];
-                if v < -worst {
-                    pr = r;
-                    worst = -v;
-                    above = false;
-                } else if v > rb + worst {
-                    pr = r;
-                    worst = v - rb;
-                    above = true;
-                }
-            }
-            if pr == usize::MAX {
-                // Primal feasible. FP drift over a long warm chain can
-                // leave a marginally negative reduced cost, so finish with
-                // primal phase-2 iterations — a single no-op entering scan
-                // when the basis is clean, a couple of pivots otherwise.
-                let out = self.run_primal(max_iters);
-                self.dual_ready = out == SolveOutcome::Optimal;
-                return out;
-            }
-            if above {
-                self.complement_basic(pr); // reduce to the below-lower case
-            }
-            // Entering: dual ratio test on the violated row. Strict
-            // improvement keeps the earliest column on ties (Bland-ish),
-            // which is enough anti-cycling in practice; the iteration cap
-            // catches the rest.
-            let mut pc = usize::MAX;
-            let mut best = f64::INFINITY;
-            for j in 0..total {
-                if self.range[j] <= EPS {
-                    continue;
-                }
-                let alpha = self.at(pr, j);
-                if alpha < -PIVOT_EPS {
-                    let ratio = self.at(m, j).max(0.0) / (-alpha);
-                    if pc == usize::MAX || ratio < best - EPS {
-                        pc = j;
-                        best = ratio;
-                    }
-                }
-            }
-            if pc != usize::MAX {
-                // Stability pass: among near-tied ratios take the column
-                // with the largest |alpha| — a pivot on a tiny element
-                // amplifies tableau error by 1/|alpha|, and the warm chain
-                // never refactorises between nodes.
-                let mut best_alpha = -self.at(pr, pc);
-                for j in 0..total {
-                    if self.range[j] <= EPS {
-                        continue;
-                    }
-                    let alpha = self.at(pr, j);
-                    if alpha < -PIVOT_EPS && -alpha > best_alpha {
-                        let ratio = self.at(m, j).max(0.0) / (-alpha);
-                        if ratio <= best + EPS {
-                            pc = j;
-                            best_alpha = -alpha;
-                        }
-                    }
-                }
-            }
-            if pc == usize::MAX {
-                // The violated row proves primal infeasibility; the basis
-                // stays dual feasible for the next warm start.
-                self.dual_ready = true;
-                return SolveOutcome::Infeasible;
-            }
-            self.pivot(pr, pc);
+        debug_assert!(self.dual_ok);
+        if self.need_factor {
+            self.refactorize();
         }
-        self.dual_ready = false;
-        SolveOutcome::Stalled
+        if self.xb_dirty {
+            self.compute_xb();
+        }
+        let out = match self.dual_loop() {
+            SolveOutcome::Optimal => self.primal2(),
+            other => other,
+        };
+        match out {
+            SolveOutcome::Optimal => {
+                self.dual_ok = true;
+                self.price(false);
+            }
+            // The infeasibility proof leaves the basis dual feasible, so a
+            // bound revert can re-solve warm.
+            SolveOutcome::Infeasible => self.dual_ok = true,
+            _ => self.dual_ok = false,
+        }
+        out
+    }
+
+    // ---- bound updates ---------------------------------------------------
+
+    /// Replace the bounds of structural variable `v`. Reduced costs are
+    /// bound-independent in the unshifted form, so this only re-rests the
+    /// column: the cached duals price `d_v` exactly and the resting side is
+    /// kept (or switched) wherever its sign condition still holds. Only
+    /// when *neither* side is dual feasible — or a free column carries a
+    /// nonzero reduced cost — does the warm invariant break and the next
+    /// solve run cold.
+    pub fn set_var_bounds(&mut self, v: usize, new_lo: f64, new_hi: f64) {
+        debug_assert!(v < self.n && new_lo.is_finite() && new_lo <= new_hi + ATOL);
+        self.lo[v] = new_lo;
+        self.hi[v] = new_hi;
+        self.xb_dirty = true;
+        if self.pos[v] != usize::MAX || new_lo == new_hi {
+            // Basic: bounds only re-score feasibility. Fixed: any d works.
+            return;
+        }
+        let m = self.m;
+        let col = &self.a[v * m..(v + 1) * m];
+        let mut dot = 0.0;
+        for (yi, aij) in self.y.iter().zip(col) {
+            dot += yi * aij;
+        }
+        let dv = self.c[v] - dot;
+        let lower_ok = dv >= -DTOL; // new_lo is always finite here
+        let upper_ok = new_hi.is_finite() && dv <= DTOL;
+        if self.at_upper[v] {
+            if upper_ok {
+                return;
+            }
+            if lower_ok {
+                self.at_upper[v] = false;
+                return;
+            }
+        } else {
+            if lower_ok {
+                return;
+            }
+            if upper_ok {
+                self.at_upper[v] = true;
+                return;
+            }
+        }
+        // Neither side satisfies its sign condition: park at the lower
+        // bound and force the next solve cold.
+        self.at_upper[v] = false;
+        self.dual_ok = false;
     }
 
     // ---- basis snapshots (cross-solve warm starts) -----------------------
@@ -668,7 +1014,7 @@ impl BoundedSimplex {
     ///
     /// [`solve_warm_from`]: Self::solve_warm_from
     pub fn snapshot(&self) -> Option<BasisSnapshot> {
-        if !self.dual_ready {
+        if !self.dual_ok {
             return None;
         }
         Some(BasisSnapshot {
@@ -676,161 +1022,113 @@ impl BoundedSimplex {
             m: self.m,
             total: self.total,
             basis: self.basis.clone(),
-            flipped: self.flipped.clone(),
+            flipped: self.at_upper.clone(),
         })
     }
 
-    /// Solve by crashing a carried basis into a fresh tableau instead of
-    /// the two-phase cold start: rebuild at the current bounds, restore the
-    /// snapshot's resting bounds and basic set by direct elimination, then
-    /// finish with whichever simplex the restored point admits — primal
-    /// when the basis is still primal feasible, dual when only the reduced
-    /// costs survived the coefficient change. Returns `None` when the
-    /// snapshot cannot be applied (structural mismatch, a flip onto an
-    /// infinite bound, or a basis that is neither primal nor dual feasible
-    /// after the crash) — the caller falls back to [`solve_cold`].
-    ///
-    /// The crash skips phase 1 entirely: artificial columns are frozen at
-    /// range zero, and any row the crash could not cover stays on its
-    /// artificial, which the feasibility classification then treats like
-    /// any other out-of-range basic variable.
-    ///
-    /// [`solve_cold`]: Self::solve_cold
+    /// Solve by crashing a carried basis instead of starting from logicals:
+    /// install the snapshot's basic set and resting sides, factorize (the
+    /// singularity-repair path absorbs a basis the drifted coefficients
+    /// made dependent), recompute `x_B`, then finish with whichever method
+    /// the restored point admits. Returns `None` on structural mismatch —
+    /// the caller falls back to [`solve_cold`](Self::solve_cold).
     pub fn solve_warm_from(&mut self, snap: &BasisSnapshot) -> Option<SolveOutcome> {
         if !telemetry::enabled() {
             return self.solve_warm_from_inner(snap);
         }
-        let (p0, f0, r0) = (self.pivots, self.flips, self.rebuilds);
+        let s0 = self.stat_marks();
         let out = self.solve_warm_from_inner(snap);
         if out.is_some() {
             telemetry::count("milp.crash_warm_solves", 1);
         }
-        self.report_deltas(p0, f0, r0);
+        self.report_deltas(s0);
         out
     }
 
     fn solve_warm_from_inner(&mut self, snap: &BasisSnapshot) -> Option<SolveOutcome> {
-        if snap.n != self.n || snap.m != self.m || snap.total != self.total {
+        if snap.n != self.n
+            || snap.m != self.m
+            || snap.total != self.total
+            || snap.basis.len() != self.m
+            || snap.flipped.len() != self.total
+        {
             return None;
         }
-        self.rebuild();
-        // Restore resting bounds while every structural column is still
-        // nonbasic: a flip onto an infinite range is unrepresentable, so
-        // the whole snapshot is refused rather than half-applied.
-        for j in 0..self.n {
-            if snap.flipped[j] {
-                if !self.range[j].is_finite() {
-                    return None;
-                }
-                self.flip_column(j);
+        self.pos.fill(usize::MAX);
+        for (i, &j) in snap.basis.iter().enumerate() {
+            if j >= self.total || self.pos[j] != usize::MAX {
+                // Malformed basis (out of range or duplicated): refuse, but
+                // leave the arena cold-solvable.
+                self.reset_logical_basis();
+                self.need_factor = true;
+                return None;
             }
+            self.basis[i] = j;
+            self.pos[j] = i;
         }
-        for j in self.n..self.total {
-            if snap.flipped[j] {
-                return None; // slacks/artificials have no upper bound
-            }
-        }
-        // Crash the basic set in. Rows whose slack the snapshot keeps basic
-        // are already in place; for the rest, eliminate the snapshot column
-        // into the row with the largest pivot magnitude among rows whose
-        // current basic variable is *not* wanted (stability over speed —
-        // each crash pivot is a full tableau elimination either way).
-        let mut wanted = vec![false; self.total];
-        for &b in &snap.basis {
-            if b < self.art_base {
-                wanted[b] = true;
-            }
-        }
-        for &j in &snap.basis {
-            if j >= self.art_base || self.basic_row_of(j).is_some() {
-                continue;
-            }
-            let mut pr = usize::MAX;
-            let mut best = PIVOT_EPS;
-            for r in 0..self.m {
-                if wanted[self.basis[r]] {
-                    continue;
-                }
-                let a = self.at(r, j).abs();
-                if a > best {
-                    best = a;
-                    pr = r;
-                }
-            }
-            if pr == usize::MAX {
-                continue; // singular direction: partial crash is fine
-            }
-            self.pivot(pr, j);
-        }
-        // Phase 1 never ran: freeze every artificial so it can only leave.
-        for j in self.art_base..self.total {
-            self.range[j] = 0.0;
-        }
-        // Phase-2 objective row over the crashed basis.
-        let mrow = self.m;
-        for j in 0..self.cols {
-            self.set(mrow, j, 0.0);
-        }
-        for j in 0..self.n {
-            let c = self.lp.objective[j];
-            self.set(mrow, j, if self.flipped[j] { -c } else { c });
-        }
-        for r in 0..self.m {
-            let b = self.basis[r];
-            let coef = self.at(mrow, b);
-            if coef.abs() > EPS {
-                for j in 0..self.cols {
-                    let v = self.at(mrow, j) - coef * self.at(r, j);
-                    self.set(mrow, j, v);
-                }
-            }
-        }
-        // Classify the restored point and finish with the matching method.
-        let primal_ok = (0..self.m).all(|r| {
-            let v = self.at(r, self.total);
-            let rb = self.range[self.basis[r]];
-            v >= -FEAS_EPS && v <= rb + FEAS_EPS
-        });
-        if primal_ok {
-            let max_iters = self.max_iters();
-            let out = self.run_primal(max_iters);
-            self.dual_ready = out == SolveOutcome::Optimal;
-            return Some(out);
-        }
-        let dual_ok = (0..self.total)
-            .all(|j| self.range[j] <= EPS || self.at(mrow, j) >= -PIVOT_EPS);
-        if dual_ok {
-            self.dual_ready = true;
-            return Some(self.resolve_dual_inner());
-        }
-        None
+        self.at_upper.copy_from_slice(&snap.flipped);
+        self.dual_ok = false;
+        self.refactorize();
+        self.compute_xb();
+        Some(self.finish())
     }
 
     // ---- extraction ------------------------------------------------------
 
-    /// The structural solution and its objective value under the original
-    /// (unshifted) variables.
+    /// The structural solution and its objective value.
     pub fn extract(&self) -> (Vec<f64>, f64) {
-        let mut shifted = vec![0.0; self.total];
-        for r in 0..self.m {
-            shifted[self.basis[r]] = self.at(r, self.total);
+        let mut x: Vec<f64> = (0..self.total)
+            .map(|j| rest_val(self.lo[j], self.hi[j], self.at_upper[j]))
+            .collect();
+        for (i, &j) in self.basis.iter().enumerate() {
+            x[j] = self.xb[i];
         }
-        let mut x = vec![0.0; self.n];
-        for j in 0..self.n {
-            x[j] = if self.flipped[j] {
-                self.var_hi[j] - shifted[j]
-            } else {
-                self.var_lo[j] + shifted[j]
-            };
-        }
-        let objective = self
-            .lp
-            .objective
-            .iter()
-            .zip(&x)
-            .map(|(c, v)| c * v)
-            .sum::<f64>();
+        let objective = self.c.iter().zip(&x).map(|(cj, v)| cj * v).sum::<f64>();
+        x.truncate(self.n);
         (x, objective)
+    }
+
+    /// Max row violation `‖A·x − b‖_∞` at the current factorized point —
+    /// the cheap integrality-incumbent check that replaces the dense-era
+    /// from-scratch `is_feasible` re-verification: periodic refactorisation
+    /// keeps this at round-off level across arbitrarily long warm chains.
+    pub fn residual(&self) -> f64 {
+        let m = self.m;
+        let mut x: Vec<f64> = (0..self.total)
+            .map(|j| rest_val(self.lo[j], self.hi[j], self.at_upper[j]))
+            .collect();
+        for (i, &j) in self.basis.iter().enumerate() {
+            x[j] = self.xb[i];
+        }
+        let mut acc = vec![0.0; m];
+        for (j, &v) in x.iter().enumerate() {
+            if v != 0.0 {
+                let col = &self.a[j * m..(j + 1) * m];
+                for (ai, aij) in acc.iter_mut().zip(col) {
+                    *ai += aij * v;
+                }
+            }
+        }
+        acc.iter()
+            .zip(&self.b)
+            .map(|(ai, bi)| (ai - bi).abs())
+            .fold(0.0, f64::max)
+    }
+
+    // ---- telemetry -------------------------------------------------------
+
+    fn stat_marks(&self) -> [u64; 5] {
+        [self.pivots, self.flips, self.refactors, self.eta_updates, self.dse_pivots]
+    }
+
+    /// Mirror per-solve counter deltas into the telemetry registry (called
+    /// once per solve, never inside the pivot loop).
+    fn report_deltas(&self, s0: [u64; 5]) {
+        telemetry::count("milp.pivots", self.pivots - s0[0]);
+        telemetry::count("milp.bound_flips", self.flips - s0[1]);
+        telemetry::count("milp.refactorisations", self.refactors - s0[2]);
+        telemetry::count("milp.eta_updates", self.eta_updates - s0[3]);
+        telemetry::count("milp.dse_pivots", self.dse_pivots - s0[4]);
     }
 }
 
@@ -1109,6 +1407,11 @@ mod tests {
                 } else {
                     s.solve_cold()
                 };
+                let warm = if warm == SolveOutcome::Stalled {
+                    s.solve_cold()
+                } else {
+                    warm
+                };
                 let mut lp2 = lp.clone();
                 for j in 0..n {
                     lp2.set_bounds(j, cur[j].0, cur[j].1);
@@ -1129,5 +1432,99 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn residual_stays_tiny_across_warm_chain() {
+        // The satellite pin for dropping the cold incumbent re-check:
+        // hundreds of consecutive warm re-solves on one arena must keep the
+        // factorization residual at round-off level and the objective in
+        // agreement with a fresh cold arena at the same bounds.
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(0x10AD);
+        let n = 8;
+        let m = 6;
+        let mut lp = Lp::new(n);
+        for j in 0..n {
+            lp.set_objective(j, rng.range_f64(0.2, 3.0));
+            lp.set_bounds(j, 0.0, 4.0 + rng.index(5) as f64);
+        }
+        for r in 0..m {
+            let terms: Vec<(usize, f64)> =
+                (0..n).map(|j| (j, rng.range_f64(0.1, 2.0))).collect();
+            let cmp = if r % 3 == 0 { Cmp::Ge } else { Cmp::Le };
+            lp.add(terms, cmp, rng.range_f64(2.0, 10.0));
+        }
+        let mut s = BoundedSimplex::new(&lp);
+        assert_eq!(s.solve_cold(), SolveOutcome::Optimal);
+        let mut cur: Vec<(f64, f64)> = (0..n).map(|j| (lp.lower[j], lp.upper[j])).collect();
+        let mut warm_steps = 0u32;
+        for step in 0..300 {
+            let v = rng.index(n);
+            let (blo, bhi) = (lp.lower[v], lp.upper[v]);
+            let (nlo, nhi) = match rng.index(4) {
+                0 => (blo, bhi), // backtrack to root bounds
+                1 => {
+                    let t = rng.index(bhi as usize + 1) as f64;
+                    (t, t) // branch: fix
+                }
+                _ => {
+                    let (olo, ohi) = cur[v];
+                    (olo, olo.max(((olo + ohi) / 2.0).floor())) // halve upper
+                }
+            };
+            s.set_var_bounds(v, nlo, nhi);
+            cur[v] = (nlo, nhi);
+            let out = if s.dual_ready() {
+                warm_steps += 1;
+                s.resolve_dual()
+            } else {
+                s.solve_cold()
+            };
+            let out = if out == SolveOutcome::Stalled { s.solve_cold() } else { out };
+            let mut lp2 = lp.clone();
+            for j in 0..n {
+                lp2.set_bounds(j, cur[j].0, cur[j].1);
+            }
+            let mut reference = BoundedSimplex::new(&lp2);
+            let rout = reference.solve_cold();
+            assert_eq!(out, rout, "step {step}: warm {out:?} vs cold {rout:?}");
+            if out == SolveOutcome::Optimal {
+                let (_, a) = s.extract();
+                let (_, b) = reference.extract();
+                assert!(
+                    (a - b).abs() <= 1e-6 * (1.0 + b.abs()),
+                    "step {step}: warm obj {a} vs cold {b}"
+                );
+                let res = s.residual();
+                assert!(res < 1e-6, "step {step}: residual {res:.3e}");
+            }
+        }
+        assert!(warm_steps > 200, "warm chain barely exercised ({warm_steps})");
+        assert!(s.refactorisations() > 1, "chain never refactorized");
+    }
+
+    #[test]
+    fn factorization_stats_accumulate() {
+        let mut lp = Lp::new(3);
+        for j in 0..3 {
+            lp.set_objective(j, 1.0 + j as f64);
+            lp.set_bounds(j, 0.0, 5.0);
+        }
+        lp.add(vec![(0, 1.0), (1, 1.0), (2, 1.0)], Cmp::Ge, 6.0);
+        lp.add(vec![(0, 2.0), (1, 1.0)], Cmp::Le, 8.0);
+        let (mut s, _) = cold(&lp);
+        assert!(s.refactorisations() >= 1, "cold solve must factorize");
+        assert_eq!(s.pivots(), s.eta_updates(), "every pivot is an eta update");
+        let dse0 = s.dse_pivots();
+        s.set_var_bounds(0, 0.0, 1.0);
+        s.set_var_bounds(1, 0.0, 2.0);
+        assert!(s.dual_ready());
+        assert_eq!(s.resolve_dual(), SolveOutcome::Optimal);
+        assert!(
+            s.dse_pivots() > dse0,
+            "warm dual re-solve should use steepest-edge pivots"
+        );
+        assert!(s.residual() < 1e-9);
     }
 }

@@ -4,9 +4,12 @@
 //! Minimises cᵀx subject to linear constraints with a designated subset of
 //! variables required integral. Branching splits on the most-fractional
 //! integer variable — but a branch `x ≤ ⌊v⌋` / `x ≥ ⌈v⌉` is a *bound
-//! tightening* on one shared [`BoundedSimplex`] tableau, never a new
-//! constraint row and never a clone of the problem: nodes carry only their
-//! `(var, lo, hi)` patch against the root bounds.
+//! tightening* on one shared LP arena, never a new constraint row and never
+//! a clone of the problem: nodes carry only their `(var, lo, hi)` patch
+//! against the root bounds. The arena is the factorized revised simplex
+//! ([`BoundedSimplex`]) by default, or the legacy dense eliminated tableau
+//! ([`DenseSimplex`]) when [`MilpOptions::core`] selects [`LpCore::Dense`]
+//! (the A/B baseline the solver bench compares against).
 //!
 //! The search order is **best-first with plunging**: a binary heap keeps
 //! open nodes ordered by LP bound, but after solving a node the search
@@ -18,19 +21,64 @@
 //! bigger re-solve, so it happens only when a plunge dies. The first
 //! plunge doubles as the classic diving heuristic — it runs straight to
 //! an integral incumbent (plus an LP-rounding attempt at the first
-//! fractional node), so pruning starts immediately. The two-phase primal
-//! runs only at the root, on basis breakdown, on the periodic
-//! refactorisation ([`BoundedSimplex::refresh_due`]), or when
-//! `warm_start` is off (the cold baseline the solver bench compares
-//! against). `MilpStats` reports pivots and the warm/cold solve split so
-//! callers can see the warm path is actually taken.
+//! fractional node), so pruning starts immediately.
+//!
+//! Integral candidates are accepted after a **factorization residual
+//! check** (`‖A·x − b‖_∞` at the arena's optimum, [`BoundedSimplex::residual`])
+//! instead of the old from-scratch `is_feasible` re-solve: the periodic
+//! refactorisation bounds accumulated drift, so a tiny residual certifies
+//! the point without touching every constraint a second time. The dense
+//! core has no factorization to vouch for it and keeps the full re-check.
+//!
+//! **Parallel subtree waves.** The search runs sequentially until the
+//! heap holds [`MilpOptions::partition_heap`] open nodes (and
+//! [`MilpOptions::partition_nodes`] nodes are explored), then switches to
+//! fixed-size waves: the best [`WAVE`] open nodes are popped and each is
+//! explored to completion as an independent subtree job (own arena,
+//! crash-warmed from the root basis) on the shared
+//! [`ThreadPool`](crate::util::threadpool::ThreadPool). Jobs prune against
+//! the incumbent *as of wave start* and publish improvements to a shared
+//! atomic cell; the master merges results in job-index order at the wave
+//! barrier. Because thread count only changes *where* jobs run — never
+//! which nodes exist, their budgets, or the merge order — `solve_milp`
+//! returns bit-identical incumbents and node counts at any
+//! [`MilpOptions::threads`] (as long as the wall-clock limit does not
+//! bind; see `rust/src/milp/README.md` for the full argument).
+//!
+//! `MilpStats` reports pivots, the warm/cold solve split, factorization
+//! counters and the wave/subtree accounting so callers can see both the
+//! warm path and the parallel path are actually taken.
 
 use super::bounds::{BasisSnapshot, BoundedSimplex, SolveOutcome};
+use super::dense::DenseSimplex;
 use super::simplex::Lp;
 use crate::telemetry;
+use crate::util::threadpool::ThreadPool;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrd};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Number of subtree jobs dispatched per wave. Fixed (not a function of
+/// thread count) so the node partition is identical at any parallelism.
+const WAVE: usize = 8;
+
+/// Residual tolerance accepting a factorized-arena incumbent — same scale
+/// as the `is_feasible(·, 1e-5)` re-check it replaces.
+const RESID_TOL: f64 = 1e-5;
+
+/// Which LP arena serves the node relaxations.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LpCore {
+    /// LU-factorized revised simplex with eta updates and dual
+    /// steepest-edge pricing ([`BoundedSimplex`]).
+    #[default]
+    Factorized,
+    /// Legacy dense eliminated tableau ([`DenseSimplex`]), kept as the
+    /// property-test twin and benchmark baseline.
+    Dense,
+}
 
 #[derive(Clone, Debug)]
 pub struct MilpOptions {
@@ -50,6 +98,17 @@ pub struct MilpOptions {
     /// the caller, so nodes bounded above it are pruned even without an
     /// incumbent (the scheduler passes its budget here).
     pub cutoff: f64,
+    /// LP arena implementation serving the node relaxations.
+    pub core: LpCore,
+    /// Worker threads for subtree waves. `1` runs the identical staged
+    /// algorithm inline (same nodes, same merge — no pool).
+    pub threads: usize,
+    /// Open-node count that switches the search from sequential plunging
+    /// to parallel subtree waves.
+    pub partition_heap: usize,
+    /// Minimum nodes explored sequentially before partitioning (lets small
+    /// trees finish without ever paying per-subtree arena setup).
+    pub partition_nodes: usize,
 }
 
 impl Default for MilpOptions {
@@ -61,6 +120,10 @@ impl Default for MilpOptions {
             int_tol: 1e-6,
             warm_start: true,
             cutoff: f64::INFINITY,
+            core: LpCore::Factorized,
+            threads: 1,
+            partition_heap: 32,
+            partition_nodes: 64,
         }
     }
 }
@@ -103,6 +166,18 @@ pub struct MilpStats {
     /// Root LPs served by crashing a basis carried in from a *previous*
     /// solve ([`solve_milp_session`]) instead of a cold two-phase start.
     pub basis_roots: usize,
+    /// Basis refactorisations (LU rebuilds; tableau rebuilds on the dense
+    /// core) across every arena of the search.
+    pub refactorisations: u64,
+    /// Product-form eta columns appended (factorized core only).
+    pub eta_updates: u64,
+    /// Dual pivots whose leaving row was chosen by steepest-edge pricing
+    /// (factorized core only) — the pricing-mode split of `pivots`.
+    pub dse_pivots: u64,
+    /// Parallel waves dispatched (0 when the tree stayed sequential).
+    pub waves: usize,
+    /// Subtree jobs explored across all waves.
+    pub subtrees: usize,
     pub elapsed: Duration,
 }
 
@@ -124,7 +199,130 @@ impl MilpStats {
         self.warm_solves += other.warm_solves;
         self.cold_solves += other.cold_solves;
         self.basis_roots += other.basis_roots;
+        self.refactorisations += other.refactorisations;
+        self.eta_updates += other.eta_updates;
+        self.dse_pivots += other.dse_pivots;
+        self.waves += other.waves;
+        self.subtrees += other.subtrees;
         self.elapsed += other.elapsed;
+    }
+}
+
+/// Node-LP arena: one of the two simplex cores behind a common face.
+enum Arena {
+    Fact(Box<BoundedSimplex>),
+    Dense(Box<DenseSimplex>),
+}
+
+impl Arena {
+    fn new(lp: &Lp, core: LpCore) -> Self {
+        match core {
+            LpCore::Factorized => Arena::Fact(Box::new(BoundedSimplex::new(lp))),
+            LpCore::Dense => Arena::Dense(Box::new(DenseSimplex::new(lp))),
+        }
+    }
+
+    fn pivots(&self) -> u64 {
+        match self {
+            Arena::Fact(a) => a.pivots(),
+            Arena::Dense(a) => a.pivots(),
+        }
+    }
+
+    fn refactorisations(&self) -> u64 {
+        match self {
+            Arena::Fact(a) => a.refactorisations(),
+            Arena::Dense(a) => a.rebuilds(),
+        }
+    }
+
+    fn eta_updates(&self) -> u64 {
+        match self {
+            Arena::Fact(a) => a.eta_updates(),
+            Arena::Dense(_) => 0,
+        }
+    }
+
+    fn dse_pivots(&self) -> u64 {
+        match self {
+            Arena::Fact(a) => a.dse_pivots(),
+            Arena::Dense(_) => 0,
+        }
+    }
+
+    fn dual_ready(&self) -> bool {
+        match self {
+            Arena::Fact(a) => a.dual_ready(),
+            Arena::Dense(a) => a.dual_ready(),
+        }
+    }
+
+    fn refresh_due(&self) -> bool {
+        match self {
+            Arena::Fact(a) => a.refresh_due(),
+            Arena::Dense(a) => a.refresh_due(),
+        }
+    }
+
+    fn var_bounds(&self, v: usize) -> (f64, f64) {
+        match self {
+            Arena::Fact(a) => a.var_bounds(v),
+            Arena::Dense(a) => a.var_bounds(v),
+        }
+    }
+
+    fn set_var_bounds(&mut self, v: usize, lo: f64, hi: f64) {
+        match self {
+            Arena::Fact(a) => a.set_var_bounds(v, lo, hi),
+            Arena::Dense(a) => a.set_var_bounds(v, lo, hi),
+        }
+    }
+
+    fn solve_cold(&mut self) -> SolveOutcome {
+        match self {
+            Arena::Fact(a) => a.solve_cold(),
+            Arena::Dense(a) => a.solve_cold(),
+        }
+    }
+
+    fn resolve_dual(&mut self) -> SolveOutcome {
+        match self {
+            Arena::Fact(a) => a.resolve_dual(),
+            Arena::Dense(a) => a.resolve_dual(),
+        }
+    }
+
+    fn snapshot(&self) -> Option<BasisSnapshot> {
+        match self {
+            Arena::Fact(a) => a.snapshot(),
+            Arena::Dense(a) => a.snapshot(),
+        }
+    }
+
+    fn solve_warm_from(&mut self, snap: &BasisSnapshot) -> Option<SolveOutcome> {
+        match self {
+            Arena::Fact(a) => a.solve_warm_from(snap),
+            Arena::Dense(a) => a.solve_warm_from(snap),
+        }
+    }
+
+    fn extract(&self) -> (Vec<f64>, f64) {
+        match self {
+            Arena::Fact(a) => a.extract(),
+            Arena::Dense(a) => a.extract(),
+        }
+    }
+
+    /// Accept `xi` (the node optimum with integer coordinates rounded) as
+    /// an incumbent? The factorized core vouches for its own point with
+    /// the factorization residual — refactorisation bounds drift, and the
+    /// rounding moved each integer coordinate by at most `int_tol`. The
+    /// dense core keeps the full constraint re-check.
+    fn incumbent_ok(&self, lp: &Lp, xi: &[f64]) -> bool {
+        match self {
+            Arena::Fact(a) => a.residual() <= RESID_TOL,
+            Arena::Dense(_) => lp.is_feasible(xi, 1e-5),
+        }
     }
 }
 
@@ -164,6 +362,25 @@ impl Ord for Open {
     }
 }
 
+/// Order-preserving map from (non-NaN) f64 to u64, so the shared incumbent
+/// objective can live in an [`AtomicU64`] and improve via `fetch_min`.
+fn obj_key(v: f64) -> u64 {
+    let b = v.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b ^ (1u64 << 63)
+    }
+}
+
+fn obj_from_key(k: u64) -> f64 {
+    if k >> 63 == 1 {
+        f64::from_bits(k ^ (1u64 << 63))
+    } else {
+        f64::from_bits(!k)
+    }
+}
+
 /// Solve a MILP: `integer_vars[i]` indexes variables that must be integral.
 pub fn solve_milp(lp: &Lp, integer_vars: &[usize], opts: &MilpOptions) -> (MilpResult, MilpStats) {
     solve_milp_seeded(lp, integer_vars, opts, None)
@@ -184,6 +401,374 @@ pub fn solve_milp_seeded(
     (res, stats)
 }
 
+/// How a [`Searcher::run`] loop ended.
+#[derive(PartialEq, Eq)]
+enum RunEnd {
+    /// Heap empty: every node explored or pruned.
+    Exhausted,
+    /// Node or time budget hit with open nodes left on the heap.
+    Budget,
+    /// Partition thresholds reached: hand the heap to the wave phase.
+    Partition,
+}
+
+/// The best-first-with-plunging search over one LP arena. Used for the
+/// top-level sequential phase and, with `partition` off and a node slice,
+/// for each parallel subtree job.
+struct Searcher<'a> {
+    lp: &'a Lp,
+    integer_vars: &'a [usize],
+    opts: &'a MilpOptions,
+    arena: Arena,
+    root_bounds: Vec<(f64, f64)>,
+    target: Vec<(f64, f64)>, // per-node scratch
+    heap: BinaryHeap<Open>,
+    seq: u64,
+    stats: MilpStats,
+    best_x: Option<Vec<f64>>,
+    best_obj: f64,
+    global_bound: f64,
+    tried_rounding: bool,
+    plunges: u64,
+    incumbent_updates: u64,
+    /// Basis offered to the first LP solve ([`Arena::solve_warm_from`]).
+    crash: Option<BasisSnapshot>,
+    /// Count a successful crash in `basis_roots`? True only for the
+    /// session-level carry; subtree jobs crash from the root basis as a
+    /// plain warm start.
+    count_crash_as_root: bool,
+    export_root_basis: bool,
+    out_basis: Option<BasisSnapshot>,
+    start: Instant,
+    time_limit: Duration,
+    node_cap: usize,
+    /// Allow [`RunEnd::Partition`] (top-level master only).
+    partition: bool,
+    /// External objective cutoff (caller budget; for subtree jobs, the
+    /// wave-start incumbent).
+    cutoff: f64,
+}
+
+impl<'a> Searcher<'a> {
+    fn new(
+        lp: &'a Lp,
+        integer_vars: &'a [usize],
+        opts: &'a MilpOptions,
+        start: Instant,
+        node_cap: usize,
+        time_limit: Duration,
+        cutoff: f64,
+    ) -> Self {
+        let root_bounds: Vec<(f64, f64)> = (0..lp.num_vars)
+            .map(|v| (lp.lower[v], lp.upper[v]))
+            .collect();
+        Searcher {
+            lp,
+            integer_vars,
+            opts,
+            arena: Arena::new(lp, opts.core),
+            target: root_bounds.clone(),
+            root_bounds,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            stats: MilpStats::default(),
+            best_x: None,
+            best_obj: f64::INFINITY,
+            global_bound: f64::NEG_INFINITY,
+            tried_rounding: false,
+            plunges: 0,
+            incumbent_updates: 0,
+            crash: None,
+            count_crash_as_root: false,
+            export_root_basis: false,
+            out_basis: None,
+            start,
+            time_limit,
+            node_cap,
+            partition: false,
+            cutoff,
+        }
+    }
+
+    fn push_node(&mut self, bound: f64, patch: Vec<(usize, f64, f64)>) {
+        self.seq += 1;
+        self.heap.push(Open {
+            bound,
+            seq: self.seq,
+            node: Node { patch },
+        });
+    }
+
+    /// One node LP: dual simplex from the incumbent basis when allowed, the
+    /// basis is dual feasible and no refresh is due; cold two-phase primal
+    /// otherwise. Two warm outcomes re-run cold: a stalled dual (basis
+    /// breakdown), and an *infeasible* verdict — it prunes a whole subtree,
+    /// and tableau drift can fake one, so it is never trusted from a warm
+    /// basis alone. The same distrust applies to `crash` (a basis offered
+    /// to the first solve only): anything but `Optimal` re-runs cold.
+    fn lp_resolve(&mut self) -> SolveOutcome {
+        self.stats.lp_solves += 1;
+        let before = self.arena.pivots();
+        let crash = self.crash.take();
+        let out = if let Some(snap) = crash.filter(|_| self.opts.warm_start) {
+            match self.arena.solve_warm_from(&snap) {
+                Some(SolveOutcome::Optimal) => {
+                    self.stats.warm_solves += 1;
+                    if self.count_crash_as_root {
+                        self.stats.basis_roots += 1;
+                    }
+                    SolveOutcome::Optimal
+                }
+                _ => {
+                    // Refused or inconclusive crash: served cold after all
+                    // (the crash pivots still count — they were paid).
+                    self.stats.cold_solves += 1;
+                    self.arena.solve_cold()
+                }
+            }
+        } else if self.opts.warm_start && self.arena.dual_ready() && !self.arena.refresh_due() {
+            match self.arena.resolve_dual() {
+                SolveOutcome::Stalled | SolveOutcome::Infeasible => {
+                    // Served cold after all (the failed warm attempt's
+                    // pivots still count — they were paid).
+                    self.stats.cold_solves += 1;
+                    self.arena.solve_cold()
+                }
+                out => {
+                    self.stats.warm_solves += 1;
+                    out
+                }
+            }
+        } else {
+            self.stats.cold_solves += 1;
+            self.arena.solve_cold()
+        };
+        self.stats.pivots += self.arena.pivots() - before;
+        out
+    }
+
+    /// Best-first-with-plunging over the current heap until it drains, a
+    /// budget trips, or (when allowed) the partition thresholds are met.
+    fn run(&mut self) -> RunEnd {
+        loop {
+            if self.partition
+                && self.heap.len() >= self.opts.partition_heap
+                && self.stats.nodes >= self.opts.partition_nodes
+            {
+                return RunEnd::Partition;
+            }
+            let Some(open) = self.heap.pop() else {
+                return RunEnd::Exhausted;
+            };
+            if self.stats.nodes >= self.node_cap || self.start.elapsed() > self.time_limit {
+                self.heap.push(open); // stays open: the search is not exhausted
+                return RunEnd::Budget;
+            }
+            self.global_bound = open.bound;
+            if open.bound > self.best_obj.min(self.cutoff) - self.opts.abs_gap {
+                continue; // pruned by incumbent or caller cutoff
+            }
+
+            // Point the arena at this node: root bounds overridden by the
+            // patch, applied as a diff against wherever the arena is now.
+            self.target.copy_from_slice(&self.root_bounds);
+            for &(v, lo, hi) in &open.node.patch {
+                self.target[v] = (lo, hi);
+            }
+            for v in 0..self.root_bounds.len() {
+                let (tlo, thi) = self.target[v];
+                let (clo, chi) = self.arena.var_bounds(v);
+                if tlo != clo || thi != chi {
+                    self.arena.set_var_bounds(v, tlo, thi);
+                }
+            }
+
+            // Plunge: solve this node, then keep descending into the nearer
+            // child (one bound change, dual re-solve from the parent basis)
+            // while pushing the farther child onto the heap.
+            let mut patch = open.node.patch;
+            loop {
+                self.stats.nodes += 1;
+                let out = self.lp_resolve();
+                if self.export_root_basis
+                    && self.stats.lp_solves == 1
+                    && out == SolveOutcome::Optimal
+                {
+                    // The root optimum's basis is the session carry: the
+                    // next structurally identical solve crashes from here.
+                    self.out_basis = self.arena.snapshot();
+                }
+                if out != SolveOutcome::Optimal {
+                    break; // infeasible, unbounded or stalled: drop the node
+                }
+                let (x, obj) = self.arena.extract();
+                if obj > self.best_obj.min(self.cutoff) - self.opts.abs_gap {
+                    break;
+                }
+
+                // Find the most fractional integer variable.
+                let mut branch_var = None;
+                let mut best_frac = self.opts.int_tol;
+                for &v in self.integer_vars {
+                    let frac = (x[v] - x[v].round()).abs();
+                    if frac > best_frac {
+                        best_frac = frac;
+                        branch_var = Some(v);
+                    }
+                }
+                let Some(v) = branch_var else {
+                    // Integral: candidate incumbent. Round the integer
+                    // coordinates exactly; the arena vouches for the point
+                    // ([`Arena::incumbent_ok`]: residual check on the
+                    // factorized core, full re-check on the dense core).
+                    let mut xi = x.clone();
+                    for &w in self.integer_vars {
+                        xi[w] = xi[w].round();
+                    }
+                    if obj < self.best_obj && self.arena.incumbent_ok(self.lp, &xi) {
+                        self.best_obj = obj;
+                        self.best_x = Some(xi);
+                        self.incumbent_updates += 1;
+                    }
+                    break;
+                };
+                if !self.tried_rounding {
+                    // Once, at the first fractional node: try the rounded LP
+                    // solution as an incumbent before any branching happens.
+                    self.tried_rounding = true;
+                    let mut xr = x.clone();
+                    for &w in self.integer_vars {
+                        xr[w] = xr[w].round();
+                    }
+                    if self.lp.is_feasible(&xr, 1e-7) {
+                        let o = dot(&self.lp.objective, &xr);
+                        if o < self.best_obj {
+                            self.best_obj = o;
+                            self.best_x = Some(xr);
+                            self.incumbent_updates += 1;
+                        }
+                    }
+                }
+                let (lo_v, hi_v) = {
+                    let mut cur = self.root_bounds[v];
+                    for &(pv, plo, phi) in &patch {
+                        if pv == v {
+                            cur = (plo, phi);
+                        }
+                    }
+                    cur
+                };
+                let floor = x[v].floor();
+                let down = (lo_v, hi_v.min(floor));
+                let up = (lo_v.max(floor + 1.0), hi_v);
+                // Descend toward the rounding of x[v]; the other child waits.
+                let (near, far) = if x[v] - floor < 0.5 {
+                    (down, up)
+                } else {
+                    (up, down)
+                };
+                if far.0 <= far.1 + 1e-9 {
+                    let mut fpatch = patch.clone();
+                    fpatch.push((v, far.0, far.1));
+                    self.push_node(obj, fpatch);
+                }
+                if near.0 > near.1 + 1e-9 {
+                    break; // empty near child: the plunge dies here
+                }
+                self.plunges += 1;
+                patch.push((v, near.0, near.1));
+                self.arena.set_var_bounds(v, near.0, near.1);
+                if self.stats.nodes >= self.node_cap || self.start.elapsed() > self.time_limit {
+                    // Out of budget mid-plunge: keep the un-solved child open.
+                    self.push_node(obj, patch);
+                    return RunEnd::Budget;
+                }
+            }
+        }
+    }
+
+    /// Fold the arena's lifetime counters into the stats (call once, when
+    /// this searcher is done solving).
+    fn absorb_arena_stats(&mut self) {
+        self.stats.refactorisations += self.arena.refactorisations();
+        self.stats.eta_updates += self.arena.eta_updates();
+        self.stats.dse_pivots += self.arena.dse_pivots();
+    }
+
+    /// Drain the remaining open nodes in bound order.
+    fn drain_open(&mut self) -> Vec<(f64, Vec<(usize, f64, f64)>)> {
+        let mut out = Vec::with_capacity(self.heap.len());
+        while let Some(o) = self.heap.pop() {
+            out.push((o.bound, o.node.patch));
+        }
+        out
+    }
+}
+
+/// Everything one parallel subtree job needs, bundled so the closure that
+/// moves to a worker thread is self-contained (`'static`).
+struct SubtreeJob {
+    lp: Arc<Lp>,
+    ints: Arc<Vec<usize>>,
+    opts: MilpOptions,
+    /// Root-LP basis of the master solve; crash-warms the subtree root.
+    basis: Option<Arc<BasisSnapshot>>,
+    bound: f64,
+    patch: Vec<(usize, f64, f64)>,
+    /// Incumbent as of wave start — the only pruning reference, so node
+    /// counts cannot depend on sibling timing.
+    cutoff: f64,
+    node_cap: usize,
+    time_left: Duration,
+    /// Shared incumbent objective (ordered-f64 bits, improved by
+    /// `fetch_min`); read back by the master at the wave barrier.
+    incumbent: Arc<AtomicU64>,
+}
+
+struct SubtreeResult {
+    best_x: Option<Vec<f64>>,
+    best_obj: f64,
+    stats: MilpStats,
+    open: Vec<(f64, Vec<(usize, f64, f64)>)>,
+    plunges: u64,
+    incumbent_updates: u64,
+}
+
+impl SubtreeJob {
+    fn run(self) -> SubtreeResult {
+        let start = Instant::now();
+        let mut s = Searcher::new(
+            &self.lp,
+            &self.ints,
+            &self.opts,
+            start,
+            self.node_cap,
+            self.time_left,
+            self.cutoff,
+        );
+        s.crash = self.basis.as_deref().cloned();
+        // The master already spent the one LP-rounding attempt.
+        s.tried_rounding = true;
+        s.push_node(self.bound, self.patch);
+        let _ = s.run();
+        s.absorb_arena_stats();
+        s.stats.elapsed = start.elapsed();
+        if s.best_x.is_some() {
+            self.incumbent
+                .fetch_min(obj_key(s.best_obj), AtomicOrd::SeqCst);
+        }
+        let open = s.drain_open();
+        SubtreeResult {
+            best_x: s.best_x,
+            best_obj: s.best_obj,
+            stats: s.stats,
+            open,
+            plunges: s.plunges,
+            incumbent_updates: s.incumbent_updates,
+        }
+    }
+}
+
 /// [`solve_milp_seeded`] for a planning *session*: additionally accepts the
 /// terminal root basis of a previous, structurally identical solve and
 /// crash-warms this solve's root LP from it ([`BoundedSimplex::solve_warm_from`]),
@@ -201,15 +786,21 @@ pub fn solve_milp_session(
 ) -> (MilpResult, MilpStats, Option<BasisSnapshot>) {
     let start = Instant::now();
     let mut tspan = telemetry::span("milp.solve", "milp");
-    let mut plunges: u64 = 0;
-    let mut incumbent_updates: u64 = 0;
-    let mut stats = MilpStats::default();
-    let mut arena = BoundedSimplex::new(lp);
-    let mut crash = root_basis;
-    let mut out_basis: Option<BasisSnapshot> = None;
 
-    let mut best_x: Option<Vec<f64>> = None;
-    let mut best_obj = f64::INFINITY;
+    let mut s = Searcher::new(
+        lp,
+        integer_vars,
+        opts,
+        start,
+        opts.max_nodes,
+        opts.time_limit,
+        opts.cutoff,
+    );
+    s.partition = true;
+    s.export_root_basis = true;
+    s.crash = root_basis.cloned();
+    s.count_crash_as_root = true;
+
     if let Some(sx) = seed {
         if sx.len() == lp.num_vars
             && integer_vars
@@ -217,177 +808,120 @@ pub fn solve_milp_session(
                 .all(|&v| (sx[v] - sx[v].round()).abs() <= opts.int_tol)
             && lp.is_feasible(sx, 1e-6)
         {
-            best_obj = dot(&lp.objective, sx);
-            best_x = Some(sx.to_vec());
+            s.best_obj = dot(&lp.objective, sx);
+            s.best_x = Some(sx.to_vec());
         }
     }
 
-    let root_bounds: Vec<(f64, f64)> = (0..lp.num_vars)
-        .map(|v| (lp.lower[v], lp.upper[v]))
-        .collect();
-    let mut target = root_bounds.clone(); // per-node scratch
+    s.push_node(f64::NEG_INFINITY, Vec::new());
+    let end = s.run();
 
-    let mut heap: BinaryHeap<Open> = BinaryHeap::new();
-    heap.push(Open {
-        bound: f64::NEG_INFINITY,
-        seq: 0,
-        node: Node { patch: Vec::new() },
-    });
-    let mut seq: u64 = 0;
-    let mut global_bound = f64::NEG_INFINITY;
-    let mut tried_rounding = false;
+    if end == RunEnd::Partition {
+        // Wave phase: pop the best open nodes, explore each to completion
+        // as an independent subtree job, merge at the barrier in job-index
+        // order. Thread count changes only where jobs run.
+        let shared_lp = Arc::new(lp.clone());
+        let shared_ints = Arc::new(integer_vars.to_vec());
+        let shared_basis = s.out_basis.clone().map(Arc::new);
+        let incumbent = Arc::new(AtomicU64::new(obj_key(s.best_obj.min(opts.cutoff))));
+        let mut pool: Option<ThreadPool> = None;
 
-    'search: while let Some(open) = heap.pop() {
-        if stats.nodes >= opts.max_nodes || start.elapsed() > opts.time_limit {
-            heap.push(open); // stays open: the search is not exhausted
-            break;
-        }
-        global_bound = open.bound;
-        if open.bound > best_obj.min(opts.cutoff) - opts.abs_gap {
-            continue; // pruned by incumbent or caller cutoff
-        }
-
-        // Point the shared arena at this node: root bounds overridden by
-        // the patch, applied as a diff against wherever the arena is now.
-        target.copy_from_slice(&root_bounds);
-        for &(v, lo, hi) in &open.node.patch {
-            target[v] = (lo, hi);
-        }
-        for (v, &(tlo, thi)) in target.iter().enumerate() {
-            let (clo, chi) = arena.var_bounds(v);
-            if tlo != clo || thi != chi {
-                arena.set_var_bounds(v, tlo, thi);
-            }
-        }
-
-        // Plunge: solve this node, then keep descending into the nearer
-        // child (one bound change, dual re-solve from the parent basis)
-        // while pushing the farther child onto the heap.
-        let mut patch = open.node.patch;
         loop {
-            stats.nodes += 1;
-            let out = lp_resolve(&mut arena, opts, &mut stats, crash.take());
-            if stats.lp_solves == 1 && out == SolveOutcome::Optimal {
-                // The root optimum's basis is the session carry: the next
-                // structurally identical solve crashes from here.
-                out_basis = arena.snapshot();
-            }
-            if out != SolveOutcome::Optimal {
-                break; // infeasible, unbounded or stalled: drop the node
-            }
-            let (x, obj) = arena.extract();
-            if obj > best_obj.min(opts.cutoff) - opts.abs_gap {
+            if s.stats.nodes >= opts.max_nodes || start.elapsed() > opts.time_limit {
                 break;
             }
+            let cutoff_now = s.best_obj.min(opts.cutoff);
+            let mut picked: Vec<Open> = Vec::new();
+            while picked.len() < WAVE {
+                let Some(o) = s.heap.pop() else { break };
+                if o.bound > cutoff_now - opts.abs_gap {
+                    continue; // pruned by incumbent or caller cutoff
+                }
+                picked.push(o);
+            }
+            if picked.is_empty() {
+                break;
+            }
+            s.global_bound = picked[0].bound;
+            let remaining = opts.max_nodes - s.stats.nodes;
+            let npick = picked.len().min(remaining);
+            for o in picked.drain(npick..) {
+                s.heap.push(o);
+            }
+            let per_job = (remaining / npick).max(1);
+            let time_left = opts.time_limit.saturating_sub(start.elapsed());
 
-            // Find the most fractional integer variable.
-            let mut branch_var = None;
-            let mut best_frac = opts.int_tol;
-            for &v in integer_vars {
-                let frac = (x[v] - x[v].round()).abs();
-                if frac > best_frac {
-                    best_frac = frac;
-                    branch_var = Some(v);
-                }
-            }
-            let Some(v) = branch_var else {
-                // Integral: candidate incumbent. Round the integer
-                // coordinates exactly and re-verify against the problem —
-                // the warm path trades refactorisation for speed, so the
-                // incumbent must not rest on accumulated tableau error.
-                let mut xi = x.clone();
-                for &w in integer_vars {
-                    xi[w] = xi[w].round();
-                }
-                if obj < best_obj && lp.is_feasible(&xi, 1e-5) {
-                    best_obj = obj;
-                    best_x = Some(xi);
-                    incumbent_updates += 1;
-                }
-                break;
-            };
-            if !tried_rounding {
-                // Once, at the first fractional node: try the rounded LP
-                // solution as an incumbent before any branching happens.
-                tried_rounding = true;
-                let mut xr = x.clone();
-                for &w in integer_vars {
-                    xr[w] = xr[w].round();
-                }
-                if lp.is_feasible(&xr, 1e-7) {
-                    let o = dot(&lp.objective, &xr);
-                    if o < best_obj {
-                        best_obj = o;
-                        best_x = Some(xr);
-                        incumbent_updates += 1;
-                    }
-                }
-            }
-            let (lo_v, hi_v) = {
-                let mut cur = root_bounds[v];
-                for &(pv, plo, phi) in &patch {
-                    if pv == v {
-                        cur = (plo, phi);
-                    }
-                }
-                cur
-            };
-            let floor = x[v].floor();
-            let down = (lo_v, hi_v.min(floor));
-            let up = (lo_v.max(floor + 1.0), hi_v);
-            // Descend toward the rounding of x[v]; the other child waits.
-            let (near, far) = if x[v] - floor < 0.5 {
-                (down, up)
+            let jobs: Vec<_> = picked
+                .into_iter()
+                .map(|o| {
+                    let job = SubtreeJob {
+                        lp: Arc::clone(&shared_lp),
+                        ints: Arc::clone(&shared_ints),
+                        opts: opts.clone(),
+                        basis: shared_basis.clone(),
+                        bound: o.bound,
+                        patch: o.node.patch,
+                        cutoff: cutoff_now,
+                        node_cap: per_job,
+                        time_left,
+                        incumbent: Arc::clone(&incumbent),
+                    };
+                    move || job.run()
+                })
+                .collect();
+            s.stats.waves += 1;
+            s.stats.subtrees += jobs.len();
+            let results: Vec<SubtreeResult> = if opts.threads > 1 {
+                pool.get_or_insert_with(|| ThreadPool::new(opts.threads))
+                    .run_batch(jobs)
             } else {
-                (up, down)
+                jobs.into_iter().map(|j| j()).collect()
             };
-            if far.0 <= far.1 + 1e-9 {
-                let mut fpatch = patch.clone();
-                fpatch.push((v, far.0, far.1));
-                seq += 1;
-                heap.push(Open {
-                    bound: obj,
-                    seq,
-                    node: Node { patch: fpatch },
-                });
+
+            // Deterministic merge: job-index order, strict improvement.
+            for r in results {
+                s.stats.merge(&r.stats);
+                s.plunges += r.plunges;
+                s.incumbent_updates += r.incumbent_updates;
+                if r.best_obj < s.best_obj {
+                    if let Some(x) = r.best_x {
+                        s.best_obj = r.best_obj;
+                        s.best_x = Some(x);
+                    }
+                }
+                for (bound, patch) in r.open {
+                    s.push_node(bound, patch);
+                }
             }
-            if near.0 > near.1 + 1e-9 {
-                break; // empty near child: the plunge dies here
-            }
-            plunges += 1;
-            patch.push((v, near.0, near.1));
-            arena.set_var_bounds(v, near.0, near.1);
-            if stats.nodes >= opts.max_nodes || start.elapsed() > opts.time_limit {
-                // Out of budget mid-plunge: keep the un-solved child open.
-                seq += 1;
-                heap.push(Open {
-                    bound: obj,
-                    seq,
-                    node: Node { patch },
-                });
-                break 'search;
-            }
+            incumbent.fetch_min(obj_key(s.best_obj.min(opts.cutoff)), AtomicOrd::SeqCst);
+            // Both channels are fed by the same job results; they must agree.
+            debug_assert!(
+                obj_from_key(incumbent.load(AtomicOrd::SeqCst))
+                    >= s.best_obj.min(opts.cutoff) - 1e-12
+            );
         }
     }
 
-    stats.elapsed = start.elapsed();
-    let cutoff_now = best_obj.min(opts.cutoff);
-    let exhausted = heap
+    s.absorb_arena_stats();
+    s.stats.elapsed = start.elapsed();
+    let cutoff_now = s.best_obj.min(opts.cutoff);
+    let exhausted = s
+        .heap
         .peek()
         .map(|o| o.bound > cutoff_now - opts.abs_gap)
         .unwrap_or(true);
-    let result = match best_x {
+    let result = match s.best_x.take() {
         Some(x) => {
             if exhausted {
                 MilpResult::Optimal {
                     x,
-                    objective: best_obj,
+                    objective: s.best_obj,
                 }
             } else {
                 MilpResult::Feasible {
                     x,
-                    objective: best_obj,
-                    bound: global_bound,
+                    objective: s.best_obj,
+                    bound: s.global_bound,
                 }
             }
         }
@@ -400,76 +934,32 @@ pub fn solve_milp_session(
         }
     };
     if telemetry::enabled() {
-        telemetry::count("bnb.nodes", stats.nodes as u64);
-        telemetry::count("bnb.plunges", plunges);
-        telemetry::count("bnb.incumbent_updates", incumbent_updates);
-        telemetry::count("bnb.lp_solves", stats.lp_solves as u64);
-        telemetry::count("bnb.warm_solves", stats.warm_solves as u64);
-        telemetry::count("bnb.cold_solves", stats.cold_solves as u64);
-        telemetry::count("bnb.basis_roots", stats.basis_roots as u64);
-        tspan.tag("nodes", stats.nodes);
-        tspan.tag("plunges", plunges);
-        tspan.tag("incumbent_updates", incumbent_updates);
-        tspan.tag("warm_solves", stats.warm_solves);
-        tspan.tag("cold_solves", stats.cold_solves);
-        tspan.tag("pivots", stats.pivots);
+        telemetry::count("bnb.nodes", s.stats.nodes as u64);
+        telemetry::count("bnb.plunges", s.plunges);
+        telemetry::count("bnb.incumbent_updates", s.incumbent_updates);
+        telemetry::count("bnb.lp_solves", s.stats.lp_solves as u64);
+        telemetry::count("bnb.warm_solves", s.stats.warm_solves as u64);
+        telemetry::count("bnb.cold_solves", s.stats.cold_solves as u64);
+        telemetry::count("bnb.basis_roots", s.stats.basis_roots as u64);
+        telemetry::count("bnb.refactorisations", s.stats.refactorisations);
+        telemetry::count("bnb.eta_updates", s.stats.eta_updates);
+        telemetry::count("bnb.dse_pivots", s.stats.dse_pivots);
+        telemetry::count("bnb.waves", s.stats.waves as u64);
+        telemetry::count("bnb.subtrees", s.stats.subtrees as u64);
+        tspan.tag("nodes", s.stats.nodes);
+        tspan.tag("plunges", s.plunges);
+        tspan.tag("incumbent_updates", s.incumbent_updates);
+        tspan.tag("warm_solves", s.stats.warm_solves);
+        tspan.tag("cold_solves", s.stats.cold_solves);
+        tspan.tag("pivots", s.stats.pivots);
+        tspan.tag("refactorisations", s.stats.refactorisations);
+        tspan.tag("waves", s.stats.waves);
     }
-    (result, stats, out_basis)
+    (result, s.stats, s.out_basis.take())
 }
 
 fn dot(c: &[f64], x: &[f64]) -> f64 {
     c.iter().zip(x).map(|(a, b)| a * b).sum()
-}
-
-/// One node LP: dual simplex from the incumbent basis when allowed, the
-/// basis is dual feasible and the periodic refactorisation is not due;
-/// cold two-phase primal otherwise. Two warm outcomes re-run cold: a
-/// stalled dual (basis breakdown), and an *infeasible* verdict — it
-/// prunes a whole subtree, and on big-M formulations tableau drift can
-/// fake one, so it is never trusted from a warm basis alone. The same
-/// distrust applies to `crash` (a basis carried in from a previous solve,
-/// only offered at the root): anything but `Optimal` re-runs cold.
-fn lp_resolve(
-    arena: &mut BoundedSimplex,
-    opts: &MilpOptions,
-    stats: &mut MilpStats,
-    crash: Option<&BasisSnapshot>,
-) -> SolveOutcome {
-    stats.lp_solves += 1;
-    let before = arena.pivots();
-    let out = if let Some(snap) = crash.filter(|_| opts.warm_start) {
-        match arena.solve_warm_from(snap) {
-            Some(SolveOutcome::Optimal) => {
-                stats.warm_solves += 1;
-                stats.basis_roots += 1;
-                SolveOutcome::Optimal
-            }
-            _ => {
-                // Refused or inconclusive crash: served cold after all
-                // (the crash pivots still count — they were paid).
-                stats.cold_solves += 1;
-                arena.solve_cold()
-            }
-        }
-    } else if opts.warm_start && arena.dual_ready() && !arena.refresh_due() {
-        match arena.resolve_dual() {
-            SolveOutcome::Stalled | SolveOutcome::Infeasible => {
-                // Served cold after all (the failed warm attempt's pivots
-                // still count — they were paid).
-                stats.cold_solves += 1;
-                arena.solve_cold()
-            }
-            out => {
-                stats.warm_solves += 1;
-                out
-            }
-        }
-    } else {
-        stats.cold_solves += 1;
-        arena.solve_cold()
-    };
-    stats.pivots += arena.pivots() - before;
-    out
 }
 
 #[cfg(test)]
@@ -585,11 +1075,7 @@ mod tests {
         );
         let ints: Vec<usize> = (0..n).collect();
         let (_, obj) = optimal(&lp, &ints);
-        assert!(
-            (obj + dp_best).abs() < 1e-6,
-            "milp={} dp={dp_best}",
-            -obj
-        );
+        assert!((obj + dp_best).abs() < 1e-6, "milp={} dp={dp_best}", -obj);
     }
 
     #[test]
@@ -639,7 +1125,11 @@ mod tests {
             lp.set_objective(i, -((i % 3) as f64 + 1.0));
             lp.set_bounds(i, 0.0, 3.0);
         }
-        lp.add((0..8).map(|i| (i, 1.0 + (i % 2) as f64)).collect(), Cmp::Le, 7.5);
+        lp.add(
+            (0..8).map(|i| (i, 1.0 + (i % 2) as f64)).collect(),
+            Cmp::Le,
+            7.5,
+        );
         lp.add((0..8).map(|i| (i, 1.0)).collect(), Cmp::Le, 6.5);
         let ints: Vec<usize> = (0..8).collect();
         let (res, stats) = solve_milp(&lp, &ints, &MilpOptions::default());
@@ -665,8 +1155,9 @@ mod tests {
                 lp.set_objective(i, -rng.range_f64(0.5, 5.0).round());
                 lp.set_bounds(i, 0.0, 4.0);
             }
-            let terms: Vec<(usize, f64)> =
-                (0..n).map(|i| (i, rng.range_f64(0.5, 3.0).round())).collect();
+            let terms: Vec<(usize, f64)> = (0..n)
+                .map(|i| (i, rng.range_f64(0.5, 3.0).round()))
+                .collect();
             lp.add(terms, Cmp::Le, rng.range_f64(4.0, 12.0).round());
             let ints: Vec<usize> = (0..n).collect();
             let warm = solve_milp(&lp, &ints, &MilpOptions::default()).0;
@@ -701,11 +1192,7 @@ mod tests {
                 lp.set_objective(v, 1.0 + v as f64);
                 lp.set_bounds(v, 0.0, 5.0);
             }
-            lp.add(
-                vec![(0, 1.0), (1, 1.5), (2, 0.5), (3, 1.0)],
-                Cmp::Ge,
-                t,
-            );
+            lp.add(vec![(0, 1.0), (1, 1.5), (2, 0.5), (3, 1.0)], Cmp::Ge, t);
             lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 6.0);
             lp
         };
@@ -715,8 +1202,7 @@ mod tests {
         assert!(matches!(res1, MilpResult::Optimal { .. }));
         let basis = basis.expect("root basis exported");
         let lp2 = build(5.5);
-        let (warm, wstats, basis2) =
-            solve_milp_session(&lp2, &ints, &opts, None, Some(&basis));
+        let (warm, wstats, basis2) = solve_milp_session(&lp2, &ints, &opts, None, Some(&basis));
         assert!(basis2.is_some(), "session must keep exporting the basis");
         assert_eq!(
             wstats.basis_roots, 1,
@@ -783,5 +1269,127 @@ mod tests {
             },
         );
         assert!((res.solution().unwrap().1 + 20.0).abs() < 1e-6);
+    }
+
+    /// A 20-binary knapsack with two coupling rows — a real tree, used by
+    /// the wave/counter tests below.
+    fn wave_instance() -> (Lp, Vec<usize>) {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(0xB4B5);
+        let n = 20;
+        let mut lp = Lp::new(n);
+        let mut wsum = 0.0;
+        let mut weights = Vec::with_capacity(n);
+        for i in 0..n {
+            lp.set_objective(i, -rng.range_f64(2.0, 30.0).round());
+            lp.set_bounds(i, 0.0, 1.0);
+            let w = rng.range_f64(1.0, 9.0).round();
+            wsum += w;
+            weights.push(w);
+        }
+        lp.add(
+            (0..n).map(|i| (i, weights[i])).collect(),
+            Cmp::Le,
+            (wsum * 0.45).floor(),
+        );
+        lp.add((0..n).map(|i| (i, 1.0)).collect(), Cmp::Le, (n / 2) as f64);
+        (lp, (0..n).collect())
+    }
+
+    #[test]
+    fn parallel_waves_are_deterministic_across_thread_counts() {
+        let (lp, ints) = wave_instance();
+        let run = |threads: usize| {
+            solve_milp(
+                &lp,
+                &ints,
+                &MilpOptions {
+                    threads,
+                    partition_heap: 6,
+                    partition_nodes: 12,
+                    ..Default::default()
+                },
+            )
+        };
+        let (r1, s1) = run(1);
+        assert!(matches!(r1, MilpResult::Optimal { .. }), "{r1:?}");
+        assert!(s1.waves > 0, "search never partitioned — not a wave test");
+        assert!(s1.subtrees > 0);
+        for threads in [2, 4] {
+            let (rt, st) = run(threads);
+            assert_eq!(r1, rt, "threads={threads}: result diverged");
+            assert_eq!(s1.nodes, st.nodes, "threads={threads}: node count diverged");
+            assert_eq!(
+                s1.lp_solves, st.lp_solves,
+                "threads={threads}: lp_solves diverged"
+            );
+            assert_eq!(
+                s1.subtrees, st.subtrees,
+                "threads={threads}: partition diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn dense_core_matches_factorized() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(0xC0DE);
+        for case in 0..20 {
+            let n = 2 + rng.index(4);
+            let mut lp = Lp::new(n);
+            for i in 0..n {
+                lp.set_objective(i, -rng.range_f64(0.5, 5.0).round());
+                lp.set_bounds(i, 0.0, 4.0);
+            }
+            let terms: Vec<(usize, f64)> = (0..n)
+                .map(|i| (i, rng.range_f64(0.5, 3.0).round()))
+                .collect();
+            lp.add(terms, Cmp::Le, rng.range_f64(4.0, 12.0).round());
+            let ints: Vec<usize> = (0..n).collect();
+            let fact = solve_milp(&lp, &ints, &MilpOptions::default()).0;
+            let dense = solve_milp(
+                &lp,
+                &ints,
+                &MilpOptions {
+                    core: LpCore::Dense,
+                    ..Default::default()
+                },
+            )
+            .0;
+            match (&fact, &dense) {
+                (
+                    MilpResult::Optimal { objective: a, .. },
+                    MilpResult::Optimal { objective: b, .. },
+                ) => assert!((a - b).abs() < 1e-6, "case {case}: fact {a} vs dense {b}"),
+                (MilpResult::Infeasible, MilpResult::Infeasible) => {}
+                other => panic!("case {case}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn factorization_counters_flow_into_stats() {
+        let (lp, ints) = wave_instance();
+        let (res, stats) = solve_milp(&lp, &ints, &MilpOptions::default());
+        assert!(matches!(res, MilpResult::Optimal { .. }), "{res:?}");
+        assert!(stats.refactorisations >= 1, "{stats:?}");
+        assert_eq!(
+            stats.pivots, stats.eta_updates,
+            "every pivot must append an eta column"
+        );
+        assert!(stats.dse_pivots > 0, "warm dual re-solves price by DSE");
+        // The dense core reports rebuilds but no factorization machinery.
+        let (res_d, stats_d) = solve_milp(
+            &lp,
+            &ints,
+            &MilpOptions {
+                core: LpCore::Dense,
+                ..Default::default()
+            },
+        );
+        assert!(matches!(res_d, MilpResult::Optimal { .. }), "{res_d:?}");
+        assert!(stats_d.refactorisations >= 1);
+        assert_eq!(stats_d.eta_updates, 0);
+        assert_eq!(stats_d.dse_pivots, 0);
     }
 }

@@ -1,0 +1,1104 @@
+//! The legacy *dense eliminated-tableau* simplex arena, kept as the
+//! reference twin of the factorized revised simplex in
+//! [`super::bounds::BoundedSimplex`]: the property tests solve identical
+//! planner-shaped LP/MILP instances on both cores and assert objective and
+//! verdict agreement (including warm bound-walk sequences), and the
+//! `fig_solver` / `perf_micro` benches use it as the PR 5 baseline the
+//! factorized path is measured against. It is selectable at the MILP level
+//! via `MilpOptions::core`; production paths default to the factorized
+//! core.
+//!
+//! Variable lower/upper bounds are handled *natively* in the tableau
+//! instead of as constraint rows, so a branch decision `x ≤ ⌊v⌋` /
+//! `x ≥ ⌈v⌉` is a pure bound tightening: no new row, no artificial
+//! variable, no phase 1. The representation is the classic
+//! complemented-column ("bound flipping") scheme:
+//!
+//! * every column j stores the *shifted* variable x̃_j ∈ [0, range_j]
+//!   with range_j = hi_j − lo_j; `flipped[j]` means x_j = hi_j − x̃_j
+//!   (the column rests at its upper bound), otherwise x_j = lo_j + x̃_j;
+//! * all nonbasic columns rest at x̃ = 0, so dual feasibility is the
+//!   uniform condition d_j ≥ 0 — independent of the bound values;
+//! * the RHS column stores the shifted values of the basic variables.
+//!
+//! Because reduced costs do not depend on `b` or on the bounds, a basis
+//! that was optimal for *any* bound configuration stays dual feasible
+//! under *any other* bound configuration. [`DenseSimplex::set_var_bounds`]
+//! therefore only shifts the RHS column (O(m) per changed variable) and
+//! [`DenseSimplex::resolve_dual`] re-optimises by dual simplex from the
+//! incumbent basis — typically a handful of pivots, versus a full
+//! two-phase cold solve. Two documented cases break the warm invariant
+//! and force a cold fallback; see `set_var_bounds`.
+
+use super::bounds::{BasisSnapshot, SolveOutcome};
+use super::simplex::{Cmp, Lp};
+use crate::telemetry;
+
+const EPS: f64 = 1e-9;
+const PIVOT_EPS: f64 = 1e-7;
+/// Primal feasibility tolerance for the dual simplex leaving test.
+const FEAS_EPS: f64 = 1e-7;
+
+/// The tableau arena: built once per problem, re-solved many times under
+/// changing variable bounds. Shares [`SolveOutcome`] and [`BasisSnapshot`]
+/// with the factorized core — note the dense arena's `total` counts slack
+/// *and* artificial columns, so its snapshots and the factorized core's
+/// refuse each other on the dimension check rather than misapplying.
+pub struct DenseSimplex {
+    /// The problem (cloned once at construction — never per node).
+    lp: Lp,
+    n: usize,
+    m: usize,
+    /// Columns: [structural 0..n) [slacks) [artificials art_base..total).
+    total: usize,
+    cols: usize, // total + 1 (RHS)
+    art_base: usize,
+    art_used_end: usize,
+    num_art: usize,
+    a: Vec<f64>,
+    basis: Vec<usize>,
+    /// Shifted-space bounds per column: lo is always 0, `hi` is the range.
+    range: Vec<f64>,
+    flipped: Vec<bool>,
+    /// Active *original* structural bounds (branching mutates these).
+    var_lo: Vec<f64>,
+    var_hi: Vec<f64>,
+    scratch: Vec<f64>,
+    pivots: u64,
+    /// Bound flips (nonbasic column complements) — plain field, mirrored
+    /// into the telemetry registry at solve granularity.
+    flips: u64,
+    /// Cold tableau refactorisations ([`rebuild`](Self::rebuild) calls).
+    rebuilds: u64,
+    /// Pivot counter at the last cold rebuild — the eliminated tableau
+    /// accumulates FP error with every pivot, so warm chains refactorise
+    /// periodically (see [`refresh_due`](Self::refresh_due)).
+    pivots_at_rebuild: u64,
+    /// True while the current basis is known dual feasible (d_j ≥ 0 for
+    /// every column) — the precondition for `resolve_dual`.
+    dual_ready: bool,
+}
+
+impl DenseSimplex {
+    /// Clone the problem into a fresh arena. Bounds start at the problem's
+    /// own `lower`/`upper`.
+    pub fn new(lp: &Lp) -> Self {
+        let n = lp.num_vars;
+        let m = lp.constraints.len();
+        let num_slack = lp.constraints.iter().filter(|c| c.cmp != Cmp::Eq).count();
+        let art_base = n + num_slack;
+        let total = art_base + m; // worst case: one artificial per row
+        let cols = total + 1;
+        let var_lo = lp.lower.clone();
+        let var_hi = lp.upper.clone();
+        debug_assert!(var_lo.iter().all(|l| l.is_finite()), "finite lower bounds required");
+        DenseSimplex {
+            lp: lp.clone(),
+            n,
+            m,
+            total,
+            cols,
+            art_base,
+            art_used_end: art_base,
+            num_art: 0,
+            a: vec![0.0; (m + 1) * cols],
+            basis: vec![usize::MAX; m],
+            range: vec![f64::INFINITY; total],
+            flipped: vec![false; total],
+            var_lo,
+            var_hi,
+            scratch: vec![0.0; cols],
+            pivots: 0,
+            flips: 0,
+            rebuilds: 0,
+            pivots_at_rebuild: 0,
+            dual_ready: false,
+        }
+    }
+
+    /// Total simplex pivots performed by this arena so far.
+    pub fn pivots(&self) -> u64 {
+        self.pivots
+    }
+
+    /// Total bound flips (nonbasic column complements) so far.
+    pub fn bound_flips(&self) -> u64 {
+        self.flips
+    }
+
+    /// Total cold tableau refactorisations so far.
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
+    }
+
+    /// True when enough pivots have accumulated on the eliminated tableau
+    /// that the next solve should refactorise cold: the per-pivot FP error
+    /// compounds across a warm chain, and ~20 pivots per row is where it
+    /// starts to bite on planner-sized instances.
+    pub fn refresh_due(&self) -> bool {
+        self.pivots - self.pivots_at_rebuild > 20 * (self.m as u64 + 1)
+    }
+
+    /// Whether the incumbent basis can warm-start a dual re-solve.
+    pub fn dual_ready(&self) -> bool {
+        self.dual_ready
+    }
+
+    /// The active original bounds of structural variable `v`.
+    pub fn var_bounds(&self, v: usize) -> (f64, f64) {
+        (self.var_lo[v], self.var_hi[v])
+    }
+
+    /// O(1) artificial predicate: artificials occupy a contiguous column
+    /// range, so membership is an index comparison, not a list scan.
+    #[inline]
+    fn is_artificial(&self, j: usize) -> bool {
+        j >= self.art_base
+    }
+
+    #[inline]
+    fn at(&self, r: usize, c: usize) -> f64 {
+        self.a[r * self.cols + c]
+    }
+    #[inline]
+    fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.a[r * self.cols + c] = v;
+    }
+
+    // ---- tableau primitives ---------------------------------------------
+
+    /// Pivot on (pr, pc): normalise the pivot row and eliminate the column
+    /// everywhere else, objective row included. The hot loop — scaled row
+    /// copy + per-row branchless axpy so LLVM vectorizes it.
+    fn pivot(&mut self, pr: usize, pc: usize) {
+        let cols = self.cols;
+        let pivot = self.at(pr, pc);
+        debug_assert!(pivot.abs() > EPS);
+        let inv = 1.0 / pivot;
+        let row_start = pr * cols;
+        for (dst, src) in self.scratch.iter_mut().zip(&self.a[row_start..row_start + cols]) {
+            *dst = *src * inv;
+        }
+        self.a[row_start..row_start + cols].copy_from_slice(&self.scratch);
+        for r in 0..=self.m {
+            if r == pr {
+                continue;
+            }
+            let factor = self.at(r, pc);
+            if factor.abs() <= EPS {
+                if factor != 0.0 {
+                    self.set(r, pc, 0.0);
+                }
+                continue;
+            }
+            let dst = &mut self.a[r * cols..r * cols + cols];
+            for (d, s) in dst.iter_mut().zip(&self.scratch) {
+                *d -= factor * *s;
+            }
+            dst[pc] = 0.0;
+        }
+        self.basis[pr] = pc;
+        self.pivots += 1;
+    }
+
+    /// Complement a NONBASIC column: it now rests at the opposite bound.
+    /// O(m); requires a finite range.
+    fn flip_column(&mut self, j: usize) {
+        let rng = self.range[j];
+        debug_assert!(rng.is_finite());
+        let rhs = self.total;
+        for r in 0..=self.m {
+            let v = self.at(r, rhs) - self.at(r, j) * rng;
+            self.set(r, rhs, v);
+            let neg = -self.at(r, j);
+            self.set(r, j, neg);
+        }
+        self.flipped[j] = !self.flipped[j];
+        self.flips += 1;
+    }
+
+    /// Complement the BASIC variable of row `r` (its own column stays the
+    /// unit vector; reduced costs are unchanged).
+    fn complement_basic(&mut self, r: usize) {
+        let b = self.basis[r];
+        let rng = self.range[b];
+        debug_assert!(rng.is_finite());
+        for j in 0..self.cols {
+            if j != b {
+                let neg = -self.at(r, j);
+                self.set(r, j, neg);
+            }
+        }
+        let v = rng + self.at(r, self.total); // rng − old_rhs, post-negation
+        self.set(r, self.total, v);
+        self.flipped[b] = !self.flipped[b];
+    }
+
+    fn basic_row_of(&self, v: usize) -> Option<usize> {
+        self.basis.iter().position(|&b| b == v)
+    }
+
+    // ---- bound updates ---------------------------------------------------
+
+    /// Replace the bounds of structural variable `v`, keeping the tableau
+    /// consistent: only the RHS column shifts (O(m)). The basis stays dual
+    /// feasible except in two documented cases, which clear `dual_ready`
+    /// and force the next solve to run cold:
+    ///
+    /// 1. a column resting at a *finite* upper bound must un-flip when the
+    ///    new upper bound is infinite; un-flipping negates its reduced
+    ///    cost, which may go negative;
+    /// 2. widening a *fixed* (zero-range) column: while fixed it was
+    ///    excluded from the ratio tests, so its reduced cost may have
+    ///    drifted negative — complementing is free at range zero and
+    ///    restores d ≥ 0, except when it is ruled out by case 1.
+    pub fn set_var_bounds(&mut self, v: usize, new_lo: f64, new_hi: f64) {
+        debug_assert!(v < self.n && new_lo.is_finite() && new_lo <= new_hi + EPS);
+        // Case 2: repair a widened fixed column's reduced cost by a free
+        // complement (range is zero, so the RHS does not move).
+        if self.range[v] <= EPS
+            && new_hi - new_lo > EPS
+            && self.at(self.m, v) < -EPS
+            && self.basic_row_of(v).is_none()
+        {
+            self.flip_column(v);
+        }
+        // Case 1: un-flip before the reference bound becomes infinite.
+        if self.flipped[v] && !new_hi.is_finite() {
+            match self.basic_row_of(v) {
+                Some(r) => self.complement_basic(r), // reduced costs intact
+                None => {
+                    self.flip_column(v);
+                    if self.at(self.m, v) < -EPS {
+                        self.dual_ready = false;
+                    }
+                }
+            }
+        }
+        // Shift the reference bound: x̃ = x̃' + σ·(ref' − ref), so every
+        // row's RHS moves by −a_rv·σ·δ.
+        let sigma = if self.flipped[v] { -1.0 } else { 1.0 };
+        let ref_old = if self.flipped[v] { self.var_hi[v] } else { self.var_lo[v] };
+        let ref_new = if self.flipped[v] { new_hi } else { new_lo };
+        let delta = ref_new - ref_old;
+        if delta != 0.0 {
+            let rhs = self.total;
+            for r in 0..=self.m {
+                let val = self.at(r, rhs) - self.at(r, v) * sigma * delta;
+                self.set(r, rhs, val);
+            }
+        }
+        self.var_lo[v] = new_lo;
+        self.var_hi[v] = new_hi;
+        self.range[v] = new_hi - new_lo;
+    }
+
+    // ---- cold build ------------------------------------------------------
+
+    /// Rebuild the tableau from the problem at the *current* structural
+    /// bounds: shift every variable to rest at its lower bound, add one
+    /// slack per inequality, normalise rows to nonnegative RHS, and seed
+    /// the basis with slacks where possible, artificials elsewhere.
+    fn rebuild(&mut self) {
+        self.a.fill(0.0);
+        self.basis.fill(usize::MAX);
+        self.flipped.fill(false);
+        for j in 0..self.n {
+            self.range[j] = self.var_hi[j] - self.var_lo[j];
+        }
+        for j in self.n..self.total {
+            self.range[j] = f64::INFINITY;
+        }
+        let mut slack = self.n;
+        let mut art = self.art_base;
+        let rhs_col = self.total;
+        let rows = std::mem::take(&mut self.lp.constraints);
+        for (r, c) in rows.iter().enumerate() {
+            let mut b = c.rhs;
+            for &(i, coef) in &c.terms {
+                let cur = self.at(r, i);
+                self.set(r, i, cur + coef);
+                b -= coef * self.var_lo[i];
+            }
+            let sc = if c.cmp != Cmp::Eq {
+                let col = slack;
+                slack += 1;
+                self.set(r, col, if c.cmp == Cmp::Le { 1.0 } else { -1.0 });
+                Some(col)
+            } else {
+                None
+            };
+            if b < 0.0 {
+                for j in 0..self.total {
+                    let neg = -self.at(r, j);
+                    self.set(r, j, neg);
+                }
+                b = -b;
+            }
+            self.set(r, rhs_col, b);
+            match sc {
+                Some(col) if self.at(r, col) > 0.5 => self.basis[r] = col,
+                _ => {
+                    self.set(r, art, 1.0);
+                    self.basis[r] = art;
+                    art += 1;
+                }
+            }
+        }
+        self.lp.constraints = rows;
+        self.num_art = art - self.art_base;
+        self.art_used_end = art;
+        self.pivots_at_rebuild = self.pivots;
+        self.rebuilds += 1;
+        // Unused artificial slots can never enter.
+        for j in art..self.total {
+            self.range[j] = 0.0;
+        }
+        self.dual_ready = false;
+    }
+
+    /// Two-phase bounded primal simplex from a fresh tableau at the
+    /// current bounds.
+    pub fn solve_cold(&mut self) -> SolveOutcome {
+        if !telemetry::enabled() {
+            return self.solve_cold_inner();
+        }
+        let (p0, f0, r0) = (self.pivots, self.flips, self.rebuilds);
+        let out = self.solve_cold_inner();
+        telemetry::count("milp.cold_solves", 1);
+        self.report_deltas(p0, f0, r0);
+        out
+    }
+
+    /// Mirror per-solve counter deltas into the telemetry registry (called
+    /// once per solve, never inside the pivot loop).
+    fn report_deltas(&self, p0: u64, f0: u64, r0: u64) {
+        telemetry::count("milp.pivots", self.pivots - p0);
+        telemetry::count("milp.bound_flips", self.flips - f0);
+        telemetry::count("milp.refactorisations", self.rebuilds - r0);
+    }
+
+    fn solve_cold_inner(&mut self) -> SolveOutcome {
+        self.rebuild();
+        let max_iters = self.max_iters();
+        let m = self.m;
+        if self.num_art > 0 {
+            // Phase 1: minimise the artificial sum; start the objective row
+            // consistent with the artificial basis.
+            for j in self.art_base..self.art_used_end {
+                self.set(m, j, 1.0);
+            }
+            for r in 0..m {
+                if self.is_artificial(self.basis[r]) {
+                    for j in 0..self.cols {
+                        let v = self.at(m, j) - self.at(r, j);
+                        self.set(m, j, v);
+                    }
+                }
+            }
+            match self.run_primal(max_iters) {
+                SolveOutcome::Optimal => {}
+                SolveOutcome::Unbounded => return SolveOutcome::Infeasible, // phase 1 is bounded
+                out => return out,
+            }
+            let phase1 = -self.at(m, self.total);
+            if phase1 > 1e-6 {
+                return SolveOutcome::Infeasible;
+            }
+            // Drive degenerate basic artificials out, then freeze them all.
+            for r in 0..m {
+                if self.is_artificial(self.basis[r]) {
+                    for j in 0..self.art_base {
+                        if self.at(r, j).abs() > PIVOT_EPS {
+                            self.pivot(r, j);
+                            break;
+                        }
+                    }
+                }
+            }
+            for j in self.art_base..self.total {
+                self.range[j] = 0.0;
+            }
+            for j in 0..self.cols {
+                self.set(m, j, 0.0);
+            }
+        }
+        // Phase 2: the original objective, sign-adjusted for columns phase 1
+        // left resting at their upper bound.
+        for j in 0..self.n {
+            let c = self.lp.objective[j];
+            self.set(m, j, if self.flipped[j] { -c } else { c });
+        }
+        for r in 0..m {
+            let b = self.basis[r];
+            let coef = self.at(m, b);
+            if coef.abs() > EPS {
+                for j in 0..self.cols {
+                    let v = self.at(m, j) - coef * self.at(r, j);
+                    self.set(m, j, v);
+                }
+            }
+        }
+        let out = self.run_primal(max_iters);
+        self.dual_ready = out == SolveOutcome::Optimal;
+        out
+    }
+
+    fn max_iters(&self) -> usize {
+        50 * (self.m + self.n).max(100)
+    }
+
+    /// Primal simplex with the bounded-variable ratio test: a basic
+    /// variable may leave at its lower *or* upper bound, and the entering
+    /// variable's own range caps the step (a bound flip, no pivot).
+    fn run_primal(&mut self, max_iters: usize) -> SolveOutcome {
+        let m = self.m;
+        let total = self.total;
+        let bland_after = max_iters / 2;
+        for iter in 0..max_iters {
+            let use_bland = iter >= bland_after;
+            // Entering: most negative reduced cost (Dantzig), first
+            // negative under Bland; fixed columns can never improve.
+            let mut pc = usize::MAX;
+            let mut best = -PIVOT_EPS;
+            for j in 0..total {
+                if self.range[j] <= EPS {
+                    continue;
+                }
+                let rc = self.at(m, j);
+                if rc < best {
+                    pc = j;
+                    if use_bland {
+                        break;
+                    }
+                    best = rc;
+                }
+            }
+            if pc == usize::MAX {
+                return SolveOutcome::Optimal;
+            }
+            // Ratio test: rows limit the step at either bound of their
+            // basic variable; the entering column's own range competes.
+            let mut best_t = self.range[pc];
+            let mut pr = usize::MAX;
+            let mut at_upper = false;
+            for r in 0..m {
+                let alpha = self.at(r, pc);
+                if alpha > PIVOT_EPS {
+                    let t = self.at(r, total) / alpha;
+                    if t < best_t - EPS
+                        || (t < best_t + EPS
+                            && pr != usize::MAX
+                            && self.basis[r] < self.basis[pr])
+                    {
+                        best_t = t;
+                        pr = r;
+                        at_upper = false;
+                    }
+                } else if alpha < -PIVOT_EPS {
+                    let rb = self.range[self.basis[r]];
+                    if rb.is_finite() {
+                        let t = (rb - self.at(r, total)) / (-alpha);
+                        if t < best_t - EPS
+                            || (t < best_t + EPS
+                                && pr != usize::MAX
+                                && self.basis[r] < self.basis[pr])
+                        {
+                            best_t = t;
+                            pr = r;
+                            at_upper = true;
+                        }
+                    }
+                }
+            }
+            if pr == usize::MAX {
+                if best_t.is_infinite() {
+                    return SolveOutcome::Unbounded;
+                }
+                self.flip_column(pc); // step capped by the entering range
+                continue;
+            }
+            if at_upper {
+                self.complement_basic(pr);
+            }
+            self.pivot(pr, pc);
+        }
+        SolveOutcome::Stalled
+    }
+
+    // ---- dual simplex ----------------------------------------------------
+
+    /// Re-optimise after bound changes by dual simplex from the incumbent
+    /// basis. Precondition: `dual_ready()` — the caller must fall back to
+    /// [`solve_cold`](Self::solve_cold) otherwise. Maintains d ≥ 0
+    /// throughout, so `Infeasible` is a proof, not a guess.
+    pub fn resolve_dual(&mut self) -> SolveOutcome {
+        if !telemetry::enabled() {
+            return self.resolve_dual_inner();
+        }
+        let (p0, f0, r0) = (self.pivots, self.flips, self.rebuilds);
+        let out = self.resolve_dual_inner();
+        telemetry::count("milp.warm_solves", 1);
+        self.report_deltas(p0, f0, r0);
+        out
+    }
+
+    fn resolve_dual_inner(&mut self) -> SolveOutcome {
+        debug_assert!(self.dual_ready);
+        let max_iters = self.max_iters();
+        let m = self.m;
+        let total = self.total;
+        for _ in 0..max_iters {
+            // Leaving: the most infeasible basic variable (below its lower
+            // bound, or above its — necessarily finite — range).
+            let mut pr = usize::MAX;
+            let mut worst = FEAS_EPS;
+            let mut above = false;
+            for r in 0..m {
+                let v = self.at(r, total);
+                let rb = self.range[self.basis[r]];
+                if v < -worst {
+                    pr = r;
+                    worst = -v;
+                    above = false;
+                } else if v > rb + worst {
+                    pr = r;
+                    worst = v - rb;
+                    above = true;
+                }
+            }
+            if pr == usize::MAX {
+                // Primal feasible. FP drift over a long warm chain can
+                // leave a marginally negative reduced cost, so finish with
+                // primal phase-2 iterations — a single no-op entering scan
+                // when the basis is clean, a couple of pivots otherwise.
+                let out = self.run_primal(max_iters);
+                self.dual_ready = out == SolveOutcome::Optimal;
+                return out;
+            }
+            if above {
+                self.complement_basic(pr); // reduce to the below-lower case
+            }
+            // Entering: dual ratio test on the violated row. Strict
+            // improvement keeps the earliest column on ties (Bland-ish),
+            // which is enough anti-cycling in practice; the iteration cap
+            // catches the rest.
+            let mut pc = usize::MAX;
+            let mut best = f64::INFINITY;
+            for j in 0..total {
+                if self.range[j] <= EPS {
+                    continue;
+                }
+                let alpha = self.at(pr, j);
+                if alpha < -PIVOT_EPS {
+                    let ratio = self.at(m, j).max(0.0) / (-alpha);
+                    if pc == usize::MAX || ratio < best - EPS {
+                        pc = j;
+                        best = ratio;
+                    }
+                }
+            }
+            if pc != usize::MAX {
+                // Stability pass: among near-tied ratios take the column
+                // with the largest |alpha| — a pivot on a tiny element
+                // amplifies tableau error by 1/|alpha|, and the warm chain
+                // never refactorises between nodes.
+                let mut best_alpha = -self.at(pr, pc);
+                for j in 0..total {
+                    if self.range[j] <= EPS {
+                        continue;
+                    }
+                    let alpha = self.at(pr, j);
+                    if alpha < -PIVOT_EPS && -alpha > best_alpha {
+                        let ratio = self.at(m, j).max(0.0) / (-alpha);
+                        if ratio <= best + EPS {
+                            pc = j;
+                            best_alpha = -alpha;
+                        }
+                    }
+                }
+            }
+            if pc == usize::MAX {
+                // The violated row proves primal infeasibility; the basis
+                // stays dual feasible for the next warm start.
+                self.dual_ready = true;
+                return SolveOutcome::Infeasible;
+            }
+            self.pivot(pr, pc);
+        }
+        self.dual_ready = false;
+        SolveOutcome::Stalled
+    }
+
+    // ---- basis snapshots (cross-solve warm starts) -----------------------
+
+    /// Export the incumbent basis for a later [`solve_warm_from`] on a
+    /// structurally identical problem. Only an optimal basis is worth
+    /// carrying, so this returns `None` unless the arena is at a dual
+    /// feasible optimum (`dual_ready`).
+    ///
+    /// [`solve_warm_from`]: Self::solve_warm_from
+    pub fn snapshot(&self) -> Option<BasisSnapshot> {
+        if !self.dual_ready {
+            return None;
+        }
+        Some(BasisSnapshot {
+            n: self.n,
+            m: self.m,
+            total: self.total,
+            basis: self.basis.clone(),
+            flipped: self.flipped.clone(),
+        })
+    }
+
+    /// Solve by crashing a carried basis into a fresh tableau instead of
+    /// the two-phase cold start: rebuild at the current bounds, restore the
+    /// snapshot's resting bounds and basic set by direct elimination, then
+    /// finish with whichever simplex the restored point admits — primal
+    /// when the basis is still primal feasible, dual when only the reduced
+    /// costs survived the coefficient change. Returns `None` when the
+    /// snapshot cannot be applied (structural mismatch, a flip onto an
+    /// infinite bound, or a basis that is neither primal nor dual feasible
+    /// after the crash) — the caller falls back to [`solve_cold`].
+    ///
+    /// The crash skips phase 1 entirely: artificial columns are frozen at
+    /// range zero, and any row the crash could not cover stays on its
+    /// artificial, which the feasibility classification then treats like
+    /// any other out-of-range basic variable.
+    ///
+    /// [`solve_cold`]: Self::solve_cold
+    pub fn solve_warm_from(&mut self, snap: &BasisSnapshot) -> Option<SolveOutcome> {
+        if !telemetry::enabled() {
+            return self.solve_warm_from_inner(snap);
+        }
+        let (p0, f0, r0) = (self.pivots, self.flips, self.rebuilds);
+        let out = self.solve_warm_from_inner(snap);
+        if out.is_some() {
+            telemetry::count("milp.crash_warm_solves", 1);
+        }
+        self.report_deltas(p0, f0, r0);
+        out
+    }
+
+    fn solve_warm_from_inner(&mut self, snap: &BasisSnapshot) -> Option<SolveOutcome> {
+        if snap.n != self.n || snap.m != self.m || snap.total != self.total {
+            return None;
+        }
+        self.rebuild();
+        // Restore resting bounds while every structural column is still
+        // nonbasic: a flip onto an infinite range is unrepresentable, so
+        // the whole snapshot is refused rather than half-applied.
+        for j in 0..self.n {
+            if snap.flipped[j] {
+                if !self.range[j].is_finite() {
+                    return None;
+                }
+                self.flip_column(j);
+            }
+        }
+        for j in self.n..self.total {
+            if snap.flipped[j] {
+                return None; // slacks/artificials have no upper bound
+            }
+        }
+        // Crash the basic set in. Rows whose slack the snapshot keeps basic
+        // are already in place; for the rest, eliminate the snapshot column
+        // into the row with the largest pivot magnitude among rows whose
+        // current basic variable is *not* wanted (stability over speed —
+        // each crash pivot is a full tableau elimination either way).
+        let mut wanted = vec![false; self.total];
+        for &b in &snap.basis {
+            if b < self.art_base {
+                wanted[b] = true;
+            }
+        }
+        for &j in &snap.basis {
+            if j >= self.art_base || self.basic_row_of(j).is_some() {
+                continue;
+            }
+            let mut pr = usize::MAX;
+            let mut best = PIVOT_EPS;
+            for r in 0..self.m {
+                if wanted[self.basis[r]] {
+                    continue;
+                }
+                let a = self.at(r, j).abs();
+                if a > best {
+                    best = a;
+                    pr = r;
+                }
+            }
+            if pr == usize::MAX {
+                continue; // singular direction: partial crash is fine
+            }
+            self.pivot(pr, j);
+        }
+        // Phase 1 never ran: freeze every artificial so it can only leave.
+        for j in self.art_base..self.total {
+            self.range[j] = 0.0;
+        }
+        // Phase-2 objective row over the crashed basis.
+        let mrow = self.m;
+        for j in 0..self.cols {
+            self.set(mrow, j, 0.0);
+        }
+        for j in 0..self.n {
+            let c = self.lp.objective[j];
+            self.set(mrow, j, if self.flipped[j] { -c } else { c });
+        }
+        for r in 0..self.m {
+            let b = self.basis[r];
+            let coef = self.at(mrow, b);
+            if coef.abs() > EPS {
+                for j in 0..self.cols {
+                    let v = self.at(mrow, j) - coef * self.at(r, j);
+                    self.set(mrow, j, v);
+                }
+            }
+        }
+        // Classify the restored point and finish with the matching method.
+        let primal_ok = (0..self.m).all(|r| {
+            let v = self.at(r, self.total);
+            let rb = self.range[self.basis[r]];
+            v >= -FEAS_EPS && v <= rb + FEAS_EPS
+        });
+        if primal_ok {
+            let max_iters = self.max_iters();
+            let out = self.run_primal(max_iters);
+            self.dual_ready = out == SolveOutcome::Optimal;
+            return Some(out);
+        }
+        let dual_ok = (0..self.total)
+            .all(|j| self.range[j] <= EPS || self.at(mrow, j) >= -PIVOT_EPS);
+        if dual_ok {
+            self.dual_ready = true;
+            return Some(self.resolve_dual_inner());
+        }
+        None
+    }
+
+    // ---- extraction ------------------------------------------------------
+
+    /// The structural solution and its objective value under the original
+    /// (unshifted) variables.
+    pub fn extract(&self) -> (Vec<f64>, f64) {
+        let mut shifted = vec![0.0; self.total];
+        for r in 0..self.m {
+            shifted[self.basis[r]] = self.at(r, self.total);
+        }
+        let mut x = vec![0.0; self.n];
+        for j in 0..self.n {
+            x[j] = if self.flipped[j] {
+                self.var_hi[j] - shifted[j]
+            } else {
+                self.var_lo[j] + shifted[j]
+            };
+        }
+        let objective = self
+            .lp
+            .objective
+            .iter()
+            .zip(&x)
+            .map(|(c, v)| c * v)
+            .sum::<f64>();
+        (x, objective)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cold(lp: &Lp) -> (DenseSimplex, f64) {
+        let mut s = DenseSimplex::new(lp);
+        assert_eq!(s.solve_cold(), SolveOutcome::Optimal);
+        let (_, obj) = s.extract();
+        (s, obj)
+    }
+
+    #[test]
+    fn native_bounds_replace_rows() {
+        // max 10a + 13b + 7c, 3a + 4b + 2c <= 6, a,b,c in [0,1]:
+        // LP optimum is fractional but must be <= -20 (the integer best).
+        let mut lp = Lp::new(3);
+        lp.set_objective(0, -10.0);
+        lp.set_objective(1, -13.0);
+        lp.set_objective(2, -7.0);
+        for v in 0..3 {
+            lp.set_bounds(v, 0.0, 1.0);
+        }
+        lp.add(vec![(0, 3.0), (1, 4.0), (2, 2.0)], Cmp::Le, 6.0);
+        let (_, obj) = cold(&lp);
+        assert!(obj <= -20.0 + 1e-6, "obj={obj}");
+    }
+
+    #[test]
+    fn nonzero_lower_bounds_shift_correctly() {
+        // min x + y, x in [2,5], y in [1,4], x + y >= 4 ⇒ 4 at a bound mix.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.set_objective(1, 1.0);
+        lp.set_bounds(0, 2.0, 5.0);
+        lp.set_bounds(1, 1.0, 4.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Ge, 4.0);
+        let (s, obj) = cold(&lp);
+        let (x, _) = s.extract();
+        assert!((obj - 4.0).abs() < 1e-6, "x={x:?} obj={obj}");
+        assert!(x[0] >= 2.0 - 1e-9 && x[1] >= 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn dual_resolve_after_tightening_matches_cold() {
+        // min 2x + 3y, x + y >= 4, y <= 3 ⇒ (4,0) cost 8. Tighten x <= 1:
+        // ⇒ (1,3) cost 11. Warm dual re-solve must agree with a cold solve.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 2.0);
+        lp.set_objective(1, 3.0);
+        lp.set_bounds(1, 0.0, 3.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Ge, 4.0);
+        let (mut s, obj) = cold(&lp);
+        assert!((obj - 8.0).abs() < 1e-6);
+        s.set_var_bounds(0, 0.0, 1.0);
+        assert!(s.dual_ready());
+        let p0 = s.pivots();
+        assert_eq!(s.resolve_dual(), SolveOutcome::Optimal);
+        let (x, obj) = s.extract();
+        assert!((obj - 11.0).abs() < 1e-6, "x={x:?} obj={obj}");
+        // And the warm path must be cheaper than the cold one was.
+        let warm_pivots = s.pivots() - p0;
+        let mut lp2 = lp.clone();
+        lp2.set_bounds(0, 0.0, 1.0);
+        let mut s2 = DenseSimplex::new(&lp2);
+        assert_eq!(s2.solve_cold(), SolveOutcome::Optimal);
+        assert!(
+            warm_pivots <= s2.pivots(),
+            "warm {warm_pivots} > cold {}",
+            s2.pivots()
+        );
+    }
+
+    #[test]
+    fn bound_revert_recovers_original_optimum() {
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 2.0);
+        lp.set_objective(1, 3.0);
+        lp.set_bounds(1, 0.0, 3.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Ge, 4.0);
+        let (mut s, _) = cold(&lp);
+        // Tighten then revert (the branch-and-revert motion of B&B).
+        s.set_var_bounds(0, 0.0, 1.0);
+        if s.dual_ready() {
+            s.resolve_dual();
+        } else {
+            s.solve_cold();
+        }
+        s.set_var_bounds(0, 0.0, f64::INFINITY);
+        let out = if s.dual_ready() {
+            s.resolve_dual()
+        } else {
+            s.solve_cold()
+        };
+        assert_eq!(out, SolveOutcome::Optimal);
+        let (_, obj) = s.extract();
+        assert!((obj - 8.0).abs() < 1e-6, "obj={obj}");
+    }
+
+    #[test]
+    fn dual_detects_infeasible_bound_combination() {
+        // x + y <= 3 with x >= 2, y >= 2 tightened in: infeasible.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Le, 3.0);
+        let (mut s, _) = cold(&lp);
+        s.set_var_bounds(0, 2.0, f64::INFINITY);
+        s.set_var_bounds(1, 2.0, f64::INFINITY);
+        assert!(s.dual_ready());
+        assert_eq!(s.resolve_dual(), SolveOutcome::Infeasible);
+        // The proof leaves the basis dual feasible: reverting re-solves warm.
+        assert!(s.dual_ready());
+        s.set_var_bounds(0, 0.0, f64::INFINITY);
+        s.set_var_bounds(1, 0.0, f64::INFINITY);
+        assert_eq!(s.resolve_dual(), SolveOutcome::Optimal);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_identical_problem() {
+        // Crash-warming an arena on the *same* problem must land on the
+        // same optimum, and the snapshot requires an optimal basis.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 2.0);
+        lp.set_objective(1, 3.0);
+        lp.set_bounds(1, 0.0, 3.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Ge, 4.0);
+        let fresh = DenseSimplex::new(&lp);
+        assert!(fresh.snapshot().is_none(), "unsolved arena has no basis");
+        let (s, obj) = cold(&lp);
+        let snap = s.snapshot().expect("optimal basis");
+        assert_eq!(snap.num_vars(), 2);
+        let mut s2 = DenseSimplex::new(&lp);
+        let out = s2.solve_warm_from(&snap).expect("crash applies");
+        assert_eq!(out, SolveOutcome::Optimal);
+        let (_, obj2) = s2.extract();
+        assert!((obj - obj2).abs() < 1e-9, "{obj} vs {obj2}");
+    }
+
+    #[test]
+    fn snapshot_refuses_structural_mismatch() {
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.add(vec![(0, 1.0), (1, 1.0)], Cmp::Ge, 2.0);
+        let (s, _) = cold(&lp);
+        let snap = s.snapshot().unwrap();
+        let mut other = Lp::new(3);
+        other.set_objective(0, 1.0);
+        other.add(vec![(0, 1.0), (1, 1.0), (2, 1.0)], Cmp::Ge, 2.0);
+        let mut arena = DenseSimplex::new(&other);
+        assert!(arena.solve_warm_from(&snap).is_none());
+    }
+
+    #[test]
+    fn randomized_crash_warm_matches_cold_under_coefficient_drift() {
+        // The cross-solve scenario: same structure, perturbed coefficients
+        // and RHS (a moved T̂ / re-priced epoch). The crash-warmed solve
+        // must agree with a cold solve on the perturbed problem whenever it
+        // applies, and must never misreport feasibility.
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(0xC4A5);
+        let mut applied = 0usize;
+        for case in 0..60 {
+            let n = 3 + rng.index(4);
+            let m = 2 + rng.index(4);
+            let mut lp = Lp::new(n);
+            for j in 0..n {
+                lp.set_objective(j, rng.range_f64(0.1, 3.0));
+                if rng.index(2) == 0 {
+                    lp.set_bounds(j, 0.0, rng.range_f64(1.0, 6.0));
+                }
+            }
+            let mut rows: Vec<(Vec<(usize, f64)>, Cmp, f64)> = Vec::new();
+            for _ in 0..m {
+                let terms: Vec<(usize, f64)> =
+                    (0..n).map(|j| (j, rng.range_f64(0.1, 2.0))).collect();
+                let cmp = match rng.index(3) {
+                    0 => Cmp::Le,
+                    1 => Cmp::Eq,
+                    _ => Cmp::Ge,
+                };
+                rows.push((terms, cmp, rng.range_f64(1.0, 5.0)));
+            }
+            for (terms, cmp, rhs) in &rows {
+                lp.add(terms.clone(), *cmp, *rhs);
+            }
+            let mut s = DenseSimplex::new(&lp);
+            if s.solve_cold() != SolveOutcome::Optimal {
+                continue;
+            }
+            let snap = s.snapshot().unwrap();
+            // Perturb every coefficient by up to ±10% (same sparsity).
+            let mut lp2 = Lp::new(n);
+            for j in 0..n {
+                lp2.set_objective(j, lp.objective[j]);
+                lp2.set_bounds(j, lp.lower[j], lp.upper[j]);
+            }
+            for (terms, cmp, rhs) in &rows {
+                let terms2: Vec<(usize, f64)> = terms
+                    .iter()
+                    .map(|&(j, c)| (j, c * rng.range_f64(0.9, 1.1)))
+                    .collect();
+                lp2.add(terms2, *cmp, rhs * rng.range_f64(0.9, 1.1));
+            }
+            let mut warm_arena = DenseSimplex::new(&lp2);
+            let warm = warm_arena.solve_warm_from(&snap);
+            let mut cold_arena = DenseSimplex::new(&lp2);
+            let reference = cold_arena.solve_cold();
+            match (warm, reference) {
+                (Some(SolveOutcome::Optimal), SolveOutcome::Optimal) => {
+                    applied += 1;
+                    let (_, a) = warm_arena.extract();
+                    let (_, b) = cold_arena.extract();
+                    assert!(
+                        (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0),
+                        "case {case}: crash-warm {a} vs cold {b}"
+                    );
+                }
+                (Some(SolveOutcome::Infeasible), SolveOutcome::Infeasible) => {}
+                // A refused or inconclusive crash is always allowed — the
+                // caller re-solves cold. A *wrong* verdict is not.
+                (None | Some(SolveOutcome::Stalled), _) => {}
+                (w, c) => panic!("case {case}: crash-warm {w:?} vs cold {c:?}"),
+            }
+        }
+        assert!(applied >= 10, "crash warm almost never applied ({applied})");
+    }
+
+    #[test]
+    fn randomized_warm_equals_cold_under_bound_walks() {
+        // Random planner-like LPs; random tighten/revert walks; after every
+        // step the warm (dual) optimum must match a from-scratch cold solve.
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(0xB0D5);
+        for case in 0..40 {
+            let n = 2 + rng.index(4);
+            let m = 2 + rng.index(4);
+            let mut lp = Lp::new(n);
+            for j in 0..n {
+                lp.set_objective(j, rng.range_f64(0.1, 3.0));
+                if rng.index(2) == 0 {
+                    lp.set_bounds(j, 0.0, rng.range_f64(2.0, 8.0));
+                }
+            }
+            for _ in 0..m {
+                let terms: Vec<(usize, f64)> =
+                    (0..n).map(|j| (j, rng.range_f64(0.1, 2.0))).collect();
+                let cmp = match rng.index(4) {
+                    0 => Cmp::Le,
+                    1 => Cmp::Eq,
+                    _ => Cmp::Ge,
+                };
+                lp.add(terms, cmp, rng.range_f64(1.0, 6.0));
+            }
+            let mut s = DenseSimplex::new(&lp);
+            if s.solve_cold() != SolveOutcome::Optimal {
+                continue;
+            }
+            let mut cur: Vec<(f64, f64)> = (0..n).map(|j| (lp.lower[j], lp.upper[j])).collect();
+            for step in 0..6 {
+                let v = rng.index(n);
+                let (lo0, hi0) = (lp.lower[v], lp.upper[v]);
+                let (nlo, nhi) = if rng.index(3) == 0 {
+                    (lo0, hi0) // revert to root
+                } else {
+                    let nlo = lo0 + rng.range_f64(0.0, 2.0);
+                    let cap = if hi0.is_finite() { hi0 } else { nlo + 4.0 };
+                    let nhi = nlo.max(rng.range_f64(nlo, cap.max(nlo)));
+                    (nlo, nhi)
+                };
+                s.set_var_bounds(v, nlo, nhi);
+                cur[v] = (nlo, nhi);
+                let warm = if s.dual_ready() {
+                    s.resolve_dual()
+                } else {
+                    s.solve_cold()
+                };
+                let mut lp2 = lp.clone();
+                for j in 0..n {
+                    lp2.set_bounds(j, cur[j].0, cur[j].1);
+                }
+                let mut s2 = DenseSimplex::new(&lp2);
+                let reference = s2.solve_cold();
+                match (warm, reference) {
+                    (SolveOutcome::Optimal, SolveOutcome::Optimal) => {
+                        let (_, a) = s.extract();
+                        let (_, b) = s2.extract();
+                        assert!(
+                            (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0),
+                            "case {case} step {step}: warm {a} vs cold {b}"
+                        );
+                    }
+                    (SolveOutcome::Infeasible, SolveOutcome::Infeasible) => {}
+                    (w, c) => panic!("case {case} step {step}: warm {w:?} vs cold {c:?}"),
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! LU factorization of the simplex basis with a product-form eta file —
+//! the numerical core behind [`super::bounds::BoundedSimplex`].
+//!
+//! The basis matrix `B` (one column per basic variable) is factorized as
+//! `P·B = L·U` by Gaussian elimination with partial pivoting. Each simplex
+//! pivot then *updates* the factorization instead of re-eliminating the
+//! whole tableau: replacing the basic column in position `r` by the entering
+//! column multiplies `B` on the right by an elementary ("eta") matrix whose
+//! `r`-th column is the pivot column `α = B⁻¹·a_q`, so
+//!
+//! * **FTRAN** (`B·x = v`) applies the LU solves and then each eta in
+//!   order: `t = x_r/α_r`, `x_i ← x_i − α_i·t (i ≠ r)`, `x_r ← t`;
+//! * **BTRAN** (`Bᵀ·x = v`) applies the etas in *reverse* order —
+//!   `x_r ← (x_r − Σ_{i≠r} α_i·x_i)/α_r` — and then the transposed LU
+//!   solves.
+//!
+//! The eta file grows by one dense column per pivot; once it reaches
+//! [`BoundedSimplex::eta_limit`](super::bounds::BoundedSimplex) the owner
+//! refactorizes from scratch, which both caps the per-solve work and
+//! erases accumulated floating-point drift — the property that lets the
+//! branch-and-bound incumbent check be a cheap residual test instead of a
+//! from-scratch feasibility re-solve.
+//!
+//! Vectors move between two index spaces: FTRAN maps *row space* (the
+//! right-hand side, a column of `A`) to *basis-position space* (the order
+//! of the basic variables), BTRAN the reverse. All eta arithmetic happens
+//! in basis-position space.
+
+/// Pivot magnitudes below this during elimination mean the basis column is
+/// linearly dependent on its predecessors (the owner repairs the basis).
+const SING_EPS: f64 = 1e-10;
+
+/// `P·B = L·U` factors plus the product-form eta file.
+pub(crate) struct LuFactors {
+    m: usize,
+    /// Row-major `m×m`: unit-lower `L` below the diagonal, `U` on and
+    /// above it, rows already permuted by `perm`.
+    lu: Vec<f64>,
+    /// `perm[k]` = original row index at permuted position `k`.
+    perm: Vec<usize>,
+    /// Eta columns `(r, α)` in pivot order.
+    etas: Vec<(usize, Vec<f64>)>,
+}
+
+impl LuFactors {
+    pub fn new(m: usize) -> Self {
+        LuFactors {
+            m,
+            lu: vec![0.0; m * m],
+            perm: (0..m).collect(),
+            etas: Vec::new(),
+        }
+    }
+
+    /// Number of eta updates since the last refactorization.
+    pub fn eta_count(&self) -> usize {
+        self.etas.len()
+    }
+
+    /// Factorize the column-major `m×m` basis matrix. On success the eta
+    /// file is cleared. `Err(k)` reports the first basis position whose
+    /// column is linearly dependent; [`unpivoted_rows`](Self::unpivoted_rows)
+    /// then lists the rows still available for a repair substitution.
+    pub fn factorize(&mut self, bmat: &[f64]) -> Result<(), usize> {
+        let m = self.m;
+        debug_assert_eq!(bmat.len(), m * m);
+        for i in 0..m {
+            for k in 0..m {
+                self.lu[i * m + k] = bmat[k * m + i];
+            }
+        }
+        for (i, p) in self.perm.iter_mut().enumerate() {
+            *p = i;
+        }
+        for k in 0..m {
+            let mut piv_row = k;
+            let mut piv = self.lu[k * m + k].abs();
+            for r in k + 1..m {
+                let v = self.lu[r * m + k].abs();
+                if v > piv {
+                    piv = v;
+                    piv_row = r;
+                }
+            }
+            if piv < SING_EPS {
+                return Err(k);
+            }
+            if piv_row != k {
+                for j in 0..m {
+                    self.lu.swap(k * m + j, piv_row * m + j);
+                }
+                self.perm.swap(k, piv_row);
+            }
+            let d = self.lu[k * m + k];
+            for r in k + 1..m {
+                let f = self.lu[r * m + k] / d;
+                self.lu[r * m + k] = f;
+                if f != 0.0 {
+                    for j in k + 1..m {
+                        self.lu[r * m + j] -= f * self.lu[k * m + j];
+                    }
+                }
+            }
+        }
+        self.etas.clear();
+        Ok(())
+    }
+
+    /// Rows not yet pivoted when [`factorize`](Self::factorize) failed at
+    /// position `k` — candidates for a logical-column repair.
+    pub fn unpivoted_rows(&self, k: usize) -> &[usize] {
+        &self.perm[k..]
+    }
+
+    /// Record the basis change "position `r` now holds the column whose
+    /// FTRAN image is `alpha`".
+    pub fn push_eta(&mut self, r: usize, alpha: Vec<f64>) {
+        debug_assert!(alpha[r].abs() > 0.0);
+        self.etas.push((r, alpha));
+    }
+
+    /// Solve `B·x = v` in place. Input in row space, output in
+    /// basis-position space. `tmp` is caller-owned scratch of length `m`.
+    pub fn ftran(&self, x: &mut [f64], tmp: &mut [f64]) {
+        let m = self.m;
+        for k in 0..m {
+            tmp[k] = x[self.perm[k]];
+        }
+        for k in 0..m {
+            let v = tmp[k];
+            if v != 0.0 {
+                for r in k + 1..m {
+                    tmp[r] -= self.lu[r * m + k] * v;
+                }
+            }
+        }
+        for k in (0..m).rev() {
+            let mut v = tmp[k];
+            for j in k + 1..m {
+                v -= self.lu[k * m + j] * tmp[j];
+            }
+            tmp[k] = v / self.lu[k * m + k];
+        }
+        x[..m].copy_from_slice(&tmp[..m]);
+        for (r, alpha) in &self.etas {
+            let t = x[*r] / alpha[*r];
+            if t != 0.0 {
+                for (xi, ai) in x.iter_mut().zip(alpha) {
+                    *xi -= ai * t;
+                }
+            }
+            x[*r] = t;
+        }
+    }
+
+    /// Solve `Bᵀ·x = v` in place. Input in basis-position space, output in
+    /// row space. `tmp` is caller-owned scratch of length `m`.
+    pub fn btran(&self, x: &mut [f64], tmp: &mut [f64]) {
+        let m = self.m;
+        for (r, alpha) in self.etas.iter().rev() {
+            let mut s = 0.0;
+            for (i, ai) in alpha.iter().enumerate() {
+                if i != *r {
+                    s += ai * x[i];
+                }
+            }
+            x[*r] = (x[*r] - s) / alpha[*r];
+        }
+        // Uᵀ·w = x: forward substitution down the columns of U.
+        for k in 0..m {
+            let mut v = x[k];
+            for i in 0..k {
+                v -= self.lu[i * m + k] * x[i];
+            }
+            x[k] = v / self.lu[k * m + k];
+        }
+        // Lᵀ·z = w: backward substitution, unit diagonal.
+        for k in (0..m).rev() {
+            let mut v = x[k];
+            for i in k + 1..m {
+                v -= self.lu[i * m + k] * x[i];
+            }
+            x[k] = v;
+        }
+        for k in 0..m {
+            tmp[self.perm[k]] = x[k];
+        }
+        x[..m].copy_from_slice(&tmp[..m]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Column-major helper.
+    fn mat(cols: &[&[f64]]) -> Vec<f64> {
+        cols.iter().flat_map(|c| c.iter().copied()).collect()
+    }
+
+    #[test]
+    fn lu_solves_match_direct_elimination() {
+        // B = [[2,1,0],[1,3,1],[0,1,4]] (columns listed column-major).
+        let b = mat(&[&[2.0, 1.0, 0.0], &[1.0, 3.0, 1.0], &[0.0, 1.0, 4.0]]);
+        let mut f = LuFactors::new(3);
+        f.factorize(&b).unwrap();
+        let mut tmp = vec![0.0; 3];
+        // FTRAN: B·x = [3, 8, 13] ⇒ x = [1, 1, 3].
+        let mut x = vec![3.0, 8.0, 13.0];
+        f.ftran(&mut x, &mut tmp);
+        for (got, want) in x.iter().zip(&[1.0, 1.0, 3.0]) {
+            assert!((got - want).abs() < 1e-12, "x={x:?}");
+        }
+        // BTRAN: Bᵀ·y = [3, 5, 5] ⇒ y = [1, 1, 1].
+        let mut y = vec![3.0, 5.0, 5.0];
+        f.btran(&mut y, &mut tmp);
+        for (got, want) in y.iter().zip(&[1.0, 1.0, 1.0]) {
+            assert!((got - want).abs() < 1e-12, "y={y:?}");
+        }
+    }
+
+    #[test]
+    fn eta_update_matches_refactorization() {
+        // Start from B = I, replace position 1 with column a = [1, 2, 1]:
+        // the eta image is α = B⁻¹a = a itself.
+        let id = mat(&[&[1.0, 0.0, 0.0], &[0.0, 1.0, 0.0], &[0.0, 0.0, 1.0]]);
+        let mut f = LuFactors::new(3);
+        f.factorize(&id).unwrap();
+        let a = [1.0, 2.0, 1.0];
+        let mut alpha = a.to_vec();
+        let mut tmp = vec![0.0; 3];
+        f.ftran(&mut alpha, &mut tmp);
+        f.push_eta(1, alpha);
+        assert_eq!(f.eta_count(), 1);
+        // Reference: factorize B' = [e0, a, e2] directly.
+        let bp = mat(&[&[1.0, 0.0, 0.0], &a, &[0.0, 0.0, 1.0]]);
+        let mut g = LuFactors::new(3);
+        g.factorize(&bp).unwrap();
+        let v = [4.0, 7.0, 9.0];
+        let (mut x1, mut x2) = (v.to_vec(), v.to_vec());
+        f.ftran(&mut x1, &mut tmp);
+        g.ftran(&mut x2, &mut tmp);
+        for (p, q) in x1.iter().zip(&x2) {
+            assert!((p - q).abs() < 1e-12, "{x1:?} vs {x2:?}");
+        }
+        let (mut y1, mut y2) = (v.to_vec(), v.to_vec());
+        f.btran(&mut y1, &mut tmp);
+        g.btran(&mut y2, &mut tmp);
+        for (p, q) in y1.iter().zip(&y2) {
+            assert!((p - q).abs() < 1e-12, "{y1:?} vs {y2:?}");
+        }
+    }
+
+    #[test]
+    fn singular_basis_reports_dependent_position() {
+        // Third column = first + second ⇒ dependent at elimination step 2.
+        let b = mat(&[&[1.0, 0.0, 1.0], &[0.0, 1.0, 1.0], &[1.0, 1.0, 2.0]]);
+        let mut f = LuFactors::new(3);
+        let err = f.factorize(&b).unwrap_err();
+        assert_eq!(err, 2);
+        assert_eq!(f.unpivoted_rows(err).len(), 1);
+    }
+}

@@ -7,6 +7,144 @@
 //! remaining workload demand at the target makespan T̂), then greedily packs
 //! by value density with a bounded-copies constraint. Exact 0/1 DP is also
 //! provided for test cross-checks.
+//!
+//! [`round_integral`] is the knapsack mode's LP engine: the iterative
+//! rounding loop that used to re-solve a fresh dense LP per fix now runs on
+//! one factorized [`BoundedSimplex`] arena — the root crash-warms from a
+//! basis carried across T̂ iterates (and across planner-session calls), and
+//! every subsequent fix is a native bound change dual-re-solved from the
+//! arena's current basis instead of a cold start.
+
+use super::bounds::{BasisSnapshot, BoundedSimplex, SolveOutcome};
+use super::simplex::Lp;
+
+/// Counters from one [`round_integral`] run; the bisection folds them into
+/// its [`SearchStats`](crate::sched::binary_search::SearchStats).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundingStats {
+    /// Fix rounds performed (0 when the relaxation was already integral).
+    pub rounds: usize,
+    pub lp_solves: usize,
+    /// Solves served warm (crash from the carried basis, or dual re-solve
+    /// after a bound fix).
+    pub warm_solves: usize,
+    pub cold_solves: usize,
+    pub pivots: u64,
+    pub refactorisations: u64,
+    pub eta_updates: u64,
+    pub dse_pivots: u64,
+    /// The root LP was crash-warmed from the carried basis.
+    pub from_basis: bool,
+}
+
+/// Solve `lp`'s relaxation and round the `watch` variables to integers by
+/// iterative bound fixing: repeatedly fix the largest fractional watched
+/// variable (rounding up first, down as the fallback) and re-solve, until
+/// every watched variable is integral or a fix round fails both directions.
+///
+/// Returns the rounded watched values (`None` when rounding failed or the
+/// relaxation is infeasible), the counters, and the *root* basis of this
+/// run — the carry for the next, structurally identical call. A `carry`
+/// whose dimensions don't match is refused by the arena and the root runs
+/// cold; a warm root is only trusted when it reaches `Optimal`, and a warm
+/// dual re-solve that stalls or claims infeasibility re-runs cold before
+/// the fix direction is abandoned (same distrust policy as the B&B).
+pub fn round_integral(
+    lp: &Lp,
+    watch: std::ops::Range<usize>,
+    carry: Option<&BasisSnapshot>,
+    max_rounds: usize,
+) -> (Option<Vec<f64>>, RoundingStats, Option<BasisSnapshot>) {
+    let mut st = RoundingStats::default();
+    let mut arena = BoundedSimplex::new(lp);
+
+    st.lp_solves += 1;
+    let mut out = match carry.and_then(|snap| arena.solve_warm_from(snap)) {
+        Some(SolveOutcome::Optimal) => {
+            st.warm_solves += 1;
+            st.from_basis = true;
+            SolveOutcome::Optimal
+        }
+        _ => {
+            st.cold_solves += 1;
+            arena.solve_cold()
+        }
+    };
+    let root_basis = (out == SolveOutcome::Optimal)
+        .then(|| arena.snapshot())
+        .flatten();
+
+    let mut finish = |arena: &BoundedSimplex, st: &mut RoundingStats| {
+        st.pivots = arena.pivots();
+        st.refactorisations = arena.refactorisations();
+        st.eta_updates = arena.eta_updates();
+        st.dse_pivots = arena.dse_pivots();
+    };
+
+    let rounded = loop {
+        if out != SolveOutcome::Optimal {
+            finish(&arena, &mut st);
+            return (None, st, root_basis);
+        }
+        let (x, _) = arena.extract();
+        // Most fractional watched variable: largest value among those off
+        // an integer (matches the pre-arena rounding order).
+        let mut pick: Option<(usize, f64)> = None;
+        for v in watch.clone() {
+            let val = x[v];
+            if (val - val.round()).abs() > 1e-6 && pick.map(|(_, pv)| val > pv).unwrap_or(true) {
+                pick = Some((v, val));
+            }
+        }
+        let Some((v, val)) = pick else {
+            break watch.clone().map(|v| x[v].round()).collect::<Vec<f64>>();
+        };
+        st.rounds += 1;
+        if st.rounds > max_rounds {
+            finish(&arena, &mut st);
+            return (None, st, root_basis); // rounding failed to converge
+        }
+        let (olo, ohi) = arena.var_bounds(v);
+        // Prefer rounding up (more capacity), fall back to down. Each fix
+        // is a native bound change on the live arena, reverted in place
+        // when the direction is infeasible.
+        let mut fixed = false;
+        for target in [val.ceil(), val.floor()] {
+            if target < olo - 1e-9 || target > ohi + 1e-9 {
+                continue;
+            }
+            arena.set_var_bounds(v, target, target);
+            st.lp_solves += 1;
+            let o = if arena.dual_ready() && !arena.refresh_due() {
+                match arena.resolve_dual() {
+                    SolveOutcome::Stalled | SolveOutcome::Infeasible => {
+                        st.cold_solves += 1;
+                        arena.solve_cold()
+                    }
+                    warm => {
+                        st.warm_solves += 1;
+                        warm
+                    }
+                }
+            } else {
+                st.cold_solves += 1;
+                arena.solve_cold()
+            };
+            if o == SolveOutcome::Optimal {
+                out = o;
+                fixed = true;
+                break;
+            }
+            arena.set_var_bounds(v, olo, ohi);
+        }
+        if !fixed {
+            finish(&arena, &mut st);
+            return (None, st, root_basis);
+        }
+    };
+    finish(&arena, &mut st);
+    (Some(rounded), st, root_basis)
+}
 
 /// An item with a cost, a value, and a maximum copy count.
 #[derive(Clone, Copy, Debug)]
@@ -133,6 +271,50 @@ mod tests {
                 "greedy {greedy_val} vs dp {dp_val}"
             );
         }
+    }
+
+    #[test]
+    fn round_integral_rounds_and_carries() {
+        use crate::milp::simplex::{Cmp, Lp};
+        // min -(y0 + 2·y1) s.t. 3·y0 + 4·y1 ≤ 10, y ∈ [0,3]: the relaxation
+        // sits at y1 = 2.5 and the rounding must walk to (0, 2).
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -1.0);
+        lp.set_objective(1, -2.0);
+        lp.set_bounds(0, 0.0, 3.0);
+        lp.set_bounds(1, 0.0, 3.0);
+        lp.add(vec![(0, 3.0), (1, 4.0)], Cmp::Le, 10.0);
+        let (y, st, basis) = round_integral(&lp, 0..2, None, 16);
+        let y = y.expect("roundable");
+        assert!(y.iter().all(|v| (v - v.round()).abs() < 1e-9), "{y:?}");
+        assert!(3.0 * y[0] + 4.0 * y[1] <= 10.0 + 1e-6, "{y:?}");
+        assert!(st.rounds >= 1 && !st.from_basis && st.cold_solves >= 1);
+        let basis = basis.expect("root basis exported");
+        // Second run with the carry: root served warm, identical rounding.
+        let (y2, st2, basis2) = round_integral(&lp, 0..2, Some(&basis), 16);
+        assert_eq!(y, y2.expect("roundable again"));
+        assert!(st2.from_basis, "carry not used");
+        assert!(st2.warm_solves >= 1);
+        assert!(basis2.is_some(), "carry must keep re-exporting");
+        // A mismatched carry is refused, not trusted: run on a different LP.
+        let mut other = Lp::new(3);
+        other.set_objective(0, -1.0);
+        other.add(vec![(0, 1.0), (1, 1.0), (2, 1.0)], Cmp::Le, 2.5);
+        let (y3, st3, _) = round_integral(&other, 0..3, Some(&basis), 16);
+        assert!(y3.is_some());
+        assert!(!st3.from_basis);
+    }
+
+    #[test]
+    fn round_integral_reports_infeasible_relaxation() {
+        use crate::milp::simplex::{Cmp, Lp};
+        let mut lp = Lp::new(1);
+        lp.add(vec![(0, 1.0)], Cmp::Ge, 2.0);
+        lp.add(vec![(0, 1.0)], Cmp::Le, 1.0);
+        let (y, st, basis) = round_integral(&lp, 0..1, None, 8);
+        assert!(y.is_none());
+        assert!(basis.is_none(), "no optimum, no basis to carry");
+        assert_eq!(st.rounds, 0);
     }
 
     #[test]

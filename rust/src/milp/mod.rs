@@ -1,28 +1,40 @@
 //! Mixed-integer linear programming substrate, built from scratch:
-//! * [`bounds`] — the bounded-variable simplex core: one tableau arena
-//!   per problem, native variable bounds (no `x ≤ u` rows), cold
-//!   two-phase primal, warm dual-simplex re-solves under bound changes,
-//!   and [`BasisSnapshot`] export/import so the terminal basis of one
-//!   solve crash-warms the next, structurally identical one;
+//! * [`factor`] — LU factorization of the simplex basis with a
+//!   product-form eta file (FTRAN/BTRAN, Bartels–Golub-style updates,
+//!   singularity reporting for basis repair);
+//! * [`bounds`] — the factorized bounded-variable *revised* simplex core:
+//!   one arena per problem, native variable bounds (no `x ≤ u` rows),
+//!   periodic refactorisation, dual steepest-edge pricing, warm
+//!   dual-simplex re-solves under bound changes, and [`BasisSnapshot`]
+//!   export/import so the terminal basis of one solve crash-warms the
+//!   next, structurally identical one;
+//! * [`dense`] — the legacy dense eliminated-tableau arena, kept as the
+//!   A/B twin for property tests and as the benchmark baseline
+//!   (selectable via [`MilpOptions`]`::core`);
 //! * [`simplex`] — the [`Lp`] problem type and one-shot solve entry
 //!   points on top of the core;
 //! * [`branch_bound`] — best-first branch & bound with plunging for
 //!   integer variables: branches are pure bound tightenings dual-re-solved
-//!   from the parent basis, with LP-rounding/diving incumbents and
-//!   warm/cold/pivot accounting in [`MilpStats`];
+//!   from the parent basis, optional parallel subtree exploration on the
+//!   shared thread pool with a deterministic merge, LP-rounding/diving
+//!   incumbents and warm/cold/pivot accounting in [`MilpStats`];
 //! * [`knapsack`] — greedy bounded knapsack used by the Appendix F
-//!   approximate feasibility check.
+//!   approximate feasibility check, plus the arena-backed rounding engine
+//!   that carries one basis across a bisection sweep's rounding LPs.
 //!
-//! See `rust/src/milp/README.md` for the tableau representation and the
-//! warm-start invariants.
+//! See `rust/src/milp/README.md` for the factorization scheme, the
+//! steepest-edge weights, and the warm-start invariants.
 
 pub mod bounds;
 pub mod branch_bound;
+pub mod dense;
+pub mod factor;
 pub mod knapsack;
 pub mod simplex;
 
 pub use bounds::{BasisSnapshot, BoundedSimplex, SolveOutcome};
 pub use branch_bound::{
-    solve_milp, solve_milp_seeded, solve_milp_session, MilpOptions, MilpResult, MilpStats,
+    solve_milp, solve_milp_seeded, solve_milp_session, LpCore, MilpOptions, MilpResult, MilpStats,
 };
+pub use dense::DenseSimplex;
 pub use simplex::{solve, solve_counted, Cmp, Constraint, Lp, LpResult};

@@ -17,12 +17,40 @@
 //!   infeasible by a small margin) but much faster.
 
 use super::{PlanEntry, SchedProblem, ServingPlan};
+use crate::milp::knapsack::{round_integral, RoundingStats};
 use crate::milp::{
-    solve_counted, solve_milp_session, BasisSnapshot, Cmp, Lp, LpResult, MilpOptions,
-    MilpResult, MilpStats,
+    solve_counted, solve_milp_session, BasisSnapshot, Cmp, Lp, LpResult, MilpOptions, MilpResult,
+    MilpStats,
 };
 use crate::telemetry;
 use std::time::{Duration, Instant};
+
+/// The warm bases a bisection carries across T̂ iterates — and, via
+/// [`crate::sched::planner::PlannerSession`], across whole solves. The two
+/// feasibility oracles solve structurally different models (the knapsack
+/// mode adds a budget row), so each carries its own snapshot; a snapshot is
+/// only ever offered back to the oracle that produced it, and the arenas
+/// refuse dimension mismatches on top.
+#[derive(Clone, Debug, Default)]
+pub struct BasisCarry {
+    /// Terminal root basis of the last exact feasibility MILP.
+    pub exact: Option<BasisSnapshot>,
+    /// Root basis of the last knapsack rounding LP.
+    pub knapsack: Option<BasisSnapshot>,
+}
+
+impl BasisCarry {
+    /// Any basis on board?
+    pub fn is_warm(&self) -> bool {
+        self.exact.is_some() || self.knapsack.is_some()
+    }
+
+    /// Drop both carried bases.
+    pub fn clear(&mut self) {
+        self.exact = None;
+        self.knapsack = None;
+    }
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Feasibility {
@@ -111,9 +139,17 @@ pub struct SearchStats {
     pub warm_solves: usize,
     /// MILP node LPs solved cold (two-phase primal from scratch).
     pub cold_solves: usize,
-    /// Feasibility MILPs whose root LP was crash-warmed from the basis
-    /// carried across T̂ iterates / session solves.
+    /// Feasibility checks whose root LP was crash-warmed from the basis
+    /// carried across T̂ iterates / session solves — exact MILP roots and
+    /// knapsack rounding roots alike.
     pub basis_roots: usize,
+    /// Basis refactorisations (LU rebuilds) across every arena the search
+    /// touched.
+    pub refactorisations: u64,
+    /// Product-form eta columns appended (factorized arenas only).
+    pub eta_updates: u64,
+    /// Pivots priced by dual steepest-edge (factorized arenas only).
+    pub dse_pivots: u64,
     /// One entry per feasibility check, in probe order.
     pub iterates: Vec<IterateStat>,
     pub elapsed: Duration,
@@ -128,6 +164,21 @@ impl SearchStats {
         self.warm_solves += m.warm_solves;
         self.cold_solves += m.cold_solves;
         self.basis_roots += m.basis_roots;
+        self.refactorisations += m.refactorisations;
+        self.eta_updates += m.eta_updates;
+        self.dse_pivots += m.dse_pivots;
+    }
+
+    /// Fold one knapsack rounding run's counters into the search totals.
+    fn absorb_rounding(&mut self, r: &RoundingStats) {
+        self.lp_solves += r.lp_solves;
+        self.pivots += r.pivots;
+        self.warm_solves += r.warm_solves;
+        self.cold_solves += r.cold_solves;
+        self.basis_roots += r.from_basis as usize;
+        self.refactorisations += r.refactorisations;
+        self.eta_updates += r.eta_updates;
+        self.dse_pivots += r.dse_pivots;
     }
 
     /// Accumulate another search's statistics (replanning ladders and the
@@ -141,6 +192,9 @@ impl SearchStats {
         self.warm_solves += other.warm_solves;
         self.cold_solves += other.cold_solves;
         self.basis_roots += other.basis_roots;
+        self.refactorisations += other.refactorisations;
+        self.eta_updates += other.eta_updates;
+        self.dse_pivots += other.dse_pivots;
         self.iterates.extend_from_slice(&other.iterates);
         self.elapsed += other.elapsed;
     }
@@ -299,15 +353,15 @@ fn plan_solution(model: &FeasModel, plan: &ServingPlan) -> Vec<f64> {
 /// Outcome of one feasibility check: a concrete plan if feasible, plus an
 /// [`IterateStat`] appended to `stats.iterates`. `carry` holds the previous
 /// feasible MILP solution (same layout for every T̂); it seeds the exact
-/// solver's incumbent and is replaced on success. `basis` is the terminal
-/// root basis of the previous exact MILP: with `opts.carry_basis` it
+/// solver's incumbent and is replaced on success. `basis` carries the root
+/// bases of the previous checks: with `opts.carry_basis` the matching slot
 /// crash-warms this check's root and is replaced by this check's own.
 fn check_feasible(
     p: &SchedProblem,
     t_hat: f64,
     opts: &BinarySearchOptions,
     carry: &mut Option<Vec<f64>>,
-    basis: &mut Option<BasisSnapshot>,
+    basis: &mut BasisCarry,
     stats: &mut SearchStats,
 ) -> Option<ServingPlan> {
     let mut tspan = telemetry::span("planner.iterate", "planner");
@@ -359,7 +413,7 @@ fn check_feasible_inner(
     t_hat: f64,
     opts: &BinarySearchOptions,
     carry: &mut Option<Vec<f64>>,
-    basis: &mut Option<BasisSnapshot>,
+    basis: &mut BasisCarry,
     stats: &mut SearchStats,
 ) -> Option<ServingPlan> {
     let model = build_feasibility(p, t_hat)?;
@@ -373,7 +427,11 @@ fn check_feasible_inner(
                 cutoff: p.budget + 1e-6,
                 ..opts.milp.clone()
             };
-            let root_basis = if opts.carry_basis { basis.as_ref() } else { None };
+            let root_basis = if opts.carry_basis {
+                basis.exact.as_ref()
+            } else {
+                None
+            };
             let (res, mstats, terminal) = solve_milp_session(
                 &model.lp,
                 &ints,
@@ -384,7 +442,7 @@ fn check_feasible_inner(
             stats.absorb_milp(&mstats);
             if opts.carry_basis {
                 if let Some(snap) = terminal {
-                    *basis = Some(snap);
+                    basis.exact = Some(snap);
                 }
             }
             match res {
@@ -404,10 +462,11 @@ fn check_feasible_inner(
         Feasibility::Knapsack => {
             // LP relaxation with the budget as a hard row (the exact mode
             // checks cost via the objective instead), then *iterative
-            // rounding*: repeatedly fix the largest fractional activation to
-            // a nearby integer and re-solve, falling back to the other
-            // rounding direction on infeasibility. Conservative but close to
-            // exact, and each step is just one LP.
+            // rounding* on one factorized arena ([`round_integral`]): the
+            // root crash-warms from the basis carried across T̂ iterates,
+            // and each fix is a native bound change dual-re-solved in
+            // place. Conservative but close to exact, and each step is a
+            // handful of pivots instead of a cold LP.
             //
             // The rounding loop is this mode's stand-in for the exact MILP,
             // so it reports under the same `milp.solve` span name (the
@@ -425,54 +484,25 @@ fn check_feasible_inner(
                 p.budget,
             );
             let ncand = p.candidates.len();
-            let mut rounds = 0usize;
-            let y: Vec<u32> = loop {
-                rounds += 1;
-                if rounds > 4 * ncand + 8 {
-                    return None; // rounding failed to converge
-                }
-                stats.lp_solves += 1;
-                let LpResult::Optimal { x, .. } = solve_counted(&lp, &mut stats.pivots) else {
-                    return None;
-                };
-                // Most fractional activation (largest value among them).
-                let mut pick: Option<(usize, f64)> = None;
-                for ci in 0..ncand {
-                    let v = x[model.y_base + ci];
-                    if (v - v.round()).abs() > 1e-6
-                        && pick.map(|(_, pv)| v > pv).unwrap_or(true)
-                    {
-                        pick = Some((ci, v));
-                    }
-                }
-                let Some((ci, v)) = pick else {
-                    break (0..ncand)
-                        .map(|ci| x[model.y_base + ci].round() as u32)
-                        .collect();
-                };
-                // Prefer rounding up (more capacity), fall back to down.
-                // Fixing is a native bound change (no row, no LP clone),
-                // reverted in place when the direction is infeasible.
-                let yvar = model.y_base + ci;
-                let (olo, ohi) = (lp.lower[yvar], lp.upper[yvar]);
-                let mut try_fix = |value: f64| -> bool {
-                    lp.set_bounds(yvar, value, value);
-                    stats.lp_solves += 1;
-                    if matches!(
-                        solve_counted(&lp, &mut stats.pivots),
-                        LpResult::Optimal { .. }
-                    ) {
-                        true
-                    } else {
-                        lp.set_bounds(yvar, olo, ohi);
-                        false
-                    }
-                };
-                if !try_fix(v.ceil()) && !try_fix(v.floor()) {
-                    return None;
-                }
+            let root_basis = if opts.carry_basis {
+                basis.knapsack.as_ref()
+            } else {
+                None
             };
-            tspan.tag("rounds", rounds);
+            let (rounded, rstats, terminal) = round_integral(
+                &lp,
+                model.y_base..model.y_base + ncand,
+                root_basis,
+                4 * ncand + 8,
+            );
+            stats.absorb_rounding(&rstats);
+            if opts.carry_basis {
+                if let Some(snap) = terminal {
+                    basis.knapsack = Some(snap);
+                }
+            }
+            tspan.tag("rounds", rstats.rounds);
+            let y: Vec<u32> = rounded?.into_iter().map(|v| v as u32).collect();
             if !within_resources(p, &y) {
                 return None;
             }
@@ -704,7 +734,7 @@ pub fn solve_binary_search(
     p: &SchedProblem,
     opts: &BinarySearchOptions,
 ) -> (Option<ServingPlan>, SearchStats) {
-    let mut basis = None;
+    let mut basis = BasisCarry::default();
     solve_binary_search_core(p, opts, None, None, &mut basis)
 }
 
@@ -716,16 +746,17 @@ pub fn solve_binary_search(
 /// feasibility MILPs with a known plan: its solution vector becomes the
 /// B&B's first feasible point, so pruning starts before the first branch,
 /// and each feasible bisection iterate then seeds the next check (the model
-/// layout is identical across T̂ values). `basis` carries the terminal root
-/// basis *across* T̂ iterates — and across whole calls when the caller is a
-/// [`crate::sched::planner::PlannerSession`] — so each exact root is
-/// crash-warmed instead of rebuilt cold.
+/// layout is identical across T̂ values). `basis` carries the root bases
+/// *across* T̂ iterates — and across whole calls when the caller is a
+/// [`crate::sched::planner::PlannerSession`] — so each feasibility root
+/// (exact MILP and knapsack rounding alike) is crash-warmed instead of
+/// rebuilt cold.
 pub(crate) fn solve_binary_search_core(
     p: &SchedProblem,
     opts: &BinarySearchOptions,
     warm_upper: Option<f64>,
     seed_plan: Option<&ServingPlan>,
-    basis: &mut Option<BasisSnapshot>,
+    basis: &mut BasisCarry,
 ) -> (Option<ServingPlan>, SearchStats) {
     let start = Instant::now();
     let mut stats = SearchStats::default();
@@ -948,6 +979,44 @@ mod tests {
         );
         assert!(s_with.basis_roots > 0);
         assert_eq!(s_without.basis_roots, 0);
+    }
+
+    #[test]
+    fn knapsack_mode_carries_rounding_basis() {
+        // The default (knapsack) path must also warm its roots: after the
+        // first check, rounding roots crash from the carried basis, and the
+        // search reports a nonzero warm-hit rate.
+        let p = simple_example();
+        let opts = BinarySearchOptions {
+            tolerance: 0.05,
+            feasibility: Feasibility::Knapsack,
+            ..Default::default()
+        };
+        let (plan, stats) = solve_binary_search(&p, &opts);
+        assert!(plan.is_some());
+        assert!(stats.basis_roots > 0, "no rounding root crash-warmed");
+        assert!(stats.warm_hit_rate() > 0.0);
+        assert!(!stats.iterates[0].from_basis, "first root had no carry");
+        assert!(
+            stats.iterates.iter().any(|i| i.from_basis),
+            "no iterate reported the carry"
+        );
+        // Carry off: every rounding root runs cold, same plan quality.
+        let (plan_cold, cold) = solve_binary_search(
+            &p,
+            &BinarySearchOptions {
+                carry_basis: false,
+                ..opts
+            },
+        );
+        assert_eq!(cold.basis_roots, 0);
+        let (a, b) = (plan.unwrap(), plan_cold.unwrap());
+        assert!(
+            (a.makespan - b.makespan).abs() <= 0.2,
+            "carry {} vs cold {}",
+            a.makespan,
+            b.makespan
+        );
     }
 
     #[test]

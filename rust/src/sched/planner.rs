@@ -25,9 +25,8 @@
 //!   *and* across calls, so replan epochs no longer rebuild the arena per
 //!   T̂ (see `milp/README.md`, "Basis snapshots").
 
-use super::binary_search::{solve_binary_search_core, BinarySearchOptions, SearchStats};
+use super::binary_search::{solve_binary_search_core, BasisCarry, BinarySearchOptions, SearchStats};
 use super::{SchedProblem, ServingPlan};
-use crate::milp::BasisSnapshot;
 use std::time::Duration;
 
 /// The two-axis drift of the world signal since a plan's basis: `supply`
@@ -264,7 +263,7 @@ impl Planner for BisectionPlanner {
 
     fn plan(&mut self, req: &PlanRequest) -> PlanReport {
         let opts = req.effective_opts(&self.opts);
-        let mut basis = None;
+        let mut basis = BasisCarry::default();
         let (plan, stats) = solve_binary_search_core(
             req.problem,
             &opts,
@@ -289,10 +288,11 @@ impl Planner for BisectionPlanner {
 /// * the **incumbent plan** of its last successful solve — used as the
 ///   seed (first MILP incumbent + warm makespan bound) whenever the
 ///   request doesn't bring its own; and
-/// * the **terminal basis** ([`BasisSnapshot`]) of the last exact
-///   feasibility root — crash-warming the first root of the next call, so
-///   consecutive bisections (replan epochs, baseline sweeps over the same
-///   problem family) skip the two-phase cold start entirely.
+/// * the **root bases** ([`BasisCarry`]) of the last feasibility checks —
+///   one snapshot per oracle (exact MILP root, knapsack rounding root) —
+///   crash-warming the first root of the next call, so consecutive
+///   bisections (replan epochs, baseline sweeps over the same problem
+///   family) skip the two-phase cold start entirely.
 ///
 /// Both carries are self-guarding: a seed that doesn't map onto the
 /// request's candidate space is dropped, and a basis whose dimensions
@@ -301,7 +301,7 @@ impl Planner for BisectionPlanner {
 pub struct PlannerSession {
     opts: BinarySearchOptions,
     incumbent: Option<ServingPlan>,
-    basis: Option<BasisSnapshot>,
+    basis: BasisCarry,
     /// Calls served so far (diagnostics).
     solves: usize,
 }
@@ -311,7 +311,7 @@ impl PlannerSession {
         Self {
             opts,
             incumbent: None,
-            basis: None,
+            basis: BasisCarry::default(),
             solves: 0,
         }
     }
@@ -329,7 +329,7 @@ impl PlannerSession {
     /// True when the next call will crash-warm its root from a carried
     /// basis.
     pub fn has_warm_basis(&self) -> bool {
-        self.basis.is_some() && self.opts.carry_basis
+        self.basis.is_warm() && self.opts.carry_basis
     }
 
     /// Calls served so far.
@@ -337,11 +337,11 @@ impl PlannerSession {
         self.solves
     }
 
-    /// Drop all carried warm state (incumbent and basis) — e.g. when the
+    /// Drop all carried warm state (incumbent and bases) — e.g. when the
     /// caller switches to an unrelated problem family.
     pub fn reset(&mut self) {
         self.incumbent = None;
-        self.basis = None;
+        self.basis.clear();
     }
 
     /// Adopt an externally produced plan (a fast-path or incremental
@@ -379,7 +379,7 @@ impl Planner for PlannerSession {
         let warm_upper = req.warm_upper.or_else(|| seed.map(|plan| plan.makespan));
         let warmed = seed.is_some() || warm_upper.is_some() || self.has_warm_basis();
         if !opts.carry_basis {
-            self.basis = None;
+            self.basis.clear();
         }
         let (plan, stats) =
             solve_binary_search_core(req.problem, &opts, warm_upper, seed, &mut self.basis);

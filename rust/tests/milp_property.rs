@@ -1,10 +1,15 @@
 //! Property tests for the MILP substrate: the simplex against brute-force
 //! vertex enumeration on small LPs, branch & bound against exhaustive
-//! search on small integer programs, and the warm-started bound-tightening
+//! search on small integer programs, the warm-started bound-tightening
 //! B&B against both a cold run and the old row-based branching scheme on
-//! randomized planner-shaped MILPs.
+//! randomized planner-shaped MILPs, and the LU-factorized core against the
+//! dense eliminated-tableau core — one-shot and along warm bound-walk
+//! sequences (the B&B access pattern).
 
-use hetserve::milp::{solve, solve_milp, Cmp, Lp, LpResult, MilpOptions, MilpResult};
+use hetserve::milp::{
+    solve, solve_milp, BoundedSimplex, Cmp, DenseSimplex, Lp, LpCore, LpResult, MilpOptions,
+    MilpResult, SolveOutcome,
+};
 use hetserve::util::proptest::{check, prop_assert, prop_assert_close, Gen};
 use hetserve::util::rng::Xoshiro256;
 
@@ -265,6 +270,173 @@ fn warm_cold_and_row_based_branching_agree_on_planner_milps() {
             )),
             other => Err(format!("solvers disagree: {other:?}")),
         }
+    });
+}
+
+/// Re-solve an arena after a bound change the way the B&B does: warm dual
+/// re-solve when the basis is dual feasible and no refresh is due, cold
+/// otherwise; a warm `Stalled`/`Infeasible` verdict is re-checked cold.
+/// Returns the objective when optimal. Works on either core (identical
+/// method surface), hence the macro.
+macro_rules! eval_arena {
+    ($arena:expr) => {{
+        let a = $arena;
+        let out = if a.dual_ready() && !a.refresh_due() {
+            match a.resolve_dual() {
+                SolveOutcome::Stalled | SolveOutcome::Infeasible => a.solve_cold(),
+                o => o,
+            }
+        } else {
+            a.solve_cold()
+        };
+        (out == SolveOutcome::Optimal).then(|| a.extract().1)
+    }};
+}
+
+#[test]
+fn factorized_and_dense_cores_agree_on_planner_milps() {
+    // The whole MILP pipeline — warm B&B, plunging, rounding, residual
+    // incumbent checks — must reach the same optimum on both LP cores.
+    let gen = Gen::opaque(planner_shaped);
+    check(32, 0xFAC7_0D15, gen, |(lp, ints)| {
+        let fact = solve_milp(lp, ints, &MilpOptions::default()).0;
+        let dense = solve_milp(
+            lp,
+            ints,
+            &MilpOptions {
+                core: LpCore::Dense,
+                ..Default::default()
+            },
+        )
+        .0;
+        match (&fact, &dense) {
+            (
+                MilpResult::Optimal { objective: f, x },
+                MilpResult::Optimal { objective: d, .. },
+            ) => {
+                prop_assert(lp.is_feasible(x, 1e-5), "factorized solution infeasible")?;
+                prop_assert_close(*f, *d, 1e-6, "factorized vs dense")
+            }
+            (MilpResult::Infeasible, MilpResult::Infeasible) => Ok(()),
+            other => Err(format!("cores disagree: {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn warm_bound_walks_agree_across_cores() {
+    // Drive both arenas through the same randomized bound-walk a B&B would
+    // produce — tighten an integer activation, occasionally revert to the
+    // root bounds — re-solving warm at every step. Feasibility verdicts
+    // and objectives must agree at every single step, and the factorized
+    // arena's basis snapshot must reproduce its optimum in a fresh arena.
+    let gen = Gen::opaque(|rng: &mut Xoshiro256| {
+        let (lp, ints) = planner_shaped(rng);
+        // The walk script: (which int var, fraction along its range, go
+        // down?, revert instead?).
+        let steps: Vec<(usize, f64, bool, bool)> = (0..8)
+            .map(|_| {
+                (
+                    rng.index(ints.len()),
+                    rng.range_f64(0.0, 1.0),
+                    rng.range_f64(0.0, 1.0) < 0.5,
+                    rng.range_f64(0.0, 1.0) < 0.2,
+                )
+            })
+            .collect();
+        (lp, ints, steps)
+    });
+    check(24, 0xB0_11D_0A1, gen, |(lp, ints, steps)| {
+        let mut fact = BoundedSimplex::new(lp);
+        let mut dense = DenseSimplex::new(lp);
+        let root: Vec<(f64, f64)> = ints.iter().map(|&v| (lp.lower[v], lp.upper[v])).collect();
+        let mut cur = root.clone();
+        let f0 = (fact.solve_cold() == SolveOutcome::Optimal).then(|| fact.extract().1);
+        let d0 = (dense.solve_cold() == SolveOutcome::Optimal).then(|| dense.extract().1);
+        match (f0, d0) {
+            (Some(f), Some(d)) => prop_assert_close(f, d, 1e-6, "root objective")?,
+            (None, None) => return Ok(()), // both infeasible at the root
+            other => return Err(format!("root verdicts disagree: {other:?}")),
+        }
+        for &(i, frac, down, revert) in steps {
+            let v = ints[i];
+            let (rlo, rhi) = root[i];
+            let (lo, hi) = cur[i];
+            let (nlo, nhi) = if revert || hi - lo < 1.0 {
+                (rlo, rhi) // relax back to the root (a reverted branch)
+            } else {
+                let cut = (lo + frac * (hi - lo)).floor().clamp(lo, hi - 1.0);
+                if down {
+                    (lo, cut)
+                } else {
+                    (cut + 1.0, hi)
+                }
+            };
+            cur[i] = (nlo, nhi);
+            fact.set_var_bounds(v, nlo, nhi);
+            dense.set_var_bounds(v, nlo, nhi);
+            let f = eval_arena!(&mut fact);
+            let d = eval_arena!(&mut dense);
+            match (f, d) {
+                (Some(f), Some(d)) => {
+                    prop_assert_close(f, d, 1e-6, "walk objective")?;
+                    // Basis agreement: the factorized snapshot must rebuild
+                    // this optimum in a fresh arena at the same bounds.
+                    let snap = fact.snapshot().ok_or("no snapshot at an optimum")?;
+                    let mut fresh = BoundedSimplex::new(lp);
+                    for (k, &w) in ints.iter().enumerate() {
+                        fresh.set_var_bounds(w, cur[k].0, cur[k].1);
+                    }
+                    match fresh.solve_warm_from(&snap) {
+                        Some(SolveOutcome::Optimal) => {
+                            prop_assert_close(
+                                fresh.extract().1,
+                                f,
+                                1e-6,
+                                "snapshot round-trip objective",
+                            )?;
+                        }
+                        other => {
+                            return Err(format!("snapshot round-trip failed: {other:?}"))
+                        }
+                    }
+                }
+                (None, None) => {}
+                other => return Err(format!("walk verdicts disagree: {other:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_bnb_matches_sequential_on_planner_milps() {
+    // Forced subtree waves at several thread counts must return the same
+    // result and explore the same node set as the single-threaded run.
+    let gen = Gen::opaque(planner_shaped);
+    check(16, 0x9A_7A11E1, gen, |(lp, ints)| {
+        let run = |threads: usize| {
+            solve_milp(
+                lp,
+                ints,
+                &MilpOptions {
+                    threads,
+                    partition_heap: 4,
+                    partition_nodes: 8,
+                    ..Default::default()
+                },
+            )
+        };
+        let (r1, s1) = run(1);
+        let (r3, s3) = run(3);
+        prop_assert(r1 == r3, format!("results diverged: {r1:?} vs {r3:?}"))?;
+        prop_assert(
+            s1.nodes == s3.nodes && s1.lp_solves == s3.lp_solves,
+            format!(
+                "search shape diverged: {}/{} nodes, {}/{} LP solves",
+                s1.nodes, s3.nodes, s1.lp_solves, s3.lp_solves
+            ),
+        )
     });
 }
 
