@@ -1,0 +1,339 @@
+//! Chaos sweep: what do spot preemptions and outright crashes cost, and
+//! does the orchestrator's degradation ladder keep the fleet serving?
+//!
+//! One seeded constant-rate workload is streamed through the closed loop
+//! (`sim::run_closed_loop_streamed`) under three fault regimes:
+//!
+//! * `fault-free`     — no injector; the baseline SLO/rent envelope;
+//! * `preempt-storm`  — [`FaultProfile::preemption_storm`]: bursty spot
+//!   reclaims with a notice window, so dying replicas live-migrate KV
+//!   within the drain allowance;
+//! * `crash-storm`    — [`FaultProfile::crash_storm`]: zero-notice kills,
+//!   every in-flight token is lost and re-prefilled after requeue.
+//!
+//! Each storm runs twice: once under the production ladder (Escalating
+//! replans, warm-started bases, stepwise degradation with hysteresis) and
+//! once under a naive cold full re-solve on every event — the strawman a
+//! robustness story has to beat.
+//!
+//! SHAPE CHECK: (1) under both storms the ladder holds SLO within a
+//! bounded gap of the fault-free run at bounded extra rent; (2) the
+//! ladder beats the naive cold full-resolve on the solver bill (simplex
+//! pivots) without giving up SLO; (3) the engine is bit-identical across
+//! thread counts even mid-storm (same seed ⇒ same chaos).
+//!
+//! Emits a machine-readable `BENCH_faults.json` line.
+//!
+//! Flags: --seed N --epochs N --tick-s S --rate RPS --budget B --slo S
+//!        --fault-seed N --fault-gap-s S --slo-gap-pts P --rent-x X
+//!        --quick
+
+use hetserve::cloud::faults::{FaultInjector, FaultProfile};
+use hetserve::cloud::{MarketEvent, MarketEventStream};
+use hetserve::orchestrator::{OrchestratorOptions, ReplanStrategy};
+use hetserve::perf_model::{ModelSpec, PerfModel};
+use hetserve::profiler::Profile;
+use hetserve::sched::binary_search::BinarySearchOptions;
+use hetserve::sched::enumerate::EnumOptions;
+use hetserve::sched::SchedProblem;
+use hetserve::sim::{
+    run_closed_loop_streamed, DemandMode, EngineOptions, StreamedLoopOptions, StreamedLoopResult,
+};
+use hetserve::util::bench::{cell, Table};
+use hetserve::util::cli::Args;
+use hetserve::util::json::Json;
+use hetserve::workload::{MixSchedule, SynthOptions, TraceMix};
+
+struct Outcome {
+    name: &'static str,
+    strategy: &'static str,
+    slo: f64,
+    rent_usd: f64,
+    replans: usize,
+    degraded: usize,
+    episodes: usize,
+    killed: usize,
+    requeued: usize,
+    dropped: usize,
+    migration_usd: f64,
+    pivots: u64,
+    completed: usize,
+}
+
+impl Outcome {
+    fn of(name: &'static str, strategy: &'static str, r: &StreamedLoopResult) -> Self {
+        Self {
+            name,
+            strategy,
+            slo: r.engine.slo_attainment,
+            rent_usd: r.engine.total_rental_usd,
+            replans: r.report.replans,
+            degraded: r.report.degraded_epochs,
+            episodes: r.engine.faults.episodes,
+            killed: r.engine.faults.replicas_killed,
+            requeued: r.engine.faults.requeued,
+            dropped: r.engine.faults.dropped,
+            migration_usd: r.engine.faults.migration_usd,
+            pivots: r.report.solver.pivots,
+            completed: r.engine.requests_completed,
+        }
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name)),
+            ("strategy", Json::str(self.strategy)),
+            ("slo_attainment", Json::num(self.slo)),
+            ("rent_usd", Json::num(self.rent_usd)),
+            ("replans", Json::num(self.replans as f64)),
+            ("degraded_epochs", Json::num(self.degraded as f64)),
+            ("fault_episodes", Json::num(self.episodes as f64)),
+            ("replicas_killed", Json::num(self.killed as f64)),
+            ("requeued", Json::num(self.requeued as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("migration_usd", Json::num(self.migration_usd)),
+            ("solver_pivots", Json::num(self.pivots as f64)),
+            ("requests_completed", Json::num(self.completed as f64)),
+        ])
+    }
+}
+
+fn main() {
+    let args = Args::parse(&["quick"]);
+    let quick = args.flag("quick");
+    let seed = args.seed(17);
+    let epochs = args.epochs(if quick { 4 } else { 8 }).max(3);
+    let tick_s = args.get_f64("tick-s", 600.0);
+    let rate = args.get_f64("rate", 2.0);
+    let budget = args.get_f64("budget", 30.0);
+    let slo_s = args.get_f64("slo", 120.0);
+    let fault_seed = args.get_u64("fault-seed", seed ^ 0xFA);
+    // Mean episode gap: tick/2 ⇒ ~2 episodes per epoch in expectation — a
+    // storm, not weather — and vanishing odds of a kill-free horizon.
+    let fault_gap_s = args.get_f64("fault-gap-s", tick_s * 0.5);
+    // SHAPE CHECK bounds: the ladder may give up this many SLO points and
+    // this rent multiplier vs fault-free before the check fails.
+    let slo_gap_pts = args.get_f64("slo-gap-pts", 40.0);
+    let rent_x = args.get_f64("rent-x", 2.0);
+
+    let model = ModelSpec::llama3_8b();
+    let perf = PerfModel::default();
+    let profile = Profile::build(&model, &perf, &EnumOptions::default());
+    let horizon_s = epochs as f64 * tick_s;
+
+    let mix = TraceMix::trace1();
+    let schedule = MixSchedule::constant(mix.clone(), rate);
+    let markets: Vec<MarketEvent> = MarketEventStream::new(seed, epochs, tick_s).collect();
+    let base = SchedProblem::from_profile(&profile, &mix, rate * tick_s, &markets[0].avail, budget);
+
+    let run = |faults: Option<FaultInjector>,
+               strategy: ReplanStrategy,
+               carry_basis: bool,
+               threads: usize|
+     -> Option<StreamedLoopResult> {
+        let opts = StreamedLoopOptions {
+            orchestrator: OrchestratorOptions {
+                strategy,
+                search: BinarySearchOptions {
+                    carry_basis,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            engine: EngineOptions {
+                seed,
+                shards: 4,
+                threads,
+                slo_latency_s: slo_s,
+                ..Default::default()
+            },
+            mode: DemandMode::Estimated,
+            estimator_halflife_s: 300.0,
+            synth: SynthOptions {
+                length_sigma: 0.15,
+                seed,
+                ..Default::default()
+            },
+            faults,
+        };
+        run_closed_loop_streamed(&base, &markets, &schedule, horizon_s, &model, &perf, &opts)
+    };
+
+    let ladder = ReplanStrategy::Escalating {
+        drift_threshold: 0.25,
+    };
+    let preempt = FaultInjector::new(
+        FaultProfile::preemption_storm().with_mean_gap_s(fault_gap_s),
+        fault_seed,
+    );
+    let crash = FaultInjector::new(
+        FaultProfile::crash_storm().with_mean_gap_s(fault_gap_s),
+        fault_seed,
+    );
+
+    let Some(free) = run(None, ladder.clone(), true, 0) else {
+        println!("SHAPE CHECK: SKIPPED (no feasible fault-free plan)");
+        return;
+    };
+    let Some(preempt_ladder) = run(Some(preempt.clone()), ladder.clone(), true, 0) else {
+        println!("SHAPE CHECK: SKIPPED (preempt-storm ladder run infeasible)");
+        return;
+    };
+    let Some(preempt_naive) = run(Some(preempt), ReplanStrategy::FullResolve, false, 0) else {
+        println!("SHAPE CHECK: SKIPPED (preempt-storm naive run infeasible)");
+        return;
+    };
+    let Some(crash_ladder) = run(Some(crash.clone()), ladder.clone(), true, 1) else {
+        println!("SHAPE CHECK: SKIPPED (crash-storm ladder run infeasible)");
+        return;
+    };
+    let Some(crash_naive) = run(Some(crash.clone()), ReplanStrategy::FullResolve, false, 0) else {
+        println!("SHAPE CHECK: SKIPPED (crash-storm naive run infeasible)");
+        return;
+    };
+    // Same chaos, more threads: the fingerprint must not move.
+    let Some(crash_threaded) = run(Some(crash), ladder, true, 4) else {
+        println!("SHAPE CHECK: SKIPPED (crash-storm threaded run infeasible)");
+        return;
+    };
+    let deterministic = crash_ladder.engine.fingerprint() == crash_threaded.engine.fingerprint();
+
+    let outcomes = [
+        Outcome::of("fault-free", "ladder", &free),
+        Outcome::of("preempt-storm", "ladder", &preempt_ladder),
+        Outcome::of("preempt-storm", "cold-full", &preempt_naive),
+        Outcome::of("crash-storm", "ladder", &crash_ladder),
+        Outcome::of("crash-storm", "cold-full", &crash_naive),
+    ];
+
+    let mut table = Table::new(
+        &format!(
+            "fig_faults — {} at {:.1} req/s, {} epochs x {:.0}s, mean fault gap {:.0}s \
+             (seed {seed}, fault seed {fault_seed})",
+            model.name, rate, epochs, tick_s, fault_gap_s
+        ),
+        &[
+            "scenario",
+            "strategy",
+            "replans",
+            "degraded",
+            "episodes",
+            "killed",
+            "requeued",
+            "dropped",
+            "pivots",
+            "migration $",
+            "rent $",
+            "SLO %",
+        ],
+    );
+    for o in &outcomes {
+        table.row(vec![
+            o.name.to_string(),
+            o.strategy.to_string(),
+            o.replans.to_string(),
+            o.degraded.to_string(),
+            o.episodes.to_string(),
+            o.killed.to_string(),
+            o.requeued.to_string(),
+            o.dropped.to_string(),
+            o.pivots.to_string(),
+            cell(o.migration_usd),
+            cell(o.rent_usd),
+            format!("{:.1}", o.slo * 100.0),
+        ]);
+    }
+    table.print();
+
+    // (1) Bounded degradation: each storm stays within the SLO gap and
+    // rent multiplier of the fault-free envelope.
+    let bounded = |storm: &Outcome| {
+        storm.slo >= outcomes[0].slo - slo_gap_pts / 100.0
+            && storm.rent_usd <= outcomes[0].rent_usd * rent_x
+    };
+    let preempt_bounded = bounded(&outcomes[1]);
+    let crash_bounded = bounded(&outcomes[3]);
+    println!(
+        "SHAPE CHECK: fault-free SLO {:.1}% @ ${:.2} | preempt ladder {:.1}% @ ${:.2} ({}) | \
+         crash ladder {:.1}% @ ${:.2} ({}) — bound: -{:.0} pts, {:.1}x rent => {}",
+        free.engine.slo_attainment * 100.0,
+        free.engine.total_rental_usd,
+        preempt_ladder.engine.slo_attainment * 100.0,
+        preempt_ladder.engine.total_rental_usd,
+        if preempt_bounded { "bounded" } else { "UNBOUNDED" },
+        crash_ladder.engine.slo_attainment * 100.0,
+        crash_ladder.engine.total_rental_usd,
+        if crash_bounded { "bounded" } else { "UNBOUNDED" },
+        slo_gap_pts,
+        rent_x,
+        if preempt_bounded && crash_bounded {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+
+    // (2) The ladder beats the naive cold full re-solve: a smaller solver
+    // bill at no SLO cost (5-point tolerance for storm noise).
+    let beats = |l: &Outcome, n: &Outcome| l.pivots < n.pivots && l.slo >= n.slo - 0.05;
+    let preempt_beats = beats(&outcomes[1], &outcomes[2]);
+    let crash_beats = beats(&outcomes[3], &outcomes[4]);
+    println!(
+        "SHAPE CHECK: ladder vs cold-full pivots — preempt {} vs {} ({}), crash {} vs {} ({}) => {}",
+        outcomes[1].pivots,
+        outcomes[2].pivots,
+        if preempt_beats { "beats" } else { "DOES NOT beat" },
+        outcomes[3].pivots,
+        outcomes[4].pivots,
+        if crash_beats { "beats" } else { "DOES NOT beat" },
+        if preempt_beats && crash_beats {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+
+    // (3) Chaos is deterministic: thread count never changes the storm.
+    println!(
+        "SHAPE CHECK: crash-storm fingerprint 1-thread {:016x} == 4-thread {:016x}, \
+         {} replicas killed => {}",
+        crash_ladder.engine.fingerprint(),
+        crash_threaded.engine.fingerprint(),
+        crash_ladder.engine.faults.replicas_killed,
+        if deterministic && crash_ladder.engine.faults.replicas_killed > 0 {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+
+    let line = Json::obj(vec![
+        ("bench", Json::str("fig_faults")),
+        ("quick", Json::Bool(quick)),
+        ("seed", Json::num(seed as f64)),
+        ("fault_seed", Json::num(fault_seed as f64)),
+        ("epochs", Json::num(epochs as f64)),
+        ("horizon_s", Json::num(horizon_s)),
+        ("fault_gap_s", Json::num(fault_gap_s)),
+        ("scenarios", Json::arr(outcomes.iter().map(|o| o.json()))),
+        ("deterministic", Json::Bool(deterministic)),
+        (
+            "replicas_killed_crash",
+            Json::num(crash_ladder.engine.faults.replicas_killed as f64),
+        ),
+        (
+            "pass_bounded",
+            Json::Bool(preempt_bounded && crash_bounded),
+        ),
+        (
+            "pass_beats_naive",
+            Json::Bool(preempt_beats && crash_beats),
+        ),
+        (
+            "pass_deterministic",
+            Json::Bool(deterministic && crash_ladder.engine.faults.replicas_killed > 0),
+        ),
+    ])
+    .to_string();
+    println!("BENCH_faults.json {line}");
+}

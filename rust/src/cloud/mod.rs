@@ -12,6 +12,8 @@ use crate::util::json::Json;
 use crate::util::rng::Xoshiro256;
 use crate::workload::{DemandSnapshot, MixSchedule};
 
+pub mod faults;
+
 /// How many GPUs of each type are rentable right now.
 /// Indexed by `GpuType::index()` (A6000, A40, L40, A100, H100, 4090).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

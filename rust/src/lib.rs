@@ -13,7 +13,10 @@
 //!   the O(1)-memory lazy arrival generator the materializer now wraps
 //! * [`cloud`] — availability snapshots (Table 3), market simulator, costs,
 //!   and the event streams: supply-only market events and the unified
-//!   world events carrying a demand channel
+//!   world events carrying a demand channel; `cloud::faults` is the
+//!   seeded fault injector — preemption/crash storm profiles compiled
+//!   into replayable kill schedules and market-view dents so the
+//!   orchestrator and the simulators see one consistent chaos
 //! * [`perf_model`] — analytical roofline model replacing real-GPU profiling
 //! * [`profiler`] — `h_{c,w}` throughput tables for the scheduler
 //! * [`milp`] — from-scratch MILP solver: a factorized revised simplex
@@ -36,7 +39,9 @@
 //! * [`orchestrator`] — online replanning over the drifting *world*
 //!   (supply and demand): plan-diff engine, two-axis drift thresholds,
 //!   assignment-LP fast path, incremental/escalating replanner composed
-//!   over a `PlannerSession`, epoch timeline
+//!   over a `PlannerSession`, epoch timeline; planner deadlines feed a
+//!   stepwise degradation ladder (repair-only → shed → emergency
+//!   homogeneous) with hysteresis (see `orchestrator/README.md`)
 //! * [`sim`] — discrete-event cluster simulator executing serving plans,
 //!   including time-varying timelines with mid-trace plan transitions and
 //!   the closed demand loop (estimator-driven replanning); `sim::engine`

@@ -12,6 +12,7 @@
 
 use hetserve::baselines::{all_planners, homogeneous_plan};
 use hetserve::catalog::GpuType;
+use hetserve::cloud::faults::{FaultInjector, FaultProfile};
 use hetserve::cloud::{availability, MarketEvent, MarketEventKind, MarketEventStream, MarketSim};
 use hetserve::coordinator::{serve, synth_requests, AdmissionPolicy, RouterPolicy, ServerOptions};
 use hetserve::orchestrator::{OrchestratorOptions, ReplanStrategy};
@@ -47,9 +48,15 @@ USAGE: hetserve <subcommand> [--options]
               [--shift-start FRAC] [--shift-end FRAC]
               [--engine] [--sim-shards N] [--threads N]
               [--chunk-s SECONDS] [--max-queue N]
+              [--faults storm|crash|none] [--fault-seed N] [--notice-s S]
               (--engine streams arrivals through the sharded event
                engine instead of materializing a trace; same seed ⇒
                bit-identical results at any --threads)
+              (--faults injects seeded replica failures: 'storm' is
+               correlated spot preemptions with advance notice and a
+               stale supply signal, 'crash' is zero-notice crash-stops;
+               the orchestrator degrades stepwise — repair-only, shed,
+               emergency homogeneous — instead of missing plan deadlines)
   compare     (plan options) — ours vs every baseline planner, one table
   serve       --requests 48 --replicas 2 --router jsq|rr [--arrival-rate RPS]
   profile     --model 70b
@@ -321,6 +328,22 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
     let demand_threshold = args.demand_drift(0.15);
     let horizon_s = epochs as f64 * tick_s;
 
+    // --faults storm|crash|none: seeded chaos over the market signal and
+    // the simulated fleet (same injector for both, so they agree).
+    let faults = match args.get("faults") {
+        Some(name) => match FaultProfile::by_name(name) {
+            Some(profile) => profile.map(|p| {
+                let p = match args.get("notice-s") {
+                    Some(_) => p.with_notice_s(args.get_f64("notice-s", p.notice_s)),
+                    None => p,
+                };
+                FaultInjector::new(p, args.get_u64("fault-seed", seed ^ 0xFA))
+            }),
+            None => anyhow::bail!("--faults: unknown profile '{name}' (storm|crash|none)"),
+        },
+        None => None,
+    };
+
     // The demand process: stationary, or a mixture/rate shift across the
     // configured window of the horizon.
     let shift_to = parse_shift_target(args)?;
@@ -381,6 +404,7 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
                 seed,
                 ..Default::default()
             },
+            faults: faults.clone(),
             ..Default::default()
         };
         let r = run_closed_loop_streamed(
@@ -439,6 +463,22 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
             engine.transitions_applied,
             engine.fingerprint()
         );
+        if sopts.faults.is_some() {
+            let f = &engine.faults;
+            println!(
+                "faults: {} episodes ({} crashes), {} replicas killed, {} requeued, \
+                 {} migrated ({:.0} KV tokens, {:.3} $), {} dropped; {} degraded epochs",
+                f.episodes,
+                f.crashes,
+                f.replicas_killed,
+                f.requeued,
+                f.migrated,
+                f.migrated_tokens,
+                f.migration_usd,
+                f.dropped,
+                r.report.degraded_epochs
+            );
+        }
         return Ok(());
     }
 
@@ -464,6 +504,7 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
             ..Default::default()
         },
         mode,
+        faults,
         ..Default::default()
     };
     let loop_result = run_closed_loop(&base, &markets, &schedule, &trace, &model, &perf, &opts)
@@ -512,8 +553,13 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
         } else {
             ""
         };
+        let rung = if e.degraded != hetserve::orchestrator::DegradedMode::Normal {
+            format!(" [{}]", e.degraded.name())
+        } else {
+            String::new()
+        };
         t.row(vec![
-            format!("{}{}", e.index, path),
+            format!("{}{}{}", e.index, path, rung),
             format!("{:.0}", e.start_s),
             event,
             cell(e.supply_drift),
@@ -546,6 +592,22 @@ fn cmd_orchestrate(args: &Args) -> anyhow::Result<()> {
         loop_result.mean_mix_error(),
         result.makespan
     );
+    if opts.faults.is_some() {
+        let f = &result.faults;
+        println!(
+            "faults: {} episodes ({} crashes), {} replicas killed, {} requeued, \
+             {} migrated ({:.0} KV tokens, {:.3} $), {} dropped; {} degraded epochs",
+            f.episodes,
+            f.crashes,
+            f.replicas_killed,
+            f.requeued,
+            f.migrated,
+            f.migrated_tokens,
+            f.migration_usd,
+            f.dropped,
+            report.degraded_epochs
+        );
+    }
     println!(
         "solver: {} LP solves, {} pivots ({} steepest-edge), {} B&B nodes, \
          warm-start hit rate {:.0}% ({} warm / {} cold, {} basis roots), \

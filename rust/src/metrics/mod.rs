@@ -39,6 +39,11 @@ pub struct LatencyRecorder {
     reservoir: Option<Reservoir>,
     /// Total samples ever recorded (== `samples.len()` in exact mode).
     seen: usize,
+    /// Requests that never completed — shed by admission control or
+    /// dropped after retry exhaustion. Tracked exactly (no reservoir) and
+    /// counted as SLO misses by [`Self::slo_attainment`], which therefore
+    /// reports *goodput*, not completion-conditional attainment.
+    dropped: usize,
     /// Exact max completion time across every recorded sample.
     max_completion_s: f64,
 }
@@ -50,6 +55,7 @@ impl Clone for LatencyRecorder {
             sorted: Mutex::new(self.sorted.lock().unwrap().clone()),
             reservoir: self.reservoir.clone(),
             seen: self.seen,
+            dropped: self.dropped,
             max_completion_s: self.max_completion_s,
         }
     }
@@ -77,6 +83,7 @@ impl LatencyRecorder {
             sorted: Mutex::new(None),
             reservoir: Some(Reservoir { cap, rng }),
             seen: 0,
+            dropped: 0,
             max_completion_s: 0.0,
         }
     }
@@ -113,9 +120,21 @@ impl LatencyRecorder {
         *self.sorted.get_mut().unwrap() = None;
     }
 
-    /// Total samples ever recorded (exact in both modes).
+    /// Total samples ever recorded (exact in both modes). Dropped requests
+    /// are *not* counted here — they never completed.
     pub fn count(&self) -> usize {
         self.seen
+    }
+
+    /// Record `n` requests that will never complete (admission shed or
+    /// retry exhaustion). They join the SLO denominator as misses.
+    pub fn record_dropped(&mut self, n: usize) {
+        self.dropped += n;
+    }
+
+    /// Requests recorded as dropped (exact in both modes).
+    pub fn dropped(&self) -> usize {
+        self.dropped
     }
 
     pub fn latencies(&self) -> Vec<f64> {
@@ -174,6 +193,7 @@ impl LatencyRecorder {
     /// counts), adequate for the percentile reporting it feeds.
     pub fn merge(&mut self, other: &LatencyRecorder) {
         self.seen += other.seen;
+        self.dropped += other.dropped;
         self.max_completion_s = self.max_completion_s.max(other.max_completion_s);
         self.samples.extend_from_slice(&other.samples);
         if let Some(r) = &mut self.reservoir {
@@ -185,19 +205,29 @@ impl LatencyRecorder {
         *self.sorted.get_mut().unwrap() = None;
     }
 
-    /// Fraction of recorded requests whose latency is within `slo_s` (SLO
-    /// attainment). 1.0 for an empty recorder — no request missed the SLO.
-    /// A reservoir estimate in bounded mode.
+    /// *Goodput*: the fraction of all recorded outcomes — completions AND
+    /// drops — whose latency is within `slo_s`. A dropped request can
+    /// never meet the SLO, so shedding and retry exhaustion lower this
+    /// number instead of flattering it. 1.0 for an empty recorder (no
+    /// request missed), 0.0 when everything was dropped. The
+    /// within-fraction over completions is a reservoir estimate in
+    /// bounded mode; the drop weighting is exact.
     pub fn slo_attainment(&self, slo_s: f64) -> f64 {
-        if self.samples.is_empty() {
+        let total = self.seen + self.dropped;
+        if total == 0 {
             return 1.0;
+        }
+        if self.samples.is_empty() {
+            // Nothing completed: every outcome is a dropped miss.
+            return 0.0;
         }
         let within = self
             .samples
             .iter()
             .filter(|&&(_, l)| l <= slo_s)
             .count();
-        within as f64 / self.samples.len() as f64
+        let within_frac = within as f64 / self.samples.len() as f64;
+        within_frac * self.seen as f64 / total as f64
     }
 }
 
@@ -251,6 +281,26 @@ mod tests {
         assert!((r.slo_attainment(5.0) - 0.5).abs() < 1e-12);
         assert_eq!(r.slo_attainment(0.5), 0.0);
         assert_eq!(r.slo_attainment(100.0), 1.0);
+        assert_eq!(LatencyRecorder::new().slo_attainment(1.0), 1.0);
+    }
+
+    #[test]
+    fn dropped_requests_count_against_goodput() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=8 {
+            r.record(i as f64, 1.0); // all within a 2s SLO
+        }
+        assert_eq!(r.slo_attainment(2.0), 1.0);
+        r.record_dropped(2);
+        assert_eq!(r.dropped(), 2);
+        assert_eq!(r.count(), 8, "drops never join the completion count");
+        assert!((r.slo_attainment(2.0) - 0.8).abs() < 1e-12);
+        let mut other = LatencyRecorder::new();
+        other.record_dropped(10);
+        assert_eq!(other.slo_attainment(1.0), 0.0, "all-dropped is zero goodput");
+        r.merge(&other);
+        assert_eq!(r.dropped(), 12);
+        assert!((r.slo_attainment(2.0) - 0.4).abs() < 1e-12);
         assert_eq!(LatencyRecorder::new().slo_attainment(1.0), 1.0);
     }
 

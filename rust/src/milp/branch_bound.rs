@@ -178,6 +178,11 @@ pub struct MilpStats {
     pub waves: usize,
     /// Subtree jobs explored across all waves.
     pub subtrees: usize,
+    /// The wall-clock budget (`MilpOptions::time_limit`) expired mid-search:
+    /// the result is the best incumbent at the deadline, not a proven
+    /// optimum. Node-cap trips do *not* set this — the flag is specifically
+    /// the degradation ladder's "solver was late" trigger.
+    pub hit_deadline: bool,
     pub elapsed: Duration,
 }
 
@@ -204,6 +209,7 @@ impl MilpStats {
         self.dse_pivots += other.dse_pivots;
         self.waves += other.waves;
         self.subtrees += other.subtrees;
+        self.hit_deadline |= other.hit_deadline;
         self.elapsed += other.elapsed;
     }
 }
@@ -560,7 +566,7 @@ impl<'a> Searcher<'a> {
             let Some(open) = self.heap.pop() else {
                 return RunEnd::Exhausted;
             };
-            if self.stats.nodes >= self.node_cap || self.start.elapsed() > self.time_limit {
+            if self.over_budget() {
                 self.heap.push(open); // stays open: the search is not exhausted
                 return RunEnd::Budget;
             }
@@ -678,13 +684,24 @@ impl<'a> Searcher<'a> {
                 self.plunges += 1;
                 patch.push((v, near.0, near.1));
                 self.arena.set_var_bounds(v, near.0, near.1);
-                if self.stats.nodes >= self.node_cap || self.start.elapsed() > self.time_limit {
+                if self.over_budget() {
                     // Out of budget mid-plunge: keep the un-solved child open.
                     self.push_node(obj, patch);
                     return RunEnd::Budget;
                 }
             }
         }
+    }
+
+    /// Node-cap / wall-clock budget check. A deadline trip is recorded in
+    /// the stats so callers can tell "ran out of time" (degrade) from "ran
+    /// out of nodes" (a tuned cap, working as intended).
+    fn over_budget(&mut self) -> bool {
+        if self.start.elapsed() > self.time_limit {
+            self.stats.hit_deadline = true;
+            return true;
+        }
+        self.stats.nodes >= self.node_cap
     }
 
     /// Fold the arena's lifetime counters into the stats (call once, when
@@ -827,7 +844,11 @@ pub fn solve_milp_session(
         let mut pool: Option<ThreadPool> = None;
 
         loop {
-            if s.stats.nodes >= opts.max_nodes || start.elapsed() > opts.time_limit {
+            if start.elapsed() > opts.time_limit {
+                s.stats.hit_deadline = true;
+                break;
+            }
+            if s.stats.nodes >= opts.max_nodes {
                 break;
             }
             let cutoff_now = s.best_obj.min(opts.cutoff);

@@ -22,6 +22,20 @@
 //!   [`crate::sched::planner::PlannerSession`], which carries the
 //!   incumbent seed and the terminal MILP basis across epochs.
 //!
+//! Planning itself can fail under pressure — the MILP can blow its
+//! per-epoch deadline ([`SearchStats::hit_deadline`], enforced inside
+//! [`crate::milp::branch_bound`]'s node loop via the search options'
+//! `milp.time_limit`), or a hostile world can admit no feasible plan at
+//! all. The orchestrator then walks a **degradation ladder**
+//! ([`DegradedMode`]) instead of serving stale state forever: keep the
+//! incumbent and repair assignments only → shed the lowest-value request
+//! types → emergency homogeneous fallback on the deepest surviving pool.
+//! Re-promotion is hysteretic: only after
+//! [`OrchestratorOptions::degrade_hysteresis`] consecutive clean epochs
+//! does the ladder climb one rung, so a flapping market cannot bounce the
+//! control plane between rungs every tick. Every [`PlanEpoch`] carries
+//! the rung it was planned under.
+//!
 //! The produced epoch timeline feeds [`crate::sim::simulate_timeline`],
 //! which executes the transitions mid-trace (draining retiring replicas,
 //! routing around ones still spinning up) and reports per-epoch cost and
@@ -38,9 +52,10 @@ pub use replan::{
     replan_world, ReplanOutcome, ReplanStrategy, StrategyPlanner, WorldDrift,
 };
 
+use crate::catalog::GpuType;
 use crate::cloud::{MarketEvent, MarketEventKind, PriceBook, WorldEvent};
 use crate::sched::binary_search::{BinarySearchOptions, SearchStats};
-use crate::sched::planner::{PlanRequest, Planner, PlannerSession};
+use crate::sched::planner::{Infeasibility, PlanRequest, Planner, PlannerSession};
 use crate::sched::{SchedProblem, ServingPlan};
 use crate::telemetry;
 use crate::workload::{demand_drift, DemandSnapshot};
@@ -70,6 +85,13 @@ pub struct OrchestratorOptions {
     /// composition and repairs via the assignment LP alone (the Mélange
     /// fast path); past it the composition itself is re-decided.
     pub demand_drift_threshold: f64,
+    /// Consecutive clean (no deadline miss, no infeasibility) epochs the
+    /// degradation ladder requires before re-promoting one rung toward
+    /// [`DegradedMode::Normal`]. Hysteresis against rung flapping.
+    pub degrade_hysteresis: usize,
+    /// Fraction of total demand mass the [`DegradedMode::Shedding`] rung
+    /// may drop, lowest-value request types first.
+    pub shed_fraction: f64,
 }
 
 impl Default for OrchestratorOptions {
@@ -83,6 +105,59 @@ impl Default for OrchestratorOptions {
             min_drift: 0.02,
             min_demand_drift: 0.02,
             demand_drift_threshold: 0.15,
+            degrade_hysteresis: 2,
+            shed_fraction: 0.3,
+        }
+    }
+}
+
+/// The degradation ladder's rungs, from full planning down to the
+/// last-resort fallback. Ordered so demotion moves *down* the enum and
+/// promotion moves back *up*; every [`PlanEpoch`] is tagged with the rung
+/// its plan was produced under.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradedMode {
+    /// Full two-axis replanning ladder ([`replan_world`]).
+    #[default]
+    Normal,
+    /// Keep the incumbent composition; repair assignments only
+    /// ([`assignment_only_repair`]), falling back to [`clamp_to_market`]
+    /// when the market shrank under the incumbent.
+    RepairOnly,
+    /// Shed the lowest-value request types (up to
+    /// [`OrchestratorOptions::shed_fraction`] of total demand mass) and
+    /// repair what remains.
+    Shedding,
+    /// Emergency homogeneous fallback: a single-GPU-type plan on the
+    /// deepest surviving pool, clamped to the real market.
+    Emergency,
+}
+
+impl DegradedMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DegradedMode::Normal => "normal",
+            DegradedMode::RepairOnly => "repair_only",
+            DegradedMode::Shedding => "shedding",
+            DegradedMode::Emergency => "emergency",
+        }
+    }
+
+    /// One rung down (toward [`DegradedMode::Emergency`]); saturates.
+    pub fn demote(self) -> DegradedMode {
+        match self {
+            DegradedMode::Normal => DegradedMode::RepairOnly,
+            DegradedMode::RepairOnly => DegradedMode::Shedding,
+            _ => DegradedMode::Emergency,
+        }
+    }
+
+    /// One rung up (toward [`DegradedMode::Normal`]); saturates.
+    pub fn promote(self) -> DegradedMode {
+        match self {
+            DegradedMode::Emergency => DegradedMode::Shedding,
+            DegradedMode::Shedding => DegradedMode::RepairOnly,
+            _ => DegradedMode::Normal,
         }
     }
 }
@@ -114,6 +189,13 @@ pub struct PlanEpoch {
     /// stale incumbent was kept best-effort (distinct from a deliberate
     /// low-drift absorption).
     pub infeasible: bool,
+    /// The structured reason when `infeasible`: even the ladder's bottom
+    /// rung produced nothing, and this is why.
+    pub infeasibility: Option<Infeasibility>,
+    /// The degradation-ladder rung this epoch's plan was produced under
+    /// ([`DegradedMode::Normal`] for healthy epochs; absorbed epochs carry
+    /// the rung in force at the time).
+    pub degraded: DegradedMode,
     pub supply_drift: f64,
     pub demand_drift: f64,
     /// What this epoch's (re)planning cost the solver: LP solves, simplex
@@ -133,6 +215,8 @@ pub struct OrchestrationReport {
     pub fast_paths: usize,
     /// Epochs whose diff actually moved replicas.
     pub transitions: usize,
+    /// Epochs planned below [`DegradedMode::Normal`] on the ladder.
+    pub degraded_epochs: usize,
     pub total_migration: MigrationCost,
     /// Aggregate solver cost across every epoch (the replanning bill).
     pub solver: SearchStats,
@@ -233,9 +317,78 @@ pub fn apply_world(p: &mut SchedProblem, event: &WorldEvent, epoch_s: f64) {
     apply_demand(p, &event.demand, epoch_s);
 }
 
-/// The single [`PlanEpoch`] construction site. The epoch carries 15
-/// fields (the solver-stats one landed with the warm-started MILP core);
-/// every orchestration outcome (initial solve / replanned / absorbed /
+/// The [`DegradedMode::Shedding`] rung's problem transform: zero out
+/// whole workload-type columns, lowest total demand mass first, until just
+/// under `shed_fraction` of the overall mass is gone. Requests are treated
+/// as equally valuable, so shedding the smallest columns first drops the
+/// fewest requests per unit of solver relief; ties break on column index
+/// for determinism. Returns the reduced problem and the mass shed.
+pub fn shed_lowest_value(p: &SchedProblem, shed_fraction: f64) -> (SchedProblem, f64) {
+    let mut q = p.clone();
+    let ntypes = q.demands.iter().map(|d| d.len()).max().unwrap_or(0);
+    let mut mass: Vec<(f64, usize)> = (0..ntypes)
+        .map(|w| {
+            let m = q
+                .demands
+                .iter()
+                .map(|d| d.get(w).copied().unwrap_or(0.0))
+                .sum::<f64>();
+            (m, w)
+        })
+        .collect();
+    let total: f64 = mass.iter().map(|(m, _)| m).sum();
+    mass.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut shed = 0.0;
+    for (m, w) in mass {
+        if m <= 0.0 {
+            continue;
+        }
+        if shed + m > total * shed_fraction {
+            break;
+        }
+        shed += m;
+        for dm in q.demands.iter_mut() {
+            if let Some(v) = dm.get_mut(w) {
+                *v = 0.0;
+            }
+        }
+    }
+    (q, shed)
+}
+
+/// The [`DegradedMode::Emergency`] rung: walk GPU types by pool depth
+/// (deepest first) and take the first homogeneous plan that survives being
+/// clamped back onto the real market. [`crate::baselines::homogeneous_plan`]
+/// assumes an unlimited pool of its type, so the clamp is what restores
+/// availability- and budget-feasibility; a plan that cannot be clamped
+/// into validity is skipped, not returned.
+pub fn emergency_plan(
+    p: &SchedProblem,
+    search: &BinarySearchOptions,
+    stats: &mut SearchStats,
+) -> Option<ServingPlan> {
+    let mut order: Vec<GpuType> = GpuType::ALL.to_vec();
+    order.sort_by_key(|g| std::cmp::Reverse(p.avail[g.index()]));
+    for gpu in order {
+        if p.avail[gpu.index()] == 0 {
+            continue;
+        }
+        let Some(plan) = crate::baselines::homogeneous_plan(p, gpu, search) else {
+            continue;
+        };
+        if let Some(clamped) = clamp_to_market(p, &plan, stats) {
+            if clamped.validate(p, 1e-3).is_ok() {
+                return Some(clamped);
+            }
+        }
+    }
+    None
+}
+
+/// The single [`PlanEpoch`] construction site. The epoch carries 17
+/// fields (solver stats landed with the warm-started MILP core, the
+/// degradation tag and structured infeasibility with the ladder); every
+/// orchestration outcome (initial solve / replanned / absorbed /
 /// infeasible) funnels through here so the copies cannot drift apart.
 struct EpochBuild<'a> {
     index: usize,
@@ -250,7 +403,8 @@ impl EpochBuild<'_> {
         plan: ServingPlan,
         outcome: Option<&ReplanOutcome>,
         replanned: bool,
-        infeasible: bool,
+        infeasibility: Option<Infeasibility>,
+        degraded: DegradedMode,
         stats: SearchStats,
     ) -> PlanEpoch {
         PlanEpoch {
@@ -265,7 +419,9 @@ impl EpochBuild<'_> {
             replanned,
             escalated: outcome.map(|o| o.escalated).unwrap_or(false),
             fast_path: outcome.map(|o| o.fast_path).unwrap_or(false),
-            infeasible,
+            infeasible: infeasibility.is_some(),
+            infeasibility,
+            degraded,
             supply_drift: self.drift.supply,
             demand_drift: self.drift.demand,
             stats,
@@ -274,19 +430,33 @@ impl EpochBuild<'_> {
 
     /// The from-scratch first epoch (carrying the initial solve's cost).
     fn initial(self, plan: &ServingPlan, stats: SearchStats) -> PlanEpoch {
-        self.build(plan.clone(), None, true, false, stats)
+        self.build(plan.clone(), None, true, None, DegradedMode::Normal, stats)
     }
 
-    /// A successfully replanned epoch.
-    fn replanned(self, outcome: &ReplanOutcome) -> PlanEpoch {
+    /// A successfully replanned epoch, tagged with the ladder rung that
+    /// produced its plan.
+    fn replanned(self, outcome: &ReplanOutcome, degraded: DegradedMode) -> PlanEpoch {
         let stats = outcome.stats.clone();
-        self.build(outcome.plan.clone(), Some(outcome), true, false, stats)
+        self.build(outcome.plan.clone(), Some(outcome), true, None, degraded, stats)
     }
 
     /// An epoch that keeps the incumbent: a deliberate low-drift
-    /// absorption, or (`infeasible`) a hostile world with no plan at all.
-    fn kept(self, incumbent: &ServingPlan, infeasible: bool) -> PlanEpoch {
-        self.build(incumbent.clone(), None, false, infeasible, SearchStats::default())
+    /// absorption (`infeasibility: None`), or a hostile world where even
+    /// the ladder's bottom rung produced nothing (the structured reason).
+    fn kept(
+        self,
+        incumbent: &ServingPlan,
+        infeasibility: Option<Infeasibility>,
+        degraded: DegradedMode,
+    ) -> PlanEpoch {
+        self.build(
+            incumbent.clone(),
+            None,
+            false,
+            infeasibility,
+            degraded,
+            SearchStats::default(),
+        )
     }
 }
 
@@ -308,6 +478,11 @@ pub struct Orchestrator {
     basis_avail: [u32; 6],
     basis_prices: [f64; 6],
     basis_demand: DemandSnapshot,
+    /// The degradation ladder's current rung.
+    degraded: DegradedMode,
+    /// Consecutive clean epochs at the current rung; promotion fires when
+    /// it reaches `opts.degrade_hysteresis`.
+    healthy_streak: usize,
     epochs: Vec<PlanEpoch>,
 }
 
@@ -348,8 +523,15 @@ impl Orchestrator {
             basis_avail: first.market.avail.counts,
             basis_prices: first.market.prices.per_hour,
             basis_demand: first.demand.clone(),
+            degraded: DegradedMode::Normal,
+            healthy_streak: 0,
             epochs: vec![epoch],
         })
+    }
+
+    /// The degradation-ladder rung currently in force.
+    pub fn degraded_mode(&self) -> DegradedMode {
+        self.degraded
     }
 
     /// The plan currently in force.
@@ -374,32 +556,110 @@ impl Orchestrator {
         };
         let mut problem = self.base.clone();
         apply_world(&mut problem, event, epoch_s);
-        let build = EpochBuild {
+        let mut build = EpochBuild {
             index: self.epochs.len(),
             event,
             problem,
             drift,
         };
 
-        // Absorb low-drift events while the incumbent stays feasible.
+        // Absorb low-drift events while the incumbent stays feasible. A
+        // clean absorption counts as healthy evidence for the ladder's
+        // hysteresis: the world is calm enough that the rung can climb.
         if drift.supply < self.opts.min_drift
             && drift.demand < self.opts.min_demand_drift
             && self.incumbent.validate(&build.problem, 1e-4).is_ok()
         {
-            self.epochs.push(build.kept(&self.incumbent, false));
+            let mode = self.note_healthy();
+            self.epochs.push(build.kept(&self.incumbent, None, mode));
             Self::note_epoch(&mut tspan, self.epochs.last().unwrap());
             return;
         }
 
-        match replan_world(
-            &build.problem,
-            &self.incumbent,
-            &drift,
-            &self.opts,
-            &mut self.session,
-        ) {
+        // Plan under the ladder's current rung. Normal runs the full
+        // two-axis replan; a deadline miss or an infeasible answer demotes
+        // and retries the *same* epoch one rung down, so the epoch leaves
+        // with the best plan the surviving rungs could produce.
+        let mut rung = self.degraded;
+        let mut outcome: Option<ReplanOutcome> = None;
+        let mut triggered = false;
+        if rung == DegradedMode::Normal {
+            match replan_world(
+                &build.problem,
+                &self.incumbent,
+                &drift,
+                &self.opts,
+                &mut self.session,
+            ) {
+                Some(o) if !o.stats.hit_deadline => outcome = Some(o),
+                Some(o) => {
+                    // The solver blew its per-epoch deadline but still
+                    // holds a usable plan: take it, run the next epochs
+                    // one rung down.
+                    triggered = true;
+                    outcome = Some(o);
+                }
+                None => {
+                    triggered = true;
+                    rung = DegradedMode::RepairOnly;
+                }
+            }
+        }
+        while outcome.is_none() {
+            let mut stats = SearchStats::default();
+            let plan = match rung {
+                DegradedMode::Normal => unreachable!("Normal is handled above"),
+                DegradedMode::RepairOnly => {
+                    assignment_only_repair(&build.problem, &self.incumbent, &mut stats)
+                        .or_else(|| clamp_to_market(&build.problem, &self.incumbent, &mut stats))
+                }
+                DegradedMode::Shedding => {
+                    let (reduced, mass) =
+                        shed_lowest_value(&build.problem, self.opts.shed_fraction);
+                    let plan = assignment_only_repair(&reduced, &self.incumbent, &mut stats)
+                        .or_else(|| clamp_to_market(&reduced, &self.incumbent, &mut stats));
+                    if plan.is_some() {
+                        // The epoch's recorded problem is the one actually
+                        // planned against; the shed columns are gone from
+                        // it so the plan validates.
+                        telemetry::gauge_set("orch.shed_mass", mass);
+                        build.problem = reduced;
+                    }
+                    plan
+                }
+                DegradedMode::Emergency => {
+                    emergency_plan(&build.problem, &self.opts.search, &mut stats)
+                }
+            };
+            match plan {
+                Some(plan) => {
+                    let diff = PlanDiff::between(&build.problem, &self.incumbent, &plan);
+                    let migration = diff.migration_cost(&build.problem, &self.opts.cost_model);
+                    outcome = Some(ReplanOutcome {
+                        plan,
+                        diff,
+                        migration,
+                        escalated: false,
+                        fast_path: rung == DegradedMode::RepairOnly,
+                        stats,
+                    });
+                }
+                None if rung == DegradedMode::Emergency => break,
+                None => {
+                    triggered = true;
+                    rung = rung.demote();
+                }
+            }
+        }
+
+        match outcome {
             Some(outcome) => {
-                let epoch = build.replanned(&outcome);
+                let mode = if triggered {
+                    self.note_trigger(rung)
+                } else {
+                    self.note_healthy()
+                };
+                let epoch = build.replanned(&outcome, mode);
                 self.incumbent = outcome.plan;
                 // Fast-path/incremental repairs bypass the session: keep
                 // its seed tracking the plan actually in force so a stale
@@ -411,12 +671,50 @@ impl Orchestrator {
                 self.epochs.push(epoch);
             }
             None => {
-                // The world is too hostile for any feasible plan; keep the
-                // incumbent best-effort and try again on the next event.
-                self.epochs.push(build.kept(&self.incumbent, true));
+                // Even the bottom rung produced nothing: keep the stale
+                // incumbent best-effort, record the structured reason, and
+                // try again from Emergency on the next event.
+                self.note_trigger(DegradedMode::Emergency);
+                self.epochs.push(build.kept(
+                    &self.incumbent,
+                    Some(Infeasibility::Exhausted),
+                    DegradedMode::Emergency,
+                ));
             }
         }
         Self::note_epoch(&mut tspan, self.epochs.last().unwrap());
+    }
+
+    /// Record a clean epoch at the current rung; after
+    /// `degrade_hysteresis` consecutive ones the ladder re-promotes one
+    /// rung. Returns the rung in force for tagging the epoch (promotion
+    /// applies from the *next* epoch).
+    fn note_healthy(&mut self) -> DegradedMode {
+        let mode = self.degraded;
+        if mode == DegradedMode::Normal {
+            self.healthy_streak = 0;
+            return mode;
+        }
+        self.healthy_streak += 1;
+        if self.healthy_streak >= self.opts.degrade_hysteresis {
+            self.degraded = mode.promote();
+            self.healthy_streak = 0;
+        }
+        mode
+    }
+
+    /// Record a trigger (deadline miss or rung failure): the ladder
+    /// settles where the walk ended — a trigger at Normal (late but usable
+    /// plan) demotes to RepairOnly. Returns the rung that actually
+    /// produced this epoch's plan.
+    fn note_trigger(&mut self, rung: DegradedMode) -> DegradedMode {
+        self.degraded = if rung == DegradedMode::Normal {
+            DegradedMode::RepairOnly
+        } else {
+            rung
+        };
+        self.healthy_streak = 0;
+        rung
     }
 
     /// Mirror one finished epoch into the telemetry registry and tag its
@@ -452,11 +750,23 @@ impl Orchestrator {
             },
             1,
         );
+        if e.degraded != DegradedMode::Normal {
+            telemetry::count("orch.degraded_epochs", 1);
+            telemetry::count(
+                match e.degraded {
+                    DegradedMode::RepairOnly => "orch.degraded.repair_only",
+                    DegradedMode::Shedding => "orch.degraded.shedding",
+                    _ => "orch.degraded.emergency",
+                },
+                1,
+            );
+        }
         telemetry::gauge_set("orch.drift.supply", e.supply_drift);
         telemetry::gauge_set("orch.drift.demand", e.demand_drift);
         telemetry::observe("orch.migration_dollars", e.migration.dollars);
         tspan.tag("epoch", e.index);
         tspan.tag("rung", rung);
+        tspan.tag("degraded", e.degraded.name());
         tspan.tag("supply_drift", e.supply_drift);
         tspan.tag("demand_drift", e.demand_drift);
         tspan.tag("migration_dollars", e.migration.dollars);
@@ -470,6 +780,10 @@ impl Orchestrator {
         let escalations = epochs.iter().filter(|e| e.escalated).count();
         let fast_paths = epochs.iter().filter(|e| e.fast_path).count();
         let transitions = epochs.iter().skip(1).filter(|e| !e.diff.is_empty()).count();
+        let degraded_epochs = epochs
+            .iter()
+            .filter(|e| e.degraded != DegradedMode::Normal)
+            .count();
         let mut total_migration = MigrationCost::default();
         let mut solver = SearchStats::default();
         for e in &epochs {
@@ -482,6 +796,7 @@ impl Orchestrator {
             escalations,
             fast_paths,
             transitions,
+            degraded_epochs,
             total_migration,
             solver,
         }
@@ -851,6 +1166,119 @@ mod tests {
             last_total > first_total * 1.2,
             "demand totals did not ramp: {first_total} → {last_total}"
         );
+    }
+
+    #[test]
+    fn shed_lowest_value_drops_smallest_columns_first() {
+        let mut p = market_problem(ModelSpec::llama3_8b(), 30.0);
+        p.demands = vec![vec![
+            10.0, 50.0, 40.0, 300.0, 200.0, 100.0, 150.0, 80.0, 70.0,
+        ]];
+        let (reduced, shed) = shed_lowest_value(&p, 0.3);
+        // Ascending mass: 10, 40, 50, 70, 80 = 250; adding 100 would cross
+        // the 300 (= 30% of 1000) cap, so exactly five columns go.
+        assert!((shed - 250.0).abs() < 1e-9, "shed {shed}");
+        for w in [0usize, 1, 2, 7, 8] {
+            assert_eq!(reduced.demands[0][w], 0.0, "column {w} kept");
+        }
+        for w in [3usize, 4, 5, 6] {
+            assert_eq!(reduced.demands[0][w], p.demands[0][w], "column {w} shed");
+        }
+        // Only demands change; the market state is untouched.
+        assert_eq!(reduced.avail, p.avail);
+        assert_eq!(reduced.candidates.len(), p.candidates.len());
+    }
+
+    #[test]
+    fn shedding_and_emergency_rungs_produce_valid_plans() {
+        // Satellite contract: every degradation rung yields a valid plan
+        // (or a structured Infeasibility — the ladder test covers that
+        // side). Exercise the Shedding and Emergency rungs directly.
+        let p = market_problem(ModelSpec::llama3_8b(), 30.0);
+        let search = BinarySearchOptions {
+            tolerance: 3.0,
+            ..Default::default()
+        };
+        let mut session = PlannerSession::new(search.clone());
+        let incumbent = session.plan(&PlanRequest::new(&p)).plan.expect("initial");
+
+        // Shedding: repair the incumbent against the reduced problem.
+        let (reduced, shed) = shed_lowest_value(&p, 0.3);
+        assert!(shed > 0.0, "nothing shed");
+        let mut stats = SearchStats::default();
+        let plan = assignment_only_repair(&reduced, &incumbent, &mut stats)
+            .or_else(|| clamp_to_market(&reduced, &incumbent, &mut stats))
+            .expect("shedding rung repairs");
+        plan.validate(&reduced, 1e-3).expect("valid reduced plan");
+
+        // Emergency: a homogeneous plan clamped onto the real market.
+        let mut stats = SearchStats::default();
+        let plan = emergency_plan(&p, &search, &mut stats)
+            .expect("emergency rung should plan on a healthy market");
+        plan.validate(&p, 1e-3).expect("valid emergency plan");
+        let used = plan.gpus_used(&p);
+        assert_eq!(
+            used.iter().filter(|&&u| u > 0).count(),
+            1,
+            "emergency plan is not homogeneous: {used:?}"
+        );
+    }
+
+    #[test]
+    fn degradation_ladder_demotes_then_repromotes_with_hysteresis() {
+        // Epoch 1's market has zero availability on every pool: no rung
+        // can plan, so the ladder bottoms out at Emergency with a
+        // structured reason and the stale incumbent is kept best-effort.
+        // The market then returns to the epoch-0 world; with hysteresis 1
+        // each clean epoch climbs exactly one rung, so the tags walk
+        // Emergency → Shedding → RepairOnly → Normal instead of snapping
+        // straight back (hysteresis against flapping).
+        let base = market_problem(ModelSpec::llama3_8b(), 30.0);
+        let calm = crate::cloud::availability(1);
+        let dead = Availability::new([0, 0, 0, 0, 0, 0]);
+        let mk = |t_s: f64, avail: Availability| {
+            WorldEvent::new(
+                MarketEvent {
+                    t_s,
+                    avail,
+                    prices: PriceBook::base(),
+                    kind: MarketEventKind::Drift,
+                },
+                flat_demand(),
+            )
+        };
+        let events = vec![
+            mk(0.0, calm),
+            mk(900.0, dead),
+            mk(1800.0, calm),
+            mk(2700.0, calm),
+            mk(3600.0, calm),
+            mk(4500.0, calm),
+        ];
+        let opts = OrchestratorOptions {
+            degrade_hysteresis: 1,
+            ..fast_opts(ReplanStrategy::Incremental)
+        };
+        let report = orchestrate(&base, &events, &opts).expect("orchestration");
+        use DegradedMode::*;
+        let modes: Vec<DegradedMode> = report.epochs.iter().map(|e| e.degraded).collect();
+        assert_eq!(
+            modes,
+            vec![Normal, Emergency, Emergency, Shedding, RepairOnly, Normal]
+        );
+        let dead_epoch = &report.epochs[1];
+        assert!(dead_epoch.infeasible && !dead_epoch.replanned);
+        assert!(matches!(
+            dead_epoch.infeasibility,
+            Some(Infeasibility::Exhausted)
+        ));
+        // Recovery epochs absorb: the incumbent still fits the restored
+        // world, so climbing the ladder never costs a migration.
+        for e in &report.epochs[2..] {
+            assert!(!e.replanned, "epoch {} replanned during recovery", e.index);
+            assert!(!e.infeasible);
+        }
+        assert_eq!(report.degraded_epochs, 4);
     }
 
     #[test]

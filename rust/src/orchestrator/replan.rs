@@ -440,6 +440,7 @@ impl Planner for StrategyPlanner {
                 // Fast-path/incremental rungs bypass the session; keep its
                 // seed tracking the plan actually in force.
                 self.session.observe_incumbent(&outcome.plan);
+                let hit_deadline = outcome.stats.hit_deadline;
                 PlanReport {
                     plan: Some(outcome.plan),
                     infeasible: None,
@@ -449,6 +450,7 @@ impl Planner for StrategyPlanner {
                         fast_path: outcome.fast_path,
                         escalated: outcome.escalated,
                         warmed: true,
+                        hit_deadline,
                     },
                 }
             }

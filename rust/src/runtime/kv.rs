@@ -9,6 +9,20 @@
 
 use super::ModelDims;
 
+/// Bytes of KV cache one in-flight request holds *per context token*:
+/// `layers × 2 planes × kv_heads × head_dim × bytes-per-element` — the same
+/// stripe arithmetic [`BatchAssembler`] allocates for real slots, exposed so
+/// the simulators can price how much state a live migration must move when a
+/// replica is reclaimed inside its advance-notice window.
+pub fn kv_bytes_per_token(
+    layers: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    bytes_per_elem: f64,
+) -> f64 {
+    layers as f64 * 2.0 * kv_heads as f64 * head_dim as f64 * bytes_per_elem
+}
+
 /// A single request's KV cache plus generation state.
 #[derive(Clone, Debug)]
 pub struct SlotCache {
@@ -87,6 +101,17 @@ impl BatchAssembler {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kv_bytes_per_token_matches_assembler_stripes() {
+        // One token of KV = the per-token share of the assembler's
+        // [L, 2, T, KH, HD] slot: layers × 2 × KH × HD elements.
+        let d = dims();
+        let asm = BatchAssembler::new(&d);
+        let per_slot_f32 = asm.layers * 2 * asm.stripe;
+        let per_token = kv_bytes_per_token(d.layers, d.kv_heads, d.head_dim, 4.0);
+        assert_eq!(per_token * d.max_seq as f64, (per_slot_f32 * 4) as f64);
+    }
 
     fn dims() -> ModelDims {
         ModelDims {

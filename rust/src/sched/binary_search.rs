@@ -152,6 +152,10 @@ pub struct SearchStats {
     pub dse_pivots: u64,
     /// One entry per feasibility check, in probe order.
     pub iterates: Vec<IterateStat>,
+    /// Some exact feasibility MILP hit its wall-clock deadline and returned
+    /// its best incumbent rather than a proven verdict. Sticky across
+    /// iterates and merges — the orchestrator's degradation trigger.
+    pub hit_deadline: bool,
     pub elapsed: Duration,
 }
 
@@ -167,6 +171,7 @@ impl SearchStats {
         self.refactorisations += m.refactorisations;
         self.eta_updates += m.eta_updates;
         self.dse_pivots += m.dse_pivots;
+        self.hit_deadline |= m.hit_deadline;
     }
 
     /// Fold one knapsack rounding run's counters into the search totals.
@@ -196,6 +201,7 @@ impl SearchStats {
         self.eta_updates += other.eta_updates;
         self.dse_pivots += other.dse_pivots;
         self.iterates.extend_from_slice(&other.iterates);
+        self.hit_deadline |= other.hit_deadline;
         self.elapsed += other.elapsed;
     }
 

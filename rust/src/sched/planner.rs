@@ -165,6 +165,11 @@ pub struct Provenance {
     /// The solve started from carried warm state (a seed plan, a warm
     /// upper bound, or a session basis) rather than from scratch.
     pub warmed: bool,
+    /// Some feasibility MILP blew its wall-clock deadline and answered
+    /// with its best incumbent instead of a proven verdict (mirrors
+    /// [`SearchStats::hit_deadline`]). The orchestrator's degradation
+    /// ladder treats this as "the solver was late".
+    pub hit_deadline: bool,
 }
 
 impl Provenance {
@@ -174,6 +179,7 @@ impl Provenance {
             fast_path: false,
             escalated: false,
             warmed: false,
+            hit_deadline: false,
         }
     }
 }
@@ -273,6 +279,7 @@ impl Planner for BisectionPlanner {
         );
         let mut provenance = Provenance::cold(self.name());
         provenance.warmed = req.seed_plan.is_some() || req.warm_upper.is_some();
+        provenance.hit_deadline = stats.hit_deadline;
         match plan {
             Some(plan) => PlanReport::found(plan, stats, provenance),
             None => {
@@ -386,6 +393,7 @@ impl Planner for PlannerSession {
         self.solves += 1;
         let mut provenance = Provenance::cold(self.name());
         provenance.warmed = warmed;
+        provenance.hit_deadline = stats.hit_deadline;
         match plan {
             Some(plan) => {
                 self.incumbent = Some(plan.clone());

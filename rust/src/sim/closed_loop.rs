@@ -22,6 +22,7 @@
 
 use super::engine::{run_engine, EngineOptions, EngineReport};
 use super::timeline::{simulate_timeline, TimelineOptions, TimelineResult};
+use crate::cloud::faults::FaultInjector;
 use crate::cloud::{MarketEvent, WorldEvent};
 use crate::orchestrator::{
     epoch_duration, OrchestrationReport, Orchestrator, OrchestratorOptions,
@@ -79,6 +80,13 @@ pub struct ClosedLoopOptions {
     /// shifts faster but jitters more; a fraction of the tick interval is
     /// a reasonable default.
     pub estimator_halflife_s: f64,
+    /// Optional seeded fault injection. When set, the same injector (a)
+    /// decorates the market signal the orchestrator replans against
+    /// (dented, optionally stale availability) and (b) compiles the
+    /// replica-kill schedule the simulator executes — overriding any
+    /// `timeline.faults` the caller set, so the supply dents and the kills
+    /// always agree.
+    pub faults: Option<FaultInjector>,
 }
 
 impl Default for ClosedLoopOptions {
@@ -88,6 +96,7 @@ impl Default for ClosedLoopOptions {
             timeline: TimelineOptions::default(),
             mode: DemandMode::Estimated,
             estimator_halflife_s: 600.0,
+            faults: None,
         }
     }
 }
@@ -147,10 +156,31 @@ pub fn run_closed_loop(
     perf: &PerfModel,
     opts: &ClosedLoopOptions,
 ) -> Option<ClosedLoopResult> {
-    let first = markets.first()?;
     let mut tspan = telemetry::span("loop.run", "sim");
     tspan.tag("mode", opts.mode.name());
     let ts: Vec<f64> = markets.iter().map(|m| m.t_s).collect();
+    let horizon_s = *ts.last()? + epoch_duration(&ts, ts.len() - 1);
+    // Fault injection dents the market signal the orchestrator replans
+    // against; the demand channel passes through the wrapper untouched,
+    // so a placeholder snapshot is fine while extracting the markets.
+    let faulted: Vec<MarketEvent>;
+    let markets: &[MarketEvent] = match &opts.faults {
+        Some(inj) => {
+            let placeholder = schedule.at(ts[0]);
+            faulted = inj
+                .wrap(
+                    horizon_s,
+                    markets
+                        .iter()
+                        .map(|m| WorldEvent::new(m.clone(), placeholder.clone())),
+                )
+                .map(|e| e.market)
+                .collect();
+            &faulted
+        }
+        None => markets,
+    };
+    let first = markets.first()?;
     let initial_demand = schedule.at(first.t_s);
     let mut estimator = MixEstimator::new(opts.estimator_halflife_s, initial_demand.clone());
     let mut observed_to_s = first.t_s;
@@ -197,12 +227,19 @@ pub fn run_closed_loop(
     }
 
     let steps = report.timeline_steps();
+    let mut sim_opts = opts.timeline.clone();
+    if let Some(inj) = &opts.faults {
+        // The same injector that dented the market view supplies the kill
+        // schedule, so supply deficits and replica deaths agree.
+        sim_opts.faults = inj.plan(horizon_s);
+        tspan.tag("fault_episodes", sim_opts.faults.len());
+    }
     let sim = simulate_timeline(
         &steps,
         std::slice::from_ref(model),
         std::slice::from_ref(trace),
         perf,
-        &opts.timeline,
+        &sim_opts,
     );
     drop(steps);
 
@@ -261,6 +298,11 @@ pub struct StreamedLoopOptions {
     /// Stream synthesis parameters — only `seed` and `length_sigma` are
     /// read; rate and mixture come from the schedule.
     pub synth: SynthOptions,
+    /// Optional seeded fault injection (same contract as
+    /// [`ClosedLoopOptions::faults`]): one injector both decorates the
+    /// orchestrator's market view and compiles the kill schedule the
+    /// engine executes, overriding any `engine.faults` the caller set.
+    pub faults: Option<FaultInjector>,
 }
 
 impl Default for StreamedLoopOptions {
@@ -271,6 +313,7 @@ impl Default for StreamedLoopOptions {
             mode: DemandMode::Estimated,
             estimator_halflife_s: 600.0,
             synth: SynthOptions::default(),
+            faults: None,
         }
     }
 }
@@ -317,10 +360,29 @@ pub fn run_closed_loop_streamed(
     perf: &PerfModel,
     opts: &StreamedLoopOptions,
 ) -> Option<StreamedLoopResult> {
-    let first = markets.first()?;
     let mut tspan = telemetry::span("loop.run_streamed", "sim");
     tspan.tag("mode", opts.mode.name());
     let ts: Vec<f64> = markets.iter().map(|m| m.t_s).collect();
+    // Dent the orchestrator's market view with the injector's episodes
+    // (demand passes through the wrapper untouched).
+    let faulted: Vec<MarketEvent>;
+    let markets: &[MarketEvent] = match &opts.faults {
+        Some(inj) => {
+            let placeholder = schedule.at(*ts.first()?);
+            faulted = inj
+                .wrap(
+                    horizon_s,
+                    markets
+                        .iter()
+                        .map(|m| WorldEvent::new(m.clone(), placeholder.clone())),
+                )
+                .map(|e| e.market)
+                .collect();
+            &faulted
+        }
+        None => markets,
+    };
+    let first = markets.first()?;
     let initial_demand = schedule.at(first.t_s);
     let mut estimator = MixEstimator::new(opts.estimator_halflife_s, initial_demand.clone());
     let mut est_stream = ArrivalStream::new(schedule, horizon_s, &opts.synth);
@@ -380,12 +442,19 @@ pub fn run_closed_loop_streamed(
     }
 
     let steps = report.timeline_steps();
+    let mut engine_opts = opts.engine.clone();
+    if let Some(inj) = &opts.faults {
+        // The same injector that dented the market view supplies the kill
+        // schedule, so supply deficits and replica deaths agree.
+        engine_opts.faults = inj.plan(horizon_s);
+        tspan.tag("fault_episodes", engine_opts.faults.len());
+    }
     let engine = run_engine(
         &steps,
         model,
         ArrivalStream::new(schedule, horizon_s, &opts.synth),
         perf,
-        &opts.engine,
+        &engine_opts,
     );
     drop(steps);
 
@@ -619,6 +688,7 @@ mod tests {
                 seed,
                 ..Default::default()
             },
+            faults: None,
         }
     }
 
@@ -656,6 +726,49 @@ mod tests {
         let b = run(4);
         assert_eq!(a.engine.fingerprint(), b.engine.fingerprint());
         assert!(b.engine.threads > a.engine.threads || b.engine.shards == 1);
+    }
+
+    #[test]
+    fn faulted_streamed_loop_is_deterministic_and_kills_replicas() {
+        // Chaos wiring: one injector dents the orchestrator's market view
+        // AND schedules the engine's replica kills, the whole run stays
+        // bit-identical across thread counts, and request conservation
+        // (completed + shed + dropped = streamed) survives the storm.
+        use crate::cloud::faults::FaultProfile;
+        let s = shift_scenario(4, 61);
+        let horizon_s = 4.0 * 600.0;
+        let injector =
+            FaultInjector::new(FaultProfile::crash_storm().with_mean_gap_s(300.0), 0xC0FFEE);
+        let run = |threads: usize| {
+            let mut opts = streamed_opts(DemandMode::Oracle, 61, threads);
+            opts.faults = Some(injector.clone());
+            run_closed_loop_streamed(
+                &s.base,
+                &s.markets,
+                &s.schedule,
+                horizon_s,
+                &s.model,
+                &s.perf,
+                &opts,
+            )
+            .expect("faulted streamed loop")
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.engine.fingerprint(), b.engine.fingerprint());
+        assert!(
+            a.engine.faults.replicas_killed > 0,
+            "a crash storm over {} episodes killed nothing",
+            injector.plan(horizon_s).len()
+        );
+        assert_eq!(
+            a.engine.requests_completed + a.engine.requests_shed + a.engine.requests_dropped,
+            a.engine.requests_streamed,
+            "request conservation broke under faults"
+        );
+        // The orchestrator saw the dented supply: its epoch problems never
+        // report more capacity than the faulted market offers.
+        assert_eq!(a.report.epochs.len(), s.markets.len());
     }
 
     #[test]

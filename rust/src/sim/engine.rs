@@ -26,13 +26,32 @@
 //!   every eligible replica's queue is at the limit; shed counts surface
 //!   per epoch, in the report, and in telemetry.
 //!
-//! Two deliberate divergences from the timeline simulator, both in the
-//! name of shard independence: plan changes always execute as
-//! retire + spin-up (no in-place re-shard pairing), and a retired replica
-//! drains its own queue instead of handing it to survivors (work stealing
-//! across replicas would couple shards mid-chunk).
+//! Plan changes over the *same GPUs* execute as in-place re-shards exactly
+//! like the timeline simulator (instance kept, paused for the re-shard
+//! window, no rental overlap) — the conversion is scheduled up front and
+//! applied inside the owning shard, so it costs no cross-shard coupling.
+//! One deliberate divergence remains, in the name of shard independence: a
+//! gracefully retired replica drains its own queue instead of handing it
+//! to survivors (work stealing across replicas would couple shards
+//! mid-chunk).
+//!
+//! # Failure semantics
+//!
+//! A [`crate::cloud::faults::FaultPlan`] in [`EngineOptions::faults`]
+//! executes with the same semantics as the timeline simulator (see
+//! [`super::timeline`]): notice windows drain then live-migrate what the
+//! drain allowance affords, crash-stops lose KV outright, displaced
+//! requests re-queue with exponential backoff and a retry budget, and
+//! exhausted or homeless requests drop against goodput. Determinism at any
+//! thread count is preserved by splitting the work: victim selection runs
+//! up front on the materialized fleet metadata (replica lifetimes are
+//! static, so "alive at `t`" needs no simulation), each shard tears its
+//! own victims down locally, and displaced work re-homes only on the main
+//! thread at chunk boundaries, in shard-index order.
 
-use super::timeline::{TimelineOptions, TimelineStep};
+use super::timeline::{RetryPolicy, TimelineOptions, TimelineStep};
+use super::FaultStats;
+use crate::cloud::faults::FaultPlan;
 use crate::coordinator::AdmissionPolicy;
 use crate::metrics::{BusyTracker, LatencyRecorder};
 use crate::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
@@ -69,6 +88,18 @@ pub struct EngineOptions {
     /// Reservoir capacity per shard for latency percentiles (0 = exact,
     /// which stores every sample — avoid for million-request runs).
     pub latency_reservoir: usize,
+    /// Pause length for an in-place re-shard (plan change over the same
+    /// GPUs): the instance keeps its rental but serves nothing.
+    pub reshard_s: f64,
+    /// Drain allowance at a fault kill: live migration may use at most
+    /// `min(notice window, drain_s)` seconds of NIC time.
+    pub drain_s: f64,
+    /// NIC bandwidth available for KV migration out of a dying replica.
+    pub kv_migrate_bytes_per_s: f64,
+    /// Fault schedule to execute (empty = fault-free run).
+    pub faults: FaultPlan,
+    /// Retry budget and backoff for requests displaced by faults.
+    pub retry: RetryPolicy,
 }
 
 impl Default for EngineOptions {
@@ -84,6 +115,11 @@ impl Default for EngineOptions {
             chunk_s: 120.0,
             admission: AdmissionPolicy::unlimited(),
             latency_reservoir: 16_384,
+            reshard_s: tl.reshard_s,
+            drain_s: tl.drain_s,
+            kv_migrate_bytes_per_s: tl.kv_migrate_bytes_per_s,
+            faults: FaultPlan::default(),
+            retry: tl.retry,
         }
     }
 }
@@ -103,7 +139,11 @@ pub struct EngineEpochStats {
     /// Admitted arrivals of this epoch completed by the end of the run
     /// (exact count, not a reservoir estimate).
     pub completed: usize,
-    /// Fraction of this epoch's completions within the SLO (exact).
+    /// Admitted arrivals of this epoch dropped by fault recovery (retry
+    /// budget exhausted or no surviving replica).
+    pub dropped: usize,
+    /// Goodput: fraction of this epoch's admitted-and-finished requests
+    /// (completions + drops) that completed within the SLO (exact).
     pub slo_attainment: f64,
     /// Reservoir-estimated p90 latency of this epoch's completions.
     pub p90_s: f64,
@@ -124,9 +164,13 @@ pub struct EngineReport {
     pub requests_streamed: usize,
     /// Of those, rejected by admission control.
     pub requests_shed: usize,
-    /// Of those, admitted and completed (`streamed == shed + completed`).
+    /// Of those, admitted and completed
+    /// (`streamed == shed + completed + dropped`).
     pub requests_completed: usize,
-    /// Overall SLO attainment across completions (exact counters).
+    /// Of those, admitted but dropped by fault recovery.
+    pub requests_dropped: usize,
+    /// Overall goodput: SLO hits over completions + drops (exact
+    /// counters), so a dropped request counts as a miss.
     pub slo_attainment: f64,
     /// Largest number of arrivals ever buffered between stream and
     /// shards — the O(chunk) memory bound, vs O(n) materialization.
@@ -134,8 +178,13 @@ pub struct EngineReport {
     /// Deepest per-replica queue observed at any chunk boundary.
     pub queue_peak: usize,
     pub replicas_peak: usize,
-    /// Spin-ups + retirements executed at epoch boundaries.
+    /// Spin-ups + retirements + in-place re-shards executed at epoch
+    /// boundaries.
     pub transitions_applied: usize,
+    /// Of those, in-place re-shards (same GPUs, new parallelism).
+    pub reshards_applied: usize,
+    /// Fault-execution tallies (all zero on a fault-free run).
+    pub faults: FaultStats,
     /// Shard/thread geometry the run actually used (excluded from the
     /// fingerprint: they must not change simulated results).
     pub shards: usize,
@@ -170,10 +219,18 @@ impl EngineReport {
         h = fnv1a(h, self.queue_peak as u64);
         h = fnv1a(h, self.replicas_peak as u64);
         h = fnv1a(h, self.transitions_applied as u64);
+        h = fnv1a(h, self.reshards_applied as u64);
+        h = fnv1a(h, self.requests_dropped as u64);
+        h = fnv1a(h, self.faults.replicas_killed as u64);
+        h = fnv1a(h, self.faults.requeued as u64);
+        h = fnv1a(h, self.faults.migrated as u64);
+        h = fnv1a(h, self.faults.migrated_tokens.to_bits());
+        h = fnv1a(h, self.faults.migration_usd.to_bits());
         for e in &self.epochs {
             h = fnv1a(h, e.arrivals as u64);
             h = fnv1a(h, e.shed as u64);
             h = fnv1a(h, e.completed as u64);
+            h = fnv1a(h, e.dropped as u64);
             for &n in &e.arrivals_by_type {
                 h = fnv1a(h, n as u64);
             }
@@ -199,12 +256,38 @@ fn epoch_of(starts: &[f64], t: f64) -> usize {
     starts.partition_point(|&s| s <= t).saturating_sub(1)
 }
 
-/// In-flight request state inside a replica engine.
+/// In-flight request state inside a replica engine. Keeps the request so
+/// fault displacement can re-home it with its retry count.
 struct InFlight {
-    arrival_s: f64,
+    req: Request,
     ctx_tokens: f64,
     remaining_out: u32,
     epoch: usize,
+    attempts: u32,
+}
+
+/// Work displaced by a fault kill, surfaced to the main thread at the next
+/// chunk boundary for deterministic re-dispatch.
+struct Displaced {
+    req: Request,
+    /// Prior displacements of this request (drives backoff and the retry
+    /// budget; only `started` work pays them).
+    attempts: u32,
+    /// `Some((ctx_tokens, remaining_out))`: migrated inside the notice
+    /// window with its KV — resumes decoding without re-prefill.
+    resume: Option<(f64, u32)>,
+    /// NIC seconds the migration spent (0 for requeues).
+    transfer_s: f64,
+    /// Arrival epoch (for per-epoch drop accounting).
+    epoch: usize,
+    /// Victim instance id (prices the migration at the victim's rate).
+    victim: usize,
+    /// The kill instant; re-dispatch releases at this time plus backoff
+    /// for requeues.
+    release_s: f64,
+    /// Whether the request had started (was in the batch). Queued work
+    /// re-homes for free, like the timeline's drain hand-off.
+    started: bool,
 }
 
 /// One replica owned by a shard.
@@ -214,14 +297,29 @@ struct EngineInstance {
     config: ReplicaConfig,
     active_from_s: f64,
     retire_at_s: Option<f64>,
-    /// Requests routed to this replica but not yet delivered to its queue
-    /// (delivery happens at their arrival time inside the shard clock).
-    pending: VecDeque<Request>,
-    queue: VecDeque<Request>,
+    /// Requests routed to this replica but not yet delivered to its queue:
+    /// `(due_s, request, attempts)`, delivered when the shard clock passes
+    /// `due_s` (arrival time for fresh work, backoff release for requeues).
+    pending: VecDeque<(f64, Request, u32)>,
+    queue: VecDeque<(Request, u32)>,
     batch: Vec<InFlight>,
+    /// Migrated-in work waiting to resume decoding: `(due_s, state)`.
+    /// Joins the batch directly — its KV already moved, so it skips
+    /// admission.
+    handover: Vec<(f64, InFlight)>,
     token_capacity: f64,
     busy: BusyTracker,
     next_event: Option<f64>,
+    /// Fault kill instant: at the first event past it, everything still
+    /// here is displaced and the replica goes dark.
+    killed_at: Option<f64>,
+    /// NIC seconds of KV migration the kill's notice window affords.
+    migrate_budget_s: f64,
+    /// Scheduled in-place re-shards, ascending: at `t`, swap to the new
+    /// config and token capacity (applied lazily at the next event).
+    reshards: VecDeque<(f64, ReplicaConfig, f64)>,
+    /// Re-shard pause windows: rented but serving nothing.
+    pauses: Vec<(f64, f64)>,
 }
 
 impl EngineInstance {
@@ -231,6 +329,14 @@ impl EngineInstance {
 
     fn retired_by(&self, t: f64) -> bool {
         self.retire_at_s.map(|r| t + 1e-9 >= r).unwrap_or(false)
+    }
+
+    /// If `t` falls inside a re-shard pause, when the pause ends.
+    fn pause_until(&self, t: f64) -> Option<f64> {
+        self.pauses
+            .iter()
+            .find(|&&(a, b)| t + 1e-9 >= a && t < b - 1e-9)
+            .map(|&(_, b)| b)
     }
 }
 
@@ -273,6 +379,13 @@ struct Shard {
     epoch_slo_hits: Vec<usize>,
     /// Reused completion buffer: (end_s, latency_s, arrival epoch).
     scratch: Vec<(f64, f64, usize)>,
+    /// Bytes of KV one context token holds (for pricing migrations).
+    kv_bytes_per_token: f64,
+    /// NIC bandwidth for KV migration, bytes/s.
+    kv_migrate_bytes_per_s: f64,
+    /// Work displaced by fault kills, drained by the main thread at the
+    /// next chunk boundary.
+    displaced: Vec<Displaced>,
 }
 
 impl Shard {
@@ -280,7 +393,38 @@ impl Shard {
     /// between chunk advances; the wake event delivers it at arrival time.
     fn enqueue(&mut self, local: usize, req: Request) {
         let wake = req.arrival_s.max(self.instances[local].active_from_s);
-        self.instances[local].pending.push_back(req);
+        self.instances[local]
+            .pending
+            .push_back((req.arrival_s, req, 0));
+        self.heap.push(Event {
+            time: wake,
+            instance: local,
+        });
+    }
+
+    /// Re-home fault-displaced work onto a replica. Migrated work joins
+    /// the handover buffer (resumes in the batch with its KV); everything
+    /// else re-enters through the pending queue at its release time.
+    fn enqueue_displaced(&mut self, local: usize, d: Displaced, due_s: f64) {
+        let wake = due_s.max(self.instances[local].active_from_s);
+        let inst = &mut self.instances[local];
+        match d.resume {
+            Some((ctx, remaining)) => inst.handover.push((
+                due_s,
+                InFlight {
+                    req: d.req,
+                    ctx_tokens: ctx,
+                    remaining_out: remaining,
+                    epoch: d.epoch,
+                    attempts: d.attempts,
+                },
+            )),
+            None => {
+                // Started work pays a retry; queued work re-homes free.
+                let attempts = if d.started { d.attempts + 1 } else { d.attempts };
+                inst.pending.push_back((due_s, d.req, attempts));
+            }
+        }
         self.heap.push(Event {
             time: wake,
             instance: local,
@@ -299,6 +443,9 @@ impl Shard {
                 self.max_batch,
                 now,
                 &mut self.scratch,
+                &mut self.displaced,
+                self.kv_bytes_per_token,
+                self.kv_migrate_bytes_per_s,
             );
             for i in 0..self.scratch.len() {
                 let (end, latency, epoch) = self.scratch[i];
@@ -326,6 +473,7 @@ impl Shard {
 fn admit_req(
     inst: &mut EngineInstance,
     req: Request,
+    attempts: u32,
     epoch_starts: &[f64],
     model: &ModelSpec,
     perf: &PerfModel,
@@ -333,14 +481,98 @@ fn admit_req(
 ) {
     let epoch = epoch_of(epoch_starts, req.arrival_s);
     let pre = perf.prefill_cost(&inst.config, model, req.input_tokens as f64);
+    inst.busy.add_busy(now, pre);
+    inst.next_event = Some(inst.next_event.unwrap_or(now).max(now) + pre);
     inst.batch.push(InFlight {
-        arrival_s: req.arrival_s,
         ctx_tokens: req.input_tokens as f64,
         remaining_out: req.output_tokens.max(1),
         epoch,
+        attempts,
+        req,
     });
-    inst.busy.add_busy(now, pre);
-    inst.next_event = Some(inst.next_event.unwrap_or(now).max(now) + pre);
+}
+
+/// Tear a killed replica down: everything still on it becomes [`Displaced`]
+/// work for the main thread to re-home. Batch entries migrate
+/// cheapest-first within the notice window's NIC budget; the rest lose
+/// their KV.
+fn displace_all(
+    inst: &mut EngineInstance,
+    epoch_starts: &[f64],
+    kill_t: f64,
+    kv_bpt: f64,
+    kv_bw: f64,
+    out: &mut Vec<Displaced>,
+) {
+    inst.next_event = None;
+    let mut batch = std::mem::take(&mut inst.batch);
+    batch.sort_by(|a, b| {
+        a.ctx_tokens
+            .partial_cmp(&b.ctx_tokens)
+            .unwrap()
+            .then(a.req.arrival_s.partial_cmp(&b.req.arrival_s).unwrap())
+    });
+    let mut used = 0.0;
+    for f in batch {
+        let transfer_s = f.ctx_tokens * kv_bpt / kv_bw;
+        let affordable = used + transfer_s <= inst.migrate_budget_s + 1e-9;
+        if affordable {
+            used += transfer_s;
+            out.push(Displaced {
+                attempts: f.attempts,
+                resume: Some((f.ctx_tokens, f.remaining_out)),
+                transfer_s,
+                epoch: f.epoch,
+                victim: inst.id,
+                release_s: kill_t,
+                started: true,
+                req: f.req,
+            });
+        } else {
+            out.push(Displaced {
+                attempts: f.attempts,
+                resume: None,
+                transfer_s: 0.0,
+                epoch: f.epoch,
+                victim: inst.id,
+                release_s: kill_t,
+                started: true,
+                req: f.req,
+            });
+        }
+    }
+    // Queued and undelivered work never started: it re-homes for free.
+    let queued: Vec<(Request, u32)> = inst
+        .queue
+        .drain(..)
+        .chain(inst.pending.drain(..).map(|(_, req, a)| (req, a)))
+        .collect();
+    for (req, attempts) in queued {
+        out.push(Displaced {
+            attempts,
+            resume: None,
+            transfer_s: 0.0,
+            epoch: epoch_of(epoch_starts, req.arrival_s),
+            victim: inst.id,
+            release_s: kill_t,
+            started: false,
+            req,
+        });
+    }
+    // Migrated-in work whose KV died with this host re-queues like
+    // started work (its resume state is gone).
+    for (_, f) in inst.handover.drain(..) {
+        out.push(Displaced {
+            attempts: f.attempts,
+            resume: None,
+            transfer_s: 0.0,
+            epoch: f.epoch,
+            victim: inst.id,
+            release_s: kill_t,
+            started: true,
+            req: f.req,
+        });
+    }
 }
 
 /// Process one event for one replica: deliver due arrivals, admit, run a
@@ -348,6 +580,7 @@ fn admit_req(
 /// is idle or already has a later event in the heap); completions are
 /// appended to `completed` as (end, latency, epoch). Free function so the
 /// shard can split its borrows.
+#[allow(clippy::too_many_arguments)]
 fn advance_instance(
     inst: &mut EngineInstance,
     model: &ModelSpec,
@@ -356,16 +589,35 @@ fn advance_instance(
     max_batch: usize,
     now: f64,
     completed: &mut Vec<(f64, f64, usize)>,
+    displaced: &mut Vec<Displaced>,
+    kv_bpt: f64,
+    kv_bw: f64,
 ) -> Option<f64> {
-    // Deliver arrivals up to `now`. Pending requests beyond `now` keep
+    // Fault kill: the replica is reclaimed. Everything still on it is
+    // displaced for the main thread to re-home at the next boundary, and
+    // the replica never wakes again.
+    if let Some(k) = inst.killed_at {
+        if now + 1e-9 >= k {
+            displace_all(inst, epoch_starts, k, kv_bpt, kv_bw, displaced);
+            return None;
+        }
+    }
+    // Deliver due work up to `now`. Pending entries beyond `now` keep
     // their own wake events (pushed at enqueue), so an idle replica never
     // needs re-arming here.
-    while let Some(r) = inst.pending.front() {
-        if r.arrival_s <= now {
-            let r = inst.pending.pop_front().unwrap();
-            inst.queue.push_back(r);
+    while inst.pending.front().map(|p| p.0 <= now).unwrap_or(false) {
+        let (_, req, attempts) = inst.pending.pop_front().unwrap();
+        inst.queue.push_back((req, attempts));
+    }
+    // Migrated-in work resumes straight into the batch: its KV already
+    // moved, so it bypasses admission.
+    let mut i = 0;
+    while i < inst.handover.len() {
+        if inst.handover[i].0 <= now + 1e-9 {
+            let (_, f) = inst.handover.remove(i);
+            inst.batch.push(f);
         } else {
-            break;
+            i += 1;
         }
     }
     // A step already in flight past `now`: its completion event re-enters.
@@ -378,6 +630,21 @@ fn advance_instance(
     if now + 1e-9 < inst.active_from_s {
         return Some(inst.active_from_s);
     }
+    // Apply due in-place re-shards (new layout, new capacity), then honour
+    // any re-shard pause: the replica stays rented but serves nothing.
+    while inst
+        .reshards
+        .front()
+        .map(|r| r.0 <= now + 1e-9)
+        .unwrap_or(false)
+    {
+        let (_, config, cap) = inst.reshards.pop_front().unwrap();
+        inst.config = config;
+        inst.token_capacity = cap;
+    }
+    if let Some(until) = inst.pause_until(now) {
+        return Some(until);
+    }
 
     // Admit (unless retired), then advance the in-flight batch. A retired
     // replica with stranded queued requests drains them one at a time
@@ -385,17 +652,17 @@ fn advance_instance(
     let admit = !inst.retired_by(now);
     inst.next_event = None;
     while admit && !inst.queue.is_empty() && inst.batch.len() < max_batch {
-        let req = inst.queue.front().unwrap();
+        let (req, _) = inst.queue.front().unwrap();
         let need = req.input_tokens as f64 + req.output_tokens as f64;
         if inst.tokens_in_use() + need > inst.token_capacity && !inst.batch.is_empty() {
             break;
         }
-        let req = inst.queue.pop_front().unwrap();
-        admit_req(inst, req, epoch_starts, model, perf, now);
+        let (req, attempts) = inst.queue.pop_front().unwrap();
+        admit_req(inst, req, attempts, epoch_starts, model, perf, now);
     }
     if !admit && inst.batch.is_empty() && !inst.queue.is_empty() {
-        let req = inst.queue.pop_front().unwrap();
-        admit_req(inst, req, epoch_starts, model, perf, now);
+        let (req, attempts) = inst.queue.pop_front().unwrap();
+        admit_req(inst, req, attempts, epoch_starts, model, perf, now);
     }
 
     if inst.batch.is_empty() {
@@ -413,7 +680,7 @@ fn advance_instance(
     }
     inst.batch.retain(|f| {
         if f.remaining_out == 0 {
-            completed.push((end, end - f.arrival_s, f.epoch));
+            completed.push((end, end - f.req.arrival_s, f.epoch));
             false
         } else {
             true
@@ -434,6 +701,107 @@ struct InstanceMeta {
     retire_at_s: Option<f64>,
     shard: usize,
     local: usize,
+    /// Fault kill instant (rent stops here; nothing rescues it).
+    killed_at: Option<f64>,
+    /// When the fault was announced: routing stops sending work at the
+    /// announce, so the notice window drains (∞ = never faulted).
+    fault_from_s: f64,
+    /// Scheduled in-place re-shards: `(t, new config, new capacity)`.
+    reshards: Vec<(f64, ReplicaConfig, f64)>,
+    /// Re-shard pause windows.
+    pauses: Vec<(f64, f64)>,
+}
+
+impl InstanceMeta {
+    fn retired_by(&self, t: f64) -> bool {
+        self.retire_at_s.map(|r| t + 1e-9 >= r).unwrap_or(false)
+    }
+}
+
+/// Drain every shard's displaced buffer (shard-index order) and re-home
+/// each request: migrations resume on the least-loaded live replica,
+/// requeues release after exponential backoff, and work that exhausted its
+/// retry budget — or has no live replica left — drops against goodput.
+/// Runs only on the main thread, so routing state stays deterministic.
+#[allow(clippy::too_many_arguments)]
+fn redistribute_displaced(
+    shards: &[Arc<Mutex<Shard>>],
+    metas: &[InstanceMeta],
+    epoch_starts: &[f64],
+    epoch_all: &[Vec<usize>],
+    steps: &[TimelineStep],
+    retry: &RetryPolicy,
+    est_tokens: &mut [f64],
+    qlen: &mut [usize],
+    fstats: &mut FaultStats,
+    epoch_dropped: &mut [usize],
+) -> usize {
+    let mut all: Vec<Displaced> = Vec::new();
+    for sh in shards {
+        all.append(&mut sh.lock().unwrap().displaced);
+    }
+    let mut moved = 0usize;
+    for d in all {
+        let migrated = d.resume.is_some();
+        let requeue = d.started && !migrated;
+        if requeue && d.attempts >= retry.max_retries {
+            fstats.dropped += 1;
+            epoch_dropped[d.epoch] += 1;
+            continue;
+        }
+        let release = if requeue {
+            d.release_s + retry.backoff_s * (1u64 << d.attempts.min(20)) as f64
+        } else {
+            d.release_s
+        };
+        let e = epoch_of(epoch_starts, release);
+        // Live at `release`: not (being) killed, not retired.
+        let live: Vec<usize> = epoch_all[e]
+            .iter()
+            .copied()
+            .filter(|&id| metas[id].fault_from_s > release && !metas[id].retired_by(release))
+            .collect();
+        let target = live
+            .iter()
+            .copied()
+            .filter(|&id| metas[id].active_from_s <= release + 1e-9)
+            .min_by(|&a, &b| {
+                est_tokens[a]
+                    .partial_cmp(&est_tokens[b])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            })
+            .or_else(|| {
+                live.iter().copied().min_by(|&a, &b| {
+                    metas[a]
+                        .active_from_s
+                        .partial_cmp(&metas[b].active_from_s)
+                        .unwrap()
+                        .then(a.cmp(&b))
+                })
+            });
+        let Some(id) = target else {
+            fstats.dropped += 1;
+            epoch_dropped[d.epoch] += 1;
+            continue;
+        };
+        if migrated {
+            fstats.migrated += 1;
+            fstats.migrated_tokens += d.resume.unwrap().0;
+            let ek = epoch_of(epoch_starts, d.release_s);
+            fstats.migration_usd += d.transfer_s
+                * steps[ek].problem.candidates[metas[d.victim].candidate].cost
+                / 3600.0;
+        } else if requeue {
+            fstats.requeued += 1;
+        }
+        est_tokens[id] += (d.req.input_tokens + d.req.output_tokens) as f64;
+        qlen[id] += 1;
+        let m = &metas[id];
+        shards[m.shard].lock().unwrap().enqueue_displaced(m.local, d, release);
+        moved += 1;
+    }
+    moved
 }
 
 /// Advance every shard to `t_end`, in parallel when a pool is present.
@@ -513,16 +881,59 @@ pub fn run_engine(
     let epoch_starts: Vec<f64> = steps.iter().map(|s| s.start_s).collect();
 
     // ---- materialise the fleet across transitions -----------------------
-    // Same evolution as the timeline simulator, minus the re-shard pairing:
-    // every plan change executes as retire + spin-up so each instance's
-    // lifetime (and shard) is fixed up front.
+    // Same evolution as the timeline simulator, re-shard pairing included:
+    // a plan change over the same GPUs converts the instance in place
+    // (scheduled swap + pause, applied inside its shard), so each
+    // instance's lifetime and shard assignment are still fixed up front.
     let mut metas: Vec<InstanceMeta> = Vec::new();
     let mut alive: Vec<Vec<usize>> = vec![Vec::new(); ncand];
     let mut members: Vec<Vec<Vec<usize>>> = Vec::with_capacity(nepochs);
     let mut transitions_applied = 0usize;
+    let mut reshards_applied = 0usize;
     for (si, step) in steps.iter().enumerate() {
         let t = step.start_s;
         let want = crate::orchestrator::replica_counts(step.problem, step.plan);
+        // Pair surplus replicas with deficits over identical GPU sets:
+        // convert in place instead of retire + spin-up.
+        if si > 0 {
+            for ci in 0..ncand {
+                let mut surplus =
+                    (alive[ci].len() as u32).saturating_sub(*want.get(ci).unwrap_or(&0));
+                for cj in 0..ncand {
+                    if surplus == 0 {
+                        break;
+                    }
+                    if ci == cj {
+                        continue;
+                    }
+                    let deficit = want[cj].saturating_sub(alive[cj].len() as u32);
+                    if deficit == 0 {
+                        continue;
+                    }
+                    let (a, b) = (&step.problem.candidates[ci], &step.problem.candidates[cj]);
+                    if a.model != b.model || a.gpu_counts != b.gpu_counts {
+                        continue;
+                    }
+                    let config = b
+                        .replica
+                        .clone()
+                        .expect("run_engine requires concrete replica configs");
+                    let cap = perf.max_batch_tokens(&config, model);
+                    let moved = surplus.min(deficit);
+                    for _ in 0..moved {
+                        let id = alive[ci].pop().unwrap();
+                        let m = &mut metas[id];
+                        m.candidate = cj;
+                        m.reshards.push((t, config.clone(), cap));
+                        m.pauses.push((t, t + opts.reshard_s));
+                        alive[cj].push(id);
+                        transitions_applied += 1;
+                        reshards_applied += 1;
+                    }
+                    surplus -= moved;
+                }
+            }
+        }
         for (ci, &target) in want.iter().enumerate() {
             let have = alive[ci].len() as u32;
             if target > have {
@@ -543,6 +954,10 @@ pub fn run_engine(
                         retire_at_s: None,
                         shard: 0,
                         local: 0,
+                        killed_at: None,
+                        fault_from_s: f64::INFINITY,
+                        reshards: Vec::new(),
+                        pauses: Vec::new(),
                     });
                     alive[ci].push(id);
                     if si > 0 {
@@ -578,6 +993,39 @@ pub fn run_engine(
         })
         .collect();
 
+    // ---- compile the fault schedule against the fleet -------------------
+    // Replica lifetimes are static, so victim selection needs no
+    // simulation: an instance is eligible at the announce if it is rented,
+    // not retired, and not already claimed by an earlier episode. Running
+    // this here, on the main thread, is what keeps fault runs bit-identical
+    // at any thread count. Victims start at `pick % eligible` and wrap,
+    // mirroring the timeline executor.
+    let mut fstats = FaultStats::default();
+    for f in &opts.faults.events {
+        let eligible: Vec<usize> = (0..metas.len())
+            .filter(|&id| {
+                let m = &metas[id];
+                m.killed_at.is_none() && m.rent_from_s <= f.t_s + 1e-9 && !m.retired_by(f.t_s)
+            })
+            .collect();
+        if eligible.is_empty() {
+            continue;
+        }
+        let n = f.victims.min(eligible.len());
+        let start = (f.pick as usize) % eligible.len();
+        fstats.episodes += 1;
+        if f.is_crash() {
+            fstats.crashes += 1;
+        }
+        for k in 0..n {
+            let id = eligible[(start + k) % eligible.len()];
+            let m = &mut metas[id];
+            m.killed_at = Some(f.kill_at_s());
+            m.fault_from_s = m.fault_from_s.min(f.t_s);
+            fstats.replicas_killed += 1;
+        }
+    }
+
     // ---- shard assignment and construction ------------------------------
     let nshards = if opts.shards == 0 {
         metas.len().min(8)
@@ -595,17 +1043,35 @@ pub fn run_engine(
     let mut insts_by_shard: Vec<Vec<EngineInstance>> =
         (0..nshards).map(|_| Vec::new()).collect();
     for (id, m) in metas.iter().enumerate() {
+        // A faulted replica stops admitting at the announce (the notice
+        // window drains); graceful retirement keeps its own schedule.
+        let retire_at_s = match m.killed_at {
+            Some(_) => Some(
+                m.retire_at_s
+                    .map_or(m.fault_from_s, |r| r.min(m.fault_from_s)),
+            ),
+            None => m.retire_at_s,
+        };
+        let migrate_budget_s = m
+            .killed_at
+            .map(|k| (k - m.fault_from_s).min(opts.drain_s).max(0.0))
+            .unwrap_or(0.0);
         insts_by_shard[m.shard].push(EngineInstance {
             id,
             config: m.config.clone(),
             active_from_s: m.active_from_s,
-            retire_at_s: m.retire_at_s,
+            retire_at_s,
             pending: VecDeque::new(),
             queue: VecDeque::new(),
             batch: Vec::new(),
+            handover: Vec::new(),
             token_capacity: m.token_capacity,
             busy: BusyTracker::default(),
             next_event: None,
+            killed_at: m.killed_at,
+            migrate_budget_s,
+            reshards: m.reshards.iter().cloned().collect(),
+            pauses: m.pauses.clone(),
         });
     }
     let mk_recorder = |seed: u64| {
@@ -615,6 +1081,12 @@ pub fn run_engine(
             LatencyRecorder::new()
         }
     };
+    let kv_bpt = crate::runtime::kv::kv_bytes_per_token(
+        model.layers,
+        model.kv_heads,
+        model.hidden / model.heads,
+        model.bytes_per_param,
+    );
     let shards: Vec<Arc<Mutex<Shard>>> = insts_by_shard
         .into_iter()
         .enumerate()
@@ -650,9 +1122,22 @@ pub fn run_engine(
                 epoch_completed: vec![0; nepochs],
                 epoch_slo_hits: vec![0; nepochs],
                 scratch: Vec::new(),
+                kv_bytes_per_token: kv_bpt,
+                kv_migrate_bytes_per_s: opts.kv_migrate_bytes_per_s,
+                displaced: Vec::new(),
             }))
         })
         .collect();
+    // Arm a wake event at every kill so the teardown runs even if the
+    // victim is otherwise idle at the kill instant.
+    for m in metas.iter() {
+        if let Some(k) = m.killed_at {
+            shards[m.shard].lock().unwrap().heap.push(Event {
+                time: k,
+                instance: m.local,
+            });
+        }
+    }
 
     let threads = if opts.threads == 0 {
         std::thread::available_parallelism()
@@ -686,6 +1171,7 @@ pub fn run_engine(
     let mut epoch_arrivals = vec![0usize; nepochs];
     let mut epoch_type_arrivals = vec![[0usize; 9]; nepochs];
     let mut epoch_shed = vec![0usize; nepochs];
+    let mut epoch_dropped = vec![0usize; nepochs];
 
     let chunk_s = if opts.chunk_s > 0.0 { opts.chunk_s } else { 120.0 };
     let mut stream = arrivals;
@@ -760,7 +1246,9 @@ pub fn run_engine(
                 }
             }
             let chosen = {
-                let admissible = |id: usize| opts.admission.admits(qlen[id]);
+                let admissible = |id: usize| {
+                    opts.admission.admits(qlen[id]) && metas[id].fault_from_s > req.arrival_s
+                };
                 let active = |id: usize| metas[id].active_from_s <= req.arrival_s + 1e-9;
                 let least = |ids: &[usize]| {
                     ids.iter()
@@ -816,18 +1304,50 @@ pub fn run_engine(
         for sh in &shards {
             let g = sh.lock().unwrap();
             for inst in &g.instances {
-                let depth = inst.queue.len() + inst.pending.len();
+                let depth = inst.queue.len() + inst.pending.len() + inst.handover.len();
                 qlen[inst.id] = depth;
                 queue_peak = queue_peak.max(depth);
             }
         }
+        // Re-home work displaced by kills inside this chunk.
+        redistribute_displaced(
+            &shards,
+            &metas,
+            &epoch_starts,
+            &epoch_all,
+            steps,
+            &opts.retry,
+            &mut est_tokens,
+            &mut qlen,
+            &mut fstats,
+            &mut epoch_dropped,
+        );
         t0 = t_end;
         if stream_done && carry.is_none() {
             break;
         }
     }
-    // Drain: run every shard dry.
-    advance_all(&shards, pool.as_ref(), f64::INFINITY);
+    // Drain: run every shard dry, re-homing fault-displaced work until the
+    // fleet settles (each displacement either completes somewhere, burns a
+    // retry, or drops — so this terminates).
+    loop {
+        advance_all(&shards, pool.as_ref(), f64::INFINITY);
+        let moved = redistribute_displaced(
+            &shards,
+            &metas,
+            &epoch_starts,
+            &epoch_all,
+            steps,
+            &opts.retry,
+            &mut est_tokens,
+            &mut qlen,
+            &mut fstats,
+            &mut epoch_dropped,
+        );
+        if moved == 0 {
+            break;
+        }
+    }
 
     // ---- merge shard results (shard-index order: deterministic) ---------
     let mut recorder = mk_recorder(opts.seed);
@@ -847,20 +1367,28 @@ pub fn run_engine(
         for inst in &g.instances {
             last_busy[inst.id] = inst.busy.last_event_s;
             assert!(
-                inst.pending.is_empty() && inst.queue.is_empty() && inst.batch.is_empty(),
+                inst.pending.is_empty()
+                    && inst.queue.is_empty()
+                    && inst.batch.is_empty()
+                    && inst.handover.is_empty(),
                 "engine left work in flight after drain"
             );
         }
     }
     let completed = recorder.count();
+    let dropped_total = fstats.dropped;
+    recorder.record_dropped(dropped_total);
+    for (e, &n) in epoch_dropped.iter().enumerate() {
+        epoch_recs[e].record_dropped(n);
+    }
     assert_eq!(
-        completed + shed_total,
+        completed + shed_total + dropped_total,
         streamed,
-        "engine lost requests (completed {completed} + shed {shed_total} != streamed {streamed})"
+        "engine lost requests (completed {completed} + shed {shed_total} + dropped {dropped_total} != streamed {streamed})"
     );
     let slo_hits: usize = epoch_slo.iter().sum();
-    let slo_attainment = if completed > 0 {
-        slo_hits as f64 / completed as f64
+    let slo_attainment = if completed + dropped_total > 0 {
+        slo_hits as f64 / (completed + dropped_total) as f64
     } else {
         1.0
     };
@@ -878,9 +1406,12 @@ pub fn run_engine(
         };
         let mut rental = 0.0;
         for (id, m) in metas.iter().enumerate() {
-            let rent_end = match m.retire_at_s {
-                Some(r) => r.max(last_busy[id]),
-                None => sim_end,
+            // A killed replica stops paying rent at the kill, full stop;
+            // graceful retirement pays through its forced drain.
+            let rent_end = match (m.killed_at, m.retire_at_s) {
+                (Some(k), _) => k,
+                (None, Some(r)) => r.max(last_busy[id]),
+                (None, None) => sim_end,
             };
             let o_start = m.rent_from_s.max(s.start_s);
             let o_end = rent_end.min(end);
@@ -896,8 +1427,9 @@ pub fn run_engine(
             arrivals_by_type: epoch_type_arrivals[i],
             shed: epoch_shed[i],
             completed: epoch_completed[i],
-            slo_attainment: if epoch_completed[i] > 0 {
-                epoch_slo[i] as f64 / epoch_completed[i] as f64
+            dropped: epoch_dropped[i],
+            slo_attainment: if epoch_completed[i] + epoch_dropped[i] > 0 {
+                epoch_slo[i] as f64 / (epoch_completed[i] + epoch_dropped[i]) as f64
             } else {
                 1.0
             },
@@ -912,6 +1444,14 @@ pub fn run_engine(
         telemetry::count("sim.engine.shed", shed_total as u64);
         telemetry::count("sim.engine.chunks", chunks as u64);
         telemetry::count("sim.engine.transitions", transitions_applied as u64);
+        telemetry::count("sim.engine.reshards", reshards_applied as u64);
+        if !opts.faults.is_empty() {
+            telemetry::count("sim.engine.fault_episodes", fstats.episodes as u64);
+            telemetry::count("sim.engine.fault_killed", fstats.replicas_killed as u64);
+            telemetry::count("sim.engine.fault_requeued", fstats.requeued as u64);
+            telemetry::count("sim.engine.fault_migrated", fstats.migrated as u64);
+            telemetry::count("sim.engine.fault_dropped", fstats.dropped as u64);
+        }
         telemetry::gauge_set("sim.engine.requests_simulated", completed as f64);
         telemetry::gauge_set("sim.engine.peak_arrival_buffer", peak_buffer as f64);
         telemetry::gauge_set("sim.engine.queue_peak", queue_peak as f64);
@@ -934,11 +1474,14 @@ pub fn run_engine(
         requests_streamed: streamed,
         requests_shed: shed_total,
         requests_completed: completed,
+        requests_dropped: dropped_total,
         slo_attainment,
         peak_arrival_buffer: peak_buffer,
         queue_peak,
         replicas_peak,
         transitions_applied,
+        reshards_applied,
+        faults: fstats,
         shards: nshards,
         threads,
         wall_s: wall_start.elapsed().as_secs_f64(),
@@ -1096,9 +1639,96 @@ mod tests {
             assert_eq!(a.p90_s.to_bits(), b.p90_s.to_bits());
             assert_eq!(a.rental_usd.to_bits(), b.rental_usd.to_bits());
         }
-        // And the run exercised a real transition (retire 4 + spin up 2).
-        assert_eq!(single.transitions_applied, 6);
+        // The plan change lands on identical GPU sets, so two replicas
+        // convert in place (re-shard) and the surplus two retire.
+        assert_eq!(single.transitions_applied, 4);
+        assert_eq!(single.reshards_applied, 2);
         assert!(single.requests_completed == single.requests_streamed);
+    }
+
+    #[test]
+    fn crash_storm_is_bit_identical_across_threads() {
+        use crate::cloud::faults::{FaultPlan, ReplicaFault};
+        let model = crate::perf_model::ModelSpec::llama3_8b();
+        let perf = PerfModel::default();
+        let p = mk_problem();
+        let plan = mk_plan(0, 4);
+        let steps = vec![TimelineStep {
+            start_s: 0.0,
+            problem: &p,
+            plan: &plan,
+        }];
+        // Two episodes: a zero-notice crash of two replicas early, then a
+        // spot-style reclaim (60 s notice) of one more.
+        let faults = FaultPlan {
+            events: vec![
+                ReplicaFault {
+                    t_s: 100.0,
+                    notice_s: 0.0,
+                    victims: 2,
+                    pick: 5,
+                },
+                ReplicaFault {
+                    t_s: 250.0,
+                    notice_s: 60.0,
+                    victims: 1,
+                    pick: 2,
+                },
+            ],
+        };
+        let (schedule, synth, horizon) = constant_stream(2.0, 600.0, 91);
+        let run = |threads: usize| {
+            run_engine(
+                &steps,
+                &model,
+                ArrivalStream::new(&schedule, horizon, &synth),
+                &perf,
+                &EngineOptions {
+                    seed: 7,
+                    shards: 4,
+                    threads,
+                    chunk_s: 45.0,
+                    faults: faults.clone(),
+                    ..Default::default()
+                },
+            )
+        };
+        let a = run(1);
+        let b = run(2);
+        let c = run(4);
+        // Fault execution must not depend on thread count.
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(), c.fingerprint());
+        // The storm actually fired and tore replicas down.
+        assert_eq!(a.faults.episodes, 2);
+        assert_eq!(a.faults.crashes, 1);
+        assert_eq!(a.faults.replicas_killed, 3);
+        // Nothing vanishes: every streamed request completes, is shed, or
+        // is dropped against goodput after exhausting its retries.
+        assert_eq!(
+            a.requests_completed + a.requests_shed + a.requests_dropped,
+            a.requests_streamed
+        );
+        assert_eq!(a.requests_dropped, a.faults.dropped);
+        assert!((0.0..=1.0).contains(&a.slo_attainment));
+        // Rent stops at the kill: the faulted run cannot cost more than
+        // the fault-free one.
+        let clean = run_engine(
+            &steps,
+            &model,
+            ArrivalStream::new(&schedule, horizon, &synth),
+            &perf,
+            &EngineOptions {
+                seed: 7,
+                shards: 4,
+                threads: 1,
+                chunk_s: 45.0,
+                ..Default::default()
+            },
+        );
+        assert!(a.total_rental_usd < clean.total_rental_usd);
+        assert_eq!(clean.faults.replicas_killed, 0);
+        assert_eq!(clean.requests_dropped, 0);
     }
 
     #[test]

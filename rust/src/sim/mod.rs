@@ -32,7 +32,9 @@ pub use closed_loop::{
     StreamedLoopOptions, StreamedLoopResult,
 };
 pub use engine::{run_engine, EngineEpochStats, EngineOptions, EngineReport};
-pub use timeline::{simulate_timeline, EpochStats, TimelineOptions, TimelineResult, TimelineStep};
+pub use timeline::{
+    simulate_timeline, EpochStats, RetryPolicy, TimelineOptions, TimelineResult, TimelineStep,
+};
 
 use crate::metrics::{BusyTracker, LatencyRecorder};
 use crate::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
@@ -58,6 +60,33 @@ impl Default for SimOptions {
             max_batch: 32,
         }
     }
+}
+
+/// What an injected fault schedule ([`crate::cloud::faults::FaultPlan`])
+/// did to a simulation run. Shared by [`timeline`] and [`engine`]; all
+/// counters are exact and deterministic for a given seed + schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    /// Fault episodes that found at least one live replica to hit.
+    pub episodes: usize,
+    /// Of those, zero-notice crash-stops.
+    pub crashes: usize,
+    /// Replicas actually torn down by the schedule.
+    pub replicas_killed: usize,
+    /// In-flight requests whose KV state died with a replica and were
+    /// re-queued (with backoff) for a full re-prefill elsewhere.
+    pub requeued: usize,
+    /// In-flight requests live-migrated inside an advance-notice window —
+    /// KV moved, decode progress kept, no re-prefill.
+    pub migrated: usize,
+    /// Requests dropped: retry budget exhausted, or no surviving replica of
+    /// the model was left to take them. Counted against goodput.
+    pub dropped: usize,
+    /// Context tokens of KV state moved by live migrations.
+    pub migrated_tokens: f64,
+    /// Migration cost in dollars: victim NIC-seconds at the replica's
+    /// rental rate, the same $/s the migration cost model prices.
+    pub migration_usd: f64,
 }
 
 /// Result of simulating one plan on one trace.

@@ -16,8 +16,26 @@
 //! new fleets *overlap* for the spin-up window on genuine replacements,
 //! which is exactly where naive full re-solves bleed money — and per-epoch
 //! SLO attainment is reported against the epoch a request *arrived* in.
+//!
+//! # Failure semantics
+//!
+//! A [`crate::cloud::faults::FaultPlan`] in [`TimelineOptions::faults`]
+//! executes against the live fleet. An episode with advance notice first
+//! stops its victims admitting (their unstarted queues hand off to
+//! survivors immediately — queued work holds no KV), then at the kill
+//! deadline live-migrates the in-flight requests whose KV transfer fits
+//! the drain allowance ([`TimelineOptions::drain_s`], capped by the notice
+//! window) at [`TimelineOptions::kv_migrate_bytes_per_s`] — those keep
+//! their decode progress. A zero-notice crash-stop skips all of that: the
+//! batch dies with its KV state. Every request that loses KV re-queues for
+//! a **full re-prefill** on a surviving replica after an exponential
+//! backoff ([`RetryPolicy`]); when the retry budget is spent — or no
+//! replica of the model survives — the request is **dropped** and counts
+//! against goodput ([`crate::metrics::LatencyRecorder::record_dropped`]).
+//! Killed replicas stop paying rent at the instant they are reclaimed.
 
-use super::SimOptions;
+use super::{FaultStats, SimOptions};
+use crate::cloud::faults::FaultPlan;
 use crate::metrics::{BusyTracker, LatencyRecorder};
 use crate::perf_model::{ModelSpec, PerfModel, ReplicaConfig};
 use crate::sched::{SchedProblem, ServingPlan};
@@ -50,6 +68,36 @@ pub struct TimelineOptions {
     pub reshard_s: f64,
     /// Per-request latency SLO for attainment accounting.
     pub slo_latency_s: f64,
+    /// Drain allowance per reclaimed replica: the NIC-seconds of KV
+    /// migration a notice window may spend (further capped by the window
+    /// itself). Sourced from the migration cost model so the simulator
+    /// executes the drain the orchestrator prices.
+    pub drain_s: f64,
+    /// Fault schedule to execute (empty = fault-free run).
+    pub faults: FaultPlan,
+    /// Retry policy for requests displaced by faults.
+    pub retry: RetryPolicy,
+    /// KV live-migration bandwidth for notice-window drains, bytes/s.
+    pub kv_migrate_bytes_per_s: f64,
+}
+
+/// Retry policy for requests whose replica is lost to a fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Re-dispatch attempts before the request is dropped.
+    pub max_retries: u32,
+    /// Base backoff: attempt `k` re-queues `backoff_s · 2^k` after the
+    /// loss.
+    pub backoff_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 3,
+            backoff_s: 5.0,
+        }
+    }
 }
 
 impl Default for TimelineOptions {
@@ -60,11 +108,16 @@ impl Default for TimelineOptions {
             seed: sim.seed,
             max_batch: sim.max_batch,
             // Single source of truth: the simulator executes the same
-            // spin-up / re-shard the orchestrator's migration cost model
-            // prices.
+            // spin-up / re-shard / drain the orchestrator's migration cost
+            // model prices.
             spin_up_s: migration.spin_up_s,
             reshard_s: migration.reshard_s,
             slo_latency_s: 120.0,
+            drain_s: migration.drain_s,
+            faults: FaultPlan::default(),
+            retry: RetryPolicy::default(),
+            // ~16 Gbit/s of effective NIC bandwidth for KV state.
+            kv_migrate_bytes_per_s: 2.0e9,
         }
     }
 }
@@ -105,6 +158,8 @@ pub struct TimelineResult {
     /// paused for the re-shard window).
     pub reshards_applied: usize,
     pub replicas_peak: usize,
+    /// What the injected fault schedule did (all zeros on fault-free runs).
+    pub faults: FaultStats,
 }
 
 impl TimelineResult {
@@ -114,13 +169,18 @@ impl TimelineResult {
     }
 }
 
-/// In-flight request state inside a replica engine.
+/// In-flight request state inside a replica engine. Keeps the original
+/// [`Request`] so a crash can re-queue it from scratch (the KV state — and
+/// with it all decode progress — dies with the replica).
 struct InFlight {
-    arrival_s: f64,
+    req: Request,
     ctx_tokens: f64,
     remaining_out: u32,
     /// Epoch the request arrived in (for per-epoch accounting).
     epoch: usize,
+    /// Fault-displacement count; at `RetryPolicy::max_retries` the next
+    /// loss drops the request.
+    attempts: u32,
 }
 
 /// One replica instance with a rental lifetime.
@@ -137,16 +197,27 @@ struct Instance {
     /// Re-shard pause windows `[from, until)`: the instance stays rented
     /// but serves nothing while its weights re-partition in place.
     pauses: Vec<(f64, f64)>,
-    queue: VecDeque<Request>,
+    /// Queued requests with their fault-retry counts.
+    queue: VecDeque<(Request, u32)>,
+    /// Fault-displaced requests waiting out their backoff:
+    /// `(release_s, request, attempts)`. Moved into `queue` once due.
+    delayed: Vec<(f64, Request, u32)>,
     batch: Vec<InFlight>,
     token_capacity: f64,
     busy: BusyTracker,
     next_event: Option<f64>,
+    /// Set when a fault tears the replica down: it serves nothing after
+    /// this and stops paying rent here.
+    killed_at: Option<f64>,
 }
 
 impl Instance {
     fn tokens_in_use(&self) -> f64 {
         self.batch.iter().map(|r| r.ctx_tokens).sum()
+    }
+
+    fn is_killed(&self) -> bool {
+        self.killed_at.is_some()
     }
 
     fn retired_by(&self, t: f64) -> bool {
@@ -210,6 +281,7 @@ fn epoch_of_time(steps: &[TimelineStep], t: f64) -> usize {
 fn admit_one(
     r: &mut Instance,
     req: Request,
+    attempts: u32,
     steps: &[TimelineStep],
     models: &[ModelSpec],
     perf: &PerfModel,
@@ -217,15 +289,53 @@ fn admit_one(
 ) {
     let epoch = epoch_of_time(steps, req.arrival_s);
     let model = &models[r.model_idx];
+    // A fault-displaced re-admission pays this full prefill *again*: the
+    // KV state died with the old replica.
     let pre = perf.prefill_cost(&r.config, model, req.input_tokens as f64);
+    r.busy.add_busy(now, pre);
+    r.next_event = Some(r.next_event.unwrap_or(now).max(now) + pre);
     r.batch.push(InFlight {
-        arrival_s: req.arrival_s,
         ctx_tokens: req.input_tokens as f64,
         remaining_out: req.output_tokens.max(1),
         epoch,
+        attempts,
+        req,
     });
-    r.busy.add_busy(now, pre);
-    r.next_event = Some(r.next_event.unwrap_or(now).max(now) + pre);
+}
+
+/// Surviving replica of `model_idx` best placed to absorb fault-displaced
+/// work at `now`: least-loaded serviceable survivor first, else the
+/// earliest-activating live replica (the work waits out its spin-up), else
+/// `None` — the model's whole fleet is gone.
+fn rescue_target(
+    instances: &[Instance],
+    exclude: &[usize],
+    model_idx: usize,
+    now: f64,
+) -> Option<usize> {
+    let live = |i: usize, r: &Instance| {
+        !exclude.contains(&i) && r.model_idx == model_idx && !r.is_killed() && !r.retired_by(now)
+    };
+    instances
+        .iter()
+        .enumerate()
+        .filter(|&(i, r)| live(i, r) && r.serviceable_at(now))
+        .min_by(|(_, a), (_, b)| {
+            let la = a.tokens_in_use() + a.queue.len() as f64;
+            let lb = b.tokens_in_use() + b.queue.len() as f64;
+            la.partial_cmp(&lb).unwrap()
+        })
+        .map(|(i, _)| i)
+        .or_else(|| {
+            instances
+                .iter()
+                .enumerate()
+                .filter(|&(i, r)| live(i, r))
+                .min_by(|(_, a), (_, b)| {
+                    a.active_from_s.partial_cmp(&b.active_from_s).unwrap()
+                })
+                .map(|(i, _)| i)
+        })
 }
 
 /// Execute a plan timeline against per-model traces.
@@ -331,10 +441,12 @@ pub fn simulate_timeline(
                         retire_at_s: None,
                         pauses: Vec::new(),
                         queue: VecDeque::new(),
+                        delayed: Vec::new(),
                         batch: Vec::new(),
                         token_capacity: cap,
                         busy: BusyTracker::default(),
                         next_event: None,
+                        killed_at: None,
                     });
                     alive[ci].push(id);
                     if si > 0 {
@@ -497,19 +609,222 @@ pub fn simulate_timeline(
         }
     }
 
+    // ---- fault schedule --------------------------------------------------
+    // Each episode expands into an announce action (advance-notice only)
+    // and a kill action, fed through the event heap via a sentinel replica
+    // id so faults interleave with replica events in strict time order.
+    const FAULT_SENTINEL: usize = usize::MAX;
+    // (time, episode index, is_kill); announce sorts before kill at ties.
+    let mut fault_actions: Vec<(f64, usize, bool)> = Vec::new();
+    for (i, f) in opts.faults.events.iter().enumerate() {
+        if !f.is_crash() {
+            fault_actions.push((f.t_s, i, false));
+        }
+        fault_actions.push((f.kill_at_s(), i, true));
+    }
+    fault_actions.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.2.cmp(&b.2)));
+    for &(t, _, _) in &fault_actions {
+        heap.push(Event {
+            time: t,
+            replica: FAULT_SENTINEL,
+        });
+    }
+    let mut fault_idx = 0usize;
+    let mut episode_victims: Vec<Vec<usize>> = vec![Vec::new(); opts.faults.events.len()];
+    let mut fstats = FaultStats::default();
+
     let max_batch = opts.max_batch;
     // Deepest per-replica queue seen anywhere in the run (plain local —
     // the event loop is hot, so telemetry reads it once at the end).
     let mut queue_peak = 0usize;
     while let Some(Event { time, replica: ri }) = heap.pop() {
         let now = time;
-        // Deliver arrivals up to `now`.
+        if ri == FAULT_SENTINEL {
+            // Execute every fault action now due. Victims are chosen among
+            // the replicas alive at action time, starting at `pick % alive`
+            // — deterministic, as the injector documents.
+            while fault_idx < fault_actions.len() && fault_actions[fault_idx].0 <= now + 1e-9 {
+                let (_, ei, is_kill) = fault_actions[fault_idx];
+                fault_idx += 1;
+                let fault = opts.faults.events[ei];
+                let pick_victims = |instances: &[Instance]| -> Vec<usize> {
+                    let eligible: Vec<usize> = instances
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, r)| {
+                            !r.is_killed()
+                                && !r.retired_by(now)
+                                && r.rent_from_s <= now + 1e-9
+                        })
+                        .map(|(i, _)| i)
+                        .collect();
+                    if eligible.is_empty() {
+                        return Vec::new();
+                    }
+                    let start = (fault.pick as usize) % eligible.len();
+                    (0..fault.victims.min(eligible.len()))
+                        .map(|k| eligible[(start + k) % eligible.len()])
+                        .collect()
+                };
+                if !is_kill {
+                    // Announce: stop the victims admitting; they keep
+                    // decoding their batches through the notice window.
+                    let chosen = pick_victims(&instances);
+                    if chosen.is_empty() {
+                        continue;
+                    }
+                    fstats.episodes += 1;
+                    for &v in &chosen {
+                        let inst = &mut instances[v];
+                        inst.retire_at_s = Some(inst.retire_at_s.map_or(now, |r| r.min(now)));
+                        // Wake it so the queue hand-off runs promptly.
+                        heap.push(Event {
+                            time: now,
+                            replica: v,
+                        });
+                    }
+                    episode_victims[ei] = chosen;
+                    continue;
+                }
+                let chosen = if fault.is_crash() {
+                    let c = pick_victims(&instances);
+                    if c.is_empty() {
+                        continue;
+                    }
+                    fstats.episodes += 1;
+                    fstats.crashes += 1;
+                    c
+                } else {
+                    episode_victims[ei].clone()
+                };
+                for &v in &chosen {
+                    if instances[v].is_killed() {
+                        continue;
+                    }
+                    fstats.replicas_killed += 1;
+                    let e_now = epoch_of_time(steps, now);
+                    let cost_per_s =
+                        steps[e_now].problem.candidates[instances[v].candidate].cost / 3600.0;
+                    let model = &models[instances[v].model_idx];
+                    let bytes_per_token = crate::runtime::kv::kv_bytes_per_token(
+                        model.layers,
+                        model.kv_heads,
+                        model.hidden / model.heads,
+                        model.bytes_per_param,
+                    );
+                    let model_idx = instances[v].model_idx;
+                    instances[v].killed_at = Some(now);
+                    instances[v].retire_at_s =
+                        Some(instances[v].retire_at_s.map_or(now, |r| r.min(now)));
+                    instances[v].next_event = None;
+                    let mut batch = std::mem::take(&mut instances[v].batch);
+                    let queue = std::mem::take(&mut instances[v].queue);
+                    let delayed = std::mem::take(&mut instances[v].delayed);
+
+                    // Notice-window drains live-migrate the KV state the
+                    // drain allowance can afford to move (cheapest-first
+                    // maximises rescued requests); everything else loses
+                    // its KV and re-queues for a full re-prefill.
+                    batch.sort_by(|a, b| {
+                        a.ctx_tokens
+                            .partial_cmp(&b.ctx_tokens)
+                            .unwrap()
+                            .then(a.req.arrival_s.partial_cmp(&b.req.arrival_s).unwrap())
+                    });
+                    let budget_s = if fault.is_crash() {
+                        0.0
+                    } else {
+                        fault.notice_s.min(opts.drain_s)
+                    };
+                    let mut used_s = 0.0;
+                    for f in batch {
+                        let transfer_s =
+                            f.ctx_tokens * bytes_per_token / opts.kv_migrate_bytes_per_s;
+                        let target = rescue_target(&instances, &chosen, model_idx, now);
+                        let affordable = used_s + transfer_s <= budget_s + 1e-9;
+                        match (affordable, target) {
+                            (true, Some(ti)) if instances[ti].serviceable_at(now) => {
+                                used_s += transfer_s;
+                                fstats.migrated += 1;
+                                fstats.migrated_tokens += f.ctx_tokens;
+                                fstats.migration_usd += transfer_s * cost_per_s;
+                                instances[ti].batch.push(f);
+                                heap.push(Event {
+                                    time: now,
+                                    replica: ti,
+                                });
+                            }
+                            (_, Some(ti)) => {
+                                if f.attempts >= opts.retry.max_retries {
+                                    recorder.record_dropped(1);
+                                    epoch_recorders[f.epoch].record_dropped(1);
+                                    fstats.dropped += 1;
+                                } else {
+                                    let release = now
+                                        + opts.retry.backoff_s
+                                            * (1u64 << f.attempts.min(20)) as f64;
+                                    fstats.requeued += 1;
+                                    instances[ti].delayed.push((
+                                        release,
+                                        f.req,
+                                        f.attempts + 1,
+                                    ));
+                                    heap.push(Event {
+                                        time: release,
+                                        replica: ti,
+                                    });
+                                }
+                            }
+                            (_, None) => {
+                                recorder.record_dropped(1);
+                                epoch_recorders[f.epoch].record_dropped(1);
+                                fstats.dropped += 1;
+                            }
+                        }
+                    }
+                    // Queued (unstarted) work holds no KV: hand it straight
+                    // to a survivor, no backoff, no retry charge.
+                    let displaced = queue
+                        .into_iter()
+                        .chain(delayed.into_iter().map(|(_, r, a)| (r, a)));
+                    for item in displaced {
+                        match rescue_target(&instances, &chosen, model_idx, now) {
+                            Some(ti) => {
+                                instances[ti].queue.push_back(item);
+                                heap.push(Event {
+                                    time: now,
+                                    replica: ti,
+                                });
+                            }
+                            None => {
+                                let e = epoch_of_time(steps, item.0.arrival_s);
+                                recorder.record_dropped(1);
+                                epoch_recorders[e].record_dropped(1);
+                                fstats.dropped += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            continue;
+        }
+        // Deliver arrivals up to `now`, and release fault-displaced
+        // requests whose backoff has elapsed.
         {
             let reqs = &arrivals[ri];
             let r = &mut instances[ri];
             while arrival_idx[ri] < reqs.len() && reqs[arrival_idx[ri]].arrival_s <= now {
-                r.queue.push_back(reqs[arrival_idx[ri]].clone());
+                r.queue.push_back((reqs[arrival_idx[ri]].clone(), 0));
                 arrival_idx[ri] += 1;
+            }
+            let mut i = 0;
+            while i < r.delayed.len() {
+                if r.delayed[i].0 <= now + 1e-9 {
+                    let (_, req, attempts) = r.delayed.remove(i);
+                    r.queue.push_back((req, attempts));
+                } else {
+                    i += 1;
+                }
             }
             queue_peak = queue_peak.max(r.queue.len());
         }
@@ -521,7 +836,10 @@ pub fn simulate_timeline(
 
         // Drain hand-off: a retired replica gives its queued (unstarted)
         // requests to the least-loaded surviving replica of the model. If
-        // no survivor is active yet, it keeps draining them itself.
+        // no survivor is active yet, it keeps draining them itself — unless
+        // it was *killed* by a fault, in which case it cannot serve at all:
+        // the work waits on the earliest-activating live replica, or drops
+        // when the model's whole fleet is gone.
         if instances[ri].retired_by(now) && !instances[ri].queue.is_empty() {
             let model_idx = instances[ri].model_idx;
             let target = instances
@@ -538,16 +856,35 @@ pub fn simulate_timeline(
                     let lb = b.tokens_in_use() + b.queue.len() as f64;
                     la.partial_cmp(&lb).unwrap()
                 })
-                .map(|(i, _)| i);
-            if let Some(ti) = target {
-                let moved: Vec<Request> = instances[ri].queue.drain(..).collect();
-                for req in moved {
-                    instances[ti].queue.push_back(req);
-                }
-                heap.push(Event {
-                    time: now,
-                    replica: ti,
+                .map(|(i, _)| i)
+                .or_else(|| {
+                    if !instances[ri].is_killed() {
+                        return None;
+                    }
+                    rescue_target(&instances, &[ri], model_idx, now)
                 });
+            match target {
+                Some(ti) => {
+                    let moved: Vec<(Request, u32)> = instances[ri].queue.drain(..).collect();
+                    for item in moved {
+                        instances[ti].queue.push_back(item);
+                    }
+                    heap.push(Event {
+                        time: now,
+                        replica: ti,
+                    });
+                }
+                None if instances[ri].is_killed() => {
+                    let stranded: Vec<(Request, u32)> =
+                        instances[ri].queue.drain(..).collect();
+                    for (req, _) in stranded {
+                        let e = epoch_of_time(steps, req.arrival_s);
+                        recorder.record_dropped(1);
+                        epoch_recorders[e].record_dropped(1);
+                        fstats.dropped += 1;
+                    }
+                }
+                None => {}
             }
         }
 
@@ -594,24 +931,25 @@ pub fn simulate_timeline(
         }
 
         // Step: admit (unless retired), then advance the in-flight batch.
-        let admit = !instances[ri].retired_by(now);
+        // A killed replica's engine is gone: it neither admits nor drains.
+        let admit = !instances[ri].retired_by(now) && !instances[ri].is_killed();
         let (step_end, completed) = {
             let r = &mut instances[ri];
             r.next_event = None;
             while admit && !r.queue.is_empty() && r.batch.len() < max_batch {
-                let req = r.queue.front().unwrap();
+                let req = &r.queue.front().unwrap().0;
                 let need = req.input_tokens as f64 + req.output_tokens as f64;
                 if r.tokens_in_use() + need > r.token_capacity && !r.batch.is_empty() {
                     break;
                 }
-                let req = r.queue.pop_front().unwrap();
-                admit_one(r, req, steps, models, perf, now);
+                let (req, attempts) = r.queue.pop_front().unwrap();
+                admit_one(r, req, attempts, steps, models, perf, now);
             }
             // A retired replica with stranded requests (no survivor at
             // hand-off time) still drains them rather than dropping them.
-            if !admit && r.batch.is_empty() && !r.queue.is_empty() {
-                let req = r.queue.pop_front().unwrap();
-                admit_one(r, req, steps, models, perf, now);
+            if !admit && !r.is_killed() && r.batch.is_empty() && !r.queue.is_empty() {
+                let (req, attempts) = r.queue.pop_front().unwrap();
+                admit_one(r, req, attempts, steps, models, perf, now);
             }
 
             if r.batch.is_empty() {
@@ -631,7 +969,7 @@ pub fn simulate_timeline(
                 }
                 r.batch.retain(|f| {
                     if f.remaining_out == 0 {
-                        completed.push((f.arrival_s, f.epoch));
+                        completed.push((f.req.arrival_s, f.epoch));
                         false
                     } else {
                         true
@@ -666,11 +1004,14 @@ pub fn simulate_timeline(
         }
     }
 
+    // Conservation with faults: every request either completes or is
+    // explicitly dropped — never silently lost.
     assert_eq!(
-        recorder.count(),
+        recorder.count() + recorder.dropped(),
         total_requests,
         "timeline simulator lost requests"
     );
+    debug_assert_eq!(recorder.dropped(), fstats.dropped);
     let makespan = recorder.makespan();
     let sim_end = makespan.max(steps.last().unwrap().start_s);
 
@@ -685,9 +1026,13 @@ pub fn simulate_timeline(
         };
         let mut rental = 0.0;
         for inst in &instances {
-            let rent_end = match inst.retire_at_s {
-                Some(r) => r.max(inst.busy.last_event_s),
-                None => sim_end,
+            // A killed replica stops paying rent at the instant the
+            // provider reclaims it — unlike a graceful retirement it gets
+            // no drain tail.
+            let rent_end = match (inst.killed_at, inst.retire_at_s) {
+                (Some(k), _) => k,
+                (None, Some(r)) => r.max(inst.busy.last_event_s),
+                (None, None) => sim_end,
             };
             let o_start = inst.rent_from_s.max(s.start_s);
             let o_end = rent_end.min(end);
@@ -721,6 +1066,13 @@ pub fn simulate_timeline(
             "sim.slo_attainment",
             recorder.slo_attainment(opts.slo_latency_s),
         );
+        if !opts.faults.is_empty() {
+            telemetry::count("sim.fault_episodes", fstats.episodes as u64);
+            telemetry::count("sim.fault_killed", fstats.replicas_killed as u64);
+            telemetry::count("sim.fault_requeued", fstats.requeued as u64);
+            telemetry::count("sim.fault_migrated", fstats.migrated as u64);
+            telemetry::count("sim.fault_dropped", fstats.dropped as u64);
+        }
         for e in &epochs {
             telemetry::observe("sim.epoch_slo", e.slo_attainment);
             telemetry::observe("sim.epoch_rental_usd", e.rental_usd);
@@ -741,6 +1093,7 @@ pub fn simulate_timeline(
         transitions_applied,
         reshards_applied,
         replicas_peak,
+        faults: fstats,
     }
 }
 
@@ -1038,6 +1391,154 @@ mod tests {
         assert!(
             result.total_rental_usd < continuous + overlap_rent - 1e-9,
             "re-shard paid a drain+spin-up overlap"
+        );
+    }
+
+    #[test]
+    fn crash_storm_requeues_and_conserves() {
+        use crate::cloud::faults::{FaultPlan, ReplicaFault};
+        let fx = crash_recover_fixture();
+        let steps = fx.steps();
+        let trace = trace_for(600, 2.5, 13);
+        let faults = FaultPlan {
+            events: vec![
+                ReplicaFault {
+                    t_s: 40.0,
+                    notice_s: 0.0,
+                    victims: 2,
+                    pick: 3,
+                },
+                ReplicaFault {
+                    t_s: 150.0,
+                    notice_s: 0.0,
+                    victims: 1,
+                    pick: 5,
+                },
+            ],
+        };
+        let opts = TimelineOptions {
+            spin_up_s: 30.0,
+            faults,
+            ..Default::default()
+        };
+        let run = || {
+            simulate_timeline(
+                &steps,
+                std::slice::from_ref(&fx.model),
+                std::slice::from_ref(&trace),
+                &fx.perf,
+                &opts,
+            )
+        };
+        let a = run();
+        // Conservation under crash-stops: every request completes or is
+        // explicitly dropped against goodput — never silently lost.
+        assert_eq!(
+            a.recorder.count() + a.recorder.dropped(),
+            600,
+            "requests leaked under crash storm"
+        );
+        assert!(a.faults.episodes >= 1, "no episode found a live victim");
+        assert!(a.faults.replicas_killed >= 1);
+        assert_eq!(a.faults.migrated, 0, "crash-stops must not live-migrate");
+        assert_eq!(a.recorder.dropped(), a.faults.dropped);
+        // Goodput accounting folds drops into attainment.
+        assert!(a.slo_attainment(120.0) <= 1.0);
+        // Same seed + schedule replays bit-identically.
+        let b = run();
+        assert_eq!(a.faults, b.faults);
+        assert_eq!(a.recorder.count(), b.recorder.count());
+        assert!((a.makespan - b.makespan).abs() < 1e-9);
+        assert!((a.total_rental_usd - b.total_rental_usd).abs() < 1e-9);
+    }
+
+    #[test]
+    fn notice_window_migrates_affordable_kv() {
+        use crate::catalog::{GpuSpec, GpuType};
+        use crate::cloud::faults::{FaultPlan, ReplicaFault};
+        use crate::perf_model::ReplicaConfig;
+        use crate::sched::{Candidate, PlanEntry, ServingPlan};
+
+        let model = ModelSpec::llama3_8b();
+        let perf = PerfModel::default();
+        let price = GpuSpec::of(GpuType::A40).price_per_hour * 2.0;
+        let p = SchedProblem {
+            num_gpu_types: 6,
+            avail: availability(1).counts.to_vec(),
+            budget: 4.0 * price,
+            demands: vec![TraceMix::trace1().demands(400.0).to_vec()],
+            candidates: vec![Candidate {
+                model: 0,
+                cost: price,
+                gpu_counts: vec![0, 2, 0, 0, 0, 0],
+                h: vec![1.0; 9],
+                label: "a40-tp2".to_string(),
+                replica: Some(ReplicaConfig::uniform(GpuType::A40, 2, 1)),
+            }],
+        };
+        let plan = ServingPlan {
+            entries: vec![PlanEntry {
+                candidate: 0,
+                replicas: 2,
+                fractions: vec![1.0; 9],
+            }],
+            makespan: 0.0,
+        };
+        let steps = vec![TimelineStep {
+            start_s: 0.0,
+            problem: &p,
+            plan: &plan,
+        }];
+        let trace = trace_for(400, 2.0, 11);
+        // One spot reclaim of replica 0 announced at t=50, killed at t=60:
+        // too short to drain the batch, long enough to migrate its KV.
+        let faults = FaultPlan {
+            events: vec![ReplicaFault {
+                t_s: 50.0,
+                notice_s: 10.0,
+                victims: 1,
+                pick: 0,
+            }],
+        };
+        let opts = TimelineOptions {
+            faults,
+            ..Default::default()
+        };
+        let result = simulate_timeline(
+            &steps,
+            std::slice::from_ref(&model),
+            std::slice::from_ref(&trace),
+            &perf,
+            &opts,
+        );
+        assert_eq!(
+            result.recorder.count() + result.recorder.dropped(),
+            400,
+            "requests leaked across the notice-window drain"
+        );
+        assert_eq!(result.faults.replicas_killed, 1);
+        // The drain allowance affords the KV transfers (tens of MB against
+        // a multi-GB/s NIC budget): in-flight work migrates with its
+        // decode progress instead of re-prefilling.
+        assert!(
+            result.faults.migrated >= 1,
+            "notice window migrated nothing: {:?}",
+            result.faults
+        );
+        assert!(result.faults.migrated_tokens > 0.0);
+        assert!(result.faults.migration_usd > 0.0);
+        // With a healthy survivor, nothing drops.
+        assert_eq!(result.faults.dropped, 0);
+        assert_eq!(result.recorder.count(), 400);
+        // The reclaimed replica stops paying rent at the kill instant, so
+        // the run pays strictly less than two replicas for the full span.
+        let sim_end = result.epochs.last().unwrap().end_s;
+        let continuous = 2.0 * price * sim_end / 3600.0;
+        assert!(
+            result.total_rental_usd < continuous - 1e-9,
+            "rent {} vs continuous {}",
+            result.total_rental_usd,
+            continuous
         );
     }
 
