@@ -1,0 +1,535 @@
+#!/usr/bin/env python3
+"""Reference prototype of `pallas-lint` (rust/src/analysis/).
+
+The offline container that grows this repo has no Rust toolchain, so —
+exactly like the simplex core (python/solver_harness/factor_simplex.py was
+validated against scipy before the Rust transcription) — the analyzer's
+semantics were prototyped here first: masking, tokenization, test-region
+detection, zone classification, the six rules, suppression directives, and
+the baseline ratchet. The Rust implementation in rust/src/analysis/ is a
+line-for-line transcription of these semantics; the fixture unit tests on
+the Rust side pin the same behaviours this prototype was exercised with.
+
+Usage:
+    python3 python/tools/pallas_lint_proto.py [--root rust/src]
+        [--baseline rust/analysis/baseline.json] [--update-baseline] [-v]
+
+Exit code 1 when any violation is not frozen by the baseline.
+"""
+
+import json
+import os
+import sys
+
+DETERMINISTIC = [
+    "milp/",
+    "sim/engine.rs",
+    "sim/timeline.rs",
+    "workload/stream.rs",
+    "workload/drift.rs",
+    "cloud/faults.rs",
+    "util/rng.rs",
+    "sched/binary_search.rs",
+]
+HOT = ["milp/bounds.rs", "milp/factor.rs", "milp/dense.rs", "sim/engine.rs"]
+
+RATCHETABLE = {"A001", "F001", "P001"}
+ALL_RULES = ["D001", "D002", "D003", "A001", "F001", "P001", "L001"]
+
+FLOAT_CONSTS = {
+    "INFINITY", "NEG_INFINITY", "NAN", "MAX", "MIN", "EPSILON", "MIN_POSITIVE",
+}
+
+
+def classify(rel):
+    det = any(
+        rel.startswith(e) if e.endswith("/") else rel == e for e in DETERMINISTIC
+    )
+    hot = rel in HOT
+    return det, hot
+
+
+# ---- lexer ----------------------------------------------------------------
+
+def is_ident_start(c):
+    return c.isalpha() and c.isascii() or c == "_"
+
+
+def is_ident_continue(c):
+    return (c.isalnum() and c.isascii()) or c == "_"
+
+
+def scan(source):
+    """Return (lines, masked, comments) mirroring lexer::FileScan::scan."""
+    lines, masked, comments = [], [], []
+    state = ("code",)
+    for raw in source.split("\n"):
+        chars = list(raw)
+        n = len(chars)
+        out = []
+        comment = []
+        i = 0
+        while i < n:
+            kind = state[0]
+            if kind == "block":
+                depth = state[1]
+                if chars[i] == "/" and i + 1 < n and chars[i + 1] == "*":
+                    state = ("block", depth + 1)
+                    comment.append("/*")
+                    out += [" ", " "]
+                    i += 2
+                elif chars[i] == "*" and i + 1 < n and chars[i + 1] == "/":
+                    state = ("code",) if depth == 1 else ("block", depth - 1)
+                    comment.append("*/")
+                    out += [" ", " "]
+                    i += 2
+                else:
+                    comment.append(chars[i])
+                    out.append("\t" if chars[i] == "\t" else " ")
+                    i += 1
+            elif kind == "str":
+                if chars[i] == "\\" and i + 1 < n:
+                    out += [" ", " "]
+                    i += 2
+                elif chars[i] == '"':
+                    state = ("code",)
+                    out.append(" ")
+                    i += 1
+                else:
+                    out.append("\t" if chars[i] == "\t" else " ")
+                    i += 1
+            elif kind == "rawstr":
+                hashes = state[1]
+                if chars[i] == '"':
+                    have = 0
+                    for c in chars[i + 1 : i + 1 + hashes]:
+                        if c == "#":
+                            have += 1
+                        else:
+                            break
+                    if have == hashes:
+                        state = ("code",)
+                        out += [" "] * (hashes + 1)
+                        i += 1 + hashes
+                        continue
+                out.append("\t" if chars[i] == "\t" else " ")
+                i += 1
+            else:  # code
+                c = chars[i]
+                if c == "/" and i + 1 < n and chars[i + 1] == "/":
+                    comment.append("".join(chars[i:]))
+                    out += [" "] * (n - i)
+                    i = n
+                elif c == "/" and i + 1 < n and chars[i + 1] == "*":
+                    state = ("block", 1)
+                    comment.append("/*")
+                    out += [" ", " "]
+                    i += 2
+                elif c == '"':
+                    state = ("str",)
+                    out.append(" ")
+                    i += 1
+                elif c == "'":
+                    if i + 1 < n and chars[i + 1] == "\\":
+                        j = i + 2
+                        while j < n and chars[j] != "'":
+                            j += 1
+                        end = min(j + 1, n)
+                        out += [" "] * (end - i)
+                        i = end
+                    elif i + 2 < n and chars[i + 2] == "'" and chars[i + 1] != "'":
+                        out += [" ", " ", " "]
+                        i += 3
+                    else:
+                        out.append("'")
+                        i += 1
+                elif is_ident_start(c):
+                    j = i + 1
+                    while j < n and is_ident_continue(chars[j]):
+                        j += 1
+                    ident = "".join(chars[i:j])
+                    if ident in ("r", "b", "br"):
+                        k = j
+                        hashes = 0
+                        while k < n and chars[k] == "#":
+                            hashes += 1
+                            k += 1
+                        if k < n and chars[k] == '"':
+                            if ident == "b" and hashes == 0:
+                                state = ("str",)
+                            else:
+                                state = ("rawstr", hashes)
+                            out += [" "] * (k + 1 - i)
+                            i = k + 1
+                            continue
+                    out += chars[i:j]
+                    i = j
+                else:
+                    out.append(c)
+                    i += 1
+        lines.append(raw)
+        masked.append("".join(out))
+        comments.append("".join(comment))
+    return lines, masked, comments
+
+
+INT_SUFFIXES = {
+    "u8", "u16", "u32", "u64", "u128", "usize",
+    "i8", "i16", "i32", "i64", "i128", "isize",
+}
+MULTI_PUNCT = [
+    "::", "==", "!=", "<=", ">=", "->", "=>", "..", "&&", "||",
+    "+=", "-=", "*=", "/=",
+]
+
+
+def lex_number(chars):
+    n = len(chars)
+    i = 1
+    is_float = False
+    if chars[0] == "0" and i < n and chars[i] in "xob":
+        i += 1
+        while i < n and (chars[i].isalnum() or chars[i] == "_"):
+            i += 1
+        return i, False
+    while i < n and (chars[i].isdigit() or chars[i] == "_"):
+        i += 1
+    if i < n and chars[i] == ".":
+        nxt = chars[i + 1] if i + 1 < n else None
+        continues = nxt is None or nxt.isdigit() or not (is_ident_start(nxt) or nxt == ".")
+        if continues:
+            is_float = True
+            i += 1
+            while i < n and (chars[i].isdigit() or chars[i] == "_"):
+                i += 1
+    if i < n and chars[i] in "eE":
+        j = i + 1
+        if j < n and chars[j] in "+-":
+            j += 1
+        if j < n and chars[j].isdigit():
+            is_float = True
+            i = j
+            while i < n and (chars[i].isdigit() or chars[i] == "_"):
+                i += 1
+    if i < n and is_ident_start(chars[i]):
+        j = i
+        while j < n and is_ident_continue(chars[j]):
+            j += 1
+        suffix = "".join(chars[i:j])
+        if suffix in ("f32", "f64"):
+            is_float = True
+            i = j
+        elif suffix in INT_SUFFIXES:
+            i = j
+    return i, is_float
+
+
+def tokenize(masked):
+    toks = []  # (kind, text_or_isfloat, line, col, len)
+    for lineno, line in enumerate(masked):
+        chars = list(line)
+        n = len(chars)
+        i = 0
+        while i < n:
+            c = chars[i]
+            if c.isspace():
+                i += 1
+            elif is_ident_start(c):
+                j = i + 1
+                while j < n and is_ident_continue(chars[j]):
+                    j += 1
+                toks.append(("ident", "".join(chars[i:j]), lineno, i, j - i))
+                i = j
+            elif c.isdigit():
+                ln, is_float = lex_number(chars[i:])
+                toks.append(("num", is_float, lineno, i, ln))
+                i += ln
+            else:
+                two = "".join(chars[i : i + 2])
+                if two in MULTI_PUNCT:
+                    toks.append(("punct", two, lineno, i, 2))
+                    i += 2
+                else:
+                    toks.append(("punct", c, lineno, i, 1))
+                    i += 1
+    return toks
+
+
+# ---- test regions ---------------------------------------------------------
+
+def item_end(masked, start):
+    depth = 0
+    seen_brace = False
+    for off in range(start, len(masked)):
+        for ch in masked[off]:
+            if ch == "{":
+                depth += 1
+                seen_brace = True
+            elif ch == "}":
+                depth -= 1
+                if seen_brace and depth == 0:
+                    return off
+            elif ch == ";" and not seen_brace and depth == 0:
+                return off
+    return len(masked) - 1
+
+
+def test_regions(masked):
+    n = len(masked)
+    is_test = [False] * n
+    line = 0
+    while line < n:
+        code = masked[line].strip()
+        if code.startswith("#[cfg(test)]") or code.startswith("#[test]"):
+            end = item_end(masked, line)
+            for l in range(line, min(end, n - 1) + 1):
+                is_test[l] = True
+            line = end + 1
+        else:
+            line += 1
+    return is_test
+
+
+# ---- directives -----------------------------------------------------------
+
+def balanced_paren(s):
+    depth = 1
+    for i, c in enumerate(s):
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                return s[:i]
+    return None
+
+
+def directive_target(masked, lineno):
+    if masked[lineno].strip():
+        return lineno
+    for l in range(lineno + 1, len(masked)):
+        if masked[l].strip():
+            return l
+    return lineno
+
+
+def parse_directives(rel, comments, masked):
+    dirs, diags = [], []
+    for lineno, comment in enumerate(comments):
+        # Doc comments (///, //!, /** , /*!) are documentation *about* the
+        # directive syntax, never directives themselves.
+        stripped = comment.lstrip()
+        if stripped.startswith(("///", "//!", "/**", "/*!")):
+            continue
+        rest = comment
+        while True:
+            pos = rest.find("pallas-lint:")
+            if pos < 0:
+                break
+            after = rest[pos + len("pallas-lint:"):]
+            body = after.lstrip()
+            if body.startswith("allow("):
+                inner = balanced_paren(body[len("allow("):])
+                if inner is None:
+                    diags.append(("L001", rel, lineno + 1, "unterminated allow("))
+                elif "," not in inner or not inner.split(",", 1)[1].strip():
+                    diags.append(("L001", rel, lineno + 1, "allow needs a reason"))
+                else:
+                    rule = inner.split(",", 1)[0].strip()
+                    if rule not in ALL_RULES:
+                        diags.append(("L001", rel, lineno + 1, f"unknown rule {rule}"))
+                    else:
+                        dirs.append({
+                            "rule": rule,
+                            "target": directive_target(masked, lineno),
+                            "at": lineno,
+                            "used": False,
+                        })
+            else:
+                diags.append(("L001", rel, lineno + 1, "unrecognised directive"))
+            rest = after
+    return dirs, diags
+
+
+# ---- rules ----------------------------------------------------------------
+
+def check_file(rel, source):
+    lines, masked, comments = scan(source)
+    toks = tokenize(masked)
+    is_test = test_regions(masked)
+    det, hot = classify(rel)
+    dirs, diags = parse_directives(rel, comments, masked)
+
+    def live(t):
+        return not is_test[t[2]]
+
+    def comment_near(line, above, needle):
+        lo = max(0, line - above)
+        return any(needle in comments[l] for l in range(lo, line + 1))
+
+    for i, t in enumerate(toks):
+        kind, val, line, col, ln = t
+        if kind == "ident" and live(t):
+            if det and val in ("HashMap", "HashSet", "RandomState", "hash_map", "hash_set"):
+                diags.append(("D001", rel, line + 1, f"`{val}` in deterministic zone"))
+            if det:
+                nxt_path = (
+                    i + 2 < len(toks)
+                    and toks[i + 1][:2] == ("punct", "::")
+                    and toks[i + 2][0] == "ident"
+                )
+                flagged = (
+                    (val == "Instant" and nxt_path and toks[i + 2][1] == "now")
+                    or val == "SystemTime"
+                    or (val == "thread" and nxt_path and toks[i + 2][1] == "current")
+                )
+                if flagged:
+                    diags.append(("D002", rel, line + 1, f"`{val}` wall-clock/thread read"))
+            if rel != "util/rng.rs" and val in (
+                "thread_rng", "ThreadRng", "from_entropy", "OsRng", "getrandom", "EntropyRng",
+            ):
+                diags.append(("D003", rel, line + 1, f"`{val}` entropy RNG"))
+            if (
+                val in ("Relaxed", "Acquire", "Release", "AcqRel")
+                and i > 0
+                and toks[i - 1][:2] == ("punct", "::")
+                and not comment_near(line, 3, "ordering:")
+            ):
+                diags.append(("A001", rel, line + 1, f"::{val} without // ordering:"))
+            if val == "unwrap" and i > 0 and toks[i - 1][:2] == ("punct", ".") and \
+                    i + 1 < len(toks) and toks[i + 1][:2] == ("punct", "("):
+                diags.append(("P001", rel, line + 1, "unwrap()"))
+            if val in ("panic", "unreachable", "todo", "unimplemented") and \
+                    i + 1 < len(toks) and toks[i + 1][:2] == ("punct", "!"):
+                diags.append(("P001", rel, line + 1, f"{val}!"))
+        elif kind == "punct" and val in ("==", "!=") and live(t):
+            def is_float_tok(k):
+                return 0 <= k < len(toks) and toks[k][0] == "num" and toks[k][1]
+
+            def const_before(k):
+                return (
+                    k >= 3
+                    and toks[k - 1][0] == "ident" and toks[k - 1][1] in FLOAT_CONSTS
+                    and toks[k - 2][:2] == ("punct", "::")
+                    and toks[k - 3][0] == "ident" and toks[k - 3][1] in ("f32", "f64")
+                )
+
+            def const_after(k):
+                return (
+                    k + 3 < len(toks)
+                    and toks[k + 1][0] == "ident" and toks[k + 1][1] in ("f32", "f64")
+                    and toks[k + 2][:2] == ("punct", "::")
+                    and toks[k + 3][0] == "ident" and toks[k + 3][1] in FLOAT_CONSTS
+                )
+
+            lhs = i > 0 and (is_float_tok(i - 1) or const_before(i))
+            rhs = is_float_tok(i + 1) or const_after(i) or (
+                i + 2 < len(toks) and toks[i + 1][:2] == ("punct", "-") and is_float_tok(i + 2)
+            )
+            if lhs or rhs:
+                diags.append(("F001", rel, line + 1, f"bare {val} vs float literal"))
+
+    violations, suppressed, notes = [], 0, []
+    for d in diags:
+        rule, _, line1, _ = d
+        hit = False
+        if rule != "L001":
+            for dr in dirs:
+                if dr["rule"] == rule and dr["target"] == line1 - 1:
+                    dr["used"] = True
+                    hit = True
+                    break
+        if hit:
+            suppressed += 1
+        else:
+            violations.append(d)
+    for dr in dirs:
+        if not dr["used"]:
+            notes.append(f"{rel}:{dr['at'] + 1}: unused allow({dr['rule']})")
+    violations.sort(key=lambda d: (d[2],))
+    return violations, suppressed, notes
+
+
+# ---- driver ---------------------------------------------------------------
+
+def collect(root):
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for f in sorted(filenames):
+            if f.endswith(".rs"):
+                out.append(os.path.join(dirpath, f))
+    return sorted(out)
+
+
+def main():
+    argv = sys.argv[1:]
+    root = "rust/src"
+    baseline_path = "rust/analysis/baseline.json"
+    update = "-u" in argv or "--update-baseline" in argv
+    verbose = "-v" in argv
+    if "--root" in argv:
+        root = argv[argv.index("--root") + 1]
+    if "--baseline" in argv:
+        baseline_path = argv[argv.index("--baseline") + 1]
+
+    all_v, suppressed, notes = [], 0, []
+    files = collect(root)
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        v, s, n = check_file(rel, src)
+        all_v += v
+        suppressed += s
+        notes += n
+
+    counts = {}
+    for rule, rel, line, msg in all_v:
+        counts.setdefault(rule, {}).setdefault(rel, 0)
+        counts[rule][rel] += 1
+
+    if update:
+        doc = {
+            "counts": {
+                r: dict(sorted(fs.items()))
+                for r, fs in sorted(counts.items())
+                if r in RATCHETABLE
+            },
+            "version": 1,
+        }
+        os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
+        with open(baseline_path, "w", encoding="utf-8") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"baseline updated: {baseline_path}")
+
+    base = {}
+    if os.path.exists(baseline_path):
+        with open(baseline_path, encoding="utf-8") as fh:
+            base = json.load(fh).get("counts", {})
+
+    failures = 0
+    for rule, fs in sorted(counts.items()):
+        for rel, cnt in sorted(fs.items()):
+            allowed = base.get(rule, {}).get(rel, 0) if rule in RATCHETABLE else 0
+            if cnt > allowed:
+                failures += cnt - allowed
+                print(f"FAIL {rule} {rel}: {cnt} found, {allowed} frozen")
+                if verbose:
+                    for r, f2, line, msg in all_v:
+                        if r == rule and f2 == rel:
+                            print(f"    {f2}:{line}: {msg}")
+    for n in notes:
+        print("note:", n)
+    per_rule = {r: sum(fs.values()) for r, fs in counts.items()}
+    summary = " ".join(f"{r}={per_rule.get(r, 0)}" for r in ALL_RULES)
+    print(
+        f"pallas-lint(proto): {len(files)} files, {len(all_v)} violation(s), "
+        f"{suppressed} allowed inline [{summary}]"
+    )
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

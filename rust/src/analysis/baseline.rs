@@ -1,0 +1,286 @@
+//! The ratchet: frozen per-(rule, file) debt counts in
+//! `analysis/baseline.json`.
+//!
+//! Check mode compares the current violation counts against the committed
+//! baseline: counts above it **fail**, counts at it pass (frozen debt),
+//! counts below it pass with a shrink note — run `lint --update-baseline`
+//! to commit the improvement so the debt can never grow back. Only
+//! ratchetable rules ([`RuleId::ratchetable`]) may appear in the baseline;
+//! D-rules are zero-tolerance and a baseline file naming one is rejected
+//! outright (tampering with the file must not re-open the determinism
+//! invariants).
+
+use super::diag::{Diagnostic, RuleId};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Frozen debt: rule id → file → allowed count. BTreeMaps keep the JSON
+/// serialization deterministic so baseline diffs are reviewable.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Baseline {
+    counts: BTreeMap<String, BTreeMap<String, u64>>,
+}
+
+impl Baseline {
+    pub fn empty() -> Baseline {
+        Baseline::default()
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Baseline> {
+        let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("baseline: {e}"))?;
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("baseline: top level must be an object"))?;
+        let mut counts = BTreeMap::new();
+        let rules = obj
+            .get("counts")
+            .and_then(|c| c.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("baseline: missing \"counts\" object"))?;
+        for (rule_s, files) in rules {
+            let rule = RuleId::parse(rule_s)
+                .ok_or_else(|| anyhow::anyhow!("baseline: unknown rule '{rule_s}'"))?;
+            if !rule.ratchetable() {
+                anyhow::bail!(
+                    "baseline: rule {rule} is zero-tolerance and may not carry frozen debt — \
+                     fix the violation or add an inline allow with a reason"
+                );
+            }
+            let files_obj = files
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("baseline: counts.{rule_s} must be an object"))?;
+            let mut per_file = BTreeMap::new();
+            for (file, n) in files_obj {
+                let n = n
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("baseline: {rule_s}.{file} not a count"))?;
+                if n > 0 {
+                    per_file.insert(file.clone(), n);
+                }
+            }
+            if !per_file.is_empty() {
+                counts.insert(rule_s.clone(), per_file);
+            }
+        }
+        Ok(Baseline { counts })
+    }
+
+    /// Build a baseline from current violations (ratchetable rules only —
+    /// zero-tolerance rules are deliberately dropped so `--update-baseline`
+    /// can never launder a D-rule violation into frozen debt).
+    pub fn from_violations(diags: &[Diagnostic]) -> Baseline {
+        let mut counts: BTreeMap<String, BTreeMap<String, u64>> = BTreeMap::new();
+        for d in diags {
+            if d.rule.ratchetable() {
+                *counts
+                    .entry(d.rule.as_str().to_string())
+                    .or_default()
+                    .entry(d.file.clone())
+                    .or_insert(0) += 1;
+            }
+        }
+        Baseline { counts }
+    }
+
+    pub fn allowed(&self, rule: RuleId, file: &str) -> u64 {
+        self.counts
+            .get(rule.as_str())
+            .and_then(|m| m.get(file))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Total frozen debt per rule (for the summary line).
+    pub fn total(&self, rule: RuleId) -> u64 {
+        self.counts
+            .get(rule.as_str())
+            .map(|m| m.values().sum())
+            .unwrap_or(0)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        let mut rules = BTreeMap::new();
+        for (rule, files) in &self.counts {
+            let mut obj = BTreeMap::new();
+            for (file, n) in files {
+                obj.insert(file.clone(), Json::num(*n as f64));
+            }
+            rules.insert(rule.clone(), Json::Obj(obj));
+        }
+        let doc = Json::Obj(BTreeMap::from([
+            ("version".to_string(), Json::num(1.0)),
+            ("counts".to_string(), Json::Obj(rules)),
+        ]));
+        // to_string_pretty already ends with a newline.
+        doc.to_string_pretty()
+    }
+}
+
+/// One (rule, file) group that exceeded its frozen allowance.
+#[derive(Debug)]
+pub struct FailureGroup {
+    pub rule: RuleId,
+    pub file: String,
+    pub found: u64,
+    pub allowed: u64,
+    pub diags: Vec<Diagnostic>,
+}
+
+/// Outcome of diffing current violations against the baseline.
+#[derive(Debug, Default)]
+pub struct RatchetOutcome {
+    /// Groups over their allowance (or zero-tolerance hits). Non-empty ⇒
+    /// the lint run fails.
+    pub failures: Vec<FailureGroup>,
+    /// Violations absorbed by frozen debt.
+    pub frozen: u64,
+    /// `(rule, file, frozen, current)` where current < frozen — improvements
+    /// waiting for `--update-baseline` to lock them in.
+    pub shrink: Vec<(String, String, u64, u64)>,
+}
+
+/// Diff current violations against the frozen baseline.
+pub fn ratchet(diags: &[Diagnostic], base: &Baseline) -> RatchetOutcome {
+    let mut by_group: BTreeMap<(String, RuleId), Vec<Diagnostic>> = BTreeMap::new();
+    for d in diags {
+        by_group
+            .entry((d.file.clone(), d.rule))
+            .or_default()
+            .push(d.clone());
+    }
+
+    let mut out = RatchetOutcome::default();
+    for ((file, rule), group) in by_group {
+        let found = group.len() as u64;
+        let allowed = if rule.ratchetable() {
+            base.allowed(rule, &file)
+        } else {
+            0
+        };
+        if found > allowed {
+            out.frozen += allowed;
+            out.failures.push(FailureGroup {
+                rule,
+                file,
+                found,
+                allowed,
+                diags: group,
+            });
+        } else {
+            out.frozen += found;
+            if found < allowed {
+                out.shrink
+                    .push((rule.as_str().to_string(), file, allowed, found));
+            }
+        }
+    }
+    // Baseline entries for files that now lint clean also shrink.
+    for (rule_s, files) in &base.counts {
+        let rule = RuleId::parse(rule_s).expect("invariant: parse() rejected unknown rules");
+        for (file, &allowed) in files {
+            let still_present = diags
+                .iter()
+                .any(|d| d.rule == rule && d.file == *file);
+            if !still_present {
+                out.shrink
+                    .push((rule_s.clone(), file.clone(), allowed, 0));
+            }
+        }
+    }
+    out.shrink.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::zones::ZoneSet;
+
+    fn diag(rule: RuleId, file: &str, line: usize) -> Diagnostic {
+        Diagnostic {
+            rule,
+            file: file.to_string(),
+            line,
+            col: 0,
+            len: 1,
+            message: String::new(),
+            line_text: String::new(),
+            zone: ZoneSet::default(),
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let diags = vec![
+            diag(RuleId::P001, "a.rs", 1),
+            diag(RuleId::P001, "a.rs", 2),
+            diag(RuleId::F001, "b.rs", 3),
+        ];
+        let base = Baseline::from_violations(&diags);
+        let text = base.to_json_string();
+        let re = Baseline::parse(&text).expect("own output must parse");
+        assert_eq!(re, base);
+        assert_eq!(re.allowed(RuleId::P001, "a.rs"), 2);
+        assert_eq!(re.total(RuleId::P001), 2);
+        assert_eq!(re.allowed(RuleId::F001, "b.rs"), 1);
+    }
+
+    #[test]
+    fn d_rules_never_enter_a_baseline() {
+        let diags = vec![diag(RuleId::D001, "sim/engine.rs", 1)];
+        let base = Baseline::from_violations(&diags);
+        assert_eq!(base, Baseline::empty());
+        // And a hand-edited baseline naming a D-rule is rejected.
+        let doc = r#"{"version": 1, "counts": {"D001": {"sim/engine.rs": 1}}}"#;
+        assert!(Baseline::parse(doc).is_err());
+    }
+
+    #[test]
+    fn ratchet_freezes_existing_fails_new() {
+        let base = Baseline::from_violations(&[
+            diag(RuleId::P001, "a.rs", 1),
+            diag(RuleId::P001, "a.rs", 2),
+        ]);
+        // Same count: frozen, no failure.
+        let now = vec![diag(RuleId::P001, "a.rs", 5), diag(RuleId::P001, "a.rs", 9)];
+        let out = ratchet(&now, &base);
+        assert!(out.failures.is_empty());
+        assert_eq!(out.frozen, 2);
+
+        // One more: the group fails with the delta visible.
+        let more = vec![
+            diag(RuleId::P001, "a.rs", 5),
+            diag(RuleId::P001, "a.rs", 9),
+            diag(RuleId::P001, "a.rs", 11),
+        ];
+        let out = ratchet(&more, &base);
+        assert_eq!(out.failures.len(), 1);
+        assert_eq!((out.failures[0].found, out.failures[0].allowed), (3, 2));
+    }
+
+    #[test]
+    fn ratchet_shrinks_on_improvement() {
+        let base = Baseline::from_violations(&[
+            diag(RuleId::P001, "a.rs", 1),
+            diag(RuleId::P001, "a.rs", 2),
+            diag(RuleId::F001, "b.rs", 1),
+        ]);
+        let now = vec![diag(RuleId::P001, "a.rs", 1)];
+        let out = ratchet(&now, &base);
+        assert!(out.failures.is_empty());
+        assert_eq!(
+            out.shrink,
+            vec![
+                ("F001".to_string(), "b.rs".to_string(), 1, 0),
+                ("P001".to_string(), "a.rs".to_string(), 2, 1),
+            ]
+        );
+    }
+
+    #[test]
+    fn zero_tolerance_rules_fail_regardless() {
+        let now = vec![diag(RuleId::D002, "sim/engine.rs", 7)];
+        let out = ratchet(&now, &Baseline::empty());
+        assert_eq!(out.failures.len(), 1);
+        assert_eq!(out.failures[0].allowed, 0);
+    }
+}

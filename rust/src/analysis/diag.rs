@@ -1,0 +1,172 @@
+//! Diagnostics: rule identities, spans, and rendering.
+
+use super::zones::ZoneSet;
+use std::fmt;
+
+/// Stable rule identifiers. IDs are the public contract: they appear in
+/// diagnostics, suppression comments, and the committed baseline, so they
+/// must never be renumbered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RuleId {
+    /// `HashMap`/`HashSet`/`RandomState` in a deterministic zone
+    /// (iteration order is randomized per-process).
+    D001,
+    /// `Instant::now` / `SystemTime` / `thread::current().id()` in a
+    /// deterministic zone (wall-clock and thread identity are
+    /// run-dependent).
+    D002,
+    /// Unseeded / entropy-based RNG construction outside `util::rng`.
+    D003,
+    /// `Ordering::Relaxed`/`Acquire`/`Release`/`AcqRel` without an adjacent
+    /// `// ordering:` justification comment.
+    A001,
+    /// Bare `==`/`!=` against a float literal outside tolerance helpers.
+    F001,
+    /// `unwrap()` / `panic!` / `unreachable!` / `todo!` / `unimplemented!`
+    /// in non-test library code (ratcheted; `expect("invariant")` is the
+    /// sanctioned replacement).
+    P001,
+    /// Malformed `pallas-lint:` directive (unknown rule, missing reason).
+    L001,
+}
+
+pub const ALL_RULES: &[RuleId] = &[
+    RuleId::D001,
+    RuleId::D002,
+    RuleId::D003,
+    RuleId::A001,
+    RuleId::F001,
+    RuleId::P001,
+    RuleId::L001,
+];
+
+impl RuleId {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RuleId::D001 => "D001",
+            RuleId::D002 => "D002",
+            RuleId::D003 => "D003",
+            RuleId::A001 => "A001",
+            RuleId::F001 => "F001",
+            RuleId::P001 => "P001",
+            RuleId::L001 => "L001",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RuleId> {
+        ALL_RULES.iter().copied().find(|r| r.as_str() == s)
+    }
+
+    pub fn title(&self) -> &'static str {
+        match self {
+            RuleId::D001 => "hash-order nondeterminism in deterministic zone",
+            RuleId::D002 => "wall-clock / thread-identity read in deterministic zone",
+            RuleId::D003 => "unseeded RNG construction outside util::rng",
+            RuleId::A001 => "atomic ordering without `// ordering:` justification",
+            RuleId::F001 => "bare float comparison against a literal",
+            RuleId::P001 => "panic-path in library code (unwrap/panic!/unreachable!)",
+            RuleId::L001 => "malformed pallas-lint directive",
+        }
+    }
+
+    /// Ratchetable rules may carry frozen debt in `analysis/baseline.json`.
+    /// D-rules are zero-tolerance: a violation in the deterministic zone is
+    /// either fixed or carries a reasoned inline allow — never baselined
+    /// (the whole point of the zone is that the invariant holds *now*).
+    pub fn ratchetable(&self) -> bool {
+        matches!(self, RuleId::A001 | RuleId::F001 | RuleId::P001)
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One violation, with an exact source span.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: RuleId,
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// 0-based column of the offending token.
+    pub col: usize,
+    /// Length (chars) of the offending token.
+    pub len: usize,
+    pub message: String,
+    /// The raw source line, for caret rendering.
+    pub line_text: String,
+    pub zone: ZoneSet,
+}
+
+impl Diagnostic {
+    /// `file:line:col: RULE message`, then the source line with a caret
+    /// underline — span-accurate so editors and humans land on the token.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "{}:{}:{}: {} [{}] {}\n",
+            self.file,
+            self.line,
+            self.col + 1,
+            self.rule,
+            self.zone.label(),
+            self.message
+        );
+        out.push_str(&format!("    {}\n", self.line_text));
+        let mut caret = String::from("    ");
+        for ch in self.line_text.chars().take(self.col) {
+            caret.push(if ch == '\t' { '\t' } else { ' ' });
+        }
+        caret.push_str(&"^".repeat(self.len.max(1)));
+        out.push_str(&caret);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_id_round_trip() {
+        for r in ALL_RULES {
+            assert_eq!(RuleId::parse(r.as_str()), Some(*r));
+        }
+        assert_eq!(RuleId::parse("D999"), None);
+    }
+
+    #[test]
+    fn d_rules_are_not_ratchetable() {
+        assert!(!RuleId::D001.ratchetable());
+        assert!(!RuleId::D002.ratchetable());
+        assert!(!RuleId::D003.ratchetable());
+        assert!(RuleId::P001.ratchetable());
+        assert!(RuleId::F001.ratchetable());
+        assert!(RuleId::A001.ratchetable());
+    }
+
+    #[test]
+    fn render_points_at_token() {
+        let d = Diagnostic {
+            rule: RuleId::D001,
+            file: "sim/engine.rs".into(),
+            line: 10,
+            col: 8,
+            len: 7,
+            message: "HashMap in deterministic zone".into(),
+            line_text: "    let HashMap = 1;".into(),
+            zone: ZoneSet {
+                deterministic: true,
+                hot: true,
+            },
+        };
+        let r = d.render();
+        assert!(r.starts_with("sim/engine.rs:10:9: D001 [deterministic+hot]"));
+        let caret_line = r.lines().last().expect("caret line present");
+        assert_eq!(caret_line.find('^'), Some(8 + 4));
+        assert!(caret_line.ends_with("^^^^^^^"));
+    }
+}

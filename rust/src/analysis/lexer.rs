@@ -1,0 +1,495 @@
+//! Comment- and string-aware scanning of Rust source.
+//!
+//! `pallas-lint` runs offline with no AST crates available, so this module
+//! hand-rolls the one lexical fact every rule depends on: *which bytes of a
+//! file are code*. [`FileScan::scan`] walks a source file once with a small
+//! state machine and produces, per line, a **masked** copy in which every
+//! comment, string literal, and char literal is blanked to spaces (columns
+//! preserved), plus the extracted comment text per line (directives like
+//! `pallas-lint: allow(...)` and `ordering:` justifications live in
+//! comments). Rules then tokenize the masked text with [`tokenize`] and can
+//! never false-positive on `"HashMap"` inside a string or a commented-out
+//! `Instant::now()`.
+//!
+//! Handled Rust lexical edge cases: nested block comments, escaped string
+//! chars, multi-line strings, raw strings `r#"..."#` (any hash depth), byte
+//! and byte-raw strings, char literals vs lifetimes (`'a'` vs `<'a>`), and
+//! raw identifiers (`r#type` stays code).
+
+/// One scanned source file: raw lines, code-only masked lines, and the
+/// comment text found on each line.
+#[derive(Debug)]
+pub struct FileScan {
+    /// Raw source lines, without trailing newlines.
+    pub lines: Vec<String>,
+    /// Same lines with comments / string literals / char literals replaced
+    /// by spaces. Column positions are preserved, so token spans computed on
+    /// the masked text are valid for the raw text.
+    pub masked: Vec<String>,
+    /// Concatenated comment text per line (empty when the line carries no
+    /// comment). Block comments contribute their content to every line they
+    /// span.
+    pub comments: Vec<String>,
+}
+
+/// Scanner state carried across lines.
+enum State {
+    Code,
+    /// Inside `/* ... */`; the depth supports Rust's nested block comments.
+    Block { depth: usize },
+    /// Inside a `"..."` string (escapes handled inline; may span lines).
+    Str,
+    /// Inside a raw string terminated by `"` followed by `hashes` `#`s.
+    RawStr { hashes: usize },
+}
+
+impl FileScan {
+    pub fn scan(source: &str) -> FileScan {
+        let mut lines: Vec<String> = Vec::new();
+        let mut masked: Vec<String> = Vec::new();
+        let mut comments: Vec<String> = Vec::new();
+        let mut state = State::Code;
+
+        for raw_line in source.split('\n') {
+            let chars: Vec<char> = raw_line.chars().collect();
+            let n = chars.len();
+            let mut out: Vec<char> = Vec::with_capacity(n);
+            let mut comment = String::new();
+            let mut i = 0usize;
+
+            while i < n {
+                match state {
+                    State::Block { depth } => {
+                        if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                            state = State::Block { depth: depth + 1 };
+                            comment.push_str("/*");
+                            out.push(' ');
+                            out.push(' ');
+                            i += 2;
+                        } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                            state = if depth == 1 {
+                                State::Code
+                            } else {
+                                State::Block { depth: depth - 1 }
+                            };
+                            comment.push_str("*/");
+                            out.push(' ');
+                            out.push(' ');
+                            i += 2;
+                        } else {
+                            comment.push(chars[i]);
+                            out.push(if chars[i] == '\t' { '\t' } else { ' ' });
+                            i += 1;
+                        }
+                    }
+                    State::Str => {
+                        if chars[i] == '\\' && i + 1 < n {
+                            out.push(' ');
+                            out.push(' ');
+                            i += 2;
+                        } else if chars[i] == '"' {
+                            state = State::Code;
+                            out.push(' ');
+                            i += 1;
+                        } else {
+                            out.push(if chars[i] == '\t' { '\t' } else { ' ' });
+                            i += 1;
+                        }
+                    }
+                    State::RawStr { hashes } => {
+                        if chars[i] == '"' {
+                            let have = chars[i + 1..]
+                                .iter()
+                                .take(hashes)
+                                .take_while(|&&c| c == '#')
+                                .count();
+                            if have == hashes {
+                                state = State::Code;
+                                for _ in 0..=hashes {
+                                    out.push(' ');
+                                }
+                                i += 1 + hashes;
+                                continue;
+                            }
+                        }
+                        out.push(if chars[i] == '\t' { '\t' } else { ' ' });
+                        i += 1;
+                    }
+                    State::Code => {
+                        let c = chars[i];
+                        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                            // Line comment: the rest of the line.
+                            comment.push_str(&chars[i..].iter().collect::<String>());
+                            for _ in i..n {
+                                out.push(' ');
+                            }
+                            i = n;
+                        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                            state = State::Block { depth: 1 };
+                            comment.push_str("/*");
+                            out.push(' ');
+                            out.push(' ');
+                            i += 2;
+                        } else if c == '"' {
+                            state = State::Str;
+                            out.push(' ');
+                            i += 1;
+                        } else if c == '\'' {
+                            // Char literal or lifetime. `'\...'` and `'x'`
+                            // are literals; `'ident` (no closing quote right
+                            // after one char) is a lifetime and stays code.
+                            if i + 1 < n && chars[i + 1] == '\\' {
+                                // Escaped char literal: mask to closing quote.
+                                let mut j = i + 2;
+                                while j < n && chars[j] != '\'' {
+                                    j += 1;
+                                }
+                                for _ in i..(j + 1).min(n) {
+                                    out.push(' ');
+                                }
+                                i = (j + 1).min(n);
+                            } else if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                                out.push(' ');
+                                out.push(' ');
+                                out.push(' ');
+                                i += 3;
+                            } else {
+                                out.push('\'');
+                                i += 1;
+                            }
+                        } else if is_ident_start(c) {
+                            // Consume the identifier whole so raw-string
+                            // prefixes are only recognised when the entire
+                            // identifier is `r`, `b`, or `br`.
+                            let mut j = i + 1;
+                            while j < n && is_ident_continue(chars[j]) {
+                                j += 1;
+                            }
+                            let ident: String = chars[i..j].iter().collect();
+                            let is_raw_prefix = matches!(ident.as_str(), "r" | "b" | "br");
+                            if is_raw_prefix {
+                                let mut k = j;
+                                let mut hashes = 0usize;
+                                while k < n && chars[k] == '#' {
+                                    hashes += 1;
+                                    k += 1;
+                                }
+                                if k < n && chars[k] == '"' {
+                                    if ident == "b" && hashes == 0 {
+                                        // b"..." is an escaped byte string.
+                                        state = State::Str;
+                                    } else if hashes == 0 && ident == "r" {
+                                        state = State::RawStr { hashes: 0 };
+                                    } else if hashes > 0 {
+                                        state = State::RawStr { hashes };
+                                    } else {
+                                        // br"..." (no hashes): raw semantics.
+                                        state = State::RawStr { hashes: 0 };
+                                    }
+                                    for _ in i..=k {
+                                        out.push(' ');
+                                    }
+                                    i = k + 1;
+                                    continue;
+                                }
+                            }
+                            for ch in &chars[i..j] {
+                                out.push(*ch);
+                            }
+                            i = j;
+                        } else {
+                            out.push(c);
+                            i += 1;
+                        }
+                    }
+                }
+            }
+
+            lines.push(raw_line.to_string());
+            masked.push(out.into_iter().collect());
+            comments.push(comment);
+        }
+
+        FileScan {
+            lines,
+            masked,
+            comments,
+        }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// A token produced from masked code text.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokKind {
+    Ident(String),
+    /// Numeric literal; `is_float` when it has a decimal point, a decimal
+    /// exponent, or an `f32`/`f64` suffix.
+    Num { is_float: bool },
+    /// Operator / punctuation, multi-char ops (`::`, `==`, `!=`, ...) fused.
+    Punct(String),
+}
+
+/// One token with its position (0-based line, 0-based column, char length).
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub line: usize,
+    pub col: usize,
+    pub len: usize,
+}
+
+impl Token {
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn is_punct(&self, p: &str) -> bool {
+        matches!(&self.kind, TokKind::Punct(s) if s == p)
+    }
+    pub fn is_float(&self) -> bool {
+        matches!(self.kind, TokKind::Num { is_float: true })
+    }
+}
+
+const MULTI_PUNCT: &[&str] = &[
+    "::", "==", "!=", "<=", ">=", "->", "=>", "..", "&&", "||", "+=", "-=", "*=", "/=",
+];
+
+/// Tokenize the masked lines of a [`FileScan`] into a flat stream.
+pub fn tokenize(scan: &FileScan) -> Vec<Token> {
+    let mut toks = Vec::new();
+    for (lineno, line) in scan.masked.iter().enumerate() {
+        let chars: Vec<char> = line.chars().collect();
+        let n = chars.len();
+        let mut i = 0usize;
+        while i < n {
+            let c = chars[i];
+            if c.is_whitespace() {
+                i += 1;
+            } else if is_ident_start(c) {
+                let mut j = i + 1;
+                while j < n && is_ident_continue(chars[j]) {
+                    j += 1;
+                }
+                toks.push(Token {
+                    kind: TokKind::Ident(chars[i..j].iter().collect()),
+                    line: lineno,
+                    col: i,
+                    len: j - i,
+                });
+                i = j;
+            } else if c.is_ascii_digit() {
+                let (len, is_float) = lex_number(&chars[i..]);
+                toks.push(Token {
+                    kind: TokKind::Num { is_float },
+                    line: lineno,
+                    col: i,
+                    len,
+                });
+                i += len;
+            } else {
+                let two: String = chars[i..(i + 2).min(n)].iter().collect();
+                if MULTI_PUNCT.contains(&two.as_str()) {
+                    toks.push(Token {
+                        kind: TokKind::Punct(two),
+                        line: lineno,
+                        col: i,
+                        len: 2,
+                    });
+                    i += 2;
+                } else {
+                    toks.push(Token {
+                        kind: TokKind::Punct(c.to_string()),
+                        line: lineno,
+                        col: i,
+                        len: 1,
+                    });
+                    i += 1;
+                }
+            }
+        }
+    }
+    toks
+}
+
+/// Length and floatness of the numeric literal starting at `chars[0]`
+/// (which is an ASCII digit). Understands `_` separators, hex/oct/bin
+/// prefixes (never float), decimal points (but not method calls like
+/// `2.max(..)` or tuple access), exponents, and type suffixes.
+fn lex_number(chars: &[char]) -> (usize, bool) {
+    let n = chars.len();
+    let mut i = 1usize;
+    let mut is_float = false;
+
+    // Radix-prefixed integers can contain hex 'e'/'E'; never floats.
+    if chars[0] == '0' && i < n && matches!(chars[i], 'x' | 'o' | 'b') {
+        i += 1;
+        while i < n && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+            i += 1;
+        }
+        return (i, false);
+    }
+
+    while i < n && (chars[i].is_ascii_digit() || chars[i] == '_') {
+        i += 1;
+    }
+    // A '.' continues the number only when followed by a digit (or end /
+    // non-identifier), so `1.max(2)` and `tuple.0` stay integers.
+    if i < n && chars[i] == '.' {
+        let next = chars.get(i + 1);
+        let continues = match next {
+            None => true,
+            Some(c) => c.is_ascii_digit() || !(is_ident_start(*c) || *c == '.'),
+        };
+        if continues {
+            is_float = true;
+            i += 1;
+            while i < n && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                i += 1;
+            }
+        }
+    }
+    // Decimal exponent.
+    if i < n && matches!(chars[i], 'e' | 'E') {
+        let mut j = i + 1;
+        if j < n && matches!(chars[j], '+' | '-') {
+            j += 1;
+        }
+        if j < n && chars[j].is_ascii_digit() {
+            is_float = true;
+            i = j;
+            while i < n && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                i += 1;
+            }
+        }
+    }
+    // Type suffix (f64 makes it a float; u32 etc. keep it an int).
+    if i < n && is_ident_start(chars[i]) {
+        let mut j = i;
+        while j < n && is_ident_continue(chars[j]) {
+            j += 1;
+        }
+        let suffix: String = chars[i..j].iter().collect();
+        if suffix == "f32" || suffix == "f64" {
+            is_float = true;
+            i = j;
+        } else if matches!(
+            suffix.as_str(),
+            "u8" | "u16" | "u32" | "u64" | "u128" | "usize" | "i8" | "i16" | "i32" | "i64"
+                | "i128" | "isize"
+        ) {
+            i = j;
+        }
+    }
+    (i, is_float)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn masked(src: &str) -> Vec<String> {
+        FileScan::scan(src).masked
+    }
+
+    #[test]
+    fn line_comments_are_masked_and_captured() {
+        let s = FileScan::scan("let x = 1; // HashMap::new()\ncode();");
+        assert!(!s.masked[0].contains("HashMap"));
+        assert!(s.comments[0].contains("HashMap::new()"));
+        assert_eq!(s.masked[1], "code();");
+    }
+
+    #[test]
+    fn strings_are_masked_columns_preserved() {
+        let m = masked(r#"let s = "Instant::now()"; foo();"#);
+        assert!(!m[0].contains("Instant"));
+        // Column positions survive masking.
+        assert_eq!(m[0].find("foo"), Some(26));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let m = masked("a /* x /* y */ z */ b");
+        assert_eq!(m[0].trim(), "a                   b".trim());
+        assert!(m[0].contains('a') && m[0].contains('b'));
+        assert!(!m[0].contains('x') && !m[0].contains('z'));
+    }
+
+    #[test]
+    fn raw_strings_any_hash_depth() {
+        let m = masked(r##"let s = r#"unwrap() "quoted""#; t();"##);
+        assert!(!m[0].contains("unwrap"));
+        assert!(m[0].contains("t();"));
+    }
+
+    #[test]
+    fn multiline_string_state_carries() {
+        let m = masked("let s = \"line one\nHashMap here\"; done();");
+        assert!(!m[1].contains("HashMap"));
+        assert!(m[1].contains("done();"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let m = masked("let c = '\"'; fn f<'a>(x: &'a str) {} let q = 'x';");
+        // The quote char literal must not open a string state.
+        assert!(m[0].contains("fn f<'a>"));
+        assert!(!m[0].contains("'x'"));
+    }
+
+    #[test]
+    fn escaped_char_literal() {
+        let m = masked(r"let c = '\n'; let d = '\''; ok();");
+        assert!(m[0].contains("ok();"));
+        assert!(!m[0].contains('n') || m[0].find("ok").is_some());
+    }
+
+    #[test]
+    fn raw_identifier_stays_code() {
+        let m = masked("let r#type = 1; use_it(r#type);");
+        assert!(m[0].contains("type"));
+    }
+
+    #[test]
+    fn number_lexing_floatness() {
+        let scan = FileScan::scan(
+            "a == 1.5; b == 2; c == 1e-3; d == 0x1E; e == 3f64; f == 2.max(1); g == 1_000.0;",
+        );
+        let toks = tokenize(&scan);
+        let floats: Vec<bool> = toks
+            .iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Num { is_float } => Some(is_float),
+                _ => None,
+            })
+            .collect();
+        // 1.5 float, 2 int, 1e-3 float, 0x1E int, 3f64 float, 2 int (then
+        // max(1) int), 1_000.0 float.
+        assert_eq!(floats, vec![true, false, true, false, true, false, false, true]);
+    }
+
+    #[test]
+    fn multi_char_puncts_fused() {
+        let scan = FileScan::scan("a::b == c != d -> e => f");
+        let toks = tokenize(&scan);
+        let puncts: Vec<String> = toks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                TokKind::Punct(p) => Some(p.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(puncts, vec!["::", "==", "!=", "->", "=>"]);
+    }
+}

@@ -1,0 +1,364 @@
+//! `pallas-lint` — the in-repo invariant analyzer.
+//!
+//! A project-specific static-analysis pass over `rust/src` that enforces
+//! the invariants the repo's correctness claims rest on: determinism zones
+//! (bit-identical parallel B&B and sharded simulation), atomic-ordering
+//! discipline, numerical hygiene, and panic-path ratcheting. The spot
+//! tests (1-vs-N fingerprint checks) verify the invariants *hold today*;
+//! the analyzer enforces them *by construction* on every change, before
+//! any test runs.
+//!
+//! No AST crates exist offline, so the scanner is hand-rolled: a
+//! comment/string-aware lexer ([`lexer`]), a path-based zone map
+//! ([`zones`]), six rules with stable IDs ([`rules`], catalog in
+//! `analysis/README.md`), span-accurate diagnostics ([`diag`]), and a
+//! ratcheting baseline ([`baseline`]) — existing debt is frozen in
+//! `analysis/baseline.json`, new violations fail, and fixes shrink the
+//! file via `lint --update-baseline`.
+//!
+//! Entry points: the `hetserve lint` subcommand (CI gate) and
+//! [`run_lint`] (used by the `pallas_lint` integration test).
+
+pub mod baseline;
+pub mod diag;
+pub mod lexer;
+pub mod rules;
+pub mod zones;
+
+use baseline::{ratchet, Baseline, RatchetOutcome};
+use diag::{Diagnostic, RuleId, ALL_RULES};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Options for one lint run.
+#[derive(Debug, Default)]
+pub struct LintOptions {
+    /// Rewrite the baseline to the current violation counts (ratchetable
+    /// rules only) instead of failing on them.
+    pub update_baseline: bool,
+    /// Print every violation (default prints failures + summary).
+    pub verbose: bool,
+}
+
+/// Result of one lint run over the tree.
+#[derive(Debug)]
+pub struct LintRun {
+    /// Every unsuppressed violation, including baseline-frozen ones.
+    pub violations: Vec<Diagnostic>,
+    /// Violations silenced by reasoned inline allows.
+    pub suppressed: u64,
+    /// Non-fatal notes (unused allows).
+    pub notes: Vec<String>,
+    /// Files scanned.
+    pub files: usize,
+    /// The ratchet diff against the committed baseline.
+    pub outcome: RatchetOutcome,
+    /// Human-readable report.
+    pub report: String,
+    /// `true` when new (non-frozen) violations exist — the CI gate.
+    pub failed: bool,
+}
+
+/// Lint `src_root` against the baseline at `baseline_path`.
+///
+/// With `update_baseline`, the baseline file is rewritten to the current
+/// counts (never recording zero-tolerance rules) and the run only fails on
+/// zero-tolerance violations.
+pub fn run_lint(
+    src_root: &Path,
+    baseline_path: &Path,
+    opts: &LintOptions,
+) -> anyhow::Result<LintRun> {
+    let files = collect_rs_files(src_root)?;
+    if files.is_empty() {
+        anyhow::bail!("no .rs files under {} — wrong --root?", src_root.display());
+    }
+
+    let mut violations = Vec::new();
+    let mut suppressed = 0u64;
+    let mut notes = Vec::new();
+    for path in &files {
+        let rel = rel_key(src_root, path);
+        let source = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let scan = lexer::FileScan::scan(&source);
+        let res = rules::check_file(&rel, zones::classify(&rel), &scan);
+        violations.extend(res.violations);
+        suppressed += res.suppressed as u64;
+        notes.extend(res.notes);
+    }
+
+    let base = if baseline_path.exists() {
+        let text = std::fs::read_to_string(baseline_path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", baseline_path.display()))?;
+        Baseline::parse(&text)?
+    } else {
+        Baseline::empty()
+    };
+
+    if opts.update_baseline {
+        let fresh = Baseline::from_violations(&violations);
+        std::fs::write(baseline_path, fresh.to_json_string())
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", baseline_path.display()))?;
+        let outcome = ratchet(&violations, &fresh);
+        let failed = !outcome.failures.is_empty();
+        let report = render(
+            &violations,
+            suppressed,
+            &notes,
+            files.len(),
+            &outcome,
+            opts,
+            Some(baseline_path),
+        );
+        return Ok(LintRun {
+            violations,
+            suppressed,
+            notes,
+            files: files.len(),
+            outcome,
+            report,
+            failed,
+        });
+    }
+
+    let outcome = ratchet(&violations, &base);
+    let failed = !outcome.failures.is_empty();
+    let report = render(
+        &violations,
+        suppressed,
+        &notes,
+        files.len(),
+        &outcome,
+        opts,
+        None,
+    );
+    Ok(LintRun {
+        violations,
+        suppressed,
+        notes,
+        files: files.len(),
+        outcome,
+        report,
+        failed,
+    })
+}
+
+/// All `.rs` files under `root`, depth-first, name-sorted at every level so
+/// diagnostics and baselines are ordered deterministically on any platform.
+fn collect_rs_files(root: &Path) -> anyhow::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .map_err(|e| anyhow::anyhow!("read dir {}: {e}", dir.display()))?
+            .map(|e| e.map(|e| e.path()))
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("read dir {}: {e}", dir.display()))?;
+        entries.sort();
+        // Depth-first via the stack: push dirs reversed so pop order is
+        // name-ascending.
+        for entry in entries.iter().rev() {
+            if entry.is_dir() {
+                stack.push(entry.clone());
+            }
+        }
+        for entry in entries {
+            if entry.is_file() && entry.extension().is_some_and(|e| e == "rs") {
+                out.push(entry);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn rel_key(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[allow(clippy::too_many_arguments)]
+fn render(
+    violations: &[Diagnostic],
+    suppressed: u64,
+    notes: &[String],
+    files: usize,
+    outcome: &RatchetOutcome,
+    opts: &LintOptions,
+    updated: Option<&Path>,
+) -> String {
+    let mut s = String::new();
+
+    for g in &outcome.failures {
+        let _ = writeln!(
+            s,
+            "FAIL {} in {}: {} found, {} frozen in baseline — new violation(s):",
+            g.rule, g.file, g.found, g.allowed
+        );
+        for d in &g.diags {
+            let _ = writeln!(s, "{}", d.render());
+        }
+    }
+    if opts.verbose {
+        let failing: Vec<&Diagnostic> = outcome
+            .failures
+            .iter()
+            .flat_map(|g| g.diags.iter())
+            .collect();
+        for d in violations {
+            if !failing
+                .iter()
+                .any(|f| f.file == d.file && f.line == d.line && f.rule == d.rule)
+            {
+                let _ = writeln!(s, "frozen: {}", d.render());
+            }
+        }
+    }
+    for n in notes {
+        let _ = writeln!(s, "note: {n}");
+    }
+    for (rule, file, from, to) in &outcome.shrink {
+        let _ = writeln!(
+            s,
+            "ratchet: {rule} in {file} improved {from} -> {to}; run `lint --update-baseline` to lock it in"
+        );
+    }
+
+    let mut per_rule: BTreeMap<&str, u64> = BTreeMap::new();
+    for d in violations {
+        *per_rule.entry(d.rule.as_str()).or_insert(0) += 1;
+    }
+    let counts = ALL_RULES
+        .iter()
+        .map(|r| format!("{}={}", r, per_rule.get(r.as_str()).copied().unwrap_or(0)))
+        .collect::<Vec<_>>()
+        .join(" ");
+    let _ = writeln!(
+        s,
+        "pallas-lint: {files} files, {} violation(s) ({} frozen by baseline, {} new), {suppressed} allowed inline [{counts}]",
+        violations.len(),
+        outcome.frozen,
+        violations.len() as u64 - outcome.frozen,
+    );
+    if let Some(p) = updated {
+        let _ = writeln!(s, "baseline updated: {}", p.display());
+    } else if !outcome.shrink.is_empty() {
+        let _ = writeln!(s, "baseline can shrink: {} entr(ies) improved", outcome.shrink.len());
+    }
+    if outcome.failures.is_empty() {
+        let _ = writeln!(s, "pallas-lint: OK");
+    } else {
+        let new: u64 = outcome
+            .failures
+            .iter()
+            .map(|g| g.found - g.allowed)
+            .sum();
+        let _ = writeln!(s, "pallas-lint: FAILED — {new} new violation(s)");
+    }
+    s
+}
+
+/// Count current violations of one rule (used by tests asserting the
+/// ratchet direction).
+pub fn count_rule(run: &LintRun, rule: RuleId) -> u64 {
+    run.violations.iter().filter(|d| d.rule == rule).count() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end over a synthetic tree: write fixture files, lint, check
+    /// ratchet + update flows.
+    #[test]
+    fn lint_tree_end_to_end() {
+        let dir = std::env::temp_dir().join(format!("pallas_lint_e2e_{}", std::process::id()));
+        let src = dir.join("src");
+        std::fs::create_dir_all(src.join("milp")).expect("create fixture tree");
+        std::fs::create_dir_all(src.join("sched")).expect("create fixture tree");
+
+        // Deterministic-zone file with one D001 and one allowed D002.
+        std::fs::write(
+            src.join("milp/bounds.rs"),
+            "use std::collections::HashMap;\n\
+             // pallas-lint: allow(D002, deadline only; never in result bits)\n\
+             fn f() { let t = Instant::now(); }\n",
+        )
+        .expect("write fixture");
+        // General file with two P001s.
+        std::fs::write(
+            src.join("sched/mod.rs"),
+            "fn a(x: Option<u32>) -> u32 { x.unwrap() }\n\
+             fn b() { panic!(\"boom\"); }\n",
+        )
+        .expect("write fixture");
+
+        let baseline = dir.join("baseline.json");
+        let opts = LintOptions::default();
+
+        // First run, no baseline: D001 fails (zero-tolerance) and P001
+        // fails (no frozen debt yet).
+        let run = run_lint(&src, &baseline, &opts).expect("lint runs");
+        assert!(run.failed);
+        assert_eq!(count_rule(&run, RuleId::D001), 1);
+        assert_eq!(count_rule(&run, RuleId::P001), 2);
+        assert_eq!(run.suppressed, 1, "the D002 allow counts as suppressed");
+
+        // Update the baseline: P001 debt frozen, D001 still fails.
+        let upd = LintOptions {
+            update_baseline: true,
+            ..Default::default()
+        };
+        let run = run_lint(&src, &baseline, &upd).expect("lint runs");
+        assert!(run.failed, "zero-tolerance D001 must fail even on update");
+        let text = std::fs::read_to_string(&baseline).expect("baseline written");
+        assert!(text.contains("P001"));
+        assert!(!text.contains("D001"), "D-rule must not be baselined: {text}");
+
+        // Fix the D001; now the run passes against the frozen P001 debt.
+        std::fs::write(
+            src.join("milp/bounds.rs"),
+            "use std::collections::BTreeMap;\n\
+             // pallas-lint: allow(D002, deadline only; never in result bits)\n\
+             fn f() { let t = Instant::now(); }\n",
+        )
+        .expect("write fixture");
+        let run = run_lint(&src, &baseline, &opts).expect("lint runs");
+        assert!(!run.failed, "report:\n{}", run.report);
+        assert_eq!(run.outcome.frozen, 2);
+
+        // Remove one P001: passes and offers a shrink.
+        std::fs::write(
+            src.join("sched/mod.rs"),
+            "fn a(x: Option<u32>) -> u32 { x.expect(\"invariant: caller checked\") }\n\
+             fn b() { panic!(\"boom\"); }\n",
+        )
+        .expect("write fixture");
+        let run = run_lint(&src, &baseline, &opts).expect("lint runs");
+        assert!(!run.failed);
+        assert_eq!(run.outcome.shrink.len(), 1);
+        let run = run_lint(&src, &baseline, &upd).expect("baseline shrinks");
+        assert!(!run.failed);
+        let text = std::fs::read_to_string(&baseline).expect("baseline present");
+        let re = Baseline::parse(&text).expect("baseline parses");
+        assert_eq!(re.total(RuleId::P001), 1, "ratchet shrank: {text}");
+
+        // A brand-new P001 beyond the frozen count fails.
+        std::fs::write(
+            src.join("sched/mod.rs"),
+            "fn a(x: Option<u32>) -> u32 { x.unwrap() }\n\
+             fn b() { panic!(\"boom\"); }\n",
+        )
+        .expect("write fixture");
+        let run = run_lint(&src, &baseline, &opts).expect("lint runs");
+        assert!(run.failed, "new P001 beyond frozen debt must fail");
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,686 @@
+//! The `pallas-lint` rules and the per-file rule engine.
+//!
+//! Every rule works on the masked token stream from [`super::lexer`], so
+//! string literals and comments can never false-positive. Test regions
+//! (`#[cfg(test)]`, `#[test]`) are exempt from all rules — tests assert
+//! bit-identity with exact float `==`, unwrap freely, and use `HashSet`
+//! for order-insensitive membership checks.
+//!
+//! ## Suppression
+//!
+//! `// pallas-lint: allow(RULE, reason)` suppresses RULE on the same line
+//! when the comment trails code, or on the next code line when the comment
+//! stands alone. The reason is mandatory: an allow without one is itself a
+//! violation (`L001`). Unused allows are reported as notes so stale
+//! suppressions get cleaned up.
+//!
+//! ## Rule catalog (IDs are stable; see `analysis/README.md`)
+//!
+//! * **D001** — `HashMap`/`HashSet`/`RandomState` in a deterministic zone.
+//!   Hash iteration order is seeded per-process; one stray iteration breaks
+//!   the bit-identical claims. Use `BTreeMap`/`BTreeSet`/`Vec`.
+//! * **D002** — `Instant::now` / `SystemTime` / `thread::current` in a
+//!   deterministic zone. Wall-clock deadline reads are *intentional* in the
+//!   planner (they feed the degradation ladder, not the plan bits) and
+//!   carry documented allows.
+//! * **D003** — entropy-seeded RNG construction (`thread_rng`,
+//!   `from_entropy`, `OsRng`, `getrandom`) anywhere outside `util::rng`.
+//!   All randomness flows from explicit `Xoshiro256` seeds.
+//! * **A001** — `Ordering::Relaxed`/`Acquire`/`Release`/`AcqRel` must carry
+//!   an adjacent `// ordering:` comment justifying why the chosen strength
+//!   suffices. `SeqCst` is exempt (never too weak, only maybe slow).
+//! * **F001** — bare `==`/`!=` against a float literal (or `f64::`/`f32::`
+//!   constant). Exact comparisons of *computed* floats are almost always a
+//!   bug; structural-zero tests in the solver inner loops are the known
+//!   exception and carry allows.
+//! * **P001** — `unwrap()` / `panic!` / `unreachable!` / `todo!` /
+//!   `unimplemented!` in library code. Ratcheted against the baseline, not
+//!   banned: `expect("invariant message")` is the sanctioned replacement,
+//!   and `assert!`/`debug_assert!` are the sanctioned dynamic checks.
+
+use super::diag::{Diagnostic, RuleId};
+use super::lexer::{tokenize, FileScan, TokKind, Token};
+use super::zones::{test_regions, ZoneSet};
+
+/// A parsed `pallas-lint: allow(RULE, reason)` directive.
+#[derive(Debug)]
+struct Directive {
+    rule: RuleId,
+    /// 0-based line the directive suppresses.
+    target: usize,
+    /// 0-based line the directive was written on (for unused-allow notes).
+    at: usize,
+    used: bool,
+}
+
+/// Result of linting one file.
+#[derive(Debug, Default)]
+pub struct FileResult {
+    /// Unsuppressed violations.
+    pub violations: Vec<Diagnostic>,
+    /// Count of violations silenced by a reasoned allow.
+    pub suppressed: usize,
+    /// Non-fatal observations (unused allows).
+    pub notes: Vec<String>,
+}
+
+/// Lint one file: scan → tokenize → apply every rule → apply suppressions.
+pub fn check_file(rel_path: &str, zone: ZoneSet, scan: &FileScan) -> FileResult {
+    let toks = tokenize(scan);
+    let is_test = test_regions(scan);
+    let (mut directives, mut diags) = parse_directives(rel_path, zone, scan);
+
+    let ctx = Ctx {
+        rel_path,
+        zone,
+        scan,
+        toks: &toks,
+        is_test: &is_test,
+    };
+    rule_d001(&ctx, &mut diags);
+    rule_d002(&ctx, &mut diags);
+    rule_d003(&ctx, &mut diags);
+    rule_a001(&ctx, &mut diags);
+    rule_f001(&ctx, &mut diags);
+    rule_p001(&ctx, &mut diags);
+
+    // Suppression pass: a directive silences matching-rule diagnostics on
+    // its target line. L001 (malformed directive) is never suppressible.
+    let mut out = FileResult::default();
+    for d in diags {
+        let hit = d.rule != RuleId::L001
+            && directives
+                .iter_mut()
+                .find(|dir| dir.rule == d.rule && dir.target == d.line - 1)
+                .map(|dir| dir.used = true)
+                .is_some();
+        if hit {
+            out.suppressed += 1;
+        } else {
+            out.violations.push(d);
+        }
+    }
+    for dir in &directives {
+        if !dir.used {
+            out.notes.push(format!(
+                "{}:{}: unused allow({}) — no matching violation on its target line; remove it",
+                rel_path,
+                dir.at + 1,
+                dir.rule
+            ));
+        }
+    }
+    out.violations
+        .sort_by(|a, b| (a.line, a.col).cmp(&(b.line, b.col)));
+    out
+}
+
+struct Ctx<'a> {
+    rel_path: &'a str,
+    zone: ZoneSet,
+    scan: &'a FileScan,
+    toks: &'a [Token],
+    is_test: &'a [bool],
+}
+
+impl<'a> Ctx<'a> {
+    fn live(&self, t: &Token) -> bool {
+        !self.is_test.get(t.line).copied().unwrap_or(false)
+    }
+
+    fn diag(&self, rule: RuleId, t: &Token, message: String) -> Diagnostic {
+        Diagnostic {
+            rule,
+            file: self.rel_path.to_string(),
+            line: t.line + 1,
+            col: t.col,
+            len: t.len,
+            message,
+            line_text: self.scan.lines[t.line].clone(),
+            zone: self.zone,
+        }
+    }
+
+    /// `true` when a comment containing `needle` sits on the token's line
+    /// or within `above` lines directly above it.
+    fn comment_near(&self, line: usize, above: usize, needle: &str) -> bool {
+        let lo = line.saturating_sub(above);
+        (lo..=line).any(|l| self.scan.comments[l].contains(needle))
+    }
+}
+
+// ---- directives ----------------------------------------------------------
+
+fn parse_directives(
+    rel_path: &str,
+    zone: ZoneSet,
+    scan: &FileScan,
+) -> (Vec<Directive>, Vec<Diagnostic>) {
+    let mut dirs = Vec::new();
+    let mut diags = Vec::new();
+    for (lineno, comment) in scan.comments.iter().enumerate() {
+        // Doc comments (///, //!, /**, /*!) are documentation *about* the
+        // directive syntax, never directives themselves.
+        let stripped = comment.trim_start();
+        if ["///", "//!", "/**", "/*!"]
+            .iter()
+            .any(|p| stripped.starts_with(p))
+        {
+            continue;
+        }
+        let mut rest = comment.as_str();
+        while let Some(pos) = rest.find("pallas-lint:") {
+            let after = &rest[pos + "pallas-lint:".len()..];
+            let body = after.trim_start();
+            let mut bad = |msg: String| {
+                diags.push(Diagnostic {
+                    rule: RuleId::L001,
+                    file: rel_path.to_string(),
+                    line: lineno + 1,
+                    col: 0,
+                    len: scan.lines[lineno].chars().count(),
+                    message: msg,
+                    line_text: scan.lines[lineno].clone(),
+                    zone,
+                });
+            };
+            if let Some(open) = body.strip_prefix("allow(") {
+                match balanced_paren(open) {
+                    Some(inner) => match inner.split_once(',') {
+                        Some((rule_s, reason)) if !reason.trim().is_empty() => {
+                            match RuleId::parse(rule_s.trim()) {
+                                Some(rule) => dirs.push(Directive {
+                                    rule,
+                                    target: directive_target(scan, lineno),
+                                    at: lineno,
+                                    used: false,
+                                }),
+                                None => bad(format!(
+                                    "allow() names unknown rule '{}'",
+                                    rule_s.trim()
+                                )),
+                            }
+                        }
+                        _ => bad(
+                            "allow(RULE, reason) requires a non-empty reason — say why the \
+                             invariant still holds"
+                                .to_string(),
+                        ),
+                    },
+                    None => bad("unterminated allow( directive".to_string()),
+                }
+            } else {
+                bad(format!(
+                    "unrecognised pallas-lint directive '{}' (expected allow(RULE, reason))",
+                    body.split_whitespace().next().unwrap_or("")
+                ));
+            }
+            rest = after;
+        }
+    }
+    (dirs, diags)
+}
+
+/// Content up to the `)` matching the already-consumed `(`.
+fn balanced_paren(s: &str) -> Option<&str> {
+    let mut depth = 1usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&s[..i]);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// The line a directive suppresses: its own line when the comment trails
+/// code, otherwise the next line that carries code.
+fn directive_target(scan: &FileScan, lineno: usize) -> usize {
+    if !scan.masked[lineno].trim().is_empty() {
+        return lineno;
+    }
+    for l in lineno + 1..scan.masked.len() {
+        if !scan.masked[l].trim().is_empty() {
+            return l;
+        }
+    }
+    lineno
+}
+
+// ---- D001: hash collections in deterministic zones -----------------------
+
+fn rule_d001(ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    if !ctx.zone.deterministic {
+        return;
+    }
+    for t in ctx.toks {
+        let Some(id) = t.ident() else { continue };
+        if !ctx.live(t) {
+            continue;
+        }
+        if matches!(id, "HashMap" | "HashSet" | "RandomState" | "hash_map" | "hash_set") {
+            out.push(ctx.diag(
+                RuleId::D001,
+                t,
+                format!(
+                    "`{id}` in the deterministic zone: hash iteration order is \
+                     seeded per-process and breaks bit-identical replay — use \
+                     BTreeMap/BTreeSet/Vec, or allow with a reason"
+                ),
+            ));
+        }
+    }
+}
+
+// ---- D002: wall-clock / thread identity in deterministic zones -----------
+
+fn rule_d002(ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    if !ctx.zone.deterministic {
+        return;
+    }
+    let toks = ctx.toks;
+    for (i, t) in toks.iter().enumerate() {
+        let Some(id) = t.ident() else { continue };
+        if !ctx.live(t) {
+            continue;
+        }
+        let flagged = match id {
+            "Instant" => path_call(toks, i, "now"),
+            "SystemTime" => true,
+            "thread" => path_call(toks, i, "current"),
+            _ => false,
+        };
+        if flagged {
+            out.push(ctx.diag(
+                RuleId::D002,
+                t,
+                format!(
+                    "`{id}` read in the deterministic zone: wall-clock and thread \
+                     identity vary run to run — thread results through explicit \
+                     simulated time, or allow with a reason if the read only \
+                     feeds a deadline/telemetry (never the result bits)"
+                ),
+            ));
+        }
+    }
+}
+
+/// `toks[i]` is an ident; true when followed by `:: member`.
+fn path_call(toks: &[Token], i: usize, member: &str) -> bool {
+    toks.get(i + 1).is_some_and(|t| t.is_punct("::"))
+        && toks.get(i + 2).and_then(|t| t.ident()) == Some(member)
+}
+
+// ---- D003: entropy-seeded RNG outside util::rng --------------------------
+
+fn rule_d003(ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    if ctx.rel_path == "util/rng.rs" {
+        return;
+    }
+    for t in ctx.toks {
+        let Some(id) = t.ident() else { continue };
+        if !ctx.live(t) {
+            continue;
+        }
+        if matches!(
+            id,
+            "thread_rng" | "ThreadRng" | "from_entropy" | "OsRng" | "getrandom" | "EntropyRng"
+        ) {
+            out.push(ctx.diag(
+                RuleId::D003,
+                t,
+                format!(
+                    "`{id}`: entropy-seeded RNG construction outside util::rng — \
+                     every random stream must flow from an explicit Xoshiro256 \
+                     seed so runs are replayable"
+                ),
+            ));
+        }
+    }
+}
+
+// ---- A001: atomic orderings need a `// ordering:` justification ----------
+
+fn rule_a001(ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    let toks = ctx.toks;
+    for (i, t) in toks.iter().enumerate() {
+        let Some(id) = t.ident() else { continue };
+        if !matches!(id, "Relaxed" | "Acquire" | "Release" | "AcqRel") {
+            continue;
+        }
+        if i == 0 || !toks[i - 1].is_punct("::") || !ctx.live(t) {
+            continue;
+        }
+        // `cmp::Ordering` has no variants by these names, so `::Relaxed`
+        // etc. is an atomic ordering regardless of the path prefix
+        // (`Ordering::`, `AtomicOrd::`, `atomic::Ordering::`).
+        if !ctx.comment_near(t.line, 3, "ordering:") {
+            out.push(ctx.diag(
+                RuleId::A001,
+                t,
+                format!(
+                    "`::{id}` without an adjacent `// ordering:` comment — state \
+                     why this strength suffices (what synchronises the access, \
+                     or why no synchronisation is needed)"
+                ),
+            ));
+        }
+    }
+}
+
+// ---- F001: bare float comparisons ----------------------------------------
+
+fn rule_f001(ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    let toks = ctx.toks;
+    for (i, t) in toks.iter().enumerate() {
+        let TokKind::Punct(op) = &t.kind else { continue };
+        if op != "==" && op != "!=" {
+            continue;
+        }
+        if !ctx.live(t) {
+            continue;
+        }
+        let lhs_float = i > 0 && (toks[i - 1].is_float() || float_const_before(toks, i));
+        let rhs_float = toks.get(i + 1).map(|n| n.is_float()).unwrap_or(false)
+            || float_const_after(toks, i)
+            // `x == -1.5`: the literal hides behind a unary minus.
+            || (toks.get(i + 1).map(|n| n.is_punct("-")).unwrap_or(false)
+                && toks.get(i + 2).map(|n| n.is_float()).unwrap_or(false));
+        if lhs_float || rhs_float {
+            out.push(ctx.diag(
+                RuleId::F001,
+                t,
+                format!(
+                    "bare `{op}` against a float literal — computed floats carry \
+                     rounding error; compare with a tolerance helper, or allow \
+                     with a reason when the value is exact by construction"
+                ),
+            ));
+        }
+    }
+}
+
+const FLOAT_CONSTS: &[&str] = &[
+    "INFINITY",
+    "NEG_INFINITY",
+    "NAN",
+    "MAX",
+    "MIN",
+    "EPSILON",
+    "MIN_POSITIVE",
+];
+
+/// `... f64::CONST ==` — constant path ends right before the operator.
+fn float_const_before(toks: &[Token], op: usize) -> bool {
+    op >= 3
+        && toks[op - 1]
+            .ident()
+            .is_some_and(|id| FLOAT_CONSTS.contains(&id))
+        && toks[op - 2].is_punct("::")
+        && matches!(toks[op - 3].ident(), Some("f32") | Some("f64"))
+}
+
+/// `== f64::CONST ...`.
+fn float_const_after(toks: &[Token], op: usize) -> bool {
+    matches!(
+        toks.get(op + 1).and_then(|t| t.ident()),
+        Some("f32") | Some("f64")
+    ) && toks.get(op + 2).is_some_and(|t| t.is_punct("::"))
+        && toks
+            .get(op + 3)
+            .and_then(|t| t.ident())
+            .is_some_and(|id| FLOAT_CONSTS.contains(&id))
+}
+
+// ---- P001: panic paths in library code -----------------------------------
+
+fn rule_p001(ctx: &Ctx, out: &mut Vec<Diagnostic>) {
+    let toks = ctx.toks;
+    for (i, t) in toks.iter().enumerate() {
+        let Some(id) = t.ident() else { continue };
+        if !ctx.live(t) {
+            continue;
+        }
+        let flagged = match id {
+            // `.unwrap()` — method position only, so local fns named
+            // `unwrap_*` don't trip.
+            "unwrap" => {
+                i > 0
+                    && toks[i - 1].is_punct(".")
+                    && toks.get(i + 1).is_some_and(|n| n.is_punct("("))
+            }
+            "panic" | "unreachable" | "todo" | "unimplemented" => {
+                toks.get(i + 1).is_some_and(|n| n.is_punct("!"))
+            }
+            _ => false,
+        };
+        if flagged {
+            out.push(ctx.diag(
+                RuleId::P001,
+                t,
+                format!(
+                    "`{id}` panic-path in library code — propagate with `?`/anyhow \
+                     or use `expect(\"invariant: ...\")` naming what guarantees \
+                     success (ratcheted against analysis/baseline.json)"
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::zones::classify;
+
+    fn lint(rel: &str, src: &str) -> FileResult {
+        check_file(rel, classify(rel), &FileScan::scan(src))
+    }
+
+    fn rules_of(r: &FileResult) -> Vec<&'static str> {
+        r.violations.iter().map(|d| d.rule.as_str()).collect()
+    }
+
+    // ---- D001 ----
+
+    #[test]
+    fn d001_positive_in_deterministic_zone() {
+        let r = lint("sim/engine.rs", "use std::collections::HashMap;\n");
+        assert_eq!(rules_of(&r), vec!["D001"]);
+        assert_eq!(r.violations[0].line, 1);
+        assert!(r.violations[0].message.contains("bit-identical"));
+    }
+
+    #[test]
+    fn d001_negative_outside_zone() {
+        let r = lint("telemetry/mod.rs", "use std::collections::HashMap;\n");
+        assert!(rules_of(&r).is_empty());
+    }
+
+    #[test]
+    fn d001_string_and_comment_traps() {
+        let src = "let s = \"HashMap\"; // HashMap in a comment\n/* HashSet */\n";
+        let r = lint("milp/bounds.rs", src);
+        assert!(rules_of(&r).is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn d001_suppressed_with_reason() {
+        let src = "// pallas-lint: allow(D001, keys are sorted before iteration)\n\
+                   use std::collections::HashMap;\n";
+        let r = lint("milp/bounds.rs", src);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.suppressed, 1);
+        assert!(r.notes.is_empty(), "allow was used: {:?}", r.notes);
+    }
+
+    #[test]
+    fn d001_exempt_in_tests() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashSet;\n}\n";
+        let r = lint("util/rng.rs", src);
+        assert!(rules_of(&r).is_empty());
+    }
+
+    // ---- D002 ----
+
+    #[test]
+    fn d002_instant_now_positive() {
+        let r = lint("sim/timeline.rs", "let t = Instant::now();\n");
+        assert_eq!(rules_of(&r), vec!["D002"]);
+    }
+
+    #[test]
+    fn d002_instant_param_is_fine() {
+        // Accepting an Instant that the caller measured is not a read.
+        let r = lint("milp/branch_bound.rs", "fn f(start: Instant) -> bool { true }\n");
+        assert!(rules_of(&r).is_empty());
+    }
+
+    #[test]
+    fn d002_thread_current_positive() {
+        let r = lint("sim/engine.rs", "let id = thread::current().id();\n");
+        assert_eq!(rules_of(&r), vec!["D002"]);
+    }
+
+    #[test]
+    fn d002_trailing_allow_same_line() {
+        let src = "let t = Instant::now(); // pallas-lint: allow(D002, deadline only)\n";
+        let r = lint("milp/branch_bound.rs", src);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.suppressed, 1);
+    }
+
+    // ---- D003 ----
+
+    #[test]
+    fn d003_everywhere_except_rng() {
+        let r = lint("workload/synth.rs", "let r = thread_rng();\n");
+        assert_eq!(rules_of(&r), vec!["D003"]);
+        let ok = lint("util/rng.rs", "fn from_entropy() {}\n");
+        assert!(rules_of(&ok).is_empty());
+    }
+
+    // ---- A001 ----
+
+    #[test]
+    fn a001_unjustified_relaxed() {
+        let r = lint("telemetry/mod.rs", "x.load(Ordering::Relaxed);\n");
+        assert_eq!(rules_of(&r), vec!["A001"]);
+    }
+
+    #[test]
+    fn a001_justified_same_line_and_above() {
+        let src = "x.load(Ordering::Relaxed); // ordering: monotonic counter, no sync\n\
+                   // ordering: flag is advisory; readers tolerate staleness\n\
+                   y.store(1, Ordering::Release);\n";
+        let r = lint("telemetry/mod.rs", src);
+        assert!(rules_of(&r).is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn a001_seqcst_exempt_and_cmp_ordering_ignored() {
+        let src = "x.load(Ordering::SeqCst);\nlet e = cmp::Ordering::Equal;\n";
+        let r = lint("util/threadpool.rs", src);
+        assert!(rules_of(&r).is_empty());
+    }
+
+    #[test]
+    fn a001_alias_path_still_caught() {
+        let r = lint("milp/branch_bound.rs", "x.fetch_min(k, AtomicOrd::Relaxed);\n");
+        assert_eq!(rules_of(&r), vec!["A001"]);
+    }
+
+    // ---- F001 ----
+
+    #[test]
+    fn f001_literal_both_sides() {
+        let r = lint("sched/formulation.rs", "if x == 0.5 { }\nif 1.0 != y { }\n");
+        assert_eq!(rules_of(&r), vec!["F001", "F001"]);
+    }
+
+    #[test]
+    fn f001_float_const_path() {
+        let r = lint("sched/formulation.rs", "if x == f64::INFINITY { }\n");
+        assert_eq!(rules_of(&r), vec!["F001"]);
+    }
+
+    #[test]
+    fn f001_integer_compare_is_fine() {
+        let r = lint("sched/formulation.rs", "if n == 3 { }\nif m != 0x1E { }\n");
+        assert!(rules_of(&r).is_empty());
+    }
+
+    #[test]
+    fn f001_exempt_in_tests() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { assert!(x == 1.5); }\n}\n";
+        let r = lint("sched/formulation.rs", src);
+        assert!(rules_of(&r).is_empty());
+    }
+
+    // ---- P001 ----
+
+    #[test]
+    fn p001_unwrap_and_macros() {
+        let src = "let v = x.unwrap();\npanic!(\"boom\");\nunreachable!();\n";
+        let r = lint("sched/planner.rs", src);
+        assert_eq!(rules_of(&r), vec!["P001", "P001", "P001"]);
+    }
+
+    #[test]
+    fn p001_expect_and_asserts_sanctioned() {
+        let src = "let v = x.expect(\"invariant: basis dims checked above\");\n\
+                   assert!(ok);\ndebug_assert!(residual < tol);\n";
+        let r = lint("sched/planner.rs", src);
+        assert!(rules_of(&r).is_empty());
+    }
+
+    #[test]
+    fn p001_local_fn_named_unwrap_not_flagged() {
+        let r = lint(
+            "sched/planner.rs",
+            "fn unwrap_or_cached(x: u32) {}\nlet y = unwrap_helper();\n",
+        );
+        assert!(rules_of(&r).is_empty());
+    }
+
+    // ---- directives / L001 ----
+
+    #[test]
+    fn l001_missing_reason() {
+        let r = lint(
+            "sim/engine.rs",
+            "// pallas-lint: allow(D001)\nuse std::collections::HashMap;\n",
+        );
+        let ids = rules_of(&r);
+        assert!(ids.contains(&"L001"), "{ids:?}");
+        assert!(ids.contains(&"D001"), "bad allow must not suppress: {ids:?}");
+    }
+
+    #[test]
+    fn l001_unknown_rule() {
+        let r = lint("sim/engine.rs", "// pallas-lint: allow(D999, whatever)\n");
+        assert_eq!(rules_of(&r), vec!["L001"]);
+    }
+
+    #[test]
+    fn unused_allow_noted() {
+        let r = lint("sim/engine.rs", "// pallas-lint: allow(D001, stale)\nlet x = 1;\n");
+        assert!(r.violations.is_empty());
+        assert_eq!(r.notes.len(), 1);
+        assert!(r.notes[0].contains("unused allow(D001)"));
+    }
+
+    #[test]
+    fn allow_wrong_rule_does_not_suppress() {
+        let src = "// pallas-lint: allow(D002, wrong rule)\nuse std::collections::HashMap;\n";
+        let r = lint("sim/engine.rs", src);
+        assert_eq!(rules_of(&r), vec!["D001"]);
+        assert_eq!(r.notes.len(), 1, "the D002 allow is unused");
+    }
+}

@@ -1,0 +1,198 @@
+//! Zone classification: which invariants each file must uphold.
+//!
+//! The analyzer's zone map is *path-based* — a file's location in
+//! `rust/src` decides which rule families apply to it:
+//!
+//! * **Deterministic zone** — code whose observable behaviour must be a
+//!   pure function of its explicit seeds and inputs, because the repo's
+//!   headline claims (bit-identical parallel B&B, bit-identical sharded
+//!   simulation at any thread count, replayable fault plans) rest on it.
+//!   D-rules (`D001`–`D003`) apply here.
+//! * **Hot zone** — pivot/decode inner loops where per-iteration costs are
+//!   budgeted. Currently informational: diagnostics are tagged with the
+//!   zone so reviewers see when a finding sits on a hot path; dedicated
+//!   H-rules can hang off this classification later.
+//! * **General** — everything else; only the global rules (`A001`, `F001`,
+//!   `P001`, `D003`) apply.
+//!
+//! Test regions (`#[cfg(test)]` items and `#[test]` functions) are exempt
+//! from every rule: tests deliberately use exact float equality for
+//! bit-identity assertions, unwrap freely, and may use `HashSet` for
+//! order-insensitive checks.
+
+use super::lexer::FileScan;
+
+/// Zone membership of one file (a file can be both deterministic and hot:
+/// `sim/engine.rs` is the sharded decode loop *and* a determinism claim).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ZoneSet {
+    pub deterministic: bool,
+    pub hot: bool,
+}
+
+impl ZoneSet {
+    pub fn label(&self) -> &'static str {
+        match (self.deterministic, self.hot) {
+            (true, true) => "deterministic+hot",
+            (true, false) => "deterministic",
+            (false, true) => "hot",
+            (false, false) => "general",
+        }
+    }
+}
+
+/// Files (relative to `rust/src`, `/`-separated) in the deterministic zone.
+///
+/// A trailing `/` entry claims the whole directory. This list is the one
+/// place the zone map lives; `analysis/README.md` documents the rationale
+/// per entry.
+const DETERMINISTIC: &[&str] = &[
+    "milp/",
+    "sim/engine.rs",
+    "sim/timeline.rs",
+    "workload/stream.rs",
+    "workload/drift.rs",
+    "cloud/faults.rs",
+    "util/rng.rs",
+    "sched/binary_search.rs",
+];
+
+/// Pivot/decode inner-loop files (see module docs).
+const HOT: &[&str] = &[
+    "milp/bounds.rs",
+    "milp/factor.rs",
+    "milp/dense.rs",
+    "sim/engine.rs",
+];
+
+fn matches_any(rel: &str, entries: &[&str]) -> bool {
+    entries.iter().any(|e| {
+        if let Some(dir) = e.strip_suffix('/') {
+            rel.starts_with(dir) && rel.as_bytes().get(dir.len()) == Some(&b'/')
+        } else {
+            rel == *e
+        }
+    })
+}
+
+/// Classify a file by its path relative to the `rust/src` root.
+pub fn classify(rel_path: &str) -> ZoneSet {
+    ZoneSet {
+        deterministic: matches_any(rel_path, DETERMINISTIC),
+        hot: matches_any(rel_path, HOT),
+    }
+}
+
+/// Per-line test-region map: `true` for lines belonging to a `#[cfg(test)]`
+/// item (conventionally `mod tests { ... }`) or a `#[test]` function.
+///
+/// Works on masked text, so braces inside strings/comments cannot desync
+/// the depth tracking. An attributed item extends to the matching `}` of
+/// its first top-level `{`, or to the first top-level `;` for brace-less
+/// items (`#[cfg(test)] use ...;`).
+pub fn test_regions(scan: &FileScan) -> Vec<bool> {
+    let n = scan.masked.len();
+    let mut is_test = vec![false; n];
+    let mut line = 0usize;
+    while line < n {
+        let code = scan.masked[line].trim();
+        if code.starts_with("#[cfg(test)]") || code.starts_with("#[test]") {
+            let end = item_end(scan, line);
+            for l in line..=end.min(n - 1) {
+                is_test[l] = true;
+            }
+            line = end + 1;
+        } else {
+            line += 1;
+        }
+    }
+    is_test
+}
+
+/// Last line (0-based) of the item starting at `start` (the attribute
+/// line). Scans forward tracking brace depth on masked text.
+fn item_end(scan: &FileScan, start: usize) -> usize {
+    let mut depth = 0i64;
+    let mut seen_brace = false;
+    for (off, masked) in scan.masked[start..].iter().enumerate() {
+        for ch in masked.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    seen_brace = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if seen_brace && depth == 0 {
+                        return start + off;
+                    }
+                }
+                ';' if !seen_brace && depth == 0 => {
+                    // Brace-less item (`#[cfg(test)] use foo;`) terminated
+                    // by `;` before any block opens.
+                    return start + off;
+                }
+                _ => {}
+            }
+        }
+    }
+    scan.masked.len().saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zone_map_paths() {
+        assert!(classify("milp/bounds.rs").deterministic);
+        assert!(classify("milp/bounds.rs").hot);
+        assert!(classify("milp/branch_bound.rs").deterministic);
+        assert!(!classify("milp/branch_bound.rs").hot);
+        assert!(classify("sim/engine.rs").deterministic);
+        assert!(classify("sim/engine.rs").hot);
+        assert!(classify("sim/timeline.rs").deterministic);
+        assert!(!classify("sim/closed_loop.rs").deterministic);
+        assert!(classify("util/rng.rs").deterministic);
+        assert!(!classify("util/rng_extras.rs").deterministic);
+        assert!(!classify("telemetry/mod.rs").deterministic);
+        assert_eq!(classify("orchestrator/mod.rs").label(), "general");
+        assert_eq!(classify("milp/factor.rs").label(), "deterministic+hot");
+    }
+
+    #[test]
+    fn cfg_test_mod_region() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let scan = FileScan::scan(src);
+        let t = test_regions(&scan);
+        assert_eq!(t, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn test_fn_region() {
+        let src = "#[test]\nfn check() {\n    body();\n}\nfn lib() {}\n";
+        let scan = FileScan::scan(src);
+        let t = test_regions(&scan);
+        assert_eq!(t, vec![true, true, true, true, false]);
+    }
+
+    #[test]
+    fn braceless_cfg_test_item() {
+        let src = "#[cfg(test)]\nuse std::collections::HashSet;\nfn lib() {}\n";
+        let scan = FileScan::scan(src);
+        let t = test_regions(&scan);
+        assert_eq!(t, vec![true, true, false]);
+    }
+
+    #[test]
+    fn braces_in_strings_do_not_desync() {
+        let src = concat!(
+            "#[cfg(test)]\nmod tests {\n    const S: &str = \"}}}\";\n",
+            "    fn t() {}\n}\nfn lib() {}\n"
+        );
+        let scan = FileScan::scan(src);
+        let t = test_regions(&scan);
+        assert!(!t[5], "lib fn after the test mod must not be a test region");
+        assert!(t[2] && t[4]);
+    }
+}

@@ -26,6 +26,11 @@
 //! dent the availability pools (so the planner sees the supply it actually
 //! has), and the whole availability channel is optionally served stale.
 
+// Determinism-zone lint policy (mirrors pallas-lint rules P001/F001):
+// no unwrap() and no bare float ==/!= outside tests; every comparison
+// below either uses a tolerance or carries an audited allow.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::float_cmp))]
+
 use super::{Availability, MarketEventKind, WorldEvent};
 use crate::catalog::GpuType;
 use crate::util::rng::Xoshiro256;
@@ -89,8 +94,10 @@ impl FaultProfile {
     }
 
     /// Override the advance-notice window (the CLI's `--notice-s`).
+    #[allow(clippy::float_cmp)] // audited: structural-zero / sentinel tests, see inline allows
     pub fn with_notice_s(mut self, notice_s: f64) -> Self {
         self.notice_s = notice_s.max(0.0);
+        // pallas-lint: allow(F001, exact 0.0 is the crash-stop sentinel, clamped just above)
         if self.notice_s == 0.0 {
             self.notice_prob = 0.0;
         }
@@ -127,7 +134,9 @@ impl ReplicaFault {
     }
 
     /// Zero-notice crash-stop?
+    #[allow(clippy::float_cmp)] // audited: structural-zero / sentinel tests, see inline allows
     pub fn is_crash(&self) -> bool {
+        // pallas-lint: allow(F001, exact 0.0 is the crash-stop sentinel set by the builder)
         self.notice_s == 0.0
     }
 }

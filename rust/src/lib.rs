@@ -55,6 +55,12 @@
 //!   report merged into command output
 //! * [`runtime`] — PJRT engine: loads AOT HLO artifacts, paged KV cache
 //! * [`coordinator`] — the real serving path: router, batcher, workers
+//! * [`analysis`] — `pallas-lint`, the in-repo invariant analyzer: a
+//!   hand-rolled comment/string-aware Rust scanner + rule engine that
+//!   enforces the determinism-zone, atomic-ordering, and numerical-hygiene
+//!   invariants by construction (D/A/F/P rule families, inline reasoned
+//!   allows, ratcheting `analysis/baseline.json`); runs as the `lint`
+//!   subcommand and as a CI gate (see `src/analysis/README.md`)
 
 // Lint policy: CI runs `cargo clippy --all-targets -- -D warnings`. The
 // numeric kernels (simplex tableau, roofline model, market walks) index
@@ -64,6 +70,7 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::manual_range_contains)]
 
+pub mod analysis;
 pub mod baselines;
 pub mod catalog;
 pub mod cloud;

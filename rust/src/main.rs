@@ -61,6 +61,13 @@ USAGE: hetserve <subcommand> [--options]
   serve       --requests 48 --replicas 2 --router jsq|rr [--arrival-rate RPS]
   profile     --model 70b
   market      --ticks 96 --seed 7
+  lint        [--root rust/src] [--baseline rust/analysis/baseline.json]
+              [--update-baseline] [--lint-verbose]
+              (pallas-lint: the in-repo invariant analyzer — determinism
+               zones, atomic-ordering discipline, numerical hygiene,
+               panic-path ratchet; fails on any violation not frozen in
+               the committed baseline. --update-baseline rewrites the
+               baseline to current counts; D-rules are never baselined.)
 
 Global options:
   --log error|warn|info|debug|trace   set the stderr log level
@@ -71,7 +78,7 @@ Global options:
 ";
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::parse(&["exact", "verbose", "engine"]);
+    let args = Args::parse(&["exact", "verbose", "engine", "update-baseline", "lint-verbose"]);
     if let Some(level) = args.get("log") {
         hetserve::util::logging::set_level_from_str(level)
             .map_err(|e| anyhow::anyhow!("--log: {e}"))?;
@@ -90,6 +97,7 @@ fn main() -> anyhow::Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("profile") => cmd_profile(&args),
         Some("market") => cmd_market(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             print!("{HELP}");
             Ok(())
@@ -704,5 +712,50 @@ fn cmd_market(args: &Args) -> anyhow::Result<()> {
         }
     }
     t.print();
+    Ok(())
+}
+
+/// `pallas-lint`: run the invariant analyzer over `rust/src` and diff the
+/// violations against the committed ratchet baseline. Exits non-zero on
+/// any violation the baseline does not freeze — the CI gate.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    use hetserve::analysis::{run_lint, LintOptions};
+    use std::path::PathBuf;
+
+    // Locate the source tree: honour --root, else probe the two layouts
+    // (invoked from the repo root, or from inside rust/).
+    let root = match args.get("root") {
+        Some(p) => PathBuf::from(p),
+        None => ["rust/src", "src"]
+            .iter()
+            .map(PathBuf::from)
+            .find(|p| p.join("lib.rs").is_file())
+            .ok_or_else(|| {
+                anyhow::anyhow!("cannot locate rust/src (run from the repo root or pass --root)")
+            })?,
+    };
+    let baseline = match args.get("baseline") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            // rust/src -> rust/analysis/baseline.json, next to the tree.
+            let parent = root
+                .parent()
+                .ok_or_else(|| anyhow::anyhow!("--root has no parent directory"))?;
+            parent.join("analysis").join("baseline.json")
+        }
+    };
+    let opts = LintOptions {
+        update_baseline: args.flag("update-baseline"),
+        verbose: args.flag("lint-verbose"),
+    };
+    let run = run_lint(&root, &baseline, &opts)?;
+    print!("{}", run.report);
+    if run.failed {
+        anyhow::bail!(
+            "pallas-lint found new violations (fix them, add a reasoned \
+             `// pallas-lint: allow(RULE, reason)`, or — for ratchetable rules \
+             only — rerun with --update-baseline)"
+        );
+    }
     Ok(())
 }

@@ -38,6 +38,10 @@
 //! eliminated-tableau arena survives as [`super::dense::DenseSimplex`] for
 //! A/B property tests and benchmarks.
 
+// Determinism-zone lint policy (mirrors pallas-lint rule P001): no
+// unwrap() outside tests - use expect("invariant") or propagate.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use super::factor::LuFactors;
 use super::simplex::{Cmp, Lp};
 use crate::telemetry;
@@ -338,6 +342,7 @@ impl BoundedSimplex {
         }
         // The logical-basis fallback is triangular; reaching here would mean
         // it failed to factorize, which cannot happen for finite input.
+        // pallas-lint: allow(P001, the identity basis always factorizes; this documents the invariant)
         unreachable!("logical basis failed to factorize");
     }
 
@@ -403,6 +408,7 @@ impl BoundedSimplex {
         for j in 0..self.total {
             if self.pos[j] == usize::MAX {
                 let v = rest_val(self.lo[j], self.hi[j], self.at_upper[j]);
+                // pallas-lint: allow(F001, structural-zero skip; only an exact 0 contributes nothing)
                 if v != 0.0 {
                     let col = &self.a[j * m..(j + 1) * m];
                     for (x, aij) in self.xb.iter_mut().zip(col) {
@@ -1102,6 +1108,7 @@ impl BoundedSimplex {
         }
         let mut acc = vec![0.0; m];
         for (j, &v) in x.iter().enumerate() {
+            // pallas-lint: allow(F001, structural-zero skip; only an exact 0 contributes nothing)
             if v != 0.0 {
                 let col = &self.a[j * m..(j + 1) * m];
                 for (ai, aij) in acc.iter_mut().zip(col) {

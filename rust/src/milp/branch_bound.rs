@@ -49,6 +49,10 @@
 //! counters and the wave/subtree accounting so callers can see both the
 //! warm path and the parallel path are actually taken.
 
+// Determinism-zone lint policy (mirrors pallas-lint rule P001): no
+// unwrap() outside tests - use expect("invariant") or propagate.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use super::bounds::{BasisSnapshot, BoundedSimplex, SolveOutcome};
 use super::dense::DenseSimplex;
 use super::simplex::Lp;
@@ -753,6 +757,7 @@ struct SubtreeResult {
 
 impl SubtreeJob {
     fn run(self) -> SubtreeResult {
+        // pallas-lint: allow(D002, wall clock feeds per-job time budgets and stats only, never plan bits)
         let start = Instant::now();
         let mut s = Searcher::new(
             &self.lp,
@@ -771,8 +776,10 @@ impl SubtreeJob {
         s.absorb_arena_stats();
         s.stats.elapsed = start.elapsed();
         if s.best_x.is_some() {
+            // ordering: monotone min over ordered-f64 bits; pruning uses the
+            // wave-start snapshot and the master reads after the pool join
             self.incumbent
-                .fetch_min(obj_key(s.best_obj), AtomicOrd::SeqCst);
+                .fetch_min(obj_key(s.best_obj), AtomicOrd::Relaxed);
         }
         let open = s.drain_open();
         SubtreeResult {
@@ -801,6 +808,7 @@ pub fn solve_milp_session(
     seed: Option<&[f64]>,
     root_basis: Option<&BasisSnapshot>,
 ) -> (MilpResult, MilpStats, Option<BasisSnapshot>) {
+    // pallas-lint: allow(D002, wall clock bounds search effort and stamps stats; identical plans at any speed)
     let start = Instant::now();
     let mut tspan = telemetry::span("milp.solve", "milp");
 
@@ -914,10 +922,13 @@ pub fn solve_milp_session(
                     s.push_node(bound, patch);
                 }
             }
-            incumbent.fetch_min(obj_key(s.best_obj.min(opts.cutoff)), AtomicOrd::SeqCst);
-            // Both channels are fed by the same job results; they must agree.
+            // ordering: the pool barrier already ordered every job's
+            // fetch_min before this point; a relaxed RMW loses nothing
+            incumbent.fetch_min(obj_key(s.best_obj.min(opts.cutoff)), AtomicOrd::Relaxed);
+            // Both channels are fed by the same job results; they must
+            // agree. ordering: same-thread read right after the fetch_min.
             debug_assert!(
-                obj_from_key(incumbent.load(AtomicOrd::SeqCst))
+                obj_from_key(incumbent.load(AtomicOrd::Relaxed))
                     >= s.best_obj.min(opts.cutoff) - 1e-12
             );
         }

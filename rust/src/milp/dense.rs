@@ -30,6 +30,11 @@
 //! two-phase cold solve. Two documented cases break the warm invariant
 //! and force a cold fallback; see `set_var_bounds`.
 
+// Determinism-zone lint policy (mirrors pallas-lint rules P001/F001):
+// no unwrap() and no bare float ==/!= outside tests; every comparison
+// below either uses a tolerance or carries an audited allow.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::float_cmp))]
+
 use super::bounds::{BasisSnapshot, SolveOutcome};
 use super::simplex::{Cmp, Lp};
 use crate::telemetry;
@@ -170,6 +175,7 @@ impl DenseSimplex {
     /// Pivot on (pr, pc): normalise the pivot row and eliminate the column
     /// everywhere else, objective row included. The hot loop — scaled row
     /// copy + per-row branchless axpy so LLVM vectorizes it.
+    #[allow(clippy::float_cmp)] // audited: structural-zero / sentinel tests, see inline allows
     fn pivot(&mut self, pr: usize, pc: usize) {
         let cols = self.cols;
         let pivot = self.at(pr, pc);
@@ -186,6 +192,7 @@ impl DenseSimplex {
             }
             let factor = self.at(r, pc);
             if factor.abs() <= EPS {
+                // pallas-lint: allow(F001, flushing tiny nonzeros; an exact 0 needs no store)
                 if factor != 0.0 {
                     self.set(r, pc, 0.0);
                 }
@@ -252,6 +259,7 @@ impl DenseSimplex {
     ///    excluded from the ratio tests, so its reduced cost may have
     ///    drifted negative — complementing is free at range zero and
     ///    restores d ≥ 0, except when it is ruled out by case 1.
+    #[allow(clippy::float_cmp)] // audited: structural-zero / sentinel tests, see inline allows
     pub fn set_var_bounds(&mut self, v: usize, new_lo: f64, new_hi: f64) {
         debug_assert!(v < self.n && new_lo.is_finite() && new_lo <= new_hi + EPS);
         // Case 2: repair a widened fixed column's reduced cost by a free
@@ -281,6 +289,7 @@ impl DenseSimplex {
         let ref_old = if self.flipped[v] { self.var_hi[v] } else { self.var_lo[v] };
         let ref_new = if self.flipped[v] { new_hi } else { new_lo };
         let delta = ref_new - ref_old;
+        // pallas-lint: allow(F001, exact-zero delta means the bound did not move; skip is lossless)
         if delta != 0.0 {
             let rhs = self.total;
             for r in 0..=self.m {

@@ -26,6 +26,11 @@
 //! of the basic variables), BTRAN the reverse. All eta arithmetic happens
 //! in basis-position space.
 
+// Determinism-zone lint policy (mirrors pallas-lint rules P001/F001):
+// no unwrap() and no bare float ==/!= outside tests; every comparison
+// below either uses a tolerance or carries an audited allow.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::float_cmp))]
+
 /// Pivot magnitudes below this during elimination mean the basis column is
 /// linearly dependent on its predecessors (the owner repairs the basis).
 const SING_EPS: f64 = 1e-10;
@@ -61,6 +66,7 @@ impl LuFactors {
     /// file is cleared. `Err(k)` reports the first basis position whose
     /// column is linearly dependent; [`unpivoted_rows`](Self::unpivoted_rows)
     /// then lists the rows still available for a repair substitution.
+    #[allow(clippy::float_cmp)] // audited: structural-zero / sentinel tests, see inline allows
     pub fn factorize(&mut self, bmat: &[f64]) -> Result<(), usize> {
         let m = self.m;
         debug_assert_eq!(bmat.len(), m * m);
@@ -95,6 +101,7 @@ impl LuFactors {
             for r in k + 1..m {
                 let f = self.lu[r * m + k] / d;
                 self.lu[r * m + k] = f;
+                // pallas-lint: allow(F001, structural-zero skip in elimination; exact 0 does no work)
                 if f != 0.0 {
                     for j in k + 1..m {
                         self.lu[r * m + j] -= f * self.lu[k * m + j];
@@ -121,6 +128,7 @@ impl LuFactors {
 
     /// Solve `B·x = v` in place. Input in row space, output in
     /// basis-position space. `tmp` is caller-owned scratch of length `m`.
+    #[allow(clippy::float_cmp)] // audited: structural-zero / sentinel tests, see inline allows
     pub fn ftran(&self, x: &mut [f64], tmp: &mut [f64]) {
         let m = self.m;
         for k in 0..m {
@@ -128,6 +136,7 @@ impl LuFactors {
         }
         for k in 0..m {
             let v = tmp[k];
+            // pallas-lint: allow(F001, structural-zero skip in forward solve; exact 0 does no work)
             if v != 0.0 {
                 for r in k + 1..m {
                     tmp[r] -= self.lu[r * m + k] * v;
@@ -144,6 +153,7 @@ impl LuFactors {
         x[..m].copy_from_slice(&tmp[..m]);
         for (r, alpha) in &self.etas {
             let t = x[*r] / alpha[*r];
+            // pallas-lint: allow(F001, structural-zero skip in eta application; exact 0 does no work)
             if t != 0.0 {
                 for (xi, ai) in x.iter_mut().zip(alpha) {
                     *xi -= ai * t;

@@ -15,6 +15,10 @@
 //! every subsequent fix is a native bound change dual-re-solved from the
 //! arena's current basis instead of a cold start.
 
+// Determinism-zone lint policy (mirrors pallas-lint rule P001): no
+// unwrap() outside tests - use expect("invariant") or propagate.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use super::bounds::{BasisSnapshot, BoundedSimplex, SolveOutcome};
 use super::simplex::Lp;
 
@@ -161,7 +165,9 @@ pub fn greedy_bounded(items: &[Item], budget: f64) -> (Vec<usize>, f64, f64) {
     order.sort_by(|&a, &b| {
         let da = items[a].value / items[a].cost.max(1e-12);
         let db = items[b].value / items[b].cost.max(1e-12);
-        db.partial_cmp(&da).unwrap().then(a.cmp(&b))
+        db.partial_cmp(&da)
+            .expect("value densities are finite (costs clamped away from 0)")
+            .then(a.cmp(&b))
     });
     let mut chosen = vec![0usize; items.len()];
     let mut cost = 0.0;

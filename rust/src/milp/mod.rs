@@ -25,6 +25,10 @@
 //! See `rust/src/milp/README.md` for the factorization scheme, the
 //! steepest-edge weights, and the warm-start invariants.
 
+// Determinism-zone lint policy (mirrors pallas-lint rule P001): no
+// unwrap() outside tests - use expect("invariant") or propagate.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 pub mod bounds;
 pub mod branch_bound;
 pub mod dense;

@@ -8,6 +8,10 @@
 //! decisions pure bound tightenings (see [`super::bounds`], which holds
 //! the actual bounded-variable simplex the solve runs on).
 
+// Determinism-zone lint policy (mirrors pallas-lint rule P001): no
+// unwrap() outside tests - use expect("invariant") or propagate.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use super::bounds::{BoundedSimplex, SolveOutcome};
 
 /// Comparison sense of a constraint row.

@@ -337,7 +337,11 @@ pub fn shed_lowest_value(p: &SchedProblem, shed_fraction: f64) -> (SchedProblem,
         })
         .collect();
     let total: f64 = mass.iter().map(|(m, _)| m).sum();
-    mass.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    mass.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .expect("demand masses are finite sums")
+            .then(a.1.cmp(&b.1))
+    });
     let mut shed = 0.0;
     for (m, w) in mass {
         if m <= 0.0 {
@@ -572,7 +576,7 @@ impl Orchestrator {
         {
             let mode = self.note_healthy();
             self.epochs.push(build.kept(&self.incumbent, None, mode));
-            Self::note_epoch(&mut tspan, self.epochs.last().unwrap());
+            Self::note_epoch(&mut tspan, self.epochs.last().expect("epoch just pushed"));
             return;
         }
 
@@ -608,6 +612,7 @@ impl Orchestrator {
         while outcome.is_none() {
             let mut stats = SearchStats::default();
             let plan = match rung {
+                // pallas-lint: allow(P001, the ladder only enters this loop after demoting below Normal)
                 DegradedMode::Normal => unreachable!("Normal is handled above"),
                 DegradedMode::RepairOnly => {
                     assignment_only_repair(&build.problem, &self.incumbent, &mut stats)
@@ -682,7 +687,7 @@ impl Orchestrator {
                 ));
             }
         }
-        Self::note_epoch(&mut tspan, self.epochs.last().unwrap());
+        Self::note_epoch(&mut tspan, self.epochs.last().expect("epoch pushed above"));
     }
 
     /// Record a clean epoch at the current rung; after

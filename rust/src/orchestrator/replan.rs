@@ -174,7 +174,11 @@ pub fn clamp_to_market(
         let Some(n) = over else { break };
         let victim = (0..p.candidates.len())
             .filter(|&ci| y[ci] > 0 && p.candidates[ci].gpu_counts[n] > 0)
-            .min_by(|&a, &b| density(p, a).partial_cmp(&density(p, b)).unwrap())?;
+            .min_by(|&a, &b| {
+                density(p, a)
+                    .partial_cmp(&density(p, b))
+                    .expect("candidate densities are finite")
+            })?;
         y[victim] -= 1;
     }
 
@@ -187,7 +191,11 @@ pub fn clamp_to_market(
         }
         let victim = (0..p.candidates.len())
             .filter(|&ci| y[ci] > 0)
-            .min_by(|&a, &b| density(p, a).partial_cmp(&density(p, b)).unwrap())?;
+            .min_by(|&a, &b| {
+                density(p, a)
+                    .partial_cmp(&density(p, b))
+                    .expect("candidate densities are finite")
+            })?;
         y[victim] -= 1;
     }
 

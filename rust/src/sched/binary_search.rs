@@ -16,6 +16,10 @@
 //!   budget/availability knapsack; conservative (may declare a feasible T̂
 //!   infeasible by a small margin) but much faster.
 
+// Determinism-zone lint policy (mirrors pallas-lint rule P001): no
+// unwrap() outside tests - use expect("invariant") or propagate.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use super::{PlanEntry, SchedProblem, ServingPlan};
 use crate::milp::knapsack::{round_integral, RoundingStats};
 use crate::milp::{
@@ -371,6 +375,7 @@ fn check_feasible(
     stats: &mut SearchStats,
 ) -> Option<ServingPlan> {
     let mut tspan = telemetry::span("planner.iterate", "planner");
+    // pallas-lint: allow(D002, deadline read feeds the degradation ladder and stats, not the plan bits)
     let t0 = Instant::now();
     let checks_before = stats.feasibility_checks;
     let before = (
@@ -705,7 +710,8 @@ pub fn polish_plan(
         order.sort_by(|&a, &b| {
             let da = p.candidates[a].h.iter().sum::<f64>() / p.candidates[a].cost.max(1e-9);
             let db = p.candidates[b].h.iter().sum::<f64>() / p.candidates[b].cost.max(1e-9);
-            db.partial_cmp(&da).unwrap()
+            db.partial_cmp(&da)
+                .expect("candidate densities are finite profiler-table ratios")
         });
         for ci in order {
             y[ci] += 1;
@@ -764,6 +770,7 @@ pub(crate) fn solve_binary_search_core(
     seed_plan: Option<&ServingPlan>,
     basis: &mut BasisCarry,
 ) -> (Option<ServingPlan>, SearchStats) {
+    // pallas-lint: allow(D002, wall clock bounds the bisection time budget; the search path is clock-independent)
     let start = Instant::now();
     let mut stats = SearchStats::default();
     let Some(ub) = p.makespan_upper_bound() else {

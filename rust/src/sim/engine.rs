@@ -49,6 +49,10 @@
 //! own victims down locally, and displaced work re-homes only on the main
 //! thread at chunk boundaries, in shard-index order.
 
+// Determinism-zone lint policy (mirrors pallas-lint rule P001): no
+// unwrap() outside tests - use expect("invariant") or propagate.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use super::timeline::{RetryPolicy, TimelineOptions, TimelineStep};
 use super::FaultStats;
 use crate::cloud::faults::FaultPlan;
@@ -434,7 +438,8 @@ impl Shard {
     /// Run this shard's event loop up to (excluding) `t_end`.
     fn advance_to(&mut self, t_end: f64) {
         while self.heap.peek().map(|e| e.time < t_end).unwrap_or(false) {
-            let Event { time: now, instance: li } = self.heap.pop().unwrap();
+            let Event { time: now, instance: li } =
+                self.heap.pop().expect("heap non-empty: peek just succeeded");
             let wake = advance_instance(
                 &mut self.instances[li],
                 &self.model,
@@ -509,8 +514,13 @@ fn displace_all(
     batch.sort_by(|a, b| {
         a.ctx_tokens
             .partial_cmp(&b.ctx_tokens)
-            .unwrap()
-            .then(a.req.arrival_s.partial_cmp(&b.req.arrival_s).unwrap())
+            .expect("ctx_tokens is a finite token count")
+            .then(
+                a.req
+                    .arrival_s
+                    .partial_cmp(&b.req.arrival_s)
+                    .expect("arrival times are finite"),
+            )
     });
     let mut used = 0.0;
     for f in batch {
@@ -606,7 +616,10 @@ fn advance_instance(
     // their own wake events (pushed at enqueue), so an idle replica never
     // needs re-arming here.
     while inst.pending.front().map(|p| p.0 <= now).unwrap_or(false) {
-        let (_, req, attempts) = inst.pending.pop_front().unwrap();
+        let (_, req, attempts) = inst
+            .pending
+            .pop_front()
+            .expect("pending non-empty: front() just matched");
         inst.queue.push_back((req, attempts));
     }
     // Migrated-in work resumes straight into the batch: its KV already
@@ -638,7 +651,10 @@ fn advance_instance(
         .map(|r| r.0 <= now + 1e-9)
         .unwrap_or(false)
     {
-        let (_, config, cap) = inst.reshards.pop_front().unwrap();
+        let (_, config, cap) = inst
+            .reshards
+            .pop_front()
+            .expect("reshards non-empty: front() just matched");
         inst.config = config;
         inst.token_capacity = cap;
     }
@@ -652,16 +668,16 @@ fn advance_instance(
     let admit = !inst.retired_by(now);
     inst.next_event = None;
     while admit && !inst.queue.is_empty() && inst.batch.len() < max_batch {
-        let (req, _) = inst.queue.front().unwrap();
+        let (req, _) = inst.queue.front().expect("loop guard: queue non-empty");
         let need = req.input_tokens as f64 + req.output_tokens as f64;
         if inst.tokens_in_use() + need > inst.token_capacity && !inst.batch.is_empty() {
             break;
         }
-        let (req, attempts) = inst.queue.pop_front().unwrap();
+        let (req, attempts) = inst.queue.pop_front().expect("loop guard: queue non-empty");
         admit_req(inst, req, attempts, epoch_starts, model, perf, now);
     }
     if !admit && inst.batch.is_empty() && !inst.queue.is_empty() {
-        let (req, attempts) = inst.queue.pop_front().unwrap();
+        let (req, attempts) = inst.queue.pop_front().expect("guard: queue non-empty");
         admit_req(inst, req, attempts, epoch_starts, model, perf, now);
     }
 
@@ -738,7 +754,7 @@ fn redistribute_displaced(
 ) -> usize {
     let mut all: Vec<Displaced> = Vec::new();
     for sh in shards {
-        all.append(&mut sh.lock().unwrap().displaced);
+        all.append(&mut sh.lock().expect("shard mutex poisoned").displaced);
     }
     let mut moved = 0usize;
     for d in all {
@@ -768,7 +784,7 @@ fn redistribute_displaced(
             .min_by(|&a, &b| {
                 est_tokens[a]
                     .partial_cmp(&est_tokens[b])
-                    .unwrap()
+                    .expect("token estimates are finite sums")
                     .then(a.cmp(&b))
             })
             .or_else(|| {
@@ -776,7 +792,7 @@ fn redistribute_displaced(
                     metas[a]
                         .active_from_s
                         .partial_cmp(&metas[b].active_from_s)
-                        .unwrap()
+                        .expect("activation times are finite")
                         .then(a.cmp(&b))
                 })
             });
@@ -787,7 +803,7 @@ fn redistribute_displaced(
         };
         if migrated {
             fstats.migrated += 1;
-            fstats.migrated_tokens += d.resume.unwrap().0;
+            fstats.migrated_tokens += d.resume.expect("migrated implies resume state").0;
             let ek = epoch_of(epoch_starts, d.release_s);
             fstats.migration_usd += d.transfer_s
                 * steps[ek].problem.candidates[metas[d.victim].candidate].cost
@@ -798,7 +814,10 @@ fn redistribute_displaced(
         est_tokens[id] += (d.req.input_tokens + d.req.output_tokens) as f64;
         qlen[id] += 1;
         let m = &metas[id];
-        shards[m.shard].lock().unwrap().enqueue_displaced(m.local, d, release);
+        shards[m.shard]
+            .lock()
+            .expect("shard mutex poisoned")
+            .enqueue_displaced(m.local, d, release);
         moved += 1;
     }
     moved
@@ -818,7 +837,7 @@ fn advance_all(shards: &[Arc<Mutex<Shard>>], pool: Option<&ThreadPool>, t_end: f
                     move || {
                         let mut span = telemetry::span("sim.shard", "sim");
                         let done = {
-                            let mut g = sh.lock().unwrap();
+                            let mut g = sh.lock().expect("shard mutex poisoned");
                             g.advance_to(t_end);
                             g.recorder.count()
                         };
@@ -833,7 +852,7 @@ fn advance_all(shards: &[Arc<Mutex<Shard>>], pool: Option<&ThreadPool>, t_end: f
             for (si, sh) in shards.iter().enumerate() {
                 let mut span = telemetry::span("sim.shard", "sim");
                 let done = {
-                    let mut g = sh.lock().unwrap();
+                    let mut g = sh.lock().expect("shard mutex poisoned");
                     g.advance_to(t_end);
                     g.recorder.count()
                 };
@@ -860,6 +879,7 @@ pub fn run_engine(
     perf: &PerfModel,
     opts: &EngineOptions,
 ) -> EngineReport {
+    // pallas-lint: allow(D002, wall-clock only stamps the report; simulated time drives every event)
     let wall_start = Instant::now();
     let mut tspan = telemetry::span("sim.engine", "sim");
     assert!(!steps.is_empty(), "engine needs at least one step");
@@ -921,7 +941,7 @@ pub fn run_engine(
                     let cap = perf.max_batch_tokens(&config, model);
                     let moved = surplus.min(deficit);
                     for _ in 0..moved {
-                        let id = alive[ci].pop().unwrap();
+                        let id = alive[ci].pop().expect("moved <= surplus = alive count");
                         let m = &mut metas[id];
                         m.candidate = cj;
                         m.reshards.push((t, config.clone(), cap));
@@ -968,7 +988,7 @@ pub fn run_engine(
                 // Retire the newest replicas first; they keep serving
                 // through the spin-up window, then drain in place.
                 for _ in 0..(have - target) {
-                    let id = alive[ci].pop().unwrap();
+                    let id = alive[ci].pop().expect("have = alive count before retiring");
                     metas[id].retire_at_s = Some(t + opts.spin_up_s);
                     transitions_applied += 1;
                 }
@@ -1132,10 +1152,14 @@ pub fn run_engine(
     // victim is otherwise idle at the kill instant.
     for m in metas.iter() {
         if let Some(k) = m.killed_at {
-            shards[m.shard].lock().unwrap().heap.push(Event {
-                time: k,
-                instance: m.local,
-            });
+            shards[m.shard]
+                .lock()
+                .expect("shard mutex poisoned")
+                .heap
+                .push(Event {
+                    time: k,
+                    instance: m.local,
+                });
         }
     }
 
@@ -1257,7 +1281,7 @@ pub fn run_engine(
                         .min_by(|&a, &b| {
                             est_tokens[a]
                                 .partial_cmp(&est_tokens[b])
-                                .unwrap()
+                                .expect("token estimates are finite sums")
                                 .then(a.cmp(&b))
                         })
                 };
@@ -1278,7 +1302,7 @@ pub fn run_engine(
                             metas[a]
                                 .active_from_s
                                 .partial_cmp(&metas[b].active_from_s)
-                                .unwrap()
+                                .expect("activation times are finite")
                                 .then(a.cmp(&b))
                         })
                 })
@@ -1288,7 +1312,10 @@ pub fn run_engine(
                     est_tokens[id] += (req.input_tokens + req.output_tokens) as f64;
                     qlen[id] += 1;
                     let m = &metas[id];
-                    shards[m.shard].lock().unwrap().enqueue(m.local, req);
+                    shards[m.shard]
+                        .lock()
+                        .expect("shard mutex poisoned")
+                        .enqueue(m.local, req);
                 }
                 None => {
                     shed_total += 1;
@@ -1302,7 +1329,7 @@ pub fn run_engine(
         chunks += 1;
         advance_all(&shards, pool.as_ref(), t_end);
         for sh in &shards {
-            let g = sh.lock().unwrap();
+            let g = sh.lock().expect("shard mutex poisoned");
             for inst in &g.instances {
                 let depth = inst.queue.len() + inst.pending.len() + inst.handover.len();
                 qlen[inst.id] = depth;
@@ -1357,7 +1384,7 @@ pub fn run_engine(
     let mut epoch_slo = vec![0usize; nepochs];
     let mut last_busy = vec![0.0f64; metas.len()];
     for sh in &shards {
-        let g = sh.lock().unwrap();
+        let g = sh.lock().expect("shard mutex poisoned");
         recorder.merge(&g.recorder);
         for e in 0..nepochs {
             epoch_recs[e].merge(&g.epoch_recorders[e]);
@@ -1393,7 +1420,7 @@ pub fn run_engine(
         1.0
     };
     let makespan = recorder.makespan();
-    let sim_end = makespan.max(steps.last().unwrap().start_s);
+    let sim_end = makespan.max(steps.last().expect("steps non-empty: asserted on entry").start_s);
 
     // ---- per-epoch accounting (same rental formula as the timeline) -----
     let mut epochs = Vec::with_capacity(nepochs);

@@ -251,9 +251,11 @@ pub fn simulate_plan(
             let ri = *ids
                 .iter()
                 .min_by(|&&a, &&b| {
-                    replica_tokens[a].partial_cmp(&replica_tokens[b]).unwrap()
+                    replica_tokens[a]
+                        .partial_cmp(&replica_tokens[b])
+                        .expect("outstanding token counts are finite")
                 })
-                .unwrap();
+                .expect("plan entries always carry >= 1 replica");
             replica_tokens[ri] += (req.input_tokens + req.output_tokens) as f64;
             arrivals[ri].push(req.clone());
         }
@@ -318,7 +320,10 @@ pub fn simulate_plan(
                     .map(|(i, _)| i);
                 match donor {
                     Some(d) => {
-                        let stolen = replicas[d].queue.pop_back().unwrap();
+                        let stolen = replicas[d]
+                            .queue
+                            .pop_back()
+                            .expect("donor chosen for its non-empty queue");
                         replicas[ri].queue.push_back(stolen);
                     }
                     None => break,
@@ -333,12 +338,12 @@ pub fn simulate_plan(
 
             // Admit from queue while capacity allows.
             while !r.queue.is_empty() && r.batch.len() < max_batch {
-                let req = r.queue.front().unwrap();
+                let req = r.queue.front().expect("loop guard: queue non-empty");
                 let need = req.input_tokens as f64 + req.output_tokens as f64;
                 if r.tokens_in_use() + need > r.token_capacity && !r.batch.is_empty() {
                     break;
                 }
-                let req = r.queue.pop_front().unwrap();
+                let req = r.queue.pop_front().expect("loop guard: queue non-empty");
                 r.batch.push(InFlight {
                     arrival_s: req.arrival_s,
                     ctx_tokens: req.input_tokens as f64,
@@ -382,7 +387,7 @@ pub fn simulate_plan(
         };
 
         for (arrival_s, _id) in completed {
-            let end = step_time.unwrap();
+            let end = step_time.expect("completions only come from a stepped batch");
             recorder.record(end, end - arrival_s);
         }
 

@@ -34,6 +34,10 @@
 //! against goodput ([`crate::metrics::LatencyRecorder::record_dropped`]).
 //! Killed replicas stop paying rent at the instant they are reclaimed.
 
+// Determinism-zone lint policy (mirrors pallas-lint rule P001): no
+// unwrap() outside tests - use expect("invariant") or propagate.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use super::{FaultStats, SimOptions};
 use crate::cloud::faults::FaultPlan;
 use crate::metrics::{BusyTracker, LatencyRecorder};
@@ -323,7 +327,7 @@ fn rescue_target(
         .min_by(|(_, a), (_, b)| {
             let la = a.tokens_in_use() + a.queue.len() as f64;
             let lb = b.tokens_in_use() + b.queue.len() as f64;
-            la.partial_cmp(&lb).unwrap()
+            la.partial_cmp(&lb).expect("replica loads are finite")
         })
         .map(|(i, _)| i)
         .or_else(|| {
@@ -332,7 +336,9 @@ fn rescue_target(
                 .enumerate()
                 .filter(|&(i, r)| live(i, r))
                 .min_by(|(_, a), (_, b)| {
-                    a.active_from_s.partial_cmp(&b.active_from_s).unwrap()
+                    a.active_from_s
+                        .partial_cmp(&b.active_from_s)
+                        .expect("activation times are finite")
                 })
                 .map(|(i, _)| i)
         })
@@ -407,7 +413,7 @@ pub fn simulate_timeline(
                 let cap = perf.max_batch_tokens(&config, &models[b.model]);
                 let moved = surplus.min(deficit);
                 for _ in 0..moved {
-                    let id = alive[ci].pop().unwrap();
+                    let id = alive[ci].pop().expect("moved <= surplus = alive count");
                     let inst = &mut instances[id];
                     inst.candidate = cj;
                     inst.config = config.clone();
@@ -460,7 +466,7 @@ pub fn simulate_timeline(
                 // the rental overlap this creates is the true price of a
                 // fleet reshuffle.
                 for _ in 0..(have - target) {
-                    let id = alive[ci].pop().unwrap();
+                    let id = alive[ci].pop().expect("have = alive count before retiring");
                     instances[id].retire_at_s = Some(t + opts.spin_up_s);
                     transitions_applied += 1;
                 }
@@ -541,7 +547,11 @@ pub fn simulate_timeline(
             let least_loaded = |ids: &[usize]| -> Option<usize> {
                 ids.iter()
                     .copied()
-                    .min_by(|&a, &b| inst_load[a].partial_cmp(&inst_load[b]).unwrap())
+                    .min_by(|&a, &b| {
+                        inst_load[a]
+                            .partial_cmp(&inst_load[b])
+                            .expect("replica loads are finite")
+                    })
             };
             let mut chosen: Option<usize> = None;
             if let Some(ei) = best {
@@ -564,7 +574,7 @@ pub fn simulate_timeline(
                             instances[a]
                                 .active_from_s
                                 .partial_cmp(&instances[b].active_from_s)
-                                .unwrap()
+                                .expect("activation times are finite")
                         })
                     });
             }
@@ -622,7 +632,11 @@ pub fn simulate_timeline(
         }
         fault_actions.push((f.kill_at_s(), i, true));
     }
-    fault_actions.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.2.cmp(&b.2)));
+    fault_actions.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .expect("fault times are finite")
+            .then(a.2.cmp(&b.2))
+    });
     for &(t, _, _) in &fault_actions {
         heap.push(Event {
             time: t,
@@ -728,8 +742,13 @@ pub fn simulate_timeline(
                     batch.sort_by(|a, b| {
                         a.ctx_tokens
                             .partial_cmp(&b.ctx_tokens)
-                            .unwrap()
-                            .then(a.req.arrival_s.partial_cmp(&b.req.arrival_s).unwrap())
+                            .expect("ctx_tokens is a finite token count")
+                            .then(
+                                a.req
+                                    .arrival_s
+                                    .partial_cmp(&b.req.arrival_s)
+                                    .expect("arrival times are finite"),
+                            )
                     });
                     let budget_s = if fault.is_crash() {
                         0.0
@@ -854,7 +873,7 @@ pub fn simulate_timeline(
                 .min_by(|(_, a), (_, b)| {
                     let la = a.tokens_in_use() + a.queue.len() as f64;
                     let lb = b.tokens_in_use() + b.queue.len() as f64;
-                    la.partial_cmp(&lb).unwrap()
+                    la.partial_cmp(&lb).expect("replica loads are finite")
                 })
                 .map(|(i, _)| i)
                 .or_else(|| {
@@ -922,7 +941,10 @@ pub fn simulate_timeline(
                     .map(|(i, _)| i);
                 match donor {
                     Some(d) => {
-                        let stolen = instances[d].queue.pop_back().unwrap();
+                        let stolen = instances[d]
+                            .queue
+                            .pop_back()
+                            .expect("donor chosen for its non-empty queue");
                         instances[ri].queue.push_back(stolen);
                     }
                     None => break,
@@ -937,18 +959,18 @@ pub fn simulate_timeline(
             let r = &mut instances[ri];
             r.next_event = None;
             while admit && !r.queue.is_empty() && r.batch.len() < max_batch {
-                let req = &r.queue.front().unwrap().0;
+                let req = &r.queue.front().expect("loop guard: queue non-empty").0;
                 let need = req.input_tokens as f64 + req.output_tokens as f64;
                 if r.tokens_in_use() + need > r.token_capacity && !r.batch.is_empty() {
                     break;
                 }
-                let (req, attempts) = r.queue.pop_front().unwrap();
+                let (req, attempts) = r.queue.pop_front().expect("loop guard: queue non-empty");
                 admit_one(r, req, attempts, steps, models, perf, now);
             }
             // A retired replica with stranded requests (no survivor at
             // hand-off time) still drains them rather than dropping them.
             if !admit && !r.is_killed() && r.batch.is_empty() && !r.queue.is_empty() {
-                let (req, attempts) = r.queue.pop_front().unwrap();
+                let (req, attempts) = r.queue.pop_front().expect("guard: queue non-empty");
                 admit_one(r, req, attempts, steps, models, perf, now);
             }
 
@@ -1013,7 +1035,7 @@ pub fn simulate_timeline(
     );
     debug_assert_eq!(recorder.dropped(), fstats.dropped);
     let makespan = recorder.makespan();
-    let sim_end = makespan.max(steps.last().unwrap().start_s);
+    let sim_end = makespan.max(steps.last().expect("timeline has >= 1 step").start_s);
 
     // ---- per-epoch accounting -------------------------------------------
     let mut epochs = Vec::with_capacity(steps.len());

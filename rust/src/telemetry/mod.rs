@@ -41,6 +41,8 @@ static EPOCH: OnceLock<Instant> = OnceLock::new();
 /// check this before doing any per-event work.
 #[inline]
 pub fn enabled() -> bool {
+    // ordering: advisory flag — a stale read only delays when collection
+    // starts/stops by one event; no data is published through it
     ENABLED.load(Ordering::Relaxed)
 }
 
@@ -50,6 +52,8 @@ pub fn set_enabled(on: bool) {
     if on {
         EPOCH.get_or_init(Instant::now);
     }
+    // ordering: see `enabled()` — the flag synchronises nothing; EPOCH's
+    // OnceLock provides the only edge (the clock init) that matters here
     ENABLED.store(on, Ordering::Relaxed);
 }
 
@@ -71,6 +75,7 @@ impl Counter {
     #[inline]
     pub fn add(&self, n: u64) {
         if enabled() {
+            // ordering: pure monotonic tally; totals are read after quiesce
             self.value.fetch_add(n, Ordering::Relaxed);
         }
     }
@@ -81,10 +86,12 @@ impl Counter {
     }
 
     pub fn get(&self) -> u64 {
+        // ordering: report-side read; mid-run snapshots tolerate staleness
         self.value.load(Ordering::Relaxed)
     }
 
     fn reset(&self) {
+        // ordering: reset runs between workloads, never racing recorders
         self.value.store(0, Ordering::Relaxed);
     }
 }
@@ -99,15 +106,18 @@ impl Gauge {
     #[inline]
     pub fn set(&self, v: f64) {
         if enabled() {
+            // ordering: last-writer-wins cell; the bits carry the whole value
             self.bits.store(v.to_bits(), Ordering::Relaxed);
         }
     }
 
     pub fn get(&self) -> f64 {
+        // ordering: report-side read of a self-contained value
         f64::from_bits(self.bits.load(Ordering::Relaxed))
     }
 
     fn reset(&self) {
+        // ordering: reset runs between workloads, never racing recorders
         self.bits.store(f64::NAN.to_bits(), Ordering::Relaxed);
     }
 }
@@ -149,15 +159,23 @@ impl Histogram {
         if !enabled() {
             return;
         }
-        let idx = match self.bounds.binary_search_by(|b| b.partial_cmp(&x).unwrap()) {
+        let idx = match self
+            .bounds
+            .binary_search_by(|b| b.partial_cmp(&x).expect("histogram sample is NaN"))
+        {
             Ok(i) => i + 1,
             Err(i) => i,
         };
+        // ordering: independent monotonic tallies; readers (snapshot/report)
+        // run after the workload quiesces, so no publication edge is needed
         self.counts[idx].fetch_add(1, Ordering::Relaxed);
         self.total.fetch_add(1, Ordering::Relaxed);
+        // ordering: racing read of the running sum; the CAS below detects
+        // interference, so a stale value here only costs a retry
         let mut cur = self.sum_bits.load(Ordering::Relaxed);
         loop {
             let new = (f64::from_bits(cur) + x).to_bits();
+            // ordering: the CAS carries no payload beyond the compared bits
             match self
                 .sum_bits
                 .compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
@@ -169,6 +187,7 @@ impl Histogram {
     }
 
     pub fn count(&self) -> u64 {
+        // ordering: report-side read; staleness acceptable mid-run
         self.total.load(Ordering::Relaxed)
     }
 
@@ -177,6 +196,7 @@ impl Histogram {
         if n == 0 {
             f64::NAN
         } else {
+            // ordering: report-side read; sum/count may be one event apart
             f64::from_bits(self.sum_bits.load(Ordering::Relaxed)) / n as f64
         }
     }
@@ -184,6 +204,7 @@ impl Histogram {
     /// Raw bucket count (index 0 is underflow, last is overflow) — exposed
     /// for boundary tests.
     pub fn bucket_count(&self, idx: usize) -> u64 {
+        // ordering: report-side read; staleness acceptable mid-run
         self.counts[idx].load(Ordering::Relaxed)
     }
 
@@ -206,24 +227,27 @@ impl Histogram {
         let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
         let mut acc = 0u64;
         for (i, c) in self.counts.iter().enumerate() {
+            // ordering: report-side read; quantiles are approximate anyway
             acc += c.load(Ordering::Relaxed);
             if acc >= target {
                 return if i == 0 {
                     self.bounds[0]
                 } else if i > self.bounds.len() - 1 {
-                    *self.bounds.last().unwrap()
+                    *self.bounds.last().expect("histogram has >= 2 boundaries")
                 } else {
                     self.bounds[i]
                 };
             }
         }
-        *self.bounds.last().unwrap()
+        *self.bounds.last().expect("histogram has >= 2 boundaries")
     }
 
     fn reset(&self) {
+        // ordering: reset runs between workloads, never racing recorders
         for c in &self.counts {
             c.store(0, Ordering::Relaxed);
         }
+        // ordering: same quiesced-reset contract as the bucket counts
         self.total.store(0, Ordering::Relaxed);
         self.sum_bits.store(0.0f64.to_bits(), Ordering::Relaxed);
     }
@@ -247,7 +271,10 @@ fn registry() -> &'static Registry {
 /// (one leaked allocation per distinct static name — a bounded set): look
 /// it up once outside a loop, then `add` is a single relaxed atomic op.
 pub fn counter(name: &'static str) -> &'static Counter {
-    let mut map = registry().counters.lock().unwrap();
+    let mut map = registry()
+        .counters
+        .lock()
+        .expect("telemetry registry mutex poisoned");
     *map.entry(name).or_insert_with(|| {
         Box::leak(Box::new(Counter {
             value: AtomicU64::new(0),
@@ -257,7 +284,10 @@ pub fn counter(name: &'static str) -> &'static Counter {
 
 /// Intern the gauge registered under `name`.
 pub fn gauge(name: &'static str) -> &'static Gauge {
-    let mut map = registry().gauges.lock().unwrap();
+    let mut map = registry()
+        .gauges
+        .lock()
+        .expect("telemetry registry mutex poisoned");
     *map.entry(name).or_insert_with(|| {
         Box::leak(Box::new(Gauge {
             bits: AtomicU64::new(f64::NAN.to_bits()),
@@ -269,7 +299,10 @@ pub fn gauge(name: &'static str) -> &'static Gauge {
 /// `[lo, hi]` with `n` buckets. Bucket parameters are fixed by the first
 /// registration; later calls with different parameters get the original.
 pub fn histogram(name: &'static str, lo: f64, hi: f64, n: usize) -> &'static Histogram {
-    let mut map = registry().histograms.lock().unwrap();
+    let mut map = registry()
+        .histograms
+        .lock()
+        .expect("telemetry registry mutex poisoned");
     *map.entry(name)
         .or_insert_with(|| Box::leak(Box::new(Histogram::new(lo, hi, n))))
 }
@@ -305,17 +338,18 @@ pub fn observe(name: &'static str, x: f64) {
 /// runs, not while spans are open.
 pub fn reset() {
     let r = registry();
-    for c in r.counters.lock().unwrap().values() {
+    let poisoned = "telemetry registry mutex poisoned";
+    for c in r.counters.lock().expect(poisoned).values() {
         c.reset();
     }
-    for g in r.gauges.lock().unwrap().values() {
+    for g in r.gauges.lock().expect(poisoned).values() {
         g.reset();
     }
-    for h in r.histograms.lock().unwrap().values() {
+    for h in r.histograms.lock().expect(poisoned).values() {
         h.reset();
     }
     LOCAL.with(|l| l.borrow_mut().events.clear());
-    sink().lock().unwrap().clear();
+    sink().lock().expect("trace sink mutex poisoned").clear();
 }
 
 // ---- spans and trace events -------------------------------------------------
@@ -381,6 +415,8 @@ static NEXT_TID: AtomicU64 = AtomicU64::new(1);
 
 thread_local! {
     static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf {
+        // ordering: only uniqueness of the handed-out id matters, which
+        // fetch_add guarantees at any ordering strength
         tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
         depth: 0,
         events: Vec::new(),
@@ -479,21 +515,27 @@ impl Drop for Span {
 pub fn flush_thread() {
     let drained: Vec<TraceEvent> = LOCAL.with(|l| std::mem::take(&mut l.borrow_mut().events));
     if !drained.is_empty() {
-        sink().lock().unwrap().extend(drained);
+        sink()
+            .lock()
+            .expect("trace sink mutex poisoned")
+            .extend(drained);
     }
 }
 
 /// Flush the current thread, then take every event out of the shared sink.
 pub fn drain_events() -> Vec<TraceEvent> {
     flush_thread();
-    std::mem::take(&mut *sink().lock().unwrap())
+    std::mem::take(&mut *sink().lock().expect("trace sink mutex poisoned"))
 }
 
 /// Flush the current thread, then copy the shared sink without draining it
 /// (for tests that must not steal events from a concurrent exporter).
 pub fn events_snapshot() -> Vec<TraceEvent> {
     flush_thread();
-    sink().lock().unwrap().clone()
+    sink()
+        .lock()
+        .expect("trace sink mutex poisoned")
+        .clone()
 }
 
 // ---- Chrome trace export ----------------------------------------------------
@@ -613,21 +655,21 @@ pub fn snapshot() -> TelemetrySnapshot {
     let counters = r
         .counters
         .lock()
-        .unwrap()
+        .expect("telemetry registry mutex poisoned")
         .iter()
         .map(|(k, c)| (k.to_string(), c.get()))
         .collect();
     let gauges = r
         .gauges
         .lock()
-        .unwrap()
+        .expect("telemetry registry mutex poisoned")
         .iter()
         .map(|(k, g)| (k.to_string(), g.get()))
         .collect();
     let histograms = r
         .histograms
         .lock()
-        .unwrap()
+        .expect("telemetry registry mutex poisoned")
         .iter()
         .map(|(k, h)| {
             (

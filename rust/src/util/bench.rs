@@ -166,6 +166,7 @@ impl Table {
 pub fn cell(x: f64) -> String {
     if x.is_nan() {
         "-".to_string()
+        // pallas-lint: allow(F001, exact zero prints as "0"; formatting only, no tolerance wanted)
     } else if x == 0.0 {
         "0".to_string()
     } else if x.abs() >= 100.0 {

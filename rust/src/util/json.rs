@@ -59,6 +59,7 @@ impl Json {
     }
     pub fn as_u64(&self) -> Option<u64> {
         match self {
+            // pallas-lint: allow(F001, fract() == 0.0 is the exact IEEE integrality test)
             Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
             _ => None,
         }
@@ -140,6 +141,7 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
+                // pallas-lint: allow(F001, fract() == 0.0 is the exact IEEE integrality test)
                 if x.fract() == 0.0 && x.abs() < 1e15 {
                     out.push_str(&format!("{}", *x as i64));
                 } else if x.is_finite() {

@@ -19,6 +19,8 @@ static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
 
 pub fn set_level(level: Level) {
+    // ordering: advisory verbosity knob, set once at startup; a racing
+    // reader at worst logs one line at the old level
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
@@ -42,6 +44,7 @@ pub fn set_level_from_str(s: &str) -> Result<(), String> {
 }
 
 pub fn enabled(level: Level) -> bool {
+    // ordering: see `set_level` — the flag guards no shared data
     level as u8 <= LEVEL.load(Ordering::Relaxed)
 }
 

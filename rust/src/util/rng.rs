@@ -6,6 +6,10 @@
 //! which matters because every experiment harness in this repo must be
 //! reproducible from a seed.
 
+// Determinism-zone lint policy (mirrors pallas-lint rule P001): no
+// unwrap() outside tests - use expect("invariant") or propagate.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 /// SplitMix64 — used to expand a single `u64` seed into a full xoshiro state.
 #[derive(Clone, Debug)]
 pub struct SplitMix64 {

@@ -26,7 +26,7 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
 /// Sorts a copy and evaluates multiple percentiles at once.
 pub fn percentiles(values: &[f64], ps: &[f64]) -> Vec<f64> {
     let mut v: Vec<f64> = values.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.partial_cmp(b).expect("percentile inputs must not be NaN"));
     ps.iter().map(|&p| percentile(&v, p)).collect()
 }
 
@@ -63,7 +63,7 @@ impl Summary {
             };
         }
         let mut v = values.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.partial_cmp(b).expect("summary inputs must not be NaN"));
         let n = v.len() as f64;
         let mean = v.iter().sum::<f64>() / n;
         let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
@@ -197,7 +197,7 @@ impl LogHistogram {
     pub fn record(&mut self, x: f64) {
         let idx = match self
             .bounds
-            .binary_search_by(|b| b.partial_cmp(&x).unwrap())
+            .binary_search_by(|b| b.partial_cmp(&x).expect("histogram sample is NaN"))
         {
             Ok(i) => i + 1,
             Err(i) => i,
@@ -223,13 +223,13 @@ impl LogHistogram {
                 return if i == 0 {
                     self.bounds[0]
                 } else if i > self.bounds.len() - 1 {
-                    *self.bounds.last().unwrap()
+                    *self.bounds.last().expect("histogram has >= 2 boundaries")
                 } else {
                     self.bounds[i.min(self.bounds.len() - 1)]
                 };
             }
         }
-        *self.bounds.last().unwrap()
+        *self.bounds.last().expect("histogram has >= 2 boundaries")
     }
 }
 

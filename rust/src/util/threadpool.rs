@@ -37,7 +37,7 @@ impl ThreadPool {
                     .name(format!("hetserve-worker-{i}"))
                     .spawn(move || loop {
                         let msg = {
-                            let guard = rx.lock().unwrap();
+                            let guard = rx.lock().expect("receiver mutex poisoned");
                             guard.recv()
                         };
                         match msg {
@@ -50,7 +50,8 @@ impl ThreadPool {
                                 // hostage until the next job runs.
                                 crate::telemetry::flush_thread();
                                 let (lock, cvar) = &*pending;
-                                let mut n = lock.lock().unwrap();
+                                let mut n =
+                                    lock.lock().expect("pending-count mutex poisoned");
                                 *n -= 1;
                                 if *n == 0 {
                                     cvar.notify_all();
@@ -79,7 +80,7 @@ impl ThreadPool {
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         {
             let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
+            *lock.lock().expect("pending-count mutex poisoned") += 1;
         }
         self.tx.send(Msg::Run(Box::new(f))).expect("pool closed");
     }
@@ -87,9 +88,9 @@ impl ThreadPool {
     /// Block until every submitted job has completed.
     pub fn wait_idle(&self) {
         let (lock, cvar) = &*self.pending;
-        let mut n = lock.lock().unwrap();
+        let mut n = lock.lock().expect("pending-count mutex poisoned");
         while *n > 0 {
-            n = cvar.wait(n).unwrap();
+            n = cvar.wait(n).expect("pending-count mutex poisoned");
         }
     }
 
@@ -109,7 +110,7 @@ impl ThreadPool {
             let counter = Arc::clone(&counter);
             self.submit(move || {
                 let v = job();
-                results.lock().unwrap()[i] = Some(v);
+                results.lock().expect("results mutex poisoned")[i] = Some(v);
                 counter.fetch_add(1, Ordering::SeqCst);
             });
         }
@@ -119,7 +120,7 @@ impl ThreadPool {
             .ok()
             .expect("results still shared")
             .into_inner()
-            .unwrap()
+            .expect("results mutex poisoned")
             .into_iter()
             .map(|o| o.expect("job did not complete"))
             .collect()

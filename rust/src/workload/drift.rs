@@ -17,6 +17,10 @@
 //!   *observed* arrivals, so the closed loop can replan against estimated
 //!   (not oracle) demand.
 
+// Determinism-zone lint policy (mirrors pallas-lint rule P001): no
+// unwrap() outside tests - use expect("invariant") or propagate.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use super::{Trace, TraceMix};
 
 /// One observation of the demand process: aggregate arrival rate plus the

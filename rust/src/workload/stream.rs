@@ -14,6 +14,10 @@
 //! sharded simulation engine's per-shard reservoirs) pair this with
 //! [`Xoshiro256::substream`].
 
+// Determinism-zone lint policy (mirrors pallas-lint rule P001): no
+// unwrap() outside tests - use expect("invariant") or propagate.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use super::synth::jitter_lengths;
 use super::{MixSchedule, Request, SynthOptions, WorkloadType};
 use crate::util::rng::Xoshiro256;

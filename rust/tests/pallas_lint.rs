@@ -1,0 +1,87 @@
+//! Integration gate for `pallas-lint`: run the analyzer over this very
+//! source tree against the committed baseline — the same check CI runs via
+//! `hetserve lint` — and prove the gate actually trips on an injected
+//! deterministic-zone violation.
+
+use hetserve::analysis::diag::RuleId;
+use hetserve::analysis::{count_rule, run_lint, LintOptions};
+use std::path::Path;
+
+#[test]
+fn source_tree_is_clean_against_committed_baseline() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let run = run_lint(
+        &manifest.join("src"),
+        &manifest.join("analysis").join("baseline.json"),
+        &LintOptions::default(),
+    )
+    .expect("lint run over rust/src");
+
+    assert!(
+        !run.failed,
+        "pallas-lint found new violations:\n{}",
+        run.report
+    );
+
+    // Zero-tolerance families must be clean *now* — they can never hide in
+    // the baseline (Baseline::parse rejects them), so current count is the
+    // whole story.
+    for rule in [RuleId::D001, RuleId::D002, RuleId::D003, RuleId::L001] {
+        assert_eq!(
+            count_rule(&run, rule),
+            0,
+            "zero-tolerance rule {rule} has live violations:\n{}",
+            run.report
+        );
+    }
+
+    // Audited families: every historical site was either fixed or carries a
+    // reasoned inline allow, so nothing is frozen for them either.
+    for rule in [RuleId::A001, RuleId::F001] {
+        assert_eq!(
+            count_rule(&run, rule),
+            0,
+            "audited rule {rule} regressed:\n{}",
+            run.report
+        );
+    }
+
+    // The ratchet is live: P001 debt exists (frozen, shrinking over time)
+    // and the inline-allow mechanism is in active use.
+    assert!(count_rule(&run, RuleId::P001) > 0, "{}", run.report);
+    assert!(run.suppressed > 0, "{}", run.report);
+}
+
+#[test]
+fn injected_det_zone_violation_trips_the_gate() {
+    let tmp = std::env::temp_dir().join(format!("pallas_lint_it_{}", std::process::id()));
+    let engine_dir = tmp.join("sim");
+    std::fs::create_dir_all(&engine_dir).expect("mk temp tree");
+    std::fs::write(
+        engine_dir.join("engine.rs"),
+        "use std::collections::HashMap;\n\
+         pub fn tally(xs: &[u32]) -> usize {\n\
+             let mut m = HashMap::new();\n\
+             for &x in xs {\n\
+                 *m.entry(x).or_insert(0usize) += 1;\n\
+             }\n\
+             m.len()\n\
+         }\n",
+    )
+    .expect("write fixture");
+
+    let run = run_lint(
+        &tmp,
+        &tmp.join("baseline.json"), // absent: empty baseline
+        &LintOptions::default(),
+    )
+    .expect("lint run over fixture tree");
+    std::fs::remove_dir_all(&tmp).ok();
+
+    assert!(run.failed, "HashMap in a deterministic zone must fail");
+    assert!(
+        count_rule(&run, RuleId::D001) >= 1,
+        "expected D001 hits, got:\n{}",
+        run.report
+    );
+}
